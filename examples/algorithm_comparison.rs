@@ -1,0 +1,70 @@
+//! Algorithm comparison sweep (experiment C-CONV): every built-in policy
+//! on the BBOB-style suite, multiple seeds, run through the real service
+//! stack. Prints a convergence table (median best value and trials-to-
+//! target). The paper ships no algorithm benchmarks (§8); this regenerates
+//! the *capability* its §6.3 algorithm surface claims.
+//!
+//! ```text
+//! cargo run --offline --release --example algorithm_comparison [--budget 60] [--seeds 5]
+//! ```
+
+use ossvizier::benchmarks::objectives::SINGLE_OBJECTIVE;
+use ossvizier::benchmarks::runner::run_study;
+use ossvizier::pyvizier::Algorithm;
+use ossvizier::util::cli::{Args, OptSpec};
+
+fn main() {
+    let specs = vec![
+        OptSpec { name: "budget", takes_value: true, help: "trials per study" },
+        OptSpec { name: "seeds", takes_value: true, help: "seeds per (alg, objective)" },
+        OptSpec { name: "dim", takes_value: true, help: "dimension for scalable objectives" },
+    ];
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &specs).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let budget = args.get_u64("budget", 60).unwrap() as usize;
+    let seeds = args.get_u64("seeds", 5).unwrap();
+    let dim = args.get_u64("dim", 4).unwrap() as usize;
+
+    let algorithms = [
+        Algorithm::RandomSearch,
+        Algorithm::QuasiRandomSearch,
+        Algorithm::GridSearch,
+        Algorithm::HillClimb,
+        Algorithm::RegularizedEvolution,
+        Algorithm::HarmonySearch,
+        Algorithm::Firefly,
+        Algorithm::GpBandit,
+    ];
+
+    println!("budget={budget} trials, {seeds} seeds, dim={dim} (fixed dims for branin/hartmann6)\n");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "algorithm", "sphere", "rosenbrock", "rastrigin", "branin", "hartmann6"
+    );
+    let mut ranking: Vec<(String, f64)> = Vec::new();
+    for alg in &algorithms {
+        let mut row = format!("{:<22}", alg.as_str());
+        let mut score_sum = 0.0;
+        for obj in SINGLE_OBJECTIVE {
+            let mut bests: Vec<f64> = (0..seeds)
+                .map(|s| run_study(obj, dim, alg.clone(), s, budget, 4).best())
+                .collect();
+            bests.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = bests[bests.len() / 2];
+            row.push_str(&format!(" {median:>12.4}"));
+            // Normalized regret for the cross-objective ranking.
+            let opt = obj.optimum().unwrap();
+            score_sum += (median - opt).max(0.0).ln_1p();
+        }
+        println!("{row}");
+        ranking.push((alg.as_str().to_string(), score_sum));
+    }
+    ranking.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("\noverall ranking (sum of log-regret; lower is better):");
+    for (i, (name, score)) in ranking.iter().enumerate() {
+        println!("  {}. {name:<22} {score:.3}", i + 1);
+    }
+}

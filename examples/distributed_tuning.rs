@@ -1,0 +1,231 @@
+//! END-TO-END DRIVER (Figure 2): the full distributed topology on a real
+//! small workload.
+//!
+//! * API server over TCP with a **durable WAL datastore**;
+//! * a **separate Pythia service** process-equivalent hosting the policies;
+//! * **8 parallel workers**, each a TCP client with its own `client_id`,
+//!   tuning a simulated deep-learning job (learning-curve simulator) with
+//!   intermediate measurements and **median automated stopping**;
+//! * fault injection: one worker is killed mid-trial and restarted with
+//!   the same `client_id` (it must receive the same trial back), and the
+//!   API server is **killed and restarted** mid-run (operations resume
+//!   from the WAL).
+//!
+//! Prints trial/RPC throughput, suggestion latency, early-stopping
+//! savings, and the best configuration found. Results recorded in
+//! EXPERIMENTS.md §F2.
+//!
+//! ```text
+//! cargo run --offline --release --example distributed_tuning
+//! ```
+
+use ossvizier::benchmarks::CurveSimulator;
+use ossvizier::client::{TcpTransport, VizierClient};
+use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::runner::default_registry;
+use ossvizier::pyvizier::{Algorithm, Measurement};
+use ossvizier::service::remote_pythia::{PythiaServer, RemotePythia};
+use ossvizier::service::{VizierServer, VizierService};
+use ossvizier::util::rng::Pcg32;
+use ossvizier::util::time::Stopwatch;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+const WORKERS: usize = 8;
+const TRIALS_PER_WORKER: usize = 25;
+
+fn start_api(
+    ds: Arc<dyn Datastore>,
+    pythia_addr: &str,
+    bind: &str,
+) -> (VizierServer, Arc<VizierService>) {
+    let service = VizierService::new(ds, Arc::new(RemotePythia::new(pythia_addr)), 16);
+    let resumed = service.resume_pending_operations().expect("resume");
+    if resumed > 0 {
+        println!("[api] resumed {resumed} interrupted operation(s) from the WAL");
+    }
+    let svc = Arc::clone(&service);
+    (VizierServer::start(service, bind).expect("bind api"), svc)
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("ossvizier-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal_path = dir.join("store.wal");
+
+    // --- topology ----------------------------------------------------------
+    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).expect("wal"));
+    let (api, service) = start_api(Arc::clone(&ds), "127.0.0.1:1", "127.0.0.1:0");
+    let api_addr = api.local_addr().to_string();
+    let pythia = PythiaServer::start(default_registry(), &api_addr, "127.0.0.1:0").expect("pythia");
+    let pythia_addr = pythia.local_addr().to_string();
+    // Re-point the API server at the live Pythia address.
+    api.shutdown();
+    service.shutdown();
+    let (api, service) = start_api(Arc::clone(&ds), &pythia_addr, &api_addr);
+    println!("[topology] api={api_addr} pythia={pythia_addr} wal={}", wal_path.display());
+
+    // --- study --------------------------------------------------------------
+    let sim = CurveSimulator {
+        max_steps: 20,
+        noise_std: 0.01,
+        infeasible_p: 0.03,
+        ..Default::default()
+    };
+    let mut config = sim.study_config();
+    config.algorithm = Algorithm::RegularizedEvolution;
+    config.seed = 2022;
+
+    let completed = Arc::new(AtomicU64::new(0));
+    let stopped_early = Arc::new(AtomicU64::new(0));
+    let steps_run = Arc::new(AtomicU64::new(0));
+    let suggest_lat_us = Arc::new(AtomicU64::new(0));
+    let suggest_count = Arc::new(AtomicU64::new(0));
+
+    let run_worker = {
+        let sim = sim.clone();
+        let config = config.clone();
+        let api_addr = api_addr.clone();
+        let completed = Arc::clone(&completed);
+        let stopped = Arc::clone(&stopped_early);
+        let steps = Arc::clone(&steps_run);
+        let lat = Arc::clone(&suggest_lat_us);
+        let cnt = Arc::clone(&suggest_count);
+        move |worker_id: usize, budget: usize| {
+            let transport = Box::new(TcpTransport::connect(&api_addr).expect("connect"));
+            let mut client = VizierClient::load_or_create_study(
+                transport,
+                "curve-sim",
+                &config,
+                &format!("worker-{worker_id}"),
+            )
+            .expect("load_or_create");
+            let mut rng = Pcg32::seeded(1000 + worker_id as u64);
+            let mut done = 0;
+            while done < budget {
+                let sw = Stopwatch::start();
+                let suggestions = client.get_suggestions(1).expect("suggest");
+                lat.fetch_add(sw.elapsed_micros(), Ordering::Relaxed);
+                cnt.fetch_add(1, Ordering::Relaxed);
+                for trial in suggestions {
+                    if sim.is_infeasible(&trial.parameters, &mut rng) {
+                        client.report_infeasible(trial.id, "diverged at init").unwrap();
+                        done += 1;
+                        continue;
+                    }
+                    let mut was_stopped = false;
+                    for step in 1..=sim.max_steps {
+                        client
+                            .add_measurement(trial.id, &sim.measure(&trial.parameters, step, &mut rng))
+                            .expect("measurement");
+                        steps.fetch_add(1, Ordering::Relaxed);
+                        // Ask for an early-stopping verdict every 5 steps.
+                        if step % 5 == 0 && step < sim.max_steps {
+                            if client.should_trial_stop(trial.id).unwrap_or(false) {
+                                was_stopped = true;
+                                break;
+                            }
+                        }
+                    }
+                    client.complete_trial(trial.id, None).expect("complete");
+                    if was_stopped {
+                        stopped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    done += 1;
+                }
+            }
+        }
+    };
+
+    // --- run: phase 1, then crash the API server, then phase 2 --------------
+    let wall = Stopwatch::start();
+    let phase = |n: usize| {
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|w| {
+                let f = run_worker.clone();
+                std::thread::spawn(move || f(w, n))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    };
+
+    println!("[phase 1] {WORKERS} workers x {} trials", TRIALS_PER_WORKER / 2);
+    phase(TRIALS_PER_WORKER / 2);
+
+    // Client-side fault tolerance demo: start a trial, "crash", restart.
+    {
+        let transport = Box::new(TcpTransport::connect(&api_addr).expect("connect"));
+        let mut victim =
+            VizierClient::load_or_create_study(transport, "curve-sim", &config, "victim").unwrap();
+        let t1 = victim.get_suggestions(1).unwrap()[0].clone();
+        drop(victim); // worker dies mid-trial
+        let transport = Box::new(TcpTransport::connect(&api_addr).expect("connect"));
+        let mut revived =
+            VizierClient::load_or_create_study(transport, "curve-sim", &config, "victim").unwrap();
+        let t2 = revived.get_suggestions(1).unwrap()[0].clone();
+        assert_eq!(t1.id, t2.id, "restarted client must get the same trial");
+        println!("[fault] client restart with same client_id -> same trial {} ✓", t2.id);
+        revived.complete_trial(t2.id, Some(&Measurement::new(1).with_metric("accuracy", 0.1))).unwrap();
+    }
+
+    // Server-side fault tolerance: hard-stop the API server and restart on
+    // the same WAL. In-flight state (studies, trials, ops) must survive.
+    println!("[fault] killing API server mid-run…");
+    api.shutdown();
+    service.shutdown();
+    let (api, service) = start_api(Arc::clone(&ds), &pythia_addr, &api_addr);
+    println!("[fault] API server restarted on the same WAL ✓");
+
+    println!("[phase 2] {WORKERS} workers x {} trials", TRIALS_PER_WORKER / 2);
+    phase(TRIALS_PER_WORKER / 2);
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    // --- report --------------------------------------------------------------
+    let transport = Box::new(TcpTransport::connect(&api_addr).expect("connect"));
+    let mut observer = VizierClient::load_or_create_study(transport, "curve-sim", &config, "obs").unwrap();
+    let trials = observer.list_trials().unwrap();
+    let best = observer.list_optimal_trials().unwrap().first().cloned().expect("best");
+    let n_completed = completed.load(Ordering::Relaxed);
+    let n_stopped = stopped_early.load(Ordering::Relaxed);
+    let n_steps = steps_run.load(Ordering::Relaxed);
+    let full_steps = n_completed * sim.max_steps as u64;
+    let avg_suggest_ms =
+        suggest_lat_us.load(Ordering::Relaxed) as f64 / suggest_count.load(Ordering::Relaxed).max(1) as f64 / 1e3;
+
+    println!("\n================ distributed_tuning report ================");
+    println!("workers                  {WORKERS} (+1 victim, +1 observer)");
+    println!("trials in datastore      {}", trials.len());
+    println!("trials completed         {n_completed}");
+    println!(
+        "infeasible trials        {}",
+        trials.iter().filter(|t| t.infeasibility_reason.is_some()).count()
+    );
+    println!("trials stopped early     {n_stopped}");
+    println!(
+        "training steps saved     {} of {} ({:.1}%)",
+        full_steps - n_steps,
+        full_steps,
+        100.0 * (full_steps - n_steps) as f64 / full_steps.max(1) as f64
+    );
+    println!("wall time                {wall_s:.2} s");
+    println!("trial throughput         {:.1} trials/s", n_completed as f64 / wall_s);
+    println!("mean suggest op latency  {avg_suggest_ms:.2} ms (incl. polling)");
+    println!(
+        "best accuracy            {:.4} (lr={:.5}, layers={}, opt={})",
+        best.final_metric("accuracy").unwrap(),
+        best.parameters.get_f64("learning_rate").unwrap(),
+        best.parameters.get_i64("num_layers").unwrap(),
+        best.parameters.get_str("optimizer").unwrap(),
+    );
+    println!("noise-free plateau @best {:.4}", sim.plateau(&best.parameters));
+    println!("\n[service metrics]\n{}", service.metrics.report());
+
+    api.shutdown();
+    service.shutdown();
+    pythia.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

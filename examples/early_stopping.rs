@@ -1,0 +1,89 @@
+//! Automated early stopping (paper Code Block 3 + Appendix B.1): tune the
+//! learning-curve simulator with BOTH stopping rules and report the
+//! evaluation budget each saves at equal final quality.
+//!
+//! ```text
+//! cargo run --offline --release --example early_stopping
+//! ```
+
+use ossvizier::benchmarks::CurveSimulator;
+use ossvizier::client::{LocalTransport, VizierClient};
+use ossvizier::pyvizier::{Algorithm, StudyConfig};
+use ossvizier::service::in_memory_service;
+use ossvizier::util::rng::Pcg32;
+use ossvizier::wire::messages::{StoppingConfig, StoppingKind};
+
+struct Outcome {
+    best: f64,
+    steps: u64,
+    stopped: u64,
+    trials: u64,
+}
+
+fn run(kind: StoppingKind, label: &str) -> Outcome {
+    let sim = CurveSimulator::default();
+    let mut config: StudyConfig = sim.study_config();
+    config.algorithm = Algorithm::QuasiRandomSearch;
+    config.stopping = StoppingConfig { kind, min_trials: 4, confidence: 1.0 };
+    config.seed = 5;
+
+    let service = in_memory_service(4);
+    let transport = Box::new(LocalTransport::new(service));
+    let mut client =
+        VizierClient::load_or_create_study(transport, &format!("es-{label}"), &config, "w").unwrap();
+    let mut rng = Pcg32::seeded(8);
+    let (mut steps, mut stopped, mut best) = (0u64, 0u64, 0.0f64);
+    let trials = 40u64;
+    for _ in 0..trials {
+        let t = client.get_suggestions(1).unwrap().remove(0);
+        let mut was_stopped = false;
+        for step in 1..=sim.max_steps {
+            client
+                .add_measurement(t.id, &sim.measure(&t.parameters, step, &mut rng))
+                .unwrap();
+            steps += 1;
+            if kind != StoppingKind::None && step % 4 == 0 && step < sim.max_steps {
+                // Code Block 3: check_early_stopping + stop.
+                if client.should_trial_stop(t.id).unwrap() {
+                    was_stopped = true;
+                    break;
+                }
+            }
+        }
+        let done = client.complete_trial(t.id, None).unwrap();
+        if was_stopped {
+            stopped += 1;
+        }
+        best = best.max(done.final_metric("accuracy").unwrap_or(0.0));
+    }
+    Outcome { best, steps, stopped, trials }
+}
+
+fn main() {
+    println!(
+        "{:<14} {:>8} {:>12} {:>14} {:>10}",
+        "rule", "trials", "stopped", "steps run", "best acc"
+    );
+    let mut baseline_steps = 0;
+    for (kind, label) in [
+        (StoppingKind::None, "none"),
+        (StoppingKind::Median, "median"),
+        (StoppingKind::DecayCurve, "decay-curve"),
+    ] {
+        let o = run(kind, label);
+        if kind == StoppingKind::None {
+            baseline_steps = o.steps;
+        }
+        let saved = 100.0 * (baseline_steps.saturating_sub(o.steps)) as f64 / baseline_steps as f64;
+        println!(
+            "{label:<14} {:>8} {:>12} {:>9} (-{saved:>4.1}%) {:>10.4}",
+            o.trials, o.stopped, o.steps, o.best
+        );
+        if kind != StoppingKind::None {
+            assert!(o.stopped > 0, "{label} should stop some trials");
+            assert!(o.steps < baseline_steps, "{label} should save steps");
+            assert!(o.best > 0.8, "{label} must not hurt final quality: {}", o.best);
+        }
+    }
+    println!("\nboth rules save budget without losing the best configuration ✓");
+}

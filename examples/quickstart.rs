@@ -1,0 +1,62 @@
+//! Quickstart — the paper's Code Block 1, in Rust.
+//!
+//! Starts an in-process service, defines a study (search space, metric,
+//! algorithm), and runs the suggest → evaluate → complete loop.
+//!
+//! ```text
+//! cargo run --offline --release --example quickstart
+//! ```
+
+use ossvizier::client::{LocalTransport, SuggestionLoop, VizierClient};
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
+use ossvizier::service::in_memory_service;
+use ossvizier::wire::messages::ScaleType;
+
+fn main() {
+    // --- Code Block 1: study configuration -------------------------------
+    let mut config = StudyConfig::new("cifar10");
+    config
+        .search_space
+        .add_float("learning_rate", 1e-4, 1e-2, ScaleType::Log)
+        .add_int("num_layers", 1, 5);
+    config.add_metric(MetricInformation::maximize("accuracy").with_range(0.0, 1.0));
+    config.algorithm = Algorithm::RandomSearch;
+
+    // --- service + client -------------------------------------------------
+    // The server "may be launched in the same local process as the client,
+    // in cases where distributed computing is not needed" (§3.2).
+    let service = in_memory_service(4);
+    let transport = Box::new(LocalTransport::new(service));
+    let client_id = std::env::args().nth(1).unwrap_or_else(|| "worker-0".into());
+    let mut client =
+        VizierClient::load_or_create_study(transport, "cifar10", &config, &client_id)
+            .expect("create study");
+
+    // --- tuning loop -------------------------------------------------------
+    let evaluate = |lr: f64, layers: i64| -> f64 {
+        // Stand-in for training a model: peak at lr=1e-3, 3 layers.
+        let acc = 0.9 - 0.1 * (lr.log10() + 3.0).powi(2) - 0.02 * (layers - 3).pow(2) as f64;
+        acc.clamp(0.0, 1.0)
+    };
+    let mut done = SuggestionLoop { client: &mut client, batch: 2 };
+    let completed = done
+        .run(30, |trial| {
+            let lr = trial.parameters.get_f64("learning_rate").unwrap();
+            let layers = trial.parameters.get_i64("num_layers").unwrap();
+            let acc = evaluate(lr, layers);
+            println!(
+                "trial {:>2}: lr={lr:<10.6} layers={layers}  accuracy={acc:.4}",
+                trial.id
+            );
+            Ok(Measurement::new(1).with_metric("accuracy", acc))
+        })
+        .expect("tuning loop");
+
+    let best = client.list_optimal_trials().expect("optimal")[0].clone();
+    println!(
+        "\ncompleted {completed} trials; best accuracy {:.4} at lr={:.6}, layers={}",
+        best.final_metric("accuracy").unwrap(),
+        best.parameters.get_f64("learning_rate").unwrap(),
+        best.parameters.get_i64("num_layers").unwrap(),
+    );
+}

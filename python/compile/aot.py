@@ -1,0 +1,99 @@
+"""AOT lowering: jax -> HLO text artifacts for the Rust PJRT runtime.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+>= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and DESIGN.md §3.
+
+One artifact is emitted per (n_pad, d_pad, m) shape variant, plus a JSON
+manifest the Rust artifact registry reads. Usage:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import gp_suggest
+
+# (n_pad, d_pad, m): padded train rows, padded dims, candidate count.
+# Matches MAX_TRAIN / CANDIDATES in rust/src/policies/gp_bandit.rs.
+VARIANTS = [
+    (32, 8, 256),
+    (128, 8, 256),
+    (256, 8, 256),
+    (32, 16, 256),
+    (128, 16, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, d: int, m: int) -> str:
+    f32 = jnp.float32
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, f32)  # noqa: E731
+    traced = jax.jit(gp_suggest).trace(
+        spec((n, d)),      # x_train
+        spec((n,)),        # y_train
+        spec((n,)),        # mask
+        spec((m, d)),      # candidates
+        spec(()),          # noise
+        spec(()),          # beta
+    )
+    # Lower for the TPU platform: cholesky/triangular_solve stay native HLO
+    # ops (which the runtime's XLA expands itself) instead of the CPU
+    # path's LAPACK typed-FFI custom-calls, which xla_extension 0.5.1
+    # cannot compile. The Pallas kernels were already inlined to plain ops
+    # at trace time by interpret=True, so no Mosaic custom-call appears.
+    lowered = traced.lower(lowering_platforms=("tpu",))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--variants",
+        default=None,
+        help="comma-separated n:d:m triples (default: built-in set)",
+    )
+    args = parser.parse_args()
+
+    variants = VARIANTS
+    if args.variants:
+        variants = [tuple(int(x) for x in v.split(":")) for v in args.variants.split(",")]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"model": "gp_suggest", "inputs": ["x_train", "y_train", "mask",
+                                                  "candidates", "noise", "beta"],
+                "variants": []}
+    for (n, d, m) in variants:
+        name = f"gp_suggest_n{n}_d{d}_m{m}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_variant(n, d, m)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append({"n": n, "d": d, "m": m, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

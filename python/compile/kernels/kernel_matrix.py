@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: tiled Matérn-5/2 kernel-matrix computation.
+
+This is the O(n·m·d) hot spot of the GP backend. The TPU-shaped design
+(DESIGN.md §Hardware-Adaptation):
+
+* grid over (i, j) output tiles of shape (TILE_N, TILE_M);
+* each step loads one (TILE_N, d) block of X and one (TILE_M, d) block of
+  Y into VMEM via BlockSpec;
+* the -2·X·Yᵀ term of the squared-distance expansion is a (TILE_N, d) ×
+  (d, TILE_M) contraction — `jnp.dot` inside the kernel targets the MXU;
+* the Matérn transcendental tail (sqrt/exp) is fused elementwise on the
+  VPU before the tile is written back, so the n×m×d distance tensor is
+  never materialized in HBM.
+
+VMEM per grid step at TILE=128, d=16, f32:
+  2 · 128·16·4 B (inputs) + 128·128·4 B (output) ≈ 80 KiB  « 16 MiB VMEM,
+leaving headroom for double-buffering (the default Pallas pipeline).
+
+`interpret=True` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+identical; TPU performance is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 5.0 ** 0.5
+
+# Default tile sizes (multiples of the 8x128 TPU vector lane layout).
+TILE_N = 128
+TILE_M = 128
+
+
+def _kernel(x_ref, y_ref, out_ref, *, inv_ls, sigma2):
+    """One (TILE_N, TILE_M) output tile."""
+    x = x_ref[...] * inv_ls          # (tn, d)   VMEM
+    y = y_ref[...] * inv_ls          # (tm, d)   VMEM
+    xn = jnp.sum(x * x, axis=1)[:, None]
+    yn = jnp.sum(y * y, axis=1)[None, :]
+    # MXU contraction; f32 accumulation.
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    r2 = jnp.maximum(xn + yn - 2.0 * cross, 0.0)
+    # Fused Matérn-5/2 tail on the VPU.
+    r = jnp.sqrt(r2)
+    out_ref[...] = (sigma2 * (1.0 + SQRT5 * r + (5.0 / 3.0) * r2)
+                    * jnp.exp(-SQRT5 * r)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lengthscale", "sigma2", "tile_n", "tile_m"))
+def kernel_matrix_pallas(x, y, lengthscale=0.25, sigma2=1.0,
+                         tile_n=TILE_N, tile_m=TILE_M):
+    """K = matern52(pairwise_dist(x, y) / lengthscale), Pallas-tiled.
+
+    Shapes: x (n, d), y (m, d) -> (n, m). n and m need not be multiples of
+    the tile size (Pallas masks the ragged edge blocks).
+    """
+    n, d = x.shape
+    m, d2 = y.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    tn = min(tile_n, n)
+    tm = min(tile_m, m)
+    grid = (pl.cdiv(n, tn), pl.cdiv(m, tm))
+    return pl.pallas_call(
+        functools.partial(_kernel, inv_ls=1.0 / lengthscale, sigma2=sigma2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,  # CPU path; real-TPU lowering is compile-only here
+    )(x, y)

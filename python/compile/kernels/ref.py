@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for the GP-bandit numeric core (L1/L2 correctness).
+
+Mirrors rust/src/policies/gp_math.rs. Everything here is the *reference*
+implementation: the Pallas kernels (kernel_matrix.py, acquisition.py) and
+the full model graph (model.py) are validated against these functions by
+pytest + hypothesis, and the Rust fallback backend implements the same
+formulas.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+SQRT5 = 5.0 ** 0.5
+
+
+def matern52(r2, sigma2=1.0):
+    """Matérn-5/2 kernel from *squared scaled distance*."""
+    r = jnp.sqrt(jnp.maximum(r2, 0.0))
+    return sigma2 * (1.0 + SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-SQRT5 * r)
+
+
+def pairwise_sqdist(x, y, lengthscale):
+    """Squared scaled distances: out[i, j] = ||(x_i - y_j) / ls||^2.
+
+    Uses the |a|^2 + |b|^2 - 2ab expansion (the MXU-friendly form the
+    Pallas kernel tiles on TPU), clamped at zero for numeric safety.
+    """
+    xs = x / lengthscale
+    ys = y / lengthscale
+    xn = jnp.sum(xs * xs, axis=1)[:, None]
+    yn = jnp.sum(ys * ys, axis=1)[None, :]
+    cross = xs @ ys.T
+    return jnp.maximum(xn + yn - 2.0 * cross, 0.0)
+
+
+def kernel_matrix(x, y, lengthscale, sigma2=1.0):
+    """K[i, j] = matern52(||x_i - y_j|| / ls)."""
+    return matern52(pairwise_sqdist(x, y, lengthscale), sigma2)
+
+
+def ucb(mean, var, beta):
+    """Upper-confidence-bound acquisition."""
+    return mean + beta * jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def gp_suggest_ref(x_train, y_train, mask, candidates, noise, beta,
+                   lengthscale=0.25, sigma2=1.0):
+    """Reference for the full L2 graph: masked GP posterior + UCB scores.
+
+    Args:
+      x_train:    (n_pad, d) unit-cube training inputs (padded rows zeros).
+      y_train:    (n_pad,) objective values (maximization; padded zeros).
+      mask:       (n_pad,) 1.0 for real rows, 0.0 for padding.
+      candidates: (m, d) points to score.
+      noise:      scalar observation-noise variance.
+      beta:       scalar UCB coefficient.
+
+    Returns:
+      (m,) acquisition scores. Padded training rows must not affect the
+      output (tested as an invariance property).
+    """
+    n = x_train.shape[0]
+    cnt = jnp.maximum(jnp.sum(mask), 1.0)
+    # Masked standardization of y.
+    y_mean = jnp.sum(y_train * mask) / cnt
+    y_var = jnp.sum(mask * (y_train - y_mean) ** 2) / cnt
+    y_std = jnp.sqrt(jnp.maximum(y_var, 1e-12))
+    y_norm = mask * (y_train - y_mean) / y_std
+
+    # Masked kernel matrix: identity on padded rows/cols keeps Cholesky
+    # well-posed without influencing real entries.
+    k = kernel_matrix(x_train, x_train, lengthscale, sigma2)
+    mask2d = mask[:, None] * mask[None, :]
+    eye = jnp.eye(n)
+    k = mask2d * k + (1.0 - mask2d) * eye + noise * eye
+
+    chol = jsl.cholesky(k, lower=True)
+    alpha = jsl.cho_solve((chol, True), y_norm)
+
+    kstar = kernel_matrix(x_train, candidates, lengthscale, sigma2) * mask[:, None]
+    mean_n = kstar.T @ alpha
+    v = jsl.solve_triangular(chol, kstar, lower=True)
+    var_n = jnp.maximum(sigma2 - jnp.sum(v * v, axis=0), 1e-12)
+
+    mean = y_mean + y_std * mean_n
+    var = (y_std ** 2) * var_n
+    return ucb(mean, var, beta)

@@ -1,0 +1,61 @@
+"""L2: the GP-bandit compute graph in JAX, calling the L1 Pallas kernels.
+
+`gp_suggest` is the function the Rust coordinator executes through PJRT:
+given padded training data and a candidate batch, it returns UCB
+acquisition scores. Shapes are static (PJRT AOT requirement); variable
+trial counts are handled with a row mask — see
+python/compile/kernels/ref.py for the masking math and
+rust/src/runtime/gp_artifact.rs for the padding done on the Rust side.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from compile.kernels.acquisition import ucb_pallas
+from compile.kernels.kernel_matrix import kernel_matrix_pallas
+
+LENGTHSCALE = 0.25
+SIGMA2 = 1.0
+
+
+def gp_suggest(x_train, y_train, mask, candidates, noise, beta):
+    """Masked GP posterior + UCB scores over a candidate batch.
+
+    Args:
+      x_train:    f32 (n_pad, d) unit-cube inputs, padded rows zero.
+      y_train:    f32 (n_pad,) objectives (maximization orientation).
+      mask:       f32 (n_pad,) 1.0 = real row, 0.0 = padding.
+      candidates: f32 (m, d) points to score.
+      noise:      f32 scalar observation-noise variance (the Appendix-B.2
+                  hint, mapped by the coordinator: Low=1e-6, High=1e-2).
+      beta:       f32 scalar UCB exploration coefficient.
+
+    Returns:
+      f32 (m,) acquisition scores (higher = more promising).
+    """
+    n = x_train.shape[0]
+    cnt = jnp.maximum(jnp.sum(mask), 1.0)
+    y_mean = jnp.sum(y_train * mask) / cnt
+    y_var = jnp.sum(mask * (y_train - y_mean) ** 2) / cnt
+    y_std = jnp.sqrt(jnp.maximum(y_var, 1e-12))
+    y_norm = mask * (y_train - y_mean) / y_std
+
+    # L1 kernel: tiled Matérn-5/2 Gram matrix.
+    k = kernel_matrix_pallas(x_train, x_train, LENGTHSCALE, SIGMA2)
+    mask2d = mask[:, None] * mask[None, :]
+    eye = jnp.eye(n, dtype=x_train.dtype)
+    k = mask2d * k + (1.0 - mask2d) * eye + noise * eye
+
+    chol = jsl.cholesky(k, lower=True)
+    alpha = jsl.cho_solve((chol, True), y_norm)
+
+    # L1 kernel: cross Gram matrix, masked to real rows.
+    kstar = kernel_matrix_pallas(x_train, candidates, LENGTHSCALE, SIGMA2) * mask[:, None]
+    mean_n = kstar.T @ alpha
+    v = jsl.solve_triangular(chol, kstar, lower=True)
+    var_n = jnp.maximum(SIGMA2 - jnp.sum(v * v, axis=0), 1e-12)
+
+    mean = y_mean + y_std * mean_n
+    var = (y_std ** 2) * var_n
+    # L1 kernel: fused UCB.
+    return ucb_pallas(mean, var, beta)

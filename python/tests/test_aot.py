@@ -1,0 +1,53 @@
+"""AOT path: lowering to HLO text must succeed and produce parseable,
+parameter-complete modules (the contract rust/src/runtime relies on)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import lower_variant, VARIANTS
+
+
+def test_smallest_variant_lowers_to_hlo_text():
+    text = lower_variant(8, 2, 16)
+    assert text.startswith("HloModule"), text[:80]
+    # Six parameters in the entry computation.
+    assert "parameter(0)" in text
+    assert "parameter(5)" in text
+    # The Cholesky factorization survives lowering (dense linear algebra
+    # not constant-folded away).
+    assert "cholesky" in text.lower() or "triangular" in text.lower()
+
+
+def test_entry_shapes_match_variant():
+    text = lower_variant(8, 2, 16)
+    assert "f32[8,2]" in text, "x_train shape"
+    assert "f32[16,2]" in text, "candidates shape"
+    assert "f32[16]" in text, "output shape"
+
+
+def test_variant_table_is_sane():
+    assert len(VARIANTS) >= 3
+    for (n, d, m) in VARIANTS:
+        assert n > 0 and d > 0 and m > 0
+        # The Rust gp_bandit generates up to 256 candidates.
+        assert m == 256
+
+
+@pytest.mark.slow
+def test_cli_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--variants", "8:2:16"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["model"] == "gp_suggest"
+    assert manifest["variants"] == [{"n": 8, "d": 2, "m": 16, "file": "gp_suggest_n8_d2_m16.hlo.txt"}]
+    hlo = (out / "gp_suggest_n8_d2_m16.hlo.txt").read_text()
+    assert hlo.startswith("HloModule")

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref is THE
+core correctness signal for the compiled artifacts.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.acquisition import ucb_pallas
+from compile.kernels.kernel_matrix import kernel_matrix_pallas
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return rng.uniform(-2.0, 2.0, size=shape).astype(dtype)
+
+
+class TestKernelMatrix:
+    @given(
+        n=st.integers(1, 70),
+        m=st.integers(1, 70),
+        d=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, n, m, d, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, n, d)
+        y = rand(rng, m, d)
+        got = kernel_matrix_pallas(x, y, 0.3, 1.5)
+        want = ref.kernel_matrix(jnp.asarray(x), jnp.asarray(y), 0.3, 1.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @given(
+        tile=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tile_size_does_not_change_result(self, tile, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, 50, 4)
+        y = rand(rng, 37, 4)
+        got = kernel_matrix_pallas(x, y, 0.25, 1.0, tile_n=tile, tile_m=tile)
+        want = ref.kernel_matrix(jnp.asarray(x), jnp.asarray(y), 0.25, 1.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_diagonal_is_sigma2(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 16, 3)
+        k = np.asarray(kernel_matrix_pallas(x, x, 0.25, 2.0))
+        np.testing.assert_allclose(np.diag(k), 2.0, rtol=1e-5)
+        np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+
+    def test_values_decay_with_distance(self):
+        x = np.zeros((1, 2), np.float32)
+        y = np.array([[0.1, 0.0], [1.0, 0.0], [3.0, 0.0]], np.float32)
+        k = np.asarray(kernel_matrix_pallas(x, y, 1.0, 1.0))[0]
+        assert k[0] > k[1] > k[2] > 0.0
+
+    def test_bfloat16_dtype(self):
+        # TPU-native dtype must run through the same kernel.
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rand(rng, 24, 4), dtype=jnp.bfloat16)
+        y = jnp.asarray(rand(rng, 24, 4), dtype=jnp.bfloat16)
+        got = kernel_matrix_pallas(x, y, 0.25, 1.0)
+        assert got.dtype == jnp.bfloat16
+        want = ref.kernel_matrix(x.astype(jnp.float32), y.astype(jnp.float32), 0.25, 1.0)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), np.asarray(want), rtol=0.05, atol=0.05
+        )
+
+
+class TestUcb:
+    @given(
+        m=st.integers(1, 600),
+        beta=st.floats(0.0, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, beta, seed):
+        rng = np.random.default_rng(seed)
+        mean = rand(rng, m)
+        var = np.abs(rand(rng, m))
+        got = ucb_pallas(mean, var, np.float32(beta))
+        want = ref.ucb(jnp.asarray(mean), jnp.asarray(var), beta)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_negative_variance_clamped(self):
+        mean = np.zeros(4, np.float32)
+        var = np.array([-1.0, -0.1, 0.0, 1.0], np.float32)
+        got = np.asarray(ucb_pallas(mean, var, np.float32(2.0)))
+        np.testing.assert_allclose(got, [0.0, 0.0, 0.0, 2.0], atol=1e-6)
+
+    def test_beta_zero_is_mean(self):
+        rng = np.random.default_rng(2)
+        mean = rand(rng, 33)
+        var = np.abs(rand(rng, 33))
+        got = np.asarray(ucb_pallas(mean, var, np.float32(0.0)))
+        np.testing.assert_allclose(got, mean, rtol=1e-6)
+
+
+class TestRefInternals:
+    def test_sqdist_expansion_vs_direct(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rand(rng, 20, 5))
+        y = jnp.asarray(rand(rng, 15, 5))
+        got = ref.pairwise_sqdist(x, y, 0.5)
+        direct = jnp.sum(((x[:, None, :] - y[None, :, :]) / 0.5) ** 2, axis=-1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(direct), rtol=1e-4, atol=1e-4)
+
+    def test_matern_limits(self):
+        assert float(ref.matern52(jnp.asarray(0.0), 1.0)) == pytest.approx(1.0)
+        assert float(ref.matern52(jnp.asarray(1e6), 1.0)) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_pallas_lowering_contains_mxu_contraction():
+    """Structural check: the tiled kernel lowers to a dot-general (MXU) and
+    does NOT materialize the (n, m, d) broadcast tensor."""
+    x = jax.ShapeDtypeStruct((128, 8), jnp.float32)
+    y = jax.ShapeDtypeStruct((128, 8), jnp.float32)
+    hlo = jax.jit(lambda a, b: kernel_matrix_pallas(a, b)).lower(x, y).as_text()
+    assert "dot" in hlo, "expected an MXU contraction in the lowering"
+    assert "128,128,8" not in hlo, "broadcast distance tensor must not be materialized"

@@ -1,0 +1,95 @@
+"""L2 correctness: the full gp_suggest graph vs ref, and the masking
+invariance the Rust runtime's padding relies on."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile.kernels import ref
+from compile.model import gp_suggest
+
+
+def make_problem(rng, n_real, n_pad, d, m):
+    x = np.zeros((n_pad, d), np.float32)
+    x[:n_real] = rng.uniform(0.0, 1.0, size=(n_real, d))
+    y = np.zeros(n_pad, np.float32)
+    y[:n_real] = rng.normal(size=n_real)
+    mask = np.zeros(n_pad, np.float32)
+    mask[:n_real] = 1.0
+    cand = rng.uniform(0.0, 1.0, size=(m, d)).astype(np.float32)
+    return x, y, mask, cand
+
+
+class TestGpSuggest:
+    @given(
+        n_real=st.integers(2, 20),
+        d=st.integers(1, 6),
+        m=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n_real, d, m, seed):
+        rng = np.random.default_rng(seed)
+        x, y, mask, cand = make_problem(rng, n_real, 32, d, m)
+        got = gp_suggest(x, y, mask, cand, np.float32(1e-4), np.float32(2.0))
+        want = ref.gp_suggest_ref(
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask), jnp.asarray(cand),
+            1e-4, 2.0,
+        )
+        # f32 Cholesky + the `sigma2 - v.v` cancellation dominate the
+        # error budget; 5e-3 absolute on acquisition scores is well below
+        # anything that changes an argmax in practice.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0.05, atol=5e-3)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_padding_is_invariant(self, seed):
+        """Scores must not depend on how much padding the runtime added."""
+        rng = np.random.default_rng(seed)
+        n_real, d, m = 10, 4, 16
+        x, y, mask, cand = make_problem(rng, n_real, 16, d, m)
+        small = gp_suggest(x, y, mask, cand, np.float32(1e-4), np.float32(2.0))
+        # Same data padded to 64 rows.
+        x2 = np.zeros((64, d), np.float32)
+        x2[:n_real] = x[:n_real]
+        y2 = np.zeros(64, np.float32)
+        y2[:n_real] = y[:n_real]
+        mask2 = np.zeros(64, np.float32)
+        mask2[:n_real] = 1.0
+        big = gp_suggest(x2, y2, mask2, cand, np.float32(1e-4), np.float32(2.0))
+        np.testing.assert_allclose(np.asarray(small), np.asarray(big), rtol=1e-3, atol=1e-3)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_dim_padding_with_zero_columns_is_invariant(self, seed):
+        """The runtime pads d up to d_pad with zero columns; distances are
+        unchanged, so scores must be too."""
+        rng = np.random.default_rng(seed)
+        x, y, mask, cand = make_problem(rng, 8, 16, 3, 12)
+        base = gp_suggest(x, y, mask, cand, np.float32(1e-4), np.float32(2.0))
+        xp = np.concatenate([x, np.zeros((16, 5), np.float32)], axis=1)
+        cp = np.concatenate([cand, np.zeros((12, 5), np.float32)], axis=1)
+        padded = gp_suggest(xp, y, mask, cp, np.float32(1e-4), np.float32(2.0))
+        np.testing.assert_allclose(np.asarray(base), np.asarray(padded), rtol=1e-3, atol=1e-3)
+
+    def test_ucb_prefers_known_good_region(self):
+        """With beta=0 the score is the posterior mean: a candidate at the
+        best observed point must outscore one at the worst."""
+        rng = np.random.default_rng(7)
+        n, d = 12, 2
+        x, y, mask, _ = make_problem(rng, n, 32, d, 1)
+        best = int(np.argmax(y[:n]))
+        worst = int(np.argmin(y[:n]))
+        cand = np.stack([x[best], x[worst]]).astype(np.float32)
+        scores = np.asarray(gp_suggest(x, y, mask, cand, np.float32(1e-6), np.float32(0.0)))
+        assert scores[0] > scores[1]
+
+    def test_high_noise_reduces_confidence(self):
+        """More observation noise -> larger posterior variance at a train
+        point -> larger UCB-minus-mean gap (Appendix B.2 semantics)."""
+        rng = np.random.default_rng(8)
+        x, y, mask, _ = make_problem(rng, 10, 32, 3, 1)
+        cand = x[:1].copy()
+        def gap(noise):
+            mean = np.asarray(gp_suggest(x, y, mask, cand, np.float32(noise), np.float32(0.0)))
+            ucb = np.asarray(gp_suggest(x, y, mask, cand, np.float32(noise), np.float32(2.0)))
+            return float(ucb[0] - mean[0])
+        assert gap(1e-2) > gap(1e-6)

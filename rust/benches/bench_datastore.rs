@@ -1,0 +1,114 @@
+//! C-DS: datastore performance — in-memory vs WAL-durable CRUD, WAL
+//! recovery time (the cost of server-side fault tolerance), and the
+//! effect of log compaction.
+
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::util::time::Stopwatch;
+use ossvizier::wire::messages::{StudyProto, TrialProto};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ossvizier-bench-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.join("store.wal")
+}
+
+fn study(name: &str) -> StudyProto {
+    StudyProto { display_name: name.into(), ..Default::default() }
+}
+
+fn main() {
+    section("C-DS: trial create+complete cycle");
+    {
+        let mem = InMemoryDatastore::new();
+        let s = mem.create_study(study("m")).unwrap();
+        bench("in-memory: create_trial + mutate", || {
+            let t = mem.create_trial(&s.name, TrialProto::default()).unwrap();
+            mem.mutate_trial(&s.name, t.id, &mut |t| {
+                t.created_ms += 1;
+                Ok(())
+            })
+            .unwrap();
+        });
+    }
+    {
+        let wal = WalDatastore::open(tmp("crud")).unwrap();
+        let s = wal.create_study(study("w")).unwrap();
+        bench("wal (buffered):  create_trial + mutate", || {
+            let t = wal.create_trial(&s.name, TrialProto::default()).unwrap();
+            wal.mutate_trial(&s.name, t.id, &mut |t| {
+                t.created_ms += 1;
+                Ok(())
+            })
+            .unwrap();
+        });
+    }
+    {
+        let wal = WalDatastore::open_with_sync(tmp("sync"), true).unwrap();
+        let s = wal.create_study(study("ws")).unwrap();
+        bench("wal (fsync/write): create_trial + mutate", || {
+            let t = wal.create_trial(&s.name, TrialProto::default()).unwrap();
+            wal.mutate_trial(&s.name, t.id, &mut |t| {
+                t.created_ms += 1;
+                Ok(())
+            })
+            .unwrap();
+        });
+    }
+
+    section("C-DS: read path");
+    let mem = InMemoryDatastore::new();
+    let s = mem.create_study(study("reads")).unwrap();
+    for _ in 0..10_000 {
+        mem.create_trial(&s.name, TrialProto::default()).unwrap();
+    }
+    bench("get_trial from 10k-trial study", || {
+        std::hint::black_box(mem.get_trial(&s.name, 5000).unwrap());
+    });
+    bench("list_trials (10k trials, full clone)", || {
+        std::hint::black_box(mem.list_trials(&s.name).unwrap());
+    });
+
+    section("C-DS: WAL recovery (server-side fault-tolerance cost)");
+    for &n in &[1_000usize, 10_000, 50_000] {
+        let path = tmp(&format!("recovery-{n}"));
+        {
+            let wal = WalDatastore::open(&path).unwrap();
+            let s = wal.create_study(study("r")).unwrap();
+            for _ in 0..n {
+                wal.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+        }
+        let size_mb = std::fs::metadata(&path).unwrap().len() as f64 / 1e6;
+        let sw = Stopwatch::start();
+        let wal = WalDatastore::open(&path).unwrap();
+        let ms = sw.elapsed_millis_f64();
+        assert_eq!(wal.trial_count("studies/1").unwrap(), n);
+        note(&format!("replay {n:>6} trials ({size_mb:>6.2} MB log): {ms:>8.2} ms"));
+    }
+
+    section("C-DS: compaction");
+    let path = tmp("compact");
+    let wal = WalDatastore::open(&path).unwrap();
+    let s = wal.create_study(study("c")).unwrap();
+    let t = wal.create_trial(&s.name, TrialProto::default()).unwrap();
+    for i in 0..20_000 {
+        wal.mutate_trial(&s.name, t.id, &mut |t| {
+            t.created_ms = i;
+            Ok(())
+        })
+        .unwrap();
+    }
+    let before = wal.log_size();
+    let sw = Stopwatch::start();
+    wal.compact().unwrap();
+    note(&format!(
+        "compaction of 20k-update log: {} -> {} bytes in {:.2} ms",
+        before,
+        wal.log_size(),
+        sw.elapsed_millis_f64()
+    ));
+}

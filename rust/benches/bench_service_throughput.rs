@@ -1,0 +1,90 @@
+//! C-PAR: service RPC throughput under concurrent clients over real TCP
+//! (paper §2.1: "scale up to thousands of concurrent users, and
+//! continuously process user requests without interruptions").
+
+use ossvizier::client::{TcpTransport, VizierClient};
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
+use ossvizier::service::{in_memory_service, VizierServer};
+use ossvizier::util::benchkit::{note, section};
+use ossvizier::util::time::Stopwatch;
+use ossvizier::wire::messages::ScaleType;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn config() -> StudyConfig {
+    let mut c = StudyConfig::new("throughput");
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::minimize("v"));
+    c.algorithm = Algorithm::RandomSearch;
+    c
+}
+
+fn main() {
+    section("C-PAR: end-to-end trial throughput vs #concurrent TCP clients");
+    for &clients in &[1usize, 2, 4, 8, 16, 32] {
+        let service = in_memory_service(16);
+        let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let cfg = config();
+        let total = Arc::new(AtomicU64::new(0));
+        let budget_per_client = 600 / clients;
+        let sw = Stopwatch::start();
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                let addr = addr.clone();
+                let cfg = cfg.clone();
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    let t = Box::new(TcpTransport::connect(&addr).unwrap());
+                    let mut c = VizierClient::load_or_create_study(
+                        t,
+                        "throughput",
+                        &cfg,
+                        &format!("c{i}"),
+                    )
+                    .unwrap();
+                    for _ in 0..budget_per_client {
+                        let trial = c.get_suggestions(1).unwrap().remove(0);
+                        c.complete_trial(
+                            trial.id,
+                            Some(&Measurement::new(1).with_metric("v", 0.5)),
+                        )
+                        .unwrap();
+                        total.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let secs = sw.elapsed().as_secs_f64();
+        let n = total.load(Ordering::Relaxed);
+        println!(
+            "{clients:>3} clients: {n:>6} trials in {secs:>6.2}s = {:>8.1} trials/s \
+             ({:.2} ms/trial incl. suggest-op poll)",
+            n as f64 / secs,
+            secs * 1e3 / n as f64
+        );
+        server.shutdown();
+    }
+
+    section("raw RPC throughput (Ping) on one connection");
+    let service = in_memory_service(4);
+    let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let t = Box::new(TcpTransport::connect(&addr).unwrap());
+    let mut c = VizierClient::for_study(t, "none", "p");
+    let sw = Stopwatch::start();
+    let n = 20_000;
+    for _ in 0..n {
+        c.ping().unwrap();
+    }
+    let secs = sw.elapsed().as_secs_f64();
+    note(&format!(
+        "{n} pings in {secs:.2}s = {:.0} rpc/s ({:.1} us/rpc round-trip)",
+        n as f64 / secs,
+        secs * 1e6 / n as f64
+    ));
+    server.shutdown();
+}

@@ -1,0 +1,105 @@
+//! HEADLINE BENCH (C-STATE, paper §6.3): suggestion cost of a designer
+//! *with* metadata state saving (O(new trials) per operation) vs the
+//! naive stateless wrapper that rebuilds from all trials (O(n)).
+//!
+//! The paper's claim: state saving "can reduce the database work by
+//! orders of magnitude relative to loading all the Trials". Expected
+//! shape: stateless latency grows linearly in #completed trials; the
+//! metadata-backed designer stays flat.
+
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::policies::reg_evolution::RegularizedEvolution;
+use ossvizier::policies::test_objective_score;
+use ossvizier::pythia::designer::{DesignerPolicy, StatelessDesignerPolicy};
+use ossvizier::pythia::policy::{Policy, SuggestRequest};
+use ossvizier::pythia::supporter::{DatastoreSupporter, PolicySupporter};
+use ossvizier::pyvizier::{converters, Algorithm, Measurement, MetricInformation, StudyConfig, Trial, TrialState};
+use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::util::rng::Pcg32;
+use ossvizier::wire::messages::{ScaleType, StudyProto};
+use std::sync::Arc;
+
+fn setup(n_trials: usize) -> (Arc<DatastoreSupporter>, String, StudyConfig) {
+    let mut config = StudyConfig::new("state-recovery");
+    config
+        .search_space
+        .add_float("lr", 1e-4, 1e-1, ScaleType::Log)
+        .add_int("layers", 1, 5);
+    config.add_metric(MetricInformation::maximize("score"));
+    config.algorithm = Algorithm::RegularizedEvolution;
+    config.seed = 3;
+    let ds = Arc::new(InMemoryDatastore::new());
+    let study = ds
+        .create_study(StudyProto {
+            display_name: "state-recovery".into(),
+            spec: converters::study_config_to_proto(&config),
+            ..Default::default()
+        })
+        .unwrap();
+    let mut rng = Pcg32::seeded(9);
+    for _ in 0..n_trials {
+        let params = config.search_space.sample(&mut rng);
+        let score = test_objective_score(&params);
+        let mut t = Trial::new(0, params);
+        t.state = TrialState::Completed;
+        t.final_measurement = Some(Measurement::new(1).with_metric("score", score));
+        ds.create_trial(&study.name, converters::trial_to_proto(&t)).unwrap();
+    }
+    let sup = Arc::new(DatastoreSupporter::new(ds as Arc<dyn Datastore>));
+    (sup, study.name, config)
+}
+
+fn run_policy(policy: &mut dyn Policy, sup: &DatastoreSupporter, study: &str, config: &StudyConfig) {
+    let req = SuggestRequest {
+        study_name: study.to_string(),
+        study_config: config.clone(),
+        count: 1,
+        client_id: "bench".into(),
+    };
+    let d = policy.suggest(&req, sup).expect("suggest");
+    if let Some(md) = &d.study_metadata {
+        sup.update_study_metadata(study, md).unwrap();
+    }
+}
+
+fn main() {
+    section("C-STATE: designer state recovery, suggest latency vs #completed trials");
+    let sizes = [50usize, 200, 1000, 4000];
+    let mut stateless_means = Vec::new();
+    let mut stateful_means = Vec::new();
+    for &n in &sizes {
+        let (sup, study, config) = setup(n);
+        // Warm the metadata state once so the stateful path measures the
+        // steady state (restore + read 0 new trials + dump).
+        run_policy(&mut DesignerPolicy::<RegularizedEvolution>::new(), &sup, &study, &config);
+
+        let r1 = bench(&format!("stateless rebuild         n={n:<5}"), || {
+            run_policy(
+                &mut StatelessDesignerPolicy::<RegularizedEvolution>::default(),
+                &sup,
+                &study,
+                &config,
+            );
+        });
+        let r2 = bench(&format!("metadata state (paper)    n={n:<5}"), || {
+            run_policy(&mut DesignerPolicy::<RegularizedEvolution>::new(), &sup, &study, &config);
+        });
+        stateless_means.push(r1.mean_us());
+        stateful_means.push(r2.mean_us());
+    }
+    section("shape check");
+    let growth_stateless = stateless_means.last().unwrap() / stateless_means[0];
+    let growth_stateful = stateful_means.last().unwrap() / stateful_means[0];
+    note(&format!(
+        "stateless grows {growth_stateless:.1}x from n=50 to n=4000; stateful grows {growth_stateful:.1}x"
+    ));
+    note(&format!(
+        "speedup at n=4000: {:.1}x",
+        stateless_means.last().unwrap() / stateful_means.last().unwrap()
+    ));
+    assert!(
+        growth_stateless > growth_stateful * 2.0,
+        "stateless must scale worse than metadata-state"
+    );
+}

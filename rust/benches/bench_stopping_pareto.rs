@@ -1,0 +1,84 @@
+//! B1/B2 + C-MO support benches: cost of the automated-stopping rules vs
+//! pool size, and Pareto-frontier extraction scaling (the
+//! `ListOptimalTrials` hot path).
+
+use ossvizier::pyvizier::pareto::{non_dominated_ranks, optimal_trials, pareto_front_indices};
+use ossvizier::pyvizier::{
+    Measurement, MetricInformation, ParameterDict, StudyConfig, Trial, TrialState,
+};
+use ossvizier::stopping;
+use ossvizier::util::benchkit::{bench, section};
+use ossvizier::util::rng::Pcg32;
+use ossvizier::wire::messages::{MetricGoal, StoppingConfig, StoppingKind};
+
+fn curve_trial(id: u64, rng: &mut Pcg32, steps: i64) -> Trial {
+    let plateau = 0.5 + 0.4 * rng.f64();
+    let mut t = Trial::new(id, ParameterDict::new());
+    for s in 1..=steps {
+        let acc = plateau * (1.0 - (-(s as f64) / 5.0).exp());
+        t.measurements.push(Measurement::new(s).with_metric("acc", acc));
+    }
+    t.state = TrialState::Completed;
+    t.final_measurement = t.measurements.last().cloned();
+    t
+}
+
+fn main() {
+    section("B1/B2: early-stopping decision latency vs completed-pool size");
+    let mut rng = Pcg32::seeded(4);
+    for &n in &[10usize, 100, 1000] {
+        let pool: Vec<Trial> = (0..n as u64).map(|i| curve_trial(i, &mut rng, 20)).collect();
+        let pending = curve_trial(9999, &mut rng, 10);
+        for (kind, label) in [(StoppingKind::Median, "median"), (StoppingKind::DecayCurve, "decay")] {
+            let mut config = StudyConfig::new("b");
+            config.add_metric(MetricInformation::maximize("acc"));
+            config.stopping = StoppingConfig { kind, min_trials: 3, confidence: 1.64 };
+            bench(&format!("{label:<7} rule, pool n={n:<5}"), || {
+                std::hint::black_box(stopping::decide(&config, &pending, &pool));
+            });
+        }
+    }
+
+    section("C-MO: Pareto-frontier extraction scaling");
+    for &n in &[100usize, 1000, 5000] {
+        for &k in &[2usize, 4] {
+            let pts: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..k).map(|_| rng.f64()).collect())
+                .collect();
+            bench(&format!("pareto front    n={n:<5} k={k}"), || {
+                std::hint::black_box(pareto_front_indices(&pts));
+            });
+            if n <= 1000 {
+                bench(&format!("nsga2 ranks     n={n:<5} k={k}"), || {
+                    std::hint::black_box(non_dominated_ranks(&pts));
+                });
+            }
+        }
+    }
+
+    section("C-MO: ListOptimalTrials end-to-end (trial conversion included)");
+    let metrics = vec![
+        MetricInformation::maximize("f1"),
+        MetricInformation {
+            name: "f2".into(),
+            goal: MetricGoal::Minimize,
+            min_value: 0.0,
+            max_value: 1.0,
+        },
+    ];
+    let trials: Vec<Trial> = (0..2000u64)
+        .map(|i| {
+            let mut t = Trial::new(i, ParameterDict::new());
+            t.state = TrialState::Completed;
+            t.final_measurement = Some(
+                Measurement::new(1)
+                    .with_metric("f1", rng.f64())
+                    .with_metric("f2", rng.f64()),
+            );
+            t
+        })
+        .collect();
+    bench("optimal_trials over 2000 completed", || {
+        std::hint::black_box(optimal_trials(&trials, &metrics));
+    });
+}

@@ -1,0 +1,112 @@
+//! C-WIRE: wire-codec performance — encode/decode throughput for the
+//! messages that dominate traffic (trials with measurements, study specs,
+//! operations). The protobuf-equivalent layer must never be the service
+//! bottleneck.
+
+use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::wire::codec::{decode, encode};
+use ossvizier::wire::messages::*;
+
+fn big_trial(id: u64, n_measurements: usize) -> TrialProto {
+    TrialProto {
+        id,
+        state: TrialState::Completed,
+        parameters: (0..8)
+            .map(|i| TrialParameter {
+                parameter_id: format!("param_{i}"),
+                value: if i % 2 == 0 {
+                    ParamValue::F64(0.123456789 * i as f64)
+                } else {
+                    ParamValue::Str(format!("categorical_value_{i}"))
+                },
+            })
+            .collect(),
+        final_measurement: Some(Measurement {
+            step_count: n_measurements as i64,
+            elapsed_secs: 12.5,
+            metrics: vec![Metric { metric_id: "accuracy".into(), value: 0.93 }],
+        }),
+        measurements: (0..n_measurements as i64)
+            .map(|s| Measurement {
+                step_count: s,
+                elapsed_secs: s as f64,
+                metrics: vec![Metric { metric_id: "accuracy".into(), value: 0.5 }],
+            })
+            .collect(),
+        client_id: "worker-17".into(),
+        infeasibility_reason: String::new(),
+        metadata: vec![MetadataItem {
+            namespace: "designer.reg_evo".into(),
+            key: "population".into(),
+            value: vec![b'x'; 2048],
+        }],
+        created_ms: 1,
+        completed_ms: 2,
+    }
+}
+
+fn main() {
+    section("C-WIRE: encode/decode throughput");
+    let trial = big_trial(1, 20);
+    let bytes = encode(&trial);
+    note(&format!("trial size on the wire: {} bytes", bytes.len()));
+
+    bench("encode trial (20 measurements)", || {
+        std::hint::black_box(encode(&trial));
+    });
+    bench("decode trial (20 measurements)", || {
+        let t: TrialProto = decode(&bytes).unwrap();
+        std::hint::black_box(t);
+    });
+
+    let batch = ListTrialsResponse {
+        trials: (0..500).map(|i| big_trial(i, 20)).collect(),
+    };
+    let batch_bytes = encode(&batch);
+    note(&format!(
+        "500-trial ListTrials response: {:.1} KiB",
+        batch_bytes.len() as f64 / 1024.0
+    ));
+    let r = bench("encode 500-trial response", || {
+        std::hint::black_box(encode(&batch));
+    });
+    note(&format!(
+        "encode bandwidth: {:.0} MiB/s",
+        batch_bytes.len() as f64 / (r.mean_us() / 1e6) / (1024.0 * 1024.0)
+    ));
+    let r = bench("decode 500-trial response", || {
+        let b: ListTrialsResponse = decode(&batch_bytes).unwrap();
+        std::hint::black_box(b);
+    });
+    note(&format!(
+        "decode bandwidth: {:.0} MiB/s",
+        batch_bytes.len() as f64 / (r.mean_us() / 1e6) / (1024.0 * 1024.0)
+    ));
+
+    // Study spec with a conditional tree.
+    let mut spec = StudySpecProto::default();
+    for i in 0..20 {
+        spec.parameters.push(ParameterSpecProto {
+            parameter_id: format!("p{i}"),
+            kind: ParameterKind::Double { min: 0.0, max: 1.0 },
+            scale_type: ScaleType::Log,
+            conditional_children: vec![ConditionalParameterSpec {
+                parent_values: ParentValues { values: vec![ParamValue::F64(0.5)] },
+                spec: ParameterSpecProto {
+                    parameter_id: format!("c{i}"),
+                    kind: ParameterKind::Categorical { values: vec!["a".into(), "b".into()] },
+                    scale_type: ScaleType::Linear,
+                    conditional_children: vec![],
+                },
+            }],
+        });
+    }
+    let spec_bytes = encode(&spec);
+    bench("encode study spec (20 conditional params)", || {
+        std::hint::black_box(encode(&spec));
+    });
+    bench("decode study spec (20 conditional params)", || {
+        let s: StudySpecProto = decode(&spec_bytes).unwrap();
+        std::hint::black_box(s);
+    });
+}

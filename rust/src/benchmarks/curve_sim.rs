@@ -1,0 +1,152 @@
+//! Learning-curve simulator: a synthetic stand-in for "tuning the
+//! hyperparameters of a large ML model" (paper §2) that exercises
+//! intermediate measurements, early stopping, noisy evaluations, and
+//! transient failures — without training real models.
+//!
+//! A configuration (learning_rate, num_layers, optimizer) maps to a
+//! saturating accuracy curve `plateau · (1 − exp(−step/tau))` plus noise;
+//! the plateau peaks at lr = 10⁻², 3 layers, adam (same shape as the
+//! test objective used throughout the policy tests).
+
+use crate::pyvizier::{Measurement, MetricInformation, ParameterDict, StudyConfig};
+use crate::util::rng::Pcg32;
+use crate::wire::messages::{ScaleType, StoppingConfig, StoppingKind};
+
+/// Simulator parameters.
+#[derive(Debug, Clone)]
+pub struct CurveSimulator {
+    /// Total training steps per trial.
+    pub max_steps: i64,
+    /// Gaussian noise on each reported accuracy.
+    pub noise_std: f64,
+    /// Probability a step raises a *transient* failure (retryable).
+    pub transient_failure_p: f64,
+    /// Probability a config is fundamentally broken (infeasible).
+    pub infeasible_p: f64,
+}
+
+impl Default for CurveSimulator {
+    fn default() -> Self {
+        Self {
+            max_steps: 20,
+            noise_std: 0.01,
+            transient_failure_p: 0.0,
+            infeasible_p: 0.0,
+        }
+    }
+}
+
+impl CurveSimulator {
+    /// The study config for this workload (with median early stopping on).
+    pub fn study_config(&self) -> StudyConfig {
+        let mut c = StudyConfig::new("curve-sim");
+        c.search_space
+            .add_float("learning_rate", 1e-4, 1e-1, ScaleType::Log)
+            .add_int("num_layers", 1, 8);
+        c.search_space.add_categorical("optimizer", vec!["sgd", "adam", "rmsprop"]);
+        c.add_metric(MetricInformation::maximize("accuracy").with_range(0.0, 1.0));
+        c.stopping = StoppingConfig {
+            kind: StoppingKind::Median,
+            min_trials: 4,
+            confidence: 1.0,
+        };
+        c
+    }
+
+    /// The asymptotic accuracy of a configuration (noise-free).
+    pub fn plateau(&self, params: &ParameterDict) -> f64 {
+        let lr = params.get_f64("learning_rate").unwrap_or(1e-3);
+        let layers = params.get_i64("num_layers").unwrap_or(4) as f64;
+        let opt_bonus = match params.get_str("optimizer") {
+            Some("adam") => 0.05,
+            Some("rmsprop") => 0.02,
+            _ => 0.0,
+        };
+        let lr_term = 1.0 - 0.25 * (lr.log10() + 2.0).powi(2); // peak at 1e-2
+        let layer_term = 1.0 - 0.02 * (layers - 3.0).powi(2);
+        (0.55 * lr_term + 0.35 * layer_term + opt_bonus).clamp(0.05, 0.99)
+    }
+
+    /// Curve speed: poorly tuned configs also converge slower.
+    fn tau(&self, params: &ParameterDict) -> f64 {
+        let lr = params.get_f64("learning_rate").unwrap_or(1e-3);
+        3.0 + (lr.log10() + 2.0).abs() * 2.0
+    }
+
+    /// Accuracy at `step`, with simulated noise.
+    pub fn accuracy_at(&self, params: &ParameterDict, step: i64, rng: &mut Pcg32) -> f64 {
+        let plateau = self.plateau(params);
+        let tau = self.tau(params);
+        let clean = plateau * (1.0 - (-(step as f64) / tau).exp());
+        (clean + rng.normal() * self.noise_std).clamp(0.0, 1.0)
+    }
+
+    /// Whether a freshly suggested config is fundamentally broken.
+    pub fn is_infeasible(&self, params: &ParameterDict, rng: &mut Pcg32) -> bool {
+        let _ = params;
+        rng.bool_with(self.infeasible_p)
+    }
+
+    /// Whether this step hits a transient failure (caller should retry).
+    pub fn transient_failure(&self, rng: &mut Pcg32) -> bool {
+        rng.bool_with(self.transient_failure_p)
+    }
+
+    /// Produce a measurement for one step.
+    pub fn measure(&self, params: &ParameterDict, step: i64, rng: &mut Pcg32) -> Measurement {
+        Measurement::new(step)
+            .with_metric("accuracy", self.accuracy_at(params, step, rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(lr: f64, layers: i64, opt: &str) -> ParameterDict {
+        let mut p = ParameterDict::new();
+        p.set("learning_rate", lr).set("num_layers", layers).set("optimizer", opt);
+        p
+    }
+
+    #[test]
+    fn optimum_is_at_expected_config() {
+        let sim = CurveSimulator::default();
+        let best = sim.plateau(&params(1e-2, 3, "adam"));
+        assert!(best > sim.plateau(&params(1e-4, 3, "adam")));
+        assert!(best > sim.plateau(&params(1e-2, 8, "adam")));
+        assert!(best > sim.plateau(&params(1e-2, 3, "sgd")));
+        assert!((0.0..=1.0).contains(&best));
+    }
+
+    #[test]
+    fn curves_saturate_monotonically_without_noise() {
+        let sim = CurveSimulator {
+            noise_std: 0.0,
+            ..Default::default()
+        };
+        let p = params(1e-2, 3, "adam");
+        let mut rng = Pcg32::seeded(1);
+        let accs: Vec<f64> = (1..=20).map(|s| sim.accuracy_at(&p, s, &mut rng)).collect();
+        for w in accs.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!((accs[19] - sim.plateau(&p)).abs() < 0.01);
+    }
+
+    #[test]
+    fn config_valid_and_failures_respect_probabilities() {
+        let sim = CurveSimulator {
+            infeasible_p: 0.3,
+            transient_failure_p: 0.2,
+            ..Default::default()
+        };
+        sim.study_config().validate().unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let p = params(1e-2, 3, "adam");
+        let inf = (0..2000).filter(|_| sim.is_infeasible(&p, &mut rng)).count();
+        assert!((500..=700).contains(&inf), "infeasible count {inf}");
+        let tf = (0..2000).filter(|_| sim.transient_failure(&mut rng)).count();
+        assert!((320..=480).contains(&tf), "transient count {tf}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Benchmark substrate: synthetic objectives (the standard BBOB-style
+//! suite + multi-objective ZDT), a learning-curve simulator for
+//! early-stopping studies, and a study-driver harness that records
+//! convergence traces.
+//!
+//! The paper evaluates no algorithms (§8) — these workloads exist to
+//! exercise and regenerate the *system* claims (experiment index in
+//! DESIGN.md §7).
+
+pub mod curve_sim;
+pub mod objectives;
+pub mod runner;
+
+pub use curve_sim::CurveSimulator;
+pub use objectives::Objective;
+pub use runner::{run_study, StudyOutcome};

@@ -1,0 +1,260 @@
+//! Synthetic blackbox objectives: classic single-objective test functions
+//! and the ZDT bi-objective family.
+
+use crate::pyvizier::{MetricInformation, ParameterDict, SearchSpace, StudyConfig};
+use crate::wire::messages::ScaleType;
+
+/// A synthetic objective with a known search space and optimum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Sum of squares; optimum 0 at origin. Any dimension.
+    Sphere,
+    /// Classic banana valley; optimum 0 at (1, ..., 1).
+    Rosenbrock,
+    /// Highly multimodal; optimum 0 at origin.
+    Rastrigin,
+    /// 2-D with three global minima at ~0.3979.
+    Branin,
+    /// 6-D; optimum ~-3.3224.
+    Hartmann6,
+    /// Bi-objective trade-off (convex front).
+    Zdt1,
+    /// Bi-objective trade-off (concave front).
+    Zdt2,
+}
+
+impl Objective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Sphere => "sphere",
+            Objective::Rosenbrock => "rosenbrock",
+            Objective::Rastrigin => "rastrigin",
+            Objective::Branin => "branin",
+            Objective::Hartmann6 => "hartmann6",
+            Objective::Zdt1 => "zdt1",
+            Objective::Zdt2 => "zdt2",
+        }
+    }
+
+    pub fn is_multiobjective(&self) -> bool {
+        matches!(self, Objective::Zdt1 | Objective::Zdt2)
+    }
+
+    /// Dimensionality (fixed for Branin/Hartmann6; `d` for the rest).
+    pub fn dims(&self, d: usize) -> usize {
+        match self {
+            Objective::Branin => 2,
+            Objective::Hartmann6 => 6,
+            _ => d,
+        }
+    }
+
+    /// Known optimum of the single objective (None for multi-objective).
+    pub fn optimum(&self) -> Option<f64> {
+        match self {
+            Objective::Sphere | Objective::Rosenbrock | Objective::Rastrigin => Some(0.0),
+            Objective::Branin => Some(0.397887),
+            Objective::Hartmann6 => Some(-3.32237),
+            _ => None,
+        }
+    }
+
+    /// Build the study config (search space + metrics) for this objective.
+    pub fn study_config(&self, d: usize) -> StudyConfig {
+        let mut config = StudyConfig::new(self.name());
+        let dims = self.dims(d);
+        match self {
+            Objective::Branin => {
+                config.search_space.add_float("x0", -5.0, 10.0, ScaleType::Linear);
+                config.search_space.add_float("x1", 0.0, 15.0, ScaleType::Linear);
+            }
+            Objective::Zdt1 | Objective::Zdt2 => {
+                for i in 0..dims {
+                    config.search_space.add_float(&format!("x{i}"), 0.0, 1.0, ScaleType::Linear);
+                }
+            }
+            Objective::Hartmann6 => {
+                for i in 0..6 {
+                    config.search_space.add_float(&format!("x{i}"), 0.0, 1.0, ScaleType::Linear);
+                }
+            }
+            _ => {
+                for i in 0..dims {
+                    config.search_space.add_float(&format!("x{i}"), -5.0, 5.0, ScaleType::Linear);
+                }
+            }
+        }
+        if self.is_multiobjective() {
+            config.add_metric(MetricInformation::minimize("f1"));
+            config.add_metric(MetricInformation::minimize("f2"));
+        } else {
+            config.add_metric(MetricInformation::minimize("value"));
+        }
+        config
+    }
+
+    fn xs(&self, params: &ParameterDict, d: usize) -> Vec<f64> {
+        (0..self.dims(d))
+            .map(|i| params.get_f64(&format!("x{i}")).unwrap_or(0.0))
+            .collect()
+    }
+
+    /// Evaluate: returns the metric map for a measurement.
+    pub fn evaluate(&self, params: &ParameterDict, d: usize) -> Vec<(String, f64)> {
+        let x = self.xs(params, d);
+        match self {
+            Objective::Sphere => {
+                vec![("value".into(), x.iter().map(|v| v * v).sum())]
+            }
+            Objective::Rosenbrock => {
+                let v = x
+                    .windows(2)
+                    .map(|w| 100.0 * (w[1] - w[0] * w[0]).powi(2) + (1.0 - w[0]).powi(2))
+                    .sum();
+                vec![("value".into(), v)]
+            }
+            Objective::Rastrigin => {
+                let v = 10.0 * x.len() as f64
+                    + x.iter()
+                        .map(|v| v * v - 10.0 * (2.0 * std::f64::consts::PI * v).cos())
+                        .sum::<f64>();
+                vec![("value".into(), v)]
+            }
+            Objective::Branin => {
+                let (x1, x2) = (x[0], x[1]);
+                let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+                let c = 5.0 / std::f64::consts::PI;
+                let t = 1.0 / (8.0 * std::f64::consts::PI);
+                let v = (x2 - b * x1 * x1 + c * x1 - 6.0).powi(2)
+                    + 10.0 * (1.0 - t) * x1.cos()
+                    + 10.0;
+                vec![("value".into(), v)]
+            }
+            Objective::Hartmann6 => {
+                const A: [[f64; 6]; 4] = [
+                    [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+                    [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+                    [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+                    [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+                ];
+                const P: [[f64; 6]; 4] = [
+                    [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+                    [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+                    [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+                    [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+                ];
+                const ALPHA: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+                let mut v = 0.0;
+                for i in 0..4 {
+                    let inner: f64 = (0..6).map(|j| A[i][j] * (x[j] - P[i][j]).powi(2)).sum();
+                    v -= ALPHA[i] * (-inner).exp();
+                }
+                vec![("value".into(), v)]
+            }
+            Objective::Zdt1 => {
+                let f1 = x[0];
+                let g = 1.0 + 9.0 * x[1..].iter().sum::<f64>() / (x.len() - 1).max(1) as f64;
+                let f2 = g * (1.0 - (f1 / g).sqrt());
+                vec![("f1".into(), f1), ("f2".into(), f2)]
+            }
+            Objective::Zdt2 => {
+                let f1 = x[0];
+                let g = 1.0 + 9.0 * x[1..].iter().sum::<f64>() / (x.len() - 1).max(1) as f64;
+                let f2 = g * (1.0 - (f1 / g).powi(2));
+                vec![("f1".into(), f1), ("f2".into(), f2)]
+            }
+        }
+    }
+}
+
+/// All single-objective functions (the sweep set for C-CONV).
+pub const SINGLE_OBJECTIVE: [Objective; 5] = [
+    Objective::Sphere,
+    Objective::Rosenbrock,
+    Objective::Rastrigin,
+    Objective::Branin,
+    Objective::Hartmann6,
+];
+
+/// Require a specific search space to build an evaluator closure.
+pub fn evaluator(
+    obj: Objective,
+    d: usize,
+) -> impl Fn(&ParameterDict) -> Vec<(String, f64)> + Send + Sync + Clone {
+    move |params| obj.evaluate(params, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn optima_are_achieved_at_known_points() {
+        let mut p = ParameterDict::new();
+        for i in 0..4 {
+            p.set(format!("x{i}"), 0.0);
+        }
+        assert_eq!(Objective::Sphere.evaluate(&p, 4)[0].1, 0.0);
+        let rast = Objective::Rastrigin.evaluate(&p, 4)[0].1;
+        assert!(rast.abs() < 1e-9, "rastrigin at origin = {rast}");
+
+        let mut p = ParameterDict::new();
+        for i in 0..4 {
+            p.set(format!("x{i}"), 1.0);
+        }
+        assert_eq!(Objective::Rosenbrock.evaluate(&p, 4)[0].1, 0.0);
+
+        // Branin minimum at (pi, 2.275).
+        let mut p = ParameterDict::new();
+        p.set("x0", std::f64::consts::PI).set("x1", 2.275);
+        let v = Objective::Branin.evaluate(&p, 2)[0].1;
+        assert!((v - 0.397887).abs() < 1e-3, "branin {v}");
+
+        // Hartmann6 minimum.
+        let xopt = [0.20169, 0.150011, 0.476874, 0.275332, 0.311652, 0.6573];
+        let mut p = ParameterDict::new();
+        for (i, v) in xopt.iter().enumerate() {
+            p.set(format!("x{i}"), *v);
+        }
+        let v = Objective::Hartmann6.evaluate(&p, 6)[0].1;
+        assert!((v - (-3.32237)).abs() < 1e-3, "hartmann6 {v}");
+    }
+
+    #[test]
+    fn configs_are_valid_and_samples_evaluate() {
+        let mut rng = Pcg32::seeded(1);
+        for obj in [
+            Objective::Sphere,
+            Objective::Rosenbrock,
+            Objective::Rastrigin,
+            Objective::Branin,
+            Objective::Hartmann6,
+            Objective::Zdt1,
+            Objective::Zdt2,
+        ] {
+            let config = obj.study_config(4);
+            config.validate().unwrap();
+            for _ in 0..20 {
+                let p = config.search_space.sample(&mut rng);
+                let metrics = obj.evaluate(&p, 4);
+                assert_eq!(metrics.len(), config.metrics.len());
+                for (_, v) in metrics {
+                    assert!(v.is_finite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zdt1_front_shape() {
+        // On the Pareto front (x1..=0), f2 = 1 - sqrt(f1).
+        let mut p = ParameterDict::new();
+        p.set("x0", 0.25);
+        for i in 1..4 {
+            p.set(format!("x{i}"), 0.0);
+        }
+        let m = Objective::Zdt1.evaluate(&p, 4);
+        assert!((m[1].1 - (1.0 - 0.5)).abs() < 1e-9);
+    }
+}

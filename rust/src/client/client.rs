@@ -1,0 +1,308 @@
+//! VizierClient — the user API of Code Block 1:
+//!
+//! ```text
+//! client = VizierClient.load_or_create_study('cifar10', config, client_id)
+//! while suggestions := client.get_suggestions(count=1):
+//!     for trial in suggestions:
+//!         metrics = _evaluate_trial(trial.parameters)
+//!         client.complete_trial(metrics, trial_id=trial.id)
+//! ```
+
+use super::transport::{call, Transport};
+use crate::pyvizier::{converters, Measurement, StudyConfig, Trial};
+use crate::util::backoff::Backoff;
+use crate::wire::framing::{FrameError, Method, Status};
+use crate::wire::messages::*;
+use std::time::{Duration, Instant};
+
+/// Client-side errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("transport failure: {0}")]
+    Transport(String),
+    #[error("rpc {status:?}: {message}")]
+    Rpc { status: Status, message: String },
+    #[error("operation {0} failed on the server: {1}")]
+    OperationFailed(String, String),
+    #[error("timed out waiting for operation {0}")]
+    OperationTimeout(String),
+}
+
+impl From<FrameError> for ClientError {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Rpc { status, message } => ClientError::Rpc { status, message },
+            other => ClientError::Transport(other.to_string()),
+        }
+    }
+}
+
+/// A connected Vizier client bound to one study and one `client_id`.
+pub struct VizierClient {
+    transport: Box<dyn Transport>,
+    pub study_name: String,
+    pub client_id: String,
+    /// Max time to wait for one suggestion operation.
+    pub operation_timeout: Duration,
+}
+
+impl VizierClient {
+    /// Load the study named `display_name`, creating it from `config` if it
+    /// does not exist (the first replica creates; the rest load — §5).
+    pub fn load_or_create_study(
+        mut transport: Box<dyn Transport>,
+        display_name: &str,
+        config: &StudyConfig,
+        client_id: &str,
+    ) -> Result<Self, ClientError> {
+        let lookup: Result<StudyResponse, FrameError> = call(
+            transport.as_mut(),
+            Method::LookupStudy,
+            &LookupStudyRequest {
+                display_name: display_name.to_string(),
+            },
+        );
+        let study = match lookup {
+            Ok(resp) => resp.study,
+            Err(FrameError::Rpc {
+                status: Status::NotFound,
+                ..
+            }) => {
+                let create = CreateStudyRequest {
+                    study: StudyProto {
+                        display_name: display_name.to_string(),
+                        spec: converters::study_config_to_proto(config),
+                        ..Default::default()
+                    },
+                };
+                match call::<_, _, StudyResponse>(transport.as_mut(), Method::CreateStudy, &create)
+                {
+                    Ok(resp) => resp.study,
+                    // A parallel replica won the race: load theirs.
+                    Err(FrameError::Rpc {
+                        status: Status::FailedPrecondition,
+                        ..
+                    }) => {
+                        call::<_, _, StudyResponse>(
+                            transport.as_mut(),
+                            Method::LookupStudy,
+                            &LookupStudyRequest {
+                                display_name: display_name.to_string(),
+                            },
+                        )?
+                        .study
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            Err(e) => return Err(e.into()),
+        };
+        Ok(Self {
+            transport,
+            study_name: study.name,
+            client_id: client_id.to_string(),
+            operation_timeout: Duration::from_secs(300),
+        })
+    }
+
+    /// Connect to an existing study by resource name.
+    pub fn for_study(transport: Box<dyn Transport>, study_name: &str, client_id: &str) -> Self {
+        Self {
+            transport,
+            study_name: study_name.to_string(),
+            client_id: client_id.to_string(),
+            operation_timeout: Duration::from_secs(300),
+        }
+    }
+
+    fn rpc<Req: crate::wire::codec::WireMessage, Resp: crate::wire::codec::WireMessage>(
+        &mut self,
+        method: Method,
+        req: &Req,
+    ) -> Result<Resp, ClientError> {
+        Ok(call(self.transport.as_mut(), method, req)?)
+    }
+
+    /// Request `count` suggestions: issues SuggestTrials then polls
+    /// GetOperation with backoff until done (the workflow of §3.2).
+    /// Returns an empty vector only when the server reports a completed
+    /// operation with no trials (e.g. exhausted grid).
+    pub fn get_suggestions(&mut self, count: usize) -> Result<Vec<Trial>, ClientError> {
+        let resp: OperationResponse = self.rpc(
+            Method::SuggestTrials,
+            &SuggestTrialsRequest {
+                study_name: self.study_name.clone(),
+                count: count as u64,
+                client_id: self.client_id.clone(),
+            },
+        )?;
+        let op = self.wait_operation(resp.operation)?;
+        Ok(op.trials.iter().map(converters::trial_from_proto).collect())
+    }
+
+    fn wait_operation(&mut self, mut op: OperationProto) -> Result<OperationProto, ClientError> {
+        let deadline = Instant::now() + self.operation_timeout;
+        let mut backoff = Backoff::polling();
+        while !op.done {
+            if Instant::now() > deadline {
+                return Err(ClientError::OperationTimeout(op.name));
+            }
+            std::thread::sleep(backoff.next_delay());
+            let resp: OperationResponse = self.rpc(
+                Method::GetOperation,
+                &GetOperationRequest {
+                    name: op.name.clone(),
+                },
+            )?;
+            op = resp.operation;
+        }
+        if !op.error.is_empty() {
+            return Err(ClientError::OperationFailed(op.name, op.error));
+        }
+        Ok(op)
+    }
+
+    /// Report an intermediate measurement (learning-curve point).
+    pub fn add_measurement(
+        &mut self,
+        trial_id: u64,
+        measurement: &Measurement,
+    ) -> Result<(), ClientError> {
+        let _: TrialResponse = self.rpc(
+            Method::AddMeasurement,
+            &AddMeasurementRequest {
+                study_name: self.study_name.clone(),
+                trial_id,
+                measurement: converters::measurement_to_proto(measurement),
+            },
+        )?;
+        Ok(())
+    }
+
+    /// Complete a trial with a final measurement.
+    pub fn complete_trial(
+        &mut self,
+        trial_id: u64,
+        final_measurement: Option<&Measurement>,
+    ) -> Result<Trial, ClientError> {
+        let resp: TrialResponse = self.rpc(
+            Method::CompleteTrial,
+            &CompleteTrialRequest {
+                study_name: self.study_name.clone(),
+                trial_id,
+                final_measurement: final_measurement.map(converters::measurement_to_proto),
+                infeasible: false,
+                infeasibility_reason: String::new(),
+            },
+        )?;
+        Ok(converters::trial_from_proto(&resp.trial))
+    }
+
+    /// Report a trial as infeasible (persistent failure — not retried).
+    pub fn report_infeasible(&mut self, trial_id: u64, reason: &str) -> Result<(), ClientError> {
+        let _: TrialResponse = self.rpc(
+            Method::CompleteTrial,
+            &CompleteTrialRequest {
+                study_name: self.study_name.clone(),
+                trial_id,
+                final_measurement: None,
+                infeasible: true,
+                infeasibility_reason: reason.to_string(),
+            },
+        )?;
+        Ok(())
+    }
+
+    /// Ask whether a running trial should stop (Code Block 3): issues
+    /// CheckTrialEarlyStoppingState and waits for the operation.
+    pub fn should_trial_stop(&mut self, trial_id: u64) -> Result<bool, ClientError> {
+        let resp: OperationResponse = self.rpc(
+            Method::CheckEarlyStopping,
+            &CheckEarlyStoppingRequest {
+                study_name: self.study_name.clone(),
+                trial_id,
+            },
+        )?;
+        let op = self.wait_operation(resp.operation)?;
+        Ok(op.should_stop)
+    }
+
+    /// All trials of the study.
+    pub fn list_trials(&mut self) -> Result<Vec<Trial>, ClientError> {
+        let resp: ListTrialsResponse = self.rpc(
+            Method::ListTrials,
+            &ListTrialsRequest {
+                study_name: self.study_name.clone(),
+            },
+        )?;
+        Ok(resp.trials.iter().map(converters::trial_from_proto).collect())
+    }
+
+    /// The Pareto-optimal (or single-objective best) trials.
+    pub fn list_optimal_trials(&mut self) -> Result<Vec<Trial>, ClientError> {
+        let resp: ListTrialsResponse = self.rpc(
+            Method::ListOptimalTrials,
+            &ListOptimalTrialsRequest {
+                study_name: self.study_name.clone(),
+            },
+        )?;
+        Ok(resp.trials.iter().map(converters::trial_from_proto).collect())
+    }
+
+    /// The study's current configuration (including stored metadata).
+    pub fn get_study_config(&mut self) -> Result<StudyConfig, ClientError> {
+        let resp: StudyResponse = self.rpc(
+            Method::GetStudy,
+            &GetStudyRequest {
+                name: self.study_name.clone(),
+            },
+        )?;
+        Ok(converters::study_config_from_proto(
+            &resp.study.display_name,
+            &resp.study.spec,
+        ))
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        let _: EmptyResponse = self.rpc(Method::Ping, &EmptyResponse::default())?;
+        Ok(())
+    }
+}
+
+/// Convenience driver for the Code Block 1 loop: repeatedly fetch
+/// suggestions, evaluate with `f`, and complete, for `budget` trials.
+pub struct SuggestionLoop<'a> {
+    pub client: &'a mut VizierClient,
+    pub batch: usize,
+}
+
+impl<'a> SuggestionLoop<'a> {
+    /// Runs the loop; `f` maps parameters to a final measurement, or Err
+    /// for an infeasible evaluation.
+    pub fn run<F>(&mut self, budget: usize, mut f: F) -> Result<usize, ClientError>
+    where
+        F: FnMut(&Trial) -> Result<Measurement, String>,
+    {
+        let mut completed = 0;
+        while completed < budget {
+            let want = self.batch.min(budget - completed);
+            let suggestions = self.client.get_suggestions(want)?;
+            if suggestions.is_empty() {
+                break;
+            }
+            for trial in &suggestions {
+                match f(trial) {
+                    Ok(m) => {
+                        self.client.complete_trial(trial.id, Some(&m))?;
+                    }
+                    Err(reason) => {
+                        self.client.report_infeasible(trial.id, &reason)?;
+                    }
+                }
+                completed += 1;
+            }
+        }
+        Ok(completed)
+    }
+}

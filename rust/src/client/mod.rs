@@ -1,0 +1,7 @@
+//! The user-facing client API (paper §5, Code Block 1).
+
+pub mod client;
+pub mod transport;
+
+pub use client::{ClientError, SuggestionLoop, VizierClient};
+pub use transport::{LocalTransport, TcpTransport, Transport};

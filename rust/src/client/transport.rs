@@ -1,0 +1,172 @@
+//! Client transports: TCP (distributed, the normal deployment) and
+//! in-process ("the server may be launched in the same local process as
+//! the client, in cases where distributed computing is not needed and
+//! function evaluation is cheap" — paper §3.2).
+
+use crate::service::api::VizierService;
+use crate::service::server::dispatch_buf;
+use crate::wire::codec::{encode, WireMessage};
+use crate::wire::framing::{read_response, write_request, FrameError, Method};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A bidirectional request/response channel to a Vizier service.
+pub trait Transport: Send {
+    fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError>;
+}
+
+/// Typed call helper shared by all transports.
+pub fn call<T: Transport + ?Sized, Req: WireMessage, Resp: WireMessage>(
+    t: &mut T,
+    method: Method,
+    req: &Req,
+) -> Result<Resp, FrameError> {
+    let raw = t.call_raw(method, &encode(req))?;
+    let mut cursor = std::io::Cursor::new(raw);
+    read_response(&mut cursor)
+}
+
+/// TCP transport with automatic reconnect on broken connections.
+pub struct TcpTransport {
+    addr: String,
+    conn: Option<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
+    pub connect_timeout: Duration,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: &str) -> Result<Self, FrameError> {
+        let mut t = Self {
+            addr: addr.to_string(),
+            conn: None,
+            connect_timeout: Duration::from_secs(5),
+        };
+        t.ensure_connected()?;
+        Ok(t)
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), FrameError> {
+        if self.conn.is_none() {
+            let sock_addr: std::net::SocketAddr = self
+                .addr
+                .parse()
+                .map_err(|_| FrameError::Io(std::io::Error::other(format!("bad addr {}", self.addr))))?;
+            let stream = TcpStream::connect_timeout(&sock_addr, self.connect_timeout)?;
+            stream.set_nodelay(true).ok();
+            let reader = BufReader::new(stream.try_clone()?);
+            let writer = BufWriter::new(stream);
+            self.conn = Some((reader, writer));
+        }
+        Ok(())
+    }
+}
+
+impl Transport for TcpTransport {
+    fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError> {
+        // One reconnect attempt on a broken pipe (server restart).
+        for attempt in 0..2 {
+            self.ensure_connected()?;
+            let (reader, writer) = self.conn.as_mut().unwrap();
+            let result = (|| -> Result<Vec<u8>, FrameError> {
+                // Re-frame the raw request payload under our method byte.
+                raw_write(writer, method, request)?;
+                raw_read(reader)
+            })();
+            match result {
+                Ok(resp) => return Ok(resp),
+                Err(FrameError::Io(e)) if attempt == 0 => {
+                    let _ = e;
+                    self.conn = None; // drop and retry once
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!()
+    }
+}
+
+fn raw_write<W: std::io::Write>(w: &mut W, method: Method, payload: &[u8]) -> Result<(), FrameError> {
+    // write_request over a pre-encoded payload.
+    struct Pre<'a>(&'a [u8]);
+    impl WireMessage for Pre<'_> {
+        fn encode_fields(&self, out: &mut crate::wire::codec::Writer) {
+            out.raw_append(self.0);
+        }
+        fn decode_fields(_: &mut crate::wire::codec::Reader) -> Result<Self, crate::wire::codec::WireError> {
+            unreachable!("Pre is write-only")
+        }
+    }
+    write_request(w, method, &Pre(payload))
+}
+
+fn raw_read<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>, FrameError> {
+    // Return the whole response frame (head + payload) re-framed so
+    // `read_response` can parse it from a cursor.
+    let (head, payload) = crate::wire::framing::read_frame(r)?;
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.extend_from_slice(&((1 + payload.len()) as u32).to_le_bytes());
+    out.push(head);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// In-process transport: calls the service directly, no sockets. The
+/// encode/decode round-trip is kept so local and remote behaviour are
+/// byte-identical.
+pub struct LocalTransport {
+    service: Arc<VizierService>,
+}
+
+impl LocalTransport {
+    pub fn new(service: Arc<VizierService>) -> Self {
+        Self { service }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError> {
+        Ok(dispatch_buf(&self.service, method, request))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::memory::InMemoryDatastore;
+    use crate::pythia::runner::{default_registry, LocalPythia};
+    use crate::pythia::supporter::DatastoreSupporter;
+    use crate::wire::messages::{EmptyResponse, ListStudiesRequest, ListStudiesResponse};
+
+    fn service() -> Arc<VizierService> {
+        let ds = Arc::new(InMemoryDatastore::new());
+        let supporter = Arc::new(DatastoreSupporter::new(
+            Arc::clone(&ds) as Arc<dyn crate::datastore::Datastore>
+        ));
+        let pythia = Arc::new(LocalPythia::new(default_registry(), supporter));
+        VizierService::new(ds, pythia, 2)
+    }
+
+    #[test]
+    fn local_transport_roundtrip() {
+        let svc = service();
+        let mut t = LocalTransport::new(svc);
+        let resp: ListStudiesResponse =
+            call(&mut t, Method::ListStudies, &ListStudiesRequest::default()).unwrap();
+        assert!(resp.studies.is_empty());
+        let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+    }
+
+    #[test]
+    fn tcp_transport_roundtrip_and_reconnect() {
+        let svc = service();
+        let server = crate::service::server::VizierServer::start(svc, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let mut t = TcpTransport::connect(&addr).unwrap();
+        let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+        // Simulate a dropped connection: the transport must reconnect.
+        t.conn = None;
+        let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+        server.shutdown();
+    }
+}

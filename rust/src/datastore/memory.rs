@@ -1,0 +1,481 @@
+//! In-memory datastore: the default backing store, also embedded inside
+//! [`super::wal::WalDatastore`] as the materialized state.
+
+use super::{Datastore, DsError};
+use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+#[derive(Debug, Default)]
+struct StudyEntry {
+    study: StudyProto,
+    trials: BTreeMap<u64, TrialProto>,
+    next_trial_id: u64,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    studies: HashMap<String, StudyEntry>,
+    operations: HashMap<String, OperationProto>,
+}
+
+/// Thread-safe in-memory store.
+#[derive(Debug, Default)]
+pub struct InMemoryDatastore {
+    state: RwLock<State>,
+    next_study: AtomicU64,
+    next_op: AtomicU64,
+}
+
+impl InMemoryDatastore {
+    pub fn new() -> Self {
+        Self {
+            state: RwLock::new(State::default()),
+            next_study: AtomicU64::new(1),
+            next_op: AtomicU64::new(1),
+        }
+    }
+
+    /// Apply a study proto without assigning a fresh name (used by WAL
+    /// replay). Overwrites silently and keeps id counters monotone.
+    pub(crate) fn apply_put_study(&self, study: StudyProto) {
+        let mut st = self.state.write().unwrap();
+        if let Some(n) = study.name.strip_prefix("studies/").and_then(|s| s.parse::<u64>().ok()) {
+            self.next_study.fetch_max(n + 1, Ordering::SeqCst);
+        }
+        let entry = st.studies.entry(study.name.clone()).or_default();
+        entry.study = study;
+    }
+
+    pub(crate) fn apply_put_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        entry.next_trial_id = entry.next_trial_id.max(trial.id + 1);
+        entry.trials.insert(trial.id, trial);
+        Ok(())
+    }
+
+    pub(crate) fn apply_put_operation(&self, op: OperationProto) {
+        let mut st = self.state.write().unwrap();
+        if let Some(n) = op.name.strip_prefix("operations/").and_then(|s| s.parse::<u64>().ok()) {
+            self.next_op.fetch_max(n + 1, Ordering::SeqCst);
+        }
+        st.operations.insert(op.name.clone(), op);
+    }
+
+    pub(crate) fn apply_delete_study(&self, name: &str) {
+        self.state.write().unwrap().studies.remove(name);
+    }
+
+    pub(crate) fn apply_delete_trial(&self, study: &str, id: u64) {
+        if let Some(e) = self.state.write().unwrap().studies.get_mut(study) {
+            e.trials.remove(&id);
+        }
+    }
+}
+
+impl Datastore for InMemoryDatastore {
+    fn create_study(&self, mut study: StudyProto) -> Result<StudyProto, DsError> {
+        let mut st = self.state.write().unwrap();
+        if study.name.is_empty() {
+            let id = self.next_study.fetch_add(1, Ordering::SeqCst);
+            study.name = format!("studies/{id}");
+        }
+        if st.studies.contains_key(&study.name) {
+            return Err(DsError::StudyExists(study.name));
+        }
+        if !study.display_name.is_empty()
+            && st.studies.values().any(|e| e.study.display_name == study.display_name)
+        {
+            return Err(DsError::StudyExists(study.display_name));
+        }
+        st.studies.insert(
+            study.name.clone(),
+            StudyEntry {
+                study: study.clone(),
+                trials: BTreeMap::new(),
+                next_trial_id: 1,
+            },
+        );
+        Ok(study)
+    }
+
+    fn get_study(&self, name: &str) -> Result<StudyProto, DsError> {
+        self.state
+            .read()
+            .unwrap()
+            .studies
+            .get(name)
+            .map(|e| e.study.clone())
+            .ok_or_else(|| DsError::StudyNotFound(name.to_string()))
+    }
+
+    fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError> {
+        self.state
+            .read()
+            .unwrap()
+            .studies
+            .values()
+            .find(|e| e.study.display_name == display_name)
+            .map(|e| e.study.clone())
+            .ok_or_else(|| DsError::StudyNotFound(display_name.to_string()))
+    }
+
+    fn list_studies(&self) -> Result<Vec<StudyProto>, DsError> {
+        let st = self.state.read().unwrap();
+        let mut studies: Vec<StudyProto> = st.studies.values().map(|e| e.study.clone()).collect();
+        studies.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(studies)
+    }
+
+    fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(&study.name)
+            .ok_or_else(|| DsError::StudyNotFound(study.name.clone()))?;
+        entry.study = study;
+        Ok(())
+    }
+
+    fn delete_study(&self, name: &str) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        st.studies
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| DsError::StudyNotFound(name.to_string()))
+    }
+
+    fn create_trial(&self, study: &str, mut trial: TrialProto) -> Result<TrialProto, DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        trial.id = entry.next_trial_id;
+        entry.next_trial_id += 1;
+        entry.trials.insert(trial.id, trial.clone());
+        Ok(trial)
+    }
+
+    fn get_trial(&self, study: &str, id: u64) -> Result<TrialProto, DsError> {
+        let st = self.state.read().unwrap();
+        st.studies
+            .get(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
+            .trials
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| DsError::TrialNotFound(study.to_string(), id))
+    }
+
+    fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError> {
+        let st = self.state.read().unwrap();
+        Ok(st
+            .studies
+            .get(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
+            .trials
+            .values()
+            .cloned()
+            .collect())
+    }
+
+    fn query_trials(
+        &self,
+        study: &str,
+        filter: &super::query::TrialFilter,
+    ) -> Result<Vec<TrialProto>, DsError> {
+        let st = self.state.read().unwrap();
+        let entry = st
+            .studies
+            .get(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        // Range-scan from min_id so incremental reads touch only new rows,
+        // and clone only matching trials (the §6.3 database-work saving).
+        let lo = filter.min_id.unwrap_or(0);
+        let hi = filter.max_id.unwrap_or(u64::MAX);
+        let mut kept: Vec<TrialProto> = entry
+            .trials
+            .range(lo..=hi)
+            .map(|(_, t)| t)
+            .filter(|t| filter.matches(t))
+            .cloned()
+            .collect();
+        if let Some(limit) = filter.limit {
+            if kept.len() > limit {
+                kept = kept.split_off(kept.len() - limit);
+            }
+        }
+        Ok(kept)
+    }
+
+    fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        if !entry.trials.contains_key(&trial.id) {
+            return Err(DsError::TrialNotFound(study.to_string(), trial.id));
+        }
+        entry.trials.insert(trial.id, trial);
+        Ok(())
+    }
+
+    fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        entry
+            .trials
+            .remove(&id)
+            .map(|_| ())
+            .ok_or_else(|| DsError::TrialNotFound(study.to_string(), id))
+    }
+
+    fn mutate_trial(
+        &self,
+        study: &str,
+        id: u64,
+        f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
+    ) -> Result<TrialProto, DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        let trial = entry
+            .trials
+            .get_mut(&id)
+            .ok_or_else(|| DsError::TrialNotFound(study.to_string(), id))?;
+        f(trial)?;
+        Ok(trial.clone())
+    }
+
+    fn create_operation(&self, mut op: OperationProto) -> Result<OperationProto, DsError> {
+        let mut st = self.state.write().unwrap();
+        if op.name.is_empty() {
+            let id = self.next_op.fetch_add(1, Ordering::SeqCst);
+            op.name = format!("operations/{id}");
+        }
+        st.operations.insert(op.name.clone(), op.clone());
+        Ok(op)
+    }
+
+    fn get_operation(&self, name: &str) -> Result<OperationProto, DsError> {
+        self.state
+            .read()
+            .unwrap()
+            .operations
+            .get(name)
+            .cloned()
+            .ok_or_else(|| DsError::OperationNotFound(name.to_string()))
+    }
+
+    fn update_operation(&self, op: OperationProto) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        if !st.operations.contains_key(&op.name) {
+            return Err(DsError::OperationNotFound(op.name.clone()));
+        }
+        st.operations.insert(op.name.clone(), op);
+        Ok(())
+    }
+
+    fn pending_operations(&self) -> Result<Vec<OperationProto>, DsError> {
+        let st = self.state.read().unwrap();
+        let mut ops: Vec<OperationProto> =
+            st.operations.values().filter(|o| !o.done).cloned().collect();
+        ops.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(ops)
+    }
+
+    fn update_metadata(
+        &self,
+        study: &str,
+        updates: &[UnitMetadataUpdate],
+    ) -> Result<(), DsError> {
+        let mut st = self.state.write().unwrap();
+        let entry = st
+            .studies
+            .get_mut(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        for u in updates {
+            let Some(item) = &u.item else { continue };
+            if u.trial_id == 0 {
+                // Study-level metadata table.
+                let md = &mut entry.study.spec.metadata;
+                md.retain(|m| !(m.namespace == item.namespace && m.key == item.key));
+                md.push(item.clone());
+            } else {
+                let trial = entry
+                    .trials
+                    .get_mut(&u.trial_id)
+                    .ok_or_else(|| DsError::TrialNotFound(study.to_string(), u.trial_id))?;
+                trial
+                    .metadata
+                    .retain(|m| !(m.namespace == item.namespace && m.key == item.key));
+                trial.metadata.push(item.clone());
+            }
+        }
+        Ok(())
+    }
+
+    fn trial_count(&self, study: &str) -> Result<usize, DsError> {
+        let st = self.state.read().unwrap();
+        Ok(st
+            .studies
+            .get(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
+            .trials
+            .len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::messages::MetadataItem;
+    use std::sync::Arc;
+
+    fn study(display: &str) -> StudyProto {
+        StudyProto {
+            display_name: display.to_string(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn study_crud() {
+        let ds = InMemoryDatastore::new();
+        let s = ds.create_study(study("a")).unwrap();
+        assert_eq!(s.name, "studies/1");
+        assert_eq!(ds.get_study("studies/1").unwrap().display_name, "a");
+        assert_eq!(ds.lookup_study("a").unwrap().name, "studies/1");
+        let s2 = ds.create_study(study("b")).unwrap();
+        assert_eq!(s2.name, "studies/2");
+        assert_eq!(ds.list_studies().unwrap().len(), 2);
+        ds.delete_study("studies/1").unwrap();
+        assert_eq!(ds.get_study("studies/1"), Err(DsError::StudyNotFound("studies/1".into())));
+        assert!(ds.delete_study("studies/1").is_err());
+    }
+
+    #[test]
+    fn duplicate_display_name_rejected() {
+        let ds = InMemoryDatastore::new();
+        ds.create_study(study("same")).unwrap();
+        assert!(matches!(ds.create_study(study("same")), Err(DsError::StudyExists(_))));
+    }
+
+    #[test]
+    fn trial_ids_are_sequential_per_study() {
+        let ds = InMemoryDatastore::new();
+        let s1 = ds.create_study(study("a")).unwrap();
+        let s2 = ds.create_study(study("b")).unwrap();
+        for expect in 1..=3 {
+            let t = ds.create_trial(&s1.name, TrialProto::default()).unwrap();
+            assert_eq!(t.id, expect);
+        }
+        let t = ds.create_trial(&s2.name, TrialProto::default()).unwrap();
+        assert_eq!(t.id, 1, "ids are per-study");
+        assert_eq!(ds.trial_count(&s1.name).unwrap(), 3);
+    }
+
+    #[test]
+    fn mutate_trial_atomicity() {
+        let ds = Arc::new(InMemoryDatastore::new());
+        let s = ds.create_study(study("a")).unwrap();
+        ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        // 8 threads increment created_ms 100 times each via mutate_trial.
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let ds = Arc::clone(&ds);
+                let name = s.name.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        ds.mutate_trial(&name, 1, &mut |t| {
+                            t.created_ms += 1;
+                            Ok(())
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ds.get_trial(&s.name, 1).unwrap().created_ms, 800);
+    }
+
+    #[test]
+    fn operations() {
+        let ds = InMemoryDatastore::new();
+        let op = ds.create_operation(OperationProto::default()).unwrap();
+        assert_eq!(op.name, "operations/1");
+        assert_eq!(ds.pending_operations().unwrap().len(), 1);
+        let mut done = op.clone();
+        done.done = true;
+        ds.update_operation(done).unwrap();
+        assert!(ds.pending_operations().unwrap().is_empty());
+        assert!(ds.get_operation("operations/1").unwrap().done);
+        assert!(ds.get_operation("operations/99").is_err());
+    }
+
+    #[test]
+    fn metadata_updates_upsert() {
+        let ds = InMemoryDatastore::new();
+        let s = ds.create_study(study("a")).unwrap();
+        ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        let item = |v: &[u8]| MetadataItem {
+            namespace: "evo".into(),
+            key: "pop".into(),
+            value: v.to_vec(),
+        };
+        // Study-level write then overwrite.
+        ds.update_metadata(
+            &s.name,
+            &[UnitMetadataUpdate { trial_id: 0, item: Some(item(b"v1")) }],
+        )
+        .unwrap();
+        ds.update_metadata(
+            &s.name,
+            &[UnitMetadataUpdate { trial_id: 0, item: Some(item(b"v2")) }],
+        )
+        .unwrap();
+        let study = ds.get_study(&s.name).unwrap();
+        assert_eq!(study.spec.metadata.len(), 1);
+        assert_eq!(study.spec.metadata[0].value, b"v2");
+        // Trial-level write.
+        ds.update_metadata(
+            &s.name,
+            &[UnitMetadataUpdate { trial_id: 1, item: Some(item(b"t")) }],
+        )
+        .unwrap();
+        assert_eq!(ds.get_trial(&s.name, 1).unwrap().metadata[0].value, b"t");
+        // Unknown trial errors.
+        assert!(ds
+            .update_metadata(
+                &s.name,
+                &[UnitMetadataUpdate { trial_id: 99, item: Some(item(b"x")) }],
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn errors_for_missing_entities() {
+        let ds = InMemoryDatastore::new();
+        assert!(ds.get_trial("studies/1", 1).is_err());
+        assert!(ds.list_trials("nope").is_err());
+        assert!(ds.create_trial("nope", TrialProto::default()).is_err());
+        assert!(ds.update_trial("nope", TrialProto::default()).is_err());
+        let s = ds.create_study(study("a")).unwrap();
+        assert!(ds.update_trial(&s.name, TrialProto { id: 5, ..Default::default() }).is_err());
+    }
+}

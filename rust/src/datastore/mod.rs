@@ -1,0 +1,93 @@
+//! Persistent datastore (paper §3.1 "Persistent Datastore", §3.2).
+//!
+//! The datastore owns all studies, trials, and long-running operations.
+//! It is pluggable ("The database in OSS Vizier can be changed based on the
+//! user's needs"): [`memory::InMemoryDatastore`] for benchmarking and local
+//! studies, [`wal::WalDatastore`] for durability — an append-only
+//! write-ahead log of wire-encoded mutations with snapshot + replay
+//! recovery, which is what makes the server-side fault-tolerance claim of
+//! §3.2 hold across process crashes.
+
+pub mod memory;
+pub mod query;
+pub mod wal;
+
+use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
+
+/// Datastore errors (mapped to RPC statuses by the service layer).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum DsError {
+    #[error("study {0:?} not found")]
+    StudyNotFound(String),
+    #[error("trial {1} not found in study {0:?}")]
+    TrialNotFound(String, u64),
+    #[error("operation {0:?} not found")]
+    OperationNotFound(String),
+    #[error("study {0:?} already exists")]
+    StudyExists(String),
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("storage failure: {0}")]
+    Storage(String),
+}
+
+/// Storage abstraction used by the Vizier service.
+///
+/// All methods are atomic with respect to each other. `mutate_*` methods
+/// provide read-modify-write under the store's lock, which the service uses
+/// for trial assignment and operation completion.
+pub trait Datastore: Send + Sync {
+    // -- studies --
+    /// Store a new study; assigns `name` = `studies/{n}` if empty.
+    fn create_study(&self, study: StudyProto) -> Result<StudyProto, DsError>;
+    fn get_study(&self, name: &str) -> Result<StudyProto, DsError>;
+    /// Find by user-facing display name (paper: `load_or_create_study`).
+    fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError>;
+    fn list_studies(&self) -> Result<Vec<StudyProto>, DsError>;
+    fn update_study(&self, study: StudyProto) -> Result<(), DsError>;
+    fn delete_study(&self, name: &str) -> Result<(), DsError>;
+
+    // -- trials --
+    /// Store a new trial; assigns the next trial id in the study.
+    fn create_trial(&self, study: &str, trial: TrialProto) -> Result<TrialProto, DsError>;
+    fn get_trial(&self, study: &str, id: u64) -> Result<TrialProto, DsError>;
+    fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError>;
+    /// Server-side filtered read (paper §6.2: "the Policy can request only
+    /// the Trials it needs; ... reduce the database work by orders of
+    /// magnitude relative to loading all the Trials"). Implementations
+    /// should avoid cloning non-matching trials; the default falls back to
+    /// `list_trials` + filter.
+    fn query_trials(
+        &self,
+        study: &str,
+        filter: &query::TrialFilter,
+    ) -> Result<Vec<TrialProto>, DsError> {
+        Ok(filter.apply(self.list_trials(study)?))
+    }
+    fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError>;
+    fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError>;
+    /// Atomic read-modify-write of one trial.
+    fn mutate_trial(
+        &self,
+        study: &str,
+        id: u64,
+        f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
+    ) -> Result<TrialProto, DsError>;
+
+    // -- operations --
+    /// Store a new operation; assigns `name` = `operations/{n}` if empty.
+    fn create_operation(&self, op: OperationProto) -> Result<OperationProto, DsError>;
+    fn get_operation(&self, name: &str) -> Result<OperationProto, DsError>;
+    fn update_operation(&self, op: OperationProto) -> Result<(), DsError>;
+    /// All operations with `done == false` — scanned at startup to resume
+    /// interrupted computations (server-side fault tolerance).
+    fn pending_operations(&self) -> Result<Vec<OperationProto>, DsError>;
+
+    // -- metadata --
+    /// Apply a batch of metadata writes (trial_id 0 = study metadata).
+    fn update_metadata(&self, study: &str, updates: &[UnitMetadataUpdate])
+        -> Result<(), DsError>;
+
+    /// Number of trials in a study (cheaper than `list_trials().len()`).
+    fn trial_count(&self, study: &str) -> Result<usize, DsError>;
+}

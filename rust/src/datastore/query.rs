@@ -1,0 +1,147 @@
+//! Trial filters used by the PolicySupporter (paper §6.2: "the Policy can
+//! request only the Trials it needs; ... this can reduce the database work
+//! by orders of magnitude relative to loading all the Trials").
+
+use crate::wire::messages::{TrialProto, TrialState};
+
+/// A conjunctive filter over trials.
+#[derive(Debug, Clone, Default)]
+pub struct TrialFilter {
+    /// Keep only these states (empty = all states).
+    pub states: Vec<TrialState>,
+    /// Keep trials with `id >= min_id` (incremental reads for O(1)-update
+    /// designers, §6.3).
+    pub min_id: Option<u64>,
+    /// Keep trials with `id <= max_id`.
+    pub max_id: Option<u64>,
+    /// Keep trials assigned to this client.
+    pub client_id: Option<String>,
+    /// Cap the number of returned trials (newest-first when set).
+    pub limit: Option<usize>,
+}
+
+impl TrialFilter {
+    pub fn completed() -> Self {
+        Self {
+            states: vec![TrialState::Completed, TrialState::Infeasible],
+            ..Default::default()
+        }
+    }
+
+    pub fn active() -> Self {
+        Self {
+            states: vec![TrialState::Requested, TrialState::Active],
+            ..Default::default()
+        }
+    }
+
+    pub fn newer_than(mut self, id: u64) -> Self {
+        self.min_id = Some(id + 1);
+        self
+    }
+
+    pub fn for_client(mut self, client_id: &str) -> Self {
+        self.client_id = Some(client_id.to_string());
+        self
+    }
+
+    pub fn with_limit(mut self, n: usize) -> Self {
+        self.limit = Some(n);
+        self
+    }
+
+    pub fn matches(&self, t: &TrialProto) -> bool {
+        if !self.states.is_empty() && !self.states.contains(&t.state) {
+            return false;
+        }
+        if let Some(min) = self.min_id {
+            if t.id < min {
+                return false;
+            }
+        }
+        if let Some(max) = self.max_id {
+            if t.id > max {
+                return false;
+            }
+        }
+        if let Some(cid) = &self.client_id {
+            if &t.client_id != cid {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Apply the filter to a trial list (already sorted by id ascending).
+    pub fn apply(&self, trials: Vec<TrialProto>) -> Vec<TrialProto> {
+        let mut kept: Vec<TrialProto> = trials.into_iter().filter(|t| self.matches(t)).collect();
+        if let Some(limit) = self.limit {
+            if kept.len() > limit {
+                // newest-first truncation, then restore ascending order
+                kept = kept.split_off(kept.len() - limit);
+            }
+        }
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(id: u64, state: TrialState, client: &str) -> TrialProto {
+        TrialProto {
+            id,
+            state,
+            client_id: client.into(),
+            ..Default::default()
+        }
+    }
+
+    fn trials() -> Vec<TrialProto> {
+        vec![
+            trial(1, TrialState::Completed, "a"),
+            trial(2, TrialState::Active, "a"),
+            trial(3, TrialState::Completed, "b"),
+            trial(4, TrialState::Infeasible, "b"),
+            trial(5, TrialState::Requested, "c"),
+        ]
+    }
+
+    #[test]
+    fn state_filters() {
+        let done = TrialFilter::completed().apply(trials());
+        assert_eq!(done.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        let active = TrialFilter::active().apply(trials());
+        assert_eq!(active.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 5]);
+    }
+
+    #[test]
+    fn incremental_reads() {
+        let newer = TrialFilter::completed().newer_than(1).apply(trials());
+        assert_eq!(newer.iter().map(|t| t.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn client_filter() {
+        let f = TrialFilter::default().for_client("b");
+        assert_eq!(f.apply(trials()).len(), 2);
+    }
+
+    #[test]
+    fn limit_keeps_newest() {
+        let f = TrialFilter::default().with_limit(2);
+        let kept = f.apply(trials());
+        assert_eq!(kept.iter().map(|t| t.id).collect::<Vec<_>>(), vec![4, 5]);
+    }
+
+    #[test]
+    fn id_window() {
+        let f = TrialFilter {
+            min_id: Some(2),
+            max_id: Some(4),
+            ..Default::default()
+        };
+        assert_eq!(f.apply(trials()).iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,532 @@
+//! Write-ahead-log datastore: durable storage with crash recovery.
+//!
+//! Every mutation is encoded as a [`Mutation`] record and appended to a log
+//! file before being applied to the in-memory state. On startup the log is
+//! replayed, rebuilding the exact pre-crash state — including non-done
+//! operations, which the service then resumes (paper §3.2: "The Operations
+//! are stored in the database and contain sufficient information to restart
+//! the computation after a server crash, reboot, or update").
+//!
+//! Record framing: `[u32-le len][u8 kind][payload]`. A torn final record
+//! (crash mid-write) is detected and truncated at recovery.
+
+use super::memory::InMemoryDatastore;
+use super::{Datastore, DsError};
+use crate::wire::codec::{decode, encode, Reader, WireError, WireMessage, Writer};
+use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write as IoWrite};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+const KIND_PUT_STUDY: u8 = 1;
+const KIND_DELETE_STUDY: u8 = 2;
+const KIND_PUT_TRIAL: u8 = 3;
+const KIND_DELETE_TRIAL: u8 = 4;
+const KIND_PUT_OPERATION: u8 = 5;
+
+/// One durable mutation record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mutation {
+    PutStudy(StudyProto),
+    DeleteStudy(String),
+    PutTrial(String, TrialProto),
+    DeleteTrial(String, u64),
+    PutOperation(OperationProto),
+}
+
+/// Internal envelope so every mutation is one wire message.
+#[derive(Debug, Default)]
+struct Envelope {
+    study_name: String,
+    trial_id: u64,
+    study: Option<StudyProto>,
+    trial: Option<TrialProto>,
+    op: Option<OperationProto>,
+}
+
+impl WireMessage for Envelope {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.study_name);
+        w.u64(2, self.trial_id);
+        if let Some(s) = &self.study {
+            w.msg(3, s);
+        }
+        if let Some(t) = &self.trial {
+            w.msg(4, t);
+        }
+        if let Some(o) = &self.op {
+            w.msg(5, o);
+        }
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut e = Envelope::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => e.study_name = v.as_string()?,
+                2 => e.trial_id = v.as_u64()?,
+                3 => e.study = Some(v.as_msg()?),
+                4 => e.trial = Some(v.as_msg()?),
+                5 => e.op = Some(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(e)
+    }
+}
+
+impl Mutation {
+    fn kind(&self) -> u8 {
+        match self {
+            Mutation::PutStudy(_) => KIND_PUT_STUDY,
+            Mutation::DeleteStudy(_) => KIND_DELETE_STUDY,
+            Mutation::PutTrial(..) => KIND_PUT_TRIAL,
+            Mutation::DeleteTrial(..) => KIND_DELETE_TRIAL,
+            Mutation::PutOperation(_) => KIND_PUT_OPERATION,
+        }
+    }
+
+    fn to_envelope(&self) -> Envelope {
+        let mut e = Envelope::default();
+        match self {
+            Mutation::PutStudy(s) => e.study = Some(s.clone()),
+            Mutation::DeleteStudy(name) => e.study_name = name.clone(),
+            Mutation::PutTrial(study, t) => {
+                e.study_name = study.clone();
+                e.trial = Some(t.clone());
+            }
+            Mutation::DeleteTrial(study, id) => {
+                e.study_name = study.clone();
+                e.trial_id = *id;
+            }
+            Mutation::PutOperation(o) => e.op = Some(o.clone()),
+        }
+        e
+    }
+
+    fn from_envelope(kind: u8, e: Envelope) -> Result<Mutation, DsError> {
+        let missing = |what: &str| DsError::Storage(format!("wal record missing {what}"));
+        Ok(match kind {
+            KIND_PUT_STUDY => Mutation::PutStudy(e.study.ok_or_else(|| missing("study"))?),
+            KIND_DELETE_STUDY => Mutation::DeleteStudy(e.study_name),
+            KIND_PUT_TRIAL => Mutation::PutTrial(e.study_name, e.trial.ok_or_else(|| missing("trial"))?),
+            KIND_DELETE_TRIAL => Mutation::DeleteTrial(e.study_name, e.trial_id),
+            KIND_PUT_OPERATION => Mutation::PutOperation(e.op.ok_or_else(|| missing("op"))?),
+            other => return Err(DsError::Storage(format!("unknown wal record kind {other}"))),
+        })
+    }
+}
+
+/// Durable datastore: in-memory state + write-ahead log.
+pub struct WalDatastore {
+    mem: InMemoryDatastore,
+    log: Mutex<BufWriter<File>>,
+    path: PathBuf,
+    /// When true, fsync after every append (slower, strongest durability).
+    sync_every_write: bool,
+}
+
+impl WalDatastore {
+    /// Open (or create) a WAL-backed store at `path`, replaying any
+    /// existing log.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, DsError> {
+        Self::open_with_sync(path, false)
+    }
+
+    pub fn open_with_sync(path: impl AsRef<Path>, sync_every_write: bool) -> Result<Self, DsError> {
+        let path = path.as_ref().to_path_buf();
+        let mem = InMemoryDatastore::new();
+        let mut valid_len = 0u64;
+        if path.exists() {
+            let mut f = File::open(&path).map_err(io_err)?;
+            let mut buf = Vec::new();
+            f.read_to_end(&mut buf).map_err(io_err)?;
+            let mut pos = 0usize;
+            loop {
+                if pos + 4 > buf.len() {
+                    break; // torn length prefix
+                }
+                let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+                if len == 0 || pos + 4 + len > buf.len() {
+                    break; // torn record
+                }
+                let kind = buf[pos + 4];
+                let payload = &buf[pos + 5..pos + 4 + len];
+                let env: Envelope = decode(payload)
+                    .map_err(|e| DsError::Storage(format!("wal decode: {e}")))?;
+                let m = Mutation::from_envelope(kind, env)?;
+                apply(&mem, &m)?;
+                pos += 4 + len;
+                valid_len = pos as u64;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(io_err)?;
+        // Truncate any torn tail so future appends start at a clean record
+        // boundary.
+        file.set_len(valid_len).map_err(io_err)?;
+        file.seek(SeekFrom::End(0)).map_err(io_err)?;
+        Ok(Self {
+            mem,
+            log: Mutex::new(BufWriter::new(file)),
+            path,
+            sync_every_write,
+        })
+    }
+
+    /// Rewrite the log as a compact snapshot of current state (atomic
+    /// replace). Bounds recovery time for long-lived servers.
+    pub fn compact(&self) -> Result<(), DsError> {
+        let mut log = self.log.lock().unwrap();
+        let tmp = self.path.with_extension("wal.tmp");
+        {
+            let file = File::create(&tmp).map_err(io_err)?;
+            let mut w = BufWriter::new(file);
+            for study in self.mem.list_studies()? {
+                let name = study.name.clone();
+                append_record(&mut w, &Mutation::PutStudy(study))?;
+                for trial in self.mem.list_trials(&name)? {
+                    append_record(&mut w, &Mutation::PutTrial(name.clone(), trial))?;
+                }
+            }
+            for op in self.mem.pending_operations()? {
+                append_record(&mut w, &Mutation::PutOperation(op))?;
+            }
+            w.flush().map_err(io_err)?;
+            w.get_ref().sync_all().map_err(io_err)?;
+        }
+        std::fs::rename(&tmp, &self.path).map_err(io_err)?;
+        let file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(io_err)?;
+        *log = BufWriter::new(file);
+        Ok(())
+    }
+
+    /// Size of the log file in bytes.
+    pub fn log_size(&self) -> u64 {
+        std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+    }
+
+    fn append(&self, m: &Mutation) -> Result<(), DsError> {
+        let mut log = self.log.lock().unwrap();
+        append_record(&mut *log, m)?;
+        log.flush().map_err(io_err)?;
+        if self.sync_every_write {
+            log.get_ref().sync_data().map_err(io_err)?;
+        }
+        Ok(())
+    }
+}
+
+fn io_err(e: std::io::Error) -> DsError {
+    DsError::Storage(e.to_string())
+}
+
+fn append_record<W: IoWrite>(w: &mut W, m: &Mutation) -> Result<(), DsError> {
+    let payload = encode(&m.to_envelope());
+    let total = (1 + payload.len()) as u32;
+    w.write_all(&total.to_le_bytes()).map_err(io_err)?;
+    w.write_all(&[m.kind()]).map_err(io_err)?;
+    w.write_all(&payload).map_err(io_err)?;
+    Ok(())
+}
+
+fn apply(mem: &InMemoryDatastore, m: &Mutation) -> Result<(), DsError> {
+    match m {
+        Mutation::PutStudy(s) => mem.apply_put_study(s.clone()),
+        Mutation::DeleteStudy(name) => mem.apply_delete_study(name),
+        Mutation::PutTrial(study, t) => mem.apply_put_trial(study, t.clone())?,
+        Mutation::DeleteTrial(study, id) => mem.apply_delete_trial(study, *id),
+        Mutation::PutOperation(o) => mem.apply_put_operation(o.clone()),
+    }
+    Ok(())
+}
+
+impl Datastore for WalDatastore {
+    fn create_study(&self, study: StudyProto) -> Result<StudyProto, DsError> {
+        let created = self.mem.create_study(study)?;
+        self.append(&Mutation::PutStudy(created.clone()))?;
+        Ok(created)
+    }
+
+    fn get_study(&self, name: &str) -> Result<StudyProto, DsError> {
+        self.mem.get_study(name)
+    }
+
+    fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError> {
+        self.mem.lookup_study(display_name)
+    }
+
+    fn list_studies(&self) -> Result<Vec<StudyProto>, DsError> {
+        self.mem.list_studies()
+    }
+
+    fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
+        self.mem.update_study(study.clone())?;
+        self.append(&Mutation::PutStudy(study))
+    }
+
+    fn delete_study(&self, name: &str) -> Result<(), DsError> {
+        self.mem.delete_study(name)?;
+        self.append(&Mutation::DeleteStudy(name.to_string()))
+    }
+
+    fn create_trial(&self, study: &str, trial: TrialProto) -> Result<TrialProto, DsError> {
+        let created = self.mem.create_trial(study, trial)?;
+        self.append(&Mutation::PutTrial(study.to_string(), created.clone()))?;
+        Ok(created)
+    }
+
+    fn get_trial(&self, study: &str, id: u64) -> Result<TrialProto, DsError> {
+        self.mem.get_trial(study, id)
+    }
+
+    fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError> {
+        self.mem.list_trials(study)
+    }
+
+    fn query_trials(
+        &self,
+        study: &str,
+        filter: &super::query::TrialFilter,
+    ) -> Result<Vec<TrialProto>, DsError> {
+        self.mem.query_trials(study, filter)
+    }
+
+    fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
+        self.mem.update_trial(study, trial.clone())?;
+        self.append(&Mutation::PutTrial(study.to_string(), trial))
+    }
+
+    fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError> {
+        self.mem.delete_trial(study, id)?;
+        self.append(&Mutation::DeleteTrial(study.to_string(), id))
+    }
+
+    fn mutate_trial(
+        &self,
+        study: &str,
+        id: u64,
+        f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
+    ) -> Result<TrialProto, DsError> {
+        let updated = self.mem.mutate_trial(study, id, f)?;
+        self.append(&Mutation::PutTrial(study.to_string(), updated.clone()))?;
+        Ok(updated)
+    }
+
+    fn create_operation(&self, op: OperationProto) -> Result<OperationProto, DsError> {
+        let created = self.mem.create_operation(op)?;
+        self.append(&Mutation::PutOperation(created.clone()))?;
+        Ok(created)
+    }
+
+    fn get_operation(&self, name: &str) -> Result<OperationProto, DsError> {
+        self.mem.get_operation(name)
+    }
+
+    fn update_operation(&self, op: OperationProto) -> Result<(), DsError> {
+        self.mem.update_operation(op.clone())?;
+        self.append(&Mutation::PutOperation(op))
+    }
+
+    fn pending_operations(&self) -> Result<Vec<OperationProto>, DsError> {
+        self.mem.pending_operations()
+    }
+
+    fn update_metadata(
+        &self,
+        study: &str,
+        updates: &[UnitMetadataUpdate],
+    ) -> Result<(), DsError> {
+        self.mem.update_metadata(study, updates)?;
+        // Log the resulting rows (study spec and/or touched trials).
+        let s = self.mem.get_study(study)?;
+        self.append(&Mutation::PutStudy(s))?;
+        for u in updates {
+            if u.trial_id != 0 {
+                let t = self.mem.get_trial(study, u.trial_id)?;
+                self.append(&Mutation::PutTrial(study.to_string(), t))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn trial_count(&self, study: &str) -> Result<usize, DsError> {
+        self.mem.trial_count(study)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::messages::TrialState;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ossvizier-wal-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::id::next_uid()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn study(display: &str) -> StudyProto {
+        StudyProto {
+            display_name: display.to_string(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn state_survives_reopen() {
+        let dir = tmpdir("reopen");
+        let path = dir.join("store.wal");
+        {
+            let ds = WalDatastore::open(&path).unwrap();
+            let s = ds.create_study(study("exp")).unwrap();
+            let mut t = TrialProto::default();
+            t.client_id = "w0".into();
+            let t = ds.create_trial(&s.name, t).unwrap();
+            ds.mutate_trial(&s.name, t.id, &mut |t| {
+                t.state = TrialState::Active;
+                Ok(())
+            })
+            .unwrap();
+            ds.create_operation(OperationProto {
+                study_name: s.name.clone(),
+                count: 2,
+                ..Default::default()
+            })
+            .unwrap();
+        } // drop = crash without any shutdown handshake
+        let ds = WalDatastore::open(&path).unwrap();
+        let s = ds.lookup_study("exp").unwrap();
+        let t = ds.get_trial(&s.name, 1).unwrap();
+        assert_eq!(t.state, TrialState::Active);
+        assert_eq!(t.client_id, "w0");
+        // Pending operation recovered -> service can resume it.
+        let pending = ds.pending_operations().unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].count, 2);
+        // Id counters continue, no collisions.
+        let t2 = ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        assert_eq!(t2.id, 2);
+        let s2 = ds.create_study(study("exp2")).unwrap();
+        assert_eq!(s2.name, "studies/2");
+    }
+
+    #[test]
+    fn torn_tail_is_discarded() {
+        let dir = tmpdir("torn");
+        let path = dir.join("store.wal");
+        {
+            let ds = WalDatastore::open(&path).unwrap();
+            ds.create_study(study("a")).unwrap();
+            ds.create_study(study("b")).unwrap();
+        }
+        // Corrupt: chop bytes off the final record.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        let ds = WalDatastore::open(&path).unwrap();
+        assert!(ds.lookup_study("a").is_ok());
+        assert!(ds.lookup_study("b").is_err(), "torn record dropped");
+        // Store remains writable after truncation.
+        ds.create_study(study("c")).unwrap();
+        drop(ds);
+        let ds = WalDatastore::open(&path).unwrap();
+        assert!(ds.lookup_study("c").is_ok());
+    }
+
+    #[test]
+    fn deletes_survive_replay() {
+        let dir = tmpdir("delete");
+        let path = dir.join("store.wal");
+        {
+            let ds = WalDatastore::open(&path).unwrap();
+            let s = ds.create_study(study("a")).unwrap();
+            ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            ds.delete_trial(&s.name, 1).unwrap();
+            let s2 = ds.create_study(study("gone")).unwrap();
+            ds.delete_study(&s2.name).unwrap();
+        }
+        let ds = WalDatastore::open(&path).unwrap();
+        let s = ds.lookup_study("a").unwrap();
+        assert!(ds.get_trial(&s.name, 1).is_err());
+        assert!(ds.get_trial(&s.name, 2).is_ok());
+        assert!(ds.lookup_study("gone").is_err());
+    }
+
+    #[test]
+    fn compaction_shrinks_log_and_preserves_state() {
+        let dir = tmpdir("compact");
+        let path = dir.join("store.wal");
+        let ds = WalDatastore::open(&path).unwrap();
+        let s = ds.create_study(study("a")).unwrap();
+        let t = ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        // Many updates to the same trial bloat the log.
+        for i in 0..200 {
+            ds.mutate_trial(&s.name, t.id, &mut |t| {
+                t.created_ms = i;
+                Ok(())
+            })
+            .unwrap();
+        }
+        let before = ds.log_size();
+        ds.compact().unwrap();
+        let after = ds.log_size();
+        assert!(after < before / 10, "log {before} -> {after}");
+        // Post-compaction appends + replay still correct.
+        ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        drop(ds);
+        let ds = WalDatastore::open(&path).unwrap();
+        assert_eq!(ds.trial_count(&ds.lookup_study("a").unwrap().name).unwrap(), 2);
+        assert_eq!(ds.get_trial("studies/1", 1).unwrap().created_ms, 199);
+    }
+
+    #[test]
+    fn metadata_updates_durable() {
+        let dir = tmpdir("md");
+        let path = dir.join("store.wal");
+        {
+            let ds = WalDatastore::open(&path).unwrap();
+            let s = ds.create_study(study("a")).unwrap();
+            ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            ds.update_metadata(
+                &s.name,
+                &[
+                    UnitMetadataUpdate {
+                        trial_id: 0,
+                        item: Some(crate::wire::messages::MetadataItem {
+                            namespace: "evo".into(),
+                            key: "state".into(),
+                            value: b"pop1".to_vec(),
+                        }),
+                    },
+                    UnitMetadataUpdate {
+                        trial_id: 1,
+                        item: Some(crate::wire::messages::MetadataItem {
+                            namespace: "".into(),
+                            key: "ckpt".into(),
+                            value: b"path".to_vec(),
+                        }),
+                    },
+                ],
+            )
+            .unwrap();
+        }
+        let ds = WalDatastore::open(&path).unwrap();
+        let s = ds.lookup_study("a").unwrap();
+        assert_eq!(s.spec.metadata[0].value, b"pop1");
+        assert_eq!(ds.get_trial(&s.name, 1).unwrap().metadata[0].value, b"path");
+    }
+}

@@ -1,0 +1,22 @@
+//! # OSS Vizier (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *Open Source Vizier: Distributed
+//! Infrastructure and API for Reliable and Flexible Blackbox Optimization*
+//! (Song et al., AutoML-Conf 2022): a distributed blackbox-optimization
+//! **service** with durable operations, parallel fault-tolerant clients,
+//! a Pythia developer API for algorithms, and a GP-bandit backend whose
+//! numeric hot path is AOT-compiled from JAX/Pallas and executed from Rust
+//! via PJRT. See DESIGN.md for the full system inventory.
+
+pub mod benchmarks;
+pub mod client;
+pub mod datastore;
+pub mod policies;
+pub mod pythia;
+pub mod pyvizier;
+pub mod runtime;
+pub mod service;
+pub mod stopping;
+pub mod testing;
+pub mod util;
+pub mod wire;

@@ -1,0 +1,120 @@
+//! `vizier-server` — launcher for the OSS Vizier service (paper Code
+//! Block 4 equivalent).
+//!
+//! ```text
+//! vizier-server serve  --host 127.0.0.1 --port 6006 --datastore wal \
+//!                      --wal-path ./vizier.wal --workers 100
+//! vizier-server pythia --port 6007 --api-addr 127.0.0.1:6006
+//! vizier-server serve  --port 6006 --pythia-addr 127.0.0.1:6007
+//! ```
+//!
+//! `serve` runs the API service (in-process Pythia by default, or remote
+//! via `--pythia-addr`); `pythia` runs the standalone Pythia policy
+//! service of Figure 2.
+
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::runner::default_registry;
+use ossvizier::service::remote_pythia::{PythiaServer, RemotePythia};
+use ossvizier::service::{build_service, VizierServer, VizierService};
+use ossvizier::util::cli::{usage, Args, OptSpec};
+use std::sync::Arc;
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "host", takes_value: true, help: "bind host (default 127.0.0.1)" },
+        OptSpec { name: "port", takes_value: true, help: "bind port (default 6006)" },
+        OptSpec { name: "datastore", takes_value: true, help: "memory | wal (default memory)" },
+        OptSpec { name: "wal-path", takes_value: true, help: "WAL file path (default ./vizier.wal)" },
+        OptSpec { name: "workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
+        OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
+        OptSpec { name: "api-addr", takes_value: true, help: "pythia mode: the API server for datastore reads" },
+        OptSpec { name: "metrics-secs", takes_value: true, help: "print service metrics every N seconds (0 = off)" },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (mode, rest) = match argv.first().map(|s| s.as_str()) {
+        Some("serve") => ("serve", &argv[1..]),
+        Some("pythia") => ("pythia", &argv[1..]),
+        _ => ("serve", &argv[..]),
+    };
+    let args = match Args::parse(rest, &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("vizier-server [serve|pythia]", &specs()));
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") {
+        println!("{}", usage("vizier-server [serve|pythia]", &specs()));
+        return;
+    }
+    let host = args.get_or("host", "127.0.0.1").to_string();
+    let port = args.get_u64("port", if mode == "pythia" { 6007 } else { 6006 }).unwrap_or(6006);
+    let addr = format!("{host}:{port}");
+
+    match mode {
+        "pythia" => {
+            let api_addr = args.get_or("api-addr", "127.0.0.1:6006").to_string();
+            let server = PythiaServer::start(default_registry(), &api_addr, &addr)
+                .unwrap_or_else(|e| fatal(&format!("bind {addr}: {e}")));
+            println!("pythia service listening on {} (api server: {api_addr})", server.local_addr());
+            park();
+        }
+        _ => {
+            let ds: Arc<dyn Datastore> = match args.get_or("datastore", "memory") {
+                "wal" => {
+                    let path = args.get_or("wal-path", "./vizier.wal").to_string();
+                    let ds = WalDatastore::open(&path)
+                        .unwrap_or_else(|e| fatal(&format!("open wal {path}: {e}")));
+                    println!("durable datastore at {path} ({} bytes)", ds.log_size());
+                    Arc::new(ds)
+                }
+                "memory" => Arc::new(InMemoryDatastore::new()),
+                other => fatal(&format!("unknown datastore {other:?} (memory|wal)")),
+            };
+            let workers = args.get_u64("workers", 100).unwrap_or(100) as usize;
+            let service: Arc<VizierService> = match args.get("pythia-addr") {
+                Some(pythia_addr) => {
+                    println!("policies run on remote pythia at {pythia_addr}");
+                    VizierService::new(ds, Arc::new(RemotePythia::new(pythia_addr)), workers)
+                }
+                None => build_service(ds, |_| {}, workers),
+            };
+            // Server-side fault tolerance: resume interrupted operations.
+            match service.resume_pending_operations() {
+                Ok(0) => {}
+                Ok(n) => println!("resumed {n} interrupted operation(s) from the datastore"),
+                Err(e) => eprintln!("warning: could not resume operations: {e}"),
+            }
+            let metrics = Arc::clone(&service.metrics);
+            let server = VizierServer::start(service, &addr)
+                .unwrap_or_else(|e| fatal(&format!("bind {addr}: {e}")));
+            println!("vizier service listening on {} ({workers} workers)", server.local_addr());
+
+            let metrics_secs = args.get_u64("metrics-secs", 0).unwrap_or(0);
+            if metrics_secs > 0 {
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(metrics_secs));
+                    println!("{}", metrics.report());
+                }
+            }
+            park();
+        }
+    }
+}
+
+fn park() -> ! {
+    loop {
+        std::thread::park();
+    }
+}
+
+fn fatal(msg: &str) -> ! {
+    eprintln!("fatal: {msg}");
+    std::process::exit(1);
+}

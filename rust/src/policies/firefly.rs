@@ -1,0 +1,244 @@
+//! Firefly algorithm (Yang, 2010) — §6.3's third named meta-heuristic.
+//! Fireflies (evaluated points) attract each other with brightness
+//! (fitness); a new suggestion moves a firefly toward a brighter one in
+//! unit space with distance-decayed attraction plus a random walk.
+
+use super::population::{
+    designer_rng, member_from_trial, population_from_json, population_to_json, Member,
+};
+use crate::pythia::designer::{Designer, SerializableDesigner};
+use crate::pythia::policy::PolicyError;
+use crate::pyvizier::search_space::{ParameterConfig, ParameterKind};
+use crate::pyvizier::{scaling, Metadata, ParameterValue, StudyConfig, Trial, TrialSuggestion};
+use crate::util::rng::Pcg32;
+
+/// Swarm capacity.
+pub const SWARM: usize = 20;
+/// Base attractiveness.
+const BETA0: f64 = 0.8;
+/// Light-absorption coefficient.
+const GAMMA: f64 = 2.0;
+/// Random-walk scale.
+const ALPHA: f64 = 0.08;
+
+pub struct FireflyDesigner {
+    config: StudyConfig,
+    swarm: Vec<Member>,
+    absorbed: u64,
+}
+
+/// Project a parameter to unit space (ordinal embedding for
+/// discrete/categorical values).
+pub(crate) fn to_unit_value(cfg: &ParameterConfig, v: &ParameterValue) -> f64 {
+    match &cfg.kind {
+        ParameterKind::Double { min, max } => {
+            scaling::to_unit(cfg.scale, *min, *max, v.as_f64().unwrap_or(*min))
+        }
+        ParameterKind::Integer { min, max } => {
+            let span = (max - min).max(1) as f64;
+            (v.as_i64().unwrap_or(*min) - min) as f64 / span
+        }
+        ParameterKind::Discrete { values } => {
+            let x = v.as_f64().unwrap_or(values[0]);
+            let idx = values.iter().position(|&d| d == x).unwrap_or(0);
+            idx as f64 / (values.len() - 1).max(1) as f64
+        }
+        ParameterKind::Categorical { values } => {
+            let idx = v
+                .as_str()
+                .and_then(|s| values.iter().position(|c| c == s))
+                .unwrap_or(0);
+            idx as f64 / (values.len() - 1).max(1) as f64
+        }
+    }
+}
+
+/// Inverse of [`to_unit_value`].
+pub(crate) fn from_unit_value(cfg: &ParameterConfig, u: f64) -> ParameterValue {
+    let u = u.clamp(0.0, 1.0);
+    match &cfg.kind {
+        ParameterKind::Double { min, max } => {
+            ParameterValue::F64(scaling::from_unit(cfg.scale, *min, *max, u))
+        }
+        ParameterKind::Integer { min, max } => {
+            let span = (max - min) as f64;
+            ParameterValue::I64(min + (u * span).round() as i64)
+        }
+        ParameterKind::Discrete { values } => {
+            let idx = (u * (values.len() - 1) as f64).round() as usize;
+            ParameterValue::F64(values[idx])
+        }
+        ParameterKind::Categorical { values } => {
+            let idx = (u * (values.len() - 1) as f64).round() as usize;
+            ParameterValue::Str(values[idx].clone())
+        }
+    }
+}
+
+impl FireflyDesigner {
+    /// Move firefly `i` toward a brighter firefly `j` (if any) in unit space.
+    fn fly(&self, i: usize, rng: &mut Pcg32) -> TrialSuggestion {
+        let space = &self.config.search_space;
+        let me = &self.swarm[i];
+        // The brightest firefly other than me.
+        let target = self
+            .swarm
+            .iter()
+            .filter(|m| m.fitness() > me.fitness())
+            .max_by(|a, b| a.fitness().partial_cmp(&b.fitness()).unwrap());
+        let params = space.assemble(|cfg| {
+            let x = to_unit_value(cfg, me.params.get(&cfg.name).unwrap_or(&ParameterValue::F64(0.0)));
+            let moved = match target {
+                Some(t) => {
+                    let y = to_unit_value(
+                        cfg,
+                        t.params.get(&cfg.name).unwrap_or(&ParameterValue::F64(0.0)),
+                    );
+                    let r2 = (y - x) * (y - x);
+                    let beta = BETA0 * (-GAMMA * r2).exp();
+                    x + beta * (y - x) + ALPHA * (rng.f64() - 0.5)
+                }
+                // Brightest firefly wanders randomly.
+                None => x + 2.0 * ALPHA * (rng.f64() - 0.5),
+            };
+            from_unit_value(cfg, moved)
+        });
+        TrialSuggestion::new(params)
+    }
+}
+
+impl Designer for FireflyDesigner {
+    fn update(&mut self, completed: &[Trial]) {
+        for t in completed {
+            self.absorbed += 1;
+            if let Some(m) = member_from_trial(t, &self.config.metrics) {
+                self.swarm.push(m);
+                self.swarm
+                    .sort_by(|a, b| b.fitness().partial_cmp(&a.fitness()).unwrap());
+                self.swarm.truncate(SWARM);
+            }
+        }
+    }
+
+    fn suggest(&mut self, count: usize) -> Result<Vec<TrialSuggestion>, PolicyError> {
+        let mut rng = designer_rng(&self.config, self.absorbed ^ 0xF1);
+        let space = self.config.search_space.clone();
+        Ok((0..count)
+            .map(|k| {
+                if self.swarm.is_empty() {
+                    TrialSuggestion::new(space.sample(&mut rng))
+                } else {
+                    self.fly(k % self.swarm.len(), &mut rng)
+                }
+            })
+            .collect())
+    }
+}
+
+impl SerializableDesigner for FireflyDesigner {
+    fn designer_name() -> &'static str {
+        "firefly"
+    }
+
+    fn from_config(config: &StudyConfig) -> Result<Self, PolicyError> {
+        if config.metrics.len() != 1 {
+            return Err(PolicyError::Unsupported("firefly is single-objective".into()));
+        }
+        Ok(Self {
+            config: config.clone(),
+            swarm: Vec::new(),
+            absorbed: 0,
+        })
+    }
+
+    fn dump(&self) -> Metadata {
+        let mut md = Metadata::new();
+        md.put_str("", "swarm", &population_to_json(&self.swarm));
+        md.put_str("", "absorbed", &self.absorbed.to_string());
+        md
+    }
+
+    fn recover(config: &StudyConfig, md: &Metadata) -> Result<Self, PolicyError> {
+        let missing = || PolicyError::CorruptState("missing swarm".into());
+        Ok(Self {
+            config: config.clone(),
+            swarm: population_from_json(md.get_str("", "swarm").ok_or_else(missing)?)?,
+            absorbed: md
+                .get_str("", "absorbed")
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(missing)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::test_support::*;
+    use crate::pyvizier::{Measurement, ParameterDict, TrialState};
+
+    fn trial(id: u64, lr: f64, score: f64) -> Trial {
+        let mut p = ParameterDict::new();
+        p.set("lr", lr).set("layers", 4i64).set("opt", "sgd");
+        let mut t = Trial::new(id, p);
+        t.state = TrialState::Completed;
+        t.final_measurement = Some(Measurement::new(1).with_metric("score", score));
+        t
+    }
+
+    #[test]
+    fn unit_embedding_roundtrip() {
+        let cfgs = vec![
+            ParameterConfig::double("x", -2.0, 3.0),
+            ParameterConfig::integer("i", 1, 9),
+            ParameterConfig::discrete("d", vec![0.5, 1.0, 8.0]),
+            ParameterConfig::categorical("c", vec!["a", "b", "c"]),
+        ];
+        let mut rng = Pcg32::seeded(5);
+        for cfg in &cfgs {
+            for _ in 0..50 {
+                let v = cfg.sample_value(&mut rng);
+                let u = to_unit_value(cfg, &v);
+                assert!((0.0..=1.0).contains(&u));
+                let back = from_unit_value(cfg, u);
+                // Roundtrip exact for non-continuous kinds.
+                if !matches!(cfg.kind, ParameterKind::Double { .. }) {
+                    assert!(back.matches(&v), "{cfg:?}: {v:?} -> {u} -> {back:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dim_fireflies_move_toward_bright_ones() {
+        let (_, _, config) = test_study("FIREFLY");
+        let mut d = FireflyDesigner::from_config(&config).unwrap();
+        let mut trials = vec![trial(1, 1e-2, 100.0)]; // bright, lr = 1e-2
+        trials.extend((2..=8).map(|i| trial(i, 1e-4, 1.0))); // dim, lr = 1e-4
+        d.update(&trials);
+        let suggestions = d.suggest(24).unwrap();
+        // Dim flies (lr=1e-4, unit 0) move toward the bright one (unit ~1);
+        // average log-lr must exceed the dim baseline.
+        let mean_loglr: f64 = suggestions
+            .iter()
+            .map(|s| {
+                config.search_space.validate(&s.parameters).unwrap();
+                s.parameters.get_f64("lr").unwrap().log10()
+            })
+            .sum::<f64>()
+            / suggestions.len() as f64;
+        assert!(mean_loglr > -3.8, "mean log lr {mean_loglr} should move up from -4");
+    }
+
+    #[test]
+    fn state_roundtrip_and_policy_path() {
+        let (ds, study, config) = test_study("FIREFLY");
+        add_completed_random(&ds, &study, &config, 5);
+        let s = run_suggest(&ds, &study, &config, 4);
+        assert_eq!(s.len(), 4);
+        let mut d = FireflyDesigner::from_config(&config).unwrap();
+        d.update(&(1..=5).map(|i| trial(i, 1e-3, i as f64)).collect::<Vec<_>>());
+        let d2 = FireflyDesigner::recover(&config, &d.dump()).unwrap();
+        assert_eq!(d2.swarm, d.swarm);
+    }
+}

@@ -1,0 +1,299 @@
+//! Gaussian-Process bandit policy (paper Code Block 2):
+//! "train a GP on the completed trials, use it to compute and optimize an
+//! acquisition function, and return the suggestion".
+//!
+//! The numeric core is pluggable via [`GpBackend`]: [`RustGpBackend`] runs
+//! the pure-Rust math in [`super::gp_math`]; `runtime::gp_artifact`
+//! provides the AOT-compiled JAX/Pallas version executed through PJRT
+//! (same interface, validated against this one in integration tests).
+//! Acquisition optimization is batched scoring over quasi-random
+//! candidates with a local-refinement pass.
+
+use super::firefly::{from_unit_value, to_unit_value};
+use super::gp_math::{GpParams, GpPosterior};
+use super::quasirandom::halton;
+use crate::datastore::query::TrialFilter;
+use crate::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use crate::pythia::supporter::PolicySupporter;
+use crate::pyvizier::{ObservationNoise, ParameterDict, StudyConfig, TrialSuggestion};
+use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Number of quasi-random acquisition candidates scored per suggestion.
+pub const CANDIDATES: usize = 256;
+/// UCB exploration coefficient.
+pub const UCB_BETA: f64 = 2.0;
+/// Seed trials before the GP engages.
+pub const MIN_OBSERVATIONS: usize = 4;
+/// Cap on training-set size: the newest N completed trials are used
+/// (keeps the O(n^3) solve bounded; matches the padded AOT artifact).
+pub const MAX_TRAIN: usize = 256;
+
+/// Backend interface: score `candidates` (unit-cube rows) given training
+/// data (unit-cube rows + raw objective values, maximization orientation).
+/// Returns one acquisition score per candidate (higher = better).
+pub trait GpBackend: Send + Sync {
+    fn score(
+        &self,
+        x_train: &[Vec<f64>],
+        y_train: &[f64],
+        candidates: &[Vec<f64>],
+        noise_high: bool,
+    ) -> Result<Vec<f64>, PolicyError>;
+
+    fn backend_name(&self) -> &str;
+}
+
+/// Pure-Rust backend.
+pub struct RustGpBackend;
+
+impl GpBackend for RustGpBackend {
+    fn score(
+        &self,
+        x_train: &[Vec<f64>],
+        y_train: &[f64],
+        candidates: &[Vec<f64>],
+        noise_high: bool,
+    ) -> Result<Vec<f64>, PolicyError> {
+        let gp = GpPosterior::fit(
+            x_train.to_vec(),
+            y_train,
+            GpParams::default().with_noise_hint(noise_high),
+        )
+        .map_err(PolicyError::Internal)?;
+        Ok(candidates.iter().map(|c| gp.ucb(c, UCB_BETA)).collect())
+    }
+
+    fn backend_name(&self) -> &str {
+        "rust-gp"
+    }
+}
+
+/// The GP-bandit policy.
+pub struct GpBanditPolicy {
+    backend: Arc<dyn GpBackend>,
+}
+
+impl Default for GpBanditPolicy {
+    fn default() -> Self {
+        Self {
+            backend: Arc::new(RustGpBackend),
+        }
+    }
+}
+
+impl GpBanditPolicy {
+    /// Use a custom numeric backend (e.g. the PJRT artifact executor).
+    pub fn with_backend(backend: Arc<dyn GpBackend>) -> Self {
+        Self { backend }
+    }
+}
+
+/// Map an assignment to unit-cube coordinates over the flattened configs.
+pub fn embed(config: &StudyConfig, params: &ParameterDict) -> Vec<f64> {
+    config
+        .search_space
+        .all_configs()
+        .iter()
+        .map(|cfg| match params.get(&cfg.name) {
+            Some(v) => to_unit_value(cfg, v),
+            None => 0.5, // inactive conditional branch: neutral coordinate
+        })
+        .collect()
+}
+
+/// Map unit-cube coordinates back to a feasible assignment.
+pub fn unembed(config: &StudyConfig, point: &[f64]) -> ParameterDict {
+    let configs = config.search_space.all_configs();
+    let units: std::collections::HashMap<String, f64> = configs
+        .iter()
+        .zip(point)
+        .map(|(c, &u)| (c.name.clone(), u))
+        .collect();
+    config
+        .search_space
+        .assemble(|cfg| from_unit_value(cfg, units.get(&cfg.name).copied().unwrap_or(0.5)))
+}
+
+impl Policy for GpBanditPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        supporter: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        let config = &req.study_config;
+        if config.metrics.len() != 1 {
+            return Err(PolicyError::Unsupported(
+                "GP_BANDIT is single-objective; use NSGA2 for multi-objective studies".into(),
+            ));
+        }
+        let metric = config.single_objective();
+        let total = supporter.trial_count(&req.study_name)? as u64;
+        let mut rng = super::op_rng(config, &req.study_name, total);
+
+        // Training data: newest MAX_TRAIN completed feasible trials.
+        let completed = supporter.trials(
+            &req.study_name,
+            &TrialFilter::completed().with_limit(MAX_TRAIN),
+        )?;
+        let mut x_train = Vec::new();
+        let mut y_train = Vec::new();
+        for t in &completed {
+            if !t.is_feasible_completed() {
+                continue;
+            }
+            if let Some(v) = t.final_metric(&metric.name) {
+                x_train.push(embed(config, &t.parameters));
+                y_train.push(metric.maximization_value(v));
+            }
+        }
+
+        // Cold start: quasi-random seeding.
+        if x_train.len() < MIN_OBSERVATIONS {
+            let suggestions = (0..req.count as u64)
+                .map(|i| {
+                    TrialSuggestion::new(super::quasirandom::halton_point(
+                        &config.search_space,
+                        total + i,
+                    ))
+                })
+                .collect();
+            return Ok(SuggestDecision {
+                suggestions,
+                study_metadata: None,
+            });
+        }
+
+        let noise_high = config.observation_noise == ObservationNoise::High;
+        let dims = config.search_space.all_configs().len();
+        let mut suggestions = Vec::with_capacity(req.count);
+        for b in 0..req.count {
+            // Candidate pool: Halton net + jittered perturbations of the
+            // incumbent (local refinement).
+            let mut candidates: Vec<Vec<f64>> = (0..CANDIDATES as u64 * 3 / 4)
+                .map(|i| halton(total * 31 + b as u64 * 977 + i + 20, dims))
+                .collect();
+            let best_idx = y_train
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            let incumbent = &x_train[best_idx];
+            while candidates.len() < CANDIDATES {
+                let jittered: Vec<f64> = incumbent
+                    .iter()
+                    .map(|&u| (u + rng.normal() * 0.05).clamp(0.0, 1.0))
+                    .collect();
+                candidates.push(jittered);
+            }
+
+            let scores = self
+                .backend
+                .score(&x_train, &y_train, &candidates, noise_high)?;
+            let pick = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .ok_or_else(|| PolicyError::Internal("no candidates scored".into()))?;
+
+            // Within-batch diversity: pretend the pick was observed at the
+            // incumbent's value ("constant liar") so the next batch member
+            // explores elsewhere.
+            let lie = y_train[best_idx];
+            x_train.push(candidates[pick].clone());
+            y_train.push(lie);
+            suggestions.push(TrialSuggestion::new(unembed(config, &candidates[pick])));
+        }
+        Ok(SuggestDecision {
+            suggestions,
+            study_metadata: None,
+        })
+    }
+
+    fn name(&self) -> &str {
+        "gp-bandit"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::test_support::*;
+
+    #[test]
+    fn cold_start_uses_quasirandom() {
+        let (ds, study, config) = test_study("GP_BANDIT");
+        let s = run_suggest(&ds, &study, &config, 4);
+        assert_eq!(s.len(), 4);
+        for sg in &s {
+            config.search_space.validate(&sg.parameters).unwrap();
+        }
+    }
+
+    #[test]
+    fn embedding_roundtrip_feasible() {
+        let (_, _, config) = test_study("GP_BANDIT");
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        for _ in 0..50 {
+            let p = config.search_space.sample(&mut rng);
+            let e = embed(&config, &p);
+            assert_eq!(e.len(), 3);
+            assert!(e.iter().all(|&u| (0.0..=1.0).contains(&u)));
+            let back = unembed(&config, &e);
+            config.search_space.validate(&back).unwrap();
+        }
+    }
+
+    #[test]
+    fn exploits_signal_after_warmup() {
+        let (ds, study, config) = test_study("GP_BANDIT");
+        // Warm up with informative observations.
+        add_completed_random(&ds, &study, &config, 12);
+        // Several bandit rounds.
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..8 {
+            let sugg = run_suggest(&ds, &study, &config, 2);
+            for s in sugg {
+                config.search_space.validate(&s.parameters).unwrap();
+                best = best.max(score_of(&s.parameters));
+                add_completed_with(&ds, &study, &config, s.parameters.clone());
+            }
+        }
+        // Optimum score is 0.2; GP should find a good region quickly.
+        assert!(best > -0.4, "best found {best}");
+    }
+
+    #[test]
+    fn batch_members_are_diverse() {
+        let (ds, study, config) = test_study("GP_BANDIT");
+        add_completed_random(&ds, &study, &config, 10);
+        let s = run_suggest(&ds, &study, &config, 4);
+        let distinct: std::collections::HashSet<String> =
+            s.iter().map(|x| format!("{:?}", x.parameters)).collect();
+        assert!(distinct.len() >= 3, "batch should not collapse to one point");
+    }
+
+    #[test]
+    fn rejects_multiobjective() {
+        let (ds, study, mut config) = test_study("GP_BANDIT");
+        config.add_metric(crate::pyvizier::MetricInformation::minimize("x"));
+        let supporter = std::sync::Arc::new(crate::pythia::supporter::DatastoreSupporter::new(
+            ds as std::sync::Arc<dyn crate::datastore::Datastore>,
+        ));
+        let mut policy = GpBanditPolicy::default();
+        let err = policy
+            .suggest(
+                &crate::pythia::policy::SuggestRequest {
+                    study_name: study,
+                    study_config: config,
+                    count: 1,
+                    client_id: "c".into(),
+                },
+                supporter.as_ref(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, PolicyError::Unsupported(_)));
+    }
+}

@@ -1,0 +1,390 @@
+//! Pure-Rust Gaussian-process regression: Matérn-5/2 kernel, Cholesky
+//! factorization, posterior mean/variance, and UCB/EI acquisitions.
+//!
+//! This is the reference implementation of the GP-bandit numeric core. It
+//! serves three roles: (1) the fallback backend for
+//! [`super::gp_bandit::GpBanditPolicy`] when no AOT artifact is available,
+//! (2) the oracle the PJRT artifact is validated against in integration
+//! tests, and (3) the regressor behind decay-curve automated stopping
+//! (Appendix B.1). The JAX/Pallas layers (python/compile/) implement the
+//! same math; python/compile/kernels/ref.py mirrors these formulas.
+
+/// Row-major dense matrix of f64.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub n: usize,
+    pub m: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize, m: usize) -> Self {
+        Self {
+            n,
+            m,
+            data: vec![0.0; n * m],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.m + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.m + j] = v;
+    }
+}
+
+/// Squared Euclidean distance between two points scaled by 1/lengthscale.
+#[inline]
+fn scaled_sqdist(a: &[f64], b: &[f64], inv_ls: f64) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (x - y) * inv_ls;
+            d * d
+        })
+        .sum()
+}
+
+/// Matérn-5/2 kernel value given squared scaled distance.
+#[inline]
+pub fn matern52(r2: f64, sigma2: f64) -> f64 {
+    let r = r2.max(0.0).sqrt();
+    let s5r = 5.0f64.sqrt() * r;
+    sigma2 * (1.0 + s5r + 5.0 * r2 / 3.0) * (-s5r).exp()
+}
+
+/// Kernel matrix K[i][j] = matern52(|x_i - x_j|/ls) for rows of X vs rows
+/// of Y. This is the computation the L1 Pallas kernel tiles on TPU.
+pub fn kernel_matrix(x: &[Vec<f64>], y: &[Vec<f64>], lengthscale: f64, sigma2: f64) -> Mat {
+    let inv_ls = 1.0 / lengthscale;
+    let mut k = Mat::zeros(x.len(), y.len());
+    for i in 0..x.len() {
+        for j in 0..y.len() {
+            k.set(i, j, matern52(scaled_sqdist(&x[i], &y[j], inv_ls), sigma2));
+        }
+    }
+    k
+}
+
+/// In-place Cholesky factorization A = L Lᵀ (lower triangular returned).
+/// Adds escalating jitter on failure; errors if even large jitter fails.
+pub fn cholesky(a: &Mat) -> Result<Mat, String> {
+    let n = a.n;
+    assert_eq!(a.n, a.m, "cholesky needs a square matrix");
+    let mut jitter = 0.0;
+    'attempt: for attempt in 0..6 {
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a.at(i, j) + if i == j { jitter } else { 0.0 };
+                for k in 0..j {
+                    sum -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        jitter = if attempt == 0 { 1e-10 } else { jitter * 100.0 };
+                        continue 'attempt;
+                    }
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.at(j, j));
+                }
+            }
+        }
+        return Ok(l);
+    }
+    Err("matrix not positive definite even with jitter".to_string())
+}
+
+/// Solve L z = b (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at(i, k) * z[k];
+        }
+        z[i] = s / l.at(i, i);
+    }
+    z
+}
+
+/// Solve Lᵀ x = b (backward substitution).
+pub fn solve_upper_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// A fitted GP posterior.
+pub struct GpPosterior {
+    x_train: Vec<Vec<f64>>,
+    l: Mat,
+    alpha: Vec<f64>,
+    lengthscale: f64,
+    sigma2: f64,
+    y_mean: f64,
+    y_std: f64,
+}
+
+/// GP hyperparameters (fixed; the paper's service leaves hyperparameter
+/// policy to the algorithm author).
+#[derive(Debug, Clone, Copy)]
+pub struct GpParams {
+    pub lengthscale: f64,
+    pub sigma2: f64,
+    pub noise: f64,
+}
+
+impl Default for GpParams {
+    fn default() -> Self {
+        Self {
+            lengthscale: 0.25,
+            sigma2: 1.0,
+            noise: 1e-6,
+        }
+    }
+}
+
+impl GpParams {
+    /// Apply the observation-noise hint of Appendix B.2.
+    pub fn with_noise_hint(mut self, high: bool) -> Self {
+        self.noise = if high { 1e-2 } else { 1e-6 };
+        self
+    }
+}
+
+impl GpPosterior {
+    /// Fit on (x, y); x rows are unit-cube coordinates, y raw objective
+    /// values (standardized internally).
+    pub fn fit(x: Vec<Vec<f64>>, y: &[f64], p: GpParams) -> Result<Self, String> {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "GP needs at least one observation");
+        let n = x.len();
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let var = y.iter().map(|v| (v - y_mean) * (v - y_mean)).sum::<f64>() / n as f64;
+        let y_std = var.sqrt().max(1e-12);
+        let y_norm: Vec<f64> = y.iter().map(|v| (v - y_mean) / y_std).collect();
+
+        let mut k = kernel_matrix(&x, &x, p.lengthscale, p.sigma2);
+        for i in 0..n {
+            let v = k.at(i, i) + p.noise;
+            k.set(i, i, v);
+        }
+        let l = cholesky(&k)?;
+        let z = solve_lower(&l, &y_norm);
+        let alpha = solve_upper_t(&l, &z);
+        Ok(Self {
+            x_train: x,
+            l,
+            alpha,
+            lengthscale: p.lengthscale,
+            sigma2: p.sigma2,
+            y_mean,
+            y_std,
+        })
+    }
+
+    /// Posterior mean and variance at one point (in the original y scale).
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let inv_ls = 1.0 / self.lengthscale;
+        let kstar: Vec<f64> = self
+            .x_train
+            .iter()
+            .map(|xi| matern52(scaled_sqdist(xi, x, inv_ls), self.sigma2))
+            .collect();
+        let mean_n: f64 = kstar.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        let v = solve_lower(&self.l, &kstar);
+        let var_n = (self.sigma2 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (
+            self.y_mean + self.y_std * mean_n,
+            (self.y_std * self.y_std) * var_n,
+        )
+    }
+
+    /// Upper confidence bound acquisition.
+    pub fn ucb(&self, x: &[f64], beta: f64) -> f64 {
+        let (mu, var) = self.predict(x);
+        mu + beta * var.sqrt()
+    }
+
+    /// Expected improvement over `best` (maximization).
+    pub fn expected_improvement(&self, x: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.predict(x);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return (mu - best).max(0.0);
+        }
+        let z = (mu - best) / sigma;
+        (mu - best) * normal_cdf(z) + sigma * normal_pdf(z)
+    }
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ(z) via the Abramowitz–Stegun erf approximation (|err| < 1.5e-7).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn kernel_properties() {
+        // k(0) = sigma2; symmetric; decreasing in distance.
+        assert!((matern52(0.0, 2.0) - 2.0).abs() < 1e-12);
+        assert!(matern52(0.1, 1.0) > matern52(1.0, 1.0));
+        let x = vec![vec![0.0, 0.0], vec![1.0, 0.5], vec![0.3, 0.9]];
+        let k = kernel_matrix(&x, &x, 0.5, 1.0);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((k.at(i, j) - k.at(j, i)).abs() < 1e-12);
+            }
+            assert!((k.at(i, i) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = B Bᵀ + I is SPD for any B.
+        let b = Mat {
+            n: 4,
+            m: 4,
+            data: vec![
+                1.0, 0.2, -0.5, 0.0, 0.3, 2.0, 0.1, -0.7, 0.0, 0.4, 1.5, 0.2, -0.1, 0.0, 0.3, 0.9,
+            ],
+        };
+        let mut a = Mat::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..4 {
+                    s += b.at(i, k) * b.at(j, k);
+                }
+                a.set(i, j, s);
+            }
+        }
+        let l = cholesky(&a).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - a.at(i, j)).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let a = Mat {
+            n: 3,
+            m: 3,
+            data: vec![4.0, 1.0, 0.5, 1.0, 3.0, 0.2, 0.5, 0.2, 2.0],
+        };
+        let l = cholesky(&a).unwrap();
+        let b = vec![1.0, -2.0, 0.5];
+        let z = solve_lower(&l, &b);
+        let x = solve_upper_t(&l, &z);
+        // Check A x = b.
+        for i in 0..3 {
+            let s: f64 = (0..3).map(|j| a.at(i, j) * x[j]).sum();
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn posterior_interpolates_observations() {
+        // Noise-free GP must (nearly) interpolate training points.
+        let x = vec![vec![0.1], vec![0.5], vec![0.9]];
+        let y = vec![1.0, -1.0, 0.5];
+        let gp = GpPosterior::fit(x.clone(), &y, GpParams::default()).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, var) = gp.predict(xi);
+            assert!((mu - yi).abs() < 1e-3, "mean at train point: {mu} vs {yi}");
+            assert!(var < 1e-3, "variance at train point: {var}");
+        }
+        // Far from data: variance grows toward prior.
+        let (_, var_far) = gp.predict(&[3.0]);
+        assert!(var_far > 0.5);
+    }
+
+    #[test]
+    fn noise_hint_changes_fit(){
+        let x = vec![vec![0.2], vec![0.2001], vec![0.8]];
+        let y = vec![0.0, 1.0, 0.5]; // conflicting near-duplicates
+        let low = GpPosterior::fit(x.clone(), &y, GpParams::default().with_noise_hint(false));
+        let high = GpPosterior::fit(x, &y, GpParams::default().with_noise_hint(true)).unwrap();
+        // High noise smooths the conflict: prediction between 0 and 1.
+        let (mu, _) = high.predict(&[0.2]);
+        assert!((0.1..0.9).contains(&mu), "smoothed mean {mu}");
+        let _ = low; // low-noise fit may need jitter but must not panic
+    }
+
+    #[test]
+    fn ei_is_nonnegative_and_monotone_in_mean() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![0.0, 1.0];
+        let gp = GpPosterior::fit(x, &y, GpParams::default()).unwrap();
+        let ei_near_best = gp.expected_improvement(&[1.0], 1.0);
+        let ei_near_worst = gp.expected_improvement(&[0.0], 1.0);
+        assert!(ei_near_best >= 0.0 && ei_near_worst >= 0.0);
+        let ei_mid = gp.expected_improvement(&[0.6], 1.0);
+        assert!(ei_mid > ei_near_worst);
+    }
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prop_posterior_variance_nonnegative_and_ucb_ordered() {
+        check("gp posterior sanity", 30, |g| {
+            let n = g.usize_range(2, 12);
+            let d = g.usize_range(1, 4);
+            let x: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| g.f64_range(0.0, 1.0)).collect())
+                .collect();
+            let y: Vec<f64> = (0..n).map(|_| g.f64_range(-3.0, 3.0)).collect();
+            let gp = GpPosterior::fit(x, &y, GpParams::default().with_noise_hint(true)).unwrap();
+            let q: Vec<f64> = (0..d).map(|_| g.f64_range(0.0, 1.0)).collect();
+            let (mu, var) = gp.predict(&q);
+            assert!(var >= 0.0);
+            assert!(mu.is_finite());
+            assert!(gp.ucb(&q, 2.0) >= gp.ucb(&q, 0.0) - 1e-12);
+        });
+    }
+}

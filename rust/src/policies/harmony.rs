@@ -1,0 +1,177 @@
+//! Harmony Search (Lee & Geem, 2005) — one of the §6.3 meta-heuristics:
+//! keeps a bounded "harmony memory" of good solutions; each new suggestion
+//! draws every parameter either from memory (with pitch adjustment) or
+//! uniformly at random.
+
+use super::hill_climb::mutate_value;
+use super::population::{
+    designer_rng, member_from_trial, population_from_json, population_to_json, Member,
+};
+use crate::pythia::designer::{Designer, SerializableDesigner};
+use crate::pythia::policy::PolicyError;
+use crate::pyvizier::{Metadata, StudyConfig, Trial, TrialSuggestion};
+
+/// Harmony memory size.
+pub const MEMORY: usize = 20;
+/// Harmony-memory considering rate.
+pub const HMCR: f64 = 0.9;
+/// Pitch-adjusting rate.
+pub const PAR: f64 = 0.3;
+/// Pitch-adjust bandwidth in unit space.
+const BANDWIDTH: f64 = 0.05;
+
+pub struct HarmonySearch {
+    config: StudyConfig,
+    /// Memory kept sorted best-first; worst evicted.
+    memory: Vec<Member>,
+    absorbed: u64,
+}
+
+impl HarmonySearch {
+    fn insert(&mut self, m: Member) {
+        self.memory.push(m);
+        self.memory
+            .sort_by(|a, b| b.fitness().partial_cmp(&a.fitness()).unwrap());
+        self.memory.truncate(MEMORY);
+    }
+}
+
+impl Designer for HarmonySearch {
+    fn update(&mut self, completed: &[Trial]) {
+        for t in completed {
+            self.absorbed += 1;
+            if let Some(m) = member_from_trial(t, &self.config.metrics) {
+                self.insert(m);
+            }
+        }
+    }
+
+    fn suggest(&mut self, count: usize) -> Result<Vec<TrialSuggestion>, PolicyError> {
+        let mut rng = designer_rng(&self.config, self.absorbed ^ 0xA4);
+        let space = self.config.search_space.clone();
+        Ok((0..count)
+            .map(|_| {
+                if self.memory.is_empty() {
+                    return TrialSuggestion::new(space.sample(&mut rng));
+                }
+                let params = space.assemble(|cfg| {
+                    if rng.bool_with(HMCR) {
+                        // Draw this parameter from a random memory member.
+                        let donor = &self.memory[rng.next_below(self.memory.len() as u64) as usize];
+                        match donor.params.get(&cfg.name) {
+                            Some(v) if rng.bool_with(PAR) => {
+                                mutate_value(cfg, v, &mut rng, BANDWIDTH)
+                            }
+                            Some(v) => cfg.clamp_value(v),
+                            None => cfg.sample_value(&mut rng),
+                        }
+                    } else {
+                        cfg.sample_value(&mut rng)
+                    }
+                });
+                TrialSuggestion::new(params)
+            })
+            .collect())
+    }
+}
+
+impl SerializableDesigner for HarmonySearch {
+    fn designer_name() -> &'static str {
+        "harmony_search"
+    }
+
+    fn from_config(config: &StudyConfig) -> Result<Self, PolicyError> {
+        if config.metrics.len() != 1 {
+            return Err(PolicyError::Unsupported("harmony search is single-objective".into()));
+        }
+        Ok(Self {
+            config: config.clone(),
+            memory: Vec::new(),
+            absorbed: 0,
+        })
+    }
+
+    fn dump(&self) -> Metadata {
+        let mut md = Metadata::new();
+        md.put_str("", "memory", &population_to_json(&self.memory));
+        md.put_str("", "absorbed", &self.absorbed.to_string());
+        md
+    }
+
+    fn recover(config: &StudyConfig, md: &Metadata) -> Result<Self, PolicyError> {
+        let missing = || PolicyError::CorruptState("missing harmony memory".into());
+        Ok(Self {
+            config: config.clone(),
+            memory: population_from_json(md.get_str("", "memory").ok_or_else(missing)?)?,
+            absorbed: md
+                .get_str("", "absorbed")
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(missing)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::test_support::*;
+    use crate::pyvizier::{Measurement, ParameterDict, TrialState};
+
+    fn trial(id: u64, lr: f64, score: f64) -> Trial {
+        let mut p = ParameterDict::new();
+        p.set("lr", lr).set("layers", 2i64).set("opt", "sgd");
+        let mut t = Trial::new(id, p);
+        t.state = TrialState::Completed;
+        t.final_measurement = Some(Measurement::new(1).with_metric("score", score));
+        t
+    }
+
+    #[test]
+    fn memory_keeps_best_bounded() {
+        let (_, _, config) = test_study("HARMONY_SEARCH");
+        let mut d = HarmonySearch::from_config(&config).unwrap();
+        d.update(&(1..=50).map(|i| trial(i, 1e-3, i as f64)).collect::<Vec<_>>());
+        assert_eq!(d.memory.len(), MEMORY);
+        // Best-first: scores 50, 49, ...
+        assert_eq!(d.memory[0].fitness(), 50.0);
+        assert_eq!(d.memory.last().unwrap().fitness(), 31.0);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let (_, _, config) = test_study("HARMONY_SEARCH");
+        let mut d = HarmonySearch::from_config(&config).unwrap();
+        d.update(&(1..=8).map(|i| trial(i, 1e-3, i as f64)).collect::<Vec<_>>());
+        let d2 = HarmonySearch::recover(&config, &d.dump()).unwrap();
+        assert_eq!(d2.memory, d.memory);
+    }
+
+    #[test]
+    fn suggestions_feasible_and_memory_guided() {
+        let (_, _, config) = test_study("HARMONY_SEARCH");
+        let mut d = HarmonySearch::from_config(&config).unwrap();
+        // Memory concentrated at lr=1e-2.
+        d.update(&(1..=10).map(|i| trial(i, 1e-2, 10.0)).collect::<Vec<_>>());
+        let suggestions = d.suggest(40).unwrap();
+        let mut near = 0;
+        for s in &suggestions {
+            config.search_space.validate(&s.parameters).unwrap();
+            if (s.parameters.get_f64("lr").unwrap().log10() + 2.0).abs() < 0.5 {
+                near += 1;
+            }
+        }
+        // ~HMCR of draws come from memory.
+        assert!(near >= 25, "{near}/40 near memory values");
+    }
+
+    #[test]
+    fn runs_through_designer_policy() {
+        let (ds, study, config) = test_study("HARMONY_SEARCH");
+        add_completed_random(&ds, &study, &config, 6);
+        let s1 = run_suggest(&ds, &study, &config, 3);
+        assert_eq!(s1.len(), 3);
+        // Second op restores state (absorbed persists via metadata).
+        let s2 = run_suggest(&ds, &study, &config, 3);
+        assert_eq!(s2.len(), 3);
+    }
+}

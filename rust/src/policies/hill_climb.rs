@@ -1,0 +1,166 @@
+//! Hill climbing / stochastic local search: mutate the best trial seen so
+//! far by a small step in scaled space (one of the §6.3 "local search
+//! methods" whose per-operation cost is O(1) in the trial count — it reads
+//! only the best trial, not the whole history).
+
+use crate::datastore::query::TrialFilter;
+use crate::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use crate::pythia::supporter::PolicySupporter;
+use crate::pyvizier::search_space::{ParameterConfig, ParameterKind};
+use crate::pyvizier::{scaling, ParameterDict, ParameterValue, TrialSuggestion};
+use crate::util::rng::Pcg32;
+
+/// Std-dev of the Gaussian mutation step, in unit space.
+pub const STEP: f64 = 0.08;
+
+/// Mutate one assignment: every numeric parameter takes a small Gaussian
+/// step in its scaled space; categorical parameters re-roll with prob 0.2.
+pub fn mutate(
+    space: &crate::pyvizier::SearchSpace,
+    base: &ParameterDict,
+    rng: &mut Pcg32,
+    step: f64,
+) -> ParameterDict {
+    space.assemble(|cfg| match base.get(&cfg.name) {
+        Some(v) => mutate_value(cfg, v, rng, step),
+        None => cfg.sample_value(rng), // param inactive in base: sample
+    })
+}
+
+/// Mutate a single parameter value within its config.
+pub fn mutate_value(
+    cfg: &ParameterConfig,
+    v: &ParameterValue,
+    rng: &mut Pcg32,
+    step: f64,
+) -> ParameterValue {
+    match &cfg.kind {
+        ParameterKind::Double { min, max } => {
+            let x = v.as_f64().unwrap_or((min + max) / 2.0);
+            let u = scaling::to_unit(cfg.scale, *min, *max, x) + rng.normal() * step;
+            ParameterValue::F64(scaling::from_unit(cfg.scale, *min, *max, u.clamp(0.0, 1.0)))
+        }
+        ParameterKind::Integer { min, max } => {
+            let x = v.as_i64().unwrap_or(*min);
+            let span = (max - min).max(1) as f64;
+            let delta = (rng.normal() * step * span).round() as i64;
+            // Ensure movement is possible even for tiny spans.
+            let delta = if delta == 0 && rng.bool_with(0.5) {
+                if rng.bool_with(0.5) {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                delta
+            };
+            ParameterValue::I64((x + delta).clamp(*min, *max))
+        }
+        ParameterKind::Discrete { values } => {
+            let x = v.as_f64().unwrap_or(values[0]);
+            let idx = values.iter().position(|&d| d == x).unwrap_or(0) as i64;
+            let delta = if rng.bool_with(0.5) { 1 } else { -1 };
+            let nidx = (idx + delta).clamp(0, values.len() as i64 - 1) as usize;
+            ParameterValue::F64(values[nidx])
+        }
+        ParameterKind::Categorical { values } => {
+            if rng.bool_with(0.2) {
+                ParameterValue::Str(rng.choose(values).clone())
+            } else {
+                v.clone()
+            }
+        }
+    }
+}
+
+/// The hill-climbing policy.
+pub struct HillClimbPolicy;
+
+impl Policy for HillClimbPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        supporter: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        let config = &req.study_config;
+        let count = supporter.trial_count(&req.study_name)? as u64;
+        let mut rng = super::op_rng(config, &req.study_name, count);
+
+        // Read only recent completed trials, newest-first capped — the
+        // incumbent is overwhelmingly likely to be recent in hill climbing.
+        let completed =
+            supporter.trials(&req.study_name, &TrialFilter::completed().with_limit(64))?;
+        let best = config.best_trial(completed.iter());
+
+        let suggestions = (0..req.count)
+            .map(|_| match best {
+                Some(t) => TrialSuggestion::new(mutate(
+                    &config.search_space,
+                    &t.parameters,
+                    &mut rng,
+                    STEP,
+                )),
+                None => TrialSuggestion::new(config.search_space.sample(&mut rng)),
+            })
+            .collect();
+        Ok(SuggestDecision {
+            suggestions,
+            study_metadata: None,
+        })
+    }
+
+    fn name(&self) -> &str {
+        "hill-climb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::test_support::*;
+
+    #[test]
+    fn seeds_randomly_then_exploits_best() {
+        let (ds, study, config) = test_study("HILL_CLIMB");
+        // No trials yet: random seeding, feasible.
+        let s = run_suggest(&ds, &study, &config, 4);
+        for sg in &s {
+            config.search_space.validate(&sg.parameters).unwrap();
+        }
+
+        // Plant a known-best trial at lr=0.01 (optimum of the test score).
+        let mut best = crate::pyvizier::ParameterDict::new();
+        best.set("lr", 0.01).set("layers", 3i64).set("opt", "adam");
+        add_completed_with(&ds, &study, &config, best.clone());
+        add_completed_random(&ds, &study, &config, 5);
+
+        let s = run_suggest(&ds, &study, &config, 16);
+        // Mutations should cluster near the incumbent in log-space.
+        let near = s
+            .iter()
+            .filter(|sg| {
+                let lr = sg.parameters.get_f64("lr").unwrap();
+                (lr.log10() - (-2.0)).abs() < 0.8
+            })
+            .count();
+        assert!(near >= 12, "{near}/16 suggestions near incumbent");
+        for sg in &s {
+            config.search_space.validate(&sg.parameters).unwrap();
+        }
+    }
+
+    #[test]
+    fn mutate_respects_bounds() {
+        let mut space = crate::pyvizier::SearchSpace::new();
+        space.add_float("x", 0.0, 1.0, crate::wire::messages::ScaleType::Linear);
+        space.add_int("i", 0, 3);
+        space.add_discrete("d", vec![1.0, 2.0, 4.0]);
+        space.add_categorical("c", vec!["a", "b"]);
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        let base = space.sample(&mut rng);
+        for _ in 0..500 {
+            let m = mutate(&space, &base, &mut rng, 0.5);
+            space.validate(&m).unwrap();
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Built-in optimization policies.
+//!
+//! The paper intentionally ships no proprietary default algorithm (§8);
+//! its algorithm surface is defined by Code Block 2 (GP-bandit) and §6.3's
+//! evolutionary/local-search families (NSGA-II, Firefly, Harmony Search).
+//! This module implements that surface:
+//!
+//! | Algorithm                | Module          | Kind                      |
+//! |--------------------------|-----------------|---------------------------|
+//! | `RANDOM_SEARCH`          | [`random`]      | stateless                 |
+//! | `GRID_SEARCH`            | [`grid`]        | stateless (index-driven)  |
+//! | `QUASI_RANDOM_SEARCH`    | [`quasirandom`] | stateless (Halton)        |
+//! | `HILL_CLIMB`             | [`hill_climb`]  | local search              |
+//! | `REGULARIZED_EVOLUTION`  | [`reg_evolution`]| SerializableDesigner     |
+//! | `NSGA2`                  | [`nsga2`]       | SerializableDesigner, MO  |
+//! | `HARMONY_SEARCH`         | [`harmony`]     | SerializableDesigner      |
+//! | `FIREFLY`                | [`firefly`]     | SerializableDesigner      |
+//! | `GP_BANDIT`              | [`gp_bandit`]   | Bayesian opt (Code Blk 2) |
+
+pub mod population;
+pub mod firefly;
+pub mod gp_bandit;
+pub mod gp_math;
+pub mod grid;
+pub mod harmony;
+pub mod hill_climb;
+pub mod nsga2;
+pub mod quasirandom;
+pub mod random;
+pub mod reg_evolution;
+
+use crate::pythia::designer::DesignerPolicy;
+use crate::pythia::runner::PolicyRegistry;
+use std::sync::Arc;
+
+/// Register every built-in policy under its canonical algorithm name.
+pub fn register_builtins(registry: &mut PolicyRegistry) {
+    registry.register("RANDOM_SEARCH", Arc::new(|_| Box::new(random::RandomSearchPolicy)));
+    registry.register("GRID_SEARCH", Arc::new(|_| Box::new(grid::GridSearchPolicy)));
+    registry.register(
+        "QUASI_RANDOM_SEARCH",
+        Arc::new(|_| Box::new(quasirandom::QuasiRandomPolicy)),
+    );
+    registry.register("HILL_CLIMB", Arc::new(|_| Box::new(hill_climb::HillClimbPolicy)));
+    registry.register(
+        "REGULARIZED_EVOLUTION",
+        Arc::new(|_| Box::new(DesignerPolicy::<reg_evolution::RegularizedEvolution>::new())),
+    );
+    registry.register(
+        "NSGA2",
+        Arc::new(|_| Box::new(DesignerPolicy::<nsga2::Nsga2Designer>::new())),
+    );
+    registry.register(
+        "HARMONY_SEARCH",
+        Arc::new(|_| Box::new(DesignerPolicy::<harmony::HarmonySearch>::new())),
+    );
+    registry.register(
+        "FIREFLY",
+        Arc::new(|_| Box::new(DesignerPolicy::<firefly::FireflyDesigner>::new())),
+    );
+    // GP_BANDIT prefers the AOT-compiled JAX/Pallas artifact (PJRT) and
+    // falls back to the pure-Rust GP when `make artifacts` has not run.
+    registry.register(
+        "GP_BANDIT",
+        Arc::new(|_| match crate::runtime::GpArtifactBackend::from_global() {
+            Some(b) => Box::new(gp_bandit::GpBanditPolicy::with_backend(Arc::new(b))),
+            None => Box::new(gp_bandit::GpBanditPolicy::default()),
+        }),
+    );
+    // Explicit pure-Rust backend (parity tests and ablation benches).
+    registry.register(
+        "GP_BANDIT_RUST",
+        Arc::new(|_| Box::new(gp_bandit::GpBanditPolicy::default())),
+    );
+}
+
+/// Derive a deterministic per-operation RNG for a policy: stable in
+/// (study seed, study name, #existing trials), so replaying an operation
+/// after a crash yields the same suggestions, while successive operations
+/// explore fresh randomness.
+pub(crate) fn op_rng(
+    config: &crate::pyvizier::StudyConfig,
+    study_name: &str,
+    salt: u64,
+) -> crate::util::rng::Pcg32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in study_name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    let seed = if config.seed != 0 { config.seed } else { h };
+    crate::util::rng::Pcg32::new(seed ^ h, salt.wrapping_add(1))
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    //! Shared fixtures for policy tests.
+    use crate::datastore::memory::InMemoryDatastore;
+    use crate::datastore::Datastore;
+    use crate::pythia::runner::{default_registry, LocalPythia, PythiaEndpoint};
+    use crate::pythia::policy::SuggestRequest;
+    use crate::pythia::supporter::{DatastoreSupporter, PolicySupporter};
+    use crate::pyvizier::{
+        converters, Algorithm, Measurement, MetricInformation, StudyConfig, TrialSuggestion,
+    };
+    use crate::wire::messages::{ScaleType, StudyProto, TrialState};
+    use std::sync::Arc;
+
+    /// A standard single-objective study: log-float + int + categorical.
+    pub fn test_study(algorithm: &str) -> (Arc<InMemoryDatastore>, String, StudyConfig) {
+        let mut config = StudyConfig::new("test-study");
+        config
+            .search_space
+            .add_float("lr", 1e-4, 1e-1, ScaleType::Log)
+            .add_int("layers", 1, 5)
+            .add_categorical("opt", vec!["sgd", "adam", "rmsprop"]);
+        config.add_metric(MetricInformation::maximize("score"));
+        config.algorithm = Algorithm::from_str(algorithm);
+        config.seed = 42;
+        let ds = Arc::new(InMemoryDatastore::new());
+        let study = ds
+            .create_study(StudyProto {
+                display_name: "test-study".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            })
+            .unwrap();
+        (ds, study.name, config)
+    }
+
+    /// Run one suggest operation via the full Pythia path, persisting any
+    /// returned designer metadata (as the service does).
+    pub fn run_suggest(
+        ds: &Arc<InMemoryDatastore>,
+        study: &str,
+        config: &StudyConfig,
+        count: usize,
+    ) -> Vec<TrialSuggestion> {
+        let supporter = Arc::new(DatastoreSupporter::new(
+            Arc::clone(ds) as Arc<dyn Datastore>
+        ));
+        let pythia = LocalPythia::new(default_registry(), supporter.clone());
+        // Refresh config from store so designer metadata round-trips.
+        let fresh_config = supporter.study_config(study).unwrap();
+        let decision = pythia
+            .run_suggest(&SuggestRequest {
+                study_name: study.to_string(),
+                study_config: StudyConfig {
+                    algorithm: config.algorithm.clone(),
+                    ..fresh_config
+                },
+                count,
+                client_id: "test-client".into(),
+            })
+            .unwrap();
+        if let Some(md) = &decision.study_metadata {
+            supporter.update_study_metadata(study, md).unwrap();
+        }
+        decision.suggestions
+    }
+
+    /// Complete `n` random trials with a synthetic objective: score =
+    /// -(log10(lr) + 2)^2 - 0.1*(layers - 3)^2 (+ bonus for adam), so
+    /// policies have a real signal to exploit.
+    pub fn add_completed_random(
+        ds: &Arc<InMemoryDatastore>,
+        study: &str,
+        config: &StudyConfig,
+        n: usize,
+    ) {
+        let mut rng = crate::util::rng::Pcg32::seeded(7 + n as u64);
+        for _ in 0..n {
+            let params = config.search_space.sample(&mut rng);
+            add_completed_with(ds, study, config, params);
+        }
+    }
+
+    pub fn score_of(params: &crate::pyvizier::ParameterDict) -> f64 {
+        let lr = params.get_f64("lr").unwrap_or(1e-2);
+        let layers = params.get_i64("layers").unwrap_or(3) as f64;
+        let bonus = if params.get_str("opt") == Some("adam") { 0.2 } else { 0.0 };
+        -(lr.log10() + 2.0).powi(2) - 0.1 * (layers - 3.0).powi(2) + bonus
+    }
+
+    pub fn add_completed_with(
+        ds: &Arc<InMemoryDatastore>,
+        study: &str,
+        config: &StudyConfig,
+        params: crate::pyvizier::ParameterDict,
+    ) -> u64 {
+        let _ = config;
+        let score = score_of(&params);
+        let mut trial = crate::pyvizier::Trial::new(0, params);
+        trial.state = TrialState::Completed;
+        trial.final_measurement = Some(Measurement::new(1).with_metric("score", score));
+        let proto = converters::trial_to_proto(&trial);
+        let created = ds.create_trial(study, proto).unwrap();
+        created.id
+    }
+}
+
+/// A smooth synthetic objective over the (lr, layers, opt) test space —
+/// shared by tests and benches: peak 0.2 at lr=1e-2, layers=3, opt=adam.
+pub fn test_objective_score(params: &crate::pyvizier::ParameterDict) -> f64 {
+    let lr = params.get_f64("lr").unwrap_or(1e-2);
+    let layers = params.get_i64("layers").unwrap_or(3) as f64;
+    let bonus = if params.get_str("opt") == Some("adam") { 0.2 } else { 0.0 };
+    -(lr.log10() + 2.0).powi(2) - 0.1 * (layers - 3.0).powi(2) + bonus
+}

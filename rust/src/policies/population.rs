@@ -1,0 +1,142 @@
+//! Shared population machinery for the evolutionary designers
+//! (regularized evolution, NSGA-II, harmony search, firefly): members,
+//! JSON (de)serialization for metadata state dumps, and trial ingestion.
+
+use crate::pythia::policy::PolicyError;
+use crate::pyvizier::converters::{params_from_json, params_to_json};
+use crate::pyvizier::{MetricInformation, ParameterDict, StudyConfig, Trial};
+use crate::util::json::{parse, Json};
+
+/// One population member: an evaluated point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Member {
+    /// Trial id the member came from (0 = synthetic/seeded).
+    pub id: u64,
+    pub params: ParameterDict,
+    /// Objective vector in maximization orientation.
+    pub values: Vec<f64>,
+}
+
+impl Member {
+    pub fn fitness(&self) -> f64 {
+        self.values[0]
+    }
+}
+
+/// Extract a member from a completed trial (None if metrics missing or the
+/// trial is infeasible — infeasible lifts are excluded from populations).
+pub fn member_from_trial(t: &Trial, metrics: &[MetricInformation]) -> Option<Member> {
+    if !t.is_feasible_completed() {
+        return None;
+    }
+    let values = crate::pyvizier::pareto::objective_vector(t, metrics)?;
+    Some(Member {
+        id: t.id,
+        params: t.parameters.clone(),
+        values,
+    })
+}
+
+/// Serialize a population to a JSON string for a metadata dump.
+pub fn population_to_json(members: &[Member]) -> String {
+    Json::Arr(
+        members
+            .iter()
+            .map(|m| {
+                let mut o = Json::obj();
+                o.set("id", Json::Num(m.id as f64));
+                o.set("params", params_to_json(&m.params));
+                o.set("values", Json::Arr(m.values.iter().map(|&v| Json::Num(v)).collect()));
+                o
+            })
+            .collect(),
+    )
+    .to_string()
+}
+
+/// Restore a population; any malformed entry makes the whole decode fail
+/// (the designer wrapper then rebuilds from trials — "harmless" error).
+pub fn population_from_json(s: &str) -> Result<Vec<Member>, PolicyError> {
+    let corrupt = |m: &str| PolicyError::CorruptState(m.to_string());
+    let doc = parse(s).map_err(|e| corrupt(&e.to_string()))?;
+    let arr = doc.as_arr().ok_or_else(|| corrupt("expected array"))?;
+    arr.iter()
+        .map(|item| {
+            let id = item
+                .get("id")
+                .and_then(|j| j.as_i64())
+                .ok_or_else(|| corrupt("missing id"))? as u64;
+            let params = item
+                .get("params")
+                .and_then(params_from_json)
+                .ok_or_else(|| corrupt("bad params"))?;
+            let values = item
+                .get("values")
+                .and_then(|j| j.as_arr())
+                .ok_or_else(|| corrupt("missing values"))?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| corrupt("bad value")))
+                .collect::<Result<Vec<f64>, _>>()?;
+            if values.is_empty() {
+                return Err(corrupt("empty objective vector"));
+            }
+            Ok(Member { id, params, values })
+        })
+        .collect()
+}
+
+/// Derive a designer RNG whose stream advances with the population so
+/// successive operations explore fresh randomness but crash-replays of the
+/// same state are deterministic.
+pub fn designer_rng(config: &StudyConfig, absorbed: u64) -> crate::util::rng::Pcg32 {
+    let seed = if config.seed != 0 { config.seed } else { 0x5eed };
+    crate::util::rng::Pcg32::new(seed, absorbed.wrapping_add(17))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyvizier::{Measurement, TrialState};
+    use crate::testing::prop::check;
+
+    #[test]
+    fn prop_population_json_roundtrip() {
+        check("population json roundtrip", 100, |g| {
+            let members: Vec<Member> = (0..g.usize_range(0, 8))
+                .map(|i| {
+                    let mut p = ParameterDict::new();
+                    p.set("x", g.f64_range(-10.0, 10.0));
+                    p.set("c", g.ident(4));
+                    Member {
+                        id: i as u64,
+                        params: p,
+                        values: (0..g.usize_range(1, 3)).map(|_| g.f64_range(-5.0, 5.0)).collect(),
+                    }
+                })
+                .collect();
+            let s = population_to_json(&members);
+            let back = population_from_json(&s).unwrap();
+            assert_eq!(back, members);
+        });
+    }
+
+    #[test]
+    fn corrupt_json_is_explicit_error() {
+        assert!(population_from_json("not json").is_err());
+        assert!(population_from_json("{\"not\": \"array\"}").is_err());
+        assert!(population_from_json("[{\"id\": 1}]").is_err());
+    }
+
+    #[test]
+    fn member_extraction_rules() {
+        let metrics = vec![MetricInformation::minimize("loss")];
+        let mut t = Trial::new(3, ParameterDict::new());
+        assert!(member_from_trial(&t, &metrics).is_none(), "active trial skipped");
+        t.state = TrialState::Completed;
+        t.final_measurement = Some(Measurement::new(1).with_metric("loss", 2.0));
+        let m = member_from_trial(&t, &metrics).unwrap();
+        assert_eq!(m.values, vec![-2.0], "minimize negated");
+        t.infeasibility_reason = Some("bad".into());
+        assert!(member_from_trial(&t, &metrics).is_none(), "infeasible skipped");
+    }
+}

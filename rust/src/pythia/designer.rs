@@ -1,0 +1,329 @@
+//! Designers and metadata-backed state management (paper §6.3, Code
+//! Block 7).
+//!
+//! A [`Designer`] is the natural shape of evolutionary/local-search
+//! algorithms: it sequentially `update`s internal state with newly
+//! completed trials and `suggest`s mutations. Because a Pythia policy
+//! object lives for exactly one operation, a naive wrapper would rebuild
+//! designer state from *all* trials on every operation — O(n) per
+//! suggestion. [`DesignerPolicy`] instead persists the designer's state
+//! into study metadata ([`SerializableDesigner::dump`]) and restores it
+//! with [`SerializableDesigner::recover`], reading only trials newer than
+//! the last one seen — O(new trials) per operation, the paper's
+//! "orders of magnitude" database-work reduction.
+//!
+//! [`StatelessDesignerPolicy`] is the deliberately-naive wrapper, kept as
+//! the baseline for the §6.3 benchmark (`benches/bench_state_recovery.rs`).
+
+use super::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use super::supporter::PolicySupporter;
+use crate::datastore::query::TrialFilter;
+use crate::pyvizier::{Metadata, StudyConfig, Trial, TrialSuggestion};
+
+/// An algorithm that incrementally updates internal state.
+pub trait Designer: Send {
+    /// Incorporate newly completed trials.
+    fn update(&mut self, completed: &[Trial]);
+
+    /// Produce `count` new suggestions.
+    fn suggest(&mut self, count: usize) -> Result<Vec<TrialSuggestion>, PolicyError>;
+}
+
+/// A designer whose state can be dumped to / recovered from metadata.
+pub trait SerializableDesigner: Designer {
+    /// Stable name; used as the metadata namespace.
+    fn designer_name() -> &'static str
+    where
+        Self: Sized;
+
+    /// Construct a fresh designer for a study.
+    fn from_config(config: &StudyConfig) -> Result<Self, PolicyError>
+    where
+        Self: Sized;
+
+    /// Serialize internal state (e.g. the population pool) to metadata.
+    fn dump(&self) -> Metadata;
+
+    /// Restore from metadata. Returning an error is *harmless*: the
+    /// wrapper falls back to a fresh designer + full replay.
+    fn recover(config: &StudyConfig, md: &Metadata) -> Result<Self, PolicyError>
+    where
+        Self: Sized;
+}
+
+const LAST_SEEN_KEY: &str = "last_seen_trial_id";
+
+fn namespace<D: SerializableDesigner>() -> String {
+    format!("designer.{}", D::designer_name())
+}
+
+/// Policy wrapper with metadata state saving (the paper's
+/// `SerializableDesignerPolicy`).
+pub struct DesignerPolicy<D: SerializableDesigner> {
+    _marker: std::marker::PhantomData<fn() -> D>,
+}
+
+impl<D: SerializableDesigner> Default for DesignerPolicy<D> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<D: SerializableDesigner> DesignerPolicy<D> {
+    pub fn new() -> Self {
+        Self {
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<D: SerializableDesigner + 'static> Policy for DesignerPolicy<D> {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        supporter: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        let ns = namespace::<D>();
+        // Re-read the config so we see the latest stored metadata. The
+        // wrapper always writes LAST_SEEN_KEY, so its presence marks a
+        // stored state regardless of which keys the designer dumps.
+        let config = supporter.study_config(&req.study_name)?;
+        let stored = config.metadata.get_str(&ns, LAST_SEEN_KEY);
+        let last_seen: u64 = stored.and_then(|s| s.parse().ok()).unwrap_or(0);
+
+        // Try to restore; a recovery error is harmless and triggers a full
+        // rebuild (paper: HarmlessDecodeError).
+        let (mut designer, mut seen) = match stored {
+            Some(_) => {
+                let mut md = Metadata::new();
+                // Copy the designer's namespace into a bare view for recover().
+                for (k, v) in config.metadata.ns(&ns) {
+                    md.put("", k, v.to_vec());
+                }
+                match D::recover(&config, &md) {
+                    Ok(d) => (d, last_seen),
+                    Err(_) => (D::from_config(&config)?, 0),
+                }
+            }
+            None => (D::from_config(&config)?, 0),
+        };
+
+        // Reflect only trials the stored state has not seen (O(new)).
+        let fresh = supporter.trials(&req.study_name, &TrialFilter::completed().newer_than(seen))?;
+        if !fresh.is_empty() {
+            seen = fresh.iter().map(|t| t.id).max().unwrap().max(seen);
+            designer.update(&fresh);
+        }
+
+        let suggestions = designer.suggest(req.count)?;
+
+        // Persist state under the designer's namespace.
+        let mut out = Metadata::new();
+        for (_, k, v) in designer.dump().iter() {
+            out.put(&ns, k, v.to_vec());
+        }
+        out.put_str(&ns, LAST_SEEN_KEY, &seen.to_string());
+        Ok(SuggestDecision {
+            suggestions,
+            study_metadata: Some(out),
+        })
+    }
+
+    fn name(&self) -> &str {
+        "designer-policy"
+    }
+}
+
+/// The naive wrapper: rebuilds the designer from scratch on every
+/// operation (no metadata). Baseline for the §6.3 benchmark.
+pub struct StatelessDesignerPolicy<D: SerializableDesigner> {
+    _marker: std::marker::PhantomData<fn() -> D>,
+}
+
+impl<D: SerializableDesigner> Default for StatelessDesignerPolicy<D> {
+    fn default() -> Self {
+        Self {
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<D: SerializableDesigner + 'static> Policy for StatelessDesignerPolicy<D> {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        supporter: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        let config = supporter.study_config(&req.study_name)?;
+        let mut designer = D::from_config(&config)?;
+        // Full O(n) replay of every completed trial.
+        let all = supporter.trials(&req.study_name, &TrialFilter::completed())?;
+        designer.update(&all);
+        let suggestions = designer.suggest(req.count)?;
+        Ok(SuggestDecision {
+            suggestions,
+            study_metadata: None,
+        })
+    }
+
+    fn name(&self) -> &str {
+        "stateless-designer-policy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::memory::InMemoryDatastore;
+    use crate::datastore::Datastore;
+    use crate::pythia::supporter::DatastoreSupporter;
+    use crate::pyvizier::{converters, MetricInformation, ParameterDict};
+    use crate::wire::messages::{StudyProto, TrialProto, TrialState};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    static REBUILDS: AtomicUsize = AtomicUsize::new(0);
+
+    /// A designer that counts how many trials it has absorbed; its state is
+    /// that single number, so recovery is trivially checkable.
+    struct CountingDesigner {
+        absorbed: usize,
+    }
+
+    impl Designer for CountingDesigner {
+        fn update(&mut self, completed: &[Trial]) {
+            self.absorbed += completed.len();
+        }
+        fn suggest(&mut self, count: usize) -> Result<Vec<TrialSuggestion>, PolicyError> {
+            Ok((0..count)
+                .map(|_| {
+                    let mut p = ParameterDict::new();
+                    p.set("absorbed", self.absorbed as i64);
+                    TrialSuggestion::new(p)
+                })
+                .collect())
+        }
+    }
+
+    impl SerializableDesigner for CountingDesigner {
+        fn designer_name() -> &'static str {
+            "counting"
+        }
+        fn from_config(_config: &StudyConfig) -> Result<Self, PolicyError> {
+            REBUILDS.fetch_add(1, Ordering::SeqCst);
+            Ok(Self { absorbed: 0 })
+        }
+        fn dump(&self) -> Metadata {
+            let mut md = Metadata::new();
+            md.put_str("", "state", &self.absorbed.to_string());
+            md
+        }
+        fn recover(_config: &StudyConfig, md: &Metadata) -> Result<Self, PolicyError> {
+            let absorbed = md
+                .get_str("", "state")
+                .ok_or_else(|| PolicyError::CorruptState("missing".into()))?
+                .parse()
+                .map_err(|_| PolicyError::CorruptState("not a number".into()))?;
+            Ok(Self { absorbed })
+        }
+    }
+
+    fn setup() -> (Arc<InMemoryDatastore>, String, StudyConfig) {
+        let ds = Arc::new(InMemoryDatastore::new());
+        let mut config = StudyConfig::new("exp");
+        config.add_metric(MetricInformation::maximize("m"));
+        let study = ds
+            .create_study(StudyProto {
+                display_name: "exp".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            })
+            .unwrap();
+        (ds, study.name, config)
+    }
+
+    fn add_completed(ds: &InMemoryDatastore, study: &str, n: usize) {
+        for _ in 0..n {
+            let t = ds.create_trial(study, TrialProto::default()).unwrap();
+            ds.mutate_trial(study, t.id, &mut |t| {
+                t.state = TrialState::Completed;
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+
+    /// Run one suggest op and persist the returned metadata the way the
+    /// service does.
+    fn run_op(
+        policy: &mut dyn Policy,
+        sup: &DatastoreSupporter,
+        study: &str,
+        config: &StudyConfig,
+    ) -> SuggestDecision {
+        let req = SuggestRequest {
+            study_name: study.to_string(),
+            study_config: config.clone(),
+            count: 1,
+            client_id: "c".into(),
+        };
+        let decision = policy.suggest(&req, sup).unwrap();
+        if let Some(md) = &decision.study_metadata {
+            sup.update_study_metadata(study, md).unwrap();
+        }
+        decision
+    }
+
+    #[test]
+    fn designer_state_persists_across_operations() {
+        let (ds, study, config) = setup();
+        let sup = DatastoreSupporter::new(Arc::clone(&ds) as Arc<dyn Datastore>);
+        REBUILDS.store(0, Ordering::SeqCst);
+
+        add_completed(&ds, &study, 3);
+        let mut policy = DesignerPolicy::<CountingDesigner>::new();
+        let d1 = run_op(&mut policy, &sup, &study, &config);
+        assert_eq!(d1.suggestions[0].parameters.get_i64("absorbed"), Some(3));
+        assert_eq!(REBUILDS.load(Ordering::SeqCst), 1, "first op builds fresh");
+
+        // Second operation: 2 new trials; state restored, only new absorbed.
+        add_completed(&ds, &study, 2);
+        let mut policy = DesignerPolicy::<CountingDesigner>::new();
+        let d2 = run_op(&mut policy, &sup, &study, &config);
+        assert_eq!(d2.suggestions[0].parameters.get_i64("absorbed"), Some(5));
+        assert_eq!(REBUILDS.load(Ordering::SeqCst), 1, "no rebuild on second op");
+    }
+
+    #[test]
+    fn corrupt_state_triggers_harmless_rebuild() {
+        let (ds, study, config) = setup();
+        let sup = DatastoreSupporter::new(Arc::clone(&ds) as Arc<dyn Datastore>);
+        add_completed(&ds, &study, 4);
+        let mut policy = DesignerPolicy::<CountingDesigner>::new();
+        run_op(&mut policy, &sup, &study, &config);
+
+        // Corrupt the stored state.
+        let mut bad = Metadata::new();
+        bad.put_str("designer.counting", "state", "not-a-number");
+        sup.update_study_metadata(&study, &bad).unwrap();
+
+        REBUILDS.store(0, Ordering::SeqCst);
+        let mut policy = DesignerPolicy::<CountingDesigner>::new();
+        let d = run_op(&mut policy, &sup, &study, &config);
+        assert_eq!(REBUILDS.load(Ordering::SeqCst), 1, "rebuild after corrupt state");
+        // Rebuild replays all 4 trials.
+        assert_eq!(d.suggestions[0].parameters.get_i64("absorbed"), Some(4));
+    }
+
+    #[test]
+    fn stateless_policy_always_rebuilds() {
+        let (ds, study, config) = setup();
+        let sup = DatastoreSupporter::new(Arc::clone(&ds) as Arc<dyn Datastore>);
+        add_completed(&ds, &study, 3);
+        REBUILDS.store(0, Ordering::SeqCst);
+        let mut policy = StatelessDesignerPolicy::<CountingDesigner>::default();
+        run_op(&mut policy, &sup, &study, &config);
+        run_op(&mut policy, &sup, &study, &config);
+        assert_eq!(REBUILDS.load(Ordering::SeqCst), 2);
+    }
+}

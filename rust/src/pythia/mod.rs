@@ -1,0 +1,18 @@
+//! Pythia: the developer API for implementing optimization algorithms
+//! (paper §6). A [`policy::Policy`] executes one suggestion or
+//! early-stopping operation; a [`supporter::PolicySupporter`] is the
+//! mini-client it uses to read trials and persist state; and
+//! [`designer::SerializableDesigner`] + [`designer::DesignerPolicy`] give
+//! evolutionary-style algorithms O(1)-per-operation state management via
+//! study metadata (§6.3, Code Block 7).
+
+pub mod designer;
+pub mod policy;
+pub mod runner;
+pub mod supporter;
+
+pub use designer::{Designer, DesignerPolicy, SerializableDesigner};
+pub use policy::{
+    EarlyStopDecision, EarlyStopRequest, Policy, PolicyError, SuggestDecision, SuggestRequest,
+};
+pub use supporter::{DatastoreSupporter, PolicySupporter};

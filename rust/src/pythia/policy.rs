@@ -1,0 +1,84 @@
+//! The Policy interface (paper §6.1, Code Block 2).
+//!
+//! A `Policy` object's lifespan is one suggestion or early-stopping
+//! operation (§6.3) — the service constructs a policy, calls it once, and
+//! drops it. Long-lived algorithm state must go through metadata (see
+//! [`super::designer`]).
+
+use super::supporter::PolicySupporter;
+use crate::pyvizier::{Metadata, StudyConfig, TrialSuggestion};
+
+/// Errors a policy can raise; mapped to failed operations by the service.
+#[derive(Debug, thiserror::Error)]
+pub enum PolicyError {
+    #[error("policy got an unsupported study config: {0}")]
+    Unsupported(String),
+    #[error("datastore access failed: {0}")]
+    Datastore(String),
+    #[error("policy state corrupt: {0}")]
+    CorruptState(String),
+    #[error("internal policy failure: {0}")]
+    Internal(String),
+}
+
+/// Request for new suggestions.
+#[derive(Debug, Clone)]
+pub struct SuggestRequest {
+    pub study_name: String,
+    pub study_config: StudyConfig,
+    pub count: usize,
+    /// The requesting worker (paper §5: trials are assigned per client id).
+    pub client_id: String,
+}
+
+/// A policy's answer to a suggest request.
+#[derive(Debug, Clone, Default)]
+pub struct SuggestDecision {
+    pub suggestions: Vec<TrialSuggestion>,
+    /// Study-level metadata writes to persist atomically with the
+    /// suggestions (designer state, §6.3).
+    pub study_metadata: Option<Metadata>,
+}
+
+/// Request for an early-stopping decision on one trial.
+#[derive(Debug, Clone)]
+pub struct EarlyStopRequest {
+    pub study_name: String,
+    pub study_config: StudyConfig,
+    pub trial_id: u64,
+}
+
+/// A policy's early-stopping verdict (paper Appendix B.1).
+#[derive(Debug, Clone, Default)]
+pub struct EarlyStopDecision {
+    pub should_stop: bool,
+    pub reason: String,
+}
+
+/// A blackbox-optimization algorithm, as seen by the service.
+pub trait Policy: Send {
+    /// Produce `req.count` suggestions.
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        supporter: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError>;
+
+    /// Decide whether `req.trial_id` should stop early. Default: never.
+    fn early_stop(
+        &mut self,
+        _req: &EarlyStopRequest,
+        _supporter: &dyn PolicySupporter,
+    ) -> Result<EarlyStopDecision, PolicyError> {
+        Ok(EarlyStopDecision::default())
+    }
+
+    /// Human-readable policy name (for logs and metrics).
+    fn name(&self) -> &str {
+        "unnamed-policy"
+    }
+}
+
+/// A policy factory: constructs a fresh policy per operation (the service
+/// never reuses policy objects across operations, matching the paper).
+pub type PolicyFactory = Box<dyn Fn(&StudyConfig) -> Box<dyn Policy> + Send + Sync>;

@@ -1,0 +1,200 @@
+//! Policy registry and the Pythia execution endpoint (paper §6.1).
+//!
+//! The API service hands operations to a [`PythiaEndpoint`]. The default
+//! [`LocalPythia`] runs policies in-process ("which can be the same binary
+//! as the API service"); `service::remote_pythia` provides the
+//! separate-service deployment of Figure 2 on top of the same trait.
+
+use super::policy::{
+    EarlyStopDecision, EarlyStopRequest, Policy, PolicyError, SuggestDecision, SuggestRequest,
+};
+use super::supporter::PolicySupporter;
+use crate::pyvizier::{Algorithm, StudyConfig};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Creates a fresh policy object per operation.
+pub type Factory = Arc<dyn Fn(&StudyConfig) -> Box<dyn Policy> + Send + Sync>;
+
+/// Maps algorithm names to policy factories. Researchers register custom
+/// policies here (the "developer API" entry point).
+#[derive(Default, Clone)]
+pub struct PolicyRegistry {
+    factories: HashMap<String, Factory>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a factory under an algorithm name.
+    pub fn register(&mut self, name: &str, factory: Factory) {
+        self.factories.insert(name.to_string(), factory);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.factories.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Instantiate the policy for a study's configured algorithm.
+    pub fn create(&self, config: &StudyConfig) -> Result<Box<dyn Policy>, PolicyError> {
+        let name = config.algorithm.as_str();
+        let factory = self.factories.get(name).ok_or_else(|| {
+            PolicyError::Unsupported(format!(
+                "no policy registered for algorithm {name:?} (known: {:?})",
+                self.names()
+            ))
+        })?;
+        Ok(factory(config))
+    }
+}
+
+/// Where the service sends suggestion / early-stopping work.
+pub trait PythiaEndpoint: Send + Sync {
+    fn run_suggest(&self, req: &SuggestRequest) -> Result<SuggestDecision, PolicyError>;
+    fn run_early_stop(&self, req: &EarlyStopRequest) -> Result<EarlyStopDecision, PolicyError>;
+}
+
+/// In-process Pythia: create policy, run, drop (one policy object per
+/// operation, §6.3).
+pub struct LocalPythia {
+    registry: PolicyRegistry,
+    supporter: Arc<dyn PolicySupporter>,
+}
+
+impl LocalPythia {
+    pub fn new(registry: PolicyRegistry, supporter: Arc<dyn PolicySupporter>) -> Self {
+        Self {
+            registry,
+            supporter,
+        }
+    }
+
+    pub fn registry(&self) -> &PolicyRegistry {
+        &self.registry
+    }
+}
+
+impl PythiaEndpoint for LocalPythia {
+    fn run_suggest(&self, req: &SuggestRequest) -> Result<SuggestDecision, PolicyError> {
+        let mut policy = self.registry.create(&req.study_config)?;
+        policy.suggest(req, self.supporter.as_ref())
+    }
+
+    fn run_early_stop(&self, req: &EarlyStopRequest) -> Result<EarlyStopDecision, PolicyError> {
+        let mut policy = self.registry.create(&req.study_config)?;
+        policy.early_stop(req, self.supporter.as_ref())
+    }
+}
+
+/// Convenience: a registry pre-populated with every built-in policy.
+pub fn default_registry() -> PolicyRegistry {
+    let mut registry = PolicyRegistry::new();
+    crate::policies::register_builtins(&mut registry);
+    registry
+}
+
+/// Helper for registering custom algorithms by name.
+pub fn algorithm_name(a: &Algorithm) -> &str {
+    a.as_str()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyvizier::{Metadata, MetricInformation, TrialSuggestion};
+
+    struct FixedPolicy;
+    impl Policy for FixedPolicy {
+        fn suggest(
+            &mut self,
+            req: &SuggestRequest,
+            _s: &dyn PolicySupporter,
+        ) -> Result<SuggestDecision, PolicyError> {
+            Ok(SuggestDecision {
+                suggestions: vec![TrialSuggestion::default(); req.count],
+                study_metadata: None,
+            })
+        }
+    }
+
+    struct NullSupporter;
+    impl PolicySupporter for NullSupporter {
+        fn study_config(&self, _: &str) -> Result<StudyConfig, PolicyError> {
+            Ok(StudyConfig::default())
+        }
+        fn trials(
+            &self,
+            _: &str,
+            _: &crate::datastore::query::TrialFilter,
+        ) -> Result<Vec<crate::pyvizier::Trial>, PolicyError> {
+            Ok(vec![])
+        }
+        fn list_study_names(&self) -> Result<Vec<String>, PolicyError> {
+            Ok(vec![])
+        }
+        fn update_study_metadata(&self, _: &str, _: &Metadata) -> Result<(), PolicyError> {
+            Ok(())
+        }
+        fn update_trial_metadata(&self, _: &str, _: u64, _: &Metadata) -> Result<(), PolicyError> {
+            Ok(())
+        }
+        fn trial_count(&self, _: &str) -> Result<usize, PolicyError> {
+            Ok(0)
+        }
+    }
+
+    #[test]
+    fn registry_dispatch() {
+        let mut reg = PolicyRegistry::new();
+        reg.register("MY_ALGO", Arc::new(|_| Box::new(FixedPolicy)));
+        assert!(reg.contains("MY_ALGO"));
+        let mut config = StudyConfig::new("t");
+        config.add_metric(MetricInformation::maximize("m"));
+        config.algorithm = Algorithm::Custom("MY_ALGO".into());
+        let pythia = LocalPythia::new(reg, Arc::new(NullSupporter));
+        let req = SuggestRequest {
+            study_name: "studies/1".into(),
+            study_config: config.clone(),
+            count: 3,
+            client_id: "c".into(),
+        };
+        let d = pythia.run_suggest(&req).unwrap();
+        assert_eq!(d.suggestions.len(), 3);
+
+        // Unknown algorithm -> Unsupported.
+        config.algorithm = Algorithm::Custom("NOPE".into());
+        let req = SuggestRequest {
+            study_config: config,
+            ..req
+        };
+        assert!(matches!(
+            pythia.run_suggest(&req),
+            Err(PolicyError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn default_early_stop_is_never() {
+        let mut reg = PolicyRegistry::new();
+        reg.register("MY_ALGO", Arc::new(|_| Box::new(FixedPolicy)));
+        let pythia = LocalPythia::new(reg, Arc::new(NullSupporter));
+        let mut config = StudyConfig::new("t");
+        config.algorithm = Algorithm::Custom("MY_ALGO".into());
+        let d = pythia
+            .run_early_stop(&EarlyStopRequest {
+                study_name: "studies/1".into(),
+                study_config: config,
+                trial_id: 1,
+            })
+            .unwrap();
+        assert!(!d.should_stop);
+    }
+}

@@ -1,0 +1,180 @@
+//! PolicySupporter: the mini-client policies use to read and filter trials
+//! and to persist algorithm state (paper §6.2).
+//!
+//! Policies can meta-learn from *any* study in the database — the
+//! transfer-learning capability in Table 1 — via `study_config` /
+//! `trials` on arbitrary study names and `list_study_names`.
+
+use super::policy::PolicyError;
+use crate::datastore::query::TrialFilter;
+use crate::datastore::Datastore;
+use crate::pyvizier::converters;
+use crate::pyvizier::{Metadata, StudyConfig, Trial};
+use crate::wire::messages::{MetadataItem, UnitMetadataUpdate};
+use std::sync::Arc;
+
+/// Read/metadata access for policies.
+pub trait PolicySupporter: Send + Sync {
+    /// Load any study's configuration (cross-study reads enable transfer
+    /// learning).
+    fn study_config(&self, study_name: &str) -> Result<StudyConfig, PolicyError>;
+
+    /// Load trials from a study, filtered server-side.
+    fn trials(&self, study_name: &str, filter: &TrialFilter) -> Result<Vec<Trial>, PolicyError>;
+
+    /// All study names in the datastore.
+    fn list_study_names(&self) -> Result<Vec<String>, PolicyError>;
+
+    /// Persist study-level metadata (upsert per (namespace, key)).
+    fn update_study_metadata(&self, study_name: &str, md: &Metadata) -> Result<(), PolicyError>;
+
+    /// Persist trial-level metadata.
+    fn update_trial_metadata(
+        &self,
+        study_name: &str,
+        trial_id: u64,
+        md: &Metadata,
+    ) -> Result<(), PolicyError>;
+
+    /// Number of trials in the study (any state).
+    fn trial_count(&self, study_name: &str) -> Result<usize, PolicyError>;
+}
+
+/// The standard supporter: reads straight from the datastore (used when the
+/// Pythia service runs in the same process as the API service; the
+/// remote-Pythia runner wraps RPCs behind this same trait).
+pub struct DatastoreSupporter {
+    ds: Arc<dyn Datastore>,
+}
+
+impl DatastoreSupporter {
+    pub fn new(ds: Arc<dyn Datastore>) -> Self {
+        Self { ds }
+    }
+}
+
+fn ds_err(e: crate::datastore::DsError) -> PolicyError {
+    PolicyError::Datastore(e.to_string())
+}
+
+impl PolicySupporter for DatastoreSupporter {
+    fn study_config(&self, study_name: &str) -> Result<StudyConfig, PolicyError> {
+        let study = self.ds.get_study(study_name).map_err(ds_err)?;
+        Ok(converters::study_config_from_proto(&study.display_name, &study.spec))
+    }
+
+    fn trials(&self, study_name: &str, filter: &TrialFilter) -> Result<Vec<Trial>, PolicyError> {
+        // Filtered at the datastore (§6.2): only matching trials are
+        // cloned/converted, so incremental designer reads are O(new).
+        let protos = self.ds.query_trials(study_name, filter).map_err(ds_err)?;
+        Ok(protos.iter().map(converters::trial_from_proto).collect())
+    }
+
+    fn list_study_names(&self) -> Result<Vec<String>, PolicyError> {
+        Ok(self
+            .ds
+            .list_studies()
+            .map_err(ds_err)?
+            .into_iter()
+            .map(|s| s.name)
+            .collect())
+    }
+
+    fn update_study_metadata(&self, study_name: &str, md: &Metadata) -> Result<(), PolicyError> {
+        let updates: Vec<UnitMetadataUpdate> = md
+            .iter()
+            .map(|(ns, k, v)| UnitMetadataUpdate {
+                trial_id: 0,
+                item: Some(MetadataItem {
+                    namespace: ns.to_string(),
+                    key: k.to_string(),
+                    value: v.to_vec(),
+                }),
+            })
+            .collect();
+        self.ds.update_metadata(study_name, &updates).map_err(ds_err)
+    }
+
+    fn update_trial_metadata(
+        &self,
+        study_name: &str,
+        trial_id: u64,
+        md: &Metadata,
+    ) -> Result<(), PolicyError> {
+        let updates: Vec<UnitMetadataUpdate> = md
+            .iter()
+            .map(|(ns, k, v)| UnitMetadataUpdate {
+                trial_id,
+                item: Some(MetadataItem {
+                    namespace: ns.to_string(),
+                    key: k.to_string(),
+                    value: v.to_vec(),
+                }),
+            })
+            .collect();
+        self.ds.update_metadata(study_name, &updates).map_err(ds_err)
+    }
+
+    fn trial_count(&self, study_name: &str) -> Result<usize, PolicyError> {
+        self.ds.trial_count(study_name).map_err(ds_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::memory::InMemoryDatastore;
+    use crate::pyvizier::{MetricInformation, StudyConfig};
+    use crate::wire::messages::{StudyProto, TrialProto, TrialState};
+
+    fn setup() -> (Arc<InMemoryDatastore>, String) {
+        let ds = Arc::new(InMemoryDatastore::new());
+        let mut config = StudyConfig::new("exp");
+        config.add_metric(MetricInformation::maximize("m"));
+        let study = ds
+            .create_study(StudyProto {
+                display_name: "exp".into(),
+                spec: crate::pyvizier::converters::study_config_to_proto(&config),
+                ..Default::default()
+            })
+            .unwrap();
+        for i in 0..5 {
+            let t = ds.create_trial(&study.name, TrialProto::default()).unwrap();
+            if i % 2 == 0 {
+                ds.mutate_trial(&study.name, t.id, &mut |t| {
+                    t.state = TrialState::Completed;
+                    Ok(())
+                })
+                .unwrap();
+            }
+        }
+        (ds, study.name)
+    }
+
+    #[test]
+    fn reads_config_and_filtered_trials() {
+        let (ds, name) = setup();
+        let sup = DatastoreSupporter::new(ds);
+        let config = sup.study_config(&name).unwrap();
+        assert_eq!(config.display_name, "exp");
+        let done = sup.trials(&name, &TrialFilter::completed()).unwrap();
+        assert_eq!(done.len(), 3);
+        let newer = sup.trials(&name, &TrialFilter::completed().newer_than(1)).unwrap();
+        assert_eq!(newer.len(), 2);
+        assert_eq!(sup.trial_count(&name).unwrap(), 5);
+        assert_eq!(sup.list_study_names().unwrap(), vec![name]);
+    }
+
+    #[test]
+    fn metadata_writes_visible() {
+        let (ds, name) = setup();
+        let sup = DatastoreSupporter::new(Arc::clone(&ds) as Arc<dyn Datastore>);
+        let mut md = Metadata::new();
+        md.put_str("evo", "pop", "xyz");
+        sup.update_study_metadata(&name, &md).unwrap();
+        sup.update_trial_metadata(&name, 1, &md).unwrap();
+        let study = ds.get_study(&name).unwrap();
+        assert_eq!(study.spec.metadata[0].value, b"xyz");
+        assert_eq!(ds.get_trial(&name, 1).unwrap().metadata[0].value, b"xyz");
+    }
+}

@@ -1,0 +1,227 @@
+//! Combinatorial reparameterizations (paper Appendix A).
+//!
+//! The paper recommends representing combinatorial objects (permutations,
+//! subsets, graphs) through surjective mappings Φ: Z → X from spaces Z that
+//! Vizier's flat `ParameterSpec`s can express. This module implements the
+//! two codes named in Appendix A.1.1 — the Lehmer code for permutations and
+//! the analogous shrinking-index code for k-subsets — plus helpers for the
+//! infeasibility-lifting pattern of A.1.2.
+
+use super::parameter::ParameterDict;
+use super::search_space::{ParameterConfig, SearchSpace};
+
+/// Build the search space Z = [n] × [n-1] × ... × [1] whose points decode
+/// to permutations of `[0, n)` via [`decode_permutation`].
+pub fn permutation_space(prefix: &str, n: usize) -> SearchSpace {
+    let mut space = SearchSpace::new();
+    for i in 0..n {
+        space.add_param(ParameterConfig::integer(
+            &format!("{prefix}{i}"),
+            0,
+            (n - 1 - i) as i64,
+        ));
+    }
+    space
+}
+
+/// Decode a Lehmer code (one digit per parameter `prefix{i}`, digit i in
+/// `[0, n-i)`) into a permutation of `[0, n)`.
+pub fn decode_permutation(prefix: &str, n: usize, params: &ParameterDict) -> Option<Vec<usize>> {
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut perm = Vec::with_capacity(n);
+    for i in 0..n {
+        let d = params.get_i64(&format!("{prefix}{i}"))? as usize;
+        if d >= remaining.len() {
+            return None;
+        }
+        perm.push(remaining.remove(d));
+    }
+    Some(perm)
+}
+
+/// Encode a permutation of `[0, n)` into its Lehmer code digits.
+pub fn encode_permutation(prefix: &str, perm: &[usize]) -> ParameterDict {
+    let mut remaining: Vec<usize> = (0..perm.len()).collect();
+    let mut params = ParameterDict::new();
+    for (i, &p) in perm.iter().enumerate() {
+        let d = remaining.iter().position(|&r| r == p).expect("valid permutation");
+        remaining.remove(d);
+        params.set(format!("{prefix}{i}"), d as i64);
+    }
+    params
+}
+
+/// Build the space Z = [n] × [n-1] × ... × [n-k+1] for k-subsets of `[0, n)`.
+pub fn subset_space(prefix: &str, n: usize, k: usize) -> SearchSpace {
+    assert!(k <= n);
+    let mut space = SearchSpace::new();
+    for i in 0..k {
+        space.add_param(ParameterConfig::integer(
+            &format!("{prefix}{i}"),
+            0,
+            (n - 1 - i) as i64,
+        ));
+    }
+    space
+}
+
+/// Decode the shrinking-index code into a k-subset of `[0, n)`
+/// (sorted ascending).
+pub fn decode_subset(prefix: &str, n: usize, k: usize, params: &ParameterDict) -> Option<Vec<usize>> {
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut subset = Vec::with_capacity(k);
+    for i in 0..k {
+        let d = params.get_i64(&format!("{prefix}{i}"))? as usize;
+        if d >= remaining.len() {
+            return None;
+        }
+        subset.push(remaining.remove(d));
+    }
+    subset.sort_unstable();
+    Some(subset)
+}
+
+/// Flat adjacency-matrix space for digraphs over `n` nodes (Appendix A.1.1's
+/// NASBENCH-style graph representation): n*(n-1)/2 upper-triangle booleans
+/// as integer params in {0,1}.
+pub fn dag_space(prefix: &str, n: usize) -> SearchSpace {
+    let mut space = SearchSpace::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            space.add_param(ParameterConfig::integer(&format!("{prefix}{i}_{j}"), 0, 1));
+        }
+    }
+    space
+}
+
+/// Decode the upper-triangle edge list. Always a DAG under the i<j ordering.
+pub fn decode_dag(prefix: &str, n: usize, params: &ParameterDict) -> Option<Vec<(usize, usize)>> {
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let bit = params.get_i64(&format!("{prefix}{i}_{j}"))?;
+            if bit != 0 {
+                edges.push((i, j));
+            }
+        }
+    }
+    Some(edges)
+}
+
+/// Infeasibility lifting (Appendix A.1.2): wraps a membership test for
+/// X ⊂ Z, producing the infeasibility reason Vizier records on the trial.
+pub fn check_feasible<F: Fn(&ParameterDict) -> bool>(
+    params: &ParameterDict,
+    in_x: F,
+    reason: &str,
+) -> Result<(), String> {
+    if in_x(params) {
+        Ok(())
+    } else {
+        Err(reason.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn permutation_space_shape() {
+        let s = permutation_space("p", 4);
+        assert_eq!(s.num_parameters(), 4);
+        assert_eq!(s.cardinality(), Some(24)); // 4! via 4*3*2*1
+    }
+
+    #[test]
+    fn lehmer_identity_and_reverse() {
+        // All-zero digits decode to the identity.
+        let mut params = ParameterDict::new();
+        for i in 0..5 {
+            params.set(format!("p{i}"), 0i64);
+        }
+        assert_eq!(decode_permutation("p", 5, &params).unwrap(), vec![0, 1, 2, 3, 4]);
+        // Max digits decode to the reverse.
+        let mut params = ParameterDict::new();
+        for i in 0..5 {
+            params.set(format!("p{i}"), (4 - i) as i64);
+        }
+        assert_eq!(decode_permutation("p", 5, &params).unwrap(), vec![4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn prop_lehmer_bijection() {
+        prop::check("lehmer encode/decode bijection", 200, |g| {
+            let n = g.usize_range(1, 8);
+            // Random permutation.
+            let mut perm: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut perm);
+            let code = encode_permutation("p", &perm);
+            let back = decode_permutation("p", n, &code).unwrap();
+            assert_eq!(back, perm);
+        });
+    }
+
+    #[test]
+    fn prop_sampled_codes_decode_to_valid_permutations() {
+        prop::check("sampled lehmer codes valid", 100, |g| {
+            let n = g.usize_range(1, 8);
+            let space = permutation_space("p", n);
+            let mut rng = Pcg32::seeded(g.u64_below(u64::MAX / 2));
+            let params = space.sample(&mut rng);
+            let perm = decode_permutation("p", n, &params).unwrap();
+            let mut sorted = perm.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<usize>>());
+        });
+    }
+
+    #[test]
+    fn subset_decoding() {
+        let space = subset_space("s", 6, 3);
+        assert_eq!(space.num_parameters(), 3);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..100 {
+            let params = space.sample(&mut rng);
+            let subset = decode_subset("s", 6, 3, &params).unwrap();
+            assert_eq!(subset.len(), 3);
+            let mut d = subset.clone();
+            d.dedup();
+            assert_eq!(d.len(), 3, "distinct elements");
+            assert!(subset.iter().all(|&x| x < 6));
+        }
+    }
+
+    #[test]
+    fn dag_space_decodes_acyclic_edges() {
+        let space = dag_space("e", 4);
+        assert_eq!(space.num_parameters(), 6);
+        let mut rng = Pcg32::seeded(4);
+        let params = space.sample(&mut rng);
+        let edges = decode_dag("e", 4, &params).unwrap();
+        for (i, j) in edges {
+            assert!(i < j, "edge ({i},{j}) violates topological order");
+        }
+    }
+
+    #[test]
+    fn infeasibility_lifting() {
+        // Disk X = {||x|| <= 1} inside Z = [-1,1]^2 (the paper's example).
+        let mut inside = ParameterDict::new();
+        inside.set("x0", 0.5).set("x1", 0.5);
+        let norm_ok = |p: &ParameterDict| {
+            let x0 = p.get_f64("x0").unwrap();
+            let x1 = p.get_f64("x1").unwrap();
+            x0 * x0 + x1 * x1 <= 1.0
+        };
+        assert!(check_feasible(&inside, norm_ok, "outside disk").is_ok());
+        let mut outside = ParameterDict::new();
+        outside.set("x0", 0.9).set("x1", 0.9);
+        assert_eq!(
+            check_feasible(&outside, norm_ok, "outside disk"),
+            Err("outside disk".to_string())
+        );
+    }
+}

@@ -1,0 +1,453 @@
+//! Proto <-> PyVizier conversions (paper Table 2 and Appendix D.3).
+//!
+//! | proto (wire::messages)    | PyVizier (this module's targets)      |
+//! |---------------------------|---------------------------------------|
+//! | `StudyProto`              | `StudyConfig` (+ name/state)          |
+//! | `StudySpecProto`          | `SearchSpace` + `StudyConfig`         |
+//! | `ParameterSpecProto`      | `ParameterConfig`                     |
+//! | `TrialProto`              | `Trial`                               |
+//! | `ParamValue`              | `ParameterValue`                      |
+//! | `MetricSpecProto`         | `MetricInformation`                   |
+//! | `Measurement` (wire)      | `Measurement` (pyvizier)              |
+
+use super::metadata::Metadata;
+use super::parameter::{ParameterDict, ParameterValue};
+use super::search_space::{ParameterConfig, ParameterKind, SearchSpace};
+use super::study_config::{Algorithm, MetricInformation, StudyConfig};
+use super::trial::{Measurement, Trial};
+use crate::wire::messages as pb;
+
+// --- ParameterValue ---------------------------------------------------------
+
+pub fn value_to_proto(v: &ParameterValue) -> pb::ParamValue {
+    match v {
+        ParameterValue::F64(x) => pb::ParamValue::F64(*x),
+        ParameterValue::I64(x) => pb::ParamValue::I64(*x),
+        ParameterValue::Str(s) => pb::ParamValue::Str(s.clone()),
+        ParameterValue::Bool(b) => pb::ParamValue::Bool(*b),
+    }
+}
+
+pub fn value_from_proto(v: &pb::ParamValue) -> ParameterValue {
+    match v {
+        pb::ParamValue::F64(x) => ParameterValue::F64(*x),
+        pb::ParamValue::I64(x) => ParameterValue::I64(*x),
+        pb::ParamValue::Str(s) => ParameterValue::Str(s.clone()),
+        pb::ParamValue::Bool(b) => ParameterValue::Bool(*b),
+    }
+}
+
+// --- Metadata ----------------------------------------------------------------
+
+pub fn metadata_to_proto(m: &Metadata) -> Vec<pb::MetadataItem> {
+    m.iter()
+        .map(|(ns, k, v)| pb::MetadataItem {
+            namespace: ns.to_string(),
+            key: k.to_string(),
+            value: v.to_vec(),
+        })
+        .collect()
+}
+
+pub fn metadata_from_proto(items: &[pb::MetadataItem]) -> Metadata {
+    let mut m = Metadata::new();
+    for item in items {
+        m.put(&item.namespace, &item.key, item.value.clone());
+    }
+    m
+}
+
+// --- Measurement --------------------------------------------------------------
+
+pub fn measurement_to_proto(m: &Measurement) -> pb::Measurement {
+    pb::Measurement {
+        step_count: m.step,
+        elapsed_secs: m.elapsed_secs,
+        metrics: m
+            .metrics
+            .iter()
+            .map(|(k, v)| pb::Metric {
+                metric_id: k.clone(),
+                value: *v,
+            })
+            .collect(),
+    }
+}
+
+pub fn measurement_from_proto(m: &pb::Measurement) -> Measurement {
+    Measurement {
+        step: m.step_count,
+        elapsed_secs: m.elapsed_secs,
+        metrics: m.metrics.iter().map(|x| (x.metric_id.clone(), x.value)).collect(),
+    }
+}
+
+// --- Trial ---------------------------------------------------------------------
+
+pub fn trial_to_proto(t: &Trial) -> pb::TrialProto {
+    pb::TrialProto {
+        id: t.id,
+        state: t.state,
+        parameters: t
+            .parameters
+            .iter()
+            .map(|(k, v)| pb::TrialParameter {
+                parameter_id: k.clone(),
+                value: value_to_proto(v),
+            })
+            .collect(),
+        final_measurement: t.final_measurement.as_ref().map(measurement_to_proto),
+        measurements: t.measurements.iter().map(measurement_to_proto).collect(),
+        client_id: t.client_id.clone(),
+        infeasibility_reason: t.infeasibility_reason.clone().unwrap_or_default(),
+        metadata: metadata_to_proto(&t.metadata),
+        created_ms: t.created_ms,
+        completed_ms: t.completed_ms,
+    }
+}
+
+pub fn trial_from_proto(p: &pb::TrialProto) -> Trial {
+    Trial {
+        id: p.id,
+        state: p.state,
+        parameters: p
+            .parameters
+            .iter()
+            .map(|tp| (tp.parameter_id.clone(), value_from_proto(&tp.value)))
+            .collect(),
+        measurements: p.measurements.iter().map(measurement_from_proto).collect(),
+        final_measurement: p.final_measurement.as_ref().map(measurement_from_proto),
+        client_id: p.client_id.clone(),
+        infeasibility_reason: if p.infeasibility_reason.is_empty() {
+            None
+        } else {
+            Some(p.infeasibility_reason.clone())
+        },
+        metadata: metadata_from_proto(&p.metadata),
+        created_ms: p.created_ms,
+        completed_ms: p.completed_ms,
+    }
+}
+
+// --- ParameterConfig -------------------------------------------------------------
+
+pub fn parameter_config_to_proto(c: &ParameterConfig) -> pb::ParameterSpecProto {
+    pb::ParameterSpecProto {
+        parameter_id: c.name.clone(),
+        kind: match &c.kind {
+            ParameterKind::Double { min, max } => pb::ParameterKind::Double { min: *min, max: *max },
+            ParameterKind::Integer { min, max } => pb::ParameterKind::Integer { min: *min, max: *max },
+            ParameterKind::Discrete { values } => pb::ParameterKind::Discrete { values: values.clone() },
+            ParameterKind::Categorical { values } => {
+                pb::ParameterKind::Categorical { values: values.clone() }
+            }
+        },
+        scale_type: c.scale,
+        conditional_children: c
+            .children
+            .iter()
+            .map(|(pv, child)| pb::ConditionalParameterSpec {
+                parent_values: pb::ParentValues {
+                    values: pv.iter().map(value_to_proto).collect(),
+                },
+                spec: parameter_config_to_proto(child),
+            })
+            .collect(),
+    }
+}
+
+pub fn parameter_config_from_proto(p: &pb::ParameterSpecProto) -> ParameterConfig {
+    ParameterConfig {
+        name: p.parameter_id.clone(),
+        kind: match &p.kind {
+            pb::ParameterKind::Double { min, max } => ParameterKind::Double { min: *min, max: *max },
+            pb::ParameterKind::Integer { min, max } => ParameterKind::Integer { min: *min, max: *max },
+            pb::ParameterKind::Discrete { values } => ParameterKind::Discrete { values: values.clone() },
+            pb::ParameterKind::Categorical { values } => {
+                ParameterKind::Categorical { values: values.clone() }
+            }
+        },
+        scale: p.scale_type,
+        children: p
+            .conditional_children
+            .iter()
+            .map(|c| {
+                (
+                    c.parent_values.values.iter().map(value_from_proto).collect(),
+                    parameter_config_from_proto(&c.spec),
+                )
+            })
+            .collect(),
+    }
+}
+
+// --- MetricInformation -------------------------------------------------------------
+
+pub fn metric_to_proto(m: &MetricInformation) -> pb::MetricSpecProto {
+    pb::MetricSpecProto {
+        metric_id: m.name.clone(),
+        goal: m.goal,
+        min_value: m.min_value,
+        max_value: m.max_value,
+    }
+}
+
+pub fn metric_from_proto(p: &pb::MetricSpecProto) -> MetricInformation {
+    MetricInformation {
+        name: p.metric_id.clone(),
+        goal: p.goal,
+        min_value: p.min_value,
+        max_value: p.max_value,
+    }
+}
+
+// --- StudyConfig <-> StudySpecProto --------------------------------------------------
+
+pub fn study_config_to_proto(c: &StudyConfig) -> pb::StudySpecProto {
+    pb::StudySpecProto {
+        parameters: c.search_space.roots.iter().map(parameter_config_to_proto).collect(),
+        metrics: c.metrics.iter().map(metric_to_proto).collect(),
+        algorithm: c.algorithm.as_str().to_string(),
+        observation_noise: c.observation_noise,
+        stopping: c.stopping.clone(),
+        metadata: metadata_to_proto(&c.metadata),
+        seed: c.seed,
+    }
+}
+
+pub fn study_config_from_proto(display_name: &str, p: &pb::StudySpecProto) -> StudyConfig {
+    StudyConfig {
+        display_name: display_name.to_string(),
+        search_space: SearchSpace {
+            roots: p.parameters.iter().map(parameter_config_from_proto).collect(),
+        },
+        metrics: p.metrics.iter().map(metric_from_proto).collect(),
+        algorithm: Algorithm::from_str(&p.algorithm),
+        observation_noise: p.observation_noise,
+        stopping: p.stopping.clone(),
+        metadata: metadata_from_proto(&p.metadata),
+        seed: p.seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyvizier::trial::TrialState;
+    use crate::testing::prop::{check, Gen};
+    use crate::wire::codec::{decode, encode};
+    use crate::wire::messages::{MetricGoal, ScaleType};
+
+    fn gen_value(g: &mut Gen) -> ParameterValue {
+        match g.u64_below(4) {
+            0 => ParameterValue::F64(g.f64_any()),
+            1 => ParameterValue::I64(g.i64_range(i64::MIN / 2, i64::MAX / 2)),
+            2 => ParameterValue::Str(g.string(12)),
+            _ => ParameterValue::Bool(g.bool()),
+        }
+    }
+
+    fn gen_config(g: &mut Gen, depth: usize) -> ParameterConfig {
+        let name = g.ident(8);
+        let mut cfg = match g.u64_below(4) {
+            0 => {
+                let lo = g.f64_range(-100.0, 100.0);
+                ParameterConfig::double(&name, lo, lo + g.f64_range(0.0, 50.0))
+            }
+            1 => {
+                let lo = g.i64_range(-50, 50);
+                ParameterConfig::integer(&name, lo, lo + g.i64_range(0, 20))
+            }
+            2 => ParameterConfig::discrete(&name, (0..g.usize_range(1, 5)).map(|i| i as f64).collect()),
+            _ => ParameterConfig::categorical(&name, vec!["a", "b", "c"]),
+        };
+        if cfg.is_numeric() && g.bool() {
+            cfg.scale = ScaleType::Linear; // keep valid without positivity checks
+        }
+        if depth > 0 && g.bool() {
+            let child = gen_config(g, depth - 1);
+            cfg = cfg.with_child(vec![gen_value(g)], child);
+        }
+        cfg
+    }
+
+    #[test]
+    fn prop_trial_roundtrip_through_proto_and_wire() {
+        check("trial -> proto -> bytes -> proto -> trial", 150, |g| {
+            let mut t = Trial::new(g.u64_below(1 << 40), ParameterDict::new());
+            for _ in 0..g.usize_range(0, 5) {
+                let name = g.ident(6);
+                let v = gen_value(g);
+                t.parameters.set(name, v);
+            }
+            t.state = *g.pick(&[
+                TrialState::Requested,
+                TrialState::Active,
+                TrialState::Stopping,
+                TrialState::Completed,
+                TrialState::Infeasible,
+            ]);
+            if g.bool() {
+                let mut m = Measurement::new(g.i64_range(0, 1000));
+                m.metrics.insert(g.ident(5), g.f64_range(-10.0, 10.0));
+                t.final_measurement = Some(m);
+            }
+            for step in 0..g.i64_range(0, 4) {
+                t.measurements.push(Measurement::new(step).with_metric("m", g.f64_range(0.0, 1.0)));
+            }
+            if g.bool() {
+                t.infeasibility_reason = Some(g.string(10));
+                // Empty string means "feasible" on the wire; avoid ambiguity.
+                if t.infeasibility_reason.as_deref() == Some("") {
+                    t.infeasibility_reason = Some("x".into());
+                }
+            }
+            t.metadata.put_str(&g.ident(4), &g.ident(4), &g.string(8));
+            t.client_id = g.ident(6);
+            t.created_ms = g.u64_below(1 << 40);
+            t.completed_ms = g.u64_below(1 << 40);
+
+            let proto = trial_to_proto(&t);
+            let bytes = encode(&proto);
+            let proto2: pb::TrialProto = decode(&bytes).unwrap();
+            let back = trial_from_proto(&proto2);
+            assert_eq!(back, t);
+        });
+    }
+
+    #[test]
+    fn prop_study_config_roundtrip() {
+        check("study config -> proto -> bytes -> config", 100, |g| {
+            let mut c = StudyConfig::new("demo");
+            for _ in 0..g.usize_range(1, 4) {
+                c.search_space.add_param(gen_config(g, 2));
+            }
+            c.add_metric(MetricInformation::maximize(&g.ident(5)));
+            if g.bool() {
+                c.add_metric(MetricInformation {
+                    name: format!("second_{}", g.ident(4)),
+                    goal: MetricGoal::Minimize,
+                    min_value: 0.0,
+                    max_value: 100.0,
+                });
+            }
+            let algos = ["RANDOM_SEARCH", "GP_BANDIT", "NSGA2", "MY_CUSTOM"];
+            c.algorithm = Algorithm::from_str(*g.pick(&algos));
+            c.seed = g.u64_below(1 << 30);
+            c.metadata.put_str("ns", "k", &g.string(6));
+
+            let proto = study_config_to_proto(&c);
+            let bytes = encode(&proto);
+            let proto2: pb::StudySpecProto = decode(&bytes).unwrap();
+            let back = study_config_from_proto("demo", &proto2);
+            assert_eq!(back, c);
+        });
+    }
+
+    #[test]
+    fn table2_name_pairs_all_covered() {
+        // A compile-time checklist of Table 2: each converter exists and
+        // round-trips a minimal instance.
+        let v = ParameterValue::F64(1.0);
+        assert_eq!(value_from_proto(&value_to_proto(&v)), v);
+
+        let m = Measurement::new(1).with_metric("a", 2.0);
+        assert_eq!(measurement_from_proto(&measurement_to_proto(&m)), m);
+
+        let t = Trial::new(1, ParameterDict::new());
+        assert_eq!(trial_from_proto(&trial_to_proto(&t)), t);
+
+        let pcfg = ParameterConfig::double("x", 0.0, 1.0);
+        assert_eq!(parameter_config_from_proto(&parameter_config_to_proto(&pcfg)), pcfg);
+
+        let mi = MetricInformation::maximize("m");
+        assert_eq!(metric_from_proto(&metric_to_proto(&mi)), mi);
+
+        let mut sc = StudyConfig::new("s");
+        sc.add_metric(MetricInformation::maximize("m"));
+        assert_eq!(study_config_from_proto("s", &study_config_to_proto(&sc)), sc);
+    }
+}
+
+// --- JSON helpers for designer state (paper Code Block 7 dumps JSON) -------------
+
+use crate::util::json::Json;
+
+/// Serialize a parameter dict to a JSON object (typed: numbers keep their
+/// f64/i64 distinction via a one-char tag).
+pub fn params_to_json(p: &ParameterDict) -> Json {
+    let mut obj = Json::obj();
+    for (k, v) in p.iter() {
+        let tagged = match v {
+            ParameterValue::F64(x) => {
+                let mut o = Json::obj();
+                o.set("f", Json::Num(*x));
+                o
+            }
+            ParameterValue::I64(x) => {
+                let mut o = Json::obj();
+                o.set("i", Json::Num(*x as f64));
+                o
+            }
+            ParameterValue::Str(s) => {
+                let mut o = Json::obj();
+                o.set("s", Json::Str(s.clone()));
+                o
+            }
+            ParameterValue::Bool(b) => {
+                let mut o = Json::obj();
+                o.set("b", Json::Bool(*b));
+                o
+            }
+        };
+        obj.set(k, tagged);
+    }
+    obj
+}
+
+/// Inverse of [`params_to_json`].
+pub fn params_from_json(j: &Json) -> Option<ParameterDict> {
+    let obj = j.as_obj()?;
+    let mut p = ParameterDict::new();
+    for (k, tagged) in obj {
+        let v = if let Some(x) = tagged.get("f") {
+            ParameterValue::F64(x.as_f64()?)
+        } else if let Some(x) = tagged.get("i") {
+            ParameterValue::I64(x.as_i64()?)
+        } else if let Some(x) = tagged.get("s") {
+            ParameterValue::Str(x.as_str()?.to_string())
+        } else if let Some(x) = tagged.get("b") {
+            ParameterValue::Bool(x.as_bool()?)
+        } else {
+            return None;
+        };
+        p.set(k.clone(), v);
+    }
+    Some(p)
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn prop_params_json_roundtrip() {
+        check("params json roundtrip", 100, |g| {
+            let mut p = ParameterDict::new();
+            for _ in 0..g.usize_range(0, 6) {
+                let name = g.ident(8);
+                match g.u64_below(4) {
+                    0 => p.set(name, g.f64_range(-1e6, 1e6)),
+                    1 => p.set(name, g.i64_range(-1 << 40, 1 << 40)),
+                    2 => p.set(name, g.string(10)),
+                    _ => p.set(name, g.bool()),
+                };
+            }
+            let j = params_to_json(&p);
+            let text = j.to_string();
+            let back = params_from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, p);
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Namespaced key-value metadata (paper §4.1, §6.3).
+//!
+//! Metadata is not interpreted by the service; it is the channel through
+//! which algorithms persist state (SerializableDesigner, Code Block 7),
+//! users attach small blobs, and user code talks to policies. Namespaces
+//! prevent key collisions between independent writers.
+
+use std::collections::BTreeMap;
+
+/// A two-level (namespace, key) -> bytes mapping.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Metadata {
+    map: BTreeMap<(String, String), Vec<u8>>,
+}
+
+impl Metadata {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store raw bytes under (namespace, key).
+    pub fn put(&mut self, ns: &str, key: &str, value: impl Into<Vec<u8>>) {
+        self.map.insert((ns.to_string(), key.to_string()), value.into());
+    }
+
+    /// Store a UTF-8 string (convenience for JSON designer state).
+    pub fn put_str(&mut self, ns: &str, key: &str, value: &str) {
+        self.put(ns, key, value.as_bytes().to_vec());
+    }
+
+    pub fn get(&self, ns: &str, key: &str) -> Option<&[u8]> {
+        self.map
+            .get(&(ns.to_string(), key.to_string()))
+            .map(|v| v.as_slice())
+    }
+
+    pub fn get_str(&self, ns: &str, key: &str) -> Option<&str> {
+        self.get(ns, key).and_then(|b| std::str::from_utf8(b).ok())
+    }
+
+    pub fn remove(&mut self, ns: &str, key: &str) -> Option<Vec<u8>> {
+        self.map.remove(&(ns.to_string(), key.to_string()))
+    }
+
+    /// All (key, value) pairs within one namespace.
+    pub fn ns<'a>(&'a self, ns: &'a str) -> impl Iterator<Item = (&'a str, &'a [u8])> + 'a {
+        self.map
+            .iter()
+            .filter(move |((n, _), _)| n == ns)
+            .map(|((_, k), v)| (k.as_str(), v.as_slice()))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str, &[u8])> {
+        self.map
+            .iter()
+            .map(|((n, k), v)| (n.as_str(), k.as_str(), v.as_slice()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Merge another metadata object in (overwrites on collision) —
+    /// used when applying `UpdateMetadata` RPCs.
+    pub fn merge_from(&mut self, other: &Metadata) {
+        for ((n, k), v) in &other.map {
+            self.map.insert((n.clone(), k.clone()), v.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn namespaces_isolate_keys() {
+        let mut m = Metadata::new();
+        m.put_str("algo_a", "state", "a-state");
+        m.put_str("algo_b", "state", "b-state");
+        assert_eq!(m.get_str("algo_a", "state"), Some("a-state"));
+        assert_eq!(m.get_str("algo_b", "state"), Some("b-state"));
+        assert_eq!(m.len(), 2);
+        let a_keys: Vec<_> = m.ns("algo_a").collect();
+        assert_eq!(a_keys, vec![("state", "a-state".as_bytes())]);
+    }
+
+    #[test]
+    fn binary_values_roundtrip() {
+        let mut m = Metadata::new();
+        m.put("", "blob", vec![0u8, 255, 7]);
+        assert_eq!(m.get("", "blob"), Some(&[0u8, 255, 7][..]));
+        assert_eq!(m.get_str("", "blob"), None); // not valid utf-8? 0,255,7 -> 255 invalid
+    }
+
+    #[test]
+    fn merge_overwrites() {
+        let mut a = Metadata::new();
+        a.put_str("ns", "k", "old");
+        let mut b = Metadata::new();
+        b.put_str("ns", "k", "new");
+        b.put_str("ns", "k2", "v2");
+        a.merge_from(&b);
+        assert_eq!(a.get_str("ns", "k"), Some("new"));
+        assert_eq!(a.get_str("ns", "k2"), Some("v2"));
+    }
+
+    #[test]
+    fn remove_works() {
+        let mut m = Metadata::new();
+        m.put_str("n", "k", "v");
+        assert_eq!(m.remove("n", "k"), Some(b"v".to_vec()));
+        assert!(m.get("n", "k").is_none());
+        assert!(m.is_empty());
+    }
+}

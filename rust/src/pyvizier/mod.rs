@@ -1,0 +1,26 @@
+//! PyVizier-equivalent core types (paper §4, §4.3, Table 2).
+//!
+//! The paper keeps two representations of every primitive: raw protos for
+//! the RPC boundary, and richer "PyVizier" classes with validation and
+//! convenient construction. This module is the Rust analogue of the
+//! PyVizier layer; [`crate::wire::messages`] is the proto layer, and
+//! [`converters`] provides the `to_proto` / `from_proto` mappings of
+//! Table 2.
+
+pub mod combinatorics;
+pub mod converters;
+pub mod metadata;
+pub mod parameter;
+pub mod pareto;
+pub mod scaling;
+pub mod search_space;
+pub mod study_config;
+pub mod trial;
+
+pub use metadata::Metadata;
+pub use parameter::{ParameterDict, ParameterValue};
+pub use search_space::{ParameterConfig, ParameterKind, SearchSpace};
+pub use study_config::{Algorithm, MetricInformation, StudyConfig};
+pub use trial::{Measurement, Trial, TrialState, TrialSuggestion};
+
+pub use crate::wire::messages::{MetricGoal, ObservationNoise, ScaleType, StoppingKind, StudyState};

@@ -1,0 +1,201 @@
+//! Parameter values and dictionaries (PyVizier `ParameterValue` /
+//! `ParameterDict`, paper Code Block 6).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A single parameter's assigned value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParameterValue {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl ParameterValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParameterValue::F64(v) => Some(*v),
+            ParameterValue::I64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ParameterValue::I64(v) => Some(*v),
+            ParameterValue::F64(v) if v.fract() == 0.0 => Some(*v as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParameterValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ParameterValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Equality as used for conditional-parent matching: numeric values
+    /// compare across F64/I64; strings and bools compare exactly.
+    pub fn matches(&self, other: &ParameterValue) -> bool {
+        match (self, other) {
+            (ParameterValue::Str(a), ParameterValue::Str(b)) => a == b,
+            (ParameterValue::Bool(a), ParameterValue::Bool(b)) => a == b,
+            (a, b) => match (a.as_f64(), b.as_f64()) {
+                (Some(x), Some(y)) => x == y,
+                _ => false,
+            },
+        }
+    }
+}
+
+impl fmt::Display for ParameterValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParameterValue::F64(v) => write!(f, "{v}"),
+            ParameterValue::I64(v) => write!(f, "{v}"),
+            ParameterValue::Str(v) => write!(f, "{v}"),
+            ParameterValue::Bool(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+impl From<f64> for ParameterValue {
+    fn from(v: f64) -> Self {
+        ParameterValue::F64(v)
+    }
+}
+impl From<i64> for ParameterValue {
+    fn from(v: i64) -> Self {
+        ParameterValue::I64(v)
+    }
+}
+impl From<&str> for ParameterValue {
+    fn from(v: &str) -> Self {
+        ParameterValue::Str(v.to_string())
+    }
+}
+impl From<String> for ParameterValue {
+    fn from(v: String) -> Self {
+        ParameterValue::Str(v)
+    }
+}
+impl From<bool> for ParameterValue {
+    fn from(v: bool) -> Self {
+        ParameterValue::Bool(v)
+    }
+}
+
+/// An ordered name -> value mapping for one trial's parameters.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ParameterDict {
+    map: BTreeMap<String, ParameterValue>,
+}
+
+impl ParameterDict {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, name: impl Into<String>, value: impl Into<ParameterValue>) -> &mut Self {
+        self.map.insert(name.into(), value.into());
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParameterValue> {
+        self.map.get(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_i64(&self, name: &str) -> Option<i64> {
+        self.get(name).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.get(name).and_then(|v| v.as_str())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<ParameterValue> {
+        self.map.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &ParameterValue)> {
+        self.map.iter()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+impl FromIterator<(String, ParameterValue)> for ParameterDict {
+    fn from_iter<T: IntoIterator<Item = (String, ParameterValue)>>(iter: T) -> Self {
+        Self {
+            map: iter.into_iter().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(ParameterValue::from(1.5).as_f64(), Some(1.5));
+        assert_eq!(ParameterValue::from(3i64).as_f64(), Some(3.0));
+        assert_eq!(ParameterValue::from(3.0).as_i64(), Some(3));
+        assert_eq!(ParameterValue::from(3.5).as_i64(), None);
+        assert_eq!(ParameterValue::from("vgg").as_str(), Some("vgg"));
+        assert_eq!(ParameterValue::from(true).as_bool(), Some(true));
+        assert_eq!(ParameterValue::from("x").as_f64(), None);
+    }
+
+    #[test]
+    fn matches_cross_numeric() {
+        assert!(ParameterValue::F64(2.0).matches(&ParameterValue::I64(2)));
+        assert!(!ParameterValue::F64(2.5).matches(&ParameterValue::I64(2)));
+        assert!(ParameterValue::Str("a".into()).matches(&ParameterValue::Str("a".into())));
+        assert!(!ParameterValue::Str("a".into()).matches(&ParameterValue::F64(1.0)));
+    }
+
+    #[test]
+    fn dict_ops() {
+        let mut d = ParameterDict::new();
+        d.set("learning_rate", 0.4).set("model_type", "vgg").set("layers", 3i64);
+        assert_eq!(d.get_f64("learning_rate"), Some(0.4));
+        assert_eq!(d.get_str("model_type"), Some("vgg"));
+        assert_eq!(d.get_i64("layers"), Some(3));
+        assert_eq!(d.len(), 3);
+        assert!(d.contains("model_type"));
+        d.remove("model_type");
+        assert!(!d.contains("model_type"));
+        // Deterministic iteration order (BTreeMap).
+        let names: Vec<&String> = d.names().collect();
+        assert_eq!(names, vec!["layers", "learning_rate"]);
+    }
+}

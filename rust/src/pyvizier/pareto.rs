@@ -1,0 +1,290 @@
+//! Multi-objective utilities: Pareto dominance, frontier extraction,
+//! crowding distance (used by NSGA-II), and 2-D hypervolume.
+//!
+//! Supports the paper's multi-objective studies (§4.1: "Multiple
+//! MetricSpecs will be used for ... finding Pareto frontiers") and the
+//! `ListOptimalTrials` RPC.
+
+use super::study_config::MetricInformation;
+use super::trial::Trial;
+
+/// Extract a trial's objective vector in *maximization* orientation
+/// (minimized metrics are negated). Returns None if any metric is missing.
+pub fn objective_vector(trial: &Trial, metrics: &[MetricInformation]) -> Option<Vec<f64>> {
+    metrics
+        .iter()
+        .map(|m| trial.final_metric(&m.name).map(|v| m.maximization_value(v)))
+        .collect()
+}
+
+/// Does `a` Pareto-dominate `b`? (All coordinates >=, at least one >.)
+/// Vectors are in maximization orientation.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the Pareto-optimal points among `points` (maximization).
+/// Simple O(n²) sweep — n here is the number of completed trials, which the
+/// paper bounds to "tens to millions"; for the frontier RPC the typical n
+/// is small. Duplicate points are all kept.
+pub fn pareto_front_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j && dominates(q, p) {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Non-dominated sorting (NSGA-II): returns `ranks[i]` = front index of
+/// point i (0 = Pareto-optimal).
+pub fn non_dominated_ranks(points: &[Vec<f64>]) -> Vec<usize> {
+    let n = points.len();
+    let mut dominated_by = vec![0usize; n]; // count of dominators
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&points[i], &points[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            }
+        }
+    }
+    let mut ranks = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut rank = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            ranks[i] = rank;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        rank += 1;
+    }
+    ranks
+}
+
+/// Crowding distance within one front (NSGA-II diversity preservation).
+/// Boundary points get +inf.
+pub fn crowding_distance(points: &[Vec<f64>]) -> Vec<f64> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = points[0].len();
+    let mut dist = vec![0.0f64; n];
+    for obj in 0..k {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| points[a][obj].partial_cmp(&points[b][obj]).unwrap());
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        let span = points[idx[n - 1]][obj] - points[idx[0]][obj];
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..n - 1 {
+            let lo = points[idx[w - 1]][obj];
+            let hi = points[idx[w + 1]][obj];
+            dist[idx[w]] += (hi - lo) / span;
+        }
+    }
+    dist
+}
+
+/// 2-D hypervolume dominated by `points` w.r.t. `reference` (both in
+/// maximization orientation; reference must be dominated by all points).
+pub fn hypervolume_2d(points: &[Vec<f64>], reference: &[f64; 2]) -> f64 {
+    let mut front: Vec<&Vec<f64>> = points
+        .iter()
+        .filter(|p| p[0] >= reference[0] && p[1] >= reference[1])
+        .collect();
+    if front.is_empty() {
+        return 0.0;
+    }
+    // Sort by x descending; sweep accumulating strips above the running max y.
+    front.sort_by(|a, b| b[0].partial_cmp(&a[0]).unwrap());
+    let mut hv = 0.0;
+    let mut prev_x = f64::INFINITY;
+    let mut max_y = reference[1];
+    for p in front {
+        let x = p[0].min(prev_x);
+        if p[1] > max_y {
+            hv += (x - reference[0]) * (p[1] - max_y);
+            max_y = p[1];
+        }
+        prev_x = prev_x.min(p[0]);
+    }
+    hv
+}
+
+/// Select the Pareto-optimal trials (the `ListOptimalTrials` RPC). For a
+/// single metric this degenerates to "all trials tied at the best value".
+pub fn optimal_trials<'a>(
+    trials: impl IntoIterator<Item = &'a Trial>,
+    metrics: &[MetricInformation],
+) -> Vec<&'a Trial> {
+    let complete: Vec<(&Trial, Vec<f64>)> = trials
+        .into_iter()
+        .filter(|t| t.is_feasible_completed())
+        .filter_map(|t| objective_vector(t, metrics).map(|v| (t, v)))
+        .collect();
+    let points: Vec<Vec<f64>> = complete.iter().map(|(_, v)| v.clone()).collect();
+    pareto_front_indices(&points)
+        .into_iter()
+        .map(|i| complete[i].0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyvizier::trial::{Measurement, TrialState};
+    use crate::pyvizier::ParameterDict;
+    use crate::testing::prop;
+    use crate::wire::messages::MetricGoal;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[2.0, 2.0], &[1.0, 1.0]));
+        assert!(dominates(&[2.0, 1.0], &[1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal: not strict
+        assert!(!dominates(&[2.0, 0.0], &[1.0, 1.0])); // trade-off
+    }
+
+    #[test]
+    fn front_extraction() {
+        let pts = vec![
+            vec![1.0, 5.0],
+            vec![3.0, 3.0],
+            vec![5.0, 1.0],
+            vec![2.0, 2.0], // dominated by (3,3)
+            vec![0.0, 0.0], // dominated by all
+        ];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ranks_are_layered() {
+        let pts = vec![
+            vec![3.0, 3.0], // front 0
+            vec![2.0, 2.0], // front 1
+            vec![1.0, 1.0], // front 2
+            vec![1.0, 4.0], // front 0 (trade-off with (3,3))
+        ];
+        assert_eq!(non_dominated_ranks(&pts), vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn crowding_boundary_infinite() {
+        let pts = vec![vec![0.0, 3.0], vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 0.0]];
+        let d = crowding_distance(&pts);
+        assert!(d[0].is_infinite());
+        assert!(d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        // Symmetric layout -> equal interior distances.
+        assert!((d[1] - d[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_known_value() {
+        // Two points (1,2) and (2,1) w.r.t. (0,0): union of two rectangles
+        // = 2 + 2 - 1 = 3.
+        let pts = vec![vec![1.0, 2.0], vec![2.0, 1.0]];
+        assert!((hypervolume_2d(&pts, &[0.0, 0.0]) - 3.0).abs() < 1e-12);
+        // Single point.
+        assert!((hypervolume_2d(&[vec![2.0, 3.0]], &[0.0, 0.0]) - 6.0).abs() < 1e-12);
+        // Point below reference contributes nothing.
+        assert_eq!(hypervolume_2d(&[vec![-1.0, -1.0]], &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn optimal_trials_mixed_goals() {
+        let metrics = vec![
+            MetricInformation::maximize("acc"),
+            MetricInformation {
+                name: "latency".into(),
+                goal: MetricGoal::Minimize,
+                min_value: 0.0,
+                max_value: f64::INFINITY,
+            },
+        ];
+        let mk = |id, acc: f64, lat: f64| {
+            let mut t = Trial::new(id, ParameterDict::new());
+            t.state = TrialState::Completed;
+            t.final_measurement =
+                Some(Measurement::new(1).with_metric("acc", acc).with_metric("latency", lat));
+            t
+        };
+        let trials = vec![
+            mk(1, 0.9, 10.0), // optimal
+            mk(2, 0.8, 5.0),  // optimal (faster)
+            mk(3, 0.7, 20.0), // dominated by 1 and 2
+        ];
+        let front: Vec<u64> = optimal_trials(&trials, &metrics).iter().map(|t| t.id).collect();
+        assert_eq!(front, vec![1, 2]);
+    }
+
+    #[test]
+    fn prop_front_is_mutually_nondominated_and_complete() {
+        prop::check("pareto front invariants", 100, |g| {
+            let n = g.usize_range(1, 30);
+            let k = g.usize_range(1, 4);
+            let pts: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..k).map(|_| g.f64_range(-5.0, 5.0)).collect())
+                .collect();
+            let front = pareto_front_indices(&pts);
+            assert!(!front.is_empty());
+            // No front member dominates another.
+            for &i in &front {
+                for &j in &front {
+                    assert!(i == j || !dominates(&pts[i], &pts[j]));
+                }
+            }
+            // Every non-front point is dominated by some front point.
+            for i in 0..n {
+                if !front.contains(&i) {
+                    assert!(front.iter().any(|&j| dominates(&pts[j], &pts[i])));
+                }
+            }
+            // Ranks agree with the front.
+            let ranks = non_dominated_ranks(&pts);
+            for i in 0..n {
+                assert_eq!(ranks[i] == 0, front.contains(&i), "point {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_hypervolume_monotone_in_points() {
+        prop::check("hypervolume grows with added points", 50, |g| {
+            let base: Vec<Vec<f64>> = (0..g.usize_range(1, 10))
+                .map(|_| vec![g.f64_range(0.0, 5.0), g.f64_range(0.0, 5.0)])
+                .collect();
+            let hv1 = hypervolume_2d(&base, &[0.0, 0.0]);
+            let mut more = base.clone();
+            more.push(vec![g.f64_range(0.0, 5.0), g.f64_range(0.0, 5.0)]);
+            let hv2 = hypervolume_2d(&more, &[0.0, 0.0]);
+            assert!(hv2 >= hv1 - 1e-9, "hv shrank: {hv1} -> {hv2}");
+        });
+    }
+}

@@ -1,0 +1,115 @@
+//! Parameter scaling (paper §4.2): maps between a parameter's native range
+//! and the unit interval the optimizer works in. Log scaling gives the
+//! subrange [0.001, 0.01] the same optimizer attention as [1, 10].
+
+use crate::wire::messages::ScaleType;
+
+/// Map a value in `[min, max]` to `[0, 1]` under the given scale.
+pub fn to_unit(scale: ScaleType, min: f64, max: f64, v: f64) -> f64 {
+    let v = v.clamp(min, max);
+    if max <= min {
+        return 0.0;
+    }
+    match scale {
+        ScaleType::Linear => (v - min) / (max - min),
+        ScaleType::Log => {
+            assert!(min > 0.0, "log scale requires positive bounds");
+            (v.ln() - min.ln()) / (max.ln() - min.ln())
+        }
+        // Attention concentrated near the MAX end: mirror, log, mirror.
+        ScaleType::ReverseLog => {
+            let span = max - min;
+            let m = (max - v) / span; // 0 at max, 1 at min
+            1.0 - ((1.0 + m * span).ln() / (1.0 + span).ln())
+        }
+    }
+}
+
+/// Inverse of [`to_unit`].
+pub fn from_unit(scale: ScaleType, min: f64, max: f64, u: f64) -> f64 {
+    let u = u.clamp(0.0, 1.0);
+    if max <= min {
+        return min;
+    }
+    let v = match scale {
+        ScaleType::Linear => min + u * (max - min),
+        ScaleType::Log => (min.ln() + u * (max.ln() - min.ln())).exp(),
+        ScaleType::ReverseLog => {
+            let span = max - min;
+            let m = (((1.0 - u) * (1.0 + span).ln()).exp() - 1.0) / span;
+            max - m * span
+        }
+    };
+    v.clamp(min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(scale: ScaleType, min: f64, max: f64) {
+        for i in 0..=20 {
+            let u = i as f64 / 20.0;
+            let v = from_unit(scale, min, max, u);
+            assert!((min..=max).contains(&v), "{scale:?} {u} -> {v}");
+            let u2 = to_unit(scale, min, max, v);
+            assert!((u - u2).abs() < 1e-9, "{scale:?}: {u} -> {v} -> {u2}");
+        }
+    }
+
+    #[test]
+    fn linear_roundtrip() {
+        roundtrip(ScaleType::Linear, -5.0, 10.0);
+    }
+
+    #[test]
+    fn log_roundtrip() {
+        roundtrip(ScaleType::Log, 1e-4, 1e2);
+    }
+
+    #[test]
+    fn reverse_log_roundtrip() {
+        roundtrip(ScaleType::ReverseLog, 0.0, 1.0);
+        roundtrip(ScaleType::ReverseLog, 2.0, 50.0);
+    }
+
+    #[test]
+    fn endpoints_map_exactly() {
+        for scale in [ScaleType::Linear, ScaleType::Log, ScaleType::ReverseLog] {
+            let (min, max) = (0.5, 8.0);
+            assert!((to_unit(scale, min, max, min) - 0.0).abs() < 1e-12);
+            assert!((to_unit(scale, min, max, max) - 1.0).abs() < 1e-12);
+            assert!((from_unit(scale, min, max, 0.0) - min).abs() < 1e-12);
+            assert!((from_unit(scale, min, max, 1.0) - max).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_scale_equalizes_decades() {
+        // Paper's example: [0.001, 0.01] should get the same unit-space
+        // width as [1, 10] within [0.001, 10].
+        let (min, max) = (0.001, 10.0);
+        let w1 = to_unit(ScaleType::Log, min, max, 0.01) - to_unit(ScaleType::Log, min, max, 0.001);
+        let w2 = to_unit(ScaleType::Log, min, max, 10.0) - to_unit(ScaleType::Log, min, max, 1.0);
+        assert!((w1 - w2).abs() < 1e-9, "{w1} vs {w2}");
+        // Under linear scaling they are wildly different.
+        let l1 = to_unit(ScaleType::Linear, min, max, 0.01) - to_unit(ScaleType::Linear, min, max, 0.001);
+        let l2 = to_unit(ScaleType::Linear, min, max, 10.0) - to_unit(ScaleType::Linear, min, max, 1.0);
+        assert!(l2 / l1 > 100.0);
+    }
+
+    #[test]
+    fn reverse_log_concentrates_near_max() {
+        // Half of unit space should map closer to max than linear would.
+        let v = from_unit(ScaleType::ReverseLog, 0.0, 1.0, 0.5);
+        assert!(v > 0.5, "reverse-log midpoint {v} should exceed 0.5");
+    }
+
+    #[test]
+    fn out_of_range_inputs_clamp() {
+        assert_eq!(to_unit(ScaleType::Linear, 0.0, 1.0, 5.0), 1.0);
+        assert_eq!(to_unit(ScaleType::Linear, 0.0, 1.0, -5.0), 0.0);
+        assert_eq!(from_unit(ScaleType::Linear, 0.0, 1.0, 2.0), 1.0);
+        assert_eq!(from_unit(ScaleType::Linear, 0.0, 1.0, -1.0), 0.0);
+    }
+}

@@ -1,0 +1,634 @@
+//! Search-space definition, validation, and sampling (paper §4.2).
+//!
+//! A search space is a forest of [`ParameterConfig`]s. Each numeric config
+//! carries a [`ScaleType`]; each config may carry *conditional children*
+//! that are only active when the parent takes particular values — the
+//! paper's conditional-search mechanism (e.g. `model = {"linear", "dnn",
+//! "random_forest"}`, each with its own subtree).
+
+use super::parameter::{ParameterDict, ParameterValue};
+use crate::util::rng::Pcg32;
+use crate::wire::messages::ScaleType;
+
+/// Rich parameter kind (PyVizier side of the proto's oneof).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParameterKind {
+    /// Continuous `[min, max]`.
+    Double { min: f64, max: f64 },
+    /// Integers `[min, max]`.
+    Integer { min: i64, max: i64 },
+    /// Finite ordered set of reals.
+    Discrete { values: Vec<f64> },
+    /// Unordered strings.
+    Categorical { values: Vec<String> },
+}
+
+/// Errors from search-space construction or trial validation.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum SpaceError {
+    #[error("parameter {0:?}: empty value list")]
+    EmptyValues(String),
+    #[error("parameter {0:?}: invalid bounds [{1}, {2}]")]
+    BadBounds(String, f64, f64),
+    #[error("parameter {0:?}: log scale requires positive lower bound, got {1}")]
+    BadLogBound(String, f64),
+    #[error("parameter {0:?}: scale type only applies to numeric parameters")]
+    ScaleOnNonNumeric(String),
+    #[error("duplicate parameter name {0:?}")]
+    DuplicateName(String),
+    #[error("unknown parent parameter {0:?}")]
+    UnknownParent(String),
+    #[error("missing required parameter {0:?}")]
+    MissingParameter(String),
+    #[error("unexpected parameter {0:?} (not active for this assignment)")]
+    UnexpectedParameter(String),
+    #[error("parameter {0:?}: value {1} out of range")]
+    OutOfRange(String, String),
+    #[error("parameter {0:?}: wrong value type")]
+    WrongType(String),
+}
+
+/// One parameter's specification, possibly with conditional children.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParameterConfig {
+    pub name: String,
+    pub kind: ParameterKind,
+    pub scale: ScaleType,
+    /// `(parent_values, child)`: child active iff the parent's assigned
+    /// value matches one of `parent_values`.
+    pub children: Vec<(Vec<ParameterValue>, ParameterConfig)>,
+}
+
+impl ParameterConfig {
+    pub fn double(name: &str, min: f64, max: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: ParameterKind::Double { min, max },
+            scale: ScaleType::Linear,
+            children: Vec::new(),
+        }
+    }
+
+    pub fn integer(name: &str, min: i64, max: i64) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: ParameterKind::Integer { min, max },
+            scale: ScaleType::Linear,
+            children: Vec::new(),
+        }
+    }
+
+    pub fn discrete(name: &str, mut values: Vec<f64>) -> Self {
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        values.dedup();
+        Self {
+            name: name.to_string(),
+            kind: ParameterKind::Discrete { values },
+            scale: ScaleType::Linear,
+            children: Vec::new(),
+        }
+    }
+
+    pub fn categorical(name: &str, values: Vec<&str>) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: ParameterKind::Categorical {
+                values: values.into_iter().map(|s| s.to_string()).collect(),
+            },
+            scale: ScaleType::Linear,
+            children: Vec::new(),
+        }
+    }
+
+    /// Set the scale type (numeric parameters only; checked by
+    /// [`SearchSpace::validate_space`]).
+    pub fn with_scale(mut self, scale: ScaleType) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Attach a conditional child active for the given parent values.
+    pub fn with_child(
+        mut self,
+        parent_values: Vec<ParameterValue>,
+        child: ParameterConfig,
+    ) -> Self {
+        self.children.push((parent_values, child));
+        self
+    }
+
+    /// Is this config numeric (Double/Integer/Discrete)?
+    pub fn is_numeric(&self) -> bool {
+        !matches!(self.kind, ParameterKind::Categorical { .. })
+    }
+
+    /// Number of distinct values, or `None` for continuous parameters.
+    pub fn cardinality(&self) -> Option<u64> {
+        match &self.kind {
+            ParameterKind::Double { .. } => None,
+            ParameterKind::Integer { min, max } => Some((max - min + 1) as u64),
+            ParameterKind::Discrete { values } => Some(values.len() as u64),
+            ParameterKind::Categorical { values } => Some(values.len() as u64),
+        }
+    }
+
+    /// Check a single value against this spec (ignores children).
+    pub fn validate_value(&self, v: &ParameterValue) -> Result<(), SpaceError> {
+        let name = self.name.clone();
+        match (&self.kind, v) {
+            (ParameterKind::Double { min, max }, val) => {
+                let x = val.as_f64().ok_or(SpaceError::WrongType(name.clone()))?;
+                if x < *min || x > *max || !x.is_finite() {
+                    return Err(SpaceError::OutOfRange(name, x.to_string()));
+                }
+                Ok(())
+            }
+            (ParameterKind::Integer { min, max }, val) => {
+                let x = val.as_i64().ok_or(SpaceError::WrongType(name.clone()))?;
+                if x < *min || x > *max {
+                    return Err(SpaceError::OutOfRange(name, x.to_string()));
+                }
+                Ok(())
+            }
+            (ParameterKind::Discrete { values }, val) => {
+                let x = val.as_f64().ok_or(SpaceError::WrongType(name.clone()))?;
+                if values.iter().any(|&d| d == x) {
+                    Ok(())
+                } else {
+                    Err(SpaceError::OutOfRange(name, x.to_string()))
+                }
+            }
+            (ParameterKind::Categorical { values }, ParameterValue::Str(s)) => {
+                if values.iter().any(|c| c == s) {
+                    Ok(())
+                } else {
+                    Err(SpaceError::OutOfRange(name, s.clone()))
+                }
+            }
+            (ParameterKind::Categorical { .. }, _) => Err(SpaceError::WrongType(name)),
+        }
+    }
+
+    /// Sample a value uniformly (in scaled space for numerics).
+    pub fn sample_value(&self, rng: &mut Pcg32) -> ParameterValue {
+        match &self.kind {
+            ParameterKind::Double { min, max } => {
+                let u = rng.f64();
+                ParameterValue::F64(super::scaling::from_unit(self.scale, *min, *max, u))
+            }
+            ParameterKind::Integer { min, max } => ParameterValue::I64(rng.int_range(*min, *max)),
+            ParameterKind::Discrete { values } => ParameterValue::F64(*rng.choose(values)),
+            ParameterKind::Categorical { values } => {
+                ParameterValue::Str(rng.choose(values).clone())
+            }
+        }
+    }
+
+    /// Project a (possibly out-of-range) value back into the feasible set.
+    pub fn clamp_value(&self, v: &ParameterValue) -> ParameterValue {
+        match (&self.kind, v) {
+            (ParameterKind::Double { min, max }, val) => {
+                let x = val.as_f64().unwrap_or(*min);
+                ParameterValue::F64(x.clamp(*min, *max))
+            }
+            (ParameterKind::Integer { min, max }, val) => {
+                let x = val.as_i64().unwrap_or(*min);
+                ParameterValue::I64(x.clamp(*min, *max))
+            }
+            (ParameterKind::Discrete { values }, val) => {
+                let x = val.as_f64().unwrap_or(values[0]);
+                let nearest = values
+                    .iter()
+                    .copied()
+                    .min_by(|a, b| (a - x).abs().partial_cmp(&(b - x).abs()).unwrap())
+                    .unwrap();
+                ParameterValue::F64(nearest)
+            }
+            (ParameterKind::Categorical { values }, ParameterValue::Str(s))
+                if values.contains(s) =>
+            {
+                v.clone()
+            }
+            (ParameterKind::Categorical { values }, _) => ParameterValue::Str(values[0].clone()),
+        }
+    }
+
+    fn check_spec(&self) -> Result<(), SpaceError> {
+        match &self.kind {
+            ParameterKind::Double { min, max } => {
+                if !(min <= max) || !min.is_finite() || !max.is_finite() {
+                    return Err(SpaceError::BadBounds(self.name.clone(), *min, *max));
+                }
+                if self.scale == ScaleType::Log && *min <= 0.0 {
+                    return Err(SpaceError::BadLogBound(self.name.clone(), *min));
+                }
+            }
+            ParameterKind::Integer { min, max } => {
+                if min > max {
+                    return Err(SpaceError::BadBounds(self.name.clone(), *min as f64, *max as f64));
+                }
+                if self.scale == ScaleType::Log && *min <= 0 {
+                    return Err(SpaceError::BadLogBound(self.name.clone(), *min as f64));
+                }
+            }
+            ParameterKind::Discrete { values } => {
+                if values.is_empty() {
+                    return Err(SpaceError::EmptyValues(self.name.clone()));
+                }
+            }
+            ParameterKind::Categorical { values } => {
+                if values.is_empty() {
+                    return Err(SpaceError::EmptyValues(self.name.clone()));
+                }
+                if self.scale != ScaleType::Linear {
+                    return Err(SpaceError::ScaleOnNonNumeric(self.name.clone()));
+                }
+            }
+        }
+        for (_, child) in &self.children {
+            child.check_spec()?;
+        }
+        Ok(())
+    }
+
+    fn collect_names<'a>(&'a self, out: &mut Vec<&'a str>) {
+        out.push(&self.name);
+        for (_, child) in &self.children {
+            child.collect_names(out);
+        }
+    }
+}
+
+/// The feasible space X of a study: a forest of parameter configs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SearchSpace {
+    pub roots: Vec<ParameterConfig>,
+}
+
+impl SearchSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // --- builder API (mirrors Code Block 1's `select_root().add_float`) ---
+
+    pub fn add_float(&mut self, name: &str, min: f64, max: f64, scale: ScaleType) -> &mut Self {
+        self.roots.push(ParameterConfig::double(name, min, max).with_scale(scale));
+        self
+    }
+
+    pub fn add_int(&mut self, name: &str, min: i64, max: i64) -> &mut Self {
+        self.roots.push(ParameterConfig::integer(name, min, max));
+        self
+    }
+
+    pub fn add_discrete(&mut self, name: &str, values: Vec<f64>) -> &mut Self {
+        self.roots.push(ParameterConfig::discrete(name, values));
+        self
+    }
+
+    pub fn add_categorical(&mut self, name: &str, values: Vec<&str>) -> &mut Self {
+        self.roots.push(ParameterConfig::categorical(name, values));
+        self
+    }
+
+    /// Add a fully-built config (for conditional trees).
+    pub fn add_param(&mut self, config: ParameterConfig) -> &mut Self {
+        self.roots.push(config);
+        self
+    }
+
+    /// Attach `child` under the (unique) parameter named `parent`, active
+    /// for `parent_values`.
+    pub fn add_conditional(
+        &mut self,
+        parent: &str,
+        parent_values: Vec<ParameterValue>,
+        child: ParameterConfig,
+    ) -> Result<&mut Self, SpaceError> {
+        fn attach(
+            cfg: &mut ParameterConfig,
+            parent: &str,
+            pv: &[ParameterValue],
+            child: &ParameterConfig,
+        ) -> bool {
+            if cfg.name == parent {
+                cfg.children.push((pv.to_vec(), child.clone()));
+                return true;
+            }
+            for (_, c) in cfg.children.iter_mut() {
+                if attach(c, parent, pv, child) {
+                    return true;
+                }
+            }
+            false
+        }
+        for root in self.roots.iter_mut() {
+            if attach(root, parent, &parent_values, &child) {
+                return Ok(self);
+            }
+        }
+        Err(SpaceError::UnknownParent(parent.to_string()))
+    }
+
+    /// Validate the space itself: bounds sane, names unique.
+    pub fn validate_space(&self) -> Result<(), SpaceError> {
+        let mut names = Vec::new();
+        for root in &self.roots {
+            root.check_spec()?;
+            root.collect_names(&mut names);
+        }
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        for w in sorted.windows(2) {
+            if w[0] == w[1] {
+                return Err(SpaceError::DuplicateName(w[0].to_string()));
+            }
+        }
+        Ok(())
+    }
+
+    /// The configs *active* for a given assignment (parents first).
+    pub fn active_configs<'a>(&'a self, params: &ParameterDict) -> Vec<&'a ParameterConfig> {
+        let mut out = Vec::new();
+        fn walk<'a>(
+            cfg: &'a ParameterConfig,
+            params: &ParameterDict,
+            out: &mut Vec<&'a ParameterConfig>,
+        ) {
+            out.push(cfg);
+            if let Some(v) = params.get(&cfg.name) {
+                for (pv, child) in &cfg.children {
+                    if pv.iter().any(|p| p.matches(v)) {
+                        walk(child, params, out);
+                    }
+                }
+            }
+        }
+        for root in &self.roots {
+            walk(root, params, &mut out);
+        }
+        out
+    }
+
+    /// Validate a complete assignment: every active parameter present and
+    /// in range; no extraneous parameters.
+    pub fn validate(&self, params: &ParameterDict) -> Result<(), SpaceError> {
+        let active = self.active_configs(params);
+        for cfg in &active {
+            match params.get(&cfg.name) {
+                None => return Err(SpaceError::MissingParameter(cfg.name.clone())),
+                Some(v) => cfg.validate_value(v)?,
+            }
+        }
+        let active_names: Vec<&str> = active.iter().map(|c| c.name.as_str()).collect();
+        for name in params.names() {
+            if !active_names.contains(&name.as_str()) {
+                return Err(SpaceError::UnexpectedParameter(name.clone()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample a feasible assignment (respecting conditionality and scaling).
+    pub fn sample(&self, rng: &mut Pcg32) -> ParameterDict {
+        self.assemble(|cfg| cfg.sample_value(rng))
+    }
+
+    /// Build a feasible assignment by asking `valuer` for each parameter's
+    /// value, walking the conditional tree so only *active* children are
+    /// included. Deterministic valuers (grid indices, Halton draws,
+    /// designer mutations) get conditional-search support for free.
+    pub fn assemble<F: FnMut(&ParameterConfig) -> ParameterValue>(
+        &self,
+        mut valuer: F,
+    ) -> ParameterDict {
+        let mut params = ParameterDict::new();
+        fn walk<F: FnMut(&ParameterConfig) -> ParameterValue>(
+            cfg: &ParameterConfig,
+            valuer: &mut F,
+            params: &mut ParameterDict,
+        ) {
+            let v = valuer(cfg);
+            for (pv, child) in &cfg.children {
+                if pv.iter().any(|p| p.matches(&v)) {
+                    walk(child, valuer, params);
+                }
+            }
+            params.set(cfg.name.clone(), v);
+        }
+        for root in &self.roots {
+            walk(root, &mut valuer, &mut params);
+        }
+        params
+    }
+
+    /// All parameter configs, flattened (parents before children).
+    pub fn all_configs(&self) -> Vec<&ParameterConfig> {
+        let mut out = Vec::new();
+        fn walk<'a>(cfg: &'a ParameterConfig, out: &mut Vec<&'a ParameterConfig>) {
+            out.push(cfg);
+            for (_, c) in &cfg.children {
+                walk(c, out);
+            }
+        }
+        for root in &self.roots {
+            walk(root, &mut out);
+        }
+        out
+    }
+
+    /// Find a config by name anywhere in the forest.
+    pub fn get(&self, name: &str) -> Option<&ParameterConfig> {
+        self.all_configs().into_iter().find(|c| c.name == name)
+    }
+
+    /// Number of parameters (flattened).
+    pub fn num_parameters(&self) -> usize {
+        self.all_configs().len()
+    }
+
+    /// True if no parameter has conditional children.
+    pub fn is_flat(&self) -> bool {
+        self.all_configs().iter().all(|c| c.children.is_empty())
+    }
+
+    /// Total cardinality of the flattened space (None if any continuous).
+    pub fn cardinality(&self) -> Option<u64> {
+        self.all_configs()
+            .iter()
+            .try_fold(1u64, |acc, c| c.cardinality().map(|k| acc.saturating_mul(k)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's §4.2 example: tune model in {linear, dnn, random_forest},
+    /// each with its own child parameters.
+    pub fn conditional_space() -> SearchSpace {
+        let mut space = SearchSpace::new();
+        space.add_categorical("model", vec!["linear", "dnn", "random_forest"]);
+        space
+            .add_conditional(
+                "model",
+                vec!["dnn".into()],
+                ParameterConfig::integer("num_layers", 1, 5),
+            )
+            .unwrap();
+        space
+            .add_conditional(
+                "model",
+                vec!["dnn".into(), "linear".into()],
+                ParameterConfig::double("learning_rate", 1e-4, 1e-1).with_scale(ScaleType::Log),
+            )
+            .unwrap();
+        space
+            .add_conditional(
+                "model",
+                vec!["random_forest".into()],
+                ParameterConfig::integer("num_trees", 10, 1000),
+            )
+            .unwrap();
+        space
+    }
+
+    #[test]
+    fn builder_and_space_validation() {
+        let mut space = SearchSpace::new();
+        space
+            .add_float("lr", 1e-4, 1e-2, ScaleType::Log)
+            .add_int("layers", 1, 5)
+            .add_discrete("batch", vec![32.0, 16.0, 16.0, 64.0])
+            .add_categorical("opt", vec!["sgd", "adam"]);
+        space.validate_space().unwrap();
+        assert_eq!(space.num_parameters(), 4);
+        // Discrete values are sorted + deduped.
+        match &space.get("batch").unwrap().kind {
+            ParameterKind::Discrete { values } => assert_eq!(values, &vec![16.0, 32.0, 64.0]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn invalid_spaces_rejected() {
+        let mut s = SearchSpace::new();
+        s.add_float("x", 2.0, 1.0, ScaleType::Linear);
+        assert!(matches!(s.validate_space(), Err(SpaceError::BadBounds(..))));
+
+        let mut s = SearchSpace::new();
+        s.add_float("x", 0.0, 1.0, ScaleType::Log);
+        assert!(matches!(s.validate_space(), Err(SpaceError::BadLogBound(..))));
+
+        let mut s = SearchSpace::new();
+        s.add_categorical("c", vec![]);
+        assert!(matches!(s.validate_space(), Err(SpaceError::EmptyValues(..))));
+
+        let mut s = SearchSpace::new();
+        s.add_int("x", 0, 5).add_float("x", 0.0, 1.0, ScaleType::Linear);
+        assert!(matches!(s.validate_space(), Err(SpaceError::DuplicateName(..))));
+    }
+
+    #[test]
+    fn conditional_activation() {
+        let space = conditional_space();
+        space.validate_space().unwrap();
+
+        let mut dnn = ParameterDict::new();
+        dnn.set("model", "dnn").set("num_layers", 3i64).set("learning_rate", 0.01);
+        space.validate(&dnn).unwrap();
+
+        // random_forest must NOT carry dnn's params (paper: invariance).
+        let mut rf = ParameterDict::new();
+        rf.set("model", "random_forest").set("num_trees", 100i64);
+        space.validate(&rf).unwrap();
+
+        let mut bad = ParameterDict::new();
+        bad.set("model", "random_forest")
+            .set("num_trees", 100i64)
+            .set("num_layers", 3i64);
+        assert!(matches!(
+            space.validate(&bad),
+            Err(SpaceError::UnexpectedParameter(..))
+        ));
+
+        // Missing active child.
+        let mut missing = ParameterDict::new();
+        missing.set("model", "dnn").set("learning_rate", 0.01);
+        assert!(matches!(
+            space.validate(&missing),
+            Err(SpaceError::MissingParameter(..))
+        ));
+    }
+
+    #[test]
+    fn sampling_always_valid() {
+        let space = conditional_space();
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        let mut saw_dnn = false;
+        let mut saw_rf = false;
+        for _ in 0..300 {
+            let p = space.sample(&mut rng);
+            space.validate(&p).unwrap();
+            match p.get_str("model").unwrap() {
+                "dnn" => saw_dnn = true,
+                "random_forest" => saw_rf = true,
+                _ => {}
+            }
+        }
+        assert!(saw_dnn && saw_rf);
+    }
+
+    #[test]
+    fn value_validation() {
+        let cfg = ParameterConfig::double("x", 0.0, 1.0);
+        assert!(cfg.validate_value(&ParameterValue::F64(0.5)).is_ok());
+        assert!(cfg.validate_value(&ParameterValue::F64(1.5)).is_err());
+        assert!(cfg.validate_value(&ParameterValue::F64(f64::NAN)).is_err());
+        assert!(cfg.validate_value(&ParameterValue::Str("a".into())).is_err());
+
+        let cfg = ParameterConfig::discrete("d", vec![1.0, 2.0]);
+        assert!(cfg.validate_value(&ParameterValue::F64(2.0)).is_ok());
+        assert!(cfg.validate_value(&ParameterValue::I64(2)).is_ok());
+        assert!(cfg.validate_value(&ParameterValue::F64(1.5)).is_err());
+
+        let cfg = ParameterConfig::categorical("c", vec!["a", "b"]);
+        assert!(cfg.validate_value(&ParameterValue::Str("b".into())).is_ok());
+        assert!(cfg.validate_value(&ParameterValue::Str("z".into())).is_err());
+    }
+
+    #[test]
+    fn clamping_projects_to_feasible() {
+        let cfg = ParameterConfig::double("x", 0.0, 1.0);
+        assert_eq!(cfg.clamp_value(&ParameterValue::F64(7.0)), ParameterValue::F64(1.0));
+        let cfg = ParameterConfig::discrete("d", vec![1.0, 4.0, 10.0]);
+        assert_eq!(cfg.clamp_value(&ParameterValue::F64(5.5)), ParameterValue::F64(4.0));
+        let cfg = ParameterConfig::integer("i", -3, 3);
+        assert_eq!(cfg.clamp_value(&ParameterValue::I64(99)), ParameterValue::I64(3));
+        let cfg = ParameterConfig::categorical("c", vec!["a", "b"]);
+        assert_eq!(
+            cfg.clamp_value(&ParameterValue::Str("zzz".into())),
+            ParameterValue::Str("a".into())
+        );
+    }
+
+    #[test]
+    fn cardinality() {
+        let mut s = SearchSpace::new();
+        s.add_int("a", 1, 4).add_categorical("b", vec!["x", "y", "z"]);
+        assert_eq!(s.cardinality(), Some(12));
+        s.add_float("c", 0.0, 1.0, ScaleType::Linear);
+        assert_eq!(s.cardinality(), None);
+    }
+
+    #[test]
+    fn unknown_parent_rejected() {
+        let mut s = SearchSpace::new();
+        s.add_int("a", 1, 4);
+        let err = s
+            .add_conditional("nope", vec![ParameterValue::I64(1)], ParameterConfig::integer("b", 0, 1))
+            .unwrap_err();
+        assert!(matches!(err, SpaceError::UnknownParent(..)));
+    }
+}

@@ -1,0 +1,309 @@
+//! Study configuration (PyVizier `StudyConfig` + `MetricInformation`,
+//! Table 2; paper §4.1).
+
+use super::search_space::SearchSpace;
+use super::trial::Trial;
+use super::Metadata;
+use crate::wire::messages::{MetricGoal, ObservationNoise, StoppingConfig};
+
+/// Information about one objective metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricInformation {
+    pub name: String,
+    pub goal: MetricGoal,
+    pub min_value: f64,
+    pub max_value: f64,
+}
+
+impl MetricInformation {
+    pub fn maximize(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            goal: MetricGoal::Maximize,
+            min_value: f64::NEG_INFINITY,
+            max_value: f64::INFINITY,
+        }
+    }
+
+    pub fn minimize(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            goal: MetricGoal::Minimize,
+            min_value: f64::NEG_INFINITY,
+            max_value: f64::INFINITY,
+        }
+    }
+
+    pub fn with_range(mut self, min: f64, max: f64) -> Self {
+        self.min_value = min;
+        self.max_value = max;
+        self
+    }
+
+    /// Is `a` strictly better than `b` for this metric?
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        match self.goal {
+            MetricGoal::Maximize => a > b,
+            MetricGoal::Minimize => a < b,
+        }
+    }
+
+    /// Sign-normalized value: larger is always better.
+    pub fn maximization_value(&self, v: f64) -> f64 {
+        match self.goal {
+            MetricGoal::Maximize => v,
+            MetricGoal::Minimize => -v,
+        }
+    }
+}
+
+/// The suggestion algorithm for a study. `Custom` routes to a
+/// user-registered Pythia policy by name (paper §6).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    RandomSearch,
+    GridSearch,
+    QuasiRandomSearch,
+    HillClimb,
+    RegularizedEvolution,
+    Nsga2,
+    HarmonySearch,
+    Firefly,
+    GpBandit,
+    Custom(String),
+}
+
+impl Algorithm {
+    pub fn as_str(&self) -> &str {
+        match self {
+            Algorithm::RandomSearch => "RANDOM_SEARCH",
+            Algorithm::GridSearch => "GRID_SEARCH",
+            Algorithm::QuasiRandomSearch => "QUASI_RANDOM_SEARCH",
+            Algorithm::HillClimb => "HILL_CLIMB",
+            Algorithm::RegularizedEvolution => "REGULARIZED_EVOLUTION",
+            Algorithm::Nsga2 => "NSGA2",
+            Algorithm::HarmonySearch => "HARMONY_SEARCH",
+            Algorithm::Firefly => "FIREFLY",
+            Algorithm::GpBandit => "GP_BANDIT",
+            Algorithm::Custom(s) => s,
+        }
+    }
+
+    pub fn from_str(s: &str) -> Algorithm {
+        match s {
+            "RANDOM_SEARCH" | "" => Algorithm::RandomSearch,
+            "GRID_SEARCH" => Algorithm::GridSearch,
+            "QUASI_RANDOM_SEARCH" => Algorithm::QuasiRandomSearch,
+            "HILL_CLIMB" => Algorithm::HillClimb,
+            "REGULARIZED_EVOLUTION" => Algorithm::RegularizedEvolution,
+            "NSGA2" => Algorithm::Nsga2,
+            "HARMONY_SEARCH" => Algorithm::HarmonySearch,
+            "FIREFLY" => Algorithm::Firefly,
+            "GP_BANDIT" => Algorithm::GpBandit,
+            other => Algorithm::Custom(other.to_string()),
+        }
+    }
+}
+
+/// Full study configuration (search space + metrics + algorithm + knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudyConfig {
+    pub display_name: String,
+    pub search_space: SearchSpace,
+    pub metrics: Vec<MetricInformation>,
+    pub algorithm: Algorithm,
+    pub observation_noise: ObservationNoise,
+    pub stopping: StoppingConfig,
+    pub metadata: Metadata,
+    /// Seed for deterministic policies (0 = derive from study name).
+    pub seed: u64,
+}
+
+impl Default for StudyConfig {
+    fn default() -> Self {
+        Self {
+            display_name: String::new(),
+            search_space: SearchSpace::new(),
+            metrics: Vec::new(),
+            algorithm: Algorithm::RandomSearch,
+            observation_noise: ObservationNoise::Unspecified,
+            stopping: StoppingConfig::default(),
+            metadata: Metadata::new(),
+            seed: 0,
+        }
+    }
+}
+
+/// Errors from study-config validation.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ConfigError {
+    #[error("study must define at least one metric")]
+    NoMetrics,
+    #[error("duplicate metric name {0:?}")]
+    DuplicateMetric(String),
+    #[error("search space error: {0}")]
+    Space(#[from] super::search_space::SpaceError),
+}
+
+impl StudyConfig {
+    pub fn new(display_name: &str) -> Self {
+        Self {
+            display_name: display_name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_metric(&mut self, m: MetricInformation) -> &mut Self {
+        self.metrics.push(m);
+        self
+    }
+
+    pub fn is_single_objective(&self) -> bool {
+        self.metrics.len() == 1
+    }
+
+    pub fn metric(&self, name: &str) -> Option<&MetricInformation> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// The single objective metric (panics on multi-objective studies;
+    /// policies that support only single-objective call this).
+    pub fn single_objective(&self) -> &MetricInformation {
+        assert!(
+            self.is_single_objective(),
+            "study has {} metrics; expected exactly one",
+            self.metrics.len()
+        );
+        &self.metrics[0]
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.metrics.is_empty() {
+            return Err(ConfigError::NoMetrics);
+        }
+        let mut names: Vec<&str> = self.metrics.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            if w[0] == w[1] {
+                return Err(ConfigError::DuplicateMetric(w[0].to_string()));
+            }
+        }
+        self.search_space.validate_space()?;
+        Ok(())
+    }
+
+    /// Is trial `a` strictly better than `b` on the single objective?
+    /// Infeasible/incomplete trials are never better.
+    pub fn trial_better(&self, a: &Trial, b: &Trial) -> bool {
+        let m = self.single_objective();
+        match (a.final_metric(&m.name), b.final_metric(&m.name)) {
+            (Some(va), Some(vb)) => {
+                a.is_feasible_completed() && (!b.is_feasible_completed() || m.better(va, vb))
+            }
+            (Some(_), None) => a.is_feasible_completed(),
+            _ => false,
+        }
+    }
+
+    /// The best completed feasible trial on the single objective.
+    pub fn best_trial<'a>(&self, trials: impl IntoIterator<Item = &'a Trial>) -> Option<&'a Trial> {
+        let m = self.single_objective();
+        trials
+            .into_iter()
+            .filter(|t| t.is_feasible_completed() && t.final_metric(&m.name).is_some())
+            .max_by(|a, b| {
+                let va = m.maximization_value(a.final_metric(&m.name).unwrap());
+                let vb = m.maximization_value(b.final_metric(&m.name).unwrap());
+                va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyvizier::trial::{Measurement, TrialState};
+    use crate::pyvizier::ParameterDict;
+    use crate::wire::messages::ScaleType;
+
+    fn config() -> StudyConfig {
+        let mut c = StudyConfig::new("test");
+        c.search_space.add_float("lr", 1e-4, 1e-2, ScaleType::Log);
+        c.add_metric(MetricInformation::maximize("accuracy").with_range(0.0, 1.0));
+        c
+    }
+
+    fn completed(id: u64, acc: f64) -> Trial {
+        let mut t = Trial::new(id, ParameterDict::new());
+        t.state = TrialState::Completed;
+        t.final_measurement = Some(Measurement::new(1).with_metric("accuracy", acc));
+        t
+    }
+
+    #[test]
+    fn validation() {
+        config().validate().unwrap();
+        let mut c = StudyConfig::new("no-metrics");
+        assert_eq!(c.validate(), Err(ConfigError::NoMetrics));
+        c.add_metric(MetricInformation::maximize("a"));
+        c.add_metric(MetricInformation::minimize("a"));
+        assert!(matches!(c.validate(), Err(ConfigError::DuplicateMetric(_))));
+    }
+
+    #[test]
+    fn metric_direction() {
+        let max = MetricInformation::maximize("m");
+        assert!(max.better(2.0, 1.0));
+        assert!(!max.better(1.0, 2.0));
+        let min = MetricInformation::minimize("m");
+        assert!(min.better(1.0, 2.0));
+        assert_eq!(min.maximization_value(3.0), -3.0);
+    }
+
+    #[test]
+    fn best_trial_maximize() {
+        let c = config();
+        let trials = vec![completed(1, 0.3), completed(2, 0.9), completed(3, 0.5)];
+        assert_eq!(c.best_trial(&trials).unwrap().id, 2);
+    }
+
+    #[test]
+    fn best_trial_skips_infeasible_and_active() {
+        let c = config();
+        let mut infeasible = completed(1, 0.99);
+        infeasible.infeasibility_reason = Some("broken".into());
+        let mut active = completed(2, 0.95);
+        active.state = TrialState::Active;
+        let ok = completed(3, 0.5);
+        let trials = vec![infeasible, active, ok];
+        assert_eq!(c.best_trial(&trials).unwrap().id, 3);
+    }
+
+    #[test]
+    fn trial_better_handles_missing() {
+        let c = config();
+        let a = completed(1, 0.9);
+        let empty = Trial::new(2, ParameterDict::new());
+        assert!(c.trial_better(&a, &empty));
+        assert!(!c.trial_better(&empty, &a));
+    }
+
+    #[test]
+    fn algorithm_string_roundtrip() {
+        for a in [
+            Algorithm::RandomSearch,
+            Algorithm::GridSearch,
+            Algorithm::QuasiRandomSearch,
+            Algorithm::HillClimb,
+            Algorithm::RegularizedEvolution,
+            Algorithm::Nsga2,
+            Algorithm::HarmonySearch,
+            Algorithm::Firefly,
+            Algorithm::GpBandit,
+            Algorithm::Custom("MY_POLICY".into()),
+        ] {
+            assert_eq!(Algorithm::from_str(a.as_str()), a);
+        }
+        assert_eq!(Algorithm::from_str(""), Algorithm::RandomSearch);
+    }
+}

@@ -1,0 +1,203 @@
+//! Trials and measurements (PyVizier side; paper §4.1, Figure 3).
+
+use super::metadata::Metadata;
+use super::parameter::ParameterDict;
+use std::collections::BTreeMap;
+
+pub use crate::wire::messages::TrialState;
+
+/// One evaluation of the objective(s), possibly intermediate.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Measurement {
+    pub step: i64,
+    pub elapsed_secs: f64,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl Measurement {
+    pub fn new(step: i64) -> Self {
+        Self {
+            step,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_metric(mut self, name: &str, value: f64) -> Self {
+        self.metrics.insert(name.to_string(), value);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).copied()
+    }
+}
+
+/// A suggestion produced by a policy, before it is registered as a trial.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrialSuggestion {
+    pub parameters: ParameterDict,
+    pub metadata: Metadata,
+}
+
+impl TrialSuggestion {
+    pub fn new(parameters: ParameterDict) -> Self {
+        Self {
+            parameters,
+            metadata: Metadata::new(),
+        }
+    }
+}
+
+/// A trial: the input x plus (eventually) the objective value(s) f(x).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trial {
+    pub id: u64,
+    pub state: TrialState,
+    pub parameters: ParameterDict,
+    pub measurements: Vec<Measurement>,
+    pub final_measurement: Option<Measurement>,
+    /// Worker this trial is assigned to (paper §5 client_id semantics).
+    pub client_id: String,
+    pub infeasibility_reason: Option<String>,
+    pub metadata: Metadata,
+    pub created_ms: u64,
+    pub completed_ms: u64,
+}
+
+impl Default for Trial {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            state: TrialState::Requested,
+            parameters: ParameterDict::new(),
+            measurements: Vec::new(),
+            final_measurement: None,
+            client_id: String::new(),
+            infeasibility_reason: None,
+            metadata: Metadata::new(),
+            created_ms: 0,
+            completed_ms: 0,
+        }
+    }
+}
+
+impl Trial {
+    pub fn new(id: u64, parameters: ParameterDict) -> Self {
+        Self {
+            id,
+            parameters,
+            ..Default::default()
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self.state, TrialState::Completed | TrialState::Infeasible)
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, TrialState::Active | TrialState::Requested)
+    }
+
+    pub fn is_feasible_completed(&self) -> bool {
+        self.state == TrialState::Completed && self.infeasibility_reason.is_none()
+    }
+
+    /// The final value of a metric, falling back to the last intermediate
+    /// measurement if no final measurement was reported.
+    pub fn final_metric(&self, name: &str) -> Option<f64> {
+        if let Some(fm) = &self.final_measurement {
+            if let Some(v) = fm.get(name) {
+                return Some(v);
+            }
+        }
+        self.measurements.iter().rev().find_map(|m| m.get(name))
+    }
+
+    /// Best intermediate value of `name` seen so far (max if `maximize`).
+    pub fn best_intermediate(&self, name: &str, maximize: bool) -> Option<f64> {
+        let it = self.measurements.iter().filter_map(|m| m.get(name));
+        if maximize {
+            it.fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+        } else {
+            it.fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v))))
+        }
+    }
+
+    /// Running average of intermediate values up to and including `step`
+    /// (the Median stopping rule's notion of 'performance', Appendix B.1).
+    pub fn running_average_until(&self, name: &str, step: i64) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .measurements
+            .iter()
+            .filter(|m| m.step <= step)
+            .filter_map(|m| m.get(name))
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    pub fn last_step(&self) -> Option<i64> {
+        self.measurements.iter().map(|m| m.step).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve_trial() -> Trial {
+        let mut t = Trial::new(1, ParameterDict::new());
+        for (step, acc) in [(1, 0.2), (2, 0.5), (3, 0.4), (4, 0.8)] {
+            t.measurements.push(Measurement::new(step).with_metric("acc", acc));
+        }
+        t
+    }
+
+    #[test]
+    fn final_metric_prefers_final_measurement() {
+        let mut t = curve_trial();
+        assert_eq!(t.final_metric("acc"), Some(0.8)); // falls back to last
+        t.final_measurement = Some(Measurement::new(5).with_metric("acc", 0.9));
+        assert_eq!(t.final_metric("acc"), Some(0.9));
+        assert_eq!(t.final_metric("missing"), None);
+    }
+
+    #[test]
+    fn best_intermediate_directions() {
+        let t = curve_trial();
+        assert_eq!(t.best_intermediate("acc", true), Some(0.8));
+        assert_eq!(t.best_intermediate("acc", false), Some(0.2));
+        assert_eq!(t.best_intermediate("nope", true), None);
+    }
+
+    #[test]
+    fn running_average() {
+        let t = curve_trial();
+        assert!((t.running_average_until("acc", 2).unwrap() - 0.35).abs() < 1e-12);
+        assert!((t.running_average_until("acc", 4).unwrap() - 0.475).abs() < 1e-12);
+        assert_eq!(t.running_average_until("acc", 0), None);
+    }
+
+    #[test]
+    fn state_helpers() {
+        let mut t = Trial::new(1, ParameterDict::new());
+        assert!(t.is_active());
+        assert!(!t.is_completed());
+        t.state = TrialState::Completed;
+        assert!(t.is_completed());
+        assert!(t.is_feasible_completed());
+        t.infeasibility_reason = Some("nan".into());
+        assert!(!t.is_feasible_completed());
+        t.state = TrialState::Infeasible;
+        assert!(t.is_completed());
+    }
+
+    #[test]
+    fn last_step() {
+        assert_eq!(curve_trial().last_step(), Some(4));
+        assert_eq!(Trial::new(1, ParameterDict::new()).last_step(), None);
+    }
+}

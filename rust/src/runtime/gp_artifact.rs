@@ -1,0 +1,100 @@
+//! GP backend executing the AOT-compiled JAX/Pallas artifact via PJRT.
+//!
+//! Implements [`crate::policies::gp_bandit::GpBackend`] with the same
+//! semantics as the pure-Rust backend (validated against it in
+//! `rust/tests/artifact_parity.rs`): inputs are padded to the artifact's
+//! static shapes — extra rows are masked out (row mask), extra dims are
+//! zero columns (distance-preserving), extra candidates are discarded on
+//! the way out.
+
+use super::registry::{ArtifactRegistry, VariantKey};
+use crate::policies::gp_bandit::{GpBackend, UCB_BETA};
+use crate::pythia::policy::PolicyError;
+use crate::runtime::pjrt::TensorInput;
+
+/// PJRT-backed GP scorer.
+pub struct GpArtifactBackend {
+    registry: &'static ArtifactRegistry,
+}
+
+impl GpArtifactBackend {
+    /// Use the process-global registry (None if `make artifacts` has not
+    /// been run — callers fall back to the Rust backend).
+    pub fn from_global() -> Option<Self> {
+        ArtifactRegistry::global().map(|registry| Self { registry })
+    }
+
+    pub fn new(registry: &'static ArtifactRegistry) -> Self {
+        Self { registry }
+    }
+
+    pub fn variants(&self) -> Vec<VariantKey> {
+        self.registry.variant_keys()
+    }
+}
+
+impl GpBackend for GpArtifactBackend {
+    fn score(
+        &self,
+        x_train: &[Vec<f64>],
+        y_train: &[f64],
+        candidates: &[Vec<f64>],
+        noise_high: bool,
+    ) -> Result<Vec<f64>, PolicyError> {
+        let internal = |e: anyhow::Error| PolicyError::Internal(format!("pjrt backend: {e}"));
+        let n_real = x_train.len();
+        let d_real = x_train.first().map(|r| r.len()).unwrap_or(1);
+        let m_real = candidates.len();
+        let key = self
+            .registry
+            .pick(n_real, d_real, m_real)
+            .ok_or_else(|| {
+                PolicyError::Unsupported(format!(
+                    "no artifact variant fits n={n_real} d={d_real} m={m_real} \
+                     (available: {:?})",
+                    self.registry.variant_keys()
+                ))
+            })?;
+        // Pad x (n_pad x d_pad), y (n_pad), mask (n_pad), candidates (m x d_pad).
+        let mut x = vec![0.0f64; key.n * key.d];
+        for (i, row) in x_train.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                x[i * key.d + j] = v;
+            }
+        }
+        let mut y = vec![0.0f64; key.n];
+        y[..n_real].copy_from_slice(y_train);
+        let mut mask = vec![0.0f64; key.n];
+        for m in mask.iter_mut().take(n_real) {
+            *m = 1.0;
+        }
+        let mut cand = vec![0.0f64; key.m * key.d];
+        for (i, row) in candidates.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                cand[i * key.d + j] = v;
+            }
+        }
+        let noise = if noise_high { 1e-2 } else { 1e-6 };
+
+        let out = self
+            .registry
+            .execute(
+                key,
+                vec![
+                    TensorInput::mat(x, key.n, key.d),
+                    TensorInput::vec1(y),
+                    TensorInput::vec1(mask),
+                    TensorInput::mat(cand, key.m, key.d),
+                    TensorInput::scalar(noise),
+                    TensorInput::scalar(UCB_BETA),
+                ],
+            )
+            .map_err(internal)?;
+        // Discard scores for padded candidate slots.
+        Ok(out.into_iter().take(m_real).collect())
+    }
+
+    fn backend_name(&self) -> &str {
+        "pjrt-artifact-gp"
+    }
+}

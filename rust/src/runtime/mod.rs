@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust hot path. Python never runs at request time — the
+//! artifacts are produced once by `make artifacts`
+//! (python/compile/aot.py) and this module is self-contained after that.
+
+pub mod gp_artifact;
+pub mod pjrt;
+pub mod registry;
+
+pub use gp_artifact::GpArtifactBackend;
+pub use pjrt::{PjrtExecutable, PjrtRuntime};
+pub use registry::{ArtifactRegistry, VariantKey};

@@ -1,0 +1,111 @@
+//! Thin wrapper over the `xla` crate's PJRT client: HLO text ->
+//! compiled executable -> execution with f32 buffers.
+//!
+//! The xla crate's handles are `!Send` (Rc + raw FFI pointers), so these
+//! types are confined to the dedicated PJRT worker thread spawned by
+//! [`super::registry::ArtifactRegistry`]; the rest of the system talks to
+//! it through a channel.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`); serialized
+//! protos from jax >= 0.5 carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects. See /opt/xla-example/README.md and DESIGN.md §3.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client (one per worker thread).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<PjrtExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(PjrtExecutable { exe })
+    }
+}
+
+/// One compiled executable (worker-thread local).
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An owned f32 input tensor (f64 storage for convenience; converted at
+/// the FFI boundary). `dims` empty = scalar.
+#[derive(Debug, Clone)]
+pub struct TensorInput {
+    pub data: Vec<f64>,
+    pub dims: Vec<usize>,
+}
+
+impl TensorInput {
+    pub fn scalar(v: f64) -> Self {
+        Self {
+            data: vec![v],
+            dims: vec![],
+        }
+    }
+
+    pub fn vec1(data: Vec<f64>) -> Self {
+        let dims = vec![data.len()];
+        Self { data, dims }
+    }
+
+    pub fn mat(data: Vec<f64>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            data,
+            dims: vec![rows, cols],
+        }
+    }
+}
+
+impl PjrtExecutable {
+    /// Execute with f32 tensors; the artifact returns a 1-tuple whose
+    /// element is flattened into the result vector.
+    pub fn run_f32(&self, inputs: &[TensorInput]) -> Result<Vec<f64>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let expected: usize = input.dims.iter().product();
+            anyhow::ensure!(
+                expected == input.data.len(),
+                "input size {} != dims {:?}",
+                input.data.len(),
+                input.dims
+            );
+            let f32s: Vec<f32> = input.data.iter().map(|&v| v as f32).collect();
+            let lit = xla::Literal::vec1(&f32s);
+            let dims_i64: Vec<i64> = input.dims.iter().map(|&d| d as i64).collect();
+            let lit = if input.dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims_i64)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(values.into_iter().map(|v| v as f64).collect())
+    }
+}

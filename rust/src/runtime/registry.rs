@@ -1,0 +1,230 @@
+//! Artifact registry: discovers compiled `gp_suggest` variants from
+//! `artifacts/manifest.json` and executes them on a dedicated PJRT worker
+//! thread (the xla crate's handles are `!Send`; confining them to one
+//! thread gives the rest of the system a `Send + Sync` interface).
+
+use super::pjrt::{PjrtRuntime, TensorInput};
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Mutex, OnceLock};
+
+/// A padded-shape variant key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantKey {
+    pub n: usize,
+    pub d: usize,
+    pub m: usize,
+}
+
+struct Job {
+    key: VariantKey,
+    inputs: Vec<TensorInput>,
+    reply: mpsc::Sender<Result<Vec<f64>, String>>,
+}
+
+/// Discovered artifacts + the PJRT worker channel.
+pub struct ArtifactRegistry {
+    variants: Vec<VariantKey>,
+    sender: Mutex<mpsc::Sender<Job>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry at `dir` (expects `manifest.json` from aot.py)
+    /// and spawn the PJRT worker.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let mut table: Vec<(VariantKey, String)> = Vec::new();
+        for v in doc
+            .get("variants")
+            .and_then(Json::as_arr)
+            .context("manifest missing variants")?
+        {
+            let get = |k: &str| -> Result<usize> {
+                Ok(v.get(k)
+                    .and_then(Json::as_i64)
+                    .with_context(|| format!("variant missing {k}"))? as usize)
+            };
+            let key = VariantKey {
+                n: get("n")?,
+                d: get("d")?,
+                m: get("m")?,
+            };
+            let file = v
+                .get("file")
+                .and_then(Json::as_str)
+                .context("variant missing file")?
+                .to_string();
+            table.push((key, file));
+        }
+        table.sort_by_key(|(k, _)| *k);
+        let variants: Vec<VariantKey> = table.iter().map(|(k, _)| *k).collect();
+
+        // Spawn the worker that owns all PJRT state. Startup errors are
+        // reported through a handshake channel.
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        std::thread::Builder::new()
+            .name("pjrt-worker".into())
+            .spawn(move || pjrt_worker(dir, table, receiver, ready_tx))
+            .context("spawn pjrt worker")?;
+        ready_rx
+            .recv()
+            .context("pjrt worker handshake")?
+            .map_err(|e| anyhow::anyhow!("pjrt init: {e}"))?;
+        Ok(Self {
+            variants,
+            sender: Mutex::new(sender),
+        })
+    }
+
+    /// The process-wide registry rooted at `$OSSVIZIER_ARTIFACTS` or
+    /// `./artifacts` (None if artifacts have not been built).
+    pub fn global() -> Option<&'static ArtifactRegistry> {
+        static GLOBAL: OnceLock<Option<ArtifactRegistry>> = OnceLock::new();
+        GLOBAL
+            .get_or_init(|| {
+                let dir = std::env::var("OSSVIZIER_ARTIFACTS")
+                    .unwrap_or_else(|_| "artifacts".to_string());
+                ArtifactRegistry::open(dir).ok()
+            })
+            .as_ref()
+    }
+
+    pub fn variant_keys(&self) -> Vec<VariantKey> {
+        self.variants.clone()
+    }
+
+    /// Smallest variant with `n >= n_real`, `d >= d_real`, `m >= m_real`.
+    pub fn pick(&self, n_real: usize, d_real: usize, m_real: usize) -> Option<VariantKey> {
+        self.variants
+            .iter()
+            .copied()
+            .filter(|k| k.n >= n_real && k.d >= d_real && k.m >= m_real)
+            .min_by_key(|k| (k.n, k.d, k.m))
+    }
+
+    /// Execute a variant with the given inputs (blocks on the worker).
+    pub fn execute(&self, key: VariantKey, inputs: Vec<TensorInput>) -> Result<Vec<f64>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.sender
+            .lock()
+            .unwrap()
+            .send(Job {
+                key,
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("pjrt worker gone"))?;
+        reply_rx
+            .recv()
+            .context("pjrt worker dropped the reply")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// The worker: owns the PJRT client and compiled executables.
+fn pjrt_worker(
+    dir: PathBuf,
+    table: Vec<(VariantKey, String)>,
+    jobs: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let runtime = match PjrtRuntime::cpu() {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut compiled: HashMap<VariantKey, super::pjrt::PjrtExecutable> = HashMap::new();
+    while let Ok(job) = jobs.recv() {
+        let result = (|| -> Result<Vec<f64>, String> {
+            if !compiled.contains_key(&job.key) {
+                let file = table
+                    .iter()
+                    .find(|(k, _)| *k == job.key)
+                    .map(|(_, f)| f.clone())
+                    .ok_or_else(|| format!("unknown variant {:?}", job.key))?;
+                let exe = runtime
+                    .load_hlo_text(&dir.join(file))
+                    .map_err(|e| e.to_string())?;
+                compiled.insert(job.key, exe);
+            }
+            compiled[&job.key]
+                .run_f32(&job.inputs)
+                .map_err(|e| e.to_string())
+        })();
+        let _ = job.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &std::path::Path, variants: &[(usize, usize, usize)]) {
+        let items: Vec<String> = variants
+            .iter()
+            .map(|(n, d, m)| {
+                format!(
+                    r#"{{"n": {n}, "d": {d}, "m": {m}, "file": "gp_suggest_n{n}_d{d}_m{m}.hlo.txt"}}"#
+                )
+            })
+            .collect();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(r#"{{"model": "gp_suggest", "variants": [{}]}}"#, items.join(",")),
+        )
+        .unwrap();
+    }
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ossvizier-registry-{}-{}",
+            std::process::id(),
+            crate::util::id::next_uid()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn picks_smallest_fitting_variant() {
+        let dir = tmpdir();
+        write_manifest(&dir, &[(32, 8, 256), (128, 8, 256), (256, 16, 256)]);
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.variant_keys().len(), 3);
+        assert_eq!(reg.pick(10, 4, 256), Some(VariantKey { n: 32, d: 8, m: 256 }));
+        assert_eq!(reg.pick(100, 8, 256), Some(VariantKey { n: 128, d: 8, m: 256 }));
+        assert_eq!(reg.pick(100, 9, 256), Some(VariantKey { n: 256, d: 16, m: 256 }));
+        assert_eq!(reg.pick(1000, 4, 256), None, "too many rows for any variant");
+        assert_eq!(reg.pick(10, 99, 256), None, "too many dims");
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = tmpdir();
+        assert!(ArtifactRegistry::open(&dir).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_execution_is_error() {
+        let dir = tmpdir();
+        write_manifest(&dir, &[(32, 8, 256)]);
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let err = reg
+            .execute(VariantKey { n: 1, d: 1, m: 1 }, vec![])
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown variant"), "{err}");
+    }
+}

@@ -1,0 +1,502 @@
+//! The Vizier service implementation: every RPC method of §3.2 over a
+//! pluggable datastore and Pythia endpoint.
+//!
+//! The suggestion workflow reproduces the paper exactly:
+//! 1. `suggest_trials` persists an [`OperationProto`] and enqueues the
+//!    policy run on a worker thread, returning the operation immediately.
+//! 2. Clients poll `get_operation` until `done`.
+//! 3. The worker runs the Pythia policy, registers the suggested trials
+//!    (state ACTIVE, assigned to the requesting `client_id`), persists any
+//!    designer metadata, and marks the operation done.
+//! 4. On startup, [`VizierService::resume_pending_operations`] re-enqueues
+//!    operations that were interrupted by a crash (server-side fault
+//!    tolerance).
+//! 5. ACTIVE trials already assigned to a client are returned *before* new
+//!    suggestions are computed (client-side fault tolerance, §5).
+
+use crate::datastore::{Datastore, DsError};
+use crate::pythia::policy::{EarlyStopRequest, SuggestRequest};
+use crate::pythia::runner::PythiaEndpoint;
+use crate::pyvizier::{converters, StudyConfig};
+use crate::service::metrics::ServiceMetrics;
+use crate::util::threadpool::ThreadPool;
+use crate::util::time::epoch_millis;
+use crate::wire::framing::Status;
+use crate::wire::messages::*;
+use std::sync::{Arc, Mutex};
+
+/// Service-level error: an RPC status plus message.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("{status:?}: {message}")]
+pub struct ApiError {
+    pub status: Status,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Self {
+            status: Status::InvalidArgument,
+            message: msg.into(),
+        }
+    }
+
+    pub fn failed_precondition(msg: impl Into<String>) -> Self {
+        Self {
+            status: Status::FailedPrecondition,
+            message: msg.into(),
+        }
+    }
+}
+
+impl From<DsError> for ApiError {
+    fn from(e: DsError) -> Self {
+        let status = match &e {
+            DsError::StudyNotFound(_) | DsError::TrialNotFound(..) | DsError::OperationNotFound(_) => {
+                Status::NotFound
+            }
+            DsError::StudyExists(_) => Status::FailedPrecondition,
+            DsError::Invalid(_) => Status::InvalidArgument,
+            DsError::Storage(_) => Status::Internal,
+        };
+        Self {
+            status,
+            message: e.to_string(),
+        }
+    }
+}
+
+pub type ApiResult<T> = Result<T, ApiError>;
+
+/// The OSS Vizier API service.
+pub struct VizierService {
+    ds: Arc<dyn Datastore>,
+    pythia: Arc<dyn PythiaEndpoint>,
+    workers: Mutex<Option<ThreadPool>>,
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl VizierService {
+    /// Create a service over a datastore and Pythia endpoint with
+    /// `workers` threads for policy computations.
+    pub fn new(ds: Arc<dyn Datastore>, pythia: Arc<dyn PythiaEndpoint>, workers: usize) -> Arc<Self> {
+        Arc::new(Self {
+            ds,
+            pythia,
+            workers: Mutex::new(Some(ThreadPool::new(workers.max(1)))),
+            metrics: Arc::new(ServiceMetrics::new()),
+        })
+    }
+
+    pub fn datastore(&self) -> &Arc<dyn Datastore> {
+        &self.ds
+    }
+
+    /// Drain in-flight operations and stop the worker pool.
+    pub fn shutdown(&self) {
+        if let Some(pool) = self.workers.lock().unwrap().take() {
+            pool.shutdown();
+        }
+    }
+
+    fn enqueue(self: &Arc<Self>, job: impl FnOnce(&VizierService) + Send + 'static) {
+        let me = Arc::clone(self);
+        let guard = self.workers.lock().unwrap();
+        if let Some(pool) = guard.as_ref() {
+            pool.execute(move || job(&me));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Studies
+    // ------------------------------------------------------------------
+
+    pub fn create_study(&self, req: CreateStudyRequest) -> ApiResult<StudyResponse> {
+        let mut study = req.study;
+        // Validate through the PyVizier layer before storing.
+        let config = converters::study_config_from_proto(&study.display_name, &study.spec);
+        config
+            .validate()
+            .map_err(|e| ApiError::invalid(format!("invalid study config: {e}")))?;
+        study.created_ms = epoch_millis();
+        study.state = StudyState::Active;
+        let stored = self.ds.create_study(study)?;
+        Ok(StudyResponse { study: stored })
+    }
+
+    pub fn get_study(&self, req: GetStudyRequest) -> ApiResult<StudyResponse> {
+        Ok(StudyResponse {
+            study: self.ds.get_study(&req.name)?,
+        })
+    }
+
+    pub fn lookup_study(&self, req: LookupStudyRequest) -> ApiResult<StudyResponse> {
+        Ok(StudyResponse {
+            study: self.ds.lookup_study(&req.display_name)?,
+        })
+    }
+
+    pub fn list_studies(&self, _req: ListStudiesRequest) -> ApiResult<ListStudiesResponse> {
+        Ok(ListStudiesResponse {
+            studies: self.ds.list_studies()?,
+        })
+    }
+
+    pub fn delete_study(&self, req: DeleteStudyRequest) -> ApiResult<EmptyResponse> {
+        self.ds.delete_study(&req.name)?;
+        Ok(EmptyResponse::default())
+    }
+
+    // ------------------------------------------------------------------
+    // Suggestions (long-running operations)
+    // ------------------------------------------------------------------
+
+    pub fn suggest_trials(self: &Arc<Self>, req: SuggestTrialsRequest) -> ApiResult<OperationResponse> {
+        if req.count == 0 {
+            return Err(ApiError::invalid("count must be >= 1"));
+        }
+        let study = self.ds.get_study(&req.study_name)?;
+
+        // Client-side fault tolerance (§5): if this client already has
+        // ACTIVE trials, hand them back instead of generating new ones.
+        let assigned: Vec<TrialProto> = self
+            .ds
+            .list_trials(&req.study_name)?
+            .into_iter()
+            .filter(|t| {
+                t.client_id == req.client_id
+                    && matches!(t.state, TrialState::Active | TrialState::Requested)
+            })
+            .take(req.count as usize)
+            .collect();
+        if !assigned.is_empty() {
+            let op = self.ds.create_operation(OperationProto {
+                kind: OperationKind::SuggestTrials,
+                study_name: req.study_name.clone(),
+                client_id: req.client_id.clone(),
+                done: true,
+                trials: assigned,
+                count: req.count,
+                created_ms: epoch_millis(),
+                ..Default::default()
+            })?;
+            return Ok(OperationResponse { operation: op });
+        }
+
+        // Persist the operation first (durability), then enqueue.
+        let op = self.ds.create_operation(OperationProto {
+            kind: OperationKind::SuggestTrials,
+            study_name: req.study_name.clone(),
+            client_id: req.client_id.clone(),
+            done: false,
+            count: req.count,
+            created_ms: epoch_millis(),
+            ..Default::default()
+        })?;
+        let op_name = op.name.clone();
+        let config = converters::study_config_from_proto(&study.display_name, &study.spec);
+        self.enqueue(move |svc| svc.run_suggest_operation(&op_name, &config));
+        Ok(OperationResponse { operation: op })
+    }
+
+    /// Execute one persisted SuggestTrials operation (worker thread).
+    fn run_suggest_operation(&self, op_name: &str, config: &StudyConfig) {
+        let Ok(mut op) = self.ds.get_operation(op_name) else {
+            return;
+        };
+        if op.done {
+            return; // raced with a duplicate resume
+        }
+        let request = SuggestRequest {
+            study_name: op.study_name.clone(),
+            study_config: config.clone(),
+            count: op.count as usize,
+            client_id: op.client_id.clone(),
+        };
+        match self.pythia.run_suggest(&request) {
+            Ok(decision) => {
+                // Register suggestions as ACTIVE trials assigned to the client.
+                let mut registered = Vec::with_capacity(decision.suggestions.len());
+                for s in decision.suggestions {
+                    let mut trial = TrialProto {
+                        state: TrialState::Active,
+                        client_id: op.client_id.clone(),
+                        created_ms: epoch_millis(),
+                        ..Default::default()
+                    };
+                    trial.parameters = s
+                        .parameters
+                        .iter()
+                        .map(|(k, v)| TrialParameter {
+                            parameter_id: k.clone(),
+                            value: converters::value_to_proto(v),
+                        })
+                        .collect();
+                    trial.metadata = converters::metadata_to_proto(&s.metadata);
+                    match self.ds.create_trial(&op.study_name, trial) {
+                        Ok(t) => registered.push(t),
+                        Err(e) => {
+                            op.error = format!("failed to register trial: {e}");
+                            break;
+                        }
+                    }
+                }
+                // Persist designer state atomically with completion.
+                if let Some(md) = decision.study_metadata {
+                    let updates: Vec<UnitMetadataUpdate> = md
+                        .iter()
+                        .map(|(ns, k, v)| UnitMetadataUpdate {
+                            trial_id: 0,
+                            item: Some(MetadataItem {
+                                namespace: ns.to_string(),
+                                key: k.to_string(),
+                                value: v.to_vec(),
+                            }),
+                        })
+                        .collect();
+                    if let Err(e) = self.ds.update_metadata(&op.study_name, &updates) {
+                        op.error = format!("failed to persist designer state: {e}");
+                    }
+                }
+                op.trials = registered;
+            }
+            Err(e) => {
+                op.error = format!("policy failed: {e}");
+                self.metrics.record_error();
+            }
+        }
+        op.done = true;
+        let _ = self.ds.update_operation(op);
+    }
+
+    pub fn get_operation(&self, req: GetOperationRequest) -> ApiResult<OperationResponse> {
+        Ok(OperationResponse {
+            operation: self.ds.get_operation(&req.name)?,
+        })
+    }
+
+    /// Re-enqueue every non-done operation (call at startup; paper §3.2
+    /// server-side fault tolerance).
+    pub fn resume_pending_operations(self: &Arc<Self>) -> ApiResult<usize> {
+        let pending = self.ds.pending_operations()?;
+        let n = pending.len();
+        for op in pending {
+            let study = self.ds.get_study(&op.study_name)?;
+            let config = converters::study_config_from_proto(&study.display_name, &study.spec);
+            let name = op.name.clone();
+            match op.kind {
+                OperationKind::SuggestTrials => {
+                    self.enqueue(move |svc| svc.run_suggest_operation(&name, &config));
+                }
+                OperationKind::EarlyStopping => {
+                    self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    // ------------------------------------------------------------------
+    // Measurements / completion
+    // ------------------------------------------------------------------
+
+    pub fn add_measurement(&self, req: AddMeasurementRequest) -> ApiResult<TrialResponse> {
+        let m = req.measurement;
+        let trial = self
+            .ds
+            .mutate_trial(&req.study_name, req.trial_id, &mut |t| {
+                if matches!(t.state, TrialState::Completed | TrialState::Infeasible) {
+                    return Err(DsError::Invalid(format!(
+                        "trial {} is already completed",
+                        t.id
+                    )));
+                }
+                t.measurements.push(m.clone());
+                Ok(())
+            })?;
+        Ok(TrialResponse { trial })
+    }
+
+    pub fn complete_trial(&self, req: CompleteTrialRequest) -> ApiResult<TrialResponse> {
+        let trial = self
+            .ds
+            .mutate_trial(&req.study_name, req.trial_id, &mut |t| {
+                if matches!(t.state, TrialState::Completed | TrialState::Infeasible) {
+                    return Err(DsError::Invalid(format!(
+                        "trial {} is already completed",
+                        t.id
+                    )));
+                }
+                if req.infeasible {
+                    t.state = TrialState::Infeasible;
+                    t.infeasibility_reason = if req.infeasibility_reason.is_empty() {
+                        "infeasible".to_string()
+                    } else {
+                        req.infeasibility_reason.clone()
+                    };
+                } else {
+                    t.state = TrialState::Completed;
+                    if let Some(fm) = &req.final_measurement {
+                        t.final_measurement = Some(fm.clone());
+                    } else if let Some(last) = t.measurements.last() {
+                        // Paper semantics: completing without an explicit
+                        // final measurement promotes the last intermediate.
+                        t.final_measurement = Some(last.clone());
+                    } else {
+                        return Err(DsError::Invalid(
+                            "cannot complete a trial with no measurements; \
+                             mark it infeasible instead"
+                                .into(),
+                        ));
+                    }
+                }
+                t.completed_ms = epoch_millis();
+                Ok(())
+            })?;
+        Ok(TrialResponse { trial })
+    }
+
+    // ------------------------------------------------------------------
+    // Trials
+    // ------------------------------------------------------------------
+
+    pub fn list_trials(&self, req: ListTrialsRequest) -> ApiResult<ListTrialsResponse> {
+        Ok(ListTrialsResponse {
+            trials: self.ds.list_trials(&req.study_name)?,
+        })
+    }
+
+    pub fn get_trial(&self, req: GetTrialRequest) -> ApiResult<TrialResponse> {
+        Ok(TrialResponse {
+            trial: self.ds.get_trial(&req.study_name, req.trial_id)?,
+        })
+    }
+
+    pub fn delete_trial(&self, req: DeleteTrialRequest) -> ApiResult<EmptyResponse> {
+        self.ds.delete_trial(&req.study_name, req.trial_id)?;
+        Ok(EmptyResponse::default())
+    }
+
+    pub fn stop_trial(&self, req: StopTrialRequest) -> ApiResult<TrialResponse> {
+        let trial = self
+            .ds
+            .mutate_trial(&req.study_name, req.trial_id, &mut |t| {
+                if matches!(t.state, TrialState::Active | TrialState::Requested) {
+                    t.state = TrialState::Stopping;
+                }
+                Ok(())
+            })?;
+        Ok(TrialResponse { trial })
+    }
+
+    pub fn list_optimal_trials(
+        &self,
+        req: ListOptimalTrialsRequest,
+    ) -> ApiResult<ListTrialsResponse> {
+        let study = self.ds.get_study(&req.study_name)?;
+        let config = converters::study_config_from_proto(&study.display_name, &study.spec);
+        let trials: Vec<crate::pyvizier::Trial> = self
+            .ds
+            .list_trials(&req.study_name)?
+            .iter()
+            .map(converters::trial_from_proto)
+            .collect();
+        let optimal = crate::pyvizier::pareto::optimal_trials(&trials, &config.metrics);
+        Ok(ListTrialsResponse {
+            trials: optimal.iter().map(|t| converters::trial_to_proto(t)).collect(),
+        })
+    }
+
+    pub fn update_metadata(&self, req: UpdateMetadataRequest) -> ApiResult<EmptyResponse> {
+        self.ds.update_metadata(&req.study_name, &req.updates)?;
+        Ok(EmptyResponse::default())
+    }
+
+    // ------------------------------------------------------------------
+    // Early stopping (long-running operation, §3.2)
+    // ------------------------------------------------------------------
+
+    pub fn check_early_stopping(
+        self: &Arc<Self>,
+        req: CheckEarlyStoppingRequest,
+    ) -> ApiResult<OperationResponse> {
+        let study = self.ds.get_study(&req.study_name)?;
+        // Trial must exist and be running.
+        let trial = self.ds.get_trial(&req.study_name, req.trial_id)?;
+        if !matches!(trial.state, TrialState::Active | TrialState::Requested | TrialState::Stopping) {
+            return Err(ApiError::failed_precondition(format!(
+                "trial {} is not running",
+                req.trial_id
+            )));
+        }
+        let op = self.ds.create_operation(OperationProto {
+            kind: OperationKind::EarlyStopping,
+            study_name: req.study_name.clone(),
+            trial_id: req.trial_id,
+            done: false,
+            created_ms: epoch_millis(),
+            ..Default::default()
+        })?;
+        let name = op.name.clone();
+        let config = converters::study_config_from_proto(&study.display_name, &study.spec);
+        self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
+        Ok(OperationResponse { operation: op })
+    }
+
+    fn run_early_stopping_operation(&self, op_name: &str, config: &StudyConfig) {
+        let Ok(mut op) = self.ds.get_operation(op_name) else {
+            return;
+        };
+        if op.done {
+            return;
+        }
+        let decision = (|| {
+            // Built-in automated stopping rule, if configured (Appendix B.1).
+            if config.stopping.kind != StoppingKind::None {
+                let trial = self
+                    .ds
+                    .get_trial(&op.study_name, op.trial_id)
+                    .map(|t| converters::trial_from_proto(&t))
+                    .map_err(|e| e.to_string())?;
+                let completed: Vec<crate::pyvizier::Trial> = self
+                    .ds
+                    .list_trials(&op.study_name)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(converters::trial_from_proto)
+                    .filter(|t| t.is_completed())
+                    .collect();
+                Ok(crate::stopping::decide(config, &trial, &completed))
+            } else {
+                // Otherwise delegate to the study's policy.
+                self.pythia
+                    .run_early_stop(&EarlyStopRequest {
+                        study_name: op.study_name.clone(),
+                        study_config: config.clone(),
+                        trial_id: op.trial_id,
+                    })
+                    .map_err(|e| e.to_string())
+            }
+        })();
+        match decision {
+            Ok(d) => {
+                op.should_stop = d.should_stop;
+                if d.should_stop {
+                    // Move the trial to STOPPING so the worker sees it.
+                    let _ = self.ds.mutate_trial(&op.study_name, op.trial_id, &mut |t| {
+                        if matches!(t.state, TrialState::Active | TrialState::Requested) {
+                            t.state = TrialState::Stopping;
+                        }
+                        Ok(())
+                    });
+                }
+            }
+            Err(e) => {
+                op.error = e;
+                self.metrics.record_error();
+            }
+        }
+        op.done = true;
+        let _ = self.ds.update_operation(op);
+    }
+}

@@ -1,0 +1,151 @@
+//! Service instrumentation: per-method request counters and latency
+//! histograms (paper §2: "the service architecture ... can collect data
+//! and metrics over time").
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Log-spaced latency histogram (microseconds).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    /// Bucket upper bounds: 1us * 2^i, 32 buckets (~= up to 1 hour).
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record(&self, micros: u64) {
+        let idx = (64 - micros.max(1).leading_zeros() as usize).min(31);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_micros.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_micros(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << 31
+    }
+}
+
+/// Registry of per-method metrics.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    methods: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    pub errors: AtomicU64,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn histogram(&self, method: &str) -> std::sync::Arc<Histogram> {
+        let mut m = self.methods.lock().unwrap();
+        m.entry(method.to_string()).or_default().clone()
+    }
+
+    pub fn record(&self, method: &str, micros: u64) {
+        self.histogram(method).record(micros);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Render a plain-text report (one line per method).
+    pub fn report(&self) -> String {
+        let m = self.methods.lock().unwrap();
+        let mut out = String::from("method                     count    mean_us    p50_us    p99_us\n");
+        for (name, h) in m.iter() {
+            out.push_str(&format!(
+                "{name:<25} {:>7} {:>10.1} {:>9} {:>9}\n",
+                h.count(),
+                h.mean_micros(),
+                h.quantile_micros(0.5),
+                h.quantile_micros(0.99),
+            ));
+        }
+        out.push_str(&format!("errors: {}\n", self.errors.load(Ordering::Relaxed)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            for _ in 0..10 {
+                h.record(us);
+            }
+        }
+        assert_eq!(h.count(), 60);
+        assert!(h.mean_micros() > 0.0);
+        let p50 = h.quantile_micros(0.5);
+        let p99 = h.quantile_micros(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= 65_536, "p99 bucket {p99}"); // >= the 100ms-ish bucket
+    }
+
+    #[test]
+    fn metrics_report_contains_methods() {
+        let m = ServiceMetrics::new();
+        m.record("SuggestTrials", 1500);
+        m.record("SuggestTrials", 2500);
+        m.record("CompleteTrial", 300);
+        m.record_error();
+        let r = m.report();
+        assert!(r.contains("SuggestTrials"));
+        assert!(r.contains("CompleteTrial"));
+        assert!(r.contains("errors: 1"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(ServiceMetrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        m.record("X", i);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.histogram("X").count(), 4000);
+    }
+}

@@ -1,0 +1,39 @@
+//! The distributed OSS Vizier service (paper §3): API server, durable
+//! long-running operations, TCP front-end, remote Pythia deployment, and
+//! service metrics.
+
+pub mod api;
+pub mod metrics;
+pub mod remote_pythia;
+pub mod server;
+
+pub use api::{ApiError, VizierService};
+pub use server::VizierServer;
+
+use crate::datastore::Datastore;
+use crate::pythia::runner::{default_registry, LocalPythia, PolicyRegistry};
+use crate::pythia::supporter::DatastoreSupporter;
+use std::sync::Arc;
+
+/// Build a standard service: datastore + in-process Pythia with the
+/// built-in policy registry (+ any extra registrations).
+pub fn build_service(
+    ds: Arc<dyn Datastore>,
+    extra_policies: impl FnOnce(&mut PolicyRegistry),
+    workers: usize,
+) -> Arc<VizierService> {
+    let mut registry = default_registry();
+    extra_policies(&mut registry);
+    let supporter = Arc::new(DatastoreSupporter::new(Arc::clone(&ds)));
+    let pythia = Arc::new(LocalPythia::new(registry, supporter));
+    VizierService::new(ds, pythia, workers)
+}
+
+/// In-memory service for tests/benchmarks/local studies.
+pub fn in_memory_service(workers: usize) -> Arc<VizierService> {
+    build_service(
+        Arc::new(crate::datastore::memory::InMemoryDatastore::new()),
+        |_| {},
+        workers,
+    )
+}

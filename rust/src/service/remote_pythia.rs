@@ -1,0 +1,575 @@
+//! Separate-process Pythia deployment (paper Figure 2: "Note that Pythia
+//! may run as a separate service from the API service"; §2.1: "OSS
+//! Vizier's algorithms may run in a separate service and communicate via
+//! RPCs with the API server, which performs database operations").
+//!
+//! Topology:
+//! * The **Pythia server** ([`PythiaServer`]) hosts the policy registry in
+//!   its own process. For datastore reads it talks *back* to the API
+//!   server through a [`RemoteSupporter`] (ListTrials / GetStudy /
+//!   UpdateMetadata RPCs) — the API service remains the only process that
+//!   touches the database.
+//! * The **API server** is configured with a [`RemotePythia`] endpoint
+//!   that forwards suggest/early-stop work to the Pythia server.
+
+use crate::client::transport::{call, TcpTransport, Transport};
+use crate::datastore::query::TrialFilter;
+use crate::pythia::policy::{
+    EarlyStopDecision, EarlyStopRequest, PolicyError, SuggestDecision, SuggestRequest,
+};
+use crate::pythia::runner::{PolicyRegistry, PythiaEndpoint};
+use crate::pythia::supporter::PolicySupporter;
+use crate::pyvizier::{converters, Metadata, StudyConfig, Trial, TrialSuggestion};
+use crate::wire::codec::{Reader, WireError, WireMessage, Writer};
+use crate::wire::framing::{write_err, write_ok, FrameError, Method, Status};
+use crate::wire::messages::*;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// Pythia wire protocol (rides on the same framing; distinct method ids)
+// ---------------------------------------------------------------------------
+
+const M_SUGGEST: u8 = 101;
+const M_EARLY_STOP: u8 = 102;
+
+/// Request the Pythia service to produce suggestions.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PythiaSuggestRequest {
+    pub study_name: String,
+    pub display_name: String,
+    pub spec: StudySpecProto,
+    pub count: u64,
+    pub client_id: String,
+}
+
+impl WireMessage for PythiaSuggestRequest {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.study_name);
+        w.str(2, &self.display_name);
+        w.msg(3, &self.spec);
+        w.u64(4, self.count);
+        w.str(5, &self.client_id);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Self::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.study_name = v.as_string()?,
+                2 => m.display_name = v.as_string()?,
+                3 => m.spec = v.as_msg()?,
+                4 => m.count = v.as_u64()?,
+                5 => m.client_id = v.as_string()?,
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Pythia's reply: suggestions (as bare trials) + designer metadata.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PythiaSuggestResponse {
+    pub suggestions: Vec<TrialProto>,
+    pub study_metadata: Vec<MetadataItem>,
+}
+
+impl WireMessage for PythiaSuggestResponse {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.msgs(1, &self.suggestions);
+        w.msgs(2, &self.study_metadata);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Self::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.suggestions.push(v.as_msg()?),
+                2 => m.study_metadata.push(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PythiaEarlyStopRequest {
+    pub study_name: String,
+    pub display_name: String,
+    pub spec: StudySpecProto,
+    pub trial_id: u64,
+}
+
+impl WireMessage for PythiaEarlyStopRequest {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.study_name);
+        w.str(2, &self.display_name);
+        w.msg(3, &self.spec);
+        w.u64(4, self.trial_id);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Self::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.study_name = v.as_string()?,
+                2 => m.display_name = v.as_string()?,
+                3 => m.spec = v.as_msg()?,
+                4 => m.trial_id = v.as_u64()?,
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PythiaEarlyStopResponse {
+    pub should_stop: bool,
+    pub reason: String,
+}
+
+impl WireMessage for PythiaEarlyStopResponse {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.bool(1, self.should_stop);
+        w.str(2, &self.reason);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Self::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.should_stop = v.as_bool()?,
+                2 => m.reason = v.as_string()?,
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RemoteSupporter: datastore reads through the API server
+// ---------------------------------------------------------------------------
+
+/// PolicySupporter backed by API-server RPCs (used inside the Pythia
+/// process — it has no datastore of its own).
+pub struct RemoteSupporter {
+    transport: Mutex<Box<dyn Transport>>,
+}
+
+impl RemoteSupporter {
+    pub fn connect(api_addr: &str) -> Result<Self, FrameError> {
+        Ok(Self {
+            transport: Mutex::new(Box::new(TcpTransport::connect(api_addr)?)),
+        })
+    }
+
+    fn rpc<Req: WireMessage, Resp: WireMessage>(
+        &self,
+        method: Method,
+        req: &Req,
+    ) -> Result<Resp, PolicyError> {
+        let mut t = self.transport.lock().unwrap();
+        call(t.as_mut(), method, req).map_err(|e| PolicyError::Datastore(e.to_string()))
+    }
+}
+
+impl PolicySupporter for RemoteSupporter {
+    fn study_config(&self, study_name: &str) -> Result<StudyConfig, PolicyError> {
+        let resp: StudyResponse = self.rpc(
+            Method::GetStudy,
+            &GetStudyRequest {
+                name: study_name.to_string(),
+            },
+        )?;
+        Ok(converters::study_config_from_proto(
+            &resp.study.display_name,
+            &resp.study.spec,
+        ))
+    }
+
+    fn trials(&self, study_name: &str, filter: &TrialFilter) -> Result<Vec<Trial>, PolicyError> {
+        let resp: ListTrialsResponse = self.rpc(
+            Method::ListTrials,
+            &ListTrialsRequest {
+                study_name: study_name.to_string(),
+            },
+        )?;
+        Ok(filter
+            .apply(resp.trials)
+            .iter()
+            .map(converters::trial_from_proto)
+            .collect())
+    }
+
+    fn list_study_names(&self) -> Result<Vec<String>, PolicyError> {
+        let resp: ListStudiesResponse =
+            self.rpc(Method::ListStudies, &ListStudiesRequest::default())?;
+        Ok(resp.studies.into_iter().map(|s| s.name).collect())
+    }
+
+    fn update_study_metadata(&self, study_name: &str, md: &Metadata) -> Result<(), PolicyError> {
+        let updates = md
+            .iter()
+            .map(|(ns, k, v)| UnitMetadataUpdate {
+                trial_id: 0,
+                item: Some(MetadataItem {
+                    namespace: ns.to_string(),
+                    key: k.to_string(),
+                    value: v.to_vec(),
+                }),
+            })
+            .collect();
+        let _: EmptyResponse = self.rpc(
+            Method::UpdateMetadata,
+            &UpdateMetadataRequest {
+                study_name: study_name.to_string(),
+                updates,
+            },
+        )?;
+        Ok(())
+    }
+
+    fn update_trial_metadata(
+        &self,
+        study_name: &str,
+        trial_id: u64,
+        md: &Metadata,
+    ) -> Result<(), PolicyError> {
+        let updates = md
+            .iter()
+            .map(|(ns, k, v)| UnitMetadataUpdate {
+                trial_id,
+                item: Some(MetadataItem {
+                    namespace: ns.to_string(),
+                    key: k.to_string(),
+                    value: v.to_vec(),
+                }),
+            })
+            .collect();
+        let _: EmptyResponse = self.rpc(
+            Method::UpdateMetadata,
+            &UpdateMetadataRequest {
+                study_name: study_name.to_string(),
+                updates,
+            },
+        )?;
+        Ok(())
+    }
+
+    fn trial_count(&self, study_name: &str) -> Result<usize, PolicyError> {
+        let resp: ListTrialsResponse = self.rpc(
+            Method::ListTrials,
+            &ListTrialsRequest {
+                study_name: study_name.to_string(),
+            },
+        )?;
+        Ok(resp.trials.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PythiaServer: hosts policies in its own process
+// ---------------------------------------------------------------------------
+
+/// The standalone Pythia service.
+pub struct PythiaServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl PythiaServer {
+    /// Start serving policy work on `addr`; datastore reads go to
+    /// `api_addr` (the API server).
+    pub fn start(registry: PolicyRegistry, api_addr: &str, addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let api_addr = api_addr.to_string();
+        let accept_thread = std::thread::Builder::new()
+            .name("pythia-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let registry = registry.clone();
+                    let api_addr = api_addr.clone();
+                    let _ = std::thread::Builder::new().name("pythia-conn".into()).spawn(
+                        move || {
+                            let _ = serve_pythia_connection(registry, &api_addr, stream);
+                        },
+                    );
+                }
+            })?;
+        Ok(Self {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_pythia_connection(
+    registry: PolicyRegistry,
+    api_addr: &str,
+    stream: TcpStream,
+) -> Result<(), FrameError> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    // One supporter (and API connection) per Pythia connection.
+    let supporter = RemoteSupporter::connect(api_addr)
+        .map_err(|e| FrameError::Io(std::io::Error::other(e.to_string())))?;
+    loop {
+        // Read raw frames so we can use our private method ids.
+        let (head, payload) = match crate::wire::framing::read_frame(&mut reader) {
+            Ok(x) => x,
+            Err(FrameError::Io(_)) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        match head {
+            M_SUGGEST => {
+                let result: Result<PythiaSuggestResponse, String> = (|| {
+                    let req: PythiaSuggestRequest =
+                        crate::wire::codec::decode(&payload).map_err(|e| e.to_string())?;
+                    let config =
+                        converters::study_config_from_proto(&req.display_name, &req.spec);
+                    let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
+                    let decision = policy
+                        .suggest(
+                            &SuggestRequest {
+                                study_name: req.study_name,
+                                study_config: config,
+                                count: req.count as usize,
+                                client_id: req.client_id,
+                            },
+                            &supporter,
+                        )
+                        .map_err(|e| e.to_string())?;
+                    Ok(PythiaSuggestResponse {
+                        suggestions: decision
+                            .suggestions
+                            .iter()
+                            .map(suggestion_to_proto)
+                            .collect(),
+                        study_metadata: decision
+                            .study_metadata
+                            .map(|md| converters::metadata_to_proto(&md))
+                            .unwrap_or_default(),
+                    })
+                })();
+                match result {
+                    Ok(resp) => write_ok(&mut writer, &resp)?,
+                    Err(e) => write_err(&mut writer, Status::Internal, &e)?,
+                }
+            }
+            M_EARLY_STOP => {
+                let result: Result<PythiaEarlyStopResponse, String> = (|| {
+                    let req: PythiaEarlyStopRequest =
+                        crate::wire::codec::decode(&payload).map_err(|e| e.to_string())?;
+                    let config =
+                        converters::study_config_from_proto(&req.display_name, &req.spec);
+                    let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
+                    let d = policy
+                        .early_stop(
+                            &EarlyStopRequest {
+                                study_name: req.study_name,
+                                study_config: config,
+                                trial_id: req.trial_id,
+                            },
+                            &supporter,
+                        )
+                        .map_err(|e| e.to_string())?;
+                    Ok(PythiaEarlyStopResponse {
+                        should_stop: d.should_stop,
+                        reason: d.reason,
+                    })
+                })();
+                match result {
+                    Ok(resp) => write_ok(&mut writer, &resp)?,
+                    Err(e) => write_err(&mut writer, Status::Internal, &e)?,
+                }
+            }
+            other => write_err(&mut writer, Status::Unimplemented, &format!("method {other}"))?,
+        }
+    }
+}
+
+fn suggestion_to_proto(s: &TrialSuggestion) -> TrialProto {
+    TrialProto {
+        parameters: s
+            .parameters
+            .iter()
+            .map(|(k, v)| TrialParameter {
+                parameter_id: k.clone(),
+                value: converters::value_to_proto(v),
+            })
+            .collect(),
+        metadata: converters::metadata_to_proto(&s.metadata),
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RemotePythia: the API server's endpoint that forwards to PythiaServer
+// ---------------------------------------------------------------------------
+
+/// PythiaEndpoint that forwards operations to a remote Pythia server.
+pub struct RemotePythia {
+    addr: String,
+    conn: Mutex<Option<(BufReader<TcpStream>, BufWriter<TcpStream>)>>,
+}
+
+impl RemotePythia {
+    pub fn new(pythia_addr: &str) -> Self {
+        Self {
+            addr: pythia_addr.to_string(),
+            conn: Mutex::new(None),
+        }
+    }
+
+    fn roundtrip<Req: WireMessage, Resp: WireMessage>(
+        &self,
+        method_id: u8,
+        req: &Req,
+    ) -> Result<Resp, PolicyError> {
+        let io_err = |e: std::io::Error| PolicyError::Internal(format!("pythia rpc io: {e}"));
+        let mut guard = self.conn.lock().unwrap();
+        for attempt in 0..2 {
+            if guard.is_none() {
+                let stream = TcpStream::connect(&self.addr).map_err(io_err)?;
+                stream.set_nodelay(true).ok();
+                let r = BufReader::new(stream.try_clone().map_err(io_err)?);
+                *guard = Some((r, BufWriter::new(stream)));
+            }
+            let (reader, writer) = guard.as_mut().unwrap();
+            let result = (|| -> Result<Resp, FrameError> {
+                let payload = crate::wire::codec::encode(req);
+                let total = (1 + payload.len()) as u32;
+                use std::io::Write;
+                writer.write_all(&total.to_le_bytes())?;
+                writer.write_all(&[method_id])?;
+                writer.write_all(&payload)?;
+                writer.flush()?;
+                crate::wire::framing::read_response(reader)
+            })();
+            match result {
+                Ok(resp) => return Ok(resp),
+                Err(FrameError::Io(_)) if attempt == 0 => {
+                    *guard = None;
+                    continue;
+                }
+                Err(FrameError::Rpc { message, .. }) => {
+                    return Err(PolicyError::Internal(message))
+                }
+                Err(e) => return Err(PolicyError::Internal(e.to_string())),
+            }
+        }
+        unreachable!()
+    }
+}
+
+impl PythiaEndpoint for RemotePythia {
+    fn run_suggest(&self, req: &SuggestRequest) -> Result<SuggestDecision, PolicyError> {
+        let wire_req = PythiaSuggestRequest {
+            study_name: req.study_name.clone(),
+            display_name: req.study_config.display_name.clone(),
+            spec: converters::study_config_to_proto(&req.study_config),
+            count: req.count as u64,
+            client_id: req.client_id.clone(),
+        };
+        let resp: PythiaSuggestResponse = self.roundtrip(M_SUGGEST, &wire_req)?;
+        Ok(SuggestDecision {
+            suggestions: resp
+                .suggestions
+                .iter()
+                .map(|t| {
+                    let trial = converters::trial_from_proto(t);
+                    TrialSuggestion {
+                        parameters: trial.parameters,
+                        metadata: trial.metadata,
+                    }
+                })
+                .collect(),
+            study_metadata: if resp.study_metadata.is_empty() {
+                None
+            } else {
+                Some(converters::metadata_from_proto(&resp.study_metadata))
+            },
+        })
+    }
+
+    fn run_early_stop(&self, req: &EarlyStopRequest) -> Result<EarlyStopDecision, PolicyError> {
+        let wire_req = PythiaEarlyStopRequest {
+            study_name: req.study_name.clone(),
+            display_name: req.study_config.display_name.clone(),
+            spec: converters::study_config_to_proto(&req.study_config),
+            trial_id: req.trial_id,
+        };
+        let resp: PythiaEarlyStopResponse = self.roundtrip(M_EARLY_STOP, &wire_req)?;
+        Ok(EarlyStopDecision {
+            should_stop: resp.should_stop,
+            reason: resp.reason,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::codec::{decode, encode};
+
+    #[test]
+    fn pythia_messages_roundtrip() {
+        let req = PythiaSuggestRequest {
+            study_name: "studies/1".into(),
+            display_name: "exp".into(),
+            spec: StudySpecProto {
+                algorithm: "RANDOM_SEARCH".into(),
+                ..Default::default()
+            },
+            count: 3,
+            client_id: "w0".into(),
+        };
+        let back: PythiaSuggestRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+
+        let resp = PythiaSuggestResponse {
+            suggestions: vec![TrialProto::default()],
+            study_metadata: vec![MetadataItem {
+                namespace: "d".into(),
+                key: "k".into(),
+                value: vec![1],
+            }],
+        };
+        let back: PythiaSuggestResponse = decode(&encode(&resp)).unwrap();
+        assert_eq!(back, resp);
+
+        let es = PythiaEarlyStopRequest {
+            study_name: "s".into(),
+            display_name: "d".into(),
+            spec: StudySpecProto::default(),
+            trial_id: 7,
+        };
+        let back: PythiaEarlyStopRequest = decode(&encode(&es)).unwrap();
+        assert_eq!(back, es);
+    }
+}

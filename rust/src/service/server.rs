@@ -1,0 +1,168 @@
+//! TCP front-end: accepts connections and dispatches framed RPCs to the
+//! [`VizierService`] (the Rust analogue of Code Block 4's
+//! `grpc.server(ThreadPoolExecutor(...))` setup).
+
+use super::api::VizierService;
+use crate::util::time::Stopwatch;
+use crate::wire::codec::decode;
+use crate::wire::framing::{read_request, write_err, write_ok, FrameError, Method, Status};
+use crate::wire::messages::EmptyResponse;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A running TCP server.
+pub struct VizierServer {
+    addr: std::net::SocketAddr,
+    service: Arc<VizierService>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+}
+
+impl VizierServer {
+    /// Bind and start serving. `addr` like `"127.0.0.1:6006"`; use port 0
+    /// for an ephemeral port (tests).
+    pub fn start(service: Arc<VizierService>, addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+        let svc = Arc::clone(&service);
+        let stop2 = Arc::clone(&stop);
+        let conns = Arc::clone(&connections);
+        let accept_thread = std::thread::Builder::new()
+            .name("vizier-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(stream) => {
+                            conns.fetch_add(1, Ordering::Relaxed);
+                            let svc = Arc::clone(&svc);
+                            // Connection-per-thread: each worker connection
+                            // is long-lived and serves sequential requests.
+                            let _ = std::thread::Builder::new()
+                                .name("vizier-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(&svc, stream);
+                                });
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            })?;
+        Ok(Self {
+            addr: local,
+            service,
+            stop,
+            accept_thread: Some(accept_thread),
+            connections,
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn service(&self) -> &Arc<VizierService> {
+        &self.service
+    }
+
+    /// Stop accepting new connections (existing connections drain on their
+    /// own when clients disconnect).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        self.service.shutdown();
+    }
+}
+
+impl Drop for VizierServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one connection: a loop of request -> dispatch -> response.
+fn serve_connection(service: &Arc<VizierService>, stream: TcpStream) -> Result<(), FrameError> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let (method, payload) = match read_request(&mut reader) {
+            Ok(x) => x,
+            Err(FrameError::Io(_)) => return Ok(()), // client disconnected
+            Err(e) => return Err(e),
+        };
+        let sw = Stopwatch::start();
+        let result = dispatch(service, method, &payload, &mut writer);
+        service
+            .metrics
+            .record(&format!("{method:?}"), sw.elapsed_micros());
+        result?;
+    }
+}
+
+/// Decode, call, encode for a single method.
+pub fn dispatch<W: Write>(
+    service: &Arc<VizierService>,
+    method: Method,
+    payload: &[u8],
+    out: &mut W,
+) -> Result<(), FrameError> {
+    macro_rules! call {
+        ($fn:ident) => {{
+            match decode(payload) {
+                Ok(req) => match service.$fn(req) {
+                    Ok(resp) => write_ok(out, &resp),
+                    Err(e) => {
+                        service.metrics.record_error();
+                        write_err(out, e.status, &e.message)
+                    }
+                },
+                Err(e) => write_err(out, Status::InvalidArgument, &format!("bad request: {e}")),
+            }
+        }};
+    }
+    match method {
+        Method::CreateStudy => call!(create_study),
+        Method::GetStudy => call!(get_study),
+        Method::ListStudies => call!(list_studies),
+        Method::DeleteStudy => call!(delete_study),
+        Method::LookupStudy => call!(lookup_study),
+        Method::SuggestTrials => call!(suggest_trials),
+        Method::GetOperation => call!(get_operation),
+        Method::AddMeasurement => call!(add_measurement),
+        Method::CompleteTrial => call!(complete_trial),
+        Method::ListTrials => call!(list_trials),
+        Method::GetTrial => call!(get_trial),
+        Method::DeleteTrial => call!(delete_trial),
+        Method::CheckEarlyStopping => call!(check_early_stopping),
+        Method::StopTrial => call!(stop_trial),
+        Method::ListOptimalTrials => call!(list_optimal_trials),
+        Method::UpdateMetadata => call!(update_metadata),
+        Method::Ping => write_ok(out, &EmptyResponse::default()),
+    }
+}
+
+/// Read side of `dispatch` for in-process transports: handles one raw
+/// frame pair over byte buffers.
+pub fn dispatch_buf(service: &Arc<VizierService>, method: Method, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let _ = dispatch(service, method, payload, &mut out);
+    out
+}
+

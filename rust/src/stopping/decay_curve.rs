@@ -1,0 +1,165 @@
+//! Decay-curve automated stopping (paper Appendix B.1): "a Gaussian
+//! Process Regressor is built to predict the final objective value of a
+//! Trial based on the already completed Trials and the intermediate
+//! measurements of the current Trial. Early stopping is requested ... if
+//! there is very low probability to exceed the optimal value found so far."
+//!
+//! Implementation: a 1-D GP over normalized step (using
+//! [`crate::policies::gp_math`]) fit to the trial's partial curve,
+//! extrapolated to the curve's end; the trial stops when the UCB
+//! (`confidence` sigmas above the predicted final value) is still below
+//! the best completed objective.
+
+use crate::policies::gp_math::{GpParams, GpPosterior};
+use crate::pythia::policy::EarlyStopDecision;
+use crate::pyvizier::{StudyConfig, Trial};
+
+pub fn decay_curve_should_stop(
+    config: &StudyConfig,
+    trial: &Trial,
+    completed: &[Trial],
+) -> EarlyStopDecision {
+    let metric = config.single_objective();
+    let maximize = metric.goal == crate::wire::messages::MetricGoal::Maximize;
+
+    if (completed.iter().filter(|t| t.is_feasible_completed()).count() as u64)
+        < config.stopping.min_trials
+    {
+        return EarlyStopDecision::default();
+    }
+    // Best completed objective (maximization orientation).
+    let Some(best) = completed
+        .iter()
+        .filter_map(|t| t.final_metric(&metric.name))
+        .map(|v| metric.maximization_value(v))
+        .max_by(|a, b| a.partial_cmp(b).unwrap())
+    else {
+        return EarlyStopDecision::default();
+    };
+
+    // The horizon: the longest curve among completed trials.
+    let horizon = completed
+        .iter()
+        .filter_map(|t| t.last_step())
+        .max()
+        .unwrap_or(0)
+        .max(trial.last_step().unwrap_or(0));
+    if horizon == 0 {
+        return EarlyStopDecision::default();
+    }
+
+    // Fit a 1-D GP to this trial's partial curve (needs >= 3 points).
+    let points: Vec<(f64, f64)> = trial
+        .measurements
+        .iter()
+        .filter_map(|m| {
+            m.get(&metric.name)
+                .map(|v| (m.step as f64 / horizon as f64, metric.maximization_value(v)))
+        })
+        .collect();
+    if points.len() < 3 {
+        return EarlyStopDecision::default();
+    }
+    let x: Vec<Vec<f64>> = points.iter().map(|(s, _)| vec![*s]).collect();
+    let y: Vec<f64> = points.iter().map(|(_, v)| *v).collect();
+    let Ok(gp) = GpPosterior::fit(
+        x,
+        &y,
+        GpParams {
+            // Longer lengthscale: learning curves are smooth in step.
+            lengthscale: 0.5,
+            sigma2: 1.0,
+            noise: 1e-4,
+        },
+    ) else {
+        return EarlyStopDecision::default();
+    };
+
+    // Optimistic prediction of the final value.
+    let (mu, var) = gp.predict(&[1.0]);
+    let ucb = mu + config.stopping.confidence * var.sqrt();
+    if ucb < best {
+        EarlyStopDecision {
+            should_stop: true,
+            reason: format!(
+                "decay-curve stopping: predicted final {} = {:.6} (+{:.2}σ = {:.6}) \
+                 cannot reach best completed {:.6}",
+                metric.name,
+                if maximize { mu } else { -mu },
+                config.stopping.confidence,
+                if maximize { ucb } else { -ucb },
+                if maximize { best } else { -best },
+            ),
+        }
+    } else {
+        EarlyStopDecision::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stopping::test_curves::{curve_trial, partial_trial};
+    use crate::pyvizier::MetricInformation;
+    use crate::wire::messages::{StoppingConfig, StoppingKind};
+
+    fn config(confidence: f64) -> StudyConfig {
+        let mut c = StudyConfig::new("curves");
+        c.add_metric(MetricInformation::maximize("acc"));
+        c.stopping = StoppingConfig {
+            kind: StoppingKind::DecayCurve,
+            min_trials: 2,
+            confidence,
+        };
+        c
+    }
+
+    fn pool() -> Vec<Trial> {
+        vec![
+            curve_trial(1, 0.85, 4.0, 30),
+            curve_trial(2, 0.9, 4.0, 30),
+            curve_trial(3, 0.8, 4.0, 30),
+        ]
+    }
+
+    #[test]
+    fn hopeless_curve_is_stopped() {
+        let c = config(1.64);
+        // Plateaus at 0.3 — GP extrapolation stays far below best (0.9).
+        let bad = partial_trial(10, 0.3, 3.0, 15);
+        let d = decay_curve_should_stop(&c, &bad, &pool());
+        assert!(d.should_stop, "{}", d.reason);
+        assert!(d.reason.contains("decay-curve"));
+    }
+
+    #[test]
+    fn promising_curve_survives() {
+        let c = config(1.64);
+        // Heading above 0.9.
+        let good = partial_trial(10, 0.97, 4.0, 15);
+        let d = decay_curve_should_stop(&c, &good, &pool());
+        assert!(!d.should_stop, "{}", d.reason);
+    }
+
+    #[test]
+    fn early_curve_with_few_points_continues() {
+        let c = config(1.64);
+        let young = partial_trial(10, 0.2, 3.0, 2); // only 2 measurements
+        assert!(!decay_curve_should_stop(&c, &young, &pool()).should_stop);
+    }
+
+    #[test]
+    fn higher_confidence_stops_less() {
+        // With a huge confidence multiplier even a bad curve survives.
+        let c = config(50.0);
+        let bad = partial_trial(10, 0.3, 3.0, 15);
+        assert!(!decay_curve_should_stop(&c, &bad, &pool()).should_stop);
+    }
+
+    #[test]
+    fn respects_min_trials() {
+        let c = config(1.64);
+        let bad = partial_trial(10, 0.1, 3.0, 15);
+        assert!(!decay_curve_should_stop(&c, &bad, &pool()[..1]).should_stop);
+    }
+}

@@ -1,0 +1,123 @@
+//! Median automated stopping (paper Appendix B.1): "a pending trial is
+//! stopped if the Trial's best objective value is strictly below the median
+//! 'performance' of all completed Trials reported up to the Trial's last
+//! measurement", where 'performance' is the running average of reported
+//! objective values.
+
+use crate::pythia::policy::EarlyStopDecision;
+use crate::pyvizier::{StudyConfig, Trial};
+
+pub fn median_should_stop(
+    config: &StudyConfig,
+    trial: &Trial,
+    completed: &[Trial],
+) -> EarlyStopDecision {
+    let metric = config.single_objective();
+    let maximize = metric.goal == crate::wire::messages::MetricGoal::Maximize;
+
+    let Some(last_step) = trial.last_step() else {
+        return EarlyStopDecision::default(); // no measurements yet
+    };
+    if (completed.len() as u64) < config.stopping.min_trials {
+        return EarlyStopDecision::default();
+    }
+
+    // Median of completed trials' running averages up to last_step.
+    let mut perf: Vec<f64> = completed
+        .iter()
+        .filter(|t| t.is_feasible_completed())
+        .filter_map(|t| t.running_average_until(&metric.name, last_step))
+        .collect();
+    if (perf.len() as u64) < config.stopping.min_trials {
+        return EarlyStopDecision::default();
+    }
+    perf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if perf.len() % 2 == 1 {
+        perf[perf.len() / 2]
+    } else {
+        0.5 * (perf[perf.len() / 2 - 1] + perf[perf.len() / 2])
+    };
+
+    let Some(best) = trial.best_intermediate(&metric.name, maximize) else {
+        return EarlyStopDecision::default();
+    };
+    let below = if maximize { best < median } else { best > median };
+    if below {
+        EarlyStopDecision {
+            should_stop: true,
+            reason: format!(
+                "median stopping: best {} = {best:.6} is worse than median running \
+                 average {median:.6} at step {last_step}",
+                metric.name
+            ),
+        }
+    } else {
+        EarlyStopDecision::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stopping::test_curves::{curve_trial, partial_trial};
+    use crate::pyvizier::MetricInformation;
+    use crate::wire::messages::{StoppingConfig, StoppingKind};
+
+    fn config() -> StudyConfig {
+        let mut c = StudyConfig::new("curves");
+        c.add_metric(MetricInformation::maximize("acc"));
+        c.stopping = StoppingConfig {
+            kind: StoppingKind::Median,
+            min_trials: 3,
+            confidence: 1.0,
+        };
+        c
+    }
+
+    fn completed_pool() -> Vec<Trial> {
+        // Plateaus 0.6..0.9 — median running averages well above a bad trial.
+        (0..5).map(|i| curve_trial(i + 1, 0.6 + 0.075 * i as f64, 5.0, 20)).collect()
+    }
+
+    #[test]
+    fn bad_curve_is_stopped() {
+        let c = config();
+        let bad = partial_trial(10, 0.2, 5.0, 8); // plateau far below all
+        let d = median_should_stop(&c, &bad, &completed_pool());
+        assert!(d.should_stop, "{}", d.reason);
+        assert!(d.reason.contains("median"));
+    }
+
+    #[test]
+    fn good_curve_continues() {
+        let c = config();
+        let good = partial_trial(10, 0.95, 5.0, 8); // above every plateau
+        assert!(!median_should_stop(&c, &good, &completed_pool()).should_stop);
+    }
+
+    #[test]
+    fn respects_min_trials() {
+        let c = config();
+        let bad = partial_trial(10, 0.1, 5.0, 8);
+        let few: Vec<Trial> = completed_pool().into_iter().take(2).collect();
+        assert!(!median_should_stop(&c, &bad, &few).should_stop);
+    }
+
+    #[test]
+    fn no_measurements_never_stops() {
+        let c = config();
+        let empty = Trial::new(1, Default::default());
+        assert!(!median_should_stop(&c, &empty, &completed_pool()).should_stop);
+    }
+
+    #[test]
+    fn minimize_direction() {
+        let mut c = config();
+        c.metrics[0] = MetricInformation::minimize("acc");
+        // For minimization a *high* curve is bad.
+        let bad = partial_trial(10, 0.9, 2.0, 8);
+        let pool: Vec<Trial> = (0..5).map(|i| curve_trial(i + 1, 0.1 + 0.02 * i as f64, 5.0, 20)).collect();
+        let d = median_should_stop(&c, &bad, &pool);
+        assert!(d.should_stop);
+    }
+}

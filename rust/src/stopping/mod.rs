@@ -1,0 +1,54 @@
+//! Automated/early stopping (paper Appendix B.1).
+//!
+//! Two rules, selectable per-study via `StudyConfig.stopping`:
+//! * [`median::median_should_stop`] — stop a pending trial whose best
+//!   objective so far is strictly below the median *running average* of
+//!   completed trials at the same step.
+//! * [`decay_curve::decay_curve_should_stop`] — fit a Gaussian-process
+//!   regressor to the trial's partial curve, predict the final value, and
+//!   stop if the optimistic (UCB) prediction still cannot beat the best
+//!   completed trial.
+
+pub mod decay_curve;
+pub mod median;
+
+use crate::pythia::policy::EarlyStopDecision;
+use crate::pyvizier::{StudyConfig, Trial};
+use crate::wire::messages::StoppingKind;
+
+/// Apply the study's configured automated-stopping rule.
+pub fn decide(config: &StudyConfig, trial: &Trial, completed: &[Trial]) -> EarlyStopDecision {
+    match config.stopping.kind {
+        StoppingKind::None => EarlyStopDecision::default(),
+        StoppingKind::Median => median::median_should_stop(config, trial, completed),
+        StoppingKind::DecayCurve => decay_curve::decay_curve_should_stop(config, trial, completed),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_curves {
+    //! Shared synthetic learning-curve fixtures.
+    use crate::pyvizier::{Measurement, ParameterDict, Trial, TrialState};
+
+    /// A completed trial with accuracy curve `plateau * (1 - exp(-step/tau))`.
+    pub fn curve_trial(id: u64, plateau: f64, tau: f64, steps: i64) -> Trial {
+        let mut t = Trial::new(id, ParameterDict::new());
+        for s in 1..=steps {
+            let acc = plateau * (1.0 - (-(s as f64) / tau).exp());
+            t.measurements.push(Measurement::new(s).with_metric("acc", acc));
+        }
+        t.state = TrialState::Completed;
+        t.final_measurement = Some(
+            Measurement::new(steps).with_metric("acc", plateau * (1.0 - (-(steps as f64) / tau).exp())),
+        );
+        t
+    }
+
+    /// Same curve but still running (no final measurement, ACTIVE).
+    pub fn partial_trial(id: u64, plateau: f64, tau: f64, steps: i64) -> Trial {
+        let mut t = curve_trial(id, plateau, tau, steps);
+        t.state = TrialState::Active;
+        t.final_measurement = None;
+        t
+    }
+}

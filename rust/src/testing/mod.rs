@@ -1,0 +1,4 @@
+//! Test-support utilities, including the property-testing mini-framework
+//! (`proptest` is not in the offline vendored registry — DESIGN.md §3).
+
+pub mod prop;

@@ -1,0 +1,87 @@
+//! Exponential backoff with decorrelated jitter, used by the client when
+//! polling long-running operations and retrying transient RPC failures
+//! (paper §3.2: clients poll `GetOperation` until done).
+
+use crate::util::rng::Pcg32;
+use std::time::Duration;
+
+/// Exponential backoff policy with jitter.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    factor: f64,
+    current: Duration,
+    rng: Pcg32,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, max: Duration) -> Self {
+        Self {
+            base,
+            max,
+            factor: 1.7,
+            current: base,
+            rng: Pcg32::seeded(0x0bac_c0ff),
+        }
+    }
+
+    /// Default polling policy: 2ms -> 250ms.
+    pub fn polling() -> Self {
+        Self::new(Duration::from_millis(2), Duration::from_millis(250))
+    }
+
+    /// Default retry policy: 10ms -> 2s.
+    pub fn retry() -> Self {
+        Self::new(Duration::from_millis(10), Duration::from_secs(2))
+    }
+
+    /// Next delay: the deterministic ceiling grows exponentially (capped at
+    /// `max`); the returned delay is jittered uniformly in
+    /// `[ceiling/2, ceiling]` so concurrent pollers desynchronize.
+    pub fn next_delay(&mut self) -> Duration {
+        let ceiling = (self.current.as_secs_f64() * self.factor).min(self.max.as_secs_f64());
+        self.current = Duration::from_secs_f64(ceiling.max(self.base.as_secs_f64()));
+        let jittered = self.rng.f64_range(ceiling / 2.0, ceiling);
+        Duration::from_secs_f64(jittered)
+    }
+
+    /// Reset to the base delay (after a success).
+    pub fn reset(&mut self) {
+        self.current = self.base;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_and_caps() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(50));
+        let mut last = Duration::ZERO;
+        for _ in 0..64 {
+            last = b.next_delay();
+            assert!(last <= Duration::from_millis(50));
+            assert!(last >= Duration::from_micros(500));
+        }
+        // After many iterations we should be near the cap more often than not.
+        let mut near_cap = 0;
+        for _ in 0..32 {
+            if b.next_delay() > Duration::from_millis(25) {
+                near_cap += 1;
+            }
+        }
+        assert!(near_cap > 8, "near_cap={near_cap}, last={last:?}");
+    }
+
+    #[test]
+    fn reset_returns_to_base() {
+        let mut b = Backoff::retry();
+        for _ in 0..10 {
+            b.next_delay();
+        }
+        b.reset();
+        assert!(b.next_delay() <= Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal benchmark harness (criterion substitute; the vendored registry
+//! has no criterion — DESIGN.md §3). Used by the `harness = false` bench
+//! binaries in rust/benches/.
+//!
+//! Measures wall time over adaptive iteration counts with warmup and
+//! prints criterion-style lines: name, mean, p50, p95, throughput.
+
+use crate::util::time::Stopwatch;
+use std::time::Duration;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Measure `f`, choosing an iteration count that fills ~`budget`.
+pub fn bench_with_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + calibration.
+    let sw = Stopwatch::start();
+    f();
+    let first = sw.elapsed().max(Duration::from_nanos(100));
+    let target_iters = (budget.as_secs_f64() / first.as_secs_f64()).clamp(5.0, 10_000.0) as u64;
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean,
+        p50: samples[samples.len() / 2],
+        p95: samples[samples.len() * 95 / 100],
+    };
+    println!(
+        "{:<52} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+        result.name, result.iters, result.mean, result.p50, result.p95
+    );
+    result
+}
+
+/// Default budget (~0.6 s per case).
+pub fn bench(name: &str, f: impl FnMut()) -> BenchResult {
+    bench_with_budget(name, Duration::from_millis(600), f)
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a free-form summary line (picked up by EXPERIMENTS.md).
+pub fn note(text: &str) {
+    println!("    {text}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench_with_budget("noop", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean_us() < 1e5);
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiny command-line argument parser (the vendored registry has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Used by the `vizier-server` launcher and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that take a value (needed to disambiguate `--k v`).
+    value_keys: Vec<String>,
+}
+
+/// Declarative spec for one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv[1..]` given the set of options that take values.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut args = Args {
+            value_keys: specs
+                .iter()
+                .filter(|s| s.takes_value)
+                .map(|s| s.name.to_string())
+                .collect(),
+            ..Default::default()
+        };
+        let known: Vec<&str> = specs.iter().map(|s| s.name).collect();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminates option parsing.
+                    args.positional.extend(it.cloned());
+                    break;
+                }
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !known.contains(&key.as_str()) {
+                    return Err(format!("unknown option --{key}"));
+                }
+                if args.value_keys.contains(&key) {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("option --{key} requires a value"))?,
+                    };
+                    args.options.insert(key, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} must be a number, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Render a help string from specs.
+pub fn usage(bin: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("usage: {bin} [options]\n\noptions:\n");
+    for spec in specs {
+        let arg = if spec.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{:<12} {}\n", spec.name, arg, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "host", takes_value: true, help: "host" },
+            OptSpec { name: "port", takes_value: true, help: "port" },
+            OptSpec { name: "verbose", takes_value: false, help: "verbose" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&sv(&["--host", "h", "--port=99", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("host"), Some("h"));
+        assert_eq!(a.get_u64("port", 0).unwrap(), 99);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_or("host", "localhost"), "localhost");
+        assert_eq!(a.get_u64("port", 6006).unwrap(), 6006);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--bogus"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--port"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--port", "abc"]), &specs())
+            .unwrap()
+            .get_u64("port", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::parse(&sv(&["--", "--host", "x"]), &specs()).unwrap();
+        assert_eq!(a.positional, vec!["--host", "x"]);
+    }
+}

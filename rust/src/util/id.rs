@@ -1,0 +1,45 @@
+//! Unique id generation for operations and resource names.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// Next process-unique monotonically increasing id.
+pub fn next_uid() -> u64 {
+    COUNTER.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A short, human-readable unique token: epoch-millis + process counter.
+/// Sufficient for resource names inside one service instance; durable
+/// uniqueness across restarts comes from the datastore's max-id recovery.
+pub fn unique_token(prefix: &str) -> String {
+    format!("{prefix}-{}-{}", crate::util::time::epoch_millis(), next_uid())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn uids_are_unique_across_threads() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| (0..1000).map(|_| next_uid()).collect::<Vec<u64>>()))
+            .collect();
+        let mut all = HashSet::new();
+        for h in handles {
+            for id in h.join().unwrap() {
+                assert!(all.insert(id), "duplicate uid {id}");
+            }
+        }
+        assert_eq!(all.len(), 8000);
+    }
+
+    #[test]
+    fn tokens_have_prefix_and_differ() {
+        let a = unique_token("op");
+        let b = unique_token("op");
+        assert!(a.starts_with("op-"));
+        assert_ne!(a, b);
+    }
+}

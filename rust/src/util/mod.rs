@@ -1,0 +1,13 @@
+//! Shared substrates: PRNG, JSON, time, ids, CLI parsing, thread pool,
+//! retry/backoff. These replace crates (`rand`, `serde_json`, `clap`,
+//! `tokio`) that are not available in the offline vendored registry —
+//! see DESIGN.md §3.
+
+pub mod backoff;
+pub mod benchkit;
+pub mod cli;
+pub mod id;
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+pub mod time;

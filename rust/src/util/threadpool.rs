@@ -1,0 +1,164 @@
+//! Fixed-size worker thread pool.
+//!
+//! The paper's reference server (Code Block 4) is a gRPC server over a
+//! `futures.ThreadPoolExecutor(max_workers=100)`. This module is the Rust
+//! equivalent used by [`crate::service::server`]: a bounded pool fed by an
+//! MPMC queue (std `mpsc` receiver shared behind a mutex), with graceful
+//! shutdown that drains queued jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (>= 1).
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0, "thread pool needs at least one worker");
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                let act = Arc::clone(&active);
+                std::thread::Builder::new()
+                    .name(format!("vizier-worker-{i}"))
+                    .spawn(move || loop {
+                        // Holding the lock only while receiving keeps the
+                        // queue MPMC without a dedicated crate.
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                act.fetch_add(1, Ordering::SeqCst);
+                                // A panicking job must not kill the worker:
+                                // catch and continue serving.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                act.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // all senders dropped: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            sender: Some(sender),
+            workers,
+            active,
+        }
+    }
+
+    /// Submit a job. Never blocks (unbounded queue).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("worker threads gone");
+    }
+
+    /// Number of jobs currently executing.
+    pub fn active_count(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = ThreadPool::new(4);
+        let (tx, rx) = mpsc::channel();
+        // Four blocking jobs that each wait for a token; if the pool were
+        // serial, the test would deadlock on the barrier below.
+        let barrier = Arc::new(std::sync::Barrier::new(5));
+        for _ in 0..4 {
+            let b = Arc::clone(&barrier);
+            let tx = tx.clone();
+            pool.execute(move || {
+                b.wait();
+                tx.send(()).unwrap();
+            });
+        }
+        barrier.wait();
+        for _ in 0..4 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("boom"));
+        let done = Arc::new(AtomicU32::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.store(1, Ordering::SeqCst);
+        });
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 1, "worker kept serving after panic");
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(Duration::from_micros(100));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown(); // must wait for all 50
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+}

@@ -1,0 +1,75 @@
+//! Time helpers: epoch timestamps and a monotonic stopwatch.
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Milliseconds since the Unix epoch.
+pub fn epoch_millis() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Microseconds since the Unix epoch.
+pub fn epoch_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Monotonic stopwatch for latency measurement.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_micros(&self) -> u64 {
+        self.elapsed().as_micros() as u64
+    }
+
+    pub fn elapsed_millis_f64(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_sane() {
+        let ms = epoch_millis();
+        // After 2020-01-01 and before 2100.
+        assert!(ms > 1_577_836_800_000);
+        assert!(ms < 4_102_444_800_000);
+        assert!(epoch_micros() >= ms * 1000 - 1_000_000);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let e1 = sw.restart();
+        assert!(e1 >= Duration::from_millis(4));
+        let e2 = sw.elapsed();
+        assert!(e2 < e1 + Duration::from_secs(1));
+    }
+}

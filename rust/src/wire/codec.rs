@@ -1,0 +1,411 @@
+//! Tag-length-value field codec over [`super::varint`] — the protobuf wire
+//! format: `tag = (field_number << 3) | wire_type` with wire types
+//! 0 (varint), 1 (fixed64), 2 (length-delimited) and 5 (fixed32).
+//! Unknown fields are skippable, giving forward/backward compatibility —
+//! the property the paper leans on for mixed-version deployments.
+
+use super::varint::{get_uvarint, put_uvarint, unzigzag, zigzag};
+
+/// Wire-level decode errors.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum WireError {
+    #[error("truncated message")]
+    Truncated,
+    #[error("invalid varint")]
+    BadVarint,
+    #[error("invalid wire type {0}")]
+    BadWireType(u8),
+    #[error("invalid utf-8 in string field")]
+    BadUtf8,
+    #[error("missing required field {0}")]
+    MissingField(&'static str),
+    #[error("invalid enum value {value} for {name}")]
+    BadEnum { name: &'static str, value: u64 },
+    #[error("malformed message: {0}")]
+    Malformed(&'static str),
+}
+
+pub const WT_VARINT: u8 = 0;
+pub const WT_FIXED64: u8 = 1;
+pub const WT_LEN: u8 = 2;
+pub const WT_FIXED32: u8 = 5;
+
+/// Message encoder.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append pre-encoded message bytes verbatim (used by transports that
+    /// re-frame an already-encoded payload).
+    pub fn raw_append(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn tag(&mut self, field: u32, wt: u8) {
+        put_uvarint(&mut self.buf, ((field as u64) << 3) | wt as u64);
+    }
+
+    /// Unsigned varint field. Zero values are still written (we do not use
+    /// proto3 default-elision; explicitness keeps decode logic simple).
+    pub fn u64(&mut self, field: u32, v: u64) {
+        self.tag(field, WT_VARINT);
+        put_uvarint(&mut self.buf, v);
+    }
+
+    /// Signed (zigzag) varint field.
+    pub fn i64(&mut self, field: u32, v: i64) {
+        self.tag(field, WT_VARINT);
+        put_uvarint(&mut self.buf, zigzag(v));
+    }
+
+    pub fn bool(&mut self, field: u32, v: bool) {
+        self.u64(field, v as u64);
+    }
+
+    /// Little-endian IEEE-754 double field.
+    pub fn f64(&mut self, field: u32, v: f64) {
+        self.tag(field, WT_FIXED64);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, field: u32, v: f32) {
+        self.tag(field, WT_FIXED32);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn str(&mut self, field: u32, v: &str) {
+        self.bytes(field, v.as_bytes());
+    }
+
+    pub fn bytes(&mut self, field: u32, v: &[u8]) {
+        self.tag(field, WT_LEN);
+        put_uvarint(&mut self.buf, v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Nested message field.
+    pub fn msg<M: WireMessage>(&mut self, field: u32, m: &M) {
+        let inner = encode(m);
+        self.bytes(field, &inner);
+    }
+
+    /// Repeated nested messages.
+    pub fn msgs<M: WireMessage>(&mut self, field: u32, ms: &[M]) {
+        for m in ms {
+            self.msg(field, m);
+        }
+    }
+
+    /// Packed repeated f64 (wire type 2).
+    pub fn f64s_packed(&mut self, field: u32, vs: &[f64]) {
+        if vs.is_empty() {
+            return;
+        }
+        self.tag(field, WT_LEN);
+        put_uvarint(&mut self.buf, (vs.len() * 8) as u64);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// One decoded field.
+#[derive(Debug)]
+pub enum Field<'a> {
+    Varint(u64),
+    Fixed64([u8; 8]),
+    Fixed32([u8; 4]),
+    Len(&'a [u8]),
+}
+
+impl<'a> Field<'a> {
+    pub fn as_u64(&self) -> Result<u64, WireError> {
+        match self {
+            Field::Varint(v) => Ok(*v),
+            _ => Err(WireError::Malformed("expected varint field")),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64, WireError> {
+        Ok(unzigzag(self.as_u64()?))
+    }
+
+    pub fn as_bool(&self) -> Result<bool, WireError> {
+        Ok(self.as_u64()? != 0)
+    }
+
+    pub fn as_f64(&self) -> Result<f64, WireError> {
+        match self {
+            Field::Fixed64(b) => Ok(f64::from_le_bytes(*b)),
+            _ => Err(WireError::Malformed("expected fixed64 field")),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32, WireError> {
+        match self {
+            Field::Fixed32(b) => Ok(f32::from_le_bytes(*b)),
+            _ => Err(WireError::Malformed("expected fixed32 field")),
+        }
+    }
+
+    pub fn as_bytes(&self) -> Result<&'a [u8], WireError> {
+        match self {
+            Field::Len(b) => Ok(b),
+            _ => Err(WireError::Malformed("expected length-delimited field")),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&'a str, WireError> {
+        std::str::from_utf8(self.as_bytes()?).map_err(|_| WireError::BadUtf8)
+    }
+
+    pub fn as_string(&self) -> Result<String, WireError> {
+        Ok(self.as_str()?.to_string())
+    }
+
+    /// Decode a nested message from this field.
+    pub fn as_msg<M: WireMessage>(&self) -> Result<M, WireError> {
+        decode(self.as_bytes()?)
+    }
+
+    pub fn as_f64s_packed(&self) -> Result<Vec<f64>, WireError> {
+        let b = self.as_bytes()?;
+        if b.len() % 8 != 0 {
+            return Err(WireError::Malformed("packed f64 length not multiple of 8"));
+        }
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Field-by-field reader.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Next (field_number, field), or None at end of buffer.
+    pub fn next_field(&mut self) -> Result<Option<(u32, Field<'a>)>, WireError> {
+        if self.pos >= self.buf.len() {
+            return Ok(None);
+        }
+        let (tag, n) = get_uvarint(&self.buf[self.pos..]).ok_or(WireError::BadVarint)?;
+        self.pos += n;
+        let field = (tag >> 3) as u32;
+        let wt = (tag & 7) as u8;
+        let value = match wt {
+            WT_VARINT => {
+                let (v, n) = get_uvarint(&self.buf[self.pos..]).ok_or(WireError::BadVarint)?;
+                self.pos += n;
+                Field::Varint(v)
+            }
+            WT_FIXED64 => {
+                let end = self.pos + 8;
+                if end > self.buf.len() {
+                    return Err(WireError::Truncated);
+                }
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&self.buf[self.pos..end]);
+                self.pos = end;
+                Field::Fixed64(b)
+            }
+            WT_FIXED32 => {
+                let end = self.pos + 4;
+                if end > self.buf.len() {
+                    return Err(WireError::Truncated);
+                }
+                let mut b = [0u8; 4];
+                b.copy_from_slice(&self.buf[self.pos..end]);
+                self.pos = end;
+                Field::Fixed32(b)
+            }
+            WT_LEN => {
+                let (len, n) = get_uvarint(&self.buf[self.pos..]).ok_or(WireError::BadVarint)?;
+                self.pos += n;
+                let end = self.pos + len as usize;
+                if end > self.buf.len() {
+                    return Err(WireError::Truncated);
+                }
+                let slice = &self.buf[self.pos..end];
+                self.pos = end;
+                Field::Len(slice)
+            }
+            other => return Err(WireError::BadWireType(other)),
+        };
+        Ok(Some((field, value)))
+    }
+}
+
+/// A message that can be encoded to / decoded from the wire format.
+pub trait WireMessage: Sized {
+    fn encode_fields(&self, w: &mut Writer);
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError>;
+}
+
+/// Encode a message to bytes.
+pub fn encode<M: WireMessage>(m: &M) -> Vec<u8> {
+    let mut w = Writer::new();
+    m.encode_fields(&mut w);
+    w.into_bytes()
+}
+
+/// Decode a message from bytes.
+pub fn decode<M: WireMessage>(buf: &[u8]) -> Result<M, WireError> {
+    let mut r = Reader::new(buf);
+    M::decode_fields(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Default, PartialEq, Clone)]
+    struct Inner {
+        x: i64,
+        tags: Vec<String>,
+    }
+
+    impl WireMessage for Inner {
+        fn encode_fields(&self, w: &mut Writer) {
+            w.i64(1, self.x);
+            for t in &self.tags {
+                w.str(2, t);
+            }
+        }
+        fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+            let mut m = Inner::default();
+            while let Some((f, v)) = r.next_field()? {
+                match f {
+                    1 => m.x = v.as_i64()?,
+                    2 => m.tags.push(v.as_string()?),
+                    _ => {}
+                }
+            }
+            Ok(m)
+        }
+    }
+
+    #[derive(Debug, Default, PartialEq)]
+    struct Outer {
+        id: u64,
+        score: f64,
+        flag: bool,
+        inner: Option<Inner>,
+        many: Vec<Inner>,
+        data: Vec<f64>,
+    }
+
+    impl WireMessage for Outer {
+        fn encode_fields(&self, w: &mut Writer) {
+            w.u64(1, self.id);
+            w.f64(2, self.score);
+            w.bool(3, self.flag);
+            if let Some(inner) = &self.inner {
+                w.msg(4, inner);
+            }
+            w.msgs(5, &self.many);
+            w.f64s_packed(6, &self.data);
+        }
+        fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+            let mut m = Outer::default();
+            while let Some((f, v)) = r.next_field()? {
+                match f {
+                    1 => m.id = v.as_u64()?,
+                    2 => m.score = v.as_f64()?,
+                    3 => m.flag = v.as_bool()?,
+                    4 => m.inner = Some(v.as_msg()?),
+                    5 => m.many.push(v.as_msg()?),
+                    6 => m.data = v.as_f64s_packed()?,
+                    _ => {}
+                }
+            }
+            Ok(m)
+        }
+    }
+
+    #[test]
+    fn nested_roundtrip() {
+        let m = Outer {
+            id: 42,
+            score: -1.25e10,
+            flag: true,
+            inner: Some(Inner { x: -7, tags: vec!["a".into(), "b\n\"".into()] }),
+            many: vec![
+                Inner { x: 0, tags: vec![] },
+                Inner { x: i64::MIN, tags: vec!["😀".into()] },
+            ],
+            data: vec![0.0, 1.5, f64::MAX],
+        };
+        let bytes = encode(&m);
+        let back: Outer = decode(&bytes).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn unknown_fields_are_skipped() {
+        // Encode Outer, then decode as Inner: all Outer fields have numbers
+        // Inner ignores or reads compatibly; must not error.
+        let mut w = Writer::new();
+        w.u64(99, 7);
+        w.f64(98, 1.0);
+        w.str(97, "ignored");
+        w.i64(1, -3);
+        let m: Inner = decode(&w.into_bytes()).unwrap();
+        assert_eq!(m.x, -3);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let m = Inner { x: 5, tags: vec!["hello".into()] };
+        let bytes = encode(&m);
+        for cut in 1..bytes.len() {
+            // Every strict prefix must either decode to something valid
+            // or produce an error, never panic.
+            let _ = decode::<Inner>(&bytes[..cut]);
+        }
+        // A length-delimited field whose length exceeds the buffer errors.
+        let mut w = Writer::new();
+        w.bytes(1, &[1, 2, 3]);
+        let mut bad = w.into_bytes();
+        bad.truncate(bad.len() - 1);
+        assert!(decode::<Inner>(&bad).is_err());
+    }
+
+    #[test]
+    fn wrong_wire_type_is_error() {
+        let mut w = Writer::new();
+        w.str(1, "not a varint");
+        let r: Result<Inner, _> = decode(&w.into_bytes());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_message_decodes_to_default() {
+        let m: Inner = decode(&[]).unwrap();
+        assert_eq!(m, Inner::default());
+    }
+}

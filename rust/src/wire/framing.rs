@@ -1,0 +1,277 @@
+//! RPC framing over a byte stream.
+//!
+//! Requests: `[u32-le total_len][u8 method][payload]`.
+//! Responses: `[u32-le total_len][u8 status][payload]` where status 0 = OK
+//! (payload is the method's response message) and nonzero = error class
+//! (payload is a UTF-8 error string). This is the transport-level analogue
+//! of gRPC's framed messages in the paper's stack.
+
+use super::codec::{decode, encode, WireMessage};
+use std::io::{Read, Write};
+
+/// Maximum frame size (16 MiB) — guards the server against hostile or
+/// corrupt length prefixes.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// RPC method identifiers (one per Vizier service method, paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Method {
+    CreateStudy = 1,
+    GetStudy = 2,
+    ListStudies = 3,
+    DeleteStudy = 4,
+    LookupStudy = 5,
+    SuggestTrials = 6,
+    GetOperation = 7,
+    AddMeasurement = 8,
+    CompleteTrial = 9,
+    ListTrials = 10,
+    GetTrial = 11,
+    DeleteTrial = 12,
+    CheckEarlyStopping = 13,
+    StopTrial = 14,
+    ListOptimalTrials = 15,
+    UpdateMetadata = 16,
+    /// Health probe; empty request/response.
+    Ping = 17,
+}
+
+impl Method {
+    pub fn from_u8(v: u8) -> Option<Method> {
+        use Method::*;
+        Some(match v {
+            1 => CreateStudy,
+            2 => GetStudy,
+            3 => ListStudies,
+            4 => DeleteStudy,
+            5 => LookupStudy,
+            6 => SuggestTrials,
+            7 => GetOperation,
+            8 => AddMeasurement,
+            9 => CompleteTrial,
+            10 => ListTrials,
+            11 => GetTrial,
+            12 => DeleteTrial,
+            13 => CheckEarlyStopping,
+            14 => StopTrial,
+            15 => ListOptimalTrials,
+            16 => UpdateMetadata,
+            17 => Ping,
+            _ => return None,
+        })
+    }
+}
+
+/// Response status codes (mirrors the gRPC codes the service uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    Ok = 0,
+    NotFound = 1,
+    InvalidArgument = 2,
+    FailedPrecondition = 3,
+    Internal = 4,
+    Unimplemented = 5,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Status {
+        match v {
+            0 => Status::Ok,
+            1 => Status::NotFound,
+            2 => Status::InvalidArgument,
+            3 => Status::FailedPrecondition,
+            5 => Status::Unimplemented,
+            _ => Status::Internal,
+        }
+    }
+}
+
+/// Transport-level errors.
+#[derive(Debug, thiserror::Error)]
+pub enum FrameError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame too large: {0} bytes")]
+    TooLarge(u32),
+    #[error("unknown method id {0}")]
+    UnknownMethod(u8),
+    #[error("empty frame")]
+    Empty,
+    #[error("wire decode error: {0}")]
+    Wire(#[from] super::codec::WireError),
+    #[error("rpc failed: {status:?}: {message}")]
+    Rpc { status: Status, message: String },
+}
+
+/// Write a request frame.
+pub fn write_request<W: Write, M: WireMessage>(
+    w: &mut W,
+    method: Method,
+    msg: &M,
+) -> Result<(), FrameError> {
+    let payload = encode(msg);
+    write_raw(w, method as u8, &payload)
+}
+
+/// Write an OK response frame.
+pub fn write_ok<W: Write, M: WireMessage>(w: &mut W, msg: &M) -> Result<(), FrameError> {
+    let payload = encode(msg);
+    write_raw(w, Status::Ok as u8, &payload)
+}
+
+/// Write an error response frame.
+pub fn write_err<W: Write>(w: &mut W, status: Status, message: &str) -> Result<(), FrameError> {
+    write_raw(w, status as u8, message.as_bytes())
+}
+
+fn write_raw<W: Write>(w: &mut W, head: u8, payload: &[u8]) -> Result<(), FrameError> {
+    let total = 1 + payload.len() as u32;
+    if total > MAX_FRAME {
+        return Err(FrameError::TooLarge(total));
+    }
+    w.write_all(&total.to_le_bytes())?;
+    w.write_all(&[head])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame: returns (head byte, payload).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), FrameError> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let total = u32::from_le_bytes(len_buf);
+    if total == 0 {
+        return Err(FrameError::Empty);
+    }
+    if total > MAX_FRAME {
+        return Err(FrameError::TooLarge(total));
+    }
+    let mut buf = vec![0u8; total as usize];
+    r.read_exact(&mut buf)?;
+    let head = buf[0];
+    buf.drain(..1);
+    Ok((head, buf))
+}
+
+/// Read a request frame: returns (method, payload).
+pub fn read_request<R: Read>(r: &mut R) -> Result<(Method, Vec<u8>), FrameError> {
+    let (head, payload) = read_frame(r)?;
+    let method = Method::from_u8(head).ok_or(FrameError::UnknownMethod(head))?;
+    Ok((method, payload))
+}
+
+/// Read a response frame, decoding the payload on OK and converting error
+/// statuses into [`FrameError::Rpc`].
+pub fn read_response<R: Read, M: WireMessage>(r: &mut R) -> Result<M, FrameError> {
+    let (head, payload) = read_frame(r)?;
+    let status = Status::from_u8(head);
+    if status == Status::Ok {
+        Ok(decode(&payload)?)
+    } else {
+        Err(FrameError::Rpc {
+            status,
+            message: String::from_utf8_lossy(&payload).into_owned(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::messages::{GetStudyRequest, StudyProto, StudyResponse};
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        let req = GetStudyRequest { name: "studies/1".into() };
+        write_request(&mut buf, Method::GetStudy, &req).unwrap();
+        let mut cur = Cursor::new(buf);
+        let (method, payload) = read_request(&mut cur).unwrap();
+        assert_eq!(method, Method::GetStudy);
+        let back: GetStudyRequest = decode(&payload).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn ok_response_roundtrip() {
+        let mut buf = Vec::new();
+        let resp = StudyResponse {
+            study: StudyProto { name: "studies/1".into(), ..Default::default() },
+        };
+        write_ok(&mut buf, &resp).unwrap();
+        let mut cur = Cursor::new(buf);
+        let back: StudyResponse = read_response(&mut cur).unwrap();
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn error_response_surfaces_status() {
+        let mut buf = Vec::new();
+        write_err(&mut buf, Status::NotFound, "no such study").unwrap();
+        let mut cur = Cursor::new(buf);
+        let err = read_response::<_, StudyResponse>(&mut cur).unwrap_err();
+        match err {
+            FrameError::Rpc { status, message } => {
+                assert_eq!(status, Status::NotFound);
+                assert_eq!(message, "no such study");
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        buf.push(0);
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(FrameError::TooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_stream_is_io_error() {
+        let mut buf = Vec::new();
+        write_err(&mut buf, Status::Ok, "x").unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let mut buf = Vec::new();
+        write_raw(&mut buf, 200, b"").unwrap();
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(
+            read_request(&mut cur),
+            Err(FrameError::UnknownMethod(200))
+        ));
+    }
+
+    #[test]
+    fn back_to_back_frames() {
+        let mut buf = Vec::new();
+        for i in 0..5u64 {
+            write_request(
+                &mut buf,
+                Method::GetStudy,
+                &GetStudyRequest { name: format!("studies/{i}") },
+            )
+            .unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for i in 0..5u64 {
+            let (m, p) = read_request(&mut cur).unwrap();
+            assert_eq!(m, Method::GetStudy);
+            let req: GetStudyRequest = decode(&p).unwrap();
+            assert_eq!(req.name, format!("studies/{i}"));
+        }
+    }
+}

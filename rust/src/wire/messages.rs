@@ -1,0 +1,1112 @@
+//! The Vizier message schema (proto-equivalents).
+//!
+//! These mirror the Vertex/OSS Vizier protocol-buffer definitions the paper
+//! describes (§3.1, Appendix D.3): `Study`, `StudySpec`, `ParameterSpec`,
+//! `MetricSpec`, `Trial`, `Measurement`, `Metric`, metadata, long-running
+//! `Operation`s, and the request/response pairs for every RPC method.
+//! Per Table 2 these are the *proto* side; the richer PyVizier-style types
+//! live in [`crate::pyvizier`] with converters in
+//! [`crate::pyvizier::converters`].
+
+use super::codec::{Reader, WireError, WireMessage, Writer};
+
+// ---------------------------------------------------------------------------
+// Enums
+// ---------------------------------------------------------------------------
+
+macro_rules! wire_enum {
+    ($(#[$doc:meta])* $name:ident { $($variant:ident = $val:expr),+ $(,)? }) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+        pub enum $name {
+            $($variant = $val),+
+        }
+
+        impl $name {
+            pub fn from_u64(v: u64) -> Result<Self, WireError> {
+                match v {
+                    $($val => Ok($name::$variant),)+
+                    other => Err(WireError::BadEnum { name: stringify!($name), value: other }),
+                }
+            }
+            pub fn as_u64(self) -> u64 {
+                self as u64
+            }
+        }
+    };
+}
+
+wire_enum! {
+    /// Lifecycle state of a trial (paper §4.1).
+    TrialState {
+        Requested = 1,
+        Active = 2,
+        Stopping = 3,
+        Completed = 4,
+        Infeasible = 5,
+    }
+}
+
+wire_enum! {
+    /// Lifecycle state of a study (paper §4.1).
+    StudyState {
+        Active = 1,
+        Inactive = 2,
+        Completed = 3,
+    }
+}
+
+wire_enum! {
+    /// Whether a metric is maximized or minimized.
+    MetricGoal {
+        Maximize = 1,
+        Minimize = 2,
+    }
+}
+
+wire_enum! {
+    /// Scaling type for numerical parameters (paper §4.2).
+    ScaleType {
+        Linear = 1,
+        Log = 2,
+        ReverseLog = 3,
+    }
+}
+
+wire_enum! {
+    /// Observation-noise hint (paper Appendix B.2).
+    ObservationNoise {
+        Unspecified = 0,
+        Low = 1,
+        High = 2,
+    }
+}
+
+wire_enum! {
+    /// Automated-stopping configuration (paper Appendix B.1).
+    StoppingKind {
+        None = 0,
+        Median = 1,
+        DecayCurve = 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Values, parameters, metrics, measurements
+// ---------------------------------------------------------------------------
+
+/// A parameter value (the proto uses `google.protobuf.Value`; we use a
+/// tagged union with the same reachable states).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl WireMessage for ParamValue {
+    fn encode_fields(&self, w: &mut Writer) {
+        match self {
+            ParamValue::F64(v) => w.f64(1, *v),
+            ParamValue::I64(v) => w.i64(2, *v),
+            ParamValue::Str(v) => w.str(3, v),
+            ParamValue::Bool(v) => w.bool(4, *v),
+        }
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut out = None;
+        while let Some((f, v)) = r.next_field()? {
+            out = Some(match f {
+                1 => ParamValue::F64(v.as_f64()?),
+                2 => ParamValue::I64(v.as_i64()?),
+                3 => ParamValue::Str(v.as_string()?),
+                4 => ParamValue::Bool(v.as_bool()?),
+                _ => continue,
+            });
+        }
+        out.ok_or(WireError::MissingField("ParamValue.oneof"))
+    }
+}
+
+/// One named parameter inside a trial.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialParameter {
+    pub parameter_id: String,
+    pub value: ParamValue,
+}
+
+impl WireMessage for TrialParameter {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.parameter_id);
+        w.msg(2, &self.value);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut id = None;
+        let mut value = None;
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => id = Some(v.as_string()?),
+                2 => value = Some(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(Self {
+            parameter_id: id.ok_or(WireError::MissingField("TrialParameter.parameter_id"))?,
+            value: value.ok_or(WireError::MissingField("TrialParameter.value"))?,
+        })
+    }
+}
+
+/// One named metric value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub metric_id: String,
+    pub value: f64,
+}
+
+impl WireMessage for Metric {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.metric_id);
+        w.f64(2, self.value);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut id = None;
+        let mut value = 0.0;
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => id = Some(v.as_string()?),
+                2 => value = v.as_f64()?,
+                _ => {}
+            }
+        }
+        Ok(Self {
+            metric_id: id.ok_or(WireError::MissingField("Metric.metric_id"))?,
+            value,
+        })
+    }
+}
+
+/// An (intermediate or final) evaluation of a trial.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Measurement {
+    pub step_count: i64,
+    pub elapsed_secs: f64,
+    pub metrics: Vec<Metric>,
+}
+
+impl WireMessage for Measurement {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.i64(1, self.step_count);
+        w.f64(2, self.elapsed_secs);
+        w.msgs(3, &self.metrics);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Measurement::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.step_count = v.as_i64()?,
+                2 => m.elapsed_secs = v.as_f64()?,
+                3 => m.metrics.push(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// One namespaced key-value metadata entry (paper §4.1, §6.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetadataItem {
+    pub namespace: String,
+    pub key: String,
+    pub value: Vec<u8>,
+}
+
+impl WireMessage for MetadataItem {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.namespace);
+        w.str(2, &self.key);
+        w.bytes(3, &self.value);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let (mut ns, mut key, mut value) = (String::new(), None, Vec::new());
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => ns = v.as_string()?,
+                2 => key = Some(v.as_string()?),
+                3 => value = v.as_bytes()?.to_vec(),
+                _ => {}
+            }
+        }
+        Ok(Self {
+            namespace: ns,
+            key: key.ok_or(WireError::MissingField("MetadataItem.key"))?,
+            value,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trial
+// ---------------------------------------------------------------------------
+
+/// A suggestion plus (eventually) its evaluation (paper §4.1: "a Trial
+/// without f(x) is also considered a suggestion").
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialProto {
+    pub id: u64,
+    pub state: TrialState,
+    pub parameters: Vec<TrialParameter>,
+    pub final_measurement: Option<Measurement>,
+    pub measurements: Vec<Measurement>,
+    pub client_id: String,
+    pub infeasibility_reason: String,
+    pub metadata: Vec<MetadataItem>,
+    pub created_ms: u64,
+    pub completed_ms: u64,
+}
+
+impl Default for TrialProto {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            state: TrialState::Requested,
+            parameters: Vec::new(),
+            final_measurement: None,
+            measurements: Vec::new(),
+            client_id: String::new(),
+            infeasibility_reason: String::new(),
+            metadata: Vec::new(),
+            created_ms: 0,
+            completed_ms: 0,
+        }
+    }
+}
+
+impl WireMessage for TrialProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.u64(1, self.id);
+        w.u64(2, self.state.as_u64());
+        w.msgs(3, &self.parameters);
+        if let Some(fm) = &self.final_measurement {
+            w.msg(4, fm);
+        }
+        w.msgs(5, &self.measurements);
+        w.str(6, &self.client_id);
+        w.str(7, &self.infeasibility_reason);
+        w.msgs(8, &self.metadata);
+        w.u64(9, self.created_ms);
+        w.u64(10, self.completed_ms);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut t = TrialProto::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => t.id = v.as_u64()?,
+                2 => t.state = TrialState::from_u64(v.as_u64()?)?,
+                3 => t.parameters.push(v.as_msg()?),
+                4 => t.final_measurement = Some(v.as_msg()?),
+                5 => t.measurements.push(v.as_msg()?),
+                6 => t.client_id = v.as_string()?,
+                7 => t.infeasibility_reason = v.as_string()?,
+                8 => t.metadata.push(v.as_msg()?),
+                9 => t.created_ms = v.as_u64()?,
+                10 => t.completed_ms = v.as_u64()?,
+                _ => {}
+            }
+        }
+        Ok(t)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParameterSpec (recursive: conditional children, paper §4.2)
+// ---------------------------------------------------------------------------
+
+/// The kind-specific payload of a parameter spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParameterKind {
+    /// Continuous range `[min, max]`.
+    Double { min: f64, max: f64 },
+    /// Integer range `[min, max]`.
+    Integer { min: i64, max: i64 },
+    /// Finite ordered set of real values.
+    Discrete { values: Vec<f64> },
+    /// Unordered list of strings.
+    Categorical { values: Vec<String> },
+}
+
+/// Values of the parent parameter under which a child spec is active.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ParentValues {
+    pub values: Vec<ParamValue>,
+}
+
+impl WireMessage for ParentValues {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.msgs(1, &self.values);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut p = ParentValues::default();
+        while let Some((f, v)) = r.next_field()? {
+            if f == 1 {
+                p.values.push(v.as_msg()?);
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// A child spec active only for certain parent values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConditionalParameterSpec {
+    pub parent_values: ParentValues,
+    pub spec: ParameterSpecProto,
+}
+
+impl WireMessage for ConditionalParameterSpec {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.msg(1, &self.parent_values);
+        w.msg(2, &self.spec);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut pv = None;
+        let mut spec = None;
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => pv = Some(v.as_msg()?),
+                2 => spec = Some(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(Self {
+            parent_values: pv.ok_or(WireError::MissingField("ConditionalParameterSpec.parent_values"))?,
+            spec: spec.ok_or(WireError::MissingField("ConditionalParameterSpec.spec"))?,
+        })
+    }
+}
+
+/// A parameter specification (proto side of Table 2's `ParameterSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParameterSpecProto {
+    pub parameter_id: String,
+    pub kind: ParameterKind,
+    pub scale_type: ScaleType,
+    pub conditional_children: Vec<ConditionalParameterSpec>,
+}
+
+impl WireMessage for ParameterSpecProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.parameter_id);
+        w.u64(2, self.scale_type.as_u64());
+        match &self.kind {
+            ParameterKind::Double { min, max } => {
+                let mut inner = Writer::new();
+                inner.f64(1, *min);
+                inner.f64(2, *max);
+                w.bytes(3, &inner.into_bytes());
+            }
+            ParameterKind::Integer { min, max } => {
+                let mut inner = Writer::new();
+                inner.i64(1, *min);
+                inner.i64(2, *max);
+                w.bytes(4, &inner.into_bytes());
+            }
+            ParameterKind::Discrete { values } => {
+                let mut inner = Writer::new();
+                inner.f64s_packed(1, values);
+                w.bytes(5, &inner.into_bytes());
+            }
+            ParameterKind::Categorical { values } => {
+                let mut inner = Writer::new();
+                for value in values {
+                    inner.str(1, value);
+                }
+                w.bytes(6, &inner.into_bytes());
+            }
+        }
+        w.msgs(7, &self.conditional_children);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut id = None;
+        let mut scale = ScaleType::Linear;
+        let mut kind = None;
+        let mut children = Vec::new();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => id = Some(v.as_string()?),
+                2 => scale = ScaleType::from_u64(v.as_u64()?)?,
+                3 => {
+                    let mut inner = Reader::new(v.as_bytes()?);
+                    let (mut min, mut max) = (0.0, 0.0);
+                    while let Some((g, u)) = inner.next_field()? {
+                        match g {
+                            1 => min = u.as_f64()?,
+                            2 => max = u.as_f64()?,
+                            _ => {}
+                        }
+                    }
+                    kind = Some(ParameterKind::Double { min, max });
+                }
+                4 => {
+                    let mut inner = Reader::new(v.as_bytes()?);
+                    let (mut min, mut max) = (0i64, 0i64);
+                    while let Some((g, u)) = inner.next_field()? {
+                        match g {
+                            1 => min = u.as_i64()?,
+                            2 => max = u.as_i64()?,
+                            _ => {}
+                        }
+                    }
+                    kind = Some(ParameterKind::Integer { min, max });
+                }
+                5 => {
+                    let mut inner = Reader::new(v.as_bytes()?);
+                    let mut values = Vec::new();
+                    while let Some((g, u)) = inner.next_field()? {
+                        if g == 1 {
+                            values = u.as_f64s_packed()?;
+                        }
+                    }
+                    kind = Some(ParameterKind::Discrete { values });
+                }
+                6 => {
+                    let mut inner = Reader::new(v.as_bytes()?);
+                    let mut values = Vec::new();
+                    while let Some((g, u)) = inner.next_field()? {
+                        if g == 1 {
+                            values.push(u.as_string()?);
+                        }
+                    }
+                    kind = Some(ParameterKind::Categorical { values });
+                }
+                7 => children.push(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(Self {
+            parameter_id: id.ok_or(WireError::MissingField("ParameterSpec.parameter_id"))?,
+            kind: kind.ok_or(WireError::MissingField("ParameterSpec.kind"))?,
+            scale_type: scale,
+            conditional_children: children,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MetricSpec, stopping config, StudySpec, Study
+// ---------------------------------------------------------------------------
+
+/// Specification of one objective metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSpecProto {
+    pub metric_id: String,
+    pub goal: MetricGoal,
+    /// Optional range hints (Code Block 1 passes min/max for accuracy).
+    pub min_value: f64,
+    pub max_value: f64,
+}
+
+impl WireMessage for MetricSpecProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.metric_id);
+        w.u64(2, self.goal.as_u64());
+        w.f64(3, self.min_value);
+        w.f64(4, self.max_value);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut id = None;
+        let mut goal = MetricGoal::Maximize;
+        let (mut min_value, mut max_value) = (f64::NEG_INFINITY, f64::INFINITY);
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => id = Some(v.as_string()?),
+                2 => goal = MetricGoal::from_u64(v.as_u64()?)?,
+                3 => min_value = v.as_f64()?,
+                4 => max_value = v.as_f64()?,
+                _ => {}
+            }
+        }
+        Ok(Self {
+            metric_id: id.ok_or(WireError::MissingField("MetricSpec.metric_id"))?,
+            goal,
+            min_value,
+            max_value,
+        })
+    }
+}
+
+/// Automated-stopping configuration (Appendix B.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoppingConfig {
+    pub kind: StoppingKind,
+    /// Median: minimum number of completed trials before stopping engages.
+    pub min_trials: u64,
+    /// DecayCurve: UCB multiplier for the predicted-final-value test.
+    pub confidence: f64,
+}
+
+impl Default for StoppingConfig {
+    fn default() -> Self {
+        Self {
+            kind: StoppingKind::None,
+            min_trials: 5,
+            confidence: 1.64,
+        }
+    }
+}
+
+impl WireMessage for StoppingConfig {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.u64(1, self.kind.as_u64());
+        w.u64(2, self.min_trials);
+        w.f64(3, self.confidence);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut s = StoppingConfig::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => s.kind = StoppingKind::from_u64(v.as_u64()?)?,
+                2 => s.min_trials = v.as_u64()?,
+                3 => s.confidence = v.as_f64()?,
+                _ => {}
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// The study configuration (proto side of Table 2's `StudySpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudySpecProto {
+    pub parameters: Vec<ParameterSpecProto>,
+    pub metrics: Vec<MetricSpecProto>,
+    pub algorithm: String,
+    pub observation_noise: ObservationNoise,
+    pub stopping: StoppingConfig,
+    pub metadata: Vec<MetadataItem>,
+    /// Seed for deterministic policies (0 = unseeded).
+    pub seed: u64,
+}
+
+impl Default for StudySpecProto {
+    fn default() -> Self {
+        Self {
+            parameters: Vec::new(),
+            metrics: Vec::new(),
+            algorithm: String::new(),
+            observation_noise: ObservationNoise::Unspecified,
+            stopping: StoppingConfig::default(),
+            metadata: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+impl WireMessage for StudySpecProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.msgs(1, &self.parameters);
+        w.msgs(2, &self.metrics);
+        w.str(3, &self.algorithm);
+        w.u64(4, self.observation_noise.as_u64());
+        w.msg(5, &self.stopping);
+        w.msgs(6, &self.metadata);
+        w.u64(7, self.seed);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut s = StudySpecProto::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => s.parameters.push(v.as_msg()?),
+                2 => s.metrics.push(v.as_msg()?),
+                3 => s.algorithm = v.as_string()?,
+                4 => s.observation_noise = ObservationNoise::from_u64(v.as_u64()?)?,
+                5 => s.stopping = v.as_msg()?,
+                6 => s.metadata.push(v.as_msg()?),
+                7 => s.seed = v.as_u64()?,
+                _ => {}
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// A study resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudyProto {
+    pub name: String,
+    pub display_name: String,
+    pub state: StudyState,
+    pub spec: StudySpecProto,
+    pub created_ms: u64,
+}
+
+impl Default for StudyProto {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            display_name: String::new(),
+            state: StudyState::Active,
+            spec: StudySpecProto::default(),
+            created_ms: 0,
+        }
+    }
+}
+
+impl WireMessage for StudyProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.name);
+        w.str(2, &self.display_name);
+        w.u64(3, self.state.as_u64());
+        w.msg(4, &self.spec);
+        w.u64(5, self.created_ms);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut s = StudyProto::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => s.name = v.as_string()?,
+                2 => s.display_name = v.as_string()?,
+                3 => s.state = StudyState::from_u64(v.as_u64()?)?,
+                4 => s.spec = v.as_msg()?,
+                5 => s.created_ms = v.as_u64()?,
+                _ => {}
+            }
+        }
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operations (paper §3.2: durable long-running computations)
+// ---------------------------------------------------------------------------
+
+wire_enum! {
+    /// What computation an operation tracks.
+    OperationKind {
+        SuggestTrials = 1,
+        EarlyStopping = 2,
+    }
+}
+
+/// A durable long-running operation. Stored in the datastore so the server
+/// can resume/restart the computation after a crash (paper §3.2,
+/// "Server-side Fault Tolerance").
+#[derive(Debug, Clone, PartialEq)]
+pub struct OperationProto {
+    pub name: String,
+    pub kind: OperationKind,
+    pub study_name: String,
+    pub client_id: String,
+    pub done: bool,
+    pub error: String,
+    /// SuggestTrials result: the suggested trials.
+    pub trials: Vec<TrialProto>,
+    /// SuggestTrials input: how many suggestions were requested.
+    pub count: u64,
+    /// EarlyStopping input/result.
+    pub trial_id: u64,
+    pub should_stop: bool,
+    pub created_ms: u64,
+}
+
+impl Default for OperationProto {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            kind: OperationKind::SuggestTrials,
+            study_name: String::new(),
+            client_id: String::new(),
+            done: false,
+            error: String::new(),
+            trials: Vec::new(),
+            count: 0,
+            trial_id: 0,
+            should_stop: false,
+            created_ms: 0,
+        }
+    }
+}
+
+impl WireMessage for OperationProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.name);
+        w.u64(2, self.kind.as_u64());
+        w.str(3, &self.study_name);
+        w.str(4, &self.client_id);
+        w.bool(5, self.done);
+        w.str(6, &self.error);
+        w.msgs(7, &self.trials);
+        w.u64(8, self.count);
+        w.u64(9, self.trial_id);
+        w.bool(10, self.should_stop);
+        w.u64(11, self.created_ms);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut o = OperationProto::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => o.name = v.as_string()?,
+                2 => o.kind = OperationKind::from_u64(v.as_u64()?)?,
+                3 => o.study_name = v.as_string()?,
+                4 => o.client_id = v.as_string()?,
+                5 => o.done = v.as_bool()?,
+                6 => o.error = v.as_string()?,
+                7 => o.trials.push(v.as_msg()?),
+                8 => o.count = v.as_u64()?,
+                9 => o.trial_id = v.as_u64()?,
+                10 => o.should_stop = v.as_bool()?,
+                11 => o.created_ms = v.as_u64()?,
+                _ => {}
+            }
+        }
+        Ok(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RPC request/response messages
+// ---------------------------------------------------------------------------
+
+macro_rules! simple_msg {
+    ($(#[$doc:meta])* $name:ident { $($fnum:expr => $field:ident : $ty:tt),* $(,)? }) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, PartialEq, Default)]
+        pub struct $name {
+            $(pub $field: simple_msg!(@ty $ty),)*
+        }
+
+        impl WireMessage for $name {
+            fn encode_fields(&self, #[allow(unused)] w: &mut Writer) {
+                $(simple_msg!(@enc self, w, $fnum, $field, $ty);)*
+            }
+            fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+                #[allow(unused_mut)]
+                let mut m = $name::default();
+                while let Some((f, v)) = r.next_field()? {
+                    let _ = &v;
+                    match f {
+                        $($fnum => simple_msg!(@dec m, v, $field, $ty),)*
+                        _ => {}
+                    }
+                }
+                Ok(m)
+            }
+        }
+    };
+    (@ty str) => { String };
+    (@ty u64) => { u64 };
+    (@ty bool) => { bool };
+    (@ty (msg $t:ty)) => { $t };
+    (@ty (optmsg $t:ty)) => { Option<$t> };
+    (@ty (repmsg $t:ty)) => { Vec<$t> };
+    (@enc $s:ident, $w:ident, $f:expr, $field:ident, str) => { $w.str($f, &$s.$field); };
+    (@enc $s:ident, $w:ident, $f:expr, $field:ident, u64) => { $w.u64($f, $s.$field); };
+    (@enc $s:ident, $w:ident, $f:expr, $field:ident, bool) => { $w.bool($f, $s.$field); };
+    (@enc $s:ident, $w:ident, $f:expr, $field:ident, (msg $t:ty)) => { $w.msg($f, &$s.$field); };
+    (@enc $s:ident, $w:ident, $f:expr, $field:ident, (optmsg $t:ty)) => {
+        if let Some(m) = &$s.$field { $w.msg($f, m); }
+    };
+    (@enc $s:ident, $w:ident, $f:expr, $field:ident, (repmsg $t:ty)) => { $w.msgs($f, &$s.$field); };
+    (@dec $m:ident, $v:ident, $field:ident, str) => { $m.$field = $v.as_string()? };
+    (@dec $m:ident, $v:ident, $field:ident, u64) => { $m.$field = $v.as_u64()? };
+    (@dec $m:ident, $v:ident, $field:ident, bool) => { $m.$field = $v.as_bool()? };
+    (@dec $m:ident, $v:ident, $field:ident, (msg $t:ty)) => { $m.$field = $v.as_msg()? };
+    (@dec $m:ident, $v:ident, $field:ident, (optmsg $t:ty)) => { $m.$field = Some($v.as_msg()?) };
+    (@dec $m:ident, $v:ident, $field:ident, (repmsg $t:ty)) => { $m.$field.push($v.as_msg()?) };
+}
+
+simple_msg! {
+    /// CreateStudy: registers a study; returns the stored resource.
+    CreateStudyRequest { 1 => study: (msg StudyProto) }
+}
+simple_msg! { StudyResponse { 1 => study: (msg StudyProto) } }
+simple_msg! { GetStudyRequest { 1 => name: str } }
+simple_msg! { LookupStudyRequest { 1 => display_name: str } }
+simple_msg! { DeleteStudyRequest { 1 => name: str } }
+simple_msg! { ListStudiesRequest {} }
+simple_msg! { ListStudiesResponse { 1 => studies: (repmsg StudyProto) } }
+simple_msg! { EmptyResponse {} }
+
+simple_msg! {
+    /// SuggestTrials: asks the Pythia policy for `count` suggestions on
+    /// behalf of `client_id`. Returns a long-running operation.
+    SuggestTrialsRequest {
+        1 => study_name: str,
+        2 => count: u64,
+        3 => client_id: str,
+    }
+}
+simple_msg! { OperationResponse { 1 => operation: (msg OperationProto) } }
+simple_msg! { GetOperationRequest { 1 => name: str } }
+
+simple_msg! {
+    AddMeasurementRequest {
+        1 => study_name: str,
+        2 => trial_id: u64,
+        3 => measurement: (msg Measurement),
+    }
+}
+simple_msg! {
+    CompleteTrialRequest {
+        1 => study_name: str,
+        2 => trial_id: u64,
+        3 => final_measurement: (optmsg Measurement),
+        4 => infeasible: bool,
+        5 => infeasibility_reason: str,
+    }
+}
+simple_msg! { TrialResponse { 1 => trial: (msg TrialProto) } }
+simple_msg! { ListTrialsRequest { 1 => study_name: str } }
+simple_msg! { ListTrialsResponse { 1 => trials: (repmsg TrialProto) } }
+simple_msg! { GetTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
+simple_msg! { DeleteTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
+simple_msg! {
+    CheckEarlyStoppingRequest { 1 => study_name: str, 2 => trial_id: u64 }
+}
+simple_msg! { StopTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
+simple_msg! { ListOptimalTrialsRequest { 1 => study_name: str } }
+
+/// One metadata write: `trial_id == 0` targets the StudySpec table, any
+/// other value targets that trial (the two metadata tables of §6.3).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct UnitMetadataUpdate {
+    pub trial_id: u64,
+    pub item: Option<MetadataItem>,
+}
+
+impl WireMessage for UnitMetadataUpdate {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.u64(1, self.trial_id);
+        if let Some(item) = &self.item {
+            w.msg(2, item);
+        }
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut u = UnitMetadataUpdate::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => u.trial_id = v.as_u64()?,
+                2 => u.item = Some(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(u)
+    }
+}
+
+simple_msg! {
+    UpdateMetadataRequest {
+        1 => study_name: str,
+        2 => updates: (repmsg UnitMetadataUpdate),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::codec::{decode, encode};
+
+    fn sample_spec() -> StudySpecProto {
+        StudySpecProto {
+            parameters: vec![
+                ParameterSpecProto {
+                    parameter_id: "learning_rate".into(),
+                    kind: ParameterKind::Double { min: 1e-4, max: 1e-2 },
+                    scale_type: ScaleType::Log,
+                    conditional_children: vec![],
+                },
+                ParameterSpecProto {
+                    parameter_id: "model".into(),
+                    kind: ParameterKind::Categorical {
+                        values: vec!["linear".into(), "dnn".into()],
+                    },
+                    scale_type: ScaleType::Linear,
+                    conditional_children: vec![ConditionalParameterSpec {
+                        parent_values: ParentValues {
+                            values: vec![ParamValue::Str("dnn".into())],
+                        },
+                        spec: ParameterSpecProto {
+                            parameter_id: "num_layers".into(),
+                            kind: ParameterKind::Integer { min: 1, max: 5 },
+                            scale_type: ScaleType::Linear,
+                            conditional_children: vec![],
+                        },
+                    }],
+                },
+                ParameterSpecProto {
+                    parameter_id: "batch".into(),
+                    kind: ParameterKind::Discrete {
+                        values: vec![16.0, 32.0, 64.0],
+                    },
+                    scale_type: ScaleType::Linear,
+                    conditional_children: vec![],
+                },
+            ],
+            metrics: vec![MetricSpecProto {
+                metric_id: "accuracy".into(),
+                goal: MetricGoal::Maximize,
+                min_value: 0.0,
+                max_value: 1.0,
+            }],
+            algorithm: "RANDOM_SEARCH".into(),
+            observation_noise: ObservationNoise::High,
+            stopping: StoppingConfig {
+                kind: StoppingKind::Median,
+                min_trials: 3,
+                confidence: 1.0,
+            },
+            metadata: vec![MetadataItem {
+                namespace: "algo".into(),
+                key: "state".into(),
+                value: vec![1, 2, 3],
+            }],
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn study_roundtrip() {
+        let study = StudyProto {
+            name: "studies/1".into(),
+            display_name: "cifar10".into(),
+            state: StudyState::Active,
+            spec: sample_spec(),
+            created_ms: 1234,
+        };
+        let back: StudyProto = decode(&encode(&study)).unwrap();
+        assert_eq!(back, study);
+    }
+
+    #[test]
+    fn trial_roundtrip_with_all_fields() {
+        let trial = TrialProto {
+            id: 99,
+            state: TrialState::Completed,
+            parameters: vec![
+                TrialParameter {
+                    parameter_id: "lr".into(),
+                    value: ParamValue::F64(0.01),
+                },
+                TrialParameter {
+                    parameter_id: "model".into(),
+                    value: ParamValue::Str("dnn".into()),
+                },
+                TrialParameter {
+                    parameter_id: "layers".into(),
+                    value: ParamValue::I64(-3),
+                },
+                TrialParameter {
+                    parameter_id: "use_bn".into(),
+                    value: ParamValue::Bool(true),
+                },
+            ],
+            final_measurement: Some(Measurement {
+                step_count: 100,
+                elapsed_secs: 12.5,
+                metrics: vec![Metric { metric_id: "acc".into(), value: 0.93 }],
+            }),
+            measurements: vec![Measurement {
+                step_count: 50,
+                elapsed_secs: 6.0,
+                metrics: vec![Metric { metric_id: "acc".into(), value: 0.81 }],
+            }],
+            client_id: "worker-3".into(),
+            infeasibility_reason: String::new(),
+            metadata: vec![MetadataItem {
+                namespace: String::new(),
+                key: "ckpt".into(),
+                value: b"path".to_vec(),
+            }],
+            created_ms: 10,
+            completed_ms: 20,
+        };
+        let back: TrialProto = decode(&encode(&trial)).unwrap();
+        assert_eq!(back, trial);
+    }
+
+    #[test]
+    fn operation_roundtrip() {
+        let op = OperationProto {
+            name: "operations/5".into(),
+            kind: OperationKind::EarlyStopping,
+            study_name: "studies/1".into(),
+            client_id: "w0".into(),
+            done: true,
+            error: "policy exploded".into(),
+            trials: vec![TrialProto::default()],
+            count: 2,
+            trial_id: 17,
+            should_stop: true,
+            created_ms: 42,
+        };
+        let back: OperationProto = decode(&encode(&op)).unwrap();
+        assert_eq!(back, op);
+    }
+
+    #[test]
+    fn request_messages_roundtrip() {
+        let req = SuggestTrialsRequest {
+            study_name: "studies/9".into(),
+            count: 4,
+            client_id: "client-a".into(),
+        };
+        let back: SuggestTrialsRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+
+        let req = CompleteTrialRequest {
+            study_name: "studies/9".into(),
+            trial_id: 3,
+            final_measurement: None,
+            infeasible: true,
+            infeasibility_reason: "nan loss".into(),
+        };
+        let back: CompleteTrialRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+
+        let req = UpdateMetadataRequest {
+            study_name: "studies/9".into(),
+            updates: vec![UnitMetadataUpdate {
+                trial_id: 0,
+                item: Some(MetadataItem {
+                    namespace: "evo".into(),
+                    key: "population".into(),
+                    value: vec![9; 100],
+                }),
+            }],
+        };
+        let back: UpdateMetadataRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn param_value_missing_oneof_is_error() {
+        let r: Result<ParamValue, _> = decode(&[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn deeply_nested_conditionals_roundtrip() {
+        // Build a 5-deep conditional chain.
+        let mut spec = ParameterSpecProto {
+            parameter_id: "leaf".into(),
+            kind: ParameterKind::Double { min: 0.0, max: 1.0 },
+            scale_type: ScaleType::Linear,
+            conditional_children: vec![],
+        };
+        for depth in 0..5 {
+            spec = ParameterSpecProto {
+                parameter_id: format!("level{depth}"),
+                kind: ParameterKind::Categorical { values: vec!["on".into(), "off".into()] },
+                scale_type: ScaleType::Linear,
+                conditional_children: vec![ConditionalParameterSpec {
+                    parent_values: ParentValues { values: vec![ParamValue::Str("on".into())] },
+                    spec,
+                }],
+            };
+        }
+        let back: ParameterSpecProto = decode(&encode(&spec)).unwrap();
+        assert_eq!(back, spec);
+    }
+}

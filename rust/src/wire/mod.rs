@@ -1,0 +1,18 @@
+//! Binary wire format and RPC framing.
+//!
+//! OSS Vizier's API is defined in terms of Protocol Buffers carried over
+//! gRPC (paper §3.1). The vendored registry has neither `prost` nor
+//! `tonic`, so this module reimplements the protobuf **wire format**
+//! (varints, zigzag, tag-length-value fields, nested messages, unknown-field
+//! skipping) from scratch and defines the Vizier message schema on top of it
+//! (`messages`), plus a length-prefixed RPC framing (`framing`) used by the
+//! TCP transport. The architectural property the paper relies on — a
+//! language-neutral binary client/server boundary — is preserved: any
+//! language can implement this codec in a few hundred lines.
+
+pub mod codec;
+pub mod framing;
+pub mod messages;
+pub mod varint;
+
+pub use codec::{Reader, WireError, WireMessage, Writer};

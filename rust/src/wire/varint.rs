@@ -1,0 +1,82 @@
+//! LEB128 varint and zigzag encoding (protobuf-compatible).
+
+/// Append `v` as a base-128 varint.
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode a varint from `buf`, returning (value, bytes consumed).
+pub fn get_uvarint(buf: &[u8]) -> Option<(u64, usize)> {
+    let mut v: u64 = 0;
+    for (i, &b) in buf.iter().enumerate().take(10) {
+        if i == 9 && b > 1 {
+            return None; // overflow past 64 bits
+        }
+        v |= ((b & 0x7F) as u64) << (7 * i);
+        if b & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+    }
+    None
+}
+
+/// Zigzag-encode a signed integer (small magnitudes -> small varints).
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 255, 300, 1 << 21, u64::MAX / 2, u64::MAX] {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            let (back, n) = get_uvarint(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_known_encodings() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 300);
+        assert_eq!(buf, vec![0xAC, 0x02]); // protobuf docs example
+    }
+
+    #[test]
+    fn varint_rejects_truncated_and_overflow() {
+        assert!(get_uvarint(&[0x80]).is_none());
+        assert!(get_uvarint(&[]).is_none());
+        // 11 continuation bytes = too long.
+        assert!(get_uvarint(&[0xFF; 11]).is_none());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, -1, 1, -2, 2, i64::MAX, i64::MIN, 123456, -987654] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // Known mapping from the protobuf spec.
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+    }
+}

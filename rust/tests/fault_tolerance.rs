@@ -1,0 +1,216 @@
+//! Fault-tolerance integration tests (paper §3.2, experiments C-FT-S and
+//! C-FT-C): server crash/restart over the durable WAL and client
+//! crash/restart under client_id trial reassignment.
+
+use ossvizier::client::{TcpTransport, VizierClient};
+use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
+use ossvizier::service::{build_service, VizierServer};
+use ossvizier::wire::messages::ScaleType;
+use std::sync::Arc;
+
+fn config() -> StudyConfig {
+    let mut c = StudyConfig::new("ft");
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::minimize("v"));
+    c.algorithm = Algorithm::RandomSearch;
+    c.seed = 11;
+    c
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ossvizier-ft-{name}-{}-{}",
+        std::process::id(),
+        ossvizier::util::id::next_uid()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d.join("store.wal")
+}
+
+#[test]
+fn server_crash_preserves_all_study_state() {
+    let wal_path = tmp("server-crash");
+    let addr;
+    // Phase 1: create study, run some trials, leave one ACTIVE, then kill
+    // the server without any shutdown handshake.
+    {
+        let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).unwrap());
+        let service = build_service(ds, |_| {}, 4);
+        let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+        addr = server.local_addr().to_string();
+        let mut c = VizierClient::load_or_create_study(
+            Box::new(TcpTransport::connect(&addr).unwrap()),
+            "ft",
+            &config(),
+            "w0",
+        )
+        .unwrap();
+        for _ in 0..5 {
+            let t = c.get_suggestions(1).unwrap().remove(0);
+            c.complete_trial(t.id, Some(&Measurement::new(1).with_metric("v", 0.3)))
+                .unwrap();
+        }
+        let dangling = c.get_suggestions(1).unwrap().remove(0);
+        c.add_measurement(dangling.id, &Measurement::new(1).with_metric("v", 0.9))
+            .unwrap();
+        server.shutdown(); // hard stop; WAL is the only survivor
+    }
+
+    // Phase 2: new server process on the same WAL and port.
+    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).unwrap());
+    let service = build_service(ds, |_| {}, 4);
+    service.resume_pending_operations().unwrap();
+    let server = VizierServer::start(service, &addr).unwrap();
+    let mut c = VizierClient::load_or_create_study(
+        Box::new(TcpTransport::connect(&addr).unwrap()),
+        "ft",
+        &config(),
+        "w0",
+    )
+    .unwrap();
+    let trials = c.list_trials().unwrap();
+    assert_eq!(trials.len(), 6, "all trials survived the crash");
+    assert_eq!(trials.iter().filter(|t| t.is_completed()).count(), 5);
+    // The dangling ACTIVE trial (with its measurement) is re-served to w0.
+    let resumed = c.get_suggestions(1).unwrap().remove(0);
+    assert_eq!(resumed.id, 6);
+    assert_eq!(resumed.measurements.len(), 1, "intermediate measurement survived");
+    c.complete_trial(resumed.id, None).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn interrupted_suggest_operation_is_resumed_after_restart() {
+    // Persist an operation as if the server died between accepting the
+    // RPC and running the policy; a restarted server must complete it.
+    let wal_path = tmp("op-resume");
+    let study_name;
+    {
+        let ds = WalDatastore::open(&wal_path).unwrap();
+        let study = ds
+            .create_study(ossvizier::wire::messages::StudyProto {
+                display_name: "ft".into(),
+                spec: ossvizier::pyvizier::converters::study_config_to_proto(&config()),
+                ..Default::default()
+            })
+            .unwrap();
+        study_name = study.name.clone();
+        ds.create_operation(ossvizier::wire::messages::OperationProto {
+            kind: ossvizier::wire::messages::OperationKind::SuggestTrials,
+            study_name: study.name,
+            client_id: "w9".into(),
+            count: 3,
+            done: false,
+            ..Default::default()
+        })
+        .unwrap();
+    } // crash before any policy work happened
+
+    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).unwrap());
+    let service = build_service(Arc::clone(&ds), |_| {}, 2);
+    assert_eq!(service.resume_pending_operations().unwrap(), 1);
+    // Wait for the worker to finish the resumed operation.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let op = ds.get_operation("operations/1").unwrap();
+        if op.done {
+            assert!(op.error.is_empty(), "{}", op.error);
+            assert_eq!(op.trials.len(), 3, "resumed op produced the suggestions");
+            assert!(op.trials.iter().all(|t| t.client_id == "w9"));
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "operation never completed");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(ds.trial_count(&study_name).unwrap(), 3);
+    service.shutdown();
+}
+
+#[test]
+fn client_restart_same_id_gets_same_trial_other_id_does_not() {
+    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(tmp("client")).unwrap());
+    let service = build_service(ds, |_| {}, 4);
+    let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut a = VizierClient::load_or_create_study(
+        Box::new(TcpTransport::connect(&addr).unwrap()),
+        "ft",
+        &config(),
+        "alpha",
+    )
+    .unwrap();
+    let t1 = a.get_suggestions(1).unwrap().remove(0);
+    drop(a); // client crashes mid-evaluation
+
+    // Same client_id -> same trial (paper §5).
+    let mut a2 = VizierClient::load_or_create_study(
+        Box::new(TcpTransport::connect(&addr).unwrap()),
+        "ft",
+        &config(),
+        "alpha",
+    )
+    .unwrap();
+    let t2 = a2.get_suggestions(1).unwrap().remove(0);
+    assert_eq!(t1.id, t2.id);
+    assert_eq!(t1.parameters, t2.parameters);
+
+    // Different client_id -> different trial.
+    let mut b = VizierClient::load_or_create_study(
+        Box::new(TcpTransport::connect(&addr).unwrap()),
+        "ft",
+        &config(),
+        "beta",
+    )
+    .unwrap();
+    let t3 = b.get_suggestions(1).unwrap().remove(0);
+    assert_ne!(t3.id, t1.id);
+
+    // Shared client_id across two live binaries (paper §5: "multiple
+    // binaries can share the same client_id and collaborate").
+    let mut a3 = VizierClient::load_or_create_study(
+        Box::new(TcpTransport::connect(&addr).unwrap()),
+        "ft",
+        &config(),
+        "alpha",
+    )
+    .unwrap();
+    let t4 = a3.get_suggestions(1).unwrap().remove(0);
+    assert_eq!(t4.id, t1.id, "collaborators see the same assigned trial");
+    server.shutdown();
+}
+
+#[test]
+fn wal_and_memory_datastores_agree_through_the_service() {
+    // Differential test: the same client workload against both datastore
+    // backends must produce identical trial tables.
+    let run = |ds: Arc<dyn Datastore>| -> Vec<(u64, String)> {
+        let service = build_service(ds, |_| {}, 2);
+        let mut c = VizierClient::load_or_create_study(
+            Box::new(ossvizier::client::LocalTransport::new(service)),
+            "diff",
+            &config(),
+            "w",
+        )
+        .unwrap();
+        for i in 0..10 {
+            let t = c.get_suggestions(1).unwrap().remove(0);
+            if i % 4 == 3 {
+                c.report_infeasible(t.id, "bad").unwrap();
+            } else {
+                c.complete_trial(t.id, Some(&Measurement::new(1).with_metric("v", i as f64)))
+                    .unwrap();
+            }
+        }
+        c.list_trials()
+            .unwrap()
+            .into_iter()
+            .map(|t| (t.id, format!("{:?}|{:?}", t.state, t.infeasibility_reason)))
+            .collect()
+    };
+    let mem = run(Arc::new(ossvizier::datastore::memory::InMemoryDatastore::new()));
+    let wal = run(Arc::new(WalDatastore::open(tmp("diff")).unwrap()));
+    assert_eq!(mem, wal);
+}

@@ -1,0 +1,215 @@
+//! Cross-module property tests: wire-format robustness against arbitrary
+//! bytes, service-level consistency under randomized operation sequences,
+//! and policy feasibility invariants across all registered algorithms.
+
+use ossvizier::client::{LocalTransport, VizierClient};
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
+use ossvizier::service::in_memory_service;
+use ossvizier::testing::prop::check;
+use ossvizier::wire::codec::decode;
+use ossvizier::wire::messages::*;
+use ossvizier::wire::framing::Method;
+
+#[test]
+fn decoding_arbitrary_bytes_never_panics() {
+    check("wire decode is total", 2000, |g| {
+        let bytes = g.vec(64, |g| g.u64_below(256) as u8);
+        // Every message type must either decode or error — never panic.
+        let _ = decode::<TrialProto>(&bytes);
+        let _ = decode::<StudyProto>(&bytes);
+        let _ = decode::<StudySpecProto>(&bytes);
+        let _ = decode::<OperationProto>(&bytes);
+        let _ = decode::<ParameterSpecProto>(&bytes);
+        let _ = decode::<SuggestTrialsRequest>(&bytes);
+        let _ = decode::<ossvizier::wire::messages::Measurement>(&bytes);
+    });
+}
+
+#[test]
+fn mutated_valid_messages_never_panic() {
+    // Flip bytes inside a valid encoding: decoder must stay total.
+    check("wire decode survives corruption", 500, |g| {
+        let trial = TrialProto {
+            id: 7,
+            state: TrialState::Completed,
+            parameters: vec![TrialParameter {
+                parameter_id: "x".into(),
+                value: ParamValue::F64(1.5),
+            }],
+            final_measurement: Some(ossvizier::wire::messages::Measurement {
+                step_count: 3,
+                elapsed_secs: 1.0,
+                metrics: vec![Metric { metric_id: "m".into(), value: 0.5 }],
+            }),
+            ..Default::default()
+        };
+        let mut bytes = ossvizier::wire::codec::encode(&trial);
+        let flips = g.usize_range(1, 4);
+        for _ in 0..flips {
+            let i = g.usize_range(0, bytes.len() - 1);
+            let b = g.u64_below(256) as u8;
+            bytes[i] = b;
+        }
+        let _ = decode::<TrialProto>(&bytes);
+    });
+}
+
+#[test]
+fn service_rejects_malformed_frames_without_dying() {
+    // Raw garbage payloads against every method id: the service must answer
+    // with an error frame (or a valid response for empty-payload methods),
+    // and keep serving afterwards.
+    let service = in_memory_service(2);
+    for method_id in 1..=17u8 {
+        let method = Method::from_u8(method_id).unwrap();
+        let garbage = vec![0xFFu8, 0x07, 0x99, 0x01];
+        let resp = ossvizier::service::server::dispatch_buf(&service, method, &garbage);
+        assert!(!resp.is_empty(), "method {method:?} must produce a response frame");
+    }
+    // Still alive:
+    let mut c = VizierClient::for_study(Box::new(LocalTransport::new(service)), "none", "x");
+    c.ping().unwrap();
+}
+
+fn base_config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("prop");
+    c.search_space
+        .add_float("lr", 1e-4, 1e-1, ossvizier::wire::messages::ScaleType::Log)
+        .add_int("layers", 1, 5)
+        .add_discrete("batch", vec![16.0, 32.0, 64.0])
+        .add_categorical("opt", vec!["sgd", "adam"]);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = algorithm;
+    c.seed = 1234;
+    c
+}
+
+#[test]
+fn every_algorithm_produces_feasible_suggestions_through_the_service() {
+    for alg in [
+        Algorithm::RandomSearch,
+        Algorithm::GridSearch,
+        Algorithm::QuasiRandomSearch,
+        Algorithm::HillClimb,
+        Algorithm::RegularizedEvolution,
+        Algorithm::HarmonySearch,
+        Algorithm::Firefly,
+        Algorithm::Custom("GP_BANDIT_RUST".into()),
+    ] {
+        let config = base_config(alg.clone());
+        let service = in_memory_service(2);
+        let mut client = VizierClient::load_or_create_study(
+            Box::new(LocalTransport::new(service)),
+            "prop",
+            &config,
+            "w",
+        )
+        .unwrap();
+        for round in 0..6 {
+            let suggestions = client.get_suggestions(3).unwrap();
+            assert_eq!(suggestions.len(), 3, "{alg:?} round {round}");
+            for t in suggestions {
+                config
+                    .search_space
+                    .validate(&t.parameters)
+                    .unwrap_or_else(|e| panic!("{alg:?} produced infeasible params: {e}"));
+                let score = t.parameters.get_f64("lr").unwrap().log10();
+                client
+                    .complete_trial(t.id, Some(&Measurement::new(1).with_metric("score", score)))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_client_op_sequences_keep_state_consistent() {
+    check("randomized op sequences", 30, |g| {
+        let config = base_config(Algorithm::RandomSearch);
+        let service = in_memory_service(2);
+        let mut client = VizierClient::load_or_create_study(
+            Box::new(LocalTransport::new(service)),
+            "prop",
+            &config,
+            "w",
+        )
+        .unwrap();
+        let mut active: Vec<u64> = Vec::new();
+        let mut completed = 0usize;
+        let mut infeasible = 0usize;
+        for _ in 0..g.usize_range(5, 25) {
+            match g.u64_below(4) {
+                0 => {
+                    let got = client.get_suggestions(g.usize_range(1, 3)).unwrap();
+                    for t in got {
+                        if !active.contains(&t.id) {
+                            active.push(t.id);
+                        }
+                    }
+                }
+                1 if !active.is_empty() => {
+                    let id = active.remove(g.usize_range(0, active.len() - 1));
+                    client
+                        .complete_trial(id, Some(&Measurement::new(1).with_metric("score", 0.5)))
+                        .unwrap();
+                    completed += 1;
+                }
+                2 if !active.is_empty() => {
+                    let id = active.remove(g.usize_range(0, active.len() - 1));
+                    client.report_infeasible(id, "prop-test").unwrap();
+                    infeasible += 1;
+                }
+                _ if !active.is_empty() => {
+                    let id = *g.pick(&active);
+                    client
+                        .add_measurement(id, &Measurement::new(1).with_metric("score", 0.1))
+                        .unwrap();
+                }
+                _ => {}
+            }
+        }
+        // Datastore view must agree with the client's bookkeeping.
+        let trials = client.list_trials().unwrap();
+        let n_completed = trials
+            .iter()
+            .filter(|t| t.state == ossvizier::pyvizier::TrialState::Completed)
+            .count();
+        let n_infeasible = trials
+            .iter()
+            .filter(|t| t.state == ossvizier::pyvizier::TrialState::Infeasible)
+            .count();
+        assert_eq!(n_completed, completed);
+        assert_eq!(n_infeasible, infeasible);
+        // Completing a completed trial must fail cleanly.
+        if let Some(t) = trials.iter().find(|t| t.is_completed()) {
+            assert!(client
+                .complete_trial(t.id, Some(&Measurement::new(1).with_metric("score", 0.0)))
+                .is_err());
+        }
+    });
+}
+
+#[test]
+fn grid_search_exhausts_small_spaces_without_duplicates() {
+    let mut config = StudyConfig::new("grid");
+    config.search_space.add_int("a", 0, 3).add_categorical("b", vec!["x", "y"]);
+    config.add_metric(MetricInformation::maximize("m"));
+    config.algorithm = Algorithm::GridSearch;
+    let service = in_memory_service(2);
+    let mut client = VizierClient::load_or_create_study(
+        Box::new(LocalTransport::new(service)),
+        "grid",
+        &config,
+        "w",
+    )
+    .unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..8 {
+        let t = client.get_suggestions(1).unwrap().remove(0);
+        seen.insert(format!("{:?}", t.parameters));
+        client
+            .complete_trial(t.id, Some(&Measurement::new(1).with_metric("m", 0.0)))
+            .unwrap();
+    }
+    assert_eq!(seen.len(), 8, "8 distinct grid points over a cardinality-8 space");
+}

@@ -1,0 +1,237 @@
+//! End-to-end integration: the full tuning loop of paper §3.2 / Code
+//! Block 1 over the real TCP service — CreateStudy, SuggestTrials +
+//! operation polling, AddMeasurement, CompleteTrial, early stopping, and
+//! both Pythia deployments (in-process and separate-service).
+
+use ossvizier::client::{LocalTransport, TcpTransport, VizierClient};
+use ossvizier::pythia::runner::default_registry;
+use ossvizier::pyvizier::{
+    Algorithm, Measurement, MetricInformation, ObservationNoise, StudyConfig,
+};
+use ossvizier::service::remote_pythia::{PythiaServer, RemotePythia};
+use ossvizier::service::{in_memory_service, VizierServer, VizierService};
+use ossvizier::wire::messages::{ScaleType, StoppingConfig, StoppingKind};
+use std::sync::Arc;
+
+fn branin_config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("branin");
+    c.search_space
+        .add_float("x1", -5.0, 10.0, ScaleType::Linear)
+        .add_float("x2", 0.0, 15.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::minimize("value"));
+    c.algorithm = algorithm;
+    c.observation_noise = ObservationNoise::Low;
+    c.seed = 17;
+    c
+}
+
+fn branin(x1: f64, x2: f64) -> f64 {
+    let a = 1.0;
+    let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+    let c = 5.0 / std::f64::consts::PI;
+    let r = 6.0;
+    let s = 10.0;
+    let t = 1.0 / (8.0 * std::f64::consts::PI);
+    a * (x2 - b * x1 * x1 + c * x1 - r).powi(2) + s * (1.0 - t) * x1.cos() + s
+}
+
+fn run_tuning_loop(client: &mut VizierClient, budget: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut done = 0;
+    while done < budget {
+        let suggestions = client.get_suggestions(2).expect("suggestions");
+        assert!(!suggestions.is_empty());
+        for trial in suggestions {
+            let x1 = trial.parameters.get_f64("x1").unwrap();
+            let x2 = trial.parameters.get_f64("x2").unwrap();
+            let y = branin(x1, x2);
+            best = best.min(y);
+            client
+                .complete_trial(trial.id, Some(&Measurement::new(1).with_metric("value", y)))
+                .expect("complete");
+            done += 1;
+        }
+    }
+    best
+}
+
+#[test]
+fn tcp_end_to_end_random_search() {
+    let service = in_memory_service(4);
+    let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let transport = Box::new(TcpTransport::connect(&addr).unwrap());
+    let config = branin_config(Algorithm::RandomSearch);
+    let mut client =
+        VizierClient::load_or_create_study(transport, "branin", &config, "worker-0").unwrap();
+
+    let best = run_tuning_loop(&mut client, 30);
+    // Branin's global minimum is ~0.398; 30 random samples reliably get
+    // under 20.
+    assert!(best < 20.0, "best {best}");
+
+    // Study state is queryable.
+    let trials = client.list_trials().unwrap();
+    assert_eq!(trials.len(), 30);
+    assert!(trials.iter().all(|t| t.is_completed()));
+    let optimal = client.list_optimal_trials().unwrap();
+    assert_eq!(optimal.len(), 1);
+    assert_eq!(optimal[0].final_metric("value").unwrap(), best);
+    server.shutdown();
+}
+
+#[test]
+fn local_transport_gp_bandit_improves() {
+    let service = in_memory_service(2);
+    let transport = Box::new(LocalTransport::new(service));
+    let config = branin_config(Algorithm::GpBandit);
+    let mut client =
+        VizierClient::load_or_create_study(transport, "branin", &config, "w").unwrap();
+    let best = run_tuning_loop(&mut client, 40);
+    assert!(best < 10.0, "gp-bandit best {best}");
+}
+
+#[test]
+fn multiple_parallel_clients_share_a_study() {
+    let service = in_memory_service(8);
+    let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let config = branin_config(Algorithm::RandomSearch);
+
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            let config = config.clone();
+            std::thread::spawn(move || {
+                let transport = Box::new(TcpTransport::connect(&addr).unwrap());
+                let mut client = VizierClient::load_or_create_study(
+                    transport,
+                    "branin",
+                    &config,
+                    &format!("worker-{i}"),
+                )
+                .unwrap();
+                run_tuning_loop(&mut client, 10);
+                client.study_name.clone()
+            })
+        })
+        .collect();
+    let names: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // All four replicas worked on the SAME study (first created, rest loaded).
+    assert!(names.windows(2).all(|w| w[0] == w[1]), "names {names:?}");
+
+    let transport = Box::new(TcpTransport::connect(&addr).unwrap());
+    let mut client = VizierClient::for_study(transport, &names[0], "observer");
+    assert_eq!(client.list_trials().unwrap().len(), 40);
+    server.shutdown();
+}
+
+#[test]
+fn separate_pythia_service_figure2_topology() {
+    // API server with a remote-Pythia endpoint; Pythia server reads the
+    // datastore back through the API server (Figure 2).
+    let ds: Arc<dyn ossvizier::datastore::Datastore> =
+        Arc::new(ossvizier::datastore::memory::InMemoryDatastore::new());
+
+    // Start the API server first on an ephemeral port with a placeholder
+    // remote endpoint address we fill in below (two-phase bind).
+    let api_placeholder = VizierServer::start(
+        VizierService::new(Arc::clone(&ds), Arc::new(RemotePythia::new("127.0.0.1:1")), 4),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let api_addr = api_placeholder.local_addr().to_string();
+
+    let pythia = PythiaServer::start(default_registry(), &api_addr, "127.0.0.1:0").unwrap();
+    let pythia_addr = pythia.local_addr().to_string();
+
+    // Restart the API service pointing at the live Pythia address.
+    api_placeholder.shutdown();
+    let service = VizierService::new(Arc::clone(&ds), Arc::new(RemotePythia::new(&pythia_addr)), 4);
+    let api = VizierServer::start(service, &api_addr).unwrap();
+
+    let transport = Box::new(TcpTransport::connect(&api_addr).unwrap());
+    let config = branin_config(Algorithm::RegularizedEvolution);
+    let mut client =
+        VizierClient::load_or_create_study(transport, "branin-remote", &config, "w0").unwrap();
+    let best = run_tuning_loop(&mut client, 20);
+    assert!(best.is_finite());
+    assert_eq!(client.list_trials().unwrap().len(), 20);
+
+    // Designer state was persisted through the remote supporter.
+    let stored = client.get_study_config().unwrap();
+    assert!(
+        stored
+            .metadata
+            .get_str("designer.regularized_evolution", "population")
+            .is_some(),
+        "designer state stored via remote pythia"
+    );
+
+    api.shutdown();
+    pythia.shutdown();
+}
+
+#[test]
+fn early_stopping_rpc_flow() {
+    let service = in_memory_service(4);
+    let transport = Box::new(LocalTransport::new(service));
+    let mut config = branin_config(Algorithm::RandomSearch);
+    config.metrics[0] = MetricInformation::maximize("acc");
+    config.stopping = StoppingConfig {
+        kind: StoppingKind::Median,
+        min_trials: 3,
+        confidence: 1.0,
+    };
+    let mut client =
+        VizierClient::load_or_create_study(transport, "curves", &config, "w").unwrap();
+
+    // Complete 4 good trials with full curves.
+    for _ in 0..4 {
+        let t = &client.get_suggestions(1).unwrap()[0];
+        for step in 1..=10 {
+            client
+                .add_measurement(
+                    t.id,
+                    &Measurement::new(step).with_metric("acc", 0.8 * (step as f64 / 10.0)),
+                )
+                .unwrap();
+        }
+        client.complete_trial(t.id, None).unwrap(); // promotes last measurement
+    }
+
+    // A clearly bad trial: intermediate values far below the pool.
+    let bad = &client.get_suggestions(1).unwrap()[0];
+    for step in 1..=5 {
+        client
+            .add_measurement(bad.id, &Measurement::new(step).with_metric("acc", 0.01))
+            .unwrap();
+    }
+    assert!(client.should_trial_stop(bad.id).unwrap(), "bad trial must stop");
+
+    // A good trial is not stopped.
+    let good = &client.get_suggestions(1).unwrap()[0];
+    for step in 1..=5 {
+        client
+            .add_measurement(good.id, &Measurement::new(step).with_metric("acc", 0.9))
+            .unwrap();
+    }
+    assert!(!client.should_trial_stop(good.id).unwrap());
+}
+
+#[test]
+fn infeasible_trials_are_recorded_not_retried() {
+    let service = in_memory_service(2);
+    let transport = Box::new(LocalTransport::new(service));
+    let config = branin_config(Algorithm::RandomSearch);
+    let mut client = VizierClient::load_or_create_study(transport, "inf", &config, "w").unwrap();
+    let t = &client.get_suggestions(1).unwrap()[0];
+    client.report_infeasible(t.id, "nan loss").unwrap();
+    let trials = client.list_trials().unwrap();
+    assert_eq!(trials.len(), 1);
+    assert_eq!(trials[0].infeasibility_reason.as_deref(), Some("nan loss"));
+    // The next suggestion is a NEW trial (infeasible one is done).
+    let t2 = &client.get_suggestions(1).unwrap()[0];
+    assert_ne!(t2.id, t.id);
+}
