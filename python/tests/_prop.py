@@ -1,0 +1,61 @@
+"""Property-testing shim: re-exports hypothesis `given`/`st` when the real
+library is installed, otherwise provides a minimal deterministic stand-in
+(25 seeded draws per property) so the suite runs in offline images."""
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=25, derandomize=True
+    )
+    hypothesis.settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sampler):
+            self.sampler = sampler
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda r: r.randint(lo, hi))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda r: r.uniform(lo, hi))
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(lambda r: r.choice(list(xs)))
+
+    st = _Strategies()
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args):
+                rng = random.Random(0xC0FFEE)
+                for _ in range(25):
+                    drawn = {k: s.sampler(rng) for k, s in strats.items()}
+                    fn(*args, **drawn)
+
+            # Hide the strategy-supplied parameters from pytest's fixture
+            # resolution (inspect.signature follows __wrapped__ otherwise).
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items() if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "st", "HAVE_HYPOTHESIS"]

@@ -4,22 +4,15 @@ Hypothesis sweeps shapes and dtypes; assert_allclose against ref is THE
 core correctness signal for the compiled artifacts.
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _prop import given, st
 
 from compile.kernels import ref
 from compile.kernels.acquisition import ucb_pallas
 from compile.kernels.kernel_matrix import kernel_matrix_pallas
-
-hypothesis.settings.register_profile(
-    "ci", deadline=None, max_examples=25, derandomize=True
-)
-hypothesis.settings.load_profile("ci")
 
 
 def rand(rng, *shape, dtype=np.float32):
@@ -57,7 +50,9 @@ class TestKernelMatrix:
         rng = np.random.default_rng(0)
         x = rand(rng, 16, 3)
         k = np.asarray(kernel_matrix_pallas(x, x, 0.25, 2.0))
-        np.testing.assert_allclose(np.diag(k), 2.0, rtol=1e-5)
+        # f32 sqdist expansion (x²+y²-2xy) leaves ~1e-5 relative error on
+        # the diagonal even after the max(·, 0) clamp.
+        np.testing.assert_allclose(np.diag(k), 2.0, rtol=1e-4)
         np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
 
     def test_values_decay_with_distance(self):

@@ -1,10 +1,9 @@
 """L2 correctness: the full gp_suggest graph vs ref, and the masking
 invariance the Rust runtime's padding relies on."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given
+from _prop import given, st
 
 from compile.kernels import ref
 from compile.model import gp_suggest

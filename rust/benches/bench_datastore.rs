@@ -1,13 +1,15 @@
 //! C-DS: datastore performance — in-memory vs WAL-durable CRUD, WAL
-//! recovery time (the cost of server-side fault tolerance), and the
-//! effect of log compaction.
+//! recovery time (the cost of server-side fault tolerance), the effect of
+//! log compaction, and multi-threaded contention (sharding vs a single
+//! lock; WAL group commit vs serial fsync).
 
 use ossvizier::datastore::memory::InMemoryDatastore;
-use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::wal::{WalDatastore, WalOptions};
 use ossvizier::datastore::Datastore;
 use ossvizier::util::benchkit::{bench, note, section};
 use ossvizier::util::time::Stopwatch;
 use ossvizier::wire::messages::{StudyProto, TrialProto};
+use std::sync::Arc;
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("ossvizier-bench-{}-{name}", std::process::id()));
@@ -111,4 +113,114 @@ fn main() {
         wal.log_size(),
         sw.elapsed_millis_f64()
     ));
+
+    // ------------------------------------------------------------------
+    // C-DS-MT: the paper's "multiple parallel evaluations" load pattern.
+    // N worker threads hammer create_trial + mutate_trial, one study per
+    // thread (distinct studies route to distinct shards).
+    // ------------------------------------------------------------------
+    const MT_THREADS: usize = 8;
+
+    section("C-DS-MT: in-memory contention, 8 threads x (create_trial + mutate)");
+    let run_mem = |ds: Arc<InMemoryDatastore>, per_thread: usize| -> f64 {
+        let studies: Vec<String> = (0..MT_THREADS)
+            .map(|i| ds.create_study(study(&format!("mt{i}"))).unwrap().name)
+            .collect();
+        let sw = Stopwatch::start();
+        let handles: Vec<_> = studies
+            .into_iter()
+            .map(|name| {
+                let ds = Arc::clone(&ds);
+                std::thread::spawn(move || {
+                    for _ in 0..per_thread {
+                        let t = ds.create_trial(&name, TrialProto::default()).unwrap();
+                        ds.mutate_trial(&name, t.id, &mut |t| {
+                            t.created_ms += 1;
+                            Ok(())
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        sw.elapsed_millis_f64()
+    };
+    let per_thread = 5_000;
+    let ops = (MT_THREADS * per_thread * 2) as f64;
+    let single_ms = run_mem(Arc::new(InMemoryDatastore::with_shards(1)), per_thread);
+    let sharded_ms = run_mem(Arc::new(InMemoryDatastore::new()), per_thread);
+    note(&format!(
+        "single lock (1 shard):  {single_ms:>8.2} ms  ({:>9.0} ops/s)",
+        ops / (single_ms / 1e3)
+    ));
+    note(&format!(
+        "sharded (16 shards):    {sharded_ms:>8.2} ms  ({:>9.0} ops/s)  speedup {:.2}x",
+        ops / (sharded_ms / 1e3),
+        single_ms / sharded_ms
+    ));
+    // Timing assertions are advisory on shared/noisy runners: set
+    // OSSVIZIER_BENCH_LAX=1 (as CI does) to report without failing.
+    let lax = std::env::var_os("OSSVIZIER_BENCH_LAX").is_some();
+    if !lax {
+        assert!(
+            sharded_ms <= single_ms * 1.15,
+            "sharded store must not lose to the single-lock baseline \
+             ({sharded_ms:.2} ms vs {single_ms:.2} ms)"
+        );
+    } else if sharded_ms > single_ms * 1.15 {
+        note("WARN: sharded slower than single-lock baseline (lax mode, not failing)");
+    }
+
+    section("C-DS-MT: WAL fsync contention, 8 threads x create_trial");
+    let run_wal = |opts: WalOptions, tag: &str, per_thread: usize| -> (f64, u64, u64) {
+        let ds = Arc::new(WalDatastore::open_with_options(tmp(tag), opts).unwrap());
+        let studies: Vec<String> = (0..MT_THREADS)
+            .map(|i| ds.create_study(study(&format!("w{i}"))).unwrap().name)
+            .collect();
+        let sw = Stopwatch::start();
+        let handles: Vec<_> = studies
+            .into_iter()
+            .map(|name| {
+                let ds = Arc::clone(&ds);
+                std::thread::spawn(move || {
+                    for _ in 0..per_thread {
+                        ds.create_trial(&name, TrialProto::default()).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        (sw.elapsed_millis_f64(), ds.records_flushed(), ds.batches_flushed())
+    };
+    let per_thread = 250;
+    let ops = (MT_THREADS * per_thread) as f64;
+    let (serial_ms, _, _) =
+        run_wal(WalOptions { sync: true, group_commit: false }, "mt-serial", per_thread);
+    let (group_ms, recs, batches) =
+        run_wal(WalOptions { sync: true, group_commit: true }, "mt-group", per_thread);
+    note(&format!(
+        "serial fsync/write:     {serial_ms:>8.2} ms  ({:>9.0} ops/s)",
+        ops / (serial_ms / 1e3)
+    ));
+    note(&format!(
+        "group commit + fsync:   {group_ms:>8.2} ms  ({:>9.0} ops/s)  speedup {:.2}x, \
+         {recs} records in {batches} fsync batches ({:.1} rec/batch)",
+        ops / (group_ms / 1e3),
+        serial_ms / group_ms,
+        recs as f64 / batches.max(1) as f64
+    ));
+    if !lax {
+        assert!(
+            group_ms <= serial_ms * 1.15,
+            "group commit must not lose to serial fsync under contention \
+             ({group_ms:.2} ms vs {serial_ms:.2} ms)"
+        );
+    } else if group_ms > serial_ms * 1.15 {
+        note("WARN: group commit slower than serial fsync (lax mode, not failing)");
+    }
 }

@@ -16,17 +16,30 @@ use crate::wire::messages::*;
 use std::time::{Duration, Instant};
 
 /// Client-side errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ClientError {
-    #[error("transport failure: {0}")]
     Transport(String),
-    #[error("rpc {status:?}: {message}")]
     Rpc { status: Status, message: String },
-    #[error("operation {0} failed on the server: {1}")]
     OperationFailed(String, String),
-    #[error("timed out waiting for operation {0}")]
     OperationTimeout(String),
 }
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Transport(msg) => write!(f, "transport failure: {msg}"),
+            ClientError::Rpc { status, message } => write!(f, "rpc {status:?}: {message}"),
+            ClientError::OperationFailed(op, msg) => {
+                write!(f, "operation {op} failed on the server: {msg}")
+            }
+            ClientError::OperationTimeout(op) => {
+                write!(f, "timed out waiting for operation {op}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
 
 impl From<FrameError> for ClientError {
     fn from(e: FrameError) -> Self {

@@ -1,11 +1,45 @@
 //! In-memory datastore: the default backing store, also embedded inside
 //! [`super::wal::WalDatastore`] as the materialized state.
+//!
+//! # Sharding
+//!
+//! State is partitioned into [`DEFAULT_SHARD_COUNT`] independent shards
+//! (configurable via [`InMemoryDatastore::with_shards`]), each behind its
+//! own `RwLock`. A study is routed to a shard by a stable FNV-1a hash of
+//! its resource name, so all trial operations for one study serialize on
+//! one shard lock while different studies proceed in parallel — the
+//! paper's "multiple parallel evaluations" load pattern (§3.1) no longer
+//! funnels through a single global lock. Operations are routed the same
+//! way by operation name.
+//!
+//! Cross-shard concerns:
+//! * `list_studies` / `pending_operations` take shard locks one at a time
+//!   (never two at once — no lock-order hazard) and merge.
+//! * display-name lookup and uniqueness go through a small `directory`
+//!   mutex (display name → study name). Lock order is always
+//!   directory → shard, and the directory lock is never held while
+//!   another directory-taking call runs, so the pair cannot deadlock.
 
 use super::{Datastore, DsError};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
+
+/// Default number of shards (a power of two comfortably above typical
+/// worker-thread counts, so independent studies rarely collide).
+pub const DEFAULT_SHARD_COUNT: usize = 16;
+
+/// Stable (process-independent) FNV-1a hash used for shard routing, so
+/// tests and tooling can predict placement.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
 
 #[derive(Debug, Default)]
 struct StudyEntry {
@@ -15,42 +49,103 @@ struct StudyEntry {
 }
 
 #[derive(Debug, Default)]
-struct State {
+struct Shard {
     studies: HashMap<String, StudyEntry>,
     operations: HashMap<String, OperationProto>,
 }
 
-/// Thread-safe in-memory store.
-#[derive(Debug, Default)]
+/// Thread-safe sharded in-memory store.
+#[derive(Debug)]
 pub struct InMemoryDatastore {
-    state: RwLock<State>,
+    shards: Vec<RwLock<Shard>>,
+    /// display name -> study name (fast `lookup_study`, uniqueness check).
+    directory: Mutex<HashMap<String, String>>,
     next_study: AtomicU64,
     next_op: AtomicU64,
 }
 
+impl Default for InMemoryDatastore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl InMemoryDatastore {
     pub fn new() -> Self {
+        Self::with_shards(DEFAULT_SHARD_COUNT)
+    }
+
+    /// Store with an explicit shard count (>= 1). `with_shards(1)` is the
+    /// single-lock layout, kept as a benchmark baseline.
+    pub fn with_shards(n: usize) -> Self {
+        let n = n.max(1);
         Self {
-            state: RwLock::new(State::default()),
+            shards: (0..n).map(|_| RwLock::new(Shard::default())).collect(),
+            directory: Mutex::new(HashMap::new()),
             next_study: AtomicU64::new(1),
             next_op: AtomicU64::new(1),
         }
     }
 
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a study (or operation) name routes to. Deterministic:
+    /// the same name always maps to the same shard for a given count.
+    pub fn shard_index(&self, name: &str) -> usize {
+        (fnv1a(name) % self.shards.len() as u64) as usize
+    }
+
+    /// Names of the studies currently resident in shard `idx` (unsorted).
+    /// Introspection for tests and tooling.
+    pub fn studies_in_shard(&self, idx: usize) -> Vec<String> {
+        self.shards[idx].read().unwrap().studies.keys().cloned().collect()
+    }
+
+    fn shard_of(&self, name: &str) -> &RwLock<Shard> {
+        &self.shards[self.shard_index(name)]
+    }
+
     /// Apply a study proto without assigning a fresh name (used by WAL
     /// replay). Overwrites silently and keeps id counters monotone.
     pub(crate) fn apply_put_study(&self, study: StudyProto) {
-        let mut st = self.state.write().unwrap();
         if let Some(n) = study.name.strip_prefix("studies/").and_then(|s| s.parse::<u64>().ok()) {
             self.next_study.fetch_max(n + 1, Ordering::SeqCst);
         }
-        let entry = st.studies.entry(study.name.clone()).or_default();
+        let mut dir = self.directory.lock().unwrap();
+        let mut sh = self.shard_of(&study.name).write().unwrap();
+        let entry = sh.studies.entry(study.name.clone()).or_default();
+        if entry.study.display_name != study.display_name {
+            Self::remap_display(&mut dir, &entry.study.display_name, &study.display_name, &study.name);
+        } else if !study.display_name.is_empty() {
+            dir.entry(study.display_name.clone()).or_insert_with(|| study.name.clone());
+        }
         entry.study = study;
     }
 
+    /// Move a directory mapping from `old` to `new` for study `name`.
+    fn remap_display(
+        dir: &mut HashMap<String, String>,
+        old: &str,
+        new: &str,
+        name: &str,
+    ) {
+        if !old.is_empty() {
+            if let Some(owner) = dir.get(old) {
+                if owner == name {
+                    dir.remove(old);
+                }
+            }
+        }
+        if !new.is_empty() {
+            dir.insert(new.to_string(), name.to_string());
+        }
+    }
+
     pub(crate) fn apply_put_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut sh = self.shard_of(study).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -60,19 +155,23 @@ impl InMemoryDatastore {
     }
 
     pub(crate) fn apply_put_operation(&self, op: OperationProto) {
-        let mut st = self.state.write().unwrap();
         if let Some(n) = op.name.strip_prefix("operations/").and_then(|s| s.parse::<u64>().ok()) {
             self.next_op.fetch_max(n + 1, Ordering::SeqCst);
         }
-        st.operations.insert(op.name.clone(), op);
+        let mut sh = self.shard_of(&op.name).write().unwrap();
+        sh.operations.insert(op.name.clone(), op);
     }
 
     pub(crate) fn apply_delete_study(&self, name: &str) {
-        self.state.write().unwrap().studies.remove(name);
+        let mut dir = self.directory.lock().unwrap();
+        let mut sh = self.shard_of(name).write().unwrap();
+        if let Some(entry) = sh.studies.remove(name) {
+            Self::remap_display(&mut dir, &entry.study.display_name, "", name);
+        }
     }
 
     pub(crate) fn apply_delete_trial(&self, study: &str, id: u64) {
-        if let Some(e) = self.state.write().unwrap().studies.get_mut(study) {
+        if let Some(e) = self.shard_of(study).write().unwrap().studies.get_mut(study) {
             e.trials.remove(&id);
         }
     }
@@ -80,20 +179,38 @@ impl InMemoryDatastore {
 
 impl Datastore for InMemoryDatastore {
     fn create_study(&self, mut study: StudyProto) -> Result<StudyProto, DsError> {
-        let mut st = self.state.write().unwrap();
         if study.name.is_empty() {
             let id = self.next_study.fetch_add(1, Ordering::SeqCst);
             study.name = format!("studies/{id}");
         }
-        if st.studies.contains_key(&study.name) {
+        // Directory is held across the shard insert so a concurrent
+        // create with the same display name cannot slip between the
+        // uniqueness check and the reservation. The directory hit is the
+        // fast path; the cross-shard scan is authoritative because
+        // update_study display renames can leave aliases the unique-key
+        // directory no longer tracks. Creates are rare — the scan takes
+        // shard read locks one at a time (dir -> shard order) and never
+        // touches the trial hot path.
+        let mut dir = self.directory.lock().unwrap();
+        if !study.display_name.is_empty() {
+            if dir.contains_key(&study.display_name) {
+                return Err(DsError::StudyExists(study.display_name));
+            }
+            for sh in &self.shards {
+                let sh = sh.read().unwrap();
+                if sh.studies.values().any(|e| e.study.display_name == study.display_name) {
+                    return Err(DsError::StudyExists(study.display_name));
+                }
+            }
+        }
+        let mut sh = self.shard_of(&study.name).write().unwrap();
+        if sh.studies.contains_key(&study.name) {
             return Err(DsError::StudyExists(study.name));
         }
-        if !study.display_name.is_empty()
-            && st.studies.values().any(|e| e.study.display_name == study.display_name)
-        {
-            return Err(DsError::StudyExists(study.display_name));
+        if !study.display_name.is_empty() {
+            dir.insert(study.display_name.clone(), study.name.clone());
         }
-        st.studies.insert(
+        sh.studies.insert(
             study.name.clone(),
             StudyEntry {
                 study: study.clone(),
@@ -105,7 +222,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn get_study(&self, name: &str) -> Result<StudyProto, DsError> {
-        self.state
+        self.shard_of(name)
             .read()
             .unwrap()
             .studies
@@ -115,44 +232,61 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError> {
-        self.state
-            .read()
-            .unwrap()
-            .studies
-            .values()
-            .find(|e| e.study.display_name == display_name)
-            .map(|e| e.study.clone())
-            .ok_or_else(|| DsError::StudyNotFound(display_name.to_string()))
+        let hit = self.directory.lock().unwrap().get(display_name).cloned();
+        if let Some(name) = hit {
+            if let Ok(study) = self.get_study(&name) {
+                return Ok(study);
+            }
+        }
+        // Fallback scan (directory misses can only come from duplicate
+        // display names introduced via update_study).
+        for sh in &self.shards {
+            let sh = sh.read().unwrap();
+            if let Some(e) = sh.studies.values().find(|e| e.study.display_name == display_name) {
+                return Ok(e.study.clone());
+            }
+        }
+        Err(DsError::StudyNotFound(display_name.to_string()))
     }
 
     fn list_studies(&self) -> Result<Vec<StudyProto>, DsError> {
-        let st = self.state.read().unwrap();
-        let mut studies: Vec<StudyProto> = st.studies.values().map(|e| e.study.clone()).collect();
+        let mut studies: Vec<StudyProto> = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.read().unwrap();
+            studies.extend(sh.studies.values().map(|e| e.study.clone()));
+        }
         studies.sort_by(|a, b| a.name.cmp(&b.name));
         Ok(studies)
     }
 
     fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut dir = self.directory.lock().unwrap();
+        let mut sh = self.shard_of(&study.name).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(&study.name)
             .ok_or_else(|| DsError::StudyNotFound(study.name.clone()))?;
+        if entry.study.display_name != study.display_name {
+            Self::remap_display(&mut dir, &entry.study.display_name, &study.display_name, &study.name);
+        }
         entry.study = study;
         Ok(())
     }
 
     fn delete_study(&self, name: &str) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        st.studies
+        let mut dir = self.directory.lock().unwrap();
+        let mut sh = self.shard_of(name).write().unwrap();
+        let entry = sh
+            .studies
             .remove(name)
-            .map(|_| ())
-            .ok_or_else(|| DsError::StudyNotFound(name.to_string()))
+            .ok_or_else(|| DsError::StudyNotFound(name.to_string()))?;
+        Self::remap_display(&mut dir, &entry.study.display_name, "", name);
+        Ok(())
     }
 
     fn create_trial(&self, study: &str, mut trial: TrialProto) -> Result<TrialProto, DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut sh = self.shard_of(study).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -163,8 +297,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn get_trial(&self, study: &str, id: u64) -> Result<TrialProto, DsError> {
-        let st = self.state.read().unwrap();
-        st.studies
+        let sh = self.shard_of(study).read().unwrap();
+        sh.studies
             .get(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
             .trials
@@ -174,8 +308,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError> {
-        let st = self.state.read().unwrap();
-        Ok(st
+        let sh = self.shard_of(study).read().unwrap();
+        Ok(sh
             .studies
             .get(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
@@ -190,8 +324,8 @@ impl Datastore for InMemoryDatastore {
         study: &str,
         filter: &super::query::TrialFilter,
     ) -> Result<Vec<TrialProto>, DsError> {
-        let st = self.state.read().unwrap();
-        let entry = st
+        let sh = self.shard_of(study).read().unwrap();
+        let entry = sh
             .studies
             .get(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -215,8 +349,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut sh = self.shard_of(study).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -228,8 +362,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut sh = self.shard_of(study).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -246,8 +380,8 @@ impl Datastore for InMemoryDatastore {
         id: u64,
         f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
     ) -> Result<TrialProto, DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut sh = self.shard_of(study).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -260,17 +394,17 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn create_operation(&self, mut op: OperationProto) -> Result<OperationProto, DsError> {
-        let mut st = self.state.write().unwrap();
         if op.name.is_empty() {
             let id = self.next_op.fetch_add(1, Ordering::SeqCst);
             op.name = format!("operations/{id}");
         }
-        st.operations.insert(op.name.clone(), op.clone());
+        let mut sh = self.shard_of(&op.name).write().unwrap();
+        sh.operations.insert(op.name.clone(), op.clone());
         Ok(op)
     }
 
     fn get_operation(&self, name: &str) -> Result<OperationProto, DsError> {
-        self.state
+        self.shard_of(name)
             .read()
             .unwrap()
             .operations
@@ -280,18 +414,20 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn update_operation(&self, op: OperationProto) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        if !st.operations.contains_key(&op.name) {
+        let mut sh = self.shard_of(&op.name).write().unwrap();
+        if !sh.operations.contains_key(&op.name) {
             return Err(DsError::OperationNotFound(op.name.clone()));
         }
-        st.operations.insert(op.name.clone(), op);
+        sh.operations.insert(op.name.clone(), op);
         Ok(())
     }
 
     fn pending_operations(&self) -> Result<Vec<OperationProto>, DsError> {
-        let st = self.state.read().unwrap();
-        let mut ops: Vec<OperationProto> =
-            st.operations.values().filter(|o| !o.done).cloned().collect();
+        let mut ops: Vec<OperationProto> = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.read().unwrap();
+            ops.extend(sh.operations.values().filter(|o| !o.done).cloned());
+        }
         ops.sort_by(|a, b| a.name.cmp(&b.name));
         Ok(ops)
     }
@@ -301,8 +437,8 @@ impl Datastore for InMemoryDatastore {
         study: &str,
         updates: &[UnitMetadataUpdate],
     ) -> Result<(), DsError> {
-        let mut st = self.state.write().unwrap();
-        let entry = st
+        let mut sh = self.shard_of(study).write().unwrap();
+        let entry = sh
             .studies
             .get_mut(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
@@ -328,8 +464,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn trial_count(&self, study: &str) -> Result<usize, DsError> {
-        let st = self.state.read().unwrap();
-        Ok(st
+        let sh = self.shard_of(study).read().unwrap();
+        Ok(sh
             .studies
             .get(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
@@ -371,6 +507,34 @@ mod tests {
         let ds = InMemoryDatastore::new();
         ds.create_study(study("same")).unwrap();
         assert!(matches!(ds.create_study(study("same")), Err(DsError::StudyExists(_))));
+    }
+
+    #[test]
+    fn display_rename_aliases_cannot_bypass_uniqueness() {
+        let ds = InMemoryDatastore::new();
+        let a = ds.create_study(study("d")).unwrap();
+        let b = ds.create_study(study("b")).unwrap();
+        // Rename B onto A's display name, then away again — this strands
+        // the alias in a naive unique-key index.
+        let mut b2 = ds.get_study(&b.name).unwrap();
+        b2.display_name = "d".into();
+        ds.update_study(b2.clone()).unwrap();
+        b2.display_name = "x".into();
+        ds.update_study(b2).unwrap();
+        // A still owns "d": another create must be rejected and lookup
+        // must still resolve to A.
+        assert!(matches!(ds.create_study(study("d")), Err(DsError::StudyExists(_))));
+        assert_eq!(ds.lookup_study("d").unwrap().name, a.name);
+    }
+
+    #[test]
+    fn deleted_display_name_can_be_reused() {
+        let ds = InMemoryDatastore::new();
+        let s = ds.create_study(study("re")).unwrap();
+        ds.delete_study(&s.name).unwrap();
+        let s2 = ds.create_study(study("re")).unwrap();
+        assert_ne!(s.name, s2.name);
+        assert_eq!(ds.lookup_study("re").unwrap().name, s2.name);
     }
 
     #[test]
@@ -477,5 +641,81 @@ mod tests {
         assert!(ds.update_trial("nope", TrialProto::default()).is_err());
         let s = ds.create_study(study("a")).unwrap();
         assert!(ds.update_trial(&s.name, TrialProto { id: 5, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_total() {
+        let ds = InMemoryDatastore::new();
+        assert_eq!(ds.shard_count(), DEFAULT_SHARD_COUNT);
+        for i in 0..200 {
+            let name = format!("studies/{i}");
+            let a = ds.shard_index(&name);
+            let b = ds.shard_index(&name);
+            assert_eq!(a, b, "routing must be deterministic");
+            assert!(a < ds.shard_count());
+        }
+    }
+
+    #[test]
+    fn studies_land_in_their_computed_shard() {
+        let ds = InMemoryDatastore::new();
+        let mut names = Vec::new();
+        for i in 0..50 {
+            names.push(ds.create_study(study(&format!("s{i}"))).unwrap().name);
+        }
+        for name in &names {
+            let idx = ds.shard_index(name);
+            assert!(
+                ds.studies_in_shard(idx).contains(name),
+                "{name} not in shard {idx}"
+            );
+        }
+        // Union over shards == list_studies.
+        let mut union: Vec<String> = (0..ds.shard_count())
+            .flat_map(|i| ds.studies_in_shard(i))
+            .collect();
+        union.sort();
+        let mut listed: Vec<String> =
+            ds.list_studies().unwrap().into_iter().map(|s| s.name).collect();
+        listed.sort();
+        assert_eq!(union, listed);
+    }
+
+    #[test]
+    fn single_shard_store_behaves_identically() {
+        let run = |ds: InMemoryDatastore| {
+            let s = ds.create_study(study("x")).unwrap();
+            for _ in 0..5 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            ds.delete_trial(&s.name, 3).unwrap();
+            let ids: Vec<u64> =
+                ds.list_trials(&s.name).unwrap().into_iter().map(|t| t.id).collect();
+            (s.name, ids)
+        };
+        assert_eq!(run(InMemoryDatastore::with_shards(1)), run(InMemoryDatastore::new()));
+    }
+
+    #[test]
+    fn concurrent_study_creation_never_loses_or_duplicates() {
+        let ds = Arc::new(InMemoryDatastore::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let ds = Arc::clone(&ds);
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        ds.create_study(study(&format!("t{t}-{i}"))).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let studies = ds.list_studies().unwrap();
+        assert_eq!(studies.len(), 400);
+        let names: std::collections::HashSet<_> =
+            studies.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), 400, "resource names must be unique");
     }
 }

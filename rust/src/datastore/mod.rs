@@ -7,6 +7,29 @@
 //! write-ahead log of wire-encoded mutations with snapshot + replay
 //! recovery, which is what makes the server-side fault-tolerance claim of
 //! §3.2 hold across process crashes.
+//!
+//! # Scaling under parallel clients
+//!
+//! The paper's reliability story (§3.1–§3.2) assumes the datastore keeps
+//! serving while many workers evaluate trials in parallel. Two mechanisms
+//! keep the hot paths off global locks:
+//!
+//! * **Sharding** ([`memory::InMemoryDatastore`]): studies are partitioned
+//!   into `N` independent shards by a stable FNV-1a hash of the study name,
+//!   each shard behind its own `RwLock`. Trial CRUD for different studies
+//!   proceeds in parallel; per-study trial-id assignment stays sequential
+//!   because a study never leaves its shard. Cross-shard reads
+//!   (`list_studies`) iterate shards; `lookup_study` and display-name
+//!   uniqueness go through a small directory lock that is never held
+//!   across shard work.
+//!
+//! * **Group commit** ([`wal::WalDatastore`]): mutations from concurrent
+//!   connections are appended to a shared in-memory buffer and a dedicated
+//!   committer thread writes + fsyncs the buffer in batches. A writer is
+//!   acknowledged only once the batch containing its record is durable, so
+//!   K concurrent writers pay ~1 fsync instead of K while keeping the
+//!   §3.2 guarantee: every acknowledged mutation survives a crash, and a
+//!   torn batch tail is detected and truncated at replay.
 
 pub mod memory;
 pub mod query;
@@ -15,21 +38,30 @@ pub mod wal;
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 
 /// Datastore errors (mapped to RPC statuses by the service layer).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DsError {
-    #[error("study {0:?} not found")]
     StudyNotFound(String),
-    #[error("trial {1} not found in study {0:?}")]
     TrialNotFound(String, u64),
-    #[error("operation {0:?} not found")]
     OperationNotFound(String),
-    #[error("study {0:?} already exists")]
     StudyExists(String),
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("storage failure: {0}")]
     Storage(String),
 }
+
+impl std::fmt::Display for DsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DsError::StudyNotFound(s) => write!(f, "study {s:?} not found"),
+            DsError::TrialNotFound(s, id) => write!(f, "trial {id} not found in study {s:?}"),
+            DsError::OperationNotFound(op) => write!(f, "operation {op:?} not found"),
+            DsError::StudyExists(s) => write!(f, "study {s:?} already exists"),
+            DsError::Invalid(msg) => write!(f, "invalid argument: {msg}"),
+            DsError::Storage(msg) => write!(f, "storage failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DsError {}
 
 /// Storage abstraction used by the Vizier service.
 ///

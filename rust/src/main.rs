@@ -26,7 +26,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "host", takes_value: true, help: "bind host (default 127.0.0.1)" },
         OptSpec { name: "port", takes_value: true, help: "bind port (default 6006)" },
         OptSpec { name: "datastore", takes_value: true, help: "memory | wal (default memory)" },
+        OptSpec { name: "shards", takes_value: true, help: "in-memory datastore shard count (default 16)" },
         OptSpec { name: "wal-path", takes_value: true, help: "WAL file path (default ./vizier.wal)" },
+        OptSpec { name: "wal-sync", takes_value: false, help: "fsync each WAL commit batch (machine-crash durability)" },
+        OptSpec { name: "wal-serial", takes_value: false, help: "disable WAL group commit (serial appends; baseline)" },
         OptSpec { name: "workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
         OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
         OptSpec { name: "api-addr", takes_value: true, help: "pythia mode: the API server for datastore reads" },
@@ -69,12 +72,24 @@ fn main() {
             let ds: Arc<dyn Datastore> = match args.get_or("datastore", "memory") {
                 "wal" => {
                     let path = args.get_or("wal-path", "./vizier.wal").to_string();
-                    let ds = WalDatastore::open(&path)
+                    let opts = ossvizier::datastore::wal::WalOptions {
+                        sync: args.has_flag("wal-sync"),
+                        group_commit: !args.has_flag("wal-serial"),
+                    };
+                    let ds = WalDatastore::open_with_options(&path, opts)
                         .unwrap_or_else(|e| fatal(&format!("open wal {path}: {e}")));
-                    println!("durable datastore at {path} ({} bytes)", ds.log_size());
+                    println!(
+                        "durable datastore at {path} ({} bytes, group_commit={}, sync={})",
+                        ds.log_size(),
+                        opts.group_commit,
+                        opts.sync
+                    );
                     Arc::new(ds)
                 }
-                "memory" => Arc::new(InMemoryDatastore::new()),
+                "memory" => {
+                    let shards = args.get_u64("shards", 16).unwrap_or(16) as usize;
+                    Arc::new(InMemoryDatastore::with_shards(shards))
+                }
                 other => fatal(&format!("unknown datastore {other:?} (memory|wal)")),
             };
             let workers = args.get_u64("workers", 100).unwrap_or(100) as usize;

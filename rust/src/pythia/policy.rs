@@ -9,17 +9,28 @@ use super::supporter::PolicySupporter;
 use crate::pyvizier::{Metadata, StudyConfig, TrialSuggestion};
 
 /// Errors a policy can raise; mapped to failed operations by the service.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PolicyError {
-    #[error("policy got an unsupported study config: {0}")]
     Unsupported(String),
-    #[error("datastore access failed: {0}")]
     Datastore(String),
-    #[error("policy state corrupt: {0}")]
     CorruptState(String),
-    #[error("internal policy failure: {0}")]
     Internal(String),
 }
+
+impl std::fmt::Display for PolicyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PolicyError::Unsupported(msg) => {
+                write!(f, "policy got an unsupported study config: {msg}")
+            }
+            PolicyError::Datastore(msg) => write!(f, "datastore access failed: {msg}"),
+            PolicyError::CorruptState(msg) => write!(f, "policy state corrupt: {msg}"),
+            PolicyError::Internal(msg) => write!(f, "internal policy failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PolicyError {}
 
 /// Request for new suggestions.
 #[derive(Debug, Clone)]

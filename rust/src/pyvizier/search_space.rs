@@ -24,29 +24,46 @@ pub enum ParameterKind {
 }
 
 /// Errors from search-space construction or trial validation.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SpaceError {
-    #[error("parameter {0:?}: empty value list")]
     EmptyValues(String),
-    #[error("parameter {0:?}: invalid bounds [{1}, {2}]")]
     BadBounds(String, f64, f64),
-    #[error("parameter {0:?}: log scale requires positive lower bound, got {1}")]
     BadLogBound(String, f64),
-    #[error("parameter {0:?}: scale type only applies to numeric parameters")]
     ScaleOnNonNumeric(String),
-    #[error("duplicate parameter name {0:?}")]
     DuplicateName(String),
-    #[error("unknown parent parameter {0:?}")]
     UnknownParent(String),
-    #[error("missing required parameter {0:?}")]
     MissingParameter(String),
-    #[error("unexpected parameter {0:?} (not active for this assignment)")]
     UnexpectedParameter(String),
-    #[error("parameter {0:?}: value {1} out of range")]
     OutOfRange(String, String),
-    #[error("parameter {0:?}: wrong value type")]
     WrongType(String),
 }
+
+impl std::fmt::Display for SpaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpaceError::EmptyValues(p) => write!(f, "parameter {p:?}: empty value list"),
+            SpaceError::BadBounds(p, lo, hi) => {
+                write!(f, "parameter {p:?}: invalid bounds [{lo}, {hi}]")
+            }
+            SpaceError::BadLogBound(p, lo) => {
+                write!(f, "parameter {p:?}: log scale requires positive lower bound, got {lo}")
+            }
+            SpaceError::ScaleOnNonNumeric(p) => {
+                write!(f, "parameter {p:?}: scale type only applies to numeric parameters")
+            }
+            SpaceError::DuplicateName(p) => write!(f, "duplicate parameter name {p:?}"),
+            SpaceError::UnknownParent(p) => write!(f, "unknown parent parameter {p:?}"),
+            SpaceError::MissingParameter(p) => write!(f, "missing required parameter {p:?}"),
+            SpaceError::UnexpectedParameter(p) => {
+                write!(f, "unexpected parameter {p:?} (not active for this assignment)")
+            }
+            SpaceError::OutOfRange(p, v) => write!(f, "parameter {p:?}: value {v} out of range"),
+            SpaceError::WrongType(p) => write!(f, "parameter {p:?}: wrong value type"),
+        }
+    }
+}
+
+impl std::error::Error for SpaceError {}
 
 /// One parameter's specification, possibly with conditional children.
 #[derive(Debug, Clone, PartialEq)]

@@ -135,14 +135,36 @@ impl Default for StudyConfig {
 }
 
 /// Errors from study-config validation.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ConfigError {
-    #[error("study must define at least one metric")]
     NoMetrics,
-    #[error("duplicate metric name {0:?}")]
     DuplicateMetric(String),
-    #[error("search space error: {0}")]
-    Space(#[from] super::search_space::SpaceError),
+    Space(super::search_space::SpaceError),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoMetrics => write!(f, "study must define at least one metric"),
+            ConfigError::DuplicateMetric(m) => write!(f, "duplicate metric name {m:?}"),
+            ConfigError::Space(e) => write!(f, "search space error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Space(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<super::search_space::SpaceError> for ConfigError {
+    fn from(e: super::search_space::SpaceError) -> Self {
+        ConfigError::Space(e)
+    }
 }
 
 impl StudyConfig {

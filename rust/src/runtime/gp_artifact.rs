@@ -41,7 +41,8 @@ impl GpBackend for GpArtifactBackend {
         candidates: &[Vec<f64>],
         noise_high: bool,
     ) -> Result<Vec<f64>, PolicyError> {
-        let internal = |e: anyhow::Error| PolicyError::Internal(format!("pjrt backend: {e}"));
+        let internal =
+            |e: crate::runtime::RuntimeError| PolicyError::Internal(format!("pjrt backend: {e}"));
         let n_real = x_train.len();
         let d_real = x_train.first().map(|r| r.len()).unwrap_or(1);
         let m_real = candidates.len();

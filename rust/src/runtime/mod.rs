@@ -10,3 +10,49 @@ pub mod registry;
 pub use gp_artifact::GpArtifactBackend;
 pub use pjrt::{PjrtExecutable, PjrtRuntime};
 pub use registry::{ArtifactRegistry, VariantKey};
+
+/// Runtime-layer error (artifact discovery, PJRT worker, execution).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used throughout the runtime layer (anyhow-style default
+/// error parameter, so `Result<T, String>` remains expressible).
+pub type Result<T, E = RuntimeError> = std::result::Result<T, E>;
+
+/// Attach context to an error, `anyhow::Context`-style.
+pub(crate) trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| RuntimeError(format!("{}: {e}", msg.into())))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| RuntimeError(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| RuntimeError(msg.into()))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| RuntimeError(f()))
+    }
+}

@@ -1,52 +1,56 @@
-//! Thin wrapper over the `xla` crate's PJRT client: HLO text ->
-//! compiled executable -> execution with f32 buffers.
+//! PJRT client interface: HLO text -> compiled executable -> execution
+//! with f32 buffers.
 //!
-//! The xla crate's handles are `!Send` (Rc + raw FFI pointers), so these
-//! types are confined to the dedicated PJRT worker thread spawned by
-//! [`super::registry::ArtifactRegistry`]; the rest of the system talks to
-//! it through a channel.
+//! This build ships the **stub** implementation so the crate carries no
+//! FFI dependency and compiles fully offline. The stub preserves the whole
+//! API surface — [`PjrtRuntime::cpu`] succeeds, artifact *loading* fails
+//! with a descriptive error — so [`super::registry::ArtifactRegistry`]
+//! discovery, variant selection, and worker plumbing all run and are
+//! testable, while `GpArtifactBackend` callers fall back to the pure-Rust
+//! GP backend exactly as they do when no artifacts have been built.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`); serialized
-//! protos from jax >= 0.5 carry 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects. See /opt/xla-example/README.md and DESIGN.md §3.
+//! To re-enable the real backend, add the `xla` FFI crate (xla_extension)
+//! to Cargo.toml and restore the binding here: the real implementation is
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile`, executing via `Literal` buffers. Interchange is
+//! HLO *text*; serialized protos from jax >= 0.5 carry 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects. The handles are `!Send`
+//! (Rc + raw FFI pointers), which is why these types are confined to the
+//! dedicated PJRT worker thread spawned by the registry; the rest of the
+//! system talks to it through a channel.
 
-use anyhow::{Context, Result};
+use super::{Result, RuntimeError};
 use std::path::Path;
 
 /// A PJRT CPU client (one per worker thread).
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
+    platform: String,
 }
 
 impl PjrtRuntime {
     pub fn cpu() -> Result<Self> {
         Ok(Self {
-            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+            platform: "stub-cpu".to_string(),
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.clone()
     }
 
     /// Load and compile one HLO-text artifact.
     pub fn load_hlo_text(&self, path: &Path) -> Result<PjrtExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(PjrtExecutable { exe })
+        Err(RuntimeError(format!(
+            "cannot compile {}: built without the xla FFI crate (stub PJRT \
+             runtime; see runtime/pjrt.rs docs)",
+            path.display()
+        )))
     }
 }
 
 /// One compiled executable (worker-thread local).
 pub struct PjrtExecutable {
-    exe: xla::PjRtLoadedExecutable,
+    _private: (),
 }
 
 /// An owned f32 input tensor (f64 storage for convenience; converted at
@@ -83,29 +87,18 @@ impl PjrtExecutable {
     /// Execute with f32 tensors; the artifact returns a 1-tuple whose
     /// element is flattened into the result vector.
     pub fn run_f32(&self, inputs: &[TensorInput]) -> Result<Vec<f64>> {
-        let mut literals = Vec::with_capacity(inputs.len());
         for input in inputs {
             let expected: usize = input.dims.iter().product();
-            anyhow::ensure!(
-                expected == input.data.len(),
-                "input size {} != dims {:?}",
-                input.data.len(),
-                input.dims
-            );
-            let f32s: Vec<f32> = input.data.iter().map(|&v| v as f32).collect();
-            let lit = xla::Literal::vec1(&f32s);
-            let dims_i64: Vec<i64> = input.dims.iter().map(|&d| d as i64).collect();
-            let lit = if input.dims.len() == 1 {
-                lit
-            } else {
-                lit.reshape(&dims_i64)?
-            };
-            literals.push(lit);
+            if expected != input.data.len() {
+                return Err(RuntimeError(format!(
+                    "input size {} != dims {:?}",
+                    input.data.len(),
+                    input.dims
+                )));
+            }
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // Lowered with return_tuple=True -> unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        Ok(values.into_iter().map(|v| v as f64).collect())
+        Err(RuntimeError(
+            "stub PJRT runtime cannot execute artifacts".to_string(),
+        ))
     }
 }

@@ -4,8 +4,8 @@
 //! thread gives the rest of the system a `Send + Sync` interface).
 
 use super::pjrt::{PjrtRuntime, TensorInput};
+use super::{Context, Result, RuntimeError};
 use crate::util::json::{parse, Json};
-use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -39,7 +39,7 @@ impl ArtifactRegistry {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("read {}", manifest_path.display()))?;
-        let doc = parse(&text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let doc = parse(&text).map_err(|e| RuntimeError(format!("manifest json: {e}")))?;
         let mut table: Vec<(VariantKey, String)> = Vec::new();
         for v in doc
             .get("variants")
@@ -77,7 +77,7 @@ impl ArtifactRegistry {
         ready_rx
             .recv()
             .context("pjrt worker handshake")?
-            .map_err(|e| anyhow::anyhow!("pjrt init: {e}"))?;
+            .map_err(|e| RuntimeError(format!("pjrt init: {e}")))?;
         Ok(Self {
             variants,
             sender: Mutex::new(sender),
@@ -121,11 +121,11 @@ impl ArtifactRegistry {
                 inputs,
                 reply: reply_tx,
             })
-            .map_err(|_| anyhow::anyhow!("pjrt worker gone"))?;
+            .map_err(|_| RuntimeError::new("pjrt worker gone"))?;
         reply_rx
             .recv()
             .context("pjrt worker dropped the reply")?
-            .map_err(|e| anyhow::anyhow!(e))
+            .map_err(RuntimeError)
     }
 }
 

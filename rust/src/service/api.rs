@@ -26,12 +26,19 @@ use crate::wire::messages::*;
 use std::sync::{Arc, Mutex};
 
 /// Service-level error: an RPC status plus message.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("{status:?}: {message}")]
+#[derive(Debug, Clone)]
 pub struct ApiError {
     pub status: Status,
     pub message: String,
 }
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}: {}", self.status, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
 
 impl ApiError {
     pub fn invalid(msg: impl Into<String>) -> Self {
@@ -159,16 +166,11 @@ impl VizierService {
 
         // Client-side fault tolerance (§5): if this client already has
         // ACTIVE trials, hand them back instead of generating new ones.
-        let assigned: Vec<TrialProto> = self
-            .ds
-            .list_trials(&req.study_name)?
-            .into_iter()
-            .filter(|t| {
-                t.client_id == req.client_id
-                    && matches!(t.state, TrialState::Active | TrialState::Requested)
-            })
-            .take(req.count as usize)
-            .collect();
+        // Server-side filtered read (§6.2): the datastore clones only the
+        // matching trials instead of the whole study.
+        let filter = crate::datastore::query::TrialFilter::active().for_client(&req.client_id);
+        let mut assigned: Vec<TrialProto> = self.ds.query_trials(&req.study_name, &filter)?;
+        assigned.truncate(req.count as usize);
         if !assigned.is_empty() {
             let op = self.ds.create_operation(OperationProto {
                 kind: OperationKind::SuggestTrials,
@@ -460,11 +462,13 @@ impl VizierService {
                     .map_err(|e| e.to_string())?;
                 let completed: Vec<crate::pyvizier::Trial> = self
                     .ds
-                    .list_trials(&op.study_name)
+                    .query_trials(
+                        &op.study_name,
+                        &crate::datastore::query::TrialFilter::completed(),
+                    )
                     .map_err(|e| e.to_string())?
                     .iter()
                     .map(converters::trial_from_proto)
-                    .filter(|t| t.is_completed())
                     .collect();
                 Ok(crate::stopping::decide(config, &trial, &completed))
             } else {

@@ -21,12 +21,19 @@ pub enum Json {
 }
 
 /// Error produced by [`parse`]: message plus byte offset.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct JsonError {
     pub msg: String,
     pub offset: usize,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn obj() -> Json {

@@ -7,23 +7,34 @@
 use super::varint::{get_uvarint, put_uvarint, unzigzag, zigzag};
 
 /// Wire-level decode errors.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WireError {
-    #[error("truncated message")]
     Truncated,
-    #[error("invalid varint")]
     BadVarint,
-    #[error("invalid wire type {0}")]
     BadWireType(u8),
-    #[error("invalid utf-8 in string field")]
     BadUtf8,
-    #[error("missing required field {0}")]
     MissingField(&'static str),
-    #[error("invalid enum value {value} for {name}")]
     BadEnum { name: &'static str, value: u64 },
-    #[error("malformed message: {0}")]
     Malformed(&'static str),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated message"),
+            WireError::BadVarint => write!(f, "invalid varint"),
+            WireError::BadWireType(t) => write!(f, "invalid wire type {t}"),
+            WireError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+            WireError::MissingField(name) => write!(f, "missing required field {name}"),
+            WireError::BadEnum { name, value } => {
+                write!(f, "invalid enum value {value} for {name}")
+            }
+            WireError::Malformed(msg) => write!(f, "malformed message: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 pub const WT_VARINT: u8 = 0;
 pub const WT_FIXED64: u8 = 1;

@@ -89,20 +89,51 @@ impl Status {
 }
 
 /// Transport-level errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FrameError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("frame too large: {0} bytes")]
+    Io(std::io::Error),
     TooLarge(u32),
-    #[error("unknown method id {0}")]
     UnknownMethod(u8),
-    #[error("empty frame")]
     Empty,
-    #[error("wire decode error: {0}")]
-    Wire(#[from] super::codec::WireError),
-    #[error("rpc failed: {status:?}: {message}")]
+    Wire(super::codec::WireError),
     Rpc { status: Status, message: String },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io error: {e}"),
+            FrameError::TooLarge(n) => write!(f, "frame too large: {n} bytes"),
+            FrameError::UnknownMethod(id) => write!(f, "unknown method id {id}"),
+            FrameError::Empty => write!(f, "empty frame"),
+            FrameError::Wire(e) => write!(f, "wire decode error: {e}"),
+            FrameError::Rpc { status, message } => {
+                write!(f, "rpc failed: {status:?}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            FrameError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl From<super::codec::WireError> for FrameError {
+    fn from(e: super::codec::WireError) -> Self {
+        FrameError::Wire(e)
+    }
 }
 
 /// Write a request frame.

@@ -190,6 +190,74 @@ fn randomized_client_op_sequences_keep_state_consistent() {
 }
 
 #[test]
+fn shard_routing_is_a_stable_function_of_the_study_name() {
+    use ossvizier::datastore::memory::InMemoryDatastore;
+    check("same study name always maps to the same shard", 500, |g| {
+        let name = g.string(48);
+        let ds1 = InMemoryDatastore::new();
+        let ds2 = InMemoryDatastore::new();
+        // Stable within one store, across stores, and in range.
+        let idx = ds1.shard_index(&name);
+        assert_eq!(idx, ds1.shard_index(&name));
+        assert_eq!(idx, ds2.shard_index(&name));
+        assert!(idx < ds1.shard_count());
+        // Shard count changes may move the study, but routing stays
+        // deterministic for every count.
+        for shards in [1usize, 2, 7, 16, 64] {
+            let ds = InMemoryDatastore::with_shards(shards);
+            assert_eq!(ds.shard_index(&name), ds.shard_index(&name));
+            assert!(ds.shard_index(&name) < shards);
+        }
+    });
+}
+
+#[test]
+fn list_studies_equals_the_union_of_per_shard_contents() {
+    use ossvizier::datastore::memory::InMemoryDatastore;
+    use ossvizier::datastore::Datastore;
+    use ossvizier::wire::messages::StudyProto;
+    check("list_studies == union of shards", 60, |g| {
+        let ds = InMemoryDatastore::with_shards(g.usize_range(1, 32));
+        let n = g.usize_range(0, 30);
+        let mut names = Vec::new();
+        for i in 0..n {
+            let s = ds
+                .create_study(StudyProto {
+                    display_name: format!("prop-{i}"),
+                    ..Default::default()
+                })
+                .unwrap();
+            names.push(s.name);
+        }
+        // Random deletions keep the invariant interesting.
+        let deletes = g.usize_range(0, n / 2 + 1);
+        for _ in 0..deletes.min(names.len()) {
+            let i = g.usize_range(0, names.len() - 1);
+            let name = names.swap_remove(i);
+            ds.delete_study(&name).unwrap();
+        }
+        // Each surviving study is resident in exactly the shard its name
+        // hashes to, and nowhere else.
+        for name in &names {
+            let home = ds.shard_index(name);
+            for idx in 0..ds.shard_count() {
+                let present = ds.studies_in_shard(idx).contains(name);
+                assert_eq!(present, idx == home, "{name} in shard {idx}, home {home}");
+            }
+        }
+        // Union over shards == list_studies.
+        let mut union: Vec<String> = (0..ds.shard_count())
+            .flat_map(|i| ds.studies_in_shard(i))
+            .collect();
+        union.sort();
+        let mut listed: Vec<String> =
+            ds.list_studies().unwrap().into_iter().map(|s| s.name).collect();
+        listed.sort();
+        assert_eq!(union, listed);
+    });
+}
+
+#[test]
 fn grid_search_exhausts_small_spaces_without_duplicates() {
     let mut config = StudyConfig::new("grid");
     config.search_space.add_int("a", 0, 3).add_categorical("b", vec!["x", "y"]);
