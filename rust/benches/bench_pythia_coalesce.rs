@@ -1,0 +1,189 @@
+//! C-PYTHIA-COAL: coalesced vs per-operation policy invocation for K
+//! clients sharing one study (Pythia v2, ROADMAP "batch suggest
+//! operations per study").
+//!
+//! K worker threads hammer one study with suggest requests through the
+//! in-process transport. With coalescing ON (the default), suggest
+//! operations queued behind a busy worker share one policy invocation;
+//! with coalescing OFF (the pre-v2 baseline) every operation pays its own
+//! policy run — for GP bandit, its own GP fit.
+//!
+//! Run with OSSVIZIER_BENCH_LAX=1 to report without asserting (noisy
+//! shared machines); locally the assertions are enforced.
+
+use ossvizier::client::{LocalTransport, VizierClient};
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use ossvizier::pythia::supporter::PolicySupporter;
+use ossvizier::pyvizier::{
+    converters, Algorithm, Measurement, MetricInformation, StudyConfig, Trial, TrialSuggestion,
+};
+use ossvizier::service::build_service;
+use ossvizier::util::benchkit::section;
+use ossvizier::util::rng::Pcg32;
+use ossvizier::util::time::Stopwatch;
+use ossvizier::wire::messages::{ScaleType, StudyProto, TrialState};
+use std::sync::{Arc, Barrier};
+
+const K: usize = 8; // concurrent clients on one study
+const ROUNDS: usize = 5; // suggest+complete rounds per client
+const WORKERS: usize = 2; // policy worker threads (< K so ops queue up)
+
+fn config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("coal-bench");
+    c.search_space
+        .add_float("lr", 1e-4, 1e-1, ScaleType::Log)
+        .add_int("layers", 1, 5);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = algorithm;
+    c.seed = 11;
+    c
+}
+
+fn objective(t: &Trial) -> f64 {
+    let lr = t.parameters.get_f64("lr").unwrap_or(1e-2);
+    let layers = t.parameters.get_i64("layers").unwrap_or(3) as f64;
+    -(lr.log10() + 2.0).powi(2) - 0.1 * (layers - 3.0).powi(2)
+}
+
+/// A deliberately non-free policy: sleeps ~2ms (standing in for any real
+/// model fit), then samples uniformly. Makes the queueing dynamics of an
+/// expensive policy visible even on fast machines.
+struct SlowRandomPolicy;
+
+impl Policy for SlowRandomPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        supporter: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let salt = supporter.trial_count(&req.study_name)? as u64;
+        let mut rng = Pcg32::seeded(req.study_config.seed ^ salt.wrapping_add(1));
+        let suggestions = (0..req.total_count())
+            .map(|_| TrialSuggestion::new(req.study_config.search_space.sample(&mut rng)))
+            .collect();
+        Ok(SuggestDecision::from_flat(req, suggestions))
+    }
+    fn name(&self) -> &str {
+        "slow-random"
+    }
+}
+
+struct CaseResult {
+    policy_runs: u64,
+    ops: u64,
+    secs: f64,
+}
+
+fn run_case(algorithm: Algorithm, warmup: usize, coalescing: bool) -> CaseResult {
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let cfg = config(algorithm);
+    let study = ds
+        .create_study(StudyProto {
+            display_name: "coal-bench".into(),
+            spec: converters::study_config_to_proto(&cfg),
+            ..Default::default()
+        })
+        .unwrap();
+    // Warm the study so model-based policies do real fits.
+    let mut rng = Pcg32::seeded(3);
+    for _ in 0..warmup {
+        let mut t = Trial::new(0, cfg.search_space.sample(&mut rng));
+        t.state = TrialState::Completed;
+        let score = objective(&t);
+        t.final_measurement = Some(Measurement::new(1).with_metric("score", score));
+        ds.create_trial(&study.name, converters::trial_to_proto(&t)).unwrap();
+    }
+
+    let service = build_service(
+        Arc::clone(&ds),
+        |reg| reg.register("SLOW_RANDOM", Arc::new(|_| Box::new(SlowRandomPolicy))),
+        WORKERS,
+    );
+    service.set_suggest_coalescing(coalescing);
+
+    let barrier = Arc::new(Barrier::new(K));
+    let sw = Stopwatch::start();
+    let handles: Vec<_> = (0..K)
+        .map(|i| {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            let study_name = study.name.clone();
+            std::thread::spawn(move || {
+                let transport = Box::new(LocalTransport::new(service));
+                let mut client =
+                    VizierClient::for_study(transport, &study_name, &format!("w{i}"));
+                barrier.wait();
+                for _ in 0..ROUNDS {
+                    let trial = client.get_suggestions(1).expect("suggest").remove(0);
+                    let m = Measurement::new(1).with_metric("score", objective(&trial));
+                    client.complete_trial(trial.id, Some(&m)).expect("complete");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = sw.elapsed().as_secs_f64();
+    let result = CaseResult {
+        policy_runs: service.metrics.policy_runs(),
+        ops: service.metrics.suggest_ops_served(),
+        secs,
+    };
+    service.shutdown();
+    result
+}
+
+fn report(label: &str, on: &CaseResult, off: &CaseResult) {
+    println!(
+        "{label:<16} coalesced: {:>3} policy runs / {:>3} ops in {:>6.3}s   \
+         per-op: {:>3} policy runs / {:>3} ops in {:>6.3}s   ({:.2}x fewer runs)",
+        on.policy_runs,
+        on.ops,
+        on.secs,
+        off.policy_runs,
+        off.ops,
+        off.secs,
+        off.policy_runs as f64 / on.policy_runs.max(1) as f64,
+    );
+}
+
+fn main() {
+    let lax = std::env::var("OSSVIZIER_BENCH_LAX").is_ok();
+    section("C-PYTHIA-COAL: coalesced vs per-op policy invocations, K=8 clients, one study");
+
+    // Random (wrapped with a 2ms fit cost stand-in).
+    let on = run_case(Algorithm::Custom("SLOW_RANDOM".into()), 0, true);
+    let off = run_case(Algorithm::Custom("SLOW_RANDOM".into()), 0, false);
+    report("random", &on, &off);
+    if !lax {
+        assert_eq!(off.policy_runs, off.ops, "per-op baseline: one run per op");
+        assert!(
+            on.policy_runs < on.ops,
+            "coalescing must serve {} ops with fewer than {} policy runs (got {})",
+            on.ops,
+            on.ops,
+            on.policy_runs
+        );
+        assert!(on.policy_runs < off.policy_runs, "coalesced must do fewer runs");
+    }
+
+    // GP bandit (pure-Rust backend): each policy run is a real GP fit.
+    let on = run_case(Algorithm::Custom("GP_BANDIT_RUST".into()), 30, true);
+    let off = run_case(Algorithm::Custom("GP_BANDIT_RUST".into()), 30, false);
+    report("gp_bandit", &on, &off);
+    if !lax {
+        assert_eq!(off.policy_runs, off.ops, "per-op baseline: one run per op");
+        assert!(
+            on.policy_runs < on.ops,
+            "coalescing must serve {} ops with fewer than {} GP fits (got {})",
+            on.ops,
+            on.ops,
+            on.policy_runs
+        );
+        assert!(on.policy_runs <= off.policy_runs, "coalesced must not do more fits");
+    }
+}

@@ -51,15 +51,10 @@ fn setup(n_trials: usize) -> (Arc<DatastoreSupporter>, String, StudyConfig) {
 }
 
 fn run_policy(policy: &mut dyn Policy, sup: &DatastoreSupporter, study: &str, config: &StudyConfig) {
-    let req = SuggestRequest {
-        study_name: study.to_string(),
-        study_config: config.clone(),
-        count: 1,
-        client_id: "bench".into(),
-    };
+    let req = SuggestRequest::single(study, config.clone(), "bench", 1);
     let d = policy.suggest(&req, sup).expect("suggest");
-    if let Some(md) = &d.study_metadata {
-        sup.update_study_metadata(study, md).unwrap();
+    if !d.metadata_delta.on_study.is_empty() {
+        sup.update_study_metadata(study, &d.metadata_delta.on_study).unwrap();
     }
 }
 

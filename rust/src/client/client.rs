@@ -226,18 +226,35 @@ impl VizierClient {
         Ok(())
     }
 
-    /// Ask whether a running trial should stop (Code Block 3): issues
-    /// CheckTrialEarlyStoppingState and waits for the operation.
-    pub fn should_trial_stop(&mut self, trial_id: u64) -> Result<bool, ClientError> {
+    /// Batched early stopping (Pythia v2): one operation judges many
+    /// trials and returns a per-trial verdict. An empty `trial_ids` asks
+    /// about every ACTIVE trial of the study — useful for a worker that
+    /// owns several running trials and wants one RPC per wave instead of
+    /// one per trial.
+    pub fn check_early_stopping(
+        &mut self,
+        trial_ids: &[u64],
+    ) -> Result<Vec<TrialStopDecision>, ClientError> {
         let resp: OperationResponse = self.rpc(
             Method::CheckEarlyStopping,
             &CheckEarlyStoppingRequest {
                 study_name: self.study_name.clone(),
-                trial_id,
+                trial_ids: trial_ids.to_vec(),
             },
         )?;
         let op = self.wait_operation(resp.operation)?;
-        Ok(op.should_stop)
+        Ok(op.stop_decisions)
+    }
+
+    /// Ask whether a running trial should stop (Code Block 3): the
+    /// single-trial convenience over [`Self::check_early_stopping`].
+    pub fn should_trial_stop(&mut self, trial_id: u64) -> Result<bool, ClientError> {
+        Ok(self
+            .check_early_stopping(&[trial_id])?
+            .iter()
+            .find(|d| d.trial_id == trial_id)
+            .map(|d| d.should_stop)
+            .unwrap_or(false))
     }
 
     /// All trials of the study.

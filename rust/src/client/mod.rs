@@ -1,5 +1,6 @@
 //! The user-facing client API (paper §5, Code Block 1).
 
+#[allow(clippy::module_inception)]
 pub mod client;
 pub mod transport;
 

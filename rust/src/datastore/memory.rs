@@ -20,7 +20,7 @@
 //!   directory → shard, and the directory lock is never held while
 //!   another directory-taking call runs, so the pair cannot deadlock.
 
-use super::{Datastore, DsError};
+use super::{Datastore, DsError, StudyPage};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -257,6 +257,58 @@ impl Datastore for InMemoryDatastore {
         }
         studies.sort_by(|a, b| a.name.cmp(&b.name));
         Ok(studies)
+    }
+
+    /// Shard-aware pagination. The token is `"{shard}:{last_study_name}"`
+    /// — resume in `shard` after `last_study_name` (names sorted within a
+    /// shard, shards visited in index order). Unlike `list_studies`, only
+    /// the page's studies are cloned and shards past the fill point are
+    /// never locked, so a page over a large store costs O(page + one
+    /// shard's keys) instead of O(all studies).
+    fn list_studies_page(&self, page_size: usize, page_token: &str) -> Result<StudyPage, DsError> {
+        let bad = || DsError::Invalid(format!("malformed page token {page_token:?}"));
+        let (mut shard, mut after): (usize, Option<String>) = if page_token.is_empty() {
+            (0, None)
+        } else {
+            let (s, name) = page_token.split_once(':').ok_or_else(bad)?;
+            let idx: usize = s.parse().map_err(|_| bad())?;
+            if idx >= self.shards.len() {
+                return Err(bad());
+            }
+            (idx, Some(name.to_string()))
+        };
+        let cap = if page_size == 0 { usize::MAX } else { page_size };
+        let mut out: Vec<StudyProto> = Vec::new();
+        // Position of the last emitted study; becomes the next token when
+        // the page fills with studies still left to visit.
+        let mut last: Option<(usize, String)> = None;
+        while shard < self.shards.len() {
+            let sh = self.shards[shard].read().unwrap();
+            let mut names: Vec<&String> = sh.studies.keys().collect();
+            names.sort();
+            for name in names {
+                if let Some(a) = &after {
+                    if name.as_str() <= a.as_str() {
+                        continue;
+                    }
+                }
+                if out.len() == cap {
+                    let (s, n) = last.expect("cap >= 1, so something was emitted");
+                    return Ok(StudyPage {
+                        studies: out,
+                        next_page_token: format!("{s}:{n}"),
+                    });
+                }
+                out.push(sh.studies[name].study.clone());
+                last = Some((shard, name.clone()));
+            }
+            after = None;
+            shard += 1;
+        }
+        Ok(StudyPage {
+            studies: out,
+            next_page_token: String::new(),
+        })
     }
 
     fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
@@ -694,6 +746,70 @@ mod tests {
             (s.name, ids)
         };
         assert_eq!(run(InMemoryDatastore::with_shards(1)), run(InMemoryDatastore::new()));
+    }
+
+    #[test]
+    fn pagination_visits_every_study_exactly_once() {
+        for shards in [1usize, 16] {
+            let ds = InMemoryDatastore::with_shards(shards);
+            let mut expected: Vec<String> = Vec::new();
+            for i in 0..43 {
+                expected.push(ds.create_study(study(&format!("p{i}"))).unwrap().name);
+            }
+            for page_size in [1usize, 7, 43, 100] {
+                let mut seen: Vec<String> = Vec::new();
+                let mut token = String::new();
+                let mut rounds = 0;
+                loop {
+                    let page = ds.list_studies_page(page_size, &token).unwrap();
+                    assert!(page.studies.len() <= page_size);
+                    seen.extend(page.studies.iter().map(|s| s.name.clone()));
+                    if page.next_page_token.is_empty() {
+                        break;
+                    }
+                    token = page.next_page_token;
+                    rounds += 1;
+                    assert!(rounds <= 100, "pagination must terminate");
+                }
+                let mut seen_sorted = seen.clone();
+                seen_sorted.sort();
+                seen_sorted.dedup();
+                assert_eq!(seen.len(), expected.len(), "page_size {page_size}");
+                assert_eq!(seen_sorted.len(), expected.len(), "no duplicates");
+                let mut want = expected.clone();
+                want.sort();
+                assert_eq!(seen_sorted, want);
+            }
+        }
+    }
+
+    #[test]
+    fn pagination_unlimited_page_matches_list() {
+        let ds = InMemoryDatastore::new();
+        for i in 0..10 {
+            ds.create_study(study(&format!("u{i}"))).unwrap();
+        }
+        let page = ds.list_studies_page(0, "").unwrap();
+        assert_eq!(page.studies.len(), 10);
+        assert!(page.next_page_token.is_empty());
+    }
+
+    #[test]
+    fn pagination_rejects_malformed_tokens() {
+        let ds = InMemoryDatastore::new();
+        ds.create_study(study("t")).unwrap();
+        assert!(matches!(
+            ds.list_studies_page(5, "no-colon"),
+            Err(DsError::Invalid(_))
+        ));
+        assert!(matches!(
+            ds.list_studies_page(5, "abc:studies/1"),
+            Err(DsError::Invalid(_))
+        ));
+        assert!(matches!(
+            ds.list_studies_page(5, "999:studies/1"),
+            Err(DsError::Invalid(_))
+        ));
     }
 
     #[test]

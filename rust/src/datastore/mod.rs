@@ -63,6 +63,14 @@ impl std::fmt::Display for DsError {
 
 impl std::error::Error for DsError {}
 
+/// One page of a paginated study listing.
+#[derive(Debug, Clone, Default)]
+pub struct StudyPage {
+    pub studies: Vec<StudyProto>,
+    /// Opaque cursor for the next page; empty = listing exhausted.
+    pub next_page_token: String,
+}
+
 /// Storage abstraction used by the Vizier service.
 ///
 /// All methods are atomic with respect to each other. `mutate_*` methods
@@ -76,6 +84,36 @@ pub trait Datastore: Send + Sync {
     /// Find by user-facing display name (paper: `load_or_create_study`).
     fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError>;
     fn list_studies(&self) -> Result<Vec<StudyProto>, DsError>;
+    /// Paginated listing: at most `page_size` studies (0 = no cap) after
+    /// the position encoded by `page_token` ("" starts from the top).
+    /// Full iteration visits every study exactly once, but the order is
+    /// implementation-defined — sharded stores may return shard-grouped
+    /// pages instead of a globally sorted sequence. The default
+    /// implementation falls back to sorting the full listing; stores with
+    /// internal cursors should override it.
+    fn list_studies_page(&self, page_size: usize, page_token: &str) -> Result<StudyPage, DsError> {
+        let all = self.list_studies()?; // name-sorted by contract
+        let start = if page_token.is_empty() {
+            0
+        } else {
+            all.partition_point(|s| s.name.as_str() <= page_token)
+        };
+        let end = if page_size == 0 {
+            all.len()
+        } else {
+            (start + page_size).min(all.len())
+        };
+        let studies = all[start..end].to_vec();
+        let next_page_token = if end < all.len() {
+            studies.last().map(|s| s.name.clone()).unwrap_or_default()
+        } else {
+            String::new()
+        };
+        Ok(StudyPage {
+            studies,
+            next_page_token,
+        })
+    }
     fn update_study(&self, study: StudyProto) -> Result<(), DsError>;
     fn delete_study(&self, name: &str) -> Result<(), DsError>;
 

@@ -533,6 +533,14 @@ impl Datastore for WalDatastore {
         self.mem.list_studies()
     }
 
+    fn list_studies_page(
+        &self,
+        page_size: usize,
+        page_token: &str,
+    ) -> Result<super::StudyPage, DsError> {
+        self.mem.list_studies_page(page_size, page_token)
+    }
+
     fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
         self.commit(|mem| {
             mem.update_study(study.clone())?;

@@ -148,9 +148,13 @@ impl Policy for GpBanditPolicy {
             }
         }
 
+        // One GP fit serves the whole coalesced batch — with K wants this
+        // is the K-fits-to-one saving the v2 batching exists for.
+        let batch = req.total_count();
+
         // Cold start: quasi-random seeding.
         if x_train.len() < MIN_OBSERVATIONS {
-            let suggestions = (0..req.count as u64)
+            let suggestions = (0..batch as u64)
                 .map(|i| {
                     TrialSuggestion::new(super::quasirandom::halton_point(
                         &config.search_space,
@@ -158,16 +162,13 @@ impl Policy for GpBanditPolicy {
                     ))
                 })
                 .collect();
-            return Ok(SuggestDecision {
-                suggestions,
-                study_metadata: None,
-            });
+            return Ok(SuggestDecision::from_flat(req, suggestions));
         }
 
         let noise_high = config.observation_noise == ObservationNoise::High;
         let dims = config.search_space.all_configs().len();
-        let mut suggestions = Vec::with_capacity(req.count);
-        for b in 0..req.count {
+        let mut suggestions = Vec::with_capacity(batch);
+        for b in 0..batch {
             // Candidate pool: Halton net + jittered perturbations of the
             // incumbent (local refinement).
             let mut candidates: Vec<Vec<f64>> = (0..CANDIDATES as u64 * 3 / 4)
@@ -206,10 +207,7 @@ impl Policy for GpBanditPolicy {
             y_train.push(lie);
             suggestions.push(TrialSuggestion::new(unembed(config, &candidates[pick])));
         }
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: None,
-        })
+        Ok(SuggestDecision::from_flat(req, suggestions))
     }
 
     fn name(&self) -> &str {
@@ -285,12 +283,7 @@ mod tests {
         let mut policy = GpBanditPolicy::default();
         let err = policy
             .suggest(
-                &crate::pythia::policy::SuggestRequest {
-                    study_name: study,
-                    study_config: config,
-                    count: 1,
-                    client_id: "c".into(),
-                },
+                &crate::pythia::policy::SuggestRequest::single(study, config, "c", 1),
                 supporter.as_ref(),
             )
             .unwrap_err();

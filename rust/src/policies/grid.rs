@@ -69,16 +69,13 @@ impl Policy for GridSearchPolicy {
     ) -> Result<SuggestDecision, PolicyError> {
         let start = supporter.trial_count(&req.study_name)? as u64;
         let total = grid_size(&req.study_config.search_space);
-        let suggestions = (0..req.count as u64)
+        let suggestions = (0..req.total_count() as u64)
             .map(|i| {
                 let k = (start + i) % total; // wrap after full sweep
                 TrialSuggestion::new(grid_point(&req.study_config.search_space, k))
             })
             .collect();
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: None,
-        })
+        Ok(SuggestDecision::from_flat(req, suggestions))
     }
 
     fn name(&self) -> &str {

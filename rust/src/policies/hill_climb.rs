@@ -92,7 +92,7 @@ impl Policy for HillClimbPolicy {
             supporter.trials(&req.study_name, &TrialFilter::completed().with_limit(64))?;
         let best = config.best_trial(completed.iter());
 
-        let suggestions = (0..req.count)
+        let suggestions = (0..req.total_count())
             .map(|_| match best {
                 Some(t) => TrialSuggestion::new(mutate(
                     &config.search_space,
@@ -103,10 +103,7 @@ impl Policy for HillClimbPolicy {
                 None => TrialSuggestion::new(config.search_space.sample(&mut rng)),
             })
             .collect();
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: None,
-        })
+        Ok(SuggestDecision::from_flat(req, suggestions))
     }
 
     fn name(&self) -> &str {

@@ -142,20 +142,23 @@ pub(crate) mod test_support {
         // Refresh config from store so designer metadata round-trips.
         let fresh_config = supporter.study_config(study).unwrap();
         let decision = pythia
-            .run_suggest(&SuggestRequest {
-                study_name: study.to_string(),
-                study_config: StudyConfig {
+            .run_suggest(&SuggestRequest::single(
+                study,
+                StudyConfig {
                     algorithm: config.algorithm.clone(),
                     ..fresh_config
                 },
+                "test-client",
                 count,
-                client_id: "test-client".into(),
-            })
+            ))
             .unwrap();
-        if let Some(md) = &decision.study_metadata {
-            supporter.update_study_metadata(study, md).unwrap();
+        // Apply the unified delta the way the service does (study- and
+        // trial-level writes in one atomic batch).
+        if !decision.metadata_delta.is_empty() {
+            ds.update_metadata(study, &decision.metadata_delta.to_updates())
+                .unwrap();
         }
-        decision.suggestions
+        decision.flatten()
     }
 
     /// Complete `n` random trials with a synthetic objective: score =

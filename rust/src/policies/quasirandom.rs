@@ -86,13 +86,10 @@ impl Policy for QuasiRandomPolicy {
         supporter: &dyn PolicySupporter,
     ) -> Result<SuggestDecision, PolicyError> {
         let start = supporter.trial_count(&req.study_name)? as u64;
-        let suggestions = (0..req.count as u64)
+        let suggestions = (0..req.total_count() as u64)
             .map(|i| TrialSuggestion::new(halton_point(&req.study_config.search_space, start + i)))
             .collect();
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: None,
-        })
+        Ok(SuggestDecision::from_flat(req, suggestions))
     }
 
     fn name(&self) -> &str {

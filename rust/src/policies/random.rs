@@ -18,13 +18,10 @@ impl Policy for RandomSearchPolicy {
         // draw fresh samples but a crash-replayed operation is identical.
         let salt = supporter.trial_count(&req.study_name)? as u64;
         let mut rng = super::op_rng(&req.study_config, &req.study_name, salt);
-        let suggestions = (0..req.count)
+        let suggestions = (0..req.total_count())
             .map(|_| TrialSuggestion::new(req.study_config.search_space.sample(&mut rng)))
             .collect();
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: None,
-        })
+        Ok(SuggestDecision::from_flat(req, suggestions))
     }
 
     fn name(&self) -> &str {

@@ -15,7 +15,7 @@
 //! [`StatelessDesignerPolicy`] is the deliberately-naive wrapper, kept as
 //! the baseline for the §6.3 benchmark (`benches/bench_state_recovery.rs`).
 
-use super::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use super::policy::{MetadataDelta, Policy, PolicyError, SuggestDecision, SuggestRequest};
 use super::supporter::PolicySupporter;
 use crate::datastore::query::TrialFilter;
 use crate::pyvizier::{Metadata, StudyConfig, Trial, TrialSuggestion};
@@ -115,7 +115,9 @@ impl<D: SerializableDesigner + 'static> Policy for DesignerPolicy<D> {
             designer.update(&fresh);
         }
 
-        let suggestions = designer.suggest(req.count)?;
+        // One designer pass serves every coalesced want (the batching win:
+        // state is restored and updated once, not once per operation).
+        let suggestions = designer.suggest(req.total_count())?;
 
         // Persist state under the designer's namespace.
         let mut out = Metadata::new();
@@ -123,10 +125,7 @@ impl<D: SerializableDesigner + 'static> Policy for DesignerPolicy<D> {
             out.put(&ns, k, v.to_vec());
         }
         out.put_str(&ns, LAST_SEEN_KEY, &seen.to_string());
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: Some(out),
-        })
+        Ok(SuggestDecision::from_flat(req, suggestions).with_delta(MetadataDelta::for_study(out)))
     }
 
     fn name(&self) -> &str {
@@ -159,11 +158,8 @@ impl<D: SerializableDesigner + 'static> Policy for StatelessDesignerPolicy<D> {
         // Full O(n) replay of every completed trial.
         let all = supporter.trials(&req.study_name, &TrialFilter::completed())?;
         designer.update(&all);
-        let suggestions = designer.suggest(req.count)?;
-        Ok(SuggestDecision {
-            suggestions,
-            study_metadata: None,
-        })
+        let suggestions = designer.suggest(req.total_count())?;
+        Ok(SuggestDecision::from_flat(req, suggestions))
     }
 
     fn name(&self) -> &str {
@@ -260,18 +256,14 @@ mod tests {
         sup: &DatastoreSupporter,
         study: &str,
         config: &StudyConfig,
-    ) -> SuggestDecision {
-        let req = SuggestRequest {
-            study_name: study.to_string(),
-            study_config: config.clone(),
-            count: 1,
-            client_id: "c".into(),
-        };
+    ) -> Vec<TrialSuggestion> {
+        let req = SuggestRequest::single(study, config.clone(), "c", 1);
         let decision = policy.suggest(&req, sup).unwrap();
-        if let Some(md) = &decision.study_metadata {
-            sup.update_study_metadata(study, md).unwrap();
+        if !decision.metadata_delta.on_study.is_empty() {
+            sup.update_study_metadata(study, &decision.metadata_delta.on_study)
+                .unwrap();
         }
-        decision
+        decision.flatten()
     }
 
     #[test]
@@ -283,14 +275,14 @@ mod tests {
         add_completed(&ds, &study, 3);
         let mut policy = DesignerPolicy::<CountingDesigner>::new();
         let d1 = run_op(&mut policy, &sup, &study, &config);
-        assert_eq!(d1.suggestions[0].parameters.get_i64("absorbed"), Some(3));
+        assert_eq!(d1[0].parameters.get_i64("absorbed"), Some(3));
         assert_eq!(REBUILDS.load(Ordering::SeqCst), 1, "first op builds fresh");
 
         // Second operation: 2 new trials; state restored, only new absorbed.
         add_completed(&ds, &study, 2);
         let mut policy = DesignerPolicy::<CountingDesigner>::new();
         let d2 = run_op(&mut policy, &sup, &study, &config);
-        assert_eq!(d2.suggestions[0].parameters.get_i64("absorbed"), Some(5));
+        assert_eq!(d2[0].parameters.get_i64("absorbed"), Some(5));
         assert_eq!(REBUILDS.load(Ordering::SeqCst), 1, "no rebuild on second op");
     }
 
@@ -312,7 +304,7 @@ mod tests {
         let d = run_op(&mut policy, &sup, &study, &config);
         assert_eq!(REBUILDS.load(Ordering::SeqCst), 1, "rebuild after corrupt state");
         // Rebuild replays all 4 trials.
-        assert_eq!(d.suggestions[0].parameters.get_i64("absorbed"), Some(4));
+        assert_eq!(d[0].parameters.get_i64("absorbed"), Some(4));
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod supporter;
 
 pub use designer::{Designer, DesignerPolicy, SerializableDesigner};
 pub use policy::{
-    EarlyStopDecision, EarlyStopRequest, Policy, PolicyError, SuggestDecision, SuggestRequest,
+    EarlyStopDecision, EarlyStopRequest, MetadataDelta, Policy, PolicyError, SuggestDecision,
+    SuggestRequest, SuggestWant, SuggestionGroup,
 };
 pub use supporter::{DatastoreSupporter, PolicySupporter};

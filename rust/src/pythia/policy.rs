@@ -1,12 +1,68 @@
-//! The Policy interface (paper §6.1, Code Block 2).
+//! The Policy interface, v2 (paper §6.1, Code Block 2) — batched.
 //!
-//! A `Policy` object's lifespan is one suggestion or early-stopping
-//! operation (§6.3) — the service constructs a policy, calls it once, and
-//! drops it. Long-lived algorithm state must go through metadata (see
-//! [`super::designer`]).
+//! A `Policy` object's lifespan is one *batch* of suggestion or
+//! early-stopping work (§6.3) — the service constructs a policy, calls it
+//! once, and drops it. Long-lived algorithm state must go through metadata
+//! (see [`super::designer`]).
+//!
+//! # What changed from v1 (and why)
+//!
+//! The v1 surface forced one policy construction + invocation per suggest
+//! operation and one RPC per early-stopping check, so K parallel workers
+//! on one study paid K policy runs (K GP fits for `GP_BANDIT`) per wave.
+//! v2 makes batches first-class so the service can coalesce queued
+//! operations of one study into a single invocation:
+//!
+//! * [`SuggestRequest`] carries a list of [`SuggestWant`]s — one
+//!   `(client_id, count)` per waiting operation — instead of a single
+//!   `(client_id, count)` pair.
+//! * [`SuggestDecision`] returns one [`SuggestionGroup`] per want plus a
+//!   unified [`MetadataDelta`] covering study-level **and** trial-level
+//!   writes, applied atomically by the service (the v1 field was an
+//!   `Option<Metadata>` limited to study metadata).
+//! * [`EarlyStopRequest`] names many trials (`trial_ids`; empty = "all
+//!   ACTIVE trials"), and `Policy::early_stop` returns one
+//!   [`EarlyStopDecision`] per trial.
+//!
+//! # Migrating a Policy from v1 to v2
+//!
+//! Most v1 policies generated `req.count` suggestions from shared state
+//! and did not care which client asked. Such policies migrate in two
+//! lines: generate [`SuggestRequest::total_count`] suggestions, then let
+//! [`SuggestDecision::from_flat`] split them across the wants in order:
+//!
+//! ```ignore
+//! // v1
+//! fn suggest(&mut self, req: &SuggestRequest, s: &dyn PolicySupporter)
+//!     -> Result<SuggestDecision, PolicyError> {
+//!     let suggestions = (0..req.count).map(|_| self.draw()).collect();
+//!     Ok(SuggestDecision { suggestions, study_metadata: None })
+//! }
+//!
+//! // v2
+//! fn suggest(&mut self, req: &SuggestRequest, s: &dyn PolicySupporter)
+//!     -> Result<SuggestDecision, PolicyError> {
+//!     let suggestions = (0..req.total_count()).map(|_| self.draw()).collect();
+//!     Ok(SuggestDecision::from_flat(req, suggestions))
+//! }
+//! ```
+//!
+//! Policies that want per-client behaviour (e.g. per-worker arms) can
+//! build the groups themselves; the service assigns group *i* to want
+//! *i*. Metadata writes move from `study_metadata: Some(md)` to
+//! `decision.metadata_delta.on_study = md`, and trial-level state (which
+//! v1 could only write through the supporter, outside the operation's
+//! atomic commit) goes in `metadata_delta.on_trials`.
+//!
+//! For early stopping, a v1 `early_stop` looked at `req.trial_id`; a v2
+//! implementation loops over `req.trial_ids` (resolving an empty list to
+//! the study's ACTIVE trials via the supporter if it cares) and returns a
+//! decision per trial. The default still never stops anything.
 
 use super::supporter::PolicySupporter;
 use crate::pyvizier::{Metadata, StudyConfig, TrialSuggestion};
+use crate::wire::messages::{MetadataItem, TrialStopDecision, UnitMetadataUpdate};
+use std::collections::BTreeMap;
 
 /// Errors a policy can raise; mapped to failed operations by the service.
 #[derive(Debug)]
@@ -32,56 +88,272 @@ impl std::fmt::Display for PolicyError {
 
 impl std::error::Error for PolicyError {}
 
-/// Request for new suggestions.
+/// One waiting operation's ask: `count` suggestions for `client_id`
+/// (paper §5: trials are assigned per client id).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SuggestWant {
+    pub client_id: String,
+    pub count: usize,
+}
+
+/// Request for new suggestions on behalf of one or more clients.
 #[derive(Debug, Clone)]
 pub struct SuggestRequest {
     pub study_name: String,
     pub study_config: StudyConfig,
-    pub count: usize,
-    /// The requesting worker (paper §5: trials are assigned per client id).
-    pub client_id: String,
+    /// One entry per coalesced operation. Never empty in service calls.
+    pub wants: Vec<SuggestWant>,
 }
 
-/// A policy's answer to a suggest request.
+impl SuggestRequest {
+    /// The common single-client request (v1 shape).
+    pub fn single(
+        study_name: impl Into<String>,
+        study_config: StudyConfig,
+        client_id: impl Into<String>,
+        count: usize,
+    ) -> Self {
+        Self {
+            study_name: study_name.into(),
+            study_config,
+            wants: vec![SuggestWant {
+                client_id: client_id.into(),
+                count,
+            }],
+        }
+    }
+
+    /// Total number of suggestions requested across all wants.
+    pub fn total_count(&self) -> usize {
+        self.wants.iter().map(|w| w.count).sum()
+    }
+}
+
+/// Study-level and trial-level metadata writes the service applies as one
+/// atomic datastore batch when the operation(s) complete (§6.3: the two
+/// metadata tables).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetadataDelta {
+    /// Writes to the study's metadata table (designer state lives here).
+    pub on_study: Metadata,
+    /// Writes to individual trials' metadata, keyed by trial id. Trial
+    /// ids must refer to *existing* trials — suggestions returned in the
+    /// same decision have no ids yet.
+    pub on_trials: BTreeMap<u64, Metadata>,
+}
+
+impl MetadataDelta {
+    /// A delta with only study-level writes (the v1 `study_metadata`).
+    pub fn for_study(md: Metadata) -> Self {
+        Self {
+            on_study: md,
+            on_trials: BTreeMap::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.on_study.is_empty() && self.on_trials.values().all(|m| m.is_empty())
+    }
+
+    /// Flatten to the wire representation (`trial_id == 0` targets the
+    /// study table).
+    pub fn to_updates(&self) -> Vec<UnitMetadataUpdate> {
+        let mut out = Vec::new();
+        for (ns, k, v) in self.on_study.iter() {
+            out.push(UnitMetadataUpdate {
+                trial_id: 0,
+                item: Some(MetadataItem {
+                    namespace: ns.to_string(),
+                    key: k.to_string(),
+                    value: v.to_vec(),
+                }),
+            });
+        }
+        for (trial_id, md) in &self.on_trials {
+            for (ns, k, v) in md.iter() {
+                out.push(UnitMetadataUpdate {
+                    trial_id: *trial_id,
+                    item: Some(MetadataItem {
+                        namespace: ns.to_string(),
+                        key: k.to_string(),
+                        value: v.to_vec(),
+                    }),
+                });
+            }
+        }
+        out
+    }
+
+    /// Rebuild from the wire representation.
+    pub fn from_updates(updates: &[UnitMetadataUpdate]) -> Self {
+        let mut delta = Self::default();
+        for u in updates {
+            let Some(item) = &u.item else { continue };
+            let target = if u.trial_id == 0 {
+                &mut delta.on_study
+            } else {
+                delta.on_trials.entry(u.trial_id).or_default()
+            };
+            target.put(&item.namespace, &item.key, item.value.clone());
+        }
+        delta
+    }
+}
+
+/// The suggestions produced for one want (one coalesced operation).
+#[derive(Debug, Clone, Default)]
+pub struct SuggestionGroup {
+    pub client_id: String,
+    pub suggestions: Vec<TrialSuggestion>,
+}
+
+/// A policy's answer to a (possibly coalesced) suggest request. Group *i*
+/// answers want *i* of the request.
 #[derive(Debug, Clone, Default)]
 pub struct SuggestDecision {
-    pub suggestions: Vec<TrialSuggestion>,
-    /// Study-level metadata writes to persist atomically with the
-    /// suggestions (designer state, §6.3).
-    pub study_metadata: Option<Metadata>,
+    pub groups: Vec<SuggestionGroup>,
+    pub metadata_delta: MetadataDelta,
 }
 
-/// Request for an early-stopping decision on one trial.
+impl SuggestDecision {
+    /// Partition a flat batch of suggestions across `req.wants` in order.
+    /// This is the standard migration path for policies that draw from
+    /// shared state and don't differentiate clients. If `suggestions`
+    /// runs short (e.g. an exhausted grid), later groups come up short;
+    /// any surplus goes to the last group.
+    pub fn from_flat(req: &SuggestRequest, suggestions: Vec<TrialSuggestion>) -> Self {
+        let mut groups: Vec<SuggestionGroup> = req
+            .wants
+            .iter()
+            .map(|w| SuggestionGroup {
+                client_id: w.client_id.clone(),
+                suggestions: Vec::with_capacity(w.count),
+            })
+            .collect();
+        let mut it = suggestions.into_iter();
+        for (group, want) in groups.iter_mut().zip(&req.wants) {
+            for _ in 0..want.count {
+                match it.next() {
+                    Some(s) => group.suggestions.push(s),
+                    None => break,
+                }
+            }
+        }
+        if let Some(last) = groups.last_mut() {
+            last.suggestions.extend(it);
+        }
+        Self {
+            groups,
+            metadata_delta: MetadataDelta::default(),
+        }
+    }
+
+    /// Attach a metadata delta (builder style).
+    pub fn with_delta(mut self, delta: MetadataDelta) -> Self {
+        self.metadata_delta = delta;
+        self
+    }
+
+    /// Total suggestions across all groups.
+    pub fn total(&self) -> usize {
+        self.groups.iter().map(|g| g.suggestions.len()).sum()
+    }
+
+    /// Collapse the groups back into one flat list (tests, benches, and
+    /// single-want callers).
+    pub fn flatten(self) -> Vec<TrialSuggestion> {
+        self.groups.into_iter().flat_map(|g| g.suggestions).collect()
+    }
+}
+
+/// Request for early-stopping decisions on a batch of trials.
 #[derive(Debug, Clone)]
 pub struct EarlyStopRequest {
     pub study_name: String,
     pub study_config: StudyConfig,
-    pub trial_id: u64,
+    /// Trials to judge. Empty = "every ACTIVE trial of the study" (the
+    /// service resolves the list before invoking a policy, so policies
+    /// normally see explicit ids).
+    pub trial_ids: Vec<u64>,
 }
 
-/// A policy's early-stopping verdict (paper Appendix B.1).
+/// A policy's early-stopping verdict for one trial (paper Appendix B.1).
 #[derive(Debug, Clone, Default)]
 pub struct EarlyStopDecision {
+    pub trial_id: u64,
     pub should_stop: bool,
     pub reason: String,
 }
 
+impl EarlyStopDecision {
+    pub fn keep(trial_id: u64) -> Self {
+        Self {
+            trial_id,
+            ..Default::default()
+        }
+    }
+
+    pub fn stop(trial_id: u64, reason: impl Into<String>) -> Self {
+        Self {
+            trial_id,
+            should_stop: true,
+            reason: reason.into(),
+        }
+    }
+}
+
+// EarlyStopDecision <-> wire::TrialStopDecision: same shape, one place to
+// keep them in sync (the service and both remote-Pythia ends convert
+// through these).
+impl From<EarlyStopDecision> for TrialStopDecision {
+    fn from(d: EarlyStopDecision) -> Self {
+        Self {
+            trial_id: d.trial_id,
+            should_stop: d.should_stop,
+            reason: d.reason,
+        }
+    }
+}
+
+impl From<&EarlyStopDecision> for TrialStopDecision {
+    fn from(d: &EarlyStopDecision) -> Self {
+        Self {
+            trial_id: d.trial_id,
+            should_stop: d.should_stop,
+            reason: d.reason.clone(),
+        }
+    }
+}
+
+impl From<TrialStopDecision> for EarlyStopDecision {
+    fn from(d: TrialStopDecision) -> Self {
+        Self {
+            trial_id: d.trial_id,
+            should_stop: d.should_stop,
+            reason: d.reason,
+        }
+    }
+}
+
 /// A blackbox-optimization algorithm, as seen by the service.
 pub trait Policy: Send {
-    /// Produce `req.count` suggestions.
+    /// Produce suggestions for every want in `req` (group *i* answers
+    /// want *i*); [`SuggestDecision::from_flat`] implements the common
+    /// "draw `total_count`, split in order" shape.
     fn suggest(
         &mut self,
         req: &SuggestRequest,
         supporter: &dyn PolicySupporter,
     ) -> Result<SuggestDecision, PolicyError>;
 
-    /// Decide whether `req.trial_id` should stop early. Default: never.
+    /// Decide, per trial in `req.trial_ids`, whether it should stop
+    /// early. Default: never stop anything.
     fn early_stop(
         &mut self,
-        _req: &EarlyStopRequest,
+        req: &EarlyStopRequest,
         _supporter: &dyn PolicySupporter,
-    ) -> Result<EarlyStopDecision, PolicyError> {
-        Ok(EarlyStopDecision::default())
+    ) -> Result<Vec<EarlyStopDecision>, PolicyError> {
+        Ok(req.trial_ids.iter().map(|&id| EarlyStopDecision::keep(id)).collect())
     }
 
     /// Human-readable policy name (for logs and metrics).
@@ -90,6 +362,88 @@ pub trait Policy: Send {
     }
 }
 
-/// A policy factory: constructs a fresh policy per operation (the service
+/// A policy factory: constructs a fresh policy per batch (the service
 /// never reuses policy objects across operations, matching the paper).
 pub type PolicyFactory = Box<dyn Fn(&StudyConfig) -> Box<dyn Policy> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyvizier::ParameterDict;
+
+    fn req(counts: &[usize]) -> SuggestRequest {
+        SuggestRequest {
+            study_name: "studies/1".into(),
+            study_config: StudyConfig::default(),
+            wants: counts
+                .iter()
+                .enumerate()
+                .map(|(i, &count)| SuggestWant {
+                    client_id: format!("c{i}"),
+                    count,
+                })
+                .collect(),
+        }
+    }
+
+    fn tagged(n: usize) -> Vec<TrialSuggestion> {
+        (0..n)
+            .map(|i| {
+                let mut p = ParameterDict::new();
+                p.set("i", i as i64);
+                TrialSuggestion::new(p)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn from_flat_partitions_in_want_order() {
+        let r = req(&[2, 1, 3]);
+        assert_eq!(r.total_count(), 6);
+        let d = SuggestDecision::from_flat(&r, tagged(6));
+        assert_eq!(d.groups.len(), 3);
+        assert_eq!(d.groups[0].client_id, "c0");
+        assert_eq!(d.groups[0].suggestions.len(), 2);
+        assert_eq!(d.groups[1].suggestions.len(), 1);
+        assert_eq!(d.groups[2].suggestions.len(), 3);
+        // Order preserved: want 1 gets the third draw.
+        assert_eq!(d.groups[1].suggestions[0].parameters.get_i64("i"), Some(2));
+        assert_eq!(d.total(), 6);
+        assert_eq!(d.flatten().len(), 6);
+    }
+
+    #[test]
+    fn from_flat_short_and_surplus() {
+        // Short: later wants come up empty-handed.
+        let d = SuggestDecision::from_flat(&req(&[2, 2]), tagged(3));
+        assert_eq!(d.groups[0].suggestions.len(), 2);
+        assert_eq!(d.groups[1].suggestions.len(), 1);
+        // Surplus: extras land in the last group.
+        let d = SuggestDecision::from_flat(&req(&[1, 1]), tagged(4));
+        assert_eq!(d.groups[0].suggestions.len(), 1);
+        assert_eq!(d.groups[1].suggestions.len(), 3);
+    }
+
+    #[test]
+    fn metadata_delta_roundtrips_through_updates() {
+        let mut delta = MetadataDelta::default();
+        delta.on_study.put_str("designer.x", "state", "s");
+        delta.on_trials.entry(7).or_default().put_str("ns", "k", "v");
+        delta.on_trials.entry(9).or_default().put("ns", "b", vec![1u8, 2]);
+        assert!(!delta.is_empty());
+        let updates = delta.to_updates();
+        assert_eq!(updates.len(), 3);
+        assert!(updates.iter().any(|u| u.trial_id == 0));
+        let back = MetadataDelta::from_updates(&updates);
+        assert_eq!(back, delta);
+    }
+
+    #[test]
+    fn empty_delta_is_empty() {
+        assert!(MetadataDelta::default().is_empty());
+        assert!(MetadataDelta::for_study(Metadata::new()).is_empty());
+        let mut md = Metadata::new();
+        md.put_str("a", "b", "c");
+        assert!(!MetadataDelta::for_study(md).is_empty());
+    }
+}

@@ -56,10 +56,14 @@ impl PolicyRegistry {
     }
 }
 
-/// Where the service sends suggestion / early-stopping work.
+/// Where the service sends suggestion / early-stopping work (batched,
+/// Pythia v2): one call serves every want / trial id in the request.
 pub trait PythiaEndpoint: Send + Sync {
     fn run_suggest(&self, req: &SuggestRequest) -> Result<SuggestDecision, PolicyError>;
-    fn run_early_stop(&self, req: &EarlyStopRequest) -> Result<EarlyStopDecision, PolicyError>;
+    fn run_early_stop(
+        &self,
+        req: &EarlyStopRequest,
+    ) -> Result<Vec<EarlyStopDecision>, PolicyError>;
 }
 
 /// In-process Pythia: create policy, run, drop (one policy object per
@@ -88,7 +92,10 @@ impl PythiaEndpoint for LocalPythia {
         policy.suggest(req, self.supporter.as_ref())
     }
 
-    fn run_early_stop(&self, req: &EarlyStopRequest) -> Result<EarlyStopDecision, PolicyError> {
+    fn run_early_stop(
+        &self,
+        req: &EarlyStopRequest,
+    ) -> Result<Vec<EarlyStopDecision>, PolicyError> {
         let mut policy = self.registry.create(&req.study_config)?;
         policy.early_stop(req, self.supporter.as_ref())
     }
@@ -118,10 +125,10 @@ mod tests {
             req: &SuggestRequest,
             _s: &dyn PolicySupporter,
         ) -> Result<SuggestDecision, PolicyError> {
-            Ok(SuggestDecision {
-                suggestions: vec![TrialSuggestion::default(); req.count],
-                study_metadata: None,
-            })
+            Ok(SuggestDecision::from_flat(
+                req,
+                vec![TrialSuggestion::default(); req.total_count()],
+            ))
         }
     }
 
@@ -160,14 +167,11 @@ mod tests {
         config.add_metric(MetricInformation::maximize("m"));
         config.algorithm = Algorithm::Custom("MY_ALGO".into());
         let pythia = LocalPythia::new(reg, Arc::new(NullSupporter));
-        let req = SuggestRequest {
-            study_name: "studies/1".into(),
-            study_config: config.clone(),
-            count: 3,
-            client_id: "c".into(),
-        };
+        let req = SuggestRequest::single("studies/1", config.clone(), "c", 3);
         let d = pythia.run_suggest(&req).unwrap();
-        assert_eq!(d.suggestions.len(), 3);
+        assert_eq!(d.total(), 3);
+        assert_eq!(d.groups.len(), 1);
+        assert_eq!(d.groups[0].client_id, "c");
 
         // Unknown algorithm -> Unsupported.
         config.algorithm = Algorithm::Custom("NOPE".into());
@@ -192,9 +196,12 @@ mod tests {
             .run_early_stop(&EarlyStopRequest {
                 study_name: "studies/1".into(),
                 study_config: config,
-                trial_id: 1,
+                trial_ids: vec![1, 4],
             })
             .unwrap();
-        assert!(!d.should_stop);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| !x.should_stop));
+        assert_eq!(d[0].trial_id, 1);
+        assert_eq!(d[1].trial_id, 4);
     }
 }

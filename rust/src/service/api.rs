@@ -1,28 +1,37 @@
 //! The Vizier service implementation: every RPC method of §3.2 over a
 //! pluggable datastore and Pythia endpoint.
 //!
-//! The suggestion workflow reproduces the paper exactly:
-//! 1. `suggest_trials` persists an [`OperationProto`] and enqueues the
-//!    policy run on a worker thread, returning the operation immediately.
+//! The suggestion workflow reproduces the paper, plus per-study operation
+//! coalescing (Pythia v2):
+//! 1. `suggest_trials` persists an [`OperationProto`], pushes it onto the
+//!    study's pending-suggest queue, and kicks a batch runner on a worker
+//!    thread, returning the operation immediately.
 //! 2. Clients poll `get_operation` until `done`.
-//! 3. The worker runs the Pythia policy, registers the suggested trials
-//!    (state ACTIVE, assigned to the requesting `client_id`), persists any
-//!    designer metadata, and marks the operation done.
-//! 4. On startup, [`VizierService::resume_pending_operations`] re-enqueues
+//! 3. The batch runner drains *every* queued suggest operation for the
+//!    study, runs **one** Pythia policy invocation for the combined wants,
+//!    partitions the returned suggestion groups back onto the operations
+//!    (trials registered ACTIVE, assigned to each op's `client_id`),
+//!    persists the unified metadata delta atomically, and completes each
+//!    operation individually. K queued operations on one study therefore
+//!    cost one policy run (one GP fit) instead of K.
+//! 4. On startup, [`VizierService::resume_pending_operations`] re-queues
 //!    operations that were interrupted by a crash (server-side fault
-//!    tolerance).
+//!    tolerance) — re-coalescing them without double-serving anything
+//!    already queued or in flight.
 //! 5. ACTIVE trials already assigned to a client are returned *before* new
 //!    suggestions are computed (client-side fault tolerance, §5).
 
 use crate::datastore::{Datastore, DsError};
-use crate::pythia::policy::{EarlyStopRequest, SuggestRequest};
+use crate::pythia::policy::{EarlyStopRequest, SuggestRequest, SuggestWant};
 use crate::pythia::runner::PythiaEndpoint;
-use crate::pyvizier::{converters, StudyConfig};
+use crate::pyvizier::{converters, StudyConfig, TrialSuggestion};
 use crate::service::metrics::ServiceMetrics;
 use crate::util::threadpool::ThreadPool;
 use crate::util::time::epoch_millis;
 use crate::wire::framing::Status;
 use crate::wire::messages::*;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Service-level error: an RPC status plus message.
@@ -75,11 +84,29 @@ impl From<DsError> for ApiError {
 
 pub type ApiResult<T> = Result<T, ApiError>;
 
+/// Pending-suggest bookkeeping for per-study operation coalescing.
+///
+/// `queued` holds persisted-but-unclaimed suggest operation names per
+/// study; `claimed` holds operation names currently being served by a
+/// batch runner. A name lives in at most one of the two, which is what
+/// lets [`VizierService::resume_pending_operations`] re-queue
+/// crash-interrupted work without double-serving an operation that is
+/// already queued or in flight.
+#[derive(Default)]
+struct CoalesceState {
+    queued: HashMap<String, Vec<String>>,
+    claimed: HashSet<String>,
+}
+
 /// The OSS Vizier API service.
 pub struct VizierService {
     ds: Arc<dyn Datastore>,
     pythia: Arc<dyn PythiaEndpoint>,
     workers: Mutex<Option<ThreadPool>>,
+    coalesce: Mutex<CoalesceState>,
+    /// When false every suggest operation gets its own policy invocation
+    /// (the v1 behaviour, kept as a benchmark baseline).
+    coalescing: AtomicBool,
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -91,8 +118,17 @@ impl VizierService {
             ds,
             pythia,
             workers: Mutex::new(Some(ThreadPool::new(workers.max(1)))),
+            coalesce: Mutex::new(CoalesceState::default()),
+            coalescing: AtomicBool::new(true),
             metrics: Arc::new(ServiceMetrics::new()),
         })
+    }
+
+    /// Toggle per-study suggest coalescing (on by default). Off = one
+    /// policy invocation per operation, the pre-v2 baseline used by the
+    /// `C-PYTHIA-COAL` bench.
+    pub fn set_suggest_coalescing(&self, on: bool) {
+        self.coalescing.store(on, Ordering::SeqCst);
     }
 
     pub fn datastore(&self) -> &Arc<dyn Datastore> {
@@ -143,9 +179,20 @@ impl VizierService {
         })
     }
 
-    pub fn list_studies(&self, _req: ListStudiesRequest) -> ApiResult<ListStudiesResponse> {
+    pub fn list_studies(&self, req: ListStudiesRequest) -> ApiResult<ListStudiesResponse> {
+        if req.page_size == 0 && req.page_token.is_empty() {
+            // v1 behaviour: the full listing in one response.
+            return Ok(ListStudiesResponse {
+                studies: self.ds.list_studies()?,
+                next_page_token: String::new(),
+            });
+        }
+        let page = self
+            .ds
+            .list_studies_page(req.page_size as usize, &req.page_token)?;
         Ok(ListStudiesResponse {
-            studies: self.ds.list_studies()?,
+            studies: page.studies,
+            next_page_token: page.next_page_token,
         })
     }
 
@@ -185,7 +232,8 @@ impl VizierService {
             return Ok(OperationResponse { operation: op });
         }
 
-        // Persist the operation first (durability), then enqueue.
+        // Persist the operation first (durability), then queue it for the
+        // study's coalescing batch runner.
         let op = self.ds.create_operation(OperationProto {
             kind: OperationKind::SuggestTrials,
             study_name: req.study_name.clone(),
@@ -195,80 +243,222 @@ impl VizierService {
             created_ms: epoch_millis(),
             ..Default::default()
         })?;
-        let op_name = op.name.clone();
         let config = converters::study_config_from_proto(&study.display_name, &study.spec);
-        self.enqueue(move |svc| svc.run_suggest_operation(&op_name, &config));
+        self.queue_suggest(&op.name, &req.study_name);
+        let study_name = req.study_name.clone();
+        self.enqueue(move |svc| svc.run_suggest_batch(&study_name, &config));
         Ok(OperationResponse { operation: op })
     }
 
-    /// Execute one persisted SuggestTrials operation (worker thread).
-    fn run_suggest_operation(&self, op_name: &str, config: &StudyConfig) {
-        let Ok(mut op) = self.ds.get_operation(op_name) else {
-            return;
-        };
-        if op.done {
-            return; // raced with a duplicate resume
+    /// Add a persisted suggest operation to its study's pending queue,
+    /// unless it is already queued or in flight.
+    fn queue_suggest(&self, op_name: &str, study_name: &str) -> bool {
+        let state = &mut *self.coalesce.lock().unwrap();
+        if state.claimed.contains(op_name) {
+            return false;
         }
-        let request = SuggestRequest {
-            study_name: op.study_name.clone(),
-            study_config: config.clone(),
-            count: op.count as usize,
-            client_id: op.client_id.clone(),
+        let q = state.queued.entry(study_name.to_string()).or_default();
+        if q.iter().any(|n| n == op_name) {
+            return false;
+        }
+        q.push(op_name.to_string());
+        true
+    }
+
+    /// Serve queued SuggestTrials operations for one study (worker
+    /// thread). Repeatedly claims the study's whole queue and runs **one**
+    /// policy invocation per claim for the combined wants; each operation
+    /// is then completed individually with its own suggestion group. The
+    /// loop also picks up operations queued *while* a policy was running
+    /// (and, with coalescing off, serves the queue one op at a time), so
+    /// a single kicked job never strands queued work.
+    fn run_suggest_batch(&self, study_name: &str, config: &StudyConfig) {
+        loop {
+            if !self.serve_one_suggest_batch(study_name, config) {
+                return;
+            }
+        }
+    }
+
+    /// One claim-serve cycle; returns false once the queue was empty.
+    fn serve_one_suggest_batch(&self, study_name: &str, config: &StudyConfig) -> bool {
+        // Claim the queue (or only its oldest entry with coalescing off).
+        let batch: Vec<String> = {
+            let state = &mut *self.coalesce.lock().unwrap();
+            let Some(q) = state.queued.get_mut(study_name) else {
+                return false; // another worker already drained this study
+            };
+            let batch = if self.coalescing.load(Ordering::SeqCst) {
+                std::mem::take(q)
+            } else if q.is_empty() {
+                Vec::new()
+            } else {
+                vec![q.remove(0)]
+            };
+            if q.is_empty() {
+                state.queued.remove(study_name);
+            }
+            state.claimed.extend(batch.iter().cloned());
+            batch
         };
-        match self.pythia.run_suggest(&request) {
-            Ok(decision) => {
-                // Register suggestions as ACTIVE trials assigned to the client.
-                let mut registered = Vec::with_capacity(decision.suggestions.len());
-                for s in decision.suggestions {
-                    let mut trial = TrialProto {
-                        state: TrialState::Active,
+        if batch.is_empty() {
+            return false;
+        }
+        // Release the claims even if the policy panics (the worker pool
+        // catches unwinds): leaked claims would leave the batch's ops
+        // permanently unservable — queue_suggest and resume both refuse
+        // claimed names.
+        struct ClaimGuard<'a> {
+            coalesce: &'a Mutex<CoalesceState>,
+            names: &'a [String],
+        }
+        impl Drop for ClaimGuard<'_> {
+            fn drop(&mut self) {
+                if let Ok(mut state) = self.coalesce.lock() {
+                    for name in self.names {
+                        state.claimed.remove(name);
+                    }
+                }
+            }
+        }
+        let _guard = ClaimGuard {
+            coalesce: &self.coalesce,
+            names: &batch,
+        };
+
+        // Load the claimed operations, skipping any already completed
+        // (e.g. a duplicate resume that raced a live run).
+        let mut ops: Vec<OperationProto> = Vec::with_capacity(batch.len());
+        for name in &batch {
+            if let Ok(op) = self.ds.get_operation(name) {
+                if !op.done {
+                    ops.push(op);
+                }
+            }
+        }
+        if !ops.is_empty() {
+            let request = SuggestRequest {
+                study_name: study_name.to_string(),
+                study_config: config.clone(),
+                wants: ops
+                    .iter()
+                    .map(|op| SuggestWant {
                         client_id: op.client_id.clone(),
-                        created_ms: epoch_millis(),
-                        ..Default::default()
-                    };
-                    trial.parameters = s
-                        .parameters
-                        .iter()
-                        .map(|(k, v)| TrialParameter {
-                            parameter_id: k.clone(),
-                            value: converters::value_to_proto(v),
-                        })
-                        .collect();
-                    trial.metadata = converters::metadata_to_proto(&s.metadata);
-                    match self.ds.create_trial(&op.study_name, trial) {
-                        Ok(t) => registered.push(t),
-                        Err(e) => {
-                            op.error = format!("failed to register trial: {e}");
-                            break;
+                        count: op.count as usize,
+                    })
+                    .collect(),
+            };
+            // A run is a run even if it fails; "served" ops are counted
+            // only once their batch got past the policy + delta persist,
+            // so the coalescing ratio stays honest during incidents.
+            self.metrics.record_policy_run();
+            match self.pythia.run_suggest(&request) {
+                Ok(decision) => {
+                    // The unified delta (study- and trial-level writes) is
+                    // one atomic datastore batch, persisted before any
+                    // operation completes so policy state is never behind
+                    // a visible completion.
+                    let mut delta_err = String::new();
+                    if !decision.metadata_delta.is_empty() {
+                        if let Err(e) = self
+                            .ds
+                            .update_metadata(study_name, &decision.metadata_delta.to_updates())
+                        {
+                            delta_err = format!("failed to persist policy state: {e}");
+                            self.metrics.record_error();
                         }
                     }
-                }
-                // Persist designer state atomically with completion.
-                if let Some(md) = decision.study_metadata {
-                    let updates: Vec<UnitMetadataUpdate> = md
-                        .iter()
-                        .map(|(ns, k, v)| UnitMetadataUpdate {
-                            trial_id: 0,
-                            item: Some(MetadataItem {
-                                namespace: ns.to_string(),
-                                key: k.to_string(),
-                                value: v.to_vec(),
-                            }),
-                        })
-                        .collect();
-                    if let Err(e) = self.ds.update_metadata(&op.study_name, &updates) {
-                        op.error = format!("failed to persist designer state: {e}");
+                    if !delta_err.is_empty() {
+                        // Fail the batch *without* registering trials:
+                        // completing ops whose policy state could not be
+                        // persisted would orphan ACTIVE trials behind a
+                        // failed operation (the client never sees them).
+                        for op in &mut ops {
+                            op.error = delta_err.clone();
+                            op.done = true;
+                            let _ = self.ds.update_operation(op.clone());
+                        }
+                        return true;
+                    }
+                    self.metrics.record_suggest_ops(ops.len() as u64);
+                    // Group i answers want i; a misbehaving policy that
+                    // returns fewer groups leaves the tail ops empty.
+                    let mut groups = decision.groups.into_iter();
+                    for op in &mut ops {
+                        let suggestions =
+                            groups.next().map(|g| g.suggestions).unwrap_or_default();
+                        self.register_suggestions(op, suggestions);
+                        op.done = true;
+                        let _ = self.ds.update_operation(op.clone());
                     }
                 }
-                op.trials = registered;
-            }
-            Err(e) => {
-                op.error = format!("policy failed: {e}");
-                self.metrics.record_error();
+                Err(e) => {
+                    let msg = format!("policy failed: {e}");
+                    self.metrics.record_error();
+                    for op in &mut ops {
+                        op.error = msg.clone();
+                        op.done = true;
+                        let _ = self.ds.update_operation(op.clone());
+                    }
+                }
             }
         }
-        op.done = true;
-        let _ = self.ds.update_operation(op);
+
+        true
+    }
+
+    /// Register one operation's suggestions as ACTIVE trials assigned to
+    /// its client. If the datastore rejects a trial mid-batch, the
+    /// already-registered trials are rolled back to INFEASIBLE — no
+    /// orphaned ACTIVE work is silently left assigned to the client — and
+    /// the operation completes with an error and no trials. A trial the
+    /// client already grabbed through the §5 fast path *and* reported a
+    /// measurement on is left alone: the client is demonstrably working
+    /// on it, so killing it would be worse than the orphan it prevents.
+    fn register_suggestions(&self, op: &mut OperationProto, suggestions: Vec<TrialSuggestion>) {
+        let mut registered: Vec<TrialProto> = Vec::with_capacity(suggestions.len());
+        for s in suggestions {
+            let mut trial = TrialProto {
+                state: TrialState::Active,
+                client_id: op.client_id.clone(),
+                created_ms: epoch_millis(),
+                ..Default::default()
+            };
+            trial.parameters = s
+                .parameters
+                .iter()
+                .map(|(k, v)| TrialParameter {
+                    parameter_id: k.clone(),
+                    value: converters::value_to_proto(v),
+                })
+                .collect();
+            trial.metadata = converters::metadata_to_proto(&s.metadata);
+            match self.ds.create_trial(&op.study_name, trial) {
+                Ok(t) => registered.push(t),
+                Err(e) => {
+                    op.error = format!("failed to register trial: {e}");
+                    self.metrics.record_error();
+                    let reason = format!("rolled back: {}", op.error);
+                    for t in &registered {
+                        let _ = self.ds.mutate_trial(&op.study_name, t.id, &mut |t| {
+                            let untouched = matches!(
+                                t.state,
+                                TrialState::Active | TrialState::Requested
+                            ) && t.measurements.is_empty();
+                            if untouched {
+                                t.state = TrialState::Infeasible;
+                                t.infeasibility_reason = reason.clone();
+                                t.completed_ms = epoch_millis();
+                            }
+                            Ok(())
+                        });
+                    }
+                    op.trials = Vec::new();
+                    return;
+                }
+            }
+        }
+        op.trials = registered;
     }
 
     pub fn get_operation(&self, req: GetOperationRequest) -> ApiResult<OperationResponse> {
@@ -278,22 +468,36 @@ impl VizierService {
     }
 
     /// Re-enqueue every non-done operation (call at startup; paper §3.2
-    /// server-side fault tolerance).
+    /// server-side fault tolerance). Interrupted suggest operations are
+    /// pushed back onto their study's queue and re-coalesced — one batch
+    /// runner per affected study — and anything already queued or in
+    /// flight is skipped, so a resume racing live traffic (or a second
+    /// resume) cannot double-serve an operation.
     pub fn resume_pending_operations(self: &Arc<Self>) -> ApiResult<usize> {
         let pending = self.ds.pending_operations()?;
         let n = pending.len();
+        // Queue everything first, then kick one batch job per study, so a
+        // fast worker cannot drain a study's queue while later pending
+        // operations of the same study are still being pushed.
+        let mut kick: Vec<(String, StudyConfig)> = Vec::new();
         for op in pending {
             let study = self.ds.get_study(&op.study_name)?;
             let config = converters::study_config_from_proto(&study.display_name, &study.spec);
-            let name = op.name.clone();
             match op.kind {
                 OperationKind::SuggestTrials => {
-                    self.enqueue(move |svc| svc.run_suggest_operation(&name, &config));
+                    let fresh = self.queue_suggest(&op.name, &op.study_name);
+                    if fresh && !kick.iter().any(|(s, _)| s == &op.study_name) {
+                        kick.push((op.study_name.clone(), config));
+                    }
                 }
                 OperationKind::EarlyStopping => {
+                    let name = op.name.clone();
                     self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
                 }
             }
+        }
+        for (study_name, config) in kick {
+            self.enqueue(move |svc| svc.run_suggest_batch(&study_name, &config));
         }
         Ok(n)
     }
@@ -418,23 +622,58 @@ impl VizierService {
     // Early stopping (long-running operation, §3.2)
     // ------------------------------------------------------------------
 
+    /// Batched (Pythia v2): one operation judges many trials. An empty
+    /// `trial_ids` means "every ACTIVE trial", resolved when the
+    /// operation runs.
     pub fn check_early_stopping(
         self: &Arc<Self>,
         req: CheckEarlyStoppingRequest,
     ) -> ApiResult<OperationResponse> {
         let study = self.ds.get_study(&req.study_name)?;
-        // Trial must exist and be running.
-        let trial = self.ds.get_trial(&req.study_name, req.trial_id)?;
-        if !matches!(trial.state, TrialState::Active | TrialState::Requested | TrialState::Stopping) {
-            return Err(ApiError::failed_precondition(format!(
-                "trial {} is not running",
-                req.trial_id
-            )));
+        // Explicitly named trials must exist and be running. Small
+        // batches (the should_trial_stop hot path) use keyed reads; big
+        // batches are validated with one filtered scan instead of one
+        // lock + full-trial clone per id.
+        let is_running = |state: TrialState| {
+            matches!(
+                state,
+                TrialState::Active | TrialState::Requested | TrialState::Stopping
+            )
+        };
+        if req.trial_ids.len() <= 2 {
+            for &trial_id in &req.trial_ids {
+                let trial = self.ds.get_trial(&req.study_name, trial_id)?;
+                if !is_running(trial.state) {
+                    return Err(ApiError::failed_precondition(format!(
+                        "trial {trial_id} is not running"
+                    )));
+                }
+            }
+        } else {
+            let running_filter = crate::datastore::query::TrialFilter {
+                states: vec![TrialState::Active, TrialState::Requested, TrialState::Stopping],
+                ..Default::default()
+            };
+            let running: HashSet<u64> = self
+                .ds
+                .query_trials(&req.study_name, &running_filter)?
+                .iter()
+                .map(|t| t.id)
+                .collect();
+            for &trial_id in &req.trial_ids {
+                if !running.contains(&trial_id) {
+                    // NotFound if the trial doesn't exist at all.
+                    self.ds.get_trial(&req.study_name, trial_id)?;
+                    return Err(ApiError::failed_precondition(format!(
+                        "trial {trial_id} is not running"
+                    )));
+                }
+            }
         }
         let op = self.ds.create_operation(OperationProto {
             kind: OperationKind::EarlyStopping,
             study_name: req.study_name.clone(),
-            trial_id: req.trial_id,
+            trial_ids: req.trial_ids.clone(),
             done: false,
             created_ms: epoch_millis(),
             ..Default::default()
@@ -446,20 +685,31 @@ impl VizierService {
     }
 
     fn run_early_stopping_operation(&self, op_name: &str, config: &StudyConfig) {
+        use crate::pythia::policy::EarlyStopDecision;
         let Ok(mut op) = self.ds.get_operation(op_name) else {
             return;
         };
         if op.done {
             return;
         }
-        let decision = (|| {
-            // Built-in automated stopping rule, if configured (Appendix B.1).
+        let result: Result<Vec<EarlyStopDecision>, String> = (|| {
+            // Empty = every trial that is ACTIVE right now.
+            let trial_ids: Vec<u64> = if op.trial_ids.is_empty() {
+                self.ds
+                    .query_trials(
+                        &op.study_name,
+                        &crate::datastore::query::TrialFilter::active(),
+                    )
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|t| t.id)
+                    .collect()
+            } else {
+                op.trial_ids.clone()
+            };
+            // Built-in automated stopping rule, if configured (Appendix
+            // B.1): the completed pool is read once for the whole batch.
             if config.stopping.kind != StoppingKind::None {
-                let trial = self
-                    .ds
-                    .get_trial(&op.study_name, op.trial_id)
-                    .map(|t| converters::trial_from_proto(&t))
-                    .map_err(|e| e.to_string())?;
                 let completed: Vec<crate::pyvizier::Trial> = self
                     .ds
                     .query_trials(
@@ -470,30 +720,47 @@ impl VizierService {
                     .iter()
                     .map(converters::trial_from_proto)
                     .collect();
-                Ok(crate::stopping::decide(config, &trial, &completed))
+                let mut out = Vec::with_capacity(trial_ids.len());
+                for id in trial_ids {
+                    // A trial deleted while the operation was queued gets
+                    // no verdict; it must not fail the rest of the batch.
+                    let Ok(proto) = self.ds.get_trial(&op.study_name, id) else {
+                        continue;
+                    };
+                    let trial = converters::trial_from_proto(&proto);
+                    let d = crate::stopping::decide(config, &trial, &completed);
+                    out.push(EarlyStopDecision {
+                        trial_id: id,
+                        should_stop: d.should_stop,
+                        reason: d.reason,
+                    });
+                }
+                Ok(out)
             } else {
-                // Otherwise delegate to the study's policy.
+                // Otherwise one policy invocation serves the whole batch.
                 self.pythia
                     .run_early_stop(&EarlyStopRequest {
                         study_name: op.study_name.clone(),
                         study_config: config.clone(),
-                        trial_id: op.trial_id,
+                        trial_ids,
                     })
                     .map_err(|e| e.to_string())
             }
         })();
-        match decision {
-            Ok(d) => {
-                op.should_stop = d.should_stop;
-                if d.should_stop {
-                    // Move the trial to STOPPING so the worker sees it.
-                    let _ = self.ds.mutate_trial(&op.study_name, op.trial_id, &mut |t| {
-                        if matches!(t.state, TrialState::Active | TrialState::Requested) {
-                            t.state = TrialState::Stopping;
-                        }
-                        Ok(())
-                    });
+        match result {
+            Ok(decisions) => {
+                for d in &decisions {
+                    if d.should_stop {
+                        // Move the trial to STOPPING so the worker sees it.
+                        let _ = self.ds.mutate_trial(&op.study_name, d.trial_id, &mut |t| {
+                            if matches!(t.state, TrialState::Active | TrialState::Requested) {
+                                t.state = TrialState::Stopping;
+                            }
+                            Ok(())
+                        });
+                    }
                 }
+                op.stop_decisions = decisions.iter().map(TrialStopDecision::from).collect();
             }
             Err(e) => {
                 op.error = e;

@@ -59,6 +59,11 @@ impl Histogram {
 pub struct ServiceMetrics {
     methods: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
     pub errors: AtomicU64,
+    /// Pythia suggest invocations (one per coalesced batch).
+    pub policy_runs: AtomicU64,
+    /// Suggest operations served by those invocations. With per-study
+    /// coalescing under load, `policy_runs < suggest_ops_served`.
+    pub suggest_ops_served: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -79,6 +84,22 @@ impl ServiceMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_policy_run(&self) {
+        self.policy_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_suggest_ops(&self, n: u64) {
+        self.suggest_ops_served.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn policy_runs(&self) -> u64 {
+        self.policy_runs.load(Ordering::Relaxed)
+    }
+
+    pub fn suggest_ops_served(&self) -> u64 {
+        self.suggest_ops_served.load(Ordering::Relaxed)
+    }
+
     /// Render a plain-text report (one line per method).
     pub fn report(&self) -> String {
         let m = self.methods.lock().unwrap();
@@ -93,6 +114,11 @@ impl ServiceMetrics {
             ));
         }
         out.push_str(&format!("errors: {}\n", self.errors.load(Ordering::Relaxed)));
+        out.push_str(&format!(
+            "policy runs: {} (serving {} suggest ops)\n",
+            self.policy_runs(),
+            self.suggest_ops_served()
+        ));
         out
     }
 }

@@ -15,7 +15,8 @@
 use crate::client::transport::{call, TcpTransport, Transport};
 use crate::datastore::query::TrialFilter;
 use crate::pythia::policy::{
-    EarlyStopDecision, EarlyStopRequest, PolicyError, SuggestDecision, SuggestRequest,
+    EarlyStopDecision, EarlyStopRequest, MetadataDelta, PolicyError, SuggestDecision,
+    SuggestRequest, SuggestWant, SuggestionGroup,
 };
 use crate::pythia::runner::{PolicyRegistry, PythiaEndpoint};
 use crate::pythia::supporter::PolicySupporter;
@@ -36,14 +37,39 @@ use std::thread::JoinHandle;
 const M_SUGGEST: u8 = 101;
 const M_EARLY_STOP: u8 = 102;
 
-/// Request the Pythia service to produce suggestions.
+/// One want on the wire: `(client_id, count)`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SuggestWantProto {
+    pub client_id: String,
+    pub count: u64,
+}
+
+impl WireMessage for SuggestWantProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.client_id);
+        w.u64(2, self.count);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Self::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.client_id = v.as_string()?,
+                2 => m.count = v.as_u64()?,
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Request the Pythia service to produce suggestions for a batch of
+/// coalesced wants (Pythia v2).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct PythiaSuggestRequest {
     pub study_name: String,
     pub display_name: String,
     pub spec: StudySpecProto,
-    pub count: u64,
-    pub client_id: String,
+    pub wants: Vec<SuggestWantProto>,
 }
 
 impl WireMessage for PythiaSuggestRequest {
@@ -51,8 +77,7 @@ impl WireMessage for PythiaSuggestRequest {
         w.str(1, &self.study_name);
         w.str(2, &self.display_name);
         w.msg(3, &self.spec);
-        w.u64(4, self.count);
-        w.str(5, &self.client_id);
+        w.msgs(4, &self.wants);
     }
     fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
         let mut m = Self::default();
@@ -61,8 +86,7 @@ impl WireMessage for PythiaSuggestRequest {
                 1 => m.study_name = v.as_string()?,
                 2 => m.display_name = v.as_string()?,
                 3 => m.spec = v.as_msg()?,
-                4 => m.count = v.as_u64()?,
-                5 => m.client_id = v.as_string()?,
+                4 => m.wants.push(v.as_msg()?),
                 _ => {}
             }
         }
@@ -70,24 +94,50 @@ impl WireMessage for PythiaSuggestRequest {
     }
 }
 
-/// Pythia's reply: suggestions (as bare trials) + designer metadata.
+/// One want's answer: the suggestions (as bare trials) for `client_id`.
 #[derive(Debug, Clone, PartialEq, Default)]
-pub struct PythiaSuggestResponse {
+pub struct SuggestionGroupProto {
+    pub client_id: String,
     pub suggestions: Vec<TrialProto>,
-    pub study_metadata: Vec<MetadataItem>,
 }
 
-impl WireMessage for PythiaSuggestResponse {
+impl WireMessage for SuggestionGroupProto {
     fn encode_fields(&self, w: &mut Writer) {
-        w.msgs(1, &self.suggestions);
-        w.msgs(2, &self.study_metadata);
+        w.str(1, &self.client_id);
+        w.msgs(2, &self.suggestions);
     }
     fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
         let mut m = Self::default();
         while let Some((f, v)) = r.next_field()? {
             match f {
-                1 => m.suggestions.push(v.as_msg()?),
-                2 => m.study_metadata.push(v.as_msg()?),
+                1 => m.client_id = v.as_string()?,
+                2 => m.suggestions.push(v.as_msg()?),
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Pythia's reply: one group per want + the unified metadata delta
+/// (`trial_id == 0` entries target the study table).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PythiaSuggestResponse {
+    pub groups: Vec<SuggestionGroupProto>,
+    pub metadata_delta: Vec<UnitMetadataUpdate>,
+}
+
+impl WireMessage for PythiaSuggestResponse {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.msgs(1, &self.groups);
+        w.msgs(2, &self.metadata_delta);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = Self::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.groups.push(v.as_msg()?),
+                2 => m.metadata_delta.push(v.as_msg()?),
                 _ => {}
             }
         }
@@ -100,7 +150,11 @@ pub struct PythiaEarlyStopRequest {
     pub study_name: String,
     pub display_name: String,
     pub spec: StudySpecProto,
-    pub trial_id: u64,
+    /// Trials to judge. The API service resolves an empty client request
+    /// to the ACTIVE set *before* forwarding, so this list is never empty
+    /// on the shipped path; a policy receiving an empty list judges
+    /// nothing (the default implementation returns no decisions).
+    pub trial_ids: Vec<u64>,
 }
 
 impl WireMessage for PythiaEarlyStopRequest {
@@ -108,7 +162,9 @@ impl WireMessage for PythiaEarlyStopRequest {
         w.str(1, &self.study_name);
         w.str(2, &self.display_name);
         w.msg(3, &self.spec);
-        w.u64(4, self.trial_id);
+        for id in &self.trial_ids {
+            w.u64(4, *id);
+        }
     }
     fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
         let mut m = Self::default();
@@ -117,7 +173,7 @@ impl WireMessage for PythiaEarlyStopRequest {
                 1 => m.study_name = v.as_string()?,
                 2 => m.display_name = v.as_string()?,
                 3 => m.spec = v.as_msg()?,
-                4 => m.trial_id = v.as_u64()?,
+                4 => m.trial_ids.push(v.as_u64()?),
                 _ => {}
             }
         }
@@ -125,24 +181,21 @@ impl WireMessage for PythiaEarlyStopRequest {
     }
 }
 
+/// Per-trial verdicts (Pythia v2).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct PythiaEarlyStopResponse {
-    pub should_stop: bool,
-    pub reason: String,
+    pub decisions: Vec<TrialStopDecision>,
 }
 
 impl WireMessage for PythiaEarlyStopResponse {
     fn encode_fields(&self, w: &mut Writer) {
-        w.bool(1, self.should_stop);
-        w.str(2, &self.reason);
+        w.msgs(1, &self.decisions);
     }
     fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
         let mut m = Self::default();
         while let Some((f, v)) = r.next_field()? {
-            match f {
-                1 => m.should_stop = v.as_bool()?,
-                2 => m.reason = v.as_string()?,
-                _ => {}
+            if f == 1 {
+                m.decisions.push(v.as_msg()?);
             }
         }
         Ok(m)
@@ -358,22 +411,32 @@ fn serve_pythia_connection(
                             &SuggestRequest {
                                 study_name: req.study_name,
                                 study_config: config,
-                                count: req.count as usize,
-                                client_id: req.client_id,
+                                wants: req
+                                    .wants
+                                    .into_iter()
+                                    .map(|w| SuggestWant {
+                                        client_id: w.client_id,
+                                        count: w.count as usize,
+                                    })
+                                    .collect(),
                             },
                             &supporter,
                         )
                         .map_err(|e| e.to_string())?;
                     Ok(PythiaSuggestResponse {
-                        suggestions: decision
-                            .suggestions
+                        groups: decision
+                            .groups
                             .iter()
-                            .map(suggestion_to_proto)
+                            .map(|g| SuggestionGroupProto {
+                                client_id: g.client_id.clone(),
+                                suggestions: g
+                                    .suggestions
+                                    .iter()
+                                    .map(suggestion_to_proto)
+                                    .collect(),
+                            })
                             .collect(),
-                        study_metadata: decision
-                            .study_metadata
-                            .map(|md| converters::metadata_to_proto(&md))
-                            .unwrap_or_default(),
+                        metadata_delta: decision.metadata_delta.to_updates(),
                     })
                 })();
                 match result {
@@ -388,19 +451,18 @@ fn serve_pythia_connection(
                     let config =
                         converters::study_config_from_proto(&req.display_name, &req.spec);
                     let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
-                    let d = policy
+                    let decisions = policy
                         .early_stop(
                             &EarlyStopRequest {
                                 study_name: req.study_name,
                                 study_config: config,
-                                trial_id: req.trial_id,
+                                trial_ids: req.trial_ids,
                             },
                             &supporter,
                         )
                         .map_err(|e| e.to_string())?;
                     Ok(PythiaEarlyStopResponse {
-                        should_stop: d.should_stop,
-                        reason: d.reason,
+                        decisions: decisions.into_iter().map(TrialStopDecision::from).collect(),
                     })
                 })();
                 match result {
@@ -493,42 +555,51 @@ impl PythiaEndpoint for RemotePythia {
             study_name: req.study_name.clone(),
             display_name: req.study_config.display_name.clone(),
             spec: converters::study_config_to_proto(&req.study_config),
-            count: req.count as u64,
-            client_id: req.client_id.clone(),
+            wants: req
+                .wants
+                .iter()
+                .map(|w| SuggestWantProto {
+                    client_id: w.client_id.clone(),
+                    count: w.count as u64,
+                })
+                .collect(),
         };
         let resp: PythiaSuggestResponse = self.roundtrip(M_SUGGEST, &wire_req)?;
         Ok(SuggestDecision {
-            suggestions: resp
-                .suggestions
-                .iter()
-                .map(|t| {
-                    let trial = converters::trial_from_proto(t);
-                    TrialSuggestion {
-                        parameters: trial.parameters,
-                        metadata: trial.metadata,
-                    }
+            groups: resp
+                .groups
+                .into_iter()
+                .map(|g| SuggestionGroup {
+                    client_id: g.client_id,
+                    suggestions: g
+                        .suggestions
+                        .iter()
+                        .map(|t| {
+                            let trial = converters::trial_from_proto(t);
+                            TrialSuggestion {
+                                parameters: trial.parameters,
+                                metadata: trial.metadata,
+                            }
+                        })
+                        .collect(),
                 })
                 .collect(),
-            study_metadata: if resp.study_metadata.is_empty() {
-                None
-            } else {
-                Some(converters::metadata_from_proto(&resp.study_metadata))
-            },
+            metadata_delta: MetadataDelta::from_updates(&resp.metadata_delta),
         })
     }
 
-    fn run_early_stop(&self, req: &EarlyStopRequest) -> Result<EarlyStopDecision, PolicyError> {
+    fn run_early_stop(
+        &self,
+        req: &EarlyStopRequest,
+    ) -> Result<Vec<EarlyStopDecision>, PolicyError> {
         let wire_req = PythiaEarlyStopRequest {
             study_name: req.study_name.clone(),
             display_name: req.study_config.display_name.clone(),
             spec: converters::study_config_to_proto(&req.study_config),
-            trial_id: req.trial_id,
+            trial_ids: req.trial_ids.clone(),
         };
         let resp: PythiaEarlyStopResponse = self.roundtrip(M_EARLY_STOP, &wire_req)?;
-        Ok(EarlyStopDecision {
-            should_stop: resp.should_stop,
-            reason: resp.reason,
-        })
+        Ok(resp.decisions.into_iter().map(EarlyStopDecision::from).collect())
     }
 }
 
@@ -546,19 +617,49 @@ mod tests {
                 algorithm: "RANDOM_SEARCH".into(),
                 ..Default::default()
             },
-            count: 3,
-            client_id: "w0".into(),
+            wants: vec![
+                SuggestWantProto {
+                    client_id: "w0".into(),
+                    count: 3,
+                },
+                SuggestWantProto {
+                    client_id: "w1".into(),
+                    count: 1,
+                },
+            ],
         };
         let back: PythiaSuggestRequest = decode(&encode(&req)).unwrap();
         assert_eq!(back, req);
 
         let resp = PythiaSuggestResponse {
-            suggestions: vec![TrialProto::default()],
-            study_metadata: vec![MetadataItem {
-                namespace: "d".into(),
-                key: "k".into(),
-                value: vec![1],
-            }],
+            groups: vec![
+                SuggestionGroupProto {
+                    client_id: "w0".into(),
+                    suggestions: vec![TrialProto::default(), TrialProto::default()],
+                },
+                SuggestionGroupProto {
+                    client_id: "w1".into(),
+                    suggestions: vec![TrialProto::default()],
+                },
+            ],
+            metadata_delta: vec![
+                UnitMetadataUpdate {
+                    trial_id: 0,
+                    item: Some(MetadataItem {
+                        namespace: "d".into(),
+                        key: "k".into(),
+                        value: vec![1],
+                    }),
+                },
+                UnitMetadataUpdate {
+                    trial_id: 5,
+                    item: Some(MetadataItem {
+                        namespace: "d".into(),
+                        key: "t".into(),
+                        value: vec![2],
+                    }),
+                },
+            ],
         };
         let back: PythiaSuggestResponse = decode(&encode(&resp)).unwrap();
         assert_eq!(back, resp);
@@ -567,9 +668,19 @@ mod tests {
             study_name: "s".into(),
             display_name: "d".into(),
             spec: StudySpecProto::default(),
-            trial_id: 7,
+            trial_ids: vec![7, 9],
         };
         let back: PythiaEarlyStopRequest = decode(&encode(&es)).unwrap();
         assert_eq!(back, es);
+
+        let esr = PythiaEarlyStopResponse {
+            decisions: vec![TrialStopDecision {
+                trial_id: 7,
+                should_stop: true,
+                reason: "plateau".into(),
+            }],
+        };
+        let back: PythiaEarlyStopResponse = decode(&encode(&esr)).unwrap();
+        assert_eq!(back, esr);
     }
 }

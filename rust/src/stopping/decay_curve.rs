@@ -80,6 +80,7 @@ pub fn decay_curve_should_stop(
     let ucb = mu + config.stopping.confidence * var.sqrt();
     if ucb < best {
         EarlyStopDecision {
+            trial_id: trial.id,
             should_stop: true,
             reason: format!(
                 "decay-curve stopping: predicted final {} = {:.6} (+{:.2}σ = {:.6}) \

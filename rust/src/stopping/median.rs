@@ -44,6 +44,7 @@ pub fn median_should_stop(
     let below = if maximize { best < median } else { best > median };
     if below {
         EarlyStopDecision {
+            trial_id: trial.id,
             should_stop: true,
             reason: format!(
                 "median stopping: best {} = {best:.6} is worse than median running \

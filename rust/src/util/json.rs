@@ -196,7 +196,7 @@ fn write_number(n: f64, out: &mut String) {
         // JSON has no NaN/Inf; encode as null per common practice.
         out.push_str("null");
     } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
-        out.push_str(&format!("{}", n as i64));
+        out.push_str(&(n as i64).to_string());
     } else {
         // {:?} gives a shortest round-trippable representation for f64.
         out.push_str(&format!("{n:?}"));

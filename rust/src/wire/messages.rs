@@ -690,6 +690,35 @@ wire_enum! {
     }
 }
 
+/// One trial's early-stopping verdict (Pythia v2: early-stopping
+/// operations carry a decision per requested trial).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrialStopDecision {
+    pub trial_id: u64,
+    pub should_stop: bool,
+    pub reason: String,
+}
+
+impl WireMessage for TrialStopDecision {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.u64(1, self.trial_id);
+        w.bool(2, self.should_stop);
+        w.str(3, &self.reason);
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut d = TrialStopDecision::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => d.trial_id = v.as_u64()?,
+                2 => d.should_stop = v.as_bool()?,
+                3 => d.reason = v.as_string()?,
+                _ => {}
+            }
+        }
+        Ok(d)
+    }
+}
+
 /// A durable long-running operation. Stored in the datastore so the server
 /// can resume/restart the computation after a crash (paper §3.2,
 /// "Server-side Fault Tolerance").
@@ -705,9 +734,12 @@ pub struct OperationProto {
     pub trials: Vec<TrialProto>,
     /// SuggestTrials input: how many suggestions were requested.
     pub count: u64,
-    /// EarlyStopping input/result.
-    pub trial_id: u64,
-    pub should_stop: bool,
+    /// EarlyStopping input: the trials to judge (empty = every trial that
+    /// was ACTIVE when the operation ran). A v1 single-trial encoding
+    /// decodes as a one-element list (same field number).
+    pub trial_ids: Vec<u64>,
+    /// EarlyStopping result: one verdict per judged trial.
+    pub stop_decisions: Vec<TrialStopDecision>,
     pub created_ms: u64,
 }
 
@@ -722,8 +754,8 @@ impl Default for OperationProto {
             error: String::new(),
             trials: Vec::new(),
             count: 0,
-            trial_id: 0,
-            should_stop: false,
+            trial_ids: Vec::new(),
+            stop_decisions: Vec::new(),
             created_ms: 0,
         }
     }
@@ -739,12 +771,15 @@ impl WireMessage for OperationProto {
         w.str(6, &self.error);
         w.msgs(7, &self.trials);
         w.u64(8, self.count);
-        w.u64(9, self.trial_id);
-        w.bool(10, self.should_stop);
+        for id in &self.trial_ids {
+            w.u64(9, *id);
+        }
         w.u64(11, self.created_ms);
+        w.msgs(12, &self.stop_decisions);
     }
     fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
         let mut o = OperationProto::default();
+        let mut legacy_should_stop = false;
         while let Some((f, v)) = r.next_field()? {
             match f {
                 1 => o.name = v.as_string()?,
@@ -755,10 +790,23 @@ impl WireMessage for OperationProto {
                 6 => o.error = v.as_string()?,
                 7 => o.trials.push(v.as_msg()?),
                 8 => o.count = v.as_u64()?,
-                9 => o.trial_id = v.as_u64()?,
-                10 => o.should_stop = v.as_bool()?,
+                9 => o.trial_ids.push(v.as_u64()?),
+                10 => legacy_should_stop = v.as_bool()?, // v1 single-trial verdict
                 11 => o.created_ms = v.as_u64()?,
+                12 => o.stop_decisions.push(v.as_msg()?),
                 _ => {}
+            }
+        }
+        // A v1 record (e.g. replayed from an old WAL) carried its verdict
+        // as field 10 + the single trial id in field 9; don't drop an
+        // acknowledged stop decision on upgrade.
+        if legacy_should_stop && o.stop_decisions.is_empty() {
+            if let Some(&trial_id) = o.trial_ids.first() {
+                o.stop_decisions.push(TrialStopDecision {
+                    trial_id,
+                    should_stop: true,
+                    reason: String::new(),
+                });
             }
         }
         Ok(o)
@@ -825,8 +873,19 @@ simple_msg! { StudyResponse { 1 => study: (msg StudyProto) } }
 simple_msg! { GetStudyRequest { 1 => name: str } }
 simple_msg! { LookupStudyRequest { 1 => display_name: str } }
 simple_msg! { DeleteStudyRequest { 1 => name: str } }
-simple_msg! { ListStudiesRequest {} }
-simple_msg! { ListStudiesResponse { 1 => studies: (repmsg StudyProto) } }
+simple_msg! {
+    /// ListStudies with optional pagination: `page_size == 0` returns
+    /// everything (v1 behaviour); otherwise at most `page_size` studies
+    /// starting after `page_token` (opaque, from the previous response).
+    ListStudiesRequest { 1 => page_size: u64, 2 => page_token: str }
+}
+simple_msg! {
+    /// `next_page_token` is empty when the listing is exhausted.
+    ListStudiesResponse {
+        1 => studies: (repmsg StudyProto),
+        2 => next_page_token: str,
+    }
+}
 simple_msg! { EmptyResponse {} }
 
 simple_msg! {
@@ -862,8 +921,34 @@ simple_msg! { ListTrialsRequest { 1 => study_name: str } }
 simple_msg! { ListTrialsResponse { 1 => trials: (repmsg TrialProto) } }
 simple_msg! { GetTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
 simple_msg! { DeleteTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
-simple_msg! {
-    CheckEarlyStoppingRequest { 1 => study_name: str, 2 => trial_id: u64 }
+
+/// CheckEarlyStopping, batched (Pythia v2): ask about many trials in one
+/// operation. `trial_ids` empty = "every ACTIVE trial". A v1 single-trial
+/// request decodes as a one-element list (same field number).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CheckEarlyStoppingRequest {
+    pub study_name: String,
+    pub trial_ids: Vec<u64>,
+}
+
+impl WireMessage for CheckEarlyStoppingRequest {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.study_name);
+        for id in &self.trial_ids {
+            w.u64(2, *id);
+        }
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = CheckEarlyStoppingRequest::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.study_name = v.as_string()?,
+                2 => m.trial_ids.push(v.as_u64()?),
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
 }
 simple_msg! { StopTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
 simple_msg! { ListOptimalTrialsRequest { 1 => study_name: str } }
@@ -1037,12 +1122,70 @@ mod tests {
             error: "policy exploded".into(),
             trials: vec![TrialProto::default()],
             count: 2,
-            trial_id: 17,
-            should_stop: true,
+            trial_ids: vec![17, 0, 23],
+            stop_decisions: vec![
+                TrialStopDecision {
+                    trial_id: 17,
+                    should_stop: true,
+                    reason: "below median".into(),
+                },
+                TrialStopDecision::default(),
+            ],
             created_ms: 42,
         };
         let back: OperationProto = decode(&encode(&op)).unwrap();
         assert_eq!(back, op);
+    }
+
+    #[test]
+    fn v1_operation_verdict_survives_decode() {
+        // Hand-encode a v1-shaped operation: single trial id in field 9
+        // and the verdict as the retired bool field 10. Replaying an old
+        // WAL must not drop an acknowledged stop decision.
+        let mut w = Writer::new();
+        w.str(1, "operations/9");
+        w.u64(2, OperationKind::EarlyStopping.as_u64());
+        w.bool(5, true);
+        w.u64(9, 33);
+        w.bool(10, true);
+        let op: OperationProto = decode(&w.into_bytes()).unwrap();
+        assert_eq!(op.trial_ids, vec![33]);
+        assert_eq!(op.stop_decisions.len(), 1);
+        assert!(op.stop_decisions[0].should_stop);
+        assert_eq!(op.stop_decisions[0].trial_id, 33);
+    }
+
+    #[test]
+    fn batched_early_stopping_request_roundtrip() {
+        let req = CheckEarlyStoppingRequest {
+            study_name: "studies/3".into(),
+            trial_ids: vec![1, 2, 99],
+        };
+        let back: CheckEarlyStoppingRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+        // Empty = "all ACTIVE": survives the roundtrip as empty.
+        let all = CheckEarlyStoppingRequest {
+            study_name: "studies/3".into(),
+            trial_ids: vec![],
+        };
+        let back: CheckEarlyStoppingRequest = decode(&encode(&all)).unwrap();
+        assert_eq!(back, all);
+    }
+
+    #[test]
+    fn list_studies_pagination_fields_roundtrip() {
+        let req = ListStudiesRequest {
+            page_size: 25,
+            page_token: "3:studies/17".into(),
+        };
+        let back: ListStudiesRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+        let resp = ListStudiesResponse {
+            studies: vec![StudyProto::default()],
+            next_page_token: "0:studies/2".into(),
+        };
+        let back: ListStudiesResponse = decode(&encode(&resp)).unwrap();
+        assert_eq!(back, resp);
     }
 
     #[test]

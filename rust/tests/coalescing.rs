@@ -1,0 +1,590 @@
+//! Pythia v2 integration tests: per-study suggest-operation coalescing,
+//! crash-resume without double-serving, partial-registration rollback,
+//! batched early stopping end-to-end over the wire, and paginated study
+//! listing through the service.
+
+use ossvizier::client::{TcpTransport, VizierClient};
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::query::TrialFilter;
+use ossvizier::datastore::{Datastore, DsError};
+use ossvizier::pythia::policy::{
+    EarlyStopDecision, EarlyStopRequest, Policy, PolicyError, SuggestDecision, SuggestRequest,
+};
+use ossvizier::pythia::supporter::PolicySupporter;
+use ossvizier::pyvizier::{
+    converters, Algorithm, Measurement, MetricInformation, StudyConfig, TrialSuggestion,
+};
+use ossvizier::service::{build_service, VizierServer, VizierService};
+use ossvizier::wire::messages::{
+    ListStudiesRequest, OperationKind, OperationProto, ScaleType, StoppingConfig, StoppingKind,
+    StudyProto, TrialProto, TrialState, UnitMetadataUpdate,
+};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+fn test_config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("coal");
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = algorithm;
+    c.seed = 5;
+    c
+}
+
+fn wait_done(ds: &Arc<dyn Datastore>, op_name: &str) -> OperationProto {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let op = ds.get_operation(op_name).unwrap();
+        if op.done {
+            return op;
+        }
+        assert!(Instant::now() < deadline, "operation {op_name} never completed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A policy whose first invocation blocks on a gate, so tests can pile up
+// operations deterministically while the single worker is busy.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct GatedPolicy {
+    gate: Arc<Gate>,
+    invocations: Arc<AtomicUsize>,
+}
+
+impl Policy for GatedPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        if self.invocations.fetch_add(1, Ordering::SeqCst) == 0 {
+            self.gate.wait(); // only the first invocation blocks
+        }
+        Ok(SuggestDecision::from_flat(
+            req,
+            vec![TrialSuggestion::default(); req.total_count()],
+        ))
+    }
+}
+
+fn gated_service(
+    ds: Arc<dyn Datastore>,
+    workers: usize,
+) -> (Arc<VizierService>, Arc<Gate>, Arc<AtomicUsize>) {
+    let gate = Arc::new(Gate::default());
+    let invocations = Arc::new(AtomicUsize::new(0));
+    let (g, inv) = (Arc::clone(&gate), Arc::clone(&invocations));
+    let service = build_service(
+        ds,
+        move |reg| {
+            reg.register(
+                "GATED",
+                Arc::new(move |_| {
+                    Box::new(GatedPolicy {
+                        gate: Arc::clone(&g),
+                        invocations: Arc::clone(&inv),
+                    })
+                }),
+            );
+        },
+        workers,
+    );
+    (service, gate, invocations)
+}
+
+#[test]
+fn coalesced_suggests_share_one_policy_invocation() {
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let (service, gate, invocations) = gated_service(Arc::clone(&ds), 1);
+    let config = test_config(Algorithm::Custom("GATED".into()));
+    let study = service
+        .create_study(ossvizier::wire::messages::CreateStudyRequest {
+            study: StudyProto {
+                display_name: "coal".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            },
+        })
+        .unwrap()
+        .study;
+
+    // Op 0 occupies the single worker (its policy run blocks on the gate).
+    let first = service
+        .suggest_trials(ossvizier::wire::messages::SuggestTrialsRequest {
+            study_name: study.name.clone(),
+            count: 1,
+            client_id: "c0".into(),
+        })
+        .unwrap()
+        .operation;
+    // Wait until the blocked policy run actually started, so ops 1..8 all
+    // pile up in the study's queue behind it.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while invocations.load(Ordering::SeqCst) == 0 {
+        assert!(Instant::now() < deadline, "first policy run never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // N-1 threads enqueue suggest ops concurrently while the worker is
+    // stuck; they all pile up in the study's queue.
+    let n = 8usize;
+    let mut expected_total = 1; // op 0 asked for 1
+    let handles: Vec<_> = (1..n)
+        .map(|i| {
+            let service = Arc::clone(&service);
+            let study_name = study.name.clone();
+            std::thread::spawn(move || {
+                let count = i as u64; // varied counts exercise partitioning
+                let op = service
+                    .suggest_trials(ossvizier::wire::messages::SuggestTrialsRequest {
+                        study_name,
+                        count,
+                        client_id: format!("c{i}"),
+                    })
+                    .unwrap()
+                    .operation;
+                (op, format!("c{i}"), count as usize)
+            })
+        })
+        .collect();
+    let ops: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (_, _, count) in &ops {
+        expected_total += count;
+    }
+    gate.release();
+
+    let first_done = wait_done(&ds, &first.name);
+    assert_eq!(first_done.trials.len(), 1);
+    let mut total = first_done.trials.len();
+    let mut all_ids: Vec<u64> = first_done.trials.iter().map(|t| t.id).collect();
+    for (op, client, count) in &ops {
+        let done = wait_done(&ds, &op.name);
+        assert!(done.error.is_empty(), "{}", done.error);
+        // (a) each op got exactly what it asked for,
+        // (b) every trial is assigned to the op's own client.
+        assert_eq!(done.trials.len(), *count, "op for {client}");
+        assert!(done.trials.iter().all(|t| t.client_id == *client));
+        total += done.trials.len();
+        all_ids.extend(done.trials.iter().map(|t| t.id));
+    }
+    // Total suggestions == sum of requested counts; no trial served twice.
+    assert_eq!(total, expected_total);
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(all_ids.len(), expected_total, "no trial shared between ops");
+
+    // (c) strictly fewer policy invocations than operations: ops 1..8
+    // coalesced into one batch behind the gated first run.
+    let runs = invocations.load(Ordering::SeqCst);
+    assert!(runs < n, "expected < {n} policy invocations, got {runs}");
+    assert_eq!(service.metrics.policy_runs(), runs as u64);
+    assert_eq!(service.metrics.suggest_ops_served(), n as u64);
+    service.shutdown();
+}
+
+#[test]
+fn resume_recoalesces_without_double_serving() {
+    // Persist a study and 5 interrupted suggest ops as if the server died
+    // before any policy work, then restart and resume.
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let config = test_config(Algorithm::RandomSearch);
+    let study = ds
+        .create_study(StudyProto {
+            display_name: "resume".into(),
+            spec: converters::study_config_to_proto(&config),
+            ..Default::default()
+        })
+        .unwrap();
+    let mut op_names = Vec::new();
+    let mut expected_total = 0usize;
+    for i in 0..5u64 {
+        let count = i + 1;
+        expected_total += count as usize;
+        let op = ds
+            .create_operation(OperationProto {
+                kind: OperationKind::SuggestTrials,
+                study_name: study.name.clone(),
+                client_id: format!("w{i}"),
+                count,
+                done: false,
+                ..Default::default()
+            })
+            .unwrap();
+        op_names.push(op.name);
+    }
+
+    let service = build_service(Arc::clone(&ds), |_| {}, 2);
+    // A second resume racing the first must not double-serve anything:
+    // queued/claimed bookkeeping dedupes by operation name.
+    assert_eq!(service.resume_pending_operations().unwrap(), 5);
+    let _ = service.resume_pending_operations();
+
+    let mut total = 0usize;
+    for name in &op_names {
+        let op = wait_done(&ds, name);
+        assert!(op.error.is_empty(), "{}", op.error);
+        total += op.trials.len();
+    }
+    assert_eq!(total, expected_total, "each op served exactly once");
+    assert_eq!(
+        ds.trial_count(&study.name).unwrap(),
+        expected_total,
+        "no duplicate registrations from the duplicate resume"
+    );
+    // All 5 ops were pending at resume time, so they coalesced into fewer
+    // policy invocations than operations.
+    assert!(service.metrics.policy_runs() < 5);
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Partial-registration rollback (satellite regression test)
+// ---------------------------------------------------------------------------
+
+/// Delegating datastore whose `create_trial` fails on the Nth call.
+struct FailingDatastore {
+    inner: InMemoryDatastore,
+    creates: AtomicUsize,
+    fail_on: usize,
+}
+
+impl Datastore for FailingDatastore {
+    fn create_study(&self, study: StudyProto) -> Result<StudyProto, DsError> {
+        self.inner.create_study(study)
+    }
+    fn get_study(&self, name: &str) -> Result<StudyProto, DsError> {
+        self.inner.get_study(name)
+    }
+    fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError> {
+        self.inner.lookup_study(display_name)
+    }
+    fn list_studies(&self) -> Result<Vec<StudyProto>, DsError> {
+        self.inner.list_studies()
+    }
+    fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
+        self.inner.update_study(study)
+    }
+    fn delete_study(&self, name: &str) -> Result<(), DsError> {
+        self.inner.delete_study(name)
+    }
+    fn create_trial(&self, study: &str, trial: TrialProto) -> Result<TrialProto, DsError> {
+        if self.creates.fetch_add(1, Ordering::SeqCst) + 1 == self.fail_on {
+            return Err(DsError::Storage("injected create_trial failure".into()));
+        }
+        self.inner.create_trial(study, trial)
+    }
+    fn get_trial(&self, study: &str, id: u64) -> Result<TrialProto, DsError> {
+        self.inner.get_trial(study, id)
+    }
+    fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError> {
+        self.inner.list_trials(study)
+    }
+    fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
+        self.inner.update_trial(study, trial)
+    }
+    fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError> {
+        self.inner.delete_trial(study, id)
+    }
+    fn mutate_trial(
+        &self,
+        study: &str,
+        id: u64,
+        f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
+    ) -> Result<TrialProto, DsError> {
+        self.inner.mutate_trial(study, id, f)
+    }
+    fn create_operation(&self, op: OperationProto) -> Result<OperationProto, DsError> {
+        self.inner.create_operation(op)
+    }
+    fn get_operation(&self, name: &str) -> Result<OperationProto, DsError> {
+        self.inner.get_operation(name)
+    }
+    fn update_operation(&self, op: OperationProto) -> Result<(), DsError> {
+        self.inner.update_operation(op)
+    }
+    fn pending_operations(&self) -> Result<Vec<OperationProto>, DsError> {
+        self.inner.pending_operations()
+    }
+    fn update_metadata(
+        &self,
+        study: &str,
+        updates: &[UnitMetadataUpdate],
+    ) -> Result<(), DsError> {
+        self.inner.update_metadata(study, updates)
+    }
+    fn trial_count(&self, study: &str) -> Result<usize, DsError> {
+        self.inner.trial_count(study)
+    }
+}
+
+#[test]
+fn partial_registration_rolls_back_to_infeasible() {
+    // create_trial fails on the 3rd call: two trials of a count=4 op get
+    // registered, then the op must roll them back instead of leaving
+    // orphaned ACTIVE trials assigned to the client.
+    let ds: Arc<dyn Datastore> = Arc::new(FailingDatastore {
+        inner: InMemoryDatastore::new(),
+        creates: AtomicUsize::new(0),
+        fail_on: 3,
+    });
+    let service = build_service(Arc::clone(&ds), |_| {}, 1);
+    let config = test_config(Algorithm::RandomSearch);
+    let study = service
+        .create_study(ossvizier::wire::messages::CreateStudyRequest {
+            study: StudyProto {
+                display_name: "rollback".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            },
+        })
+        .unwrap()
+        .study;
+
+    let op = service
+        .suggest_trials(ossvizier::wire::messages::SuggestTrialsRequest {
+            study_name: study.name.clone(),
+            count: 4,
+            client_id: "w0".into(),
+        })
+        .unwrap()
+        .operation;
+    let done = wait_done(&ds, &op.name);
+
+    // Error contract: the op reports the failure and hands out no trials.
+    assert!(done.error.contains("failed to register trial"), "{}", done.error);
+    assert!(done.trials.is_empty(), "failed op must not expose trials");
+    // The two already-registered trials were rolled back to INFEASIBLE.
+    let trials = ds.list_trials(&study.name).unwrap();
+    assert_eq!(trials.len(), 2);
+    for t in &trials {
+        assert_eq!(t.state, TrialState::Infeasible);
+        assert!(t.infeasibility_reason.contains("rolled back"), "{}", t.infeasibility_reason);
+    }
+    // Nothing ACTIVE is left assigned to the client, so its next suggest
+    // is not fed orphans via the client-fault-tolerance fast path.
+    assert!(ds
+        .query_trials(&study.name, &TrialFilter::active().for_client("w0"))
+        .unwrap()
+        .is_empty());
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Batched early stopping end-to-end: client -> TCP -> service -> policy ->
+// client (acceptance criterion).
+// ---------------------------------------------------------------------------
+
+/// Early-stopping test policy: stops every odd trial id.
+struct StopOddPolicy;
+
+impl Policy for StopOddPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        Ok(SuggestDecision::from_flat(
+            req,
+            vec![TrialSuggestion::default(); req.total_count()],
+        ))
+    }
+    fn early_stop(
+        &mut self,
+        req: &EarlyStopRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<Vec<EarlyStopDecision>, PolicyError> {
+        Ok(req
+            .trial_ids
+            .iter()
+            .map(|&id| {
+                if id % 2 == 1 {
+                    EarlyStopDecision::stop(id, "odd trial")
+                } else {
+                    EarlyStopDecision::keep(id)
+                }
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn batched_early_stopping_over_the_wire() {
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let service = build_service(
+        Arc::clone(&ds),
+        |reg| reg.register("STOP_ODD", Arc::new(|_| Box::new(StopOddPolicy))),
+        4,
+    );
+    let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let config = test_config(Algorithm::Custom("STOP_ODD".into()));
+    let transport = Box::new(TcpTransport::connect(&addr).unwrap());
+    let mut client =
+        VizierClient::load_or_create_study(transport, "es-batch", &config, "w").unwrap();
+
+    // Four running trials (ids 1..=4).
+    let trials = client.get_suggestions(4).unwrap();
+    assert_eq!(trials.len(), 4);
+    let ids: Vec<u64> = trials.iter().map(|t| t.id).collect();
+
+    // Explicit batch: per-trial decisions come back in one operation.
+    let decisions = client.check_early_stopping(&ids).unwrap();
+    assert_eq!(decisions.len(), 4);
+    for d in &decisions {
+        assert_eq!(d.should_stop, d.trial_id % 2 == 1, "trial {}", d.trial_id);
+        if d.should_stop {
+            assert_eq!(d.reason, "odd trial");
+        }
+    }
+    // Stopped trials moved to STOPPING server-side.
+    for id in &ids {
+        let t = ds.get_trial(&client.study_name, *id).unwrap();
+        if id % 2 == 1 {
+            assert_eq!(t.state, TrialState::Stopping);
+        } else {
+            assert_eq!(t.state, TrialState::Active);
+        }
+    }
+
+    // Empty list = every trial still ACTIVE (the two even ones).
+    let all = client.check_early_stopping(&[]).unwrap();
+    let mut judged: Vec<u64> = all.iter().map(|d| d.trial_id).collect();
+    judged.sort_unstable();
+    let mut active: Vec<u64> = ids.iter().copied().filter(|id| id % 2 == 0).collect();
+    active.sort_unstable();
+    assert_eq!(judged, active);
+
+    // The single-trial convenience still works on top of the batch API.
+    assert!(!client.should_trial_stop(active[0]).unwrap());
+    server.shutdown();
+}
+
+#[test]
+fn builtin_stopping_rule_judges_batches() {
+    // Median rule through the batched surface (no custom policy): bad
+    // curve stops, good curve continues, decided in ONE operation.
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let service = build_service(Arc::clone(&ds), |_| {}, 2);
+    let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut config = test_config(Algorithm::RandomSearch);
+    config.metrics[0] = MetricInformation::maximize("acc");
+    config.stopping = StoppingConfig {
+        kind: StoppingKind::Median,
+        min_trials: 3,
+        confidence: 1.0,
+    };
+    let transport = Box::new(TcpTransport::connect(&addr).unwrap());
+    let mut client =
+        VizierClient::load_or_create_study(transport, "es-median", &config, "w").unwrap();
+
+    for _ in 0..4 {
+        let t = &client.get_suggestions(1).unwrap()[0];
+        for step in 1..=10 {
+            client
+                .add_measurement(
+                    t.id,
+                    &Measurement::new(step).with_metric("acc", 0.8 * (step as f64 / 10.0)),
+                )
+                .unwrap();
+        }
+        client.complete_trial(t.id, None).unwrap();
+    }
+    let bad = client.get_suggestions(1).unwrap()[0].id;
+    let good = client.get_suggestions(1).unwrap()[0].id;
+    for step in 1..=5 {
+        client
+            .add_measurement(bad, &Measurement::new(step).with_metric("acc", 0.01))
+            .unwrap();
+        client
+            .add_measurement(good, &Measurement::new(step).with_metric("acc", 0.9))
+            .unwrap();
+    }
+    let decisions = client.check_early_stopping(&[bad, good]).unwrap();
+    assert_eq!(decisions.len(), 2);
+    let verdict = |id: u64| decisions.iter().find(|d| d.trial_id == id).unwrap();
+    assert!(verdict(bad).should_stop, "bad trial must stop");
+    assert!(!verdict(good).should_stop, "good trial must continue");
+    assert!(verdict(bad).reason.contains("median"), "{}", verdict(bad).reason);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Paginated study listing through the service (satellite).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn service_list_studies_paginates() {
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let service = build_service(Arc::clone(&ds), |_| {}, 1);
+    let config = test_config(Algorithm::RandomSearch);
+    for i in 0..23 {
+        ds.create_study(StudyProto {
+            display_name: format!("pg{i}"),
+            spec: converters::study_config_to_proto(&config),
+            ..Default::default()
+        })
+        .unwrap();
+    }
+
+    // Legacy shape: no page_size -> everything, no token.
+    let all = service.list_studies(ListStudiesRequest::default()).unwrap();
+    assert_eq!(all.studies.len(), 23);
+    assert!(all.next_page_token.is_empty());
+
+    // Paginated walk covers every study exactly once.
+    let mut seen = Vec::new();
+    let mut token = String::new();
+    loop {
+        let resp = service
+            .list_studies(ListStudiesRequest {
+                page_size: 5,
+                page_token: token.clone(),
+            })
+            .unwrap();
+        assert!(resp.studies.len() <= 5);
+        seen.extend(resp.studies.iter().map(|s| s.name.clone()));
+        if resp.next_page_token.is_empty() {
+            break;
+        }
+        token = resp.next_page_token;
+    }
+    seen.sort();
+    let mut want: Vec<String> = all.studies.iter().map(|s| s.name.clone()).collect();
+    want.sort();
+    assert_eq!(seen, want);
+
+    // Malformed tokens map to InvalidArgument at the API layer.
+    assert!(service
+        .list_studies(ListStudiesRequest {
+            page_size: 5,
+            page_token: "not-a-token".into(),
+        })
+        .is_err());
+    service.shutdown();
+}
