@@ -1,0 +1,234 @@
+//! C-FRONTEND: front-end concurrency model — the bounded worker pool
+//! (event loop over `poll(2)` + N workers) vs the legacy
+//! thread-per-connection baseline, under the canonical Vizier fleet
+//! shape: 1000+ mostly-idle worker connections with a small hot subset
+//! actually suggesting/completing trials.
+//!
+//! Structural assertions (always enforced): the pool serves the whole
+//! fleet with at most `workers + 2` service threads (the baseline needs
+//! one thread per connection), the `active_connections` gauge tracks the
+//! fleet, and shutdown leaves zero front-end threads in both modes (the
+//! baseline historically leaked its `vizier-conn` threads).
+//!
+//! Timing assertions (lax-gated, enforced in the nightly soak job): hot
+//! subset throughput under the pool must not lose to the baseline.
+//!
+//! `OSSVIZIER_SOAK=1` scales the fleet and request counts up.
+//! Results land in `BENCH_FRONTEND.json` at the repo root.
+
+use ossvizier::client::{TcpTransport, VizierClient};
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
+use ossvizier::service::{in_memory_service, ServerOptions, VizierServer};
+use ossvizier::testing::procfs::{soft_fd_limit, threads_with_prefix};
+use ossvizier::util::benchkit::{check, check_strict, finish, note, section};
+use ossvizier::util::time::Stopwatch;
+use ossvizier::wire::framing::{read_response, write_request, Method};
+use ossvizier::wire::messages::{EmptyResponse, ScaleType};
+use std::io::BufReader;
+use std::net::TcpStream;
+
+const WORKERS: usize = 8;
+const PING_THREADS: usize = 4;
+const HOT_DRIVERS: usize = 8;
+
+fn soak() -> bool {
+    std::env::var_os("OSSVIZIER_SOAK").is_some()
+}
+
+/// Size the idle fleet to the soft fd limit so the bench never hits
+/// EMFILE. Worst case is legacy mode, where one connection costs four
+/// fds in this single-process bench: the client socket, the accepted
+/// socket, the shutdown-registry `try_clone`, and the `serve_connection`
+/// reader clone.
+fn max_idle_connections(target: usize) -> usize {
+    const FDS_PER_CONN: u64 = 4;
+    let Some(soft) = soft_fd_limit() else { return target };
+    let budget = (soft.saturating_sub(256) / FDS_PER_CONN) as usize;
+    if budget < target {
+        note(&format!("fd soft limit {soft}: clamping idle fleet {target} -> {budget}"));
+        return budget;
+    }
+    target
+}
+
+fn config(name: &str) -> StudyConfig {
+    let mut c = StudyConfig::new(name);
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = Algorithm::RandomSearch;
+    c.seed = 7;
+    c
+}
+
+fn ping(stream: &mut TcpStream) {
+    write_request(stream, Method::Ping, &EmptyResponse::default()).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let _: EmptyResponse = read_response(&mut r).unwrap();
+}
+
+struct ModeResult {
+    label: &'static str,
+    service_threads: Option<usize>,
+    ping_rps: f64,
+    workload_rps: f64,
+    leftover_threads: Option<usize>,
+    gauge_ok: bool,
+}
+
+fn run_mode(
+    legacy: bool,
+    idle: usize,
+    ping_reqs: usize,
+    rounds: usize,
+) -> ModeResult {
+    let label = if legacy { "legacy thread-per-connection" } else { "worker pool" };
+    let prefix = if legacy { "vizier-conn" } else { "vizier-fe" };
+    let service = in_memory_service(16);
+    let server = VizierServer::start_with(
+        service,
+        "127.0.0.1:0",
+        ServerOptions { workers: WORKERS, legacy_threads: legacy, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // The idle fleet: connect, prove liveness with one ping, then sit.
+    let mut fleet = Vec::with_capacity(idle);
+    for _ in 0..idle {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        ping(&mut s);
+        fleet.push(s);
+    }
+    let service_threads = threads_with_prefix(prefix);
+    let gauge = server.frontend_metrics().active_connections();
+    let gauge_ok = gauge == idle as u64;
+    note(&format!(
+        "{label}: {idle} idle connections -> {} front-end threads, gauge {}",
+        service_threads.map_or("?".into(), |n| n.to_string()),
+        gauge
+    ));
+
+    // Hot subset A: raw ping round-trips (pure front-end overhead).
+    let sw = Stopwatch::start();
+    let handles: Vec<_> = (0..PING_THREADS)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                for _ in 0..ping_reqs {
+                    ping(&mut s);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let ping_rps = (PING_THREADS * ping_reqs) as f64 / sw.elapsed().as_secs_f64();
+
+    // Hot subset B: the real workload — suggest + complete cycles, one
+    // study per driver.
+    let sw = Stopwatch::start();
+    let handles: Vec<_> = (0..HOT_DRIVERS)
+        .map(|d| {
+            let addr = addr.clone();
+            let study = format!("fe-{}-{d}", if legacy { "legacy" } else { "pool" });
+            std::thread::spawn(move || {
+                let mut client = VizierClient::load_or_create_study(
+                    Box::new(TcpTransport::connect(&addr).unwrap()),
+                    &study,
+                    &config(&study),
+                    "hot",
+                )
+                .unwrap();
+                for i in 0..rounds {
+                    let t = client.get_suggestions(1).unwrap().remove(0);
+                    client
+                        .complete_trial(
+                            t.id,
+                            Some(&Measurement::new(1).with_metric("score", i as f64)),
+                        )
+                        .unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let workload_rps = (HOT_DRIVERS * rounds) as f64 / sw.elapsed().as_secs_f64();
+
+    drop(fleet);
+    server.shutdown();
+    let leftover_threads = threads_with_prefix(prefix);
+
+    ModeResult { label, service_threads, ping_rps, workload_rps, leftover_threads, gauge_ok }
+}
+
+fn main() {
+    let idle = max_idle_connections(if soak() { 2500 } else { 1000 });
+    let ping_reqs = if soak() { 10_000 } else { 2_000 };
+    let rounds = if soak() { 40 } else { 12 };
+
+    section(&format!(
+        "C-FRONTEND: {idle} idle connections + hot subset \
+         ({PING_THREADS} pingers x {ping_reqs}, {HOT_DRIVERS} drivers x {rounds} trials), \
+         pool workers = {WORKERS}"
+    ));
+
+    let pool = run_mode(false, idle, ping_reqs, rounds);
+    let legacy = run_mode(true, idle, ping_reqs, rounds);
+
+    for r in [&pool, &legacy] {
+        note(&format!(
+            "{:<30} ping {:>9.0} req/s   suggest+complete {:>7.1} trials/s",
+            r.label, r.ping_rps, r.workload_rps
+        ));
+    }
+
+    // Structural verdicts — enforced regardless of OSSVIZIER_BENCH_LAX.
+    match (pool.service_threads, legacy.service_threads) {
+        (Some(pool_threads), Some(legacy_threads)) => {
+            check_strict(
+                "pool-thread-budget",
+                pool_threads <= WORKERS + 2,
+                &format!(
+                    "{idle} connections on {pool_threads} threads (budget {}; \
+                     legacy model used {legacy_threads})",
+                    WORKERS + 2
+                ),
+            );
+            check_strict(
+                "pool-shutdown-no-leak",
+                pool.leftover_threads == Some(0),
+                &format!("{:?} vizier-fe threads after shutdown", pool.leftover_threads),
+            );
+            check_strict(
+                "legacy-shutdown-no-leak",
+                legacy.leftover_threads == Some(0),
+                &format!("{:?} vizier-conn threads after shutdown", legacy.leftover_threads),
+            );
+        }
+        _ => note("no /proc thread names on this platform: skipping thread-budget verdicts"),
+    }
+    check_strict(
+        "active-connections-gauge",
+        pool.gauge_ok && legacy.gauge_ok,
+        &format!("gauge == fleet size (pool {}, legacy {})", pool.gauge_ok, legacy.gauge_ok),
+    );
+
+    // Timing verdict — lax-gated on PR runners, enforced in the soak
+    // job. 0.85x is the repo-standard ~15% runner-noise slack (the same
+    // slack bench_datastore applies to its "must not lose" comparisons).
+    check(
+        "hot-throughput-vs-legacy",
+        pool.workload_rps >= legacy.workload_rps * 0.85,
+        &format!(
+            "pool {:.1} trials/s vs legacy {:.1} trials/s \
+             (>= baseline within the standard 15% noise slack)",
+            pool.workload_rps, legacy.workload_rps
+        ),
+    );
+
+    finish("FRONTEND");
+}

@@ -7,7 +7,7 @@
 
 use ossvizier::policies::gp_bandit::{GpBackend, RustGpBackend, CANDIDATES};
 use ossvizier::runtime::{ArtifactRegistry, GpArtifactBackend};
-use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::util::benchkit::{bench, finish, note, section};
 use ossvizier::util::rng::Pcg32;
 
 fn problem(rng: &mut Pcg32, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
@@ -45,4 +45,5 @@ fn main() {
         note("padding note: n rounds up to the next variant, so pjrt rows");
         note("amortize across the padded shape (e.g. n=120 runs the n=128 artifact)");
     }
+    finish("GP_ARTIFACT");
 }

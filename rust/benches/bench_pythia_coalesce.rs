@@ -20,7 +20,7 @@ use ossvizier::pyvizier::{
     converters, Algorithm, Measurement, MetricInformation, StudyConfig, Trial, TrialSuggestion,
 };
 use ossvizier::service::build_service;
-use ossvizier::util::benchkit::section;
+use ossvizier::util::benchkit::{check, finish, section};
 use ossvizier::util::rng::Pcg32;
 use ossvizier::util::time::Stopwatch;
 use ossvizier::wire::messages::{ScaleType, StudyProto, TrialState};
@@ -152,38 +152,42 @@ fn report(label: &str, on: &CaseResult, off: &CaseResult) {
 }
 
 fn main() {
-    let lax = std::env::var("OSSVIZIER_BENCH_LAX").is_ok();
     section("C-PYTHIA-COAL: coalesced vs per-op policy invocations, K=8 clients, one study");
 
     // Random (wrapped with a 2ms fit cost stand-in).
     let on = run_case(Algorithm::Custom("SLOW_RANDOM".into()), 0, true);
     let off = run_case(Algorithm::Custom("SLOW_RANDOM".into()), 0, false);
     report("random", &on, &off);
-    if !lax {
-        assert_eq!(off.policy_runs, off.ops, "per-op baseline: one run per op");
-        assert!(
-            on.policy_runs < on.ops,
-            "coalescing must serve {} ops with fewer than {} policy runs (got {})",
-            on.ops,
-            on.ops,
-            on.policy_runs
-        );
-        assert!(on.policy_runs < off.policy_runs, "coalesced must do fewer runs");
-    }
+    check(
+        "random-per-op-baseline",
+        off.policy_runs == off.ops,
+        &format!("per-op baseline: one run per op ({} runs / {} ops)", off.policy_runs, off.ops),
+    );
+    check(
+        "random-coalesces",
+        on.policy_runs < on.ops && on.policy_runs < off.policy_runs,
+        &format!(
+            "coalescing must serve {} ops with fewer runs than per-op (got {} vs {})",
+            on.ops, on.policy_runs, off.policy_runs
+        ),
+    );
 
     // GP bandit (pure-Rust backend): each policy run is a real GP fit.
     let on = run_case(Algorithm::Custom("GP_BANDIT_RUST".into()), 30, true);
     let off = run_case(Algorithm::Custom("GP_BANDIT_RUST".into()), 30, false);
     report("gp_bandit", &on, &off);
-    if !lax {
-        assert_eq!(off.policy_runs, off.ops, "per-op baseline: one run per op");
-        assert!(
-            on.policy_runs < on.ops,
-            "coalescing must serve {} ops with fewer than {} GP fits (got {})",
-            on.ops,
-            on.ops,
-            on.policy_runs
-        );
-        assert!(on.policy_runs <= off.policy_runs, "coalesced must not do more fits");
-    }
+    check(
+        "gp-per-op-baseline",
+        off.policy_runs == off.ops,
+        &format!("per-op baseline: one run per op ({} runs / {} ops)", off.policy_runs, off.ops),
+    );
+    check(
+        "gp-coalesces",
+        on.policy_runs < on.ops && on.policy_runs <= off.policy_runs,
+        &format!(
+            "coalescing must serve {} ops with fewer GP fits (got {} vs per-op {})",
+            on.ops, on.policy_runs, off.policy_runs
+        ),
+    );
+    finish("PYTHIA_COALESCE");
 }

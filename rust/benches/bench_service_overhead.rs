@@ -7,7 +7,7 @@
 use ossvizier::client::{LocalTransport, TcpTransport, VizierClient};
 use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
 use ossvizier::service::{in_memory_service, VizierServer};
-use ossvizier::util::benchkit::{note, section};
+use ossvizier::util::benchkit::{finish, note, section};
 use ossvizier::util::time::Stopwatch;
 use ossvizier::wire::messages::ScaleType;
 use std::time::Duration;
@@ -92,4 +92,5 @@ fn main() {
         "crossover: service stops dominating once f(x) >~ {:.1} ms (tcp) / {:.1} ms (local)",
         tcp, local
     ));
+    finish("SERVICE_OVERHEAD");
 }

@@ -5,7 +5,7 @@
 use ossvizier::client::{TcpTransport, VizierClient};
 use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
 use ossvizier::service::{in_memory_service, VizierServer};
-use ossvizier::util::benchkit::{note, section};
+use ossvizier::util::benchkit::{finish, note, section};
 use ossvizier::util::time::Stopwatch;
 use ossvizier::wire::messages::ScaleType;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -87,4 +87,5 @@ fn main() {
         secs * 1e6 / n as f64
     ));
     server.shutdown();
+    finish("SERVICE_THROUGHPUT");
 }

@@ -15,7 +15,7 @@ use ossvizier::pythia::designer::{DesignerPolicy, StatelessDesignerPolicy};
 use ossvizier::pythia::policy::{Policy, SuggestRequest};
 use ossvizier::pythia::supporter::{DatastoreSupporter, PolicySupporter};
 use ossvizier::pyvizier::{converters, Algorithm, Measurement, MetricInformation, StudyConfig, Trial, TrialState};
-use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::util::benchkit::{bench, finish, note, section};
 use ossvizier::util::rng::Pcg32;
 use ossvizier::wire::messages::{ScaleType, StudyProto};
 use std::sync::Arc;
@@ -174,4 +174,5 @@ fn main() {
     note(&format!(
         "replay: {total} trials across {THREADS} studies ({size_mb:.2} MB log) in {ms:.2} ms"
     ));
+    finish("STATE_RECOVERY");
 }

@@ -7,7 +7,7 @@ use ossvizier::pyvizier::{
     Measurement, MetricInformation, ParameterDict, StudyConfig, Trial, TrialState,
 };
 use ossvizier::stopping;
-use ossvizier::util::benchkit::{bench, section};
+use ossvizier::util::benchkit::{bench, finish, section};
 use ossvizier::util::rng::Pcg32;
 use ossvizier::wire::messages::{MetricGoal, StoppingConfig, StoppingKind};
 
@@ -81,4 +81,5 @@ fn main() {
     bench("optimal_trials over 2000 completed", || {
         std::hint::black_box(optimal_trials(&trials, &metrics));
     });
+    finish("STOPPING_PARETO");
 }

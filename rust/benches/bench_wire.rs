@@ -3,7 +3,7 @@
 //! operations). The protobuf-equivalent layer must never be the service
 //! bottleneck.
 
-use ossvizier::util::benchkit::{bench, note, section};
+use ossvizier::util::benchkit::{bench, finish, note, section};
 use ossvizier::wire::codec::{decode, encode};
 use ossvizier::wire::messages::*;
 
@@ -109,4 +109,5 @@ fn main() {
         let s: StudySpecProto = decode(&spec_bytes).unwrap();
         std::hint::black_box(s);
     });
+    finish("WIRE");
 }

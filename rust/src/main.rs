@@ -3,21 +3,26 @@
 //!
 //! ```text
 //! vizier-server serve  --host 127.0.0.1 --port 6006 --datastore wal \
-//!                      --wal-path ./vizier.wal --workers 100
+//!                      --wal-path ./vizier.wal --workers 8 --policy-workers 100
 //! vizier-server pythia --port 6007 --api-addr 127.0.0.1:6006
 //! vizier-server serve  --port 6006 --pythia-addr 127.0.0.1:6007
+//! vizier-server serve  --port 6006 --legacy-threads   # thread/conn baseline
 //! ```
 //!
 //! `serve` runs the API service (in-process Pythia by default, or remote
 //! via `--pythia-addr`); `pythia` runs the standalone Pythia policy
-//! service of Figure 2.
+//! service of Figure 2. `--workers` sizes the front-end worker pool (the
+//! event-loop + bounded-pool model of `service::frontend`; default = CPU
+//! count), `--legacy-threads` restores the thread-per-connection model
+//! as a comparison baseline, and `--policy-workers` sizes the policy
+//! computation pool (the paper's `max_workers=100`).
 
 use ossvizier::datastore::memory::InMemoryDatastore;
 use ossvizier::datastore::wal::WalDatastore;
 use ossvizier::datastore::Datastore;
 use ossvizier::pythia::runner::default_registry;
 use ossvizier::service::remote_pythia::{PythiaServer, RemotePythia};
-use ossvizier::service::{build_service, VizierServer, VizierService};
+use ossvizier::service::{build_service, ServerOptions, VizierServer, VizierService};
 use ossvizier::util::cli::{usage, Args, OptSpec};
 use std::sync::Arc;
 
@@ -30,7 +35,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "wal-path", takes_value: true, help: "WAL file path (default ./vizier.wal)" },
         OptSpec { name: "wal-sync", takes_value: false, help: "fsync each WAL commit batch (machine-crash durability)" },
         OptSpec { name: "wal-serial", takes_value: false, help: "disable WAL group commit (serial appends; baseline)" },
-        OptSpec { name: "workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
+        OptSpec { name: "workers", takes_value: true, help: "front-end worker-pool threads (default: CPU count)" },
+        OptSpec { name: "legacy-threads", takes_value: false, help: "thread-per-connection front-end (benchmark baseline)" },
+        OptSpec { name: "policy-workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
         OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
         OptSpec { name: "api-addr", takes_value: true, help: "pythia mode: the API server for datastore reads" },
         OptSpec { name: "metrics-secs", takes_value: true, help: "print service metrics every N seconds (0 = off)" },
@@ -63,7 +70,8 @@ fn main() {
     match mode {
         "pythia" => {
             let api_addr = args.get_or("api-addr", "127.0.0.1:6006").to_string();
-            let server = PythiaServer::start(default_registry(), &api_addr, &addr)
+            let workers = args.get_u64("workers", 0).unwrap_or(0) as usize;
+            let server = PythiaServer::start_with(default_registry(), &api_addr, &addr, workers)
                 .unwrap_or_else(|e| fatal(&format!("bind {addr}: {e}")));
             println!("pythia service listening on {} (api server: {api_addr})", server.local_addr());
             park();
@@ -92,13 +100,13 @@ fn main() {
                 }
                 other => fatal(&format!("unknown datastore {other:?} (memory|wal)")),
             };
-            let workers = args.get_u64("workers", 100).unwrap_or(100) as usize;
+            let policy_workers = args.get_u64("policy-workers", 100).unwrap_or(100) as usize;
             let service: Arc<VizierService> = match args.get("pythia-addr") {
                 Some(pythia_addr) => {
                     println!("policies run on remote pythia at {pythia_addr}");
-                    VizierService::new(ds, Arc::new(RemotePythia::new(pythia_addr)), workers)
+                    VizierService::new(ds, Arc::new(RemotePythia::new(pythia_addr)), policy_workers)
                 }
-                None => build_service(ds, |_| {}, workers),
+                None => build_service(ds, |_| {}, policy_workers),
             };
             // Server-side fault tolerance: resume interrupted operations.
             match service.resume_pending_operations() {
@@ -107,9 +115,29 @@ fn main() {
                 Err(e) => eprintln!("warning: could not resume operations: {e}"),
             }
             let metrics = Arc::clone(&service.metrics);
-            let server = VizierServer::start(service, &addr)
+            let fe_workers = args.get_u64("workers", 0).unwrap_or(0) as usize;
+            let legacy = args.has_flag("legacy-threads");
+            let opts = ServerOptions { workers: fe_workers, legacy_threads: legacy, ..Default::default() };
+            let server = VizierServer::start_with(service, &addr, opts)
                 .unwrap_or_else(|e| fatal(&format!("bind {addr}: {e}")));
-            println!("vizier service listening on {} ({workers} workers)", server.local_addr());
+            if legacy {
+                println!(
+                    "vizier service listening on {} (legacy thread-per-connection front-end, \
+                     {policy_workers} policy workers)",
+                    server.local_addr()
+                );
+            } else {
+                let shown = if fe_workers == 0 {
+                    ossvizier::service::frontend::default_workers()
+                } else {
+                    fe_workers
+                };
+                println!(
+                    "vizier service listening on {} ({shown} front-end workers, \
+                     {policy_workers} policy workers)",
+                    server.local_addr()
+                );
+            }
 
             let metrics_secs = args.get_u64("metrics-secs", 0).unwrap_or(0);
             if metrics_secs > 0 {

@@ -54,6 +54,69 @@ impl Histogram {
     }
 }
 
+/// Front-end (TCP event loop + worker pool) instrumentation, shared
+/// between [`crate::service::frontend::FrontendServer`] and the legacy
+/// thread-per-connection path so benchmarks can compare like for like.
+#[derive(Debug, Default)]
+pub struct FrontendMetrics {
+    /// Connections accepted over the server's lifetime (monotonic; the
+    /// pre-pool server only had this counter).
+    pub connections_total: AtomicU64,
+    /// Connections currently open — a gauge: incremented on accept,
+    /// decremented when the connection is dropped (client disconnect,
+    /// protocol error, or shutdown drain).
+    pub active_connections: AtomicU64,
+    /// Ready requests waiting in the worker-pool queue right now (gauge;
+    /// always 0 in legacy mode, which has no queue).
+    pub queue_depth: AtomicU64,
+    /// Requests served (monotonic; both modes).
+    pub requests: AtomicU64,
+    /// Time a ready request waited in the queue before a worker picked it
+    /// up (enqueue -> dequeue), in microseconds. Pool mode only.
+    pub queue_wait: Histogram,
+}
+
+impl FrontendMetrics {
+    pub fn conn_opened(&self) {
+        self.connections_total.fetch_add(1, Ordering::Relaxed);
+        self.active_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.active_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn active_connections(&self) -> u64 {
+        self.active_connections.load(Ordering::Relaxed)
+    }
+
+    pub fn connections_total(&self) -> u64 {
+        self.connections_total.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Render a plain-text report fragment.
+    pub fn report(&self) -> String {
+        format!(
+            "frontend: {} active / {} total connections, queue depth {}, \
+             {} requests (queue wait mean {:.1} us, p99 {} us)\n",
+            self.active_connections(),
+            self.connections_total(),
+            self.queue_depth(),
+            self.requests(),
+            self.queue_wait.mean_micros(),
+            self.queue_wait.quantile_micros(0.99),
+        )
+    }
+}
+
 /// Registry of per-method metrics.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -64,6 +127,9 @@ pub struct ServiceMetrics {
     /// Suggest operations served by those invocations. With per-study
     /// coalescing under load, `policy_runs < suggest_ops_served`.
     pub suggest_ops_served: AtomicU64,
+    /// Front-end metrics, linked by the TCP server at start so
+    /// [`ServiceMetrics::report`] covers the whole stack.
+    frontend: Mutex<Option<std::sync::Arc<FrontendMetrics>>>,
 }
 
 impl ServiceMetrics {
@@ -100,6 +166,15 @@ impl ServiceMetrics {
         self.suggest_ops_served.load(Ordering::Relaxed)
     }
 
+    /// Attach the front-end's metrics (called by the TCP server).
+    pub fn set_frontend(&self, fe: std::sync::Arc<FrontendMetrics>) {
+        *self.frontend.lock().unwrap() = Some(fe);
+    }
+
+    pub fn frontend(&self) -> Option<std::sync::Arc<FrontendMetrics>> {
+        self.frontend.lock().unwrap().clone()
+    }
+
     /// Render a plain-text report (one line per method).
     pub fn report(&self) -> String {
         let m = self.methods.lock().unwrap();
@@ -119,6 +194,9 @@ impl ServiceMetrics {
             self.policy_runs(),
             self.suggest_ops_served()
         ));
+        if let Some(fe) = self.frontend() {
+            out.push_str(&fe.report());
+        }
         out
     }
 }
@@ -154,6 +232,23 @@ mod tests {
         assert!(r.contains("SuggestTrials"));
         assert!(r.contains("CompleteTrial"));
         assert!(r.contains("errors: 1"));
+    }
+
+    #[test]
+    fn frontend_gauge_tracks_open_connections() {
+        let fe = FrontendMetrics::default();
+        fe.conn_opened();
+        fe.conn_opened();
+        fe.conn_opened();
+        fe.conn_closed();
+        assert_eq!(fe.active_connections(), 2);
+        assert_eq!(fe.connections_total(), 3);
+        fe.queue_wait.record(120);
+        let m = ServiceMetrics::new();
+        assert!(m.frontend().is_none());
+        m.set_frontend(std::sync::Arc::new(fe));
+        let r = m.report();
+        assert!(r.contains("2 active / 3 total"), "{r}");
     }
 
     #[test]

@@ -1,14 +1,47 @@
 //! The distributed OSS Vizier service (paper §3): API server, durable
 //! long-running operations, TCP front-end, remote Pythia deployment, and
 //! service metrics.
+//!
+//! # Front-end architecture: event loop + bounded worker pool
+//!
+//! The paper's reference server multiplexes thousands of tuning workers
+//! behind `grpc.server(ThreadPoolExecutor(max_workers=100))` (Code Block
+//! 4). Both TCP front-ends here — [`VizierServer`] (API service) and
+//! [`remote_pythia::PythiaServer`] (standalone policy service) — share
+//! that shape via [`frontend::FrontendServer`]:
+//!
+//! * A single **event-loop thread** (`vizier-fe-io` / `pythia-fe-io`)
+//!   blocks in POSIX `poll(2)` ([`crate::util::netpoll`], no crate
+//!   dependencies) over the listener, a wake pipe, and every idle
+//!   connection. Idle clients — the dominant state of a Vizier worker
+//!   fleet, which spends its time evaluating trials, not talking — cost
+//!   zero threads. Partial frames accumulate per connection in a
+//!   resumable [`crate::wire::framing::FrameReader`], so slow or
+//!   malicious clients park in the loop instead of pinning a worker.
+//! * **N worker threads** (`vizier-fe-w<i>`, `--workers`, default = CPU
+//!   count) execute complete framed requests from a bounded queue and
+//!   write the response. One frame = one job; a connection is owned by
+//!   one thread at a time, keeping per-connection requests sequential.
+//! * **Graceful shutdown** closes idle connections, drains queued and
+//!   in-flight requests up to a deadline, and joins every front-end
+//!   thread — the pre-pool server leaked its per-connection threads.
+//!
+//! The legacy thread-per-connection model survives behind
+//! `--legacy-threads` ([`server::ServerOptions`]) as the benchmark
+//! baseline; `benches/bench_frontend.rs` (C-FRONTEND) drives 1000+
+//! mostly-idle connections against both and asserts the pool holds its
+//! `workers + 2` thread budget at no loss of hot-path throughput.
+//! [`metrics::FrontendMetrics`] exposes the `active_connections` gauge,
+//! queue depth, and queue-wait histogram for either mode.
 
 pub mod api;
+pub mod frontend;
 pub mod metrics;
 pub mod remote_pythia;
 pub mod server;
 
 pub use api::{ApiError, VizierService};
-pub use server::VizierServer;
+pub use server::{ServerOptions, VizierServer};
 
 use crate::datastore::Datastore;
 use crate::pythia::runner::{default_registry, LocalPythia, PolicyRegistry};

@@ -21,14 +21,15 @@ use crate::pythia::policy::{
 use crate::pythia::runner::{PolicyRegistry, PythiaEndpoint};
 use crate::pythia::supporter::PolicySupporter;
 use crate::pyvizier::{converters, Metadata, StudyConfig, Trial, TrialSuggestion};
+use crate::service::frontend::{ConnectionHandler, FrontendOptions, FrontendServer};
+use crate::service::metrics::FrontendMetrics;
 use crate::wire::codec::{Reader, WireError, WireMessage, Writer};
 use crate::wire::framing::{write_err, write_ok, FrameError, Method, Status};
 use crate::wire::messages::*;
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::time::Duration;
 
 // ---------------------------------------------------------------------------
 // Pythia wire protocol (rides on the same framing; distinct method ids)
@@ -327,151 +328,187 @@ impl PolicySupporter for RemoteSupporter {
 // PythiaServer: hosts policies in its own process
 // ---------------------------------------------------------------------------
 
-/// The standalone Pythia service.
+/// The standalone Pythia service, served by the same event-loop +
+/// bounded worker-pool front-end as the API server
+/// ([`crate::service::frontend`]): a fleet of API servers (or one API
+/// server with many in-flight studies) holding idle Pythia connections
+/// costs no threads here; policy computations occupy the `pythia-fe-w*`
+/// pool only while they run.
 pub struct PythiaServer {
     addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    frontend: FrontendServer,
 }
 
 impl PythiaServer {
-    /// Start serving policy work on `addr`; datastore reads go to
-    /// `api_addr` (the API server).
+    /// Start serving policy work on `addr` with a default-sized worker
+    /// pool; datastore reads go to `api_addr` (the API server).
     pub fn start(registry: PolicyRegistry, api_addr: &str, addr: &str) -> std::io::Result<Self> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let api_addr = api_addr.to_string();
-        let accept_thread = std::thread::Builder::new()
-            .name("pythia-accept".into())
-            .spawn(move || {
-                for stream in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = stream else { continue };
-                    let registry = registry.clone();
-                    let api_addr = api_addr.clone();
-                    let _ = std::thread::Builder::new().name("pythia-conn".into()).spawn(
-                        move || {
-                            let _ = serve_pythia_connection(registry, &api_addr, stream);
-                        },
-                    );
-                }
-            })?;
-        Ok(Self {
-            addr: local,
-            stop,
-            accept_thread: Some(accept_thread),
-        })
+        Self::start_with(registry, api_addr, addr, 0)
+    }
+
+    /// Start with an explicit worker-pool size (0 = CPU count).
+    pub fn start_with(
+        registry: PolicyRegistry,
+        api_addr: &str,
+        addr: &str,
+        workers: usize,
+    ) -> std::io::Result<Self> {
+        let frontend = FrontendServer::start(
+            PythiaHandler { registry, api_addr: api_addr.to_string() },
+            addr,
+            FrontendOptions {
+                name: "pythia-fe",
+                workers,
+                // Policy runs (GP fits) are slow; give in-flight work a
+                // generous drain window on shutdown.
+                drain: Duration::from_secs(10),
+                ..Default::default()
+            },
+        )?;
+        Ok(Self { addr: frontend.local_addr(), frontend })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+    /// Front-end metrics (`active_connections` gauge, queue depth/wait).
+    pub fn frontend_metrics(&self) -> &Arc<FrontendMetrics> {
+        self.frontend.metrics()
+    }
+
+    /// Graceful shutdown: close idle connections, drain in-flight policy
+    /// work (bounded), join the pool. No `pythia-fe-*` threads survive.
+    pub fn shutdown(self) {
+        self.frontend.shutdown();
     }
 }
 
-fn serve_pythia_connection(
+/// Pool-mode protocol logic for the Pythia wire protocol. Each
+/// connection lazily opens its own [`RemoteSupporter`] (= its own API
+/// connection) on first use, from a worker thread — never on the event
+/// loop, which must not block.
+struct PythiaHandler {
     registry: PolicyRegistry,
-    api_addr: &str,
-    stream: TcpStream,
-) -> Result<(), FrameError> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    // One supporter (and API connection) per Pythia connection.
-    let supporter = RemoteSupporter::connect(api_addr)
-        .map_err(|e| FrameError::Io(std::io::Error::other(e.to_string())))?;
-    loop {
-        // Read raw frames so we can use our private method ids.
-        let (head, payload) = match crate::wire::framing::read_frame(&mut reader) {
-            Ok(x) => x,
-            Err(FrameError::Io(_)) => return Ok(()),
-            Err(e) => return Err(e),
+    api_addr: String,
+}
+
+impl ConnectionHandler for PythiaHandler {
+    type Conn = Option<RemoteSupporter>;
+
+    fn on_connect(&self) -> Self::Conn {
+        None
+    }
+
+    fn handle(
+        &self,
+        supporter: &mut Option<RemoteSupporter>,
+        head: u8,
+        payload: &[u8],
+        out: &mut Vec<u8>,
+    ) -> bool {
+        let result = match head {
+            M_SUGGEST | M_EARLY_STOP => {
+                if supporter.is_none() {
+                    match RemoteSupporter::connect(&self.api_addr) {
+                        Ok(s) => *supporter = Some(s),
+                        Err(e) => {
+                            let _ = write_err(
+                                out,
+                                Status::Internal,
+                                &format!("api server connect: {e}"),
+                            );
+                            return false;
+                        }
+                    }
+                }
+                let sup = supporter.as_ref().expect("supporter just installed");
+                if head == M_SUGGEST {
+                    handle_suggest(&self.registry, sup, payload, out)
+                } else {
+                    handle_early_stop(&self.registry, sup, payload, out)
+                }
+            }
+            other => write_err(out, Status::Unimplemented, &format!("method {other}")),
         };
-        match head {
-            M_SUGGEST => {
-                let result: Result<PythiaSuggestResponse, String> = (|| {
-                    let req: PythiaSuggestRequest =
-                        crate::wire::codec::decode(&payload).map_err(|e| e.to_string())?;
-                    let config =
-                        converters::study_config_from_proto(&req.display_name, &req.spec);
-                    let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
-                    let decision = policy
-                        .suggest(
-                            &SuggestRequest {
-                                study_name: req.study_name,
-                                study_config: config,
-                                wants: req
-                                    .wants
-                                    .into_iter()
-                                    .map(|w| SuggestWant {
-                                        client_id: w.client_id,
-                                        count: w.count as usize,
-                                    })
-                                    .collect(),
-                            },
-                            &supporter,
-                        )
-                        .map_err(|e| e.to_string())?;
-                    Ok(PythiaSuggestResponse {
-                        groups: decision
-                            .groups
-                            .iter()
-                            .map(|g| SuggestionGroupProto {
-                                client_id: g.client_id.clone(),
-                                suggestions: g
-                                    .suggestions
-                                    .iter()
-                                    .map(suggestion_to_proto)
-                                    .collect(),
-                            })
-                            .collect(),
-                        metadata_delta: decision.metadata_delta.to_updates(),
-                    })
-                })();
-                match result {
-                    Ok(resp) => write_ok(&mut writer, &resp)?,
-                    Err(e) => write_err(&mut writer, Status::Internal, &e)?,
-                }
-            }
-            M_EARLY_STOP => {
-                let result: Result<PythiaEarlyStopResponse, String> = (|| {
-                    let req: PythiaEarlyStopRequest =
-                        crate::wire::codec::decode(&payload).map_err(|e| e.to_string())?;
-                    let config =
-                        converters::study_config_from_proto(&req.display_name, &req.spec);
-                    let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
-                    let decisions = policy
-                        .early_stop(
-                            &EarlyStopRequest {
-                                study_name: req.study_name,
-                                study_config: config,
-                                trial_ids: req.trial_ids,
-                            },
-                            &supporter,
-                        )
-                        .map_err(|e| e.to_string())?;
-                    Ok(PythiaEarlyStopResponse {
-                        decisions: decisions.into_iter().map(TrialStopDecision::from).collect(),
-                    })
-                })();
-                match result {
-                    Ok(resp) => write_ok(&mut writer, &resp)?,
-                    Err(e) => write_err(&mut writer, Status::Internal, &e)?,
-                }
-            }
-            other => write_err(&mut writer, Status::Unimplemented, &format!("method {other}"))?,
-        }
+        result.is_ok()
+    }
+}
+
+fn handle_suggest(
+    registry: &PolicyRegistry,
+    supporter: &RemoteSupporter,
+    payload: &[u8],
+    out: &mut Vec<u8>,
+) -> Result<(), FrameError> {
+    let result: Result<PythiaSuggestResponse, String> = (|| {
+        let req: PythiaSuggestRequest =
+            crate::wire::codec::decode(payload).map_err(|e| e.to_string())?;
+        let config = converters::study_config_from_proto(&req.display_name, &req.spec);
+        let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
+        let decision = policy
+            .suggest(
+                &SuggestRequest {
+                    study_name: req.study_name,
+                    study_config: config,
+                    wants: req
+                        .wants
+                        .into_iter()
+                        .map(|w| SuggestWant {
+                            client_id: w.client_id,
+                            count: w.count as usize,
+                        })
+                        .collect(),
+                },
+                supporter,
+            )
+            .map_err(|e| e.to_string())?;
+        Ok(PythiaSuggestResponse {
+            groups: decision
+                .groups
+                .iter()
+                .map(|g| SuggestionGroupProto {
+                    client_id: g.client_id.clone(),
+                    suggestions: g.suggestions.iter().map(suggestion_to_proto).collect(),
+                })
+                .collect(),
+            metadata_delta: decision.metadata_delta.to_updates(),
+        })
+    })();
+    match result {
+        Ok(resp) => write_ok(out, &resp),
+        Err(e) => write_err(out, Status::Internal, &e),
+    }
+}
+
+fn handle_early_stop(
+    registry: &PolicyRegistry,
+    supporter: &RemoteSupporter,
+    payload: &[u8],
+    out: &mut Vec<u8>,
+) -> Result<(), FrameError> {
+    let result: Result<PythiaEarlyStopResponse, String> = (|| {
+        let req: PythiaEarlyStopRequest =
+            crate::wire::codec::decode(payload).map_err(|e| e.to_string())?;
+        let config = converters::study_config_from_proto(&req.display_name, &req.spec);
+        let mut policy = registry.create(&config).map_err(|e| e.to_string())?;
+        let decisions = policy
+            .early_stop(
+                &EarlyStopRequest {
+                    study_name: req.study_name,
+                    study_config: config,
+                    trial_ids: req.trial_ids,
+                },
+                supporter,
+            )
+            .map_err(|e| e.to_string())?;
+        Ok(PythiaEarlyStopResponse {
+            decisions: decisions.into_iter().map(TrialStopDecision::from).collect(),
+        })
+    })();
+    match result {
+        Ok(resp) => write_ok(out, &resp),
+        Err(e) => write_err(out, Status::Internal, &e),
     }
 }
 

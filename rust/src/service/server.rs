@@ -1,68 +1,112 @@
 //! TCP front-end: accepts connections and dispatches framed RPCs to the
 //! [`VizierService`] (the Rust analogue of Code Block 4's
 //! `grpc.server(ThreadPoolExecutor(...))` setup).
+//!
+//! Two connection-handling models:
+//!
+//! * **Worker pool** (default): the event loop + bounded worker pool of
+//!   [`crate::service::frontend`]. Thousands of mostly-idle worker
+//!   clients — the normal Vizier fleet shape — cost no threads; the
+//!   server runs exactly `workers + 1` threads (`vizier-fe-w*` plus
+//!   `vizier-fe-io`).
+//! * **Legacy thread-per-connection** ([`ServerOptions::legacy_threads`],
+//!   CLI `--legacy-threads`): one `vizier-conn` OS thread per client.
+//!   Kept as the comparison baseline for the `C-FRONTEND` bench. Its
+//!   historical shutdown leak is fixed: live connection sockets are
+//!   actively shut down and their threads joined.
 
 use super::api::VizierService;
+use super::frontend::{ConnectionHandler, FrontendOptions, FrontendServer};
+use super::metrics::FrontendMetrics;
 use crate::util::time::Stopwatch;
 use crate::wire::codec::decode;
 use crate::wire::framing::{read_request, write_err, write_ok, FrameError, Method, Status};
 use crate::wire::messages::EmptyResponse;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Front-end configuration for [`VizierServer::start_with`].
+pub struct ServerOptions {
+    /// Worker-pool threads. 0 = the CPU count
+    /// ([`crate::service::frontend::default_workers`]).
+    pub workers: usize,
+    /// Use the legacy thread-per-connection front-end instead of the
+    /// worker pool (baseline for benchmarks).
+    pub legacy_threads: bool,
+    /// Shutdown drain deadline for queued + in-flight requests.
+    pub drain: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self { workers: 0, legacy_threads: false, drain: Duration::from_secs(5) }
+    }
+}
 
 /// A running TCP server.
 pub struct VizierServer {
     addr: std::net::SocketAddr,
     service: Arc<VizierService>,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    pub connections: Arc<AtomicU64>,
+    frontend_metrics: Arc<FrontendMetrics>,
+    inner: Inner,
+}
+
+enum Inner {
+    Pool(FrontendServer),
+    Legacy(LegacyServer),
 }
 
 impl VizierServer {
-    /// Bind and start serving. `addr` like `"127.0.0.1:6006"`; use port 0
-    /// for an ephemeral port (tests).
+    /// Bind and start serving with default options (worker pool sized to
+    /// the CPU count). `addr` like `"127.0.0.1:6006"`; use port 0 for an
+    /// ephemeral port (tests).
     pub fn start(service: Arc<VizierService>, addr: &str) -> std::io::Result<Self> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let connections = Arc::new(AtomicU64::new(0));
-        let svc = Arc::clone(&service);
-        let stop2 = Arc::clone(&stop);
-        let conns = Arc::clone(&connections);
-        let accept_thread = std::thread::Builder::new()
-            .name("vizier-accept".into())
-            .spawn(move || {
-                for stream in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match stream {
-                        Ok(stream) => {
-                            conns.fetch_add(1, Ordering::Relaxed);
-                            let svc = Arc::clone(&svc);
-                            // Connection-per-thread: each worker connection
-                            // is long-lived and serves sequential requests.
-                            let _ = std::thread::Builder::new()
-                                .name("vizier-conn".into())
-                                .spawn(move || {
-                                    let _ = serve_connection(&svc, stream);
-                                });
-                        }
-                        Err(_) => continue,
-                    }
-                }
-            })?;
-        Ok(Self {
-            addr: local,
-            service,
-            stop,
-            accept_thread: Some(accept_thread),
-            connections,
-        })
+        Self::start_with(service, addr, ServerOptions::default())
+    }
+
+    /// Bind and start serving with explicit front-end options.
+    pub fn start_with(
+        service: Arc<VizierService>,
+        addr: &str,
+        opts: ServerOptions,
+    ) -> std::io::Result<Self> {
+        let fe_metrics = Arc::new(FrontendMetrics::default());
+        service.metrics.set_frontend(Arc::clone(&fe_metrics));
+        if opts.legacy_threads {
+            let legacy = LegacyServer::start(
+                Arc::clone(&service),
+                addr,
+                Arc::clone(&fe_metrics),
+            )?;
+            Ok(Self {
+                addr: legacy.addr,
+                service,
+                frontend_metrics: fe_metrics,
+                inner: Inner::Legacy(legacy),
+            })
+        } else {
+            let frontend = FrontendServer::start(
+                VizierHandler { service: Arc::clone(&service) },
+                addr,
+                FrontendOptions {
+                    name: "vizier-fe",
+                    workers: opts.workers,
+                    drain: opts.drain,
+                    metrics: Some(Arc::clone(&fe_metrics)),
+                    ..Default::default()
+                },
+            )?;
+            Ok(Self {
+                addr: frontend.local_addr(),
+                service,
+                frontend_metrics: fe_metrics,
+                inner: Inner::Pool(frontend),
+            })
+        }
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
@@ -73,31 +117,187 @@ impl VizierServer {
         &self.service
     }
 
-    /// Stop accepting new connections (existing connections drain on their
-    /// own when clients disconnect).
-    pub fn shutdown(mut self) {
+    /// Front-end metrics: `active_connections` gauge, queue depth,
+    /// queue-wait histogram.
+    pub fn frontend_metrics(&self) -> &Arc<FrontendMetrics> {
+        &self.frontend_metrics
+    }
+
+    /// Graceful shutdown: stop accepting, actively close live
+    /// connections, drain in-flight requests (with a deadline in pool
+    /// mode), join every front-end thread, then stop the service's
+    /// policy workers. No `vizier-fe-*` / `vizier-conn` threads survive
+    /// this call.
+    pub fn shutdown(self) {
+        let VizierServer { service, inner, .. } = self;
+        match inner {
+            Inner::Pool(frontend) => frontend.shutdown(),
+            // LegacyServer closes live connections and joins their
+            // threads in Drop.
+            Inner::Legacy(legacy) => drop(legacy),
+        }
+        service.shutdown();
+    }
+}
+
+/// Pool-mode protocol logic: decode the method byte and dispatch to the
+/// service. Stateless per connection.
+struct VizierHandler {
+    service: Arc<VizierService>,
+}
+
+impl ConnectionHandler for VizierHandler {
+    type Conn = ();
+
+    fn on_connect(&self) {}
+
+    fn handle(&self, _state: &mut (), head: u8, payload: &[u8], out: &mut Vec<u8>) -> bool {
+        match Method::from_u8(head) {
+            Some(method) => {
+                let sw = Stopwatch::start();
+                let result = dispatch(&self.service, method, payload, out);
+                self.service.metrics.record(&format!("{method:?}"), sw.elapsed_micros());
+                result.is_ok()
+            }
+            None => {
+                // Garbage method byte: answer with an error frame and
+                // drop only this connection — never the server.
+                let _ = write_err(
+                    out,
+                    Status::InvalidArgument,
+                    &format!("unknown method id {head}; closing connection"),
+                );
+                false
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Legacy thread-per-connection front-end (benchmark baseline)
+// ---------------------------------------------------------------------------
+
+struct LegacyServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Live connections: a socket handle (to force-close on shutdown) and
+    /// the serving thread (to join). Finished entries are pruned on the
+    /// next accept only — under churn-then-idle traffic, dead entries
+    /// (one cloned fd + JoinHandle each) linger until another client
+    /// connects or shutdown runs. Acceptable for a benchmark baseline;
+    /// the pool front-end reaps connections eagerly and is the mode
+    /// production deployments use.
+    conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
+}
+
+impl LegacyServer {
+    fn start(
+        service: Arc<VizierService>,
+        addr: &str,
+        metrics: Arc<FrontendMetrics>,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let stop2 = Arc::clone(&stop);
+        let conns2 = Arc::clone(&conns);
+        let accept_thread = std::thread::Builder::new()
+            .name("vizier-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        // Per-connection transients: try the next one.
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::ConnectionAborted
+                                    | std::io::ErrorKind::ConnectionReset
+                                    | std::io::ErrorKind::Interrupted
+                            ) =>
+                        {
+                            continue;
+                        }
+                        // EMFILE etc.: back off instead of busy-spinning
+                        // the accept loop until an fd frees (same policy
+                        // as the pool front-end's accept path).
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    metrics.conn_opened();
+                    let svc = Arc::clone(&service);
+                    let m = Arc::clone(&metrics);
+                    let handle_stream = match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(_) => {
+                            metrics.conn_closed();
+                            continue;
+                        }
+                    };
+                    // Connection-per-thread: each worker connection is
+                    // long-lived and serves sequential requests.
+                    let spawned = std::thread::Builder::new()
+                        .name("vizier-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(&svc, stream, &m);
+                            m.conn_closed();
+                        });
+                    match spawned {
+                        Ok(handle) => {
+                            let mut guard = conns2.lock().unwrap();
+                            // Don't let the registry grow with dead
+                            // entries on long-lived servers.
+                            guard.retain(|(_, h)| !h.is_finished());
+                            guard.push((handle_stream, handle));
+                        }
+                        Err(_) => metrics.conn_closed(),
+                    }
+                }
+            })?;
+        Ok(Self { addr: local, stop, accept_thread: Some(accept_thread), conns })
+    }
+
+    fn shutdown_inner(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Unblock the accept loop with a dummy connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        self.service.shutdown();
-    }
-}
-
-impl Drop for VizierServer {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        // The historical leak: connection threads used to be orphaned
+        // here. Force each blocked read to return by shutting the socket
+        // down, then join the thread.
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (stream, handle) in conns {
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = handle.join();
         }
     }
 }
 
-/// Serve one connection: a loop of request -> dispatch -> response.
-fn serve_connection(service: &Arc<VizierService>, stream: TcpStream) -> Result<(), FrameError> {
+impl Drop for LegacyServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Serve one connection (legacy mode): a blocking loop of request ->
+/// dispatch -> response. Queue metrics stay zero here — there is no
+/// queue in this model — but the request counter is kept so the
+/// front-end report stays truthful in either mode.
+fn serve_connection(
+    service: &Arc<VizierService>,
+    stream: TcpStream,
+    fe_metrics: &FrontendMetrics,
+) -> Result<(), FrameError> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -107,6 +307,7 @@ fn serve_connection(service: &Arc<VizierService>, stream: TcpStream) -> Result<(
             Err(FrameError::Io(_)) => return Ok(()), // client disconnected
             Err(e) => return Err(e),
         };
+        fe_metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let sw = Stopwatch::start();
         let result = dispatch(service, method, &payload, &mut writer);
         service
@@ -165,4 +366,3 @@ pub fn dispatch_buf(service: &Arc<VizierService>, method: Method, payload: &[u8]
     let _ = dispatch(service, method, payload, &mut out);
     out
 }
-

@@ -1,4 +1,5 @@
 //! Test-support utilities, including the property-testing mini-framework
 //! (`proptest` is not in the offline vendored registry — DESIGN.md §3).
 
+pub mod procfs;
 pub mod prop;

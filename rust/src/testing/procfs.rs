@@ -1,0 +1,68 @@
+//! Linux `/proc` introspection helpers shared by the front-end leak /
+//! thread-budget assertions in `tests/frontend.rs` and the `C-FRONTEND`
+//! bench (`benches/bench_frontend.rs`). Keeping one copy means a fix to
+//! the parsing (e.g. comm-name truncation handling) reaches every
+//! enforcement point.
+
+/// Count this process's threads whose name starts with `prefix`, via
+/// `/proc/self/task/*/comm`. Returns `None` when `/proc` is unavailable
+/// (non-Linux), so callers can skip the assertion rather than fail.
+///
+/// Note Linux truncates thread names to 15 bytes; keep prefixes shorter
+/// than that (the front-end uses `vizier-fe` / `pythia-fe` /
+/// `vizier-conn`).
+pub fn threads_with_prefix(prefix: &str) -> Option<usize> {
+    let dir = std::fs::read_dir("/proc/self/task").ok()?;
+    let mut n = 0;
+    for entry in dir.flatten() {
+        if let Ok(comm) = std::fs::read_to_string(entry.path().join("comm")) {
+            if comm.trim_end().starts_with(prefix) {
+                n += 1;
+            }
+        }
+    }
+    Some(n)
+}
+
+/// The process's soft open-file limit from `/proc/self/limits`, or
+/// `None` off Linux.
+pub fn soft_fd_limit() -> Option<u64> {
+    let limits = std::fs::read_to_string("/proc/self/limits").ok()?;
+    for line in limits.lines() {
+        if line.starts_with("Max open files") {
+            return line.split_whitespace().nth(3).and_then(|v| v.parse().ok());
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_a_named_thread() {
+        let Some(zero) = threads_with_prefix("ossv-probe") else {
+            return; // no /proc: nothing to verify on this platform
+        };
+        assert_eq!(zero, 0);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("ossv-probe-1".into())
+            .spawn(move || {
+                let _ = rx.recv(); // park until the test is done counting
+            })
+            .unwrap();
+        assert_eq!(threads_with_prefix("ossv-probe"), Some(1));
+        tx.send(()).unwrap();
+        handle.join().unwrap();
+        assert_eq!(threads_with_prefix("ossv-probe"), Some(0));
+    }
+
+    #[test]
+    fn fd_limit_is_sane_when_present() {
+        if let Some(soft) = soft_fd_limit() {
+            assert!(soft >= 64, "soft fd limit {soft} unreasonably low");
+        }
+    }
+}

@@ -4,8 +4,24 @@
 //!
 //! Measures wall time over adaptive iteration counts with warmup and
 //! prints criterion-style lines: name, mean, p50, p95, throughput.
+//!
+//! # Machine-readable artifacts
+//!
+//! Every [`bench`] result, [`note`], and [`check`] verdict is also
+//! recorded in a process-global collector; a bench binary ends with
+//! [`finish("NAME")`](finish), which writes `BENCH_<NAME>.json` at the
+//! repo root (CI uploads these as artifacts so the perf trajectory is
+//! visible across runs). [`check`] centralizes the comparison-assertion
+//! policy: verdicts are *enforced* (a failure panics, after the JSON is
+//! written) unless `OSSVIZIER_BENCH_LAX` is set, which downgrades
+//! failures to warnings for noisy shared runners. The nightly soak job
+//! runs without the variable so the comparisons stay enforced somewhere.
 
+use crate::util::json::Json;
 use crate::util::time::Stopwatch;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
 /// One benchmark result.
@@ -22,6 +38,38 @@ impl BenchResult {
     pub fn mean_us(&self) -> f64 {
         self.mean.as_secs_f64() * 1e6
     }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+}
+
+/// Outcome of one [`check`] comparison.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub label: String,
+    pub pass: bool,
+    /// False when `OSSVIZIER_BENCH_LAX` downgraded this to advisory.
+    pub enforced: bool,
+    pub detail: String,
+}
+
+#[derive(Debug, Default)]
+struct Collector {
+    results: Vec<BenchResult>,
+    notes: Vec<String>,
+    verdicts: Vec<Verdict>,
+}
+
+fn collector() -> &'static Mutex<Collector> {
+    static C: OnceLock<Mutex<Collector>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(Collector::default()))
+}
+
+/// True when `OSSVIZIER_BENCH_LAX` is set: timing comparisons report
+/// without failing (shared CI runners are too noisy to enforce them).
+pub fn lax() -> bool {
+    std::env::var_os("OSSVIZIER_BENCH_LAX").is_some()
 }
 
 /// Measure `f`, choosing an iteration count that fills ~`budget`.
@@ -51,6 +99,7 @@ pub fn bench_with_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> B
         "{:<52} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
         result.name, result.iters, result.mean, result.p50, result.p95
     );
+    collector().lock().unwrap().results.push(result.clone());
     result
 }
 
@@ -64,9 +113,136 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
-/// Print a free-form summary line (picked up by EXPERIMENTS.md).
+/// Print a free-form summary line (picked up by EXPERIMENTS.md and the
+/// JSON artifact).
 pub fn note(text: &str) {
     println!("    {text}");
+    collector().lock().unwrap().notes.push(text.to_string());
+}
+
+/// Record a comparison verdict (e.g. "pooled >= legacy throughput").
+///
+/// The verdict lands in the JSON artifact either way. Failures panic at
+/// [`finish`] — after the artifact is written — unless
+/// `OSSVIZIER_BENCH_LAX` is set.
+pub fn check(label: &str, pass: bool, detail: &str) {
+    let enforced = !lax();
+    collector().lock().unwrap().verdicts.push(Verdict {
+        label: label.to_string(),
+        pass,
+        enforced,
+        detail: detail.to_string(),
+    });
+    if pass {
+        note(&format!("PASS  {label}: {detail}"));
+    } else if enforced {
+        note(&format!("FAIL  {label}: {detail}"));
+    } else {
+        note(&format!("WARN  {label}: {detail} (lax mode, not failing)"));
+    }
+}
+
+/// Like [`check`] but never downgraded by `OSSVIZIER_BENCH_LAX`: for
+/// structural assertions (thread budgets, leak checks) that do not
+/// depend on runner timing and must hold everywhere.
+pub fn check_strict(label: &str, pass: bool, detail: &str) {
+    collector().lock().unwrap().verdicts.push(Verdict {
+        label: label.to_string(),
+        pass,
+        enforced: true,
+        detail: detail.to_string(),
+    });
+    if pass {
+        note(&format!("PASS  {label}: {detail}"));
+    } else {
+        note(&format!("FAIL  {label}: {detail}"));
+    }
+}
+
+/// Where `BENCH_<name>.json` lands: `OSSVIZIER_BENCH_DIR` if set, else
+/// the repo root (the parent of the cargo manifest dir), else cwd.
+fn artifact_path(name: &str) -> PathBuf {
+    let file = format!("BENCH_{name}.json");
+    if let Some(dir) = std::env::var_os("OSSVIZIER_BENCH_DIR") {
+        return PathBuf::from(dir).join(file);
+    }
+    match std::env::var("CARGO_MANIFEST_DIR")
+        .ok()
+        .or_else(|| option_env!("CARGO_MANIFEST_DIR").map(String::from))
+    {
+        Some(m) => PathBuf::from(m).join("..").join(file),
+        None => PathBuf::from(file),
+    }
+}
+
+/// Write the collected results/notes/verdicts to `BENCH_<name>.json` and
+/// fail the bench (panic) if any enforced verdict did not pass. Call
+/// exactly once, at the end of each bench binary's `main`.
+pub fn finish(name: &str) {
+    let collected = std::mem::take(&mut *collector().lock().unwrap());
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str(name.to_string()));
+    root.insert(
+        "generated_unix_ms".to_string(),
+        Json::Num(crate::util::time::epoch_millis() as f64),
+    );
+    root.insert("lax".to_string(), Json::Bool(lax()));
+    root.insert(
+        "results".to_string(),
+        Json::Arr(
+            collected
+                .results
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(r.name.clone()));
+                    o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                    o.insert("ns_per_op".to_string(), Json::Num(r.mean_ns()));
+                    o.insert(
+                        "p50_ns".to_string(),
+                        Json::Num(r.p50.as_secs_f64() * 1e9),
+                    );
+                    o.insert(
+                        "p95_ns".to_string(),
+                        Json::Num(r.p95.as_secs_f64() * 1e9),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    root.insert(
+        "notes".to_string(),
+        Json::Arr(collected.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+    );
+    root.insert(
+        "verdicts".to_string(),
+        Json::Arr(
+            collected
+                .verdicts
+                .iter()
+                .map(|v| {
+                    let mut o = BTreeMap::new();
+                    o.insert("label".to_string(), Json::Str(v.label.clone()));
+                    o.insert("pass".to_string(), Json::Bool(v.pass));
+                    o.insert("enforced".to_string(), Json::Bool(v.enforced));
+                    o.insert("detail".to_string(), Json::Str(v.detail.clone()));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let path = artifact_path(name);
+    match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("\nbench artifact: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+    let failed: Vec<&Verdict> =
+        collected.verdicts.iter().filter(|v| v.enforced && !v.pass).collect();
+    if !failed.is_empty() {
+        let labels: Vec<&str> = failed.iter().map(|v| v.label.as_str()).collect();
+        panic!("{} enforced bench verdict(s) failed: {}", failed.len(), labels.join(", "));
+    }
 }
 
 #[cfg(test)]
@@ -81,5 +257,31 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.p50 <= r.p95);
         assert!(r.mean_us() < 1e5);
+    }
+
+    #[test]
+    fn finish_writes_artifact_and_enforces_verdicts() {
+        let dir = std::env::temp_dir()
+            .join(format!("ossvizier-benchkit-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("OSSVIZIER_BENCH_DIR", &dir);
+
+        note("a note");
+        check("always-true", true, "1 <= 2");
+        finish("SELFTEST");
+        let raw = std::fs::read_to_string(dir.join("BENCH_SELFTEST.json")).unwrap();
+        assert!(raw.contains("\"bench\""), "{raw}");
+        assert!(raw.contains("always-true"), "{raw}");
+        assert!(raw.contains("a note"), "{raw}");
+
+        // A failing enforced verdict panics at finish — after writing.
+        // (Skipped under OSSVIZIER_BENCH_LAX, which downgrades failures.)
+        if !lax() {
+            check("always-false", false, "2 <= 1");
+            let panicked = std::panic::catch_unwind(|| finish("SELFTEST_FAIL")).is_err();
+            assert!(panicked, "enforced failure must fail the bench");
+            assert!(dir.join("BENCH_SELFTEST_FAIL.json").exists());
+        }
+        std::env::remove_var("OSSVIZIER_BENCH_DIR");
     }
 }

@@ -8,6 +8,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod id;
 pub mod json;
+pub mod netpoll;
 pub mod rng;
 pub mod threadpool;
 pub mod time;

@@ -1,0 +1,229 @@
+//! Dependency-free readiness polling: thin safe wrappers over POSIX
+//! `poll(2)` and `pipe(2)`, declared directly via `extern "C"` so the
+//! crate stays free of the `libc`/`mio` crates (offline vendored build).
+//!
+//! Used by [`crate::service::frontend`] to park thousands of idle TCP
+//! connections without a thread each: the event loop blocks in
+//! [`wait_readable`] over every idle socket plus a [`WakePipe`] that
+//! worker threads tickle when they hand a connection back.
+//!
+//! The constants below are the Linux values (the only platform the
+//! project's CI and container target); they also match most BSDs for the
+//! `POLL*` flags.
+
+use std::io;
+use std::os::raw::{c_int, c_ulong, c_void};
+use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+struct PollFd {
+    fd: c_int,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    fn pipe(fds: *mut c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+}
+
+/// Reusable poll set: amortizes the `pollfd` and ready-index buffers
+/// across wakeups, so a hot event loop over a large fleet does not pay
+/// two O(fleet) allocations per served request.
+#[derive(Debug, Default)]
+pub struct PollSet {
+    pfds: Vec<PollFd>,
+    ready: Vec<usize>,
+}
+
+impl PollSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Block until at least one of `fds` is readable (or has hung up /
+    /// errored — callers must attempt the read to observe which), or
+    /// `timeout_ms` elapses. Returns the indices into `fds` that are
+    /// ready; an empty slice means the timeout fired. A negative timeout
+    /// blocks indefinitely.
+    pub fn wait_readable(&mut self, fds: &[RawFd], timeout_ms: i32) -> io::Result<&[usize]> {
+        self.pfds.clear();
+        self.pfds
+            .extend(fds.iter().map(|&fd| PollFd { fd, events: POLLIN, revents: 0 }));
+        loop {
+            let rc =
+                unsafe { poll(self.pfds.as_mut_ptr(), self.pfds.len() as c_ulong, timeout_ms) };
+            if rc < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(err);
+            }
+            self.ready.clear();
+            if rc > 0 {
+                for (i, p) in self.pfds.iter().enumerate() {
+                    if p.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0 {
+                        self.ready.push(i);
+                    }
+                }
+            }
+            return Ok(&self.ready);
+        }
+    }
+}
+
+/// One-shot convenience wrapper over [`PollSet::wait_readable`] for
+/// tests and cold paths.
+pub fn wait_readable(fds: &[RawFd], timeout_ms: i32) -> io::Result<Vec<usize>> {
+    let mut set = PollSet::new();
+    set.wait_readable(fds, timeout_ms).map(|r| r.to_vec())
+}
+
+/// Block until `fd` is writable or `timeout_ms` elapses. Returns whether
+/// the descriptor became writable (false = timeout).
+pub fn wait_writable(fd: RawFd, timeout_ms: i32) -> io::Result<bool> {
+    let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
+    loop {
+        let rc = unsafe { poll(&mut pfd, 1, timeout_ms) };
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(err);
+        }
+        return Ok(rc > 0);
+    }
+}
+
+/// A self-pipe for waking a [`wait_readable`] loop from another thread.
+///
+/// `wake` writes at most one byte until the loop `drain`s it again, so
+/// the pipe can never fill up and block a waker (the classic self-pipe
+/// trick without `O_NONBLOCK`).
+#[derive(Debug)]
+pub struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+    signaled: AtomicBool,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<Self> {
+        let mut fds: [c_int; 2] = [0; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self {
+            read_fd: fds[0],
+            write_fd: fds[1],
+            signaled: AtomicBool::new(false),
+        })
+    }
+
+    /// The fd to include in a [`wait_readable`] set.
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Make the next (or current) `wait_readable` call return. Cheap and
+    /// idempotent while the loop has not drained yet.
+    pub fn wake(&self) {
+        if !self.signaled.swap(true, Ordering::SeqCst) {
+            let byte = [1u8];
+            let _ = unsafe { write(self.write_fd, byte.as_ptr() as *const c_void, 1) };
+        }
+    }
+
+    /// Consume pending wake bytes. Call only after `read_fd` polled
+    /// readable (the pipe is a blocking descriptor).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 16];
+        let _ = unsafe { read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+        self.signaled.store(false, Ordering::SeqCst);
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Duration;
+
+    #[test]
+    fn wake_pipe_unblocks_poll() {
+        let wake = std::sync::Arc::new(WakePipe::new().unwrap());
+        let w = std::sync::Arc::clone(&wake);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            w.wake();
+        });
+        let ready = wait_readable(&[wake.read_fd()], 5_000).unwrap();
+        assert_eq!(ready, vec![0]);
+        wake.drain();
+        t.join().unwrap();
+        // Drained: a short poll now times out.
+        let ready = wait_readable(&[wake.read_fd()], 10).unwrap();
+        assert!(ready.is_empty());
+        // Wake works again after a drain.
+        wake.wake();
+        let ready = wait_readable(&[wake.read_fd()], 5_000).unwrap();
+        assert_eq!(ready, vec![0]);
+    }
+
+    #[test]
+    fn socket_readability_is_reported() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+
+        // Nothing written yet: poll times out.
+        let fds = [server_side.as_raw_fd()];
+        assert!(wait_readable(&fds, 10).unwrap().is_empty());
+
+        client.write_all(b"x").unwrap();
+        client.flush().unwrap();
+        let ready = wait_readable(&fds, 5_000).unwrap();
+        assert_eq!(ready, vec![0]);
+
+        // A connected socket with room in its send buffer is writable.
+        assert!(wait_writable(server_side.as_raw_fd(), 1_000).unwrap());
+    }
+
+    #[test]
+    fn hangup_is_reported_as_ready() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(client);
+        // Peer closed: the socket must poll ready so the event loop can
+        // observe EOF and reap the connection.
+        let ready = wait_readable(&[server_side.as_raw_fd()], 5_000).unwrap();
+        assert_eq!(ready, vec![0]);
+    }
+}

@@ -187,6 +187,158 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), FrameError> {
     Ok((head, buf))
 }
 
+/// Progress of an incremental frame read (see [`FrameReader`]).
+#[derive(Debug)]
+pub enum FrameProgress {
+    /// A complete frame: (head byte, payload).
+    Frame(u8, Vec<u8>),
+    /// The stream would block mid-frame; call again when readable.
+    Pending,
+    /// Clean EOF on a frame boundary (client disconnected).
+    Closed,
+}
+
+/// Granularity of body reads in [`FrameReader`]: bounds per-call stack
+/// buffer size and the initial buffer reservation.
+const READ_CHUNK: usize = 8 * 1024;
+
+/// Resumable frame reader for non-blocking streams.
+///
+/// [`read_frame`] assumes a blocking reader and parks the calling thread
+/// until the frame is complete — exactly what a bounded worker pool must
+/// not do when a slow or malicious client sends half a frame and stalls.
+/// `FrameReader` is the per-connection read-state machine instead: each
+/// [`poll_frame`](Self::poll_frame) call consumes whatever bytes are
+/// available, returns [`FrameProgress::Pending`] on `WouldBlock`, and
+/// yields at most one complete frame so request boundaries stay aligned
+/// with scheduling decisions (one frame = one worker-pool job).
+///
+/// Memory grows with bytes *actually received*, never with the
+/// attacker-controlled length prefix: a fleet of connections each
+/// claiming a [`MAX_FRAME`]-sized body and then stalling costs only the
+/// few bytes they really sent, not 16 MiB per connection.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    len_buf: [u8; 4],
+    len_got: usize,
+    /// Head byte (method/status), read into its own slot so the payload
+    /// never needs an O(len) shift to strip it.
+    head: u8,
+    head_got: bool,
+    /// Payload bytes expected after the head byte.
+    expected: usize,
+    payload: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when a frame has been started but not finished (a stalled
+    /// client mid-frame).
+    pub fn mid_frame(&self) -> bool {
+        self.len_got > 0
+    }
+
+    fn complete(&mut self) -> FrameProgress {
+        let payload = std::mem::take(&mut self.payload);
+        let head = self.head;
+        self.len_got = 0;
+        self.head_got = false;
+        self.expected = 0;
+        FrameProgress::Frame(head, payload)
+    }
+
+    /// Drive the state machine with whatever `r` has buffered. `r` should
+    /// be a non-blocking stream (a blocking one degrades to `read_frame`
+    /// behaviour). EOF inside a frame is an error; EOF on a frame
+    /// boundary is [`FrameProgress::Closed`].
+    pub fn poll_frame<R: Read>(&mut self, r: &mut R) -> Result<FrameProgress, FrameError> {
+        loop {
+            if self.len_got < 4 {
+                match r.read(&mut self.len_buf[self.len_got..]) {
+                    Ok(0) => {
+                        return if self.len_got == 0 {
+                            Ok(FrameProgress::Closed)
+                        } else {
+                            Err(FrameError::Io(std::io::Error::new(
+                                std::io::ErrorKind::UnexpectedEof,
+                                "eof inside frame length prefix",
+                            )))
+                        };
+                    }
+                    Ok(n) => {
+                        self.len_got += n;
+                        if self.len_got < 4 {
+                            continue;
+                        }
+                        let total = u32::from_le_bytes(self.len_buf);
+                        if total == 0 {
+                            return Err(FrameError::Empty);
+                        }
+                        if total > MAX_FRAME {
+                            return Err(FrameError::TooLarge(total));
+                        }
+                        self.head_got = false;
+                        self.expected = (total - 1) as usize;
+                        self.payload = Vec::with_capacity(self.expected.min(READ_CHUNK));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(FrameProgress::Pending);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(FrameError::Io(e)),
+                }
+            } else if !self.head_got {
+                let mut byte = [0u8; 1];
+                match r.read(&mut byte) {
+                    Ok(0) => {
+                        return Err(FrameError::Io(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "eof inside frame head",
+                        )));
+                    }
+                    Ok(_) => {
+                        self.head = byte[0];
+                        self.head_got = true;
+                        if self.expected == 0 {
+                            return Ok(self.complete());
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(FrameProgress::Pending);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(FrameError::Io(e)),
+                }
+            } else {
+                let mut chunk = [0u8; READ_CHUNK];
+                let want = (self.expected - self.payload.len()).min(READ_CHUNK);
+                match r.read(&mut chunk[..want]) {
+                    Ok(0) => {
+                        return Err(FrameError::Io(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "eof inside frame body",
+                        )));
+                    }
+                    Ok(n) => {
+                        self.payload.extend_from_slice(&chunk[..n]);
+                        if self.payload.len() == self.expected {
+                            return Ok(self.complete());
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(FrameProgress::Pending);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(FrameError::Io(e)),
+                }
+            }
+        }
+    }
+}
+
 /// Read a request frame: returns (method, payload).
 pub fn read_request<R: Read>(r: &mut R) -> Result<(Method, Vec<u8>), FrameError> {
     let (head, payload) = read_frame(r)?;
@@ -284,6 +436,172 @@ mod tests {
             read_request(&mut cur),
             Err(FrameError::UnknownMethod(200))
         ));
+    }
+
+    /// A reader that yields its script one chunk per call, returning
+    /// `WouldBlock` between chunks (mimics a non-blocking socket fed by a
+    /// slow client).
+    struct Drip {
+        chunks: Vec<Vec<u8>>,
+        next: usize,
+        starved: bool,
+        eof_at_end: bool,
+    }
+
+    impl Drip {
+        fn new(bytes: &[u8], chunk: usize, eof_at_end: bool) -> Self {
+            Self {
+                chunks: bytes.chunks(chunk.max(1)).map(|c| c.to_vec()).collect(),
+                next: 0,
+                starved: false,
+                eof_at_end,
+            }
+        }
+    }
+
+    impl std::io::Read for Drip {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.next >= self.chunks.len() {
+                return if self.eof_at_end {
+                    Ok(0)
+                } else {
+                    Err(std::io::ErrorKind::WouldBlock.into())
+                };
+            }
+            if !self.starved {
+                self.starved = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.starved = false;
+            let chunk = &self.chunks[self.next];
+            let n = chunk.len().min(buf.len());
+            buf[..n].copy_from_slice(&chunk[..n]);
+            if n == chunk.len() {
+                self.next += 1;
+            } else {
+                self.chunks[self.next].drain(..n);
+            }
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_reader_resumes_across_partial_reads() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, Method::GetStudy, &GetStudyRequest { name: "studies/7".into() })
+            .unwrap();
+        // Byte-at-a-time with a WouldBlock before every byte.
+        let mut drip = Drip::new(&wire, 1, false);
+        let mut fr = FrameReader::new();
+        let mut pendings = 0;
+        loop {
+            match fr.poll_frame(&mut drip).unwrap() {
+                FrameProgress::Frame(head, payload) => {
+                    assert_eq!(head, Method::GetStudy as u8);
+                    let req: GetStudyRequest = decode(&payload).unwrap();
+                    assert_eq!(req.name, "studies/7");
+                    break;
+                }
+                FrameProgress::Pending => pendings += 1,
+                FrameProgress::Closed => panic!("unexpected close"),
+            }
+        }
+        assert!(pendings >= wire.len(), "reader must park, not spin-block");
+        assert!(!fr.mid_frame());
+    }
+
+    #[test]
+    fn frame_reader_back_to_back_and_clean_close() {
+        let mut wire = Vec::new();
+        for i in 0..3u64 {
+            write_request(
+                &mut wire,
+                Method::GetStudy,
+                &GetStudyRequest { name: format!("studies/{i}") },
+            )
+            .unwrap();
+        }
+        let mut drip = Drip::new(&wire, 7, true);
+        let mut fr = FrameReader::new();
+        let mut seen = 0;
+        loop {
+            match fr.poll_frame(&mut drip).unwrap() {
+                FrameProgress::Frame(_, payload) => {
+                    let req: GetStudyRequest = decode(&payload).unwrap();
+                    assert_eq!(req.name, format!("studies/{seen}"));
+                    seen += 1;
+                }
+                FrameProgress::Pending => {}
+                FrameProgress::Closed => break,
+            }
+        }
+        assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn frame_reader_mid_frame_states_and_eof() {
+        let mut wire = Vec::new();
+        write_err(&mut wire, Status::Ok, "hello").unwrap();
+        // Stall after 2 bytes of the length prefix.
+        let mut drip = Drip::new(&wire[..2], 2, false);
+        let mut fr = FrameReader::new();
+        assert!(matches!(fr.poll_frame(&mut drip).unwrap(), FrameProgress::Pending));
+        while !matches!(fr.poll_frame(&mut drip).unwrap(), FrameProgress::Pending) {}
+        assert!(fr.mid_frame());
+        // EOF inside the frame is an error, not a clean close.
+        let mut eof = Drip::new(&[], 1, true);
+        assert!(matches!(fr.poll_frame(&mut eof), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn frame_reader_does_not_preallocate_from_prefix() {
+        // A (legal) max-sized length claim followed by a stall must not
+        // cost MAX_FRAME of memory — only what actually arrived.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAX_FRAME.to_le_bytes());
+        let mut drip = Drip::new(&wire, 4, false);
+        let mut fr = FrameReader::new();
+        loop {
+            match fr.poll_frame(&mut drip).unwrap() {
+                FrameProgress::Pending => {
+                    if drip.next >= drip.chunks.len() {
+                        break; // prefix fully consumed, client stalled
+                    }
+                }
+                other => panic!("unexpected progress {other:?}"),
+            }
+        }
+        assert!(fr.mid_frame());
+        assert!(
+            fr.payload.capacity() <= READ_CHUNK,
+            "stalled 16 MiB claim must not preallocate (got {} bytes)",
+            fr.payload.capacity()
+        );
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_and_empty() {
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut drip = Drip::new(&bad, 4, false);
+        let mut fr = FrameReader::new();
+        loop {
+            match fr.poll_frame(&mut drip) {
+                Err(FrameError::TooLarge(_)) => break,
+                Ok(FrameProgress::Pending) => continue,
+                other => panic!("expected TooLarge, got {other:?}"),
+            }
+        }
+        let zero = 0u32.to_le_bytes();
+        let mut drip = Drip::new(&zero, 4, false);
+        let mut fr = FrameReader::new();
+        loop {
+            match fr.poll_frame(&mut drip) {
+                Err(FrameError::Empty) => break,
+                Ok(FrameProgress::Pending) => continue,
+                other => panic!("expected Empty, got {other:?}"),
+            }
+        }
     }
 
     #[test]

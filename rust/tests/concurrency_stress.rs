@@ -1,6 +1,10 @@
 //! Concurrency stress tests for the sharded datastore + group-commit WAL
 //! behind one live `VizierServer` (paper §3.1: the service must keep
 //! serving "multiple parallel evaluations" without losing state).
+//!
+//! `OSSVIZIER_SOAK=1` (the nightly soak job) elevates the worker-thread
+//! and round counts 4x to shake out races PR-sized runs are too short to
+//! hit.
 
 use ossvizier::client::{TcpTransport, VizierClient};
 use ossvizier::datastore::memory::InMemoryDatastore;
@@ -12,7 +16,27 @@ use ossvizier::wire::messages::ScaleType;
 use std::collections::HashSet;
 use std::sync::Arc;
 
-const THREADS: usize = 8;
+fn soak() -> bool {
+    std::env::var_os("OSSVIZIER_SOAK").is_some()
+}
+
+/// Hammer width: 8 client workers normally, 32 under soak.
+fn threads() -> usize {
+    if soak() {
+        32
+    } else {
+        8
+    }
+}
+
+/// Per-worker round count, scaled 4x under soak.
+fn rounds(base: usize) -> usize {
+    if soak() {
+        base * 4
+    } else {
+        base
+    }
+}
 
 fn config(name: &str) -> StudyConfig {
     let mut c = StudyConfig::new(name);
@@ -33,11 +57,11 @@ fn tmp(name: &str) -> std::path::PathBuf {
     d.join("store.wal")
 }
 
-/// Spawn `THREADS` workers against `addr`, each doing `rounds` of
+/// Spawn `threads()` workers against `addr`, each doing `rounds` of
 /// suggest -> complete on the shared study. Returns the completed trial
 /// ids per worker.
 fn hammer(addr: &str, study: &str, rounds: usize) -> Vec<Vec<u64>> {
-    let handles: Vec<_> = (0..THREADS)
+    let handles: Vec<_> = (0..threads())
         .map(|w| {
             let addr = addr.to_string();
             let study = study.to_string();
@@ -70,11 +94,11 @@ fn hammer(addr: &str, study: &str, rounds: usize) -> Vec<Vec<u64>> {
 #[test]
 fn shared_study_hammering_loses_no_trials() {
     let ds = Arc::new(InMemoryDatastore::new());
-    let service = build_service(Arc::clone(&ds) as Arc<dyn Datastore>, |_| {}, THREADS);
+    let service = build_service(Arc::clone(&ds) as Arc<dyn Datastore>, |_| {}, threads());
     let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
     let addr = server.local_addr().to_string();
 
-    let rounds = 15;
+    let rounds = rounds(15);
     let per_worker = hammer(&addr, "stress-shared", rounds);
 
     // No two workers ever completed the same trial (trials are assigned
@@ -82,27 +106,27 @@ fn shared_study_hammering_loses_no_trials() {
     let mut all: Vec<u64> = per_worker.iter().flatten().copied().collect();
     let unique: HashSet<u64> = all.iter().copied().collect();
     assert_eq!(unique.len(), all.len(), "workers completed disjoint trial sets");
-    assert_eq!(all.len(), THREADS * rounds);
+    assert_eq!(all.len(), threads() * rounds);
 
     // Trial ids are dense and monotonic: every id in 1..=N was assigned
     // exactly once, none skipped, none duplicated.
     all.sort_unstable();
-    assert_eq!(all, (1..=(THREADS * rounds) as u64).collect::<Vec<u64>>());
+    assert_eq!(all, (1..=(threads() * rounds) as u64).collect::<Vec<u64>>());
 
     let study = ds.lookup_study("stress-shared").unwrap();
-    assert_eq!(ds.trial_count(&study.name).unwrap(), THREADS * rounds);
+    assert_eq!(ds.trial_count(&study.name).unwrap(), threads() * rounds);
     server.shutdown();
 }
 
 #[test]
 fn per_thread_studies_stay_consistent_across_shards() {
     let ds = Arc::new(InMemoryDatastore::new());
-    let service = build_service(Arc::clone(&ds) as Arc<dyn Datastore>, |_| {}, THREADS);
+    let service = build_service(Arc::clone(&ds) as Arc<dyn Datastore>, |_| {}, threads());
     let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
     let addr = server.local_addr().to_string();
 
-    let rounds = 12;
-    let handles: Vec<_> = (0..THREADS)
+    let rounds = rounds(12);
+    let handles: Vec<_> = (0..threads())
         .map(|w| {
             let addr = addr.clone();
             std::thread::spawn(move || {
@@ -167,14 +191,14 @@ fn wal_group_commit_survives_hammering_and_reopens_exact() {
     let total;
     {
         let ds = Arc::new(WalDatastore::open(&path).unwrap());
-        let service = build_service(Arc::clone(&ds) as Arc<dyn Datastore>, |_| {}, THREADS);
+        let service = build_service(Arc::clone(&ds) as Arc<dyn Datastore>, |_| {}, threads());
         let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
         let addr = server.local_addr().to_string();
 
-        let rounds = 10;
+        let rounds = rounds(10);
         let per_worker = hammer(&addr, "stress-wal", rounds);
         total = per_worker.iter().map(Vec::len).sum::<usize>();
-        assert_eq!(total, THREADS * rounds);
+        assert_eq!(total, threads() * rounds);
         server.shutdown();
     } // drop = crash; the log is the only survivor
 
