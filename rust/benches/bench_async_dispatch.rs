@@ -1,0 +1,253 @@
+//! C-ASYNC-DISPATCH: the completion-driven operation scheduler. With
+//! `--policy-workers P` and a gated (never-returning until released)
+//! policy, one server must hold **more than 3×P in-flight suggest
+//! operations** — the policy pool bounds concurrent GP fits, not
+//! accepted work — while every waiting client is parked in a server-side
+//! `WaitOperation` long-poll:
+//!
+//! * front-end threads stay at `workers + 2` (procfs), i.e. parked
+//!   waiters cost connections, not threads;
+//! * after the gate opens, every client completes through exactly one
+//!   `WaitOperation` round-trip — zero `GetOperation` busy-poll traffic
+//!   from the new client path;
+//! * wakeup latency (operation completion -> parked client woken) is
+//!   reported from the `wait_wakeup` histogram.
+//!
+//! `OSSVIZIER_SOAK=1` scales the policy pool and client fleet up.
+//! Results land in `BENCH_async_dispatch.json` at the repo root.
+
+use ossvizier::client::{TcpTransport, VizierClient};
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use ossvizier::pythia::supporter::PolicySupporter;
+use ossvizier::pyvizier::{Algorithm, MetricInformation, ScaleType, StudyConfig, TrialSuggestion};
+use ossvizier::service::{build_service, ServerOptions, VizierServer};
+use ossvizier::testing::procfs::threads_with_prefix;
+use ossvizier::util::benchkit::{check_strict, finish, note, section};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+const FE_WORKERS: usize = 4;
+
+fn soak() -> bool {
+    std::env::var_os("OSSVIZIER_SOAK").is_some()
+}
+
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Every invocation blocks until the gate opens: policy workers are all
+/// pinned, so accepted-but-unserved operations pile up behind them.
+struct SlowPolicy {
+    gate: Arc<Gate>,
+    invocations: Arc<AtomicUsize>,
+}
+
+impl Policy for SlowPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        self.invocations.fetch_add(1, Ordering::SeqCst);
+        self.gate.wait();
+        Ok(SuggestDecision::from_flat(
+            req,
+            vec![TrialSuggestion::default(); req.total_count()],
+        ))
+    }
+}
+
+fn config(name: &str) -> StudyConfig {
+    let mut c = StudyConfig::new(name);
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = Algorithm::Custom("SLOW".into());
+    c.seed = 3;
+    c
+}
+
+fn wait_for(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let by = Instant::now() + deadline;
+    while !cond() {
+        if Instant::now() >= by {
+            note(&format!("WARN  timed out waiting for {what}"));
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    true
+}
+
+fn main() {
+    let policy_workers = if soak() { 4 } else { 2 };
+    // One study (no cross-study coalescing) per client: every operation
+    // needs its own policy run, so P run and the rest queue.
+    let clients = 3 * policy_workers + 2;
+
+    section(&format!(
+        "C-ASYNC-DISPATCH: {clients} clients vs {policy_workers} policy workers \
+         (gated slow policy), {FE_WORKERS} front-end workers"
+    ));
+
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let gate = Arc::new(Gate::default());
+    let invocations = Arc::new(AtomicUsize::new(0));
+    let (g, inv) = (Arc::clone(&gate), Arc::clone(&invocations));
+    let service = build_service(
+        Arc::clone(&ds),
+        move |reg| {
+            reg.register(
+                "SLOW",
+                Arc::new(move |_| {
+                    Box::new(SlowPolicy {
+                        gate: Arc::clone(&g),
+                        invocations: Arc::clone(&inv),
+                    })
+                }),
+            );
+        },
+        policy_workers,
+    );
+    let server = VizierServer::start_with(
+        Arc::clone(&service),
+        "127.0.0.1:0",
+        ServerOptions { workers: FE_WORKERS, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let study = format!("async-{i}");
+                let mut client = VizierClient::load_or_create_study(
+                    Box::new(TcpTransport::connect(&addr).unwrap()),
+                    &study,
+                    &config(&study),
+                    "bench",
+                )
+                .unwrap();
+                client.get_suggestions(1).unwrap().len()
+            })
+        })
+        .collect();
+
+    // Every client accepted and parked: the server holds `clients`
+    // in-flight operations on `policy_workers` policy threads.
+    let fe = Arc::clone(server.frontend_metrics());
+    let all_parked = wait_for("all clients to park in WaitOperation", Duration::from_secs(60), || {
+        fe.parked_responses() == clients as u64
+    });
+    let in_flight = service.metrics.in_flight_policy_jobs();
+    let pending = ds.pending_operations().unwrap().len();
+    let fe_threads = threads_with_prefix("vizier-fe");
+    note(&format!(
+        "while gated: {in_flight} in-flight ops ({pending} pending in ds), \
+         {} parked responses, {:?} vizier-fe threads, {} policy runs started",
+        fe.parked_responses(),
+        fe_threads,
+        invocations.load(Ordering::SeqCst)
+    ));
+
+    check_strict(
+        "clients-parked",
+        all_parked,
+        &format!("{} of {clients} waiters parked server-side", fe.parked_responses()),
+    );
+    check_strict(
+        "in-flight-exceeds-3x-policy-workers",
+        in_flight > (3 * policy_workers) as u64,
+        &format!(
+            "{in_flight} in-flight suggest ops on {policy_workers} policy workers \
+             (> {} required)",
+            3 * policy_workers
+        ),
+    );
+    match fe_threads {
+        Some(n) => check_strict(
+            "fe-thread-budget",
+            n <= FE_WORKERS + 2,
+            &format!("{clients} parked waiters on {n} threads (budget {})", FE_WORKERS + 2),
+        ),
+        None => note("no /proc thread names on this platform: skipping thread-budget verdict"),
+    }
+
+    // Open the gate: every parked client must complete.
+    let wait_ops_at_release = service.metrics.histogram("WaitOperation").count();
+    let sw = Instant::now();
+    gate.release();
+    let mut served = 0usize;
+    for h in handles {
+        served += h.join().unwrap();
+    }
+    let wake_to_done = sw.elapsed();
+    note(&format!(
+        "gate release -> all {clients} clients done in {wake_to_done:?} \
+         (wait_wakeup mean {:.1} us, p99 {} us)",
+        service.metrics.wait_wakeup.mean_micros(),
+        service.metrics.wait_wakeup.quantile_micros(0.99),
+    ));
+
+    check_strict(
+        "all-clients-served",
+        served == clients,
+        &format!("{served} suggestions delivered to {clients} clients"),
+    );
+    // The acceptance bar: completion is pushed over the parked wait —
+    // zero GetOperation busy-polling, and no client needed an extra
+    // round-trip after the policies finished (its parked WaitOperation
+    // carried the result).
+    let get_ops = service.metrics.histogram("GetOperation").count();
+    let wait_ops = service.metrics.histogram("WaitOperation").count();
+    check_strict(
+        "no-get-operation-busy-poll",
+        get_ops == 0,
+        &format!("{get_ops} GetOperation calls from the new client path"),
+    );
+    check_strict(
+        "single-roundtrip-wakeup",
+        wait_ops == wait_ops_at_release && wait_ops >= clients as u64,
+        &format!(
+            "{wait_ops} WaitOperation calls total, {wait_ops_at_release} already parked at \
+             release: completions rode the parked waits"
+        ),
+    );
+    check_strict(
+        "in-flight-gauge-drains",
+        service.metrics.in_flight_policy_jobs() == 0,
+        &format!("{} in-flight after completion", service.metrics.in_flight_policy_jobs()),
+    );
+
+    server.shutdown();
+    let leftover = threads_with_prefix("vizier-fe");
+    if let Some(n) = leftover {
+        check_strict(
+            "shutdown-no-leak",
+            n == 0,
+            &format!("{n} vizier-fe threads after shutdown"),
+        );
+    }
+
+    finish("async_dispatch");
+}

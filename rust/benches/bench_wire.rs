@@ -61,6 +61,7 @@ fn main() {
 
     let batch = ListTrialsResponse {
         trials: (0..500).map(|i| big_trial(i, 20)).collect(),
+        next_page_token: String::new(),
     };
     let batch_bytes = encode(&batch);
     note(&format!(

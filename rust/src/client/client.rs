@@ -50,6 +50,25 @@ impl From<FrameError> for ClientError {
     }
 }
 
+/// Does this error mean the server predates `WaitOperation`? Old
+/// servers answer an unknown method id with `InvalidArgument: unknown
+/// method id ...` and close the connection (the transport reconnects on
+/// the next call); an intermediary might also say `Unimplemented`.
+fn wait_operation_unsupported(e: &ClientError) -> bool {
+    match e {
+        ClientError::Rpc { status: Status::Unimplemented, .. } => true,
+        ClientError::Rpc { status: Status::InvalidArgument, message } => {
+            message.contains("unknown method")
+        }
+        _ => false,
+    }
+}
+
+/// One `WaitOperation` long-poll chunk: under the server's 60 s cap,
+/// long enough that a multi-minute GP fit costs a handful of idle
+/// round-trips instead of a busy-poll stream.
+const WAIT_CHUNK_MS: u64 = 25_000;
+
 /// A connected Vizier client bound to one study and one `client_id`.
 pub struct VizierClient {
     transport: Box<dyn Transport>,
@@ -57,6 +76,10 @@ pub struct VizierClient {
     pub client_id: String,
     /// Max time to wait for one suggestion operation.
     pub operation_timeout: Duration,
+    /// Whether the server supports `WaitOperation` (assumed until it
+    /// answers "unknown method"; then this client permanently falls
+    /// back to `GetOperation` polling with capped backoff).
+    server_waits: bool,
 }
 
 impl VizierClient {
@@ -115,6 +138,7 @@ impl VizierClient {
             study_name: study.name,
             client_id: client_id.to_string(),
             operation_timeout: Duration::from_secs(300),
+            server_waits: true,
         })
     }
 
@@ -125,6 +149,7 @@ impl VizierClient {
             study_name: study_name.to_string(),
             client_id: client_id.to_string(),
             operation_timeout: Duration::from_secs(300),
+            server_waits: true,
         }
     }
 
@@ -153,12 +178,48 @@ impl VizierClient {
         Ok(op.trials.iter().map(converters::trial_from_proto).collect())
     }
 
+    /// Wait for an operation: `WaitOperation` long-polls server-side
+    /// (the server parks this request and answers the instant the
+    /// policy result lands — one round-trip per completion, no polling
+    /// traffic), chunked under the server's per-call cap. Old servers
+    /// that do not know the method get the classic `GetOperation` loop
+    /// with capped backoff instead.
     fn wait_operation(&mut self, mut op: OperationProto) -> Result<OperationProto, ClientError> {
         let deadline = Instant::now() + self.operation_timeout;
         let mut backoff = Backoff::polling();
         while !op.done {
-            if Instant::now() > deadline {
+            let now = Instant::now();
+            if now > deadline {
                 return Err(ClientError::OperationTimeout(op.name));
+            }
+            if self.server_waits {
+                let remaining_ms = deadline.saturating_duration_since(now).as_millis() as u64;
+                let result: Result<OperationResponse, ClientError> = self.rpc(
+                    Method::WaitOperation,
+                    &WaitOperationRequest {
+                        name: op.name.clone(),
+                        timeout_ms: remaining_ms.clamp(1, WAIT_CHUNK_MS),
+                    },
+                );
+                match result {
+                    Ok(resp) => {
+                        // A not-done answer is the chunk deadline
+                        // passing (or a draining server answering
+                        // early); the brief pause keeps the loop from
+                        // spinning in the latter case and costs one
+                        // capped delay per ~25 s chunk otherwise.
+                        op = resp.operation;
+                        if !op.done {
+                            std::thread::sleep(backoff.next_delay());
+                        }
+                        continue;
+                    }
+                    Err(e) if wait_operation_unsupported(&e) => {
+                        self.server_waits = false;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             std::thread::sleep(backoff.next_delay());
             let resp: OperationResponse = self.rpc(
@@ -257,15 +318,45 @@ impl VizierClient {
             .unwrap_or(false))
     }
 
-    /// All trials of the study.
+    /// All trials of the study (one unpaginated response; prefer
+    /// [`Self::list_trials_page`] for large studies).
     pub fn list_trials(&mut self) -> Result<Vec<Trial>, ClientError> {
         let resp: ListTrialsResponse = self.rpc(
             Method::ListTrials,
             &ListTrialsRequest {
                 study_name: self.study_name.clone(),
+                ..Default::default()
             },
         )?;
         Ok(resp.trials.iter().map(converters::trial_from_proto).collect())
+    }
+
+    /// One page of the study's trials: at most `page_size` trials after
+    /// the position encoded by `page_token` (`""` starts from the top).
+    /// The returned token is empty once the listing is exhausted.
+    pub fn list_trials_page(
+        &mut self,
+        page_size: usize,
+        page_token: &str,
+    ) -> Result<(Vec<Trial>, String), ClientError> {
+        let resp: ListTrialsResponse = self.rpc(
+            Method::ListTrials,
+            &ListTrialsRequest {
+                study_name: self.study_name.clone(),
+                page_size: page_size as u64,
+                page_token: page_token.to_string(),
+            },
+        )?;
+        Ok((
+            resp.trials.iter().map(converters::trial_from_proto).collect(),
+            resp.next_page_token,
+        ))
+    }
+
+    /// Service + front-end counter snapshot (coalescing ratio, in-flight
+    /// policy jobs, parked responses).
+    pub fn service_metrics(&mut self) -> Result<ServiceMetricsResponse, ClientError> {
+        self.rpc(Method::GetServiceMetrics, &GetServiceMetricsRequest::default())
     }
 
     /// The Pareto-optimal (or single-objective best) trials.
@@ -297,6 +388,96 @@ impl VizierClient {
     pub fn ping(&mut self) -> Result<(), ClientError> {
         let _: EmptyResponse = self.rpc(Method::Ping, &EmptyResponse::default())?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::codec::decode;
+    use crate::wire::framing::{write_err, write_ok};
+    use crate::wire::messages::{
+        OperationProto, OperationResponse, SuggestTrialsRequest, TrialProto, TrialState,
+    };
+
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    /// A server that predates `WaitOperation`: SuggestTrials returns a
+    /// pending operation, WaitOperation gets the historical
+    /// "unknown method id" error, GetOperation completes on the Nth
+    /// poll. Counts calls per method.
+    struct OldServerTransport {
+        get_ops_until_done: u32,
+        get_op_calls: Arc<AtomicU32>,
+        wait_op_calls: Arc<AtomicU32>,
+    }
+
+    impl OldServerTransport {
+        fn op(&self, done: bool) -> OperationProto {
+            OperationProto {
+                name: "operations/1".into(),
+                done,
+                trials: if done {
+                    vec![TrialProto { id: 1, state: TrialState::Active, ..Default::default() }]
+                } else {
+                    Vec::new()
+                },
+                ..Default::default()
+            }
+        }
+    }
+
+    impl Transport for OldServerTransport {
+        fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError> {
+            let mut out = Vec::new();
+            match method {
+                Method::SuggestTrials => {
+                    let _req: SuggestTrialsRequest = decode(request)?;
+                    write_ok(&mut out, &OperationResponse { operation: self.op(false) })?;
+                }
+                Method::WaitOperation => {
+                    self.wait_op_calls.fetch_add(1, Ordering::SeqCst);
+                    write_err(
+                        &mut out,
+                        Status::InvalidArgument,
+                        "unknown method id 18; closing connection",
+                    )?;
+                }
+                Method::GetOperation => {
+                    let polls = self.get_op_calls.fetch_add(1, Ordering::SeqCst) + 1;
+                    let done = polls >= self.get_ops_until_done;
+                    write_ok(&mut out, &OperationResponse { operation: self.op(done) })?;
+                }
+                other => panic!("unexpected method {other:?}"),
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn wait_falls_back_to_polling_on_old_servers() {
+        let get_op_calls = Arc::new(AtomicU32::new(0));
+        let wait_op_calls = Arc::new(AtomicU32::new(0));
+        let mut client = VizierClient::for_study(
+            Box::new(OldServerTransport {
+                get_ops_until_done: 3,
+                get_op_calls: Arc::clone(&get_op_calls),
+                wait_op_calls: Arc::clone(&wait_op_calls),
+            }),
+            "studies/1",
+            "c0",
+        );
+        let trials = client.get_suggestions(1).unwrap();
+        assert_eq!(trials.len(), 1);
+        assert!(!client.server_waits, "fallback must latch");
+
+        // The next wait goes straight to polling: WaitOperation is
+        // tried exactly once per client, ever.
+        let trials = client.get_suggestions(1).unwrap();
+        assert_eq!(trials.len(), 1);
+        assert_eq!(wait_op_calls.load(Ordering::SeqCst), 1);
+        assert!(get_op_calls.load(Ordering::SeqCst) >= 4);
     }
 }
 

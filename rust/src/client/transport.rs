@@ -33,14 +33,31 @@ pub struct TcpTransport {
     addr: String,
     conn: Option<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
     pub connect_timeout: Duration,
+    /// Per-response read timeout (`None` = block forever, the default —
+    /// user clients legitimately wait on long evaluations). A timed-out
+    /// call fails *without* the resend retry: the request was already
+    /// delivered and replaying a non-idempotent RPC (CompleteTrial)
+    /// would be worse than the error.
+    pub read_timeout: Option<Duration>,
 }
 
 impl TcpTransport {
     pub fn connect(addr: &str) -> Result<Self, FrameError> {
+        Self::connect_with_read_timeout(addr, None)
+    }
+
+    /// Connect with a bound on how long one RPC may wait for its
+    /// response (used by `RemoteSupporter` so a vanished API server
+    /// cannot stall a policy run indefinitely).
+    pub fn connect_with_read_timeout(
+        addr: &str,
+        read_timeout: Option<Duration>,
+    ) -> Result<Self, FrameError> {
         let mut t = Self {
             addr: addr.to_string(),
             conn: None,
             connect_timeout: Duration::from_secs(5),
+            read_timeout,
         };
         t.ensure_connected()?;
         Ok(t)
@@ -54,6 +71,7 @@ impl TcpTransport {
                 .map_err(|_| FrameError::Io(std::io::Error::other(format!("bad addr {}", self.addr))))?;
             let stream = TcpStream::connect_timeout(&sock_addr, self.connect_timeout)?;
             stream.set_nodelay(true).ok();
+            stream.set_read_timeout(self.read_timeout)?;
             let reader = BufReader::new(stream.try_clone()?);
             let writer = BufWriter::new(stream);
             self.conn = Some((reader, writer));
@@ -75,6 +93,18 @@ impl Transport for TcpTransport {
             })();
             match result {
                 Ok(resp) => return Ok(resp),
+                // Read timeout: the connection is desynced (the
+                // response may still arrive later) — drop it, but do
+                // NOT resend.
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    self.conn = None;
+                    return Err(FrameError::Io(e));
+                }
                 Err(FrameError::Io(e)) if attempt == 0 => {
                     let _ = e;
                     self.conn = None; // drop and retry once

@@ -20,7 +20,7 @@
 //!   directory → shard, and the directory lock is never held while
 //!   another directory-taking call runs, so the pair cannot deadlock.
 
-use super::{Datastore, DsError, StudyPage};
+use super::{Datastore, DsError, StudyPage, TrialPage};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -359,6 +359,42 @@ impl Datastore for InMemoryDatastore {
             .ok_or_else(|| DsError::TrialNotFound(study.to_string(), id))
     }
 
+    /// Keyed pagination over the study's `BTreeMap` of trials: a range
+    /// scan from the token's id clones only the requested page, not the
+    /// whole study.
+    fn list_trials_page(
+        &self,
+        study: &str,
+        page_size: usize,
+        page_token: &str,
+    ) -> Result<TrialPage, DsError> {
+        let after = crate::datastore::parse_trial_token(page_token)?;
+        let cap = if page_size == 0 { usize::MAX } else { page_size };
+        let sh = self.shard_of(study).read().unwrap();
+        let entry = sh
+            .studies
+            .get(study)
+            .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?;
+        let mut trials: Vec<TrialProto> = Vec::with_capacity(cap.min(entry.trials.len()));
+        let mut more = false;
+        for (_, t) in entry.trials.range((std::ops::Bound::Excluded(after), std::ops::Bound::Unbounded)) {
+            if trials.len() == cap {
+                more = true;
+                break;
+            }
+            trials.push(t.clone());
+        }
+        let next_page_token = if more {
+            trials.last().map(|t| t.id.to_string()).unwrap_or_default()
+        } else {
+            String::new()
+        };
+        Ok(TrialPage {
+            trials,
+            next_page_token,
+        })
+    }
+
     fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError> {
         let sh = self.shard_of(study).read().unwrap();
         Ok(sh
@@ -628,6 +664,39 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(ds.get_trial(&s.name, 1).unwrap().created_ms, 800);
+    }
+
+    #[test]
+    fn trial_pagination_walks_every_trial_once() {
+        let ds = InMemoryDatastore::new();
+        let s = ds
+            .create_study(StudyProto { display_name: "page".into(), ..Default::default() })
+            .unwrap();
+        for _ in 0..25 {
+            ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        }
+        let mut seen: Vec<u64> = Vec::new();
+        let mut token = String::new();
+        let mut pages = 0;
+        loop {
+            let page = ds.list_trials_page(&s.name, 10, &token).unwrap();
+            assert!(page.trials.len() <= 10);
+            seen.extend(page.trials.iter().map(|t| t.id));
+            pages += 1;
+            if page.next_page_token.is_empty() {
+                break;
+            }
+            token = page.next_page_token;
+        }
+        assert_eq!(pages, 3); // 10 + 10 + 5
+        assert_eq!(seen, (1..=25).collect::<Vec<u64>>());
+        // page_size 0 = everything in one page.
+        let all = ds.list_trials_page(&s.name, 0, "").unwrap();
+        assert_eq!(all.trials.len(), 25);
+        assert!(all.next_page_token.is_empty());
+        // A malformed token is an error, not a silent restart.
+        assert!(ds.list_trials_page(&s.name, 10, "bogus").is_err());
+        assert!(ds.list_trials_page("studies/none", 10, "").is_err());
     }
 
     #[test]

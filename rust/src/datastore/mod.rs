@@ -71,6 +71,14 @@ pub struct StudyPage {
     pub next_page_token: String,
 }
 
+/// One page of a paginated trial listing.
+#[derive(Debug, Clone, Default)]
+pub struct TrialPage {
+    pub trials: Vec<TrialProto>,
+    /// Opaque cursor for the next page; empty = listing exhausted.
+    pub next_page_token: String,
+}
+
 /// Storage abstraction used by the Vizier service.
 ///
 /// All methods are atomic with respect to each other. `mutate_*` methods
@@ -134,6 +142,38 @@ pub trait Datastore: Send + Sync {
     ) -> Result<Vec<TrialProto>, DsError> {
         Ok(filter.apply(self.list_trials(study)?))
     }
+    /// Paginated trial listing: at most `page_size` trials (0 = no cap)
+    /// after the position encoded by `page_token` ("" starts from the
+    /// top), in trial-id order. The token is the last returned trial's
+    /// id; trials created mid-iteration with higher ids appear in later
+    /// pages, deleted ones are skipped — the usual cursor semantics.
+    /// The default falls back to `list_trials` (id-sorted by contract)
+    /// and clones everything; stores with keyed trial maps should
+    /// override it to clone only the page.
+    fn list_trials_page(
+        &self,
+        study: &str,
+        page_size: usize,
+        page_token: &str,
+    ) -> Result<TrialPage, DsError> {
+        let after = parse_trial_token(page_token)?;
+        let cap = if page_size == 0 { usize::MAX } else { page_size };
+        let mut trials: Vec<TrialProto> = self
+            .list_trials(study)?
+            .into_iter()
+            .filter(|t| t.id > after)
+            .collect();
+        let next_page_token = if trials.len() > cap {
+            trials.truncate(cap);
+            trials.last().map(|t| t.id.to_string()).unwrap_or_default()
+        } else {
+            String::new()
+        };
+        Ok(TrialPage {
+            trials,
+            next_page_token,
+        })
+    }
     fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError>;
     fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError>;
     /// Atomic read-modify-write of one trial.
@@ -160,4 +200,16 @@ pub trait Datastore: Send + Sync {
 
     /// Number of trials in a study (cheaper than `list_trials().len()`).
     fn trial_count(&self, study: &str) -> Result<usize, DsError>;
+}
+
+/// Decode a trial-listing page token (the last-seen trial id; "" = from
+/// the top).
+pub(crate) fn parse_trial_token(page_token: &str) -> Result<u64, DsError> {
+    if page_token.is_empty() {
+        Ok(0)
+    } else {
+        page_token
+            .parse()
+            .map_err(|_| DsError::Invalid(format!("malformed page token {page_token:?}")))
+    }
 }

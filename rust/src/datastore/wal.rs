@@ -571,6 +571,17 @@ impl Datastore for WalDatastore {
         self.mem.list_trials(study)
     }
 
+    fn list_trials_page(
+        &self,
+        study: &str,
+        page_size: usize,
+        page_token: &str,
+    ) -> Result<super::TrialPage, DsError> {
+        // Reads bypass the log: delegate to the in-memory image's keyed
+        // page scan.
+        self.mem.list_trials_page(study, page_size, page_token)
+    }
+
     fn query_trials(
         &self,
         study: &str,

@@ -36,6 +36,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "wal-sync", takes_value: false, help: "fsync each WAL commit batch (machine-crash durability)" },
         OptSpec { name: "wal-serial", takes_value: false, help: "disable WAL group commit (serial appends; baseline)" },
         OptSpec { name: "workers", takes_value: true, help: "front-end worker-pool threads (default: CPU count)" },
+        OptSpec { name: "idle-timeout-secs", takes_value: true, help: "evict connections idle longer than this (0 = never, the default)" },
+        OptSpec { name: "max-connections", takes_value: true, help: "refuse connections beyond this many (0 = unlimited, the default)" },
         OptSpec { name: "legacy-threads", takes_value: false, help: "thread-per-connection front-end (benchmark baseline)" },
         OptSpec { name: "policy-workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
         OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
@@ -117,7 +119,17 @@ fn main() {
             let metrics = Arc::clone(&service.metrics);
             let fe_workers = args.get_u64("workers", 0).unwrap_or(0) as usize;
             let legacy = args.has_flag("legacy-threads");
-            let opts = ServerOptions { workers: fe_workers, legacy_threads: legacy, ..Default::default() };
+            let idle_secs = args.get_u64("idle-timeout-secs", 0).unwrap_or(0);
+            let idle_timeout =
+                (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs));
+            let max_connections = args.get_u64("max-connections", 0).unwrap_or(0) as usize;
+            let opts = ServerOptions {
+                workers: fe_workers,
+                legacy_threads: legacy,
+                idle_timeout,
+                max_connections,
+                ..Default::default()
+            };
             let server = VizierServer::start_with(service, &addr, opts)
                 .unwrap_or_else(|e| fatal(&format!("bind {addr}: {e}")));
             if legacy {

@@ -31,8 +31,9 @@ use crate::util::time::epoch_millis;
 use crate::wire::framing::Status;
 use crate::wire::messages::*;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Service-level error: an RPC status plus message.
 #[derive(Debug, Clone)]
@@ -98,15 +99,84 @@ struct CoalesceState {
     claimed: HashSet<String>,
 }
 
+/// A parked completion callback: fired exactly once, with the final
+/// operation, when it completes.
+pub type OpWaiter = Box<dyn FnOnce(&OperationProto) + Send>;
+
+/// Registry of operation watchers (op name -> parked waiters), the
+/// server half of `WaitOperation`: instead of clients busy-polling
+/// `GetOperation`, a waiter parks here and [`fire`](Self::fire) wakes it
+/// the instant the policy result lands. Waiters for operations that
+/// complete through crash-resume are fired by the same path — the
+/// resume batch runner completes operations exactly like a live one, so
+/// re-arming after a restart is just watching again.
+///
+/// Waiters are keyed by id so a long-poll that times out can disarm
+/// itself ([`VizierService::unwatch_operation`]) instead of leaving a
+/// stale closure to fire at completion. Deferred front-end waiters
+/// cannot be disarmed by the event-loop sweep (it is service-agnostic);
+/// those fire into a dead ticket as a no-op and are bounded by the
+/// operation's lifetime.
+#[derive(Default)]
+struct OpWaiters {
+    map: Mutex<HashMap<String, Vec<(u64, OpWaiter)>>>,
+    next_id: AtomicU64,
+}
+
+impl OpWaiters {
+    /// Fire-and-remove every waiter parked on `op.name`. Waiters run
+    /// outside the registry lock (they enqueue front-end write jobs or
+    /// send on channels; neither may deadlock against a concurrent
+    /// [`VizierService::watch_operation`]).
+    fn fire(&self, op: &OperationProto) {
+        let waiters = self.map.lock().unwrap().remove(&op.name);
+        if let Some(ws) = waiters {
+            for (_, w) in ws {
+                w(op);
+            }
+        }
+    }
+}
+
+/// Outcome of [`VizierService::watch_operation`].
+pub enum WatchResult {
+    /// Already done — the waiter was dropped unused.
+    Done(OperationProto),
+    /// Armed; the id disarms it via
+    /// [`VizierService::unwatch_operation`] if the caller stops
+    /// listening before completion.
+    Parked(u64),
+}
+
+/// Server-side cap on one `WaitOperation` long-poll; clients chunk
+/// longer waits into successive calls.
+pub const MAX_WAIT_MS: u64 = 60_000;
+/// Long-poll duration when the request leaves `timeout_ms` zero.
+pub const DEFAULT_WAIT_MS: u64 = 20_000;
+
+/// Clamp a requested `WaitOperation` timeout to the server policy.
+pub fn effective_wait_ms(requested_ms: u64) -> u64 {
+    if requested_ms == 0 {
+        DEFAULT_WAIT_MS
+    } else {
+        requested_ms.min(MAX_WAIT_MS)
+    }
+}
+
 /// The OSS Vizier API service.
 pub struct VizierService {
     ds: Arc<dyn Datastore>,
     pythia: Arc<dyn PythiaEndpoint>,
     workers: Mutex<Option<ThreadPool>>,
     coalesce: Mutex<CoalesceState>,
+    waiters: OpWaiters,
     /// When false every suggest operation gets its own policy invocation
     /// (the v1 behaviour, kept as a benchmark baseline).
     coalescing: AtomicBool,
+    /// Set by [`begin_drain`](Self::begin_drain): blocking
+    /// `wait_operation` calls return promptly so front-end threads can
+    /// be joined.
+    draining: AtomicBool,
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -119,7 +189,9 @@ impl VizierService {
             pythia,
             workers: Mutex::new(Some(ThreadPool::new(workers.max(1)))),
             coalesce: Mutex::new(CoalesceState::default()),
+            waiters: OpWaiters::default(),
             coalescing: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
             metrics: Arc::new(ServiceMetrics::new()),
         })
     }
@@ -135,8 +207,19 @@ impl VizierService {
         &self.ds
     }
 
+    /// Unblock threads parked in the blocking [`wait_operation`]
+    /// (legacy / in-process transports) so a front-end teardown can join
+    /// them promptly. Parked pool-mode waits are dropped by the
+    /// front-end itself; deferred completions firing later are no-ops.
+    ///
+    /// [`wait_operation`]: Self::wait_operation
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
     /// Drain in-flight operations and stop the worker pool.
     pub fn shutdown(&self) {
+        self.begin_drain();
         if let Some(pool) = self.workers.lock().unwrap().take() {
             pool.shutdown();
         }
@@ -251,7 +334,10 @@ impl VizierService {
     }
 
     /// Add a persisted suggest operation to its study's pending queue,
-    /// unless it is already queued or in flight.
+    /// unless it is already queued or in flight. Every queue admission
+    /// counts once on the `in_flight_policy_jobs` gauge; the matching
+    /// decrement happens at completion (or at the claim-skip for an
+    /// operation a racing run already finished).
     fn queue_suggest(&self, op_name: &str, study_name: &str) -> bool {
         let state = &mut *self.coalesce.lock().unwrap();
         if state.claimed.contains(op_name) {
@@ -262,7 +348,18 @@ impl VizierService {
             return false;
         }
         q.push(op_name.to_string());
+        self.metrics.inc_in_flight_policy_jobs();
         true
+    }
+
+    /// Persist a finished operation, release its slot on the in-flight
+    /// gauge, and wake every parked `WaitOperation` watcher — the single
+    /// exit point of the operation lifecycle (see `service/mod.rs`).
+    fn complete_operation(&self, op: &OperationProto) {
+        debug_assert!(op.done, "complete_operation on a non-done operation");
+        let _ = self.ds.update_operation(op.clone());
+        self.metrics.dec_in_flight_policy_jobs();
+        self.waiters.fire(op);
     }
 
     /// Serve queued SuggestTrials operations for one study (worker
@@ -327,13 +424,14 @@ impl VizierService {
         };
 
         // Load the claimed operations, skipping any already completed
-        // (e.g. a duplicate resume that raced a live run).
+        // (e.g. a duplicate resume that raced a live run). A skipped
+        // entry still consumed a queue admission, so its gauge slot is
+        // released here.
         let mut ops: Vec<OperationProto> = Vec::with_capacity(batch.len());
         for name in &batch {
-            if let Ok(op) = self.ds.get_operation(name) {
-                if !op.done {
-                    ops.push(op);
-                }
+            match self.ds.get_operation(name) {
+                Ok(op) if !op.done => ops.push(op),
+                _ => self.metrics.dec_in_flight_policy_jobs(),
             }
         }
         if !ops.is_empty() {
@@ -376,7 +474,7 @@ impl VizierService {
                         for op in &mut ops {
                             op.error = delta_err.clone();
                             op.done = true;
-                            let _ = self.ds.update_operation(op.clone());
+                            self.complete_operation(op);
                         }
                         return true;
                     }
@@ -389,7 +487,7 @@ impl VizierService {
                             groups.next().map(|g| g.suggestions).unwrap_or_default();
                         self.register_suggestions(op, suggestions);
                         op.done = true;
-                        let _ = self.ds.update_operation(op.clone());
+                        self.complete_operation(op);
                     }
                 }
                 Err(e) => {
@@ -398,7 +496,7 @@ impl VizierService {
                     for op in &mut ops {
                         op.error = msg.clone();
                         op.done = true;
-                        let _ = self.ds.update_operation(op.clone());
+                        self.complete_operation(op);
                     }
                 }
             }
@@ -467,6 +565,79 @@ impl VizierService {
         })
     }
 
+    /// Arm `waiter` to fire when the operation completes. Returns
+    /// [`WatchResult::Done`] — dropping the waiter unused — when the
+    /// operation is already done, so callers can answer synchronously.
+    ///
+    /// Race-free against completion: the datastore read happens under
+    /// the waiter-registry lock, and the completion path persists `done`
+    /// *before* taking that lock to fire. Whichever order the two
+    /// interleave, the waiter either observes `done` here or is in the
+    /// registry when `fire` runs — a completion can never slip between
+    /// the check and the arm.
+    pub fn watch_operation(&self, name: &str, waiter: OpWaiter) -> ApiResult<WatchResult> {
+        let id = self.waiters.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.waiters.map.lock().unwrap();
+        let op = self.ds.get_operation(name)?;
+        if op.done {
+            return Ok(WatchResult::Done(op));
+        }
+        map.entry(name.to_string()).or_default().push((id, waiter));
+        Ok(WatchResult::Parked(id))
+    }
+
+    /// Disarm a parked waiter whose recipient stopped listening (its
+    /// long-poll timed out), so slow operations do not accumulate stale
+    /// closures that would fire — and skew `wait_wakeup` — at
+    /// completion. A no-op if the waiter already fired.
+    pub fn unwatch_operation(&self, name: &str, id: u64) {
+        let mut map = self.waiters.map.lock().unwrap();
+        if let Some(ws) = map.get_mut(name) {
+            ws.retain(|(wid, _)| *wid != id);
+            if ws.is_empty() {
+                map.remove(name);
+            }
+        }
+    }
+
+    /// Blocking `WaitOperation` (paper §3.2 long-running operations,
+    /// server-side long-poll): park until the operation completes or
+    /// ~`timeout_ms` passes, then return its state either way. Used by
+    /// the in-process transport and the legacy thread-per-connection
+    /// front-end, where a blocked thread is fine; the worker-pool
+    /// front-end serves the same RPC without blocking via
+    /// [`watch_operation`](Self::watch_operation) + deferred responses.
+    pub fn wait_operation(&self, req: WaitOperationRequest) -> ApiResult<OperationResponse> {
+        let (tx, rx) = mpsc::channel::<OperationProto>();
+        let armed = Instant::now();
+        let metrics = Arc::clone(&self.metrics);
+        let waiter: OpWaiter = Box::new(move |op: &OperationProto| {
+            metrics.record_wait_wakeup(armed.elapsed().as_micros() as u64);
+            let _ = tx.send(op.clone());
+        });
+        let waiter_id = match self.watch_operation(&req.name, waiter)? {
+            WatchResult::Done(op) => return Ok(OperationResponse { operation: op }),
+            WatchResult::Parked(id) => id,
+        };
+        // Short recv slices so begin_drain() can reclaim this thread
+        // promptly during shutdown.
+        let deadline = Instant::now() + Duration::from_millis(effective_wait_ms(req.timeout_ms));
+        loop {
+            let now = Instant::now();
+            if now >= deadline || self.draining.load(Ordering::SeqCst) {
+                // Timeout is not an error: report the current state.
+                // Disarm first so the abandoned waiter cannot fire at
+                // completion and skew the wakeup metrics.
+                self.unwatch_operation(&req.name, waiter_id);
+                return Ok(OperationResponse { operation: self.ds.get_operation(&req.name)? });
+            }
+            let slice = (deadline - now).min(Duration::from_millis(250));
+            if let Ok(op) = rx.recv_timeout(slice) {
+                return Ok(OperationResponse { operation: op });
+            }
+        }
+    }
+
     /// Re-enqueue every non-done operation (call at startup; paper §3.2
     /// server-side fault tolerance). Interrupted suggest operations are
     /// pushed back onto their study's queue and re-coalesced — one batch
@@ -492,6 +663,7 @@ impl VizierService {
                 }
                 OperationKind::EarlyStopping => {
                     let name = op.name.clone();
+                    self.metrics.inc_in_flight_policy_jobs();
                     self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
                 }
             }
@@ -567,8 +739,21 @@ impl VizierService {
     // ------------------------------------------------------------------
 
     pub fn list_trials(&self, req: ListTrialsRequest) -> ApiResult<ListTrialsResponse> {
+        if req.page_size == 0 && req.page_token.is_empty() {
+            // v1 behaviour: every trial in one response.
+            return Ok(ListTrialsResponse {
+                trials: self.ds.list_trials(&req.study_name)?,
+                next_page_token: String::new(),
+            });
+        }
+        let page = self.ds.list_trials_page(
+            &req.study_name,
+            req.page_size as usize,
+            &req.page_token,
+        )?;
         Ok(ListTrialsResponse {
-            trials: self.ds.list_trials(&req.study_name)?,
+            trials: page.trials,
+            next_page_token: page.next_page_token,
         })
     }
 
@@ -610,6 +795,31 @@ impl VizierService {
         let optimal = crate::pyvizier::pareto::optimal_trials(&trials, &config.metrics);
         Ok(ListTrialsResponse {
             trials: optimal.iter().map(|t| converters::trial_to_proto(t)).collect(),
+            next_page_token: String::new(),
+        })
+    }
+
+    /// Counter snapshot over an RPC (Pythia v2 follow-up (c)): the
+    /// coalescing ratio, async-dispatch gauges, and front-end occupancy
+    /// without shelling into the server for `ServiceMetrics::report`.
+    pub fn get_service_metrics(
+        &self,
+        _req: GetServiceMetricsRequest,
+    ) -> ApiResult<ServiceMetricsResponse> {
+        let m = &self.metrics;
+        let fe = m.frontend();
+        Ok(ServiceMetricsResponse {
+            policy_runs: m.policy_runs(),
+            suggest_ops_served: m.suggest_ops_served(),
+            in_flight_policy_jobs: m.in_flight_policy_jobs(),
+            errors: m.errors.load(Ordering::Relaxed),
+            wait_wakeups: m.wait_wakeup.count(),
+            wait_wakeup_mean_us: m.wait_wakeup.mean_micros() as u64,
+            active_connections: fe.as_ref().map_or(0, |f| f.active_connections()),
+            parked_responses: fe.as_ref().map_or(0, |f| f.parked_responses()),
+            connections_total: fe.as_ref().map_or(0, |f| f.connections_total()),
+            requests: fe.as_ref().map_or(0, |f| f.requests()),
+            report: m.report(),
         })
     }
 
@@ -680,6 +890,7 @@ impl VizierService {
         })?;
         let name = op.name.clone();
         let config = converters::study_config_from_proto(&study.display_name, &study.spec);
+        self.metrics.inc_in_flight_policy_jobs();
         self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
         Ok(OperationResponse { operation: op })
     }
@@ -687,9 +898,13 @@ impl VizierService {
     fn run_early_stopping_operation(&self, op_name: &str, config: &StudyConfig) {
         use crate::pythia::policy::EarlyStopDecision;
         let Ok(mut op) = self.ds.get_operation(op_name) else {
+            self.metrics.dec_in_flight_policy_jobs();
             return;
         };
         if op.done {
+            // A duplicate resume raced a completed run: release the
+            // gauge slot this job was admitted with.
+            self.metrics.dec_in_flight_policy_jobs();
             return;
         }
         let result: Result<Vec<EarlyStopDecision>, String> = (|| {
@@ -768,6 +983,6 @@ impl VizierService {
             }
         }
         op.done = true;
-        let _ = self.ds.update_operation(op);
+        self.complete_operation(&op);
     }
 }

@@ -8,7 +8,7 @@
 //! per client:
 //!
 //! * One **event-loop thread** (`<name>-io`) owns the listener and every
-//!   idle connection. It blocks in [`crate::util::netpoll::wait_readable`]
+//!   idle connection. It blocks in [`crate::util::netpoll::PollSet::wait`]
 //!   (raw POSIX `poll(2)`, no crates) over all of them plus a
 //!   [`WakePipe`]. Idle or stalled connections park here without a
 //!   thread; partial frames accumulate in a per-connection
@@ -19,30 +19,57 @@
 //!   = one job; a connection is owned by at most one thread at a time, so
 //!   requests on a connection stay sequential (same contract as the old
 //!   per-connection loop).
+//! * **Deferred responses** ([`HandleOutcome::Pending`]): a handler that
+//!   cannot answer yet (a long-poll `WaitOperation` whose operation is
+//!   still running) calls [`RequestContext::defer`], stashes the returned
+//!   [`ResponseHandle`], and returns `Pending`. The worker parks the
+//!   connection in a ticketed registry and moves on; whoever completes
+//!   the handle later (a policy-completion watcher on any thread)
+//!   re-queues the connection with its response bytes. No thread waits.
+//! * **Write-side parking**: a response that hits `WouldBlock` mid-write
+//!   (the client stopped reading) is handed back to the event loop with
+//!   its offset; the loop polls the socket for *writability* and
+//!   re-queues the remainder when the peer drains its window. A slow
+//!   reader costs a parked buffer, never a worker thread.
 //! * **Graceful shutdown** stops the event loop (closing the listener and
 //!   every idle connection), drains queued + in-flight requests up to a
 //!   deadline, then joins all pool threads — no orphaned connection
 //!   threads, unlike the old front-end which leaked its `vizier-conn`
 //!   threads.
 //!
-//! [`FrontendMetrics`] tracks the `active_connections` gauge, queue depth
-//! and queue-wait histogram; the `C-FRONTEND` bench
-//! (`benches/bench_frontend.rs`) drives 1000+ mostly-idle connections
-//! through this module and asserts the thread budget stays at
-//! `workers + 2` (io loop + accept handled by the same thread).
+//! [`FrontendMetrics`] tracks the `active_connections` and
+//! `parked_responses` gauges, queue depth and queue-wait histogram; the
+//! `C-FRONTEND` and `C-ASYNC-DISPATCH` benches drive 1000+ mostly-idle
+//! connections / 3x-oversubscribed policy fleets through this module and
+//! assert the thread budget stays at `workers + 2`.
 
 use crate::service::metrics::FrontendMetrics;
-use crate::util::netpoll::{self, PollSet, WakePipe};
+use crate::util::netpoll::{PollSet, WakePipe, EV_READ, EV_WRITE};
 use crate::wire::framing::{FrameProgress, FrameReader};
+use std::cell::Cell;
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// How the worker should proceed after [`ConnectionHandler::handle`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandleOutcome {
+    /// `out` holds the complete response; keep serving the connection.
+    Reply,
+    /// `out` holds the complete response; close the connection after it
+    /// is flushed (protocol violations).
+    Close,
+    /// No response yet: the handler called [`RequestContext::defer`] and
+    /// will complete the [`ResponseHandle`] later. The connection parks
+    /// without occupying a worker.
+    Pending,
+}
 
 /// Per-connection protocol logic run on worker threads.
 pub trait ConnectionHandler: Send + Sync + 'static {
@@ -53,10 +80,19 @@ pub trait ConnectionHandler: Send + Sync + 'static {
     /// Called on the event-loop thread at accept time — must not block.
     fn on_connect(&self) -> Self::Conn;
 
-    /// Handle one framed request: write the complete response frame into
-    /// `out`. Return `false` to close the connection after `out` is
-    /// flushed (protocol violations), `true` to keep serving it.
-    fn handle(&self, conn: &mut Self::Conn, head: u8, payload: &[u8], out: &mut Vec<u8>) -> bool;
+    /// Handle one framed request. Either write the complete response
+    /// frame into `out` and return [`HandleOutcome::Reply`] /
+    /// [`HandleOutcome::Close`], or call [`RequestContext::defer`] and
+    /// return [`HandleOutcome::Pending`] to answer later without holding
+    /// a worker.
+    fn handle(
+        &self,
+        conn: &mut Self::Conn,
+        head: u8,
+        payload: &[u8],
+        out: &mut Vec<u8>,
+        cx: &RequestContext<'_>,
+    ) -> HandleOutcome;
 }
 
 /// Tuning knobs for a [`FrontendServer`].
@@ -68,11 +104,21 @@ pub struct FrontendOptions {
     pub workers: usize,
     /// Bounded queue capacity. 0 = `workers * 64`. When full, the event
     /// loop applies backpressure by pausing reads (connections stay
-    /// parked, nothing is dropped).
+    /// parked, nothing is dropped). Internal re-queues — deferred
+    /// completions and resumed writes — bypass the cap (they only drain
+    /// already-admitted work).
     pub queue_capacity: usize,
     /// How long shutdown waits for queued + in-flight requests to drain
     /// before abandoning the remainder.
     pub drain: Duration,
+    /// Evict connections that have been idle (no read progress) longer
+    /// than this. `None` = never evict (connections park for free but a
+    /// dead fleet accumulates fds forever).
+    pub idle_timeout: Option<Duration>,
+    /// Refuse new connections once `active_connections` reaches this
+    /// many (0 = unlimited). Refused sockets are accepted and
+    /// immediately closed so the backlog cannot wedge the listener.
+    pub max_connections: usize,
     /// Metrics sink; supply one to share with [`super::metrics::ServiceMetrics`].
     pub metrics: Option<Arc<FrontendMetrics>>,
 }
@@ -84,6 +130,8 @@ impl Default for FrontendOptions {
             workers: 0,
             queue_capacity: 0,
             drain: Duration::from_secs(5),
+            idle_timeout: None,
+            max_connections: 0,
             metrics: None,
         }
     }
@@ -96,8 +144,14 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Hard cap on how long a half-written response may stay parked waiting
+/// for the peer to read (the pre-parking front-end spent this budget
+/// blocking a worker; now it bounds a parked buffer instead).
+const WRITE_CAP: Duration = Duration::from_secs(30);
+
 /// A live connection. Owned by exactly one thread at a time: the event
-/// loop while idle/reading, a worker while a request is in flight.
+/// loop while idle/reading, a worker while a request is in flight, the
+/// parked-response registry while a deferred answer is pending.
 struct Conn<S> {
     stream: TcpStream,
     reader: FrameReader,
@@ -108,20 +162,56 @@ struct Conn<S> {
 impl<S> Drop for Conn<S> {
     fn drop(&mut self) {
         // Closing the socket and decrementing the gauge happen together,
-        // wherever the connection dies (event loop, worker, queue drop).
+        // wherever the connection dies (event loop, worker, queue drop,
+        // parked-registry teardown).
         self.metrics.conn_closed();
     }
 }
 
-/// One ready request: the connection plus its decoded frame.
-struct Job<S> {
+/// A (possibly partially written) response on its way out.
+struct WriteJob<S> {
     conn: Conn<S>,
-    head: u8,
-    payload: Vec<u8>,
-    enqueued: Instant,
+    frame: Vec<u8>,
+    off: usize,
+    /// Re-arm the connection for reading once the frame is flushed?
+    keep: bool,
+    /// Parked writes past this instant are abandoned (connection closed).
+    deadline: Instant,
 }
 
-/// State shared between the event loop, workers, and shutdown.
+/// One unit of worker-pool work.
+enum Job<S> {
+    /// A complete framed request from the event loop.
+    Request { conn: Conn<S>, head: u8, payload: Vec<u8>, enqueued: Instant },
+    /// A response to (continue) writing: a deferred completion, a
+    /// long-poll timeout flush, or a write resumed after the peer
+    /// drained its receive window.
+    Write(WriteJob<S>),
+}
+
+/// Connections returned from workers to the event loop.
+enum Back<S> {
+    /// Served: park for the next request.
+    Read(Conn<S>),
+    /// Response stalled mid-write: park for writability.
+    Write(WriteJob<S>),
+}
+
+/// A ticketed slot for a deferred response. The worker and the completer
+/// race to the slot; whichever arrives second pairs the connection with
+/// its response bytes and re-queues the write.
+enum ParkSlot<S> {
+    /// Ticket reserved by [`RequestContext::defer`]; the worker still
+    /// holds the connection.
+    Reserved { deadline: Option<Instant>, timeout_frame: Vec<u8> },
+    /// Connection parked, waiting for the deferred response.
+    AwaitingResponse { conn: Conn<S>, deadline: Option<Instant>, timeout_frame: Vec<u8> },
+    /// Response arrived before the worker parked the connection.
+    AwaitingConn { frame: Vec<u8>, keep: bool },
+}
+
+/// State shared between the event loop, workers, completers, and
+/// shutdown.
 struct Shared<S> {
     queue: Mutex<VecDeque<Job<S>>>,
     job_ready: Condvar,
@@ -132,6 +222,9 @@ struct Shared<S> {
     /// Set when the drain deadline passes: abort in-flight writes.
     force_abort: AtomicBool,
     active_jobs: AtomicUsize,
+    /// Deferred-response registry (ticket -> slot).
+    slots: Mutex<HashMap<u64, ParkSlot<S>>>,
+    next_ticket: AtomicU64,
     metrics: Arc<FrontendMetrics>,
 }
 
@@ -158,6 +251,109 @@ impl<S> Shared<S> {
         self.job_ready.notify_all();
         self.space_ready.notify_all();
     }
+
+    /// Internal enqueue for deferred completions / resumed writes: no
+    /// capacity check (bounded by the number of admitted connections),
+    /// callable from any thread.
+    fn push_job(&self, job: Job<S>) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back(job);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        drop(q);
+        self.job_ready.notify_one();
+    }
+
+    /// Drop every deferred-response slot (closing parked connections).
+    /// Called at shutdown after the workers have been joined; later
+    /// completions find no slot and are no-ops.
+    fn clear_parked(&self) {
+        let drained: Vec<ParkSlot<S>> =
+            self.slots.lock().unwrap().drain().map(|(_, slot)| slot).collect();
+        for slot in drained {
+            if matches!(slot, ParkSlot::AwaitingResponse { .. }) {
+                self.metrics.parked_dec();
+            }
+        }
+    }
+}
+
+/// Type-erased hooks a worker hands to handlers through
+/// [`RequestContext`] (erased so [`ResponseHandle`] has no generic
+/// parameter and can be stored by service-layer watcher registries).
+#[derive(Clone)]
+struct DeferHooks {
+    reserve: Arc<dyn Fn(Option<Instant>, Vec<u8>) -> u64 + Send + Sync>,
+    /// Returns whether the frame was delivered toward a live ticket
+    /// (false: the ticket timed out / was evicted and the bytes were
+    /// dropped).
+    complete: Arc<dyn Fn(u64, Vec<u8>, bool) -> bool + Send + Sync>,
+    cancel: Arc<dyn Fn(u64) + Send + Sync>,
+}
+
+/// Per-request context given to [`ConnectionHandler::handle`].
+pub struct RequestContext<'a> {
+    hooks: &'a DeferHooks,
+    ticket: Cell<Option<u64>>,
+}
+
+impl RequestContext<'_> {
+    /// Reserve a deferred-response ticket. Returns a [`ResponseHandle`]
+    /// to complete later from any thread; the handler must then return
+    /// [`HandleOutcome::Pending`].
+    ///
+    /// If `deadline` is reached before the handle is completed, the
+    /// event loop answers the parked connection with `timeout_frame`
+    /// (and keeps serving it) — the deferred-response analogue of a
+    /// long-poll timeout. A handle dropped without completing aborts
+    /// the ticket: the parked connection is closed.
+    pub fn defer(&self, deadline: Option<Instant>, timeout_frame: Vec<u8>) -> ResponseHandle {
+        let ticket = (self.hooks.reserve)(deadline, timeout_frame);
+        self.ticket.set(Some(ticket));
+        ResponseHandle {
+            ticket,
+            complete: Some(Arc::clone(&self.hooks.complete)),
+            cancel: Arc::clone(&self.hooks.cancel),
+        }
+    }
+}
+
+/// Completes a deferred response from any thread. Consumed by
+/// [`complete`](Self::complete); dropping it uncompleted aborts the
+/// ticket (closing the parked connection), so a vanished watcher cannot
+/// leak a parked client forever.
+pub struct ResponseHandle {
+    ticket: u64,
+    complete: Option<Arc<dyn Fn(u64, Vec<u8>, bool) -> bool + Send + Sync>>,
+    cancel: Arc<dyn Fn(u64) + Send + Sync>,
+}
+
+impl ResponseHandle {
+    /// Deliver the response frame and keep serving the connection.
+    /// Returns false when the ticket is gone (the long-poll timed out
+    /// or the connection was evicted) and the frame was dropped —
+    /// callers can use this to keep wakeup metrics honest.
+    pub fn complete(mut self, frame: Vec<u8>) -> bool {
+        match self.complete.take() {
+            Some(c) => c(self.ticket, frame, true),
+            None => false,
+        }
+    }
+
+    /// Deliver the response frame, then close the connection.
+    pub fn complete_and_close(mut self, frame: Vec<u8>) -> bool {
+        match self.complete.take() {
+            Some(c) => c(self.ticket, frame, false),
+            None => false,
+        }
+    }
+}
+
+impl Drop for ResponseHandle {
+    fn drop(&mut self) {
+        if self.complete.is_some() {
+            (self.cancel)(self.ticket);
+        }
+    }
 }
 
 /// A running event-loop + worker-pool server. Dropping it performs the
@@ -177,6 +373,7 @@ pub struct FrontendServer {
     pending: Box<dyn Fn() -> usize + Send + Sync>,
     abort_pending: Box<dyn Fn() + Send + Sync>,
     stop_workers: Box<dyn Fn() + Send + Sync>,
+    clear_parked: Box<dyn Fn() + Send + Sync>,
 }
 
 impl FrontendServer {
@@ -205,9 +402,71 @@ impl FrontendServer {
             worker_stop: AtomicBool::new(false),
             force_abort: AtomicBool::new(false),
             active_jobs: AtomicUsize::new(0),
+            slots: Mutex::new(HashMap::new()),
+            next_ticket: AtomicU64::new(1),
             metrics: Arc::clone(&metrics),
         });
-        let (rearm_tx, rearm_rx) = mpsc::channel::<Conn<H::Conn>>();
+        let (rearm_tx, rearm_rx) = mpsc::channel::<Back<H::Conn>>();
+
+        let hooks = {
+            let reserve = {
+                let shared = Arc::clone(&shared);
+                Arc::new(move |deadline, timeout_frame| {
+                    let ticket = shared.next_ticket.fetch_add(1, Ordering::SeqCst);
+                    shared
+                        .slots
+                        .lock()
+                        .unwrap()
+                        .insert(ticket, ParkSlot::Reserved { deadline, timeout_frame });
+                    ticket
+                }) as Arc<dyn Fn(Option<Instant>, Vec<u8>) -> u64 + Send + Sync>
+            };
+            let complete = {
+                let shared = Arc::clone(&shared);
+                Arc::new(move |ticket: u64, frame: Vec<u8>, keep: bool| {
+                    let mut slots = shared.slots.lock().unwrap();
+                    match slots.remove(&ticket) {
+                        Some(ParkSlot::Reserved { .. }) => {
+                            // Completed before the worker parked the
+                            // connection: leave the bytes for it.
+                            slots.insert(ticket, ParkSlot::AwaitingConn { frame, keep });
+                            true
+                        }
+                        Some(ParkSlot::AwaitingResponse { conn, .. }) => {
+                            drop(slots);
+                            shared.metrics.parked_dec();
+                            shared.push_job(Job::Write(WriteJob {
+                                conn,
+                                frame,
+                                off: 0,
+                                keep,
+                                deadline: Instant::now() + WRITE_CAP,
+                            }));
+                            true
+                        }
+                        // Already completed: the first response wins.
+                        Some(other @ ParkSlot::AwaitingConn { .. }) => {
+                            slots.insert(ticket, other);
+                            false
+                        }
+                        // Timed out / evicted / canceled meanwhile:
+                        // drop the bytes.
+                        None => false,
+                    }
+                }) as Arc<dyn Fn(u64, Vec<u8>, bool) -> bool + Send + Sync>
+            };
+            let cancel = {
+                let shared = Arc::clone(&shared);
+                Arc::new(move |ticket: u64| {
+                    let slot = shared.slots.lock().unwrap().remove(&ticket);
+                    if matches!(slot, Some(ParkSlot::AwaitingResponse { .. })) {
+                        shared.metrics.parked_dec();
+                    }
+                    // Dropping an AwaitingResponse slot closes its conn.
+                }) as Arc<dyn Fn(u64) + Send + Sync>
+            };
+            DeferHooks { reserve, complete, cancel }
+        };
 
         // On any partial spawn failure, already-running workers must be
         // stopped and joined — not leaked looping on an orphan queue.
@@ -224,9 +483,10 @@ impl FrontendServer {
                 let shared = Arc::clone(&shared);
                 let tx = rearm_tx.clone();
                 let wake = Arc::clone(&wake);
+                let hooks = hooks.clone();
                 std::thread::Builder::new()
                     .name(format!("{}-w{i}", opts.name))
-                    .spawn(move || worker_loop(handler, shared, tx, wake))
+                    .spawn(move || worker_loop(handler, shared, tx, wake, hooks))
             };
             match spawn {
                 Ok(t) => worker_threads.push(t),
@@ -238,6 +498,10 @@ impl FrontendServer {
         }
         drop(rearm_tx);
 
+        let loop_opts = LoopOptions {
+            idle_timeout: opts.idle_timeout,
+            max_connections: opts.max_connections,
+        };
         let io_spawn = {
             let handler = Arc::clone(&handler);
             let shared = Arc::clone(&shared);
@@ -245,7 +509,7 @@ impl FrontendServer {
             let wake = Arc::clone(&wake);
             let metrics = Arc::clone(&metrics);
             std::thread::Builder::new().name(format!("{}-io", opts.name)).spawn(move || {
-                io_loop(listener, handler, shared, rearm_rx, wake, stop, metrics)
+                io_loop(listener, handler, shared, rearm_rx, wake, stop, metrics, loop_opts)
             })
         };
         let io_thread = match io_spawn {
@@ -258,7 +522,8 @@ impl FrontendServer {
 
         let s1 = Arc::clone(&shared);
         let s2 = Arc::clone(&shared);
-        let s3 = shared;
+        let s3 = Arc::clone(&shared);
+        let s4 = shared;
         Ok(Self {
             addr: local,
             stop,
@@ -271,6 +536,7 @@ impl FrontendServer {
             pending: Box::new(move || s1.pending()),
             abort_pending: Box::new(move || s2.abort_pending()),
             stop_workers: Box::new(move || s3.stop_workers()),
+            clear_parked: Box::new(move || s4.clear_parked()),
         })
     }
 
@@ -284,7 +550,9 @@ impl FrontendServer {
 
     /// Graceful shutdown: stop accepting and reading, drain queued and
     /// in-flight requests up to the drain deadline, then join every pool
-    /// thread. On return no `<name>-io` / `<name>-w*` threads remain.
+    /// thread and drop every parked connection. On return no
+    /// `<name>-io` / `<name>-w*` threads remain; deferred completions
+    /// that fire afterwards are no-ops.
     ///
     /// The deadline bounds queued work and response writes; a handler
     /// blocked inside an unbounded syscall (e.g. a remote read with no
@@ -318,6 +586,7 @@ impl FrontendServer {
         for t in self.worker_threads.drain(..) {
             let _ = t.join();
         }
+        (self.clear_parked)();
     }
 }
 
@@ -327,37 +596,58 @@ impl Drop for FrontendServer {
     }
 }
 
+struct LoopOptions {
+    idle_timeout: Option<Duration>,
+    max_connections: usize,
+}
+
 /// The event loop: accepts, parks idle connections, assembles frames,
-/// and feeds ready requests to the worker queue.
+/// feeds ready requests to the worker queue, re-arms write-parked
+/// responses, and sweeps idle / expired parked state.
+#[allow(clippy::too_many_arguments)]
 fn io_loop<H: ConnectionHandler>(
     listener: TcpListener,
     handler: Arc<H>,
     shared: Arc<Shared<H::Conn>>,
-    rearm_rx: Receiver<Conn<H::Conn>>,
+    rearm_rx: Receiver<Back<H::Conn>>,
     wake: Arc<WakePipe>,
     stop: Arc<AtomicBool>,
     metrics: Arc<FrontendMetrics>,
+    opts: LoopOptions,
 ) {
-    let mut conns: HashMap<u64, Conn<H::Conn>> = HashMap::new();
+    // Read-parked connections (token -> conn + last read progress).
+    let mut conns: HashMap<u64, (Conn<H::Conn>, Instant)> = HashMap::new();
+    // Write-parked responses (token -> half-written job).
+    let mut wparked: HashMap<u64, WriteJob<H::Conn>> = HashMap::new();
     let mut next_token: u64 = 0;
-    let mut fds = Vec::new();
-    let mut toks = Vec::new();
+    let mut entries: Vec<(std::os::unix::io::RawFd, i16)> = Vec::new();
+    let mut rtoks = Vec::new();
+    let mut wtoks = Vec::new();
     let mut pollset = PollSet::new();
-    let mut ready_toks = Vec::new();
-    // The poll timeout is a liveness backstop only (stop flags and
-    // re-arms arrive via the wake pipe); idle servers sit in poll.
+    let mut ready_read = Vec::new();
+    let mut ready_write = Vec::new();
+    // The poll timeout is a liveness backstop and the sweep cadence
+    // (idle eviction, parked-response deadlines); stop flags and re-arms
+    // arrive via the wake pipe.
     const POLL_MS: i32 = 250;
+    let mut last_sweep = Instant::now();
 
     while !stop.load(Ordering::SeqCst) {
-        fds.clear();
-        toks.clear();
-        fds.push(wake.read_fd());
-        fds.push(listener.as_raw_fd());
-        for (&tok, c) in conns.iter() {
-            fds.push(c.stream.as_raw_fd());
-            toks.push(tok);
+        entries.clear();
+        rtoks.clear();
+        wtoks.clear();
+        entries.push((wake.read_fd(), EV_READ));
+        entries.push((listener.as_raw_fd(), EV_READ));
+        for (&tok, (c, _)) in conns.iter() {
+            entries.push((c.stream.as_raw_fd(), EV_READ));
+            rtoks.push(tok);
         }
-        let ready = match pollset.wait_readable(&fds, POLL_MS) {
+        let wbase = entries.len();
+        for (&tok, wj) in wparked.iter() {
+            entries.push((wj.conn.stream.as_raw_fd(), EV_WRITE));
+            wtoks.push(tok);
+        }
+        let ready = match pollset.wait(&entries, POLL_MS) {
             Ok(r) => r,
             Err(_) => {
                 // A persistent poll error (EBADF after an fd race, etc.)
@@ -371,20 +661,30 @@ fn io_loop<H: ConnectionHandler>(
         }
 
         let mut accept_ready = false;
-        ready_toks.clear();
+        ready_read.clear();
+        ready_write.clear();
         for &idx in ready {
             match idx {
                 0 => wake.drain(),
                 1 => accept_ready = true,
-                n => ready_toks.push(toks[n - 2]),
+                n if n < wbase => ready_read.push(rtoks[n - 2]),
+                n => ready_write.push(wtoks[n - wbase]),
             }
         }
 
-        // Reclaim connections whose request a worker just finished. Any
+        // Reclaim connections whose request a worker just finished (any
         // bytes the client pipelined meanwhile are still in the kernel
-        // buffer and will show up in the next poll.
-        while let Ok(conn) = rearm_rx.try_recv() {
-            conns.insert(next_token, conn);
+        // buffer and will show up in the next poll), and responses that
+        // stalled mid-write.
+        while let Ok(back) = rearm_rx.try_recv() {
+            match back {
+                Back::Read(conn) => {
+                    conns.insert(next_token, (conn, Instant::now()));
+                }
+                Back::Write(wj) => {
+                    wparked.insert(next_token, wj);
+                }
+            }
             next_token += 1;
         }
 
@@ -392,17 +692,29 @@ fn io_loop<H: ConnectionHandler>(
             loop {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        if opts.max_connections > 0
+                            && metrics.active_connections() >= opts.max_connections as u64
+                        {
+                            // Over the cap: accept (to clear the
+                            // backlog) and close immediately.
+                            metrics.connection_refused();
+                            drop(stream);
+                            continue;
+                        }
                         let _ = stream.set_nonblocking(true);
                         let _ = stream.set_nodelay(true);
                         metrics.conn_opened();
                         conns.insert(
                             next_token,
-                            Conn {
-                                stream,
-                                reader: FrameReader::new(),
-                                state: handler.on_connect(),
-                                metrics: Arc::clone(&metrics),
-                            },
+                            (
+                                Conn {
+                                    stream,
+                                    reader: FrameReader::new(),
+                                    state: handler.on_connect(),
+                                    metrics: Arc::clone(&metrics),
+                                },
+                                Instant::now(),
+                            ),
                         );
                         next_token += 1;
                     }
@@ -432,14 +744,15 @@ fn io_loop<H: ConnectionHandler>(
             }
         }
 
-        for &tok in &ready_toks {
+        for &tok in &ready_read {
             let mut outcome = None;
-            if let Some(conn) = conns.get_mut(&tok) {
+            if let Some((conn, last)) = conns.get_mut(&tok) {
+                *last = Instant::now();
                 outcome = Some(conn.reader.poll_frame(&mut conn.stream));
             }
             match outcome {
                 Some(Ok(FrameProgress::Frame(head, payload))) => {
-                    let conn = conns.remove(&tok).expect("conn present");
+                    let (conn, _) = conns.remove(&tok).expect("conn present");
                     enqueue(&shared, &stop, conn, head, payload);
                 }
                 // Mid-frame stall: the connection keeps waiting here in
@@ -453,11 +766,88 @@ fn io_loop<H: ConnectionHandler>(
                 None => {}
             }
         }
+
+        // The peer drained its window (or hung up — the write observes
+        // which): hand the remainder back to a worker.
+        for &tok in &ready_write {
+            if let Some(wj) = wparked.remove(&tok) {
+                metrics.parked_dec();
+                shared.push_job(Job::Write(wj));
+            }
+        }
+
+        // Sweeps. Readiness events can wake the loop far more often
+        // than POLL_MS; throttle to the intended cadence so a busy
+        // server does not pay an O(connections + parked) scan — and the
+        // slots-lock hold contending with completion wakeups — per
+        // event.
+        if last_sweep.elapsed() >= Duration::from_millis(POLL_MS as u64) {
+            last_sweep = Instant::now();
+            if let Some(idle) = opts.idle_timeout {
+                let now = Instant::now();
+                conns.retain(|_, (_, last)| {
+                    let keep = now.duration_since(*last) <= idle;
+                    if !keep {
+                        metrics.idle_eviction();
+                    }
+                    keep
+                });
+            }
+            if !wparked.is_empty() {
+                let now = Instant::now();
+                wparked.retain(|_, wj| {
+                    let keep = now < wj.deadline;
+                    if !keep {
+                        metrics.idle_eviction();
+                        metrics.parked_dec();
+                    }
+                    keep
+                });
+            }
+            sweep_parked_deadlines(&shared);
+        }
     }
-    // Shutdown: dropping the map actively closes every idle connection;
-    // queued/in-flight requests are drained by FrontendServer::shutdown.
+    // Shutdown: dropping the maps actively closes every idle connection
+    // and abandons half-written responses; queued/in-flight requests are
+    // drained by FrontendServer::shutdown, parked deferred responses are
+    // dropped by its clear_parked step.
     drop(conns);
+    drop(wparked);
     drop(listener);
+}
+
+/// Answer every deferred response whose long-poll deadline has passed
+/// with its prepared timeout frame (the connection survives; the late
+/// completion becomes a no-op).
+fn sweep_parked_deadlines<S>(shared: &Arc<Shared<S>>) {
+    let now = Instant::now();
+    let mut due: Vec<(Conn<S>, Vec<u8>)> = Vec::new();
+    {
+        let mut slots = shared.slots.lock().unwrap();
+        let expired: Vec<u64> = slots
+            .iter()
+            .filter_map(|(&t, slot)| match slot {
+                ParkSlot::AwaitingResponse { deadline: Some(d), .. } if now >= *d => Some(t),
+                _ => None,
+            })
+            .collect();
+        for t in expired {
+            if let Some(ParkSlot::AwaitingResponse { conn, timeout_frame, .. }) = slots.remove(&t)
+            {
+                due.push((conn, timeout_frame));
+            }
+        }
+    }
+    for (conn, frame) in due {
+        shared.metrics.parked_dec();
+        shared.push_job(Job::Write(WriteJob {
+            conn,
+            frame,
+            off: 0,
+            keep: true,
+            deadline: now + WRITE_CAP,
+        }));
+    }
 }
 
 /// Push a ready request onto the bounded queue, applying backpressure
@@ -478,19 +868,20 @@ fn enqueue<S>(
             shared.space_ready.wait_timeout(q, Duration::from_millis(100)).unwrap();
         q = guard;
     }
-    q.push_back(Job { conn, head, payload, enqueued: Instant::now() });
+    q.push_back(Job::Request { conn, head, payload, enqueued: Instant::now() });
     shared.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
     drop(q);
     shared.job_ready.notify_one();
 }
 
-/// Worker: pop a ready request, run the handler, write the response,
+/// Worker: pop a unit of work, run the handler / continue the write,
 /// return the connection to the event loop.
 fn worker_loop<H: ConnectionHandler>(
     handler: Arc<H>,
     shared: Arc<Shared<H::Conn>>,
-    rearm_tx: Sender<Conn<H::Conn>>,
+    rearm_tx: Sender<Back<H::Conn>>,
     wake: Arc<WakePipe>,
+    hooks: DeferHooks,
 ) {
     loop {
         let job = {
@@ -512,62 +903,135 @@ fn worker_loop<H: ConnectionHandler>(
                 q = guard;
             }
         };
-        let Some(mut job) = job else { break };
+        let Some(job) = job else { break };
         shared.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         shared.space_ready.notify_one();
-        shared.metrics.queue_wait.record(job.enqueued.elapsed().as_micros() as u64);
-        shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
 
-        let mut out = Vec::new();
-        // A panicking handler must not shrink the pool: treat it as a
-        // connection-fatal error and keep the worker alive.
-        let keep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            handler.handle(&mut job.conn.state, job.head, &job.payload, &mut out)
-        }))
-        .unwrap_or(false);
-        let sent = write_response(&mut job.conn.stream, &out, &shared);
+        match job {
+            Job::Request { mut conn, head, payload, enqueued } => {
+                shared.metrics.queue_wait.record(enqueued.elapsed().as_micros() as u64);
+                shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let mut out = Vec::new();
+                let cx = RequestContext { hooks: &hooks, ticket: Cell::new(None) };
+                // A panicking handler must not shrink the pool: treat it
+                // as a connection-fatal error and keep the worker alive.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    handler.handle(&mut conn.state, head, &payload, &mut out, &cx)
+                }))
+                .unwrap_or(HandleOutcome::Close);
+                let ticket = cx.ticket.get();
+                match outcome {
+                    HandleOutcome::Pending => match ticket {
+                        Some(t) => park_deferred(&shared, &rearm_tx, &wake, conn, t),
+                        // Pending without a defer() is a handler bug:
+                        // there is no way to ever answer — close.
+                        None => drop(conn),
+                    },
+                    reply => {
+                        if let Some(t) = ticket {
+                            // Replied despite reserving a ticket: void
+                            // it so a late completion is a no-op.
+                            (hooks.cancel)(t);
+                        }
+                        let keep = reply == HandleOutcome::Reply;
+                        finish_write(
+                            &shared,
+                            &rearm_tx,
+                            &wake,
+                            WriteJob {
+                                conn,
+                                frame: out,
+                                off: 0,
+                                keep,
+                                deadline: Instant::now() + WRITE_CAP,
+                            },
+                        );
+                    }
+                }
+            }
+            Job::Write(wj) => finish_write(&shared, &rearm_tx, &wake, wj),
+        }
 
         shared.active_jobs.fetch_sub(1, Ordering::SeqCst);
-        if keep && sent {
-            // Hand the connection back; if the event loop is gone
-            // (shutdown) the send fails and the connection just closes.
-            if rearm_tx.send(job.conn).is_ok() {
-                wake.wake();
-            }
-        }
     }
 }
 
-/// Write the full response to a non-blocking socket, parking in
-/// `poll(2)` on `WouldBlock`. Bounded by a hard cap and the shutdown
-/// force-abort flag so a dead peer cannot wedge a worker forever.
-///
-/// Known limit: the no-worker-pinning guarantee covers the *read* side
-/// only. A client that sends requests but stops reading large responses
-/// can hold a worker here for up to `WRITE_CAP`; parking half-written
-/// responses back in the event loop (a write-side state machine) is the
-/// ROADMAP follow-on that closes this.
-fn write_response<S>(stream: &mut TcpStream, buf: &[u8], shared: &Shared<S>) -> bool {
-    const WRITE_CAP: Duration = Duration::from_secs(30);
-    let deadline = Instant::now() + WRITE_CAP;
-    let mut off = 0;
-    while off < buf.len() {
-        match stream.write(&buf[off..]) {
-            Ok(0) => return false,
-            Ok(n) => off += n,
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if shared.force_abort.load(Ordering::SeqCst) || Instant::now() >= deadline {
-                    return false;
-                }
-                if netpoll::wait_writable(stream.as_raw_fd(), 100).is_err() {
-                    return false;
+/// Park a connection whose handler deferred its response — unless the
+/// completion already raced ahead, in which case write it now.
+fn park_deferred<S: Send + 'static>(
+    shared: &Arc<Shared<S>>,
+    rearm_tx: &Sender<Back<S>>,
+    wake: &Arc<WakePipe>,
+    conn: Conn<S>,
+    ticket: u64,
+) {
+    let mut slots = shared.slots.lock().unwrap();
+    match slots.remove(&ticket) {
+        Some(ParkSlot::Reserved { deadline, timeout_frame }) => {
+            slots.insert(ticket, ParkSlot::AwaitingResponse { conn, deadline, timeout_frame });
+            // Gauge inc under the slots lock: a completer that takes the
+            // slot the moment the lock drops runs its (saturating) dec
+            // strictly after this inc, so the gauge cannot drift.
+            shared.metrics.parked_inc();
+            drop(slots);
+        }
+        Some(ParkSlot::AwaitingConn { frame, keep }) => {
+            drop(slots);
+            finish_write(
+                shared,
+                rearm_tx,
+                wake,
+                WriteJob { conn, frame, off: 0, keep, deadline: Instant::now() + WRITE_CAP },
+            );
+        }
+        // Canceled (watcher dropped) before the connection parked: no
+        // response can ever arrive — close.
+        _ => drop(conn),
+    }
+}
+
+/// Write as much of the response as the socket accepts. On completion
+/// the connection re-arms for reading (if `keep`); on `WouldBlock` it
+/// parks in the event loop for writability — the worker never waits.
+fn finish_write<S>(
+    shared: &Arc<Shared<S>>,
+    rearm_tx: &Sender<Back<S>>,
+    wake: &Arc<WakePipe>,
+    mut wj: WriteJob<S>,
+) {
+    loop {
+        if wj.off >= wj.frame.len() {
+            if wj.keep {
+                // Hand the connection back; if the event loop is gone
+                // (shutdown) the send fails and the connection closes.
+                if rearm_tx.send(Back::Read(wj.conn)).is_ok() {
+                    wake.wake();
                 }
             }
+            return;
+        }
+        match wj.conn.stream.write(&wj.frame[wj.off..]) {
+            Ok(0) => return, // peer gone: drop the connection
+            Ok(n) => wj.off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shared.force_abort.load(Ordering::SeqCst) || Instant::now() >= wj.deadline {
+                    return;
+                }
+                // Park the half-written response in the event loop
+                // (ROADMAP follow-on (c)): a client that stopped
+                // reading costs a buffer, not a worker.
+                shared.metrics.parked_inc();
+                if rearm_tx.send(Back::Write(wj)).is_ok() {
+                    wake.wake();
+                } else {
+                    shared.metrics.parked_dec();
+                }
+                return;
+            }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(_) => return false,
+            Err(_) => return,
         }
     }
-    true
 }
 
 #[cfg(test)]
@@ -586,14 +1050,21 @@ mod tests {
         fn on_connect(&self) -> u64 {
             0
         }
-        fn handle(&self, served: &mut u64, head: u8, _payload: &[u8], out: &mut Vec<u8>) -> bool {
+        fn handle(
+            &self,
+            served: &mut u64,
+            head: u8,
+            _payload: &[u8],
+            out: &mut Vec<u8>,
+            _cx: &RequestContext<'_>,
+        ) -> HandleOutcome {
             *served += 1;
             if head == Method::Ping as u8 {
                 let _ = write_ok(out, &EmptyResponse::default());
-                true
+                HandleOutcome::Reply
             } else {
                 let _ = write_err(out, Status::InvalidArgument, "bad method");
-                false
+                HandleOutcome::Close
             }
         }
     }
@@ -644,7 +1115,7 @@ mod tests {
             err,
             crate::wire::framing::FrameError::Rpc { status: Status::InvalidArgument, .. }
         ));
-        // The handler returned false: the server closes `bad` and the
+        // The handler returned Close: the server closes `bad` and the
         // gauge drops back to 1.
         let deadline = Instant::now() + Duration::from_secs(5);
         while server.metrics().active_connections() != 1 {
@@ -652,6 +1123,181 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         ping(&mut good); // the survivor still works
+        server.shutdown();
+    }
+
+    /// A handler that defers every Ping and completes it from a helper
+    /// thread after a short delay — the deferred-response plumbing end
+    /// to end, including the parked_responses gauge.
+    struct DeferredPing {
+        delay: Duration,
+        /// Long-poll deadline given to defer(); None = no timeout.
+        deadline_in: Option<Duration>,
+        /// Complete at all? false exercises the timeout path.
+        complete: bool,
+    }
+
+    impl ConnectionHandler for DeferredPing {
+        type Conn = ();
+        fn on_connect(&self) {}
+        fn handle(
+            &self,
+            _state: &mut (),
+            _head: u8,
+            _payload: &[u8],
+            _out: &mut Vec<u8>,
+            cx: &RequestContext<'_>,
+        ) -> HandleOutcome {
+            let mut timeout_frame = Vec::new();
+            let _ = write_err(&mut timeout_frame, Status::Unimplemented, "timed out");
+            let deadline = self.deadline_in.map(|d| Instant::now() + d);
+            let handle = cx.defer(deadline, timeout_frame);
+            if self.complete {
+                let delay = self.delay;
+                std::thread::spawn(move || {
+                    std::thread::sleep(delay);
+                    let mut frame = Vec::new();
+                    let _ = write_ok(&mut frame, &EmptyResponse::default());
+                    handle.complete(frame);
+                });
+            } else {
+                // Dropping the handle here would abort the ticket and
+                // close the client; hold it past the deadline instead.
+                let delay = self.delay;
+                std::thread::spawn(move || {
+                    std::thread::sleep(delay);
+                    drop(handle);
+                });
+            }
+            HandleOutcome::Pending
+        }
+    }
+
+    #[test]
+    fn deferred_response_wakes_parked_connection() {
+        let server = FrontendServer::start(
+            DeferredPing {
+                delay: Duration::from_millis(120),
+                deadline_in: None,
+                complete: true,
+            },
+            "127.0.0.1:0",
+            FrontendOptions { name: "fe-defer", workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        // Two clients park concurrently on the single worker: deferral
+        // must free it between them.
+        let mut a = TcpStream::connect(addr).unwrap();
+        let mut b = TcpStream::connect(addr).unwrap();
+        write_request(&mut a, Method::Ping, &EmptyResponse::default()).unwrap();
+        write_request(&mut b, Method::Ping, &EmptyResponse::default()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.metrics().parked_responses() < 2 {
+            assert!(Instant::now() < deadline, "responses never parked");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let mut rb = BufReader::new(b.try_clone().unwrap());
+        let _: EmptyResponse = read_response(&mut ra).unwrap();
+        let _: EmptyResponse = read_response(&mut rb).unwrap();
+        assert_eq!(server.metrics().parked_responses(), 0);
+        // The connections survive and serve the next (deferred) request.
+        write_request(&mut a, Method::Ping, &EmptyResponse::default()).unwrap();
+        let _: EmptyResponse = read_response(&mut ra).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn deferred_deadline_answers_with_timeout_frame() {
+        let server = FrontendServer::start(
+            DeferredPing {
+                delay: Duration::from_secs(2),
+                deadline_in: Some(Duration::from_millis(50)),
+                complete: false,
+            },
+            "127.0.0.1:0",
+            FrontendOptions { name: "fe-dtime", workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write_request(&mut c, Method::Ping, &EmptyResponse::default()).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        // The sweep (<= 250ms cadence) answers with the timeout frame
+        // long before the 2s never-completing handle resolves.
+        let err = read_response::<_, EmptyResponse>(&mut r).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::wire::framing::FrameError::Rpc { status: Status::Unimplemented, .. }
+        ));
+        server.shutdown();
+    }
+
+    #[test]
+    fn max_connections_refuses_excess() {
+        let server = FrontendServer::start(
+            PingHandler,
+            "127.0.0.1:0",
+            FrontendOptions {
+                name: "fe-cap",
+                workers: 1,
+                max_connections: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let mut a = TcpStream::connect(addr).unwrap();
+        let mut b = TcpStream::connect(addr).unwrap();
+        ping(&mut a);
+        ping(&mut b);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // The refused socket is closed without a response.
+        let mut buf = [0u8; 1];
+        use std::io::Read as _;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match c.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => panic!("refused connection received bytes"),
+                Err(_) => assert!(Instant::now() < deadline, "refused conn never closed"),
+            }
+        }
+        assert_eq!(server.metrics().connections_refused(), 1);
+        assert_eq!(server.metrics().active_connections(), 2);
+        ping(&mut a); // survivors unaffected
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_timeout_evicts_parked_connections() {
+        let server = FrontendServer::start(
+            PingHandler,
+            "127.0.0.1:0",
+            FrontendOptions {
+                name: "fe-idle",
+                workers: 1,
+                idle_timeout: Some(Duration::from_millis(200)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let mut idle = TcpStream::connect(addr).unwrap();
+        ping(&mut idle);
+        assert_eq!(server.metrics().active_connections(), 1);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics().active_connections() != 0 {
+            assert!(Instant::now() < deadline, "idle connection never evicted");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(server.metrics().idle_evictions() >= 1);
+        // A fresh connection still works.
+        let mut fresh = TcpStream::connect(addr).unwrap();
+        ping(&mut fresh);
         server.shutdown();
     }
 }

@@ -74,6 +74,17 @@ pub struct FrontendMetrics {
     /// Time a ready request waited in the queue before a worker picked it
     /// up (enqueue -> dequeue), in microseconds. Pool mode only.
     pub queue_wait: Histogram,
+    /// Connections currently parked with a response in flight — either
+    /// awaiting a deferred handler completion (a long-poll
+    /// `WaitOperation`) or holding a half-written response until the
+    /// peer drains its receive window. Gauge; pool mode only.
+    pub parked_responses: AtomicU64,
+    /// Connections evicted by the idle timeout or the write-park
+    /// deadline (monotonic; pool mode only).
+    pub idle_evictions: AtomicU64,
+    /// Connections refused because `max_connections` was reached
+    /// (monotonic; pool mode only).
+    pub connections_refused: AtomicU64,
 }
 
 impl FrontendMetrics {
@@ -102,14 +113,50 @@ impl FrontendMetrics {
         self.requests.load(Ordering::Relaxed)
     }
 
+    pub fn parked_inc(&self) {
+        self.parked_responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: a racy double-unpark must not wrap the
+    /// gauge to u64::MAX.
+    pub fn parked_dec(&self) {
+        let _ = self
+            .parked_responses
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    pub fn parked_responses(&self) -> u64 {
+        self.parked_responses.load(Ordering::Relaxed)
+    }
+
+    pub fn idle_eviction(&self) {
+        self.idle_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn idle_evictions(&self) -> u64 {
+        self.idle_evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn connection_refused(&self) {
+        self.connections_refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn connections_refused(&self) -> u64 {
+        self.connections_refused.load(Ordering::Relaxed)
+    }
+
     /// Render a plain-text report fragment.
     pub fn report(&self) -> String {
         format!(
-            "frontend: {} active / {} total connections, queue depth {}, \
+            "frontend: {} active / {} total connections ({} refused, {} evicted), \
+             queue depth {}, {} parked responses, \
              {} requests (queue wait mean {:.1} us, p99 {} us)\n",
             self.active_connections(),
             self.connections_total(),
+            self.connections_refused(),
+            self.idle_evictions(),
             self.queue_depth(),
+            self.parked_responses(),
             self.requests(),
             self.queue_wait.mean_micros(),
             self.queue_wait.quantile_micros(0.99),
@@ -127,6 +174,14 @@ pub struct ServiceMetrics {
     /// Suggest operations served by those invocations. With per-study
     /// coalescing under load, `policy_runs < suggest_ops_served`.
     pub suggest_ops_served: AtomicU64,
+    /// Suggest / early-stopping operations accepted but not yet
+    /// completed — queued behind the coalescer, waiting for a policy
+    /// worker, or mid-policy-run. Gauge; with async dispatch this can
+    /// exceed the policy-worker count by orders of magnitude.
+    pub in_flight_policy_jobs: AtomicU64,
+    /// Latency from a client parking in `WaitOperation` to its watcher
+    /// firing at operation completion, in microseconds.
+    pub wait_wakeup: Histogram,
     /// Front-end metrics, linked by the TCP server at start so
     /// [`ServiceMetrics::report`] covers the whole stack.
     frontend: Mutex<Option<std::sync::Arc<FrontendMetrics>>>,
@@ -166,6 +221,26 @@ impl ServiceMetrics {
         self.suggest_ops_served.load(Ordering::Relaxed)
     }
 
+    pub fn inc_in_flight_policy_jobs(&self) {
+        self.in_flight_policy_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (a duplicate completion during crash-resume
+    /// races must not wrap the gauge).
+    pub fn dec_in_flight_policy_jobs(&self) {
+        let _ = self
+            .in_flight_policy_jobs
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    pub fn in_flight_policy_jobs(&self) -> u64 {
+        self.in_flight_policy_jobs.load(Ordering::Relaxed)
+    }
+
+    pub fn record_wait_wakeup(&self, micros: u64) {
+        self.wait_wakeup.record(micros);
+    }
+
     /// Attach the front-end's metrics (called by the TCP server).
     pub fn set_frontend(&self, fe: std::sync::Arc<FrontendMetrics>) {
         *self.frontend.lock().unwrap() = Some(fe);
@@ -190,9 +265,16 @@ impl ServiceMetrics {
         }
         out.push_str(&format!("errors: {}\n", self.errors.load(Ordering::Relaxed)));
         out.push_str(&format!(
-            "policy runs: {} (serving {} suggest ops)\n",
+            "policy runs: {} (serving {} suggest ops), {} in flight\n",
             self.policy_runs(),
-            self.suggest_ops_served()
+            self.suggest_ops_served(),
+            self.in_flight_policy_jobs(),
+        ));
+        out.push_str(&format!(
+            "wait wakeups: {} (mean {:.1} us, p99 {} us)\n",
+            self.wait_wakeup.count(),
+            self.wait_wakeup.mean_micros(),
+            self.wait_wakeup.quantile_micros(0.99),
         ));
         if let Some(fe) = self.frontend() {
             out.push_str(&fe.report());

@@ -33,6 +33,60 @@
 //! `workers + 2` thread budget at no loss of hot-path throughput.
 //! [`metrics::FrontendMetrics`] exposes the `active_connections` gauge,
 //! queue depth, and queue-wait histogram for either mode.
+//!
+//! # Operation lifecycle: the completion-driven async core
+//!
+//! The paper's central reliability mechanism is the durable long-running
+//! operation (§3.2). End to end, one suggest operation moves through a
+//! small state machine with **no thread ever blocked on another layer's
+//! progress**:
+//!
+//! ```text
+//!              SuggestTrials RPC
+//!                     |
+//!                     v            persisted first (durability), then
+//!   [PENDING] --- created in ds ---+--> study queue  [QUEUED]
+//!                                          |
+//!                 batch runner claims the whole queue (one GP fit
+//!                 serves K queued operations — Pythia v2 coalescing)
+//!                                          |
+//!                                          v
+//!                                      [CLAIMED] --- policy runs
+//!                                          |
+//!           decision + metadata delta persisted, trials registered
+//!                                          |
+//!                                          v
+//!        [DONE] --- complete_operation: update ds, drop in-flight
+//!                   gauge, fire OpWaiters watchers
+//! ```
+//!
+//! * **Dispatch never blocks.** `suggest_trials` returns after the
+//!   `[PENDING]`->`[QUEUED]` step; the front-end worker that carried the
+//!   RPC is free immediately. The policy pool (`--policy-workers`)
+//!   bounds concurrent *policy executions*, not accepted operations —
+//!   one process holds arbitrarily many `[QUEUED]` operations.
+//! * **Completion is push, not poll.** `WaitOperation` long-polls
+//!   server-side: the pool front-end defers the response
+//!   ([`frontend::HandleOutcome::Pending`]), parks the connection, and
+//!   the `complete_operation` watcher wakeup re-queues it through the
+//!   event loop's self-pipe — one round-trip per completion instead of
+//!   a `GetOperation` busy-poll stream. Clients fall back to polling
+//!   with capped backoff on servers that predate the RPC.
+//! * **Crash-resume re-arms the same path.** After a restart,
+//!   `resume_pending_operations` pushes interrupted operations back to
+//!   `[QUEUED]`; they complete through `complete_operation` like live
+//!   ones, so a client re-attaching with `WaitOperation` wakes exactly
+//!   as if the crash had not happened.
+//! * **Writes park too.** A response that hits `WouldBlock` (slow
+//!   reader, including a large `ListTrials` page) parks back in the
+//!   event loop for *writability* instead of pinning a worker in a
+//!   write loop. `parked_responses` gauges both forms of parking.
+//!
+//! `benches/bench_async_dispatch.rs` (C-ASYNC-DISPATCH) holds `> 3x`
+//! the policy-worker count of in-flight suggest operations on one
+//! server, with every waiting client parked and the front-end at its
+//! `workers + 2` thread budget, then asserts each client completes in a
+//! single `WaitOperation` round-trip with zero `GetOperation` traffic.
 
 pub mod api;
 pub mod frontend;

@@ -21,7 +21,9 @@ use crate::pythia::policy::{
 use crate::pythia::runner::{PolicyRegistry, PythiaEndpoint};
 use crate::pythia::supporter::PolicySupporter;
 use crate::pyvizier::{converters, Metadata, StudyConfig, Trial, TrialSuggestion};
-use crate::service::frontend::{ConnectionHandler, FrontendOptions, FrontendServer};
+use crate::service::frontend::{
+    ConnectionHandler, FrontendOptions, FrontendServer, HandleOutcome, RequestContext,
+};
 use crate::service::metrics::FrontendMetrics;
 use crate::wire::codec::{Reader, WireError, WireMessage, Writer};
 use crate::wire::framing::{write_err, write_ok, FrameError, Method, Status};
@@ -207,6 +209,12 @@ impl WireMessage for PythiaEarlyStopResponse {
 // RemoteSupporter: datastore reads through the API server
 // ---------------------------------------------------------------------------
 
+/// Default read timeout for datastore RPCs back to the API server: an
+/// API server that vanished mid-read must not stall a policy run (and
+/// with it a `pythia-fe` worker) past any reasonable drain deadline
+/// (ROADMAP front-end follow-on (d)).
+pub const SUPPORTER_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// PolicySupporter backed by API-server RPCs (used inside the Pythia
 /// process — it has no datastore of its own).
 pub struct RemoteSupporter {
@@ -215,8 +223,20 @@ pub struct RemoteSupporter {
 
 impl RemoteSupporter {
     pub fn connect(api_addr: &str) -> Result<Self, FrameError> {
+        Self::connect_with_read_timeout(api_addr, Some(SUPPORTER_READ_TIMEOUT))
+    }
+
+    /// Connect with an explicit read timeout (`None` = block forever,
+    /// the pre-timeout behaviour).
+    pub fn connect_with_read_timeout(
+        api_addr: &str,
+        read_timeout: Option<Duration>,
+    ) -> Result<Self, FrameError> {
         Ok(Self {
-            transport: Mutex::new(Box::new(TcpTransport::connect(api_addr)?)),
+            transport: Mutex::new(Box::new(TcpTransport::connect_with_read_timeout(
+                api_addr,
+                read_timeout,
+            )?)),
         })
     }
 
@@ -249,6 +269,7 @@ impl PolicySupporter for RemoteSupporter {
             Method::ListTrials,
             &ListTrialsRequest {
                 study_name: study_name.to_string(),
+                ..Default::default()
             },
         )?;
         Ok(filter
@@ -318,6 +339,7 @@ impl PolicySupporter for RemoteSupporter {
             Method::ListTrials,
             &ListTrialsRequest {
                 study_name: study_name.to_string(),
+                ..Default::default()
             },
         )?;
         Ok(resp.trials.len())
@@ -406,7 +428,8 @@ impl ConnectionHandler for PythiaHandler {
         head: u8,
         payload: &[u8],
         out: &mut Vec<u8>,
-    ) -> bool {
+        _cx: &RequestContext<'_>,
+    ) -> HandleOutcome {
         let result = match head {
             M_SUGGEST | M_EARLY_STOP => {
                 if supporter.is_none() {
@@ -418,7 +441,7 @@ impl ConnectionHandler for PythiaHandler {
                                 Status::Internal,
                                 &format!("api server connect: {e}"),
                             );
-                            return false;
+                            return HandleOutcome::Close;
                         }
                     }
                 }
@@ -431,7 +454,11 @@ impl ConnectionHandler for PythiaHandler {
             }
             other => write_err(out, Status::Unimplemented, &format!("method {other}")),
         };
-        result.is_ok()
+        if result.is_ok() {
+            HandleOutcome::Reply
+        } else {
+            HandleOutcome::Close
+        }
     }
 }
 
@@ -531,9 +558,18 @@ fn suggestion_to_proto(s: &TrialSuggestion) -> TrialProto {
 // RemotePythia: the API server's endpoint that forwards to PythiaServer
 // ---------------------------------------------------------------------------
 
+/// Default read timeout for policy RPCs to the Pythia server: generous
+/// enough for a slow GP fit, but bounded — a Pythia process that
+/// vanished mid-run must not pin an API-server policy job forever
+/// (ROADMAP front-end follow-on (d)). Override with
+/// [`RemotePythia::with_read_timeout`] for policies that legitimately
+/// run longer.
+pub const PYTHIA_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
 /// PythiaEndpoint that forwards operations to a remote Pythia server.
 pub struct RemotePythia {
     addr: String,
+    read_timeout: Option<Duration>,
     conn: Mutex<Option<(BufReader<TcpStream>, BufWriter<TcpStream>)>>,
 }
 
@@ -541,8 +577,15 @@ impl RemotePythia {
     pub fn new(pythia_addr: &str) -> Self {
         Self {
             addr: pythia_addr.to_string(),
+            read_timeout: Some(PYTHIA_READ_TIMEOUT),
             conn: Mutex::new(None),
         }
+    }
+
+    /// Override the per-RPC read timeout (`None` = block forever).
+    pub fn with_read_timeout(mut self, read_timeout: Option<Duration>) -> Self {
+        self.read_timeout = read_timeout;
+        self
     }
 
     fn roundtrip<Req: WireMessage, Resp: WireMessage>(
@@ -556,6 +599,7 @@ impl RemotePythia {
             if guard.is_none() {
                 let stream = TcpStream::connect(&self.addr).map_err(io_err)?;
                 stream.set_nodelay(true).ok();
+                stream.set_read_timeout(self.read_timeout).map_err(io_err)?;
                 let r = BufReader::new(stream.try_clone().map_err(io_err)?);
                 *guard = Some((r, BufWriter::new(stream)));
             }
@@ -572,6 +616,22 @@ impl RemotePythia {
             })();
             match result {
                 Ok(resp) => return Ok(resp),
+                // A read *timeout* must not retry: the request was
+                // delivered and resending would run the policy twice.
+                // Drop the connection (a late response would desync the
+                // stream) and fail the job instead.
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    *guard = None;
+                    return Err(PolicyError::Internal(format!(
+                        "pythia rpc timed out after {:?}: {e}",
+                        self.read_timeout
+                    )));
+                }
                 Err(FrameError::Io(_)) if attempt == 0 => {
                     *guard = None;
                     continue;

@@ -15,19 +15,23 @@
 //!   historical shutdown leak is fixed: live connection sockets are
 //!   actively shut down and their threads joined.
 
-use super::api::VizierService;
-use super::frontend::{ConnectionHandler, FrontendOptions, FrontendServer};
+use super::api::{effective_wait_ms, OpWaiter, VizierService, WatchResult};
+use super::frontend::{
+    ConnectionHandler, FrontendOptions, FrontendServer, HandleOutcome, RequestContext,
+};
 use super::metrics::FrontendMetrics;
 use crate::util::time::Stopwatch;
 use crate::wire::codec::decode;
 use crate::wire::framing::{read_request, write_err, write_ok, FrameError, Method, Status};
-use crate::wire::messages::EmptyResponse;
+use crate::wire::messages::{
+    EmptyResponse, GetOperationRequest, OperationProto, OperationResponse, WaitOperationRequest,
+};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Front-end configuration for [`VizierServer::start_with`].
 pub struct ServerOptions {
@@ -39,11 +43,23 @@ pub struct ServerOptions {
     pub legacy_threads: bool,
     /// Shutdown drain deadline for queued + in-flight requests.
     pub drain: Duration,
+    /// Evict connections idle longer than this (pool mode only; `None`
+    /// = never). CLI: `--idle-timeout-secs`.
+    pub idle_timeout: Option<Duration>,
+    /// Refuse connections beyond this many (pool mode only; 0 =
+    /// unlimited). CLI: `--max-connections`.
+    pub max_connections: usize,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        Self { workers: 0, legacy_threads: false, drain: Duration::from_secs(5) }
+        Self {
+            workers: 0,
+            legacy_threads: false,
+            drain: Duration::from_secs(5),
+            idle_timeout: None,
+            max_connections: 0,
+        }
     }
 }
 
@@ -96,6 +112,8 @@ impl VizierServer {
                     name: "vizier-fe",
                     workers: opts.workers,
                     drain: opts.drain,
+                    idle_timeout: opts.idle_timeout,
+                    max_connections: opts.max_connections,
                     metrics: Some(Arc::clone(&fe_metrics)),
                     ..Default::default()
                 },
@@ -130,6 +148,10 @@ impl VizierServer {
     /// this call.
     pub fn shutdown(self) {
         let VizierServer { service, inner, .. } = self;
+        // Unpark blocking WaitOperation handlers first: a legacy
+        // connection thread sitting in a long-poll would otherwise
+        // delay its join by up to the wait timeout.
+        service.begin_drain();
         match inner {
             Inner::Pool(frontend) => frontend.shutdown(),
             // LegacyServer closes live connections and joins their
@@ -141,9 +163,84 @@ impl VizierServer {
 }
 
 /// Pool-mode protocol logic: decode the method byte and dispatch to the
-/// service. Stateless per connection.
+/// service. Stateless per connection. `WaitOperation` is served without
+/// blocking: the handler arms an operation watcher and defers the
+/// response, so a worker is occupied only for the dispatch itself —
+/// thousands of long-polling clients cost parked connections, not
+/// threads.
 struct VizierHandler {
     service: Arc<VizierService>,
+}
+
+impl VizierHandler {
+    fn handle_wait(
+        &self,
+        payload: &[u8],
+        out: &mut Vec<u8>,
+        cx: &RequestContext<'_>,
+    ) -> HandleOutcome {
+        let req: WaitOperationRequest = match decode(payload) {
+            Ok(req) => req,
+            Err(e) => {
+                let _ = write_err(out, Status::InvalidArgument, &format!("bad request: {e}"));
+                return HandleOutcome::Reply;
+            }
+        };
+        // Snapshot the current state: it answers immediately when the
+        // operation is already done, and becomes the timeout frame (a
+        // WaitOperation timeout reports the pending state, it is not an
+        // error) when the long-poll deadline passes first. This read is
+        // deliberately separate from the one inside watch_operation:
+        // the timeout frame must exist before defer() so the waiter
+        // closure can capture the ResponseHandle, and watch_operation's
+        // own read must happen under the registry lock for the
+        // race-freedom argument — neither can serve the other.
+        let current = match self.service.get_operation(GetOperationRequest {
+            name: req.name.clone(),
+        }) {
+            Ok(resp) => resp.operation,
+            Err(e) => {
+                self.service.metrics.record_error();
+                let _ = write_err(out, e.status, &e.message);
+                return HandleOutcome::Reply;
+            }
+        };
+        if current.done {
+            let _ = write_ok(out, &OperationResponse { operation: current });
+            return HandleOutcome::Reply;
+        }
+        let deadline =
+            Instant::now() + Duration::from_millis(effective_wait_ms(req.timeout_ms));
+        let mut timeout_frame = Vec::new();
+        let _ = write_ok(&mut timeout_frame, &OperationResponse { operation: current });
+        let handle = cx.defer(Some(deadline), timeout_frame);
+        let armed = Instant::now();
+        let metrics = Arc::clone(&self.service.metrics);
+        let waiter: OpWaiter = Box::new(move |op: &OperationProto| {
+            let mut frame = Vec::new();
+            let _ = write_ok(&mut frame, &OperationResponse { operation: op.clone() });
+            // Only a delivered wakeup counts: a waiter whose long-poll
+            // chunk already timed out finds a dead ticket and must not
+            // skew the latency histogram.
+            if handle.complete(frame) {
+                metrics.record_wait_wakeup(armed.elapsed().as_micros() as u64);
+            }
+        });
+        match self.service.watch_operation(&req.name, waiter) {
+            // Completed in the race window; the unused waiter (and with
+            // it the deferred ticket) was dropped by watch_operation.
+            Ok(WatchResult::Done(op)) => {
+                let _ = write_ok(out, &OperationResponse { operation: op });
+                HandleOutcome::Reply
+            }
+            Ok(WatchResult::Parked(_)) => HandleOutcome::Pending,
+            Err(e) => {
+                self.service.metrics.record_error();
+                let _ = write_err(out, e.status, &e.message);
+                HandleOutcome::Reply
+            }
+        }
+    }
 }
 
 impl ConnectionHandler for VizierHandler {
@@ -151,13 +248,32 @@ impl ConnectionHandler for VizierHandler {
 
     fn on_connect(&self) {}
 
-    fn handle(&self, _state: &mut (), head: u8, payload: &[u8], out: &mut Vec<u8>) -> bool {
+    fn handle(
+        &self,
+        _state: &mut (),
+        head: u8,
+        payload: &[u8],
+        out: &mut Vec<u8>,
+        cx: &RequestContext<'_>,
+    ) -> HandleOutcome {
         match Method::from_u8(head) {
+            Some(Method::WaitOperation) => {
+                let sw = Stopwatch::start();
+                let outcome = self.handle_wait(payload, out, cx);
+                // Records the dispatch cost, not the park time — the
+                // whole point is that no thread measures the wait.
+                self.service.metrics.record("WaitOperation", sw.elapsed_micros());
+                outcome
+            }
             Some(method) => {
                 let sw = Stopwatch::start();
                 let result = dispatch(&self.service, method, payload, out);
                 self.service.metrics.record(&format!("{method:?}"), sw.elapsed_micros());
-                result.is_ok()
+                if result.is_ok() {
+                    HandleOutcome::Reply
+                } else {
+                    HandleOutcome::Close
+                }
             }
             None => {
                 // Garbage method byte: answer with an error frame and
@@ -167,7 +283,7 @@ impl ConnectionHandler for VizierHandler {
                     Status::InvalidArgument,
                     &format!("unknown method id {head}; closing connection"),
                 );
-                false
+                HandleOutcome::Close
             }
         }
     }
@@ -179,6 +295,10 @@ impl ConnectionHandler for VizierHandler {
 
 struct LegacyServer {
     addr: std::net::SocketAddr,
+    /// Kept so the Drop path can `begin_drain` before joining:
+    /// connection threads may sit in the blocking `wait_operation`,
+    /// which only a drain flag (not a socket shutdown) unparks.
+    service: Arc<VizierService>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     /// Live connections: a socket handle (to force-close on shutdown) and
@@ -204,6 +324,7 @@ impl LegacyServer {
             Arc::new(Mutex::new(Vec::new()));
         let stop2 = Arc::clone(&stop);
         let conns2 = Arc::clone(&conns);
+        let service_handle = Arc::clone(&service);
         let accept_thread = std::thread::Builder::new()
             .name("vizier-accept".into())
             .spawn(move || {
@@ -262,10 +383,21 @@ impl LegacyServer {
                     }
                 }
             })?;
-        Ok(Self { addr: local, stop, accept_thread: Some(accept_thread), conns })
+        Ok(Self {
+            addr: local,
+            service: service_handle,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+        })
     }
 
     fn shutdown_inner(&mut self) {
+        // Unpark connection threads sitting in the blocking
+        // wait_operation — shutting their sockets down below does not
+        // interrupt a channel wait, and joining one could otherwise
+        // stall for the full long-poll timeout.
+        self.service.begin_drain();
         self.stop.store(true, Ordering::SeqCst);
         // Unblock the accept loop with a dummy connection.
         let _ = TcpStream::connect(self.addr);
@@ -355,6 +487,12 @@ pub fn dispatch<W: Write>(
         Method::StopTrial => call!(stop_trial),
         Method::ListOptimalTrials => call!(list_optimal_trials),
         Method::UpdateMetadata => call!(update_metadata),
+        // Blocking long-poll: fine for the in-process transport and the
+        // legacy thread-per-connection model (one thread per client by
+        // construction). The pool front-end intercepts this method in
+        // VizierHandler and serves it with a deferred response instead.
+        Method::WaitOperation => call!(wait_operation),
+        Method::GetServiceMetrics => call!(get_service_metrics),
         Method::Ping => write_ok(out, &EmptyResponse::default()),
     }
 }

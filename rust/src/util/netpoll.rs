@@ -30,6 +30,13 @@ const POLLERR: i16 = 0x008;
 const POLLHUP: i16 = 0x010;
 const POLLNVAL: i16 = 0x020;
 
+/// Interest mask for [`PollSet::wait`]: readability.
+pub const EV_READ: i16 = POLLIN;
+/// Interest mask for [`PollSet::wait`]: writability (used by the
+/// front-end to park half-written responses until the peer drains its
+/// receive window).
+pub const EV_WRITE: i16 = POLLOUT;
+
 extern "C" {
     fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
     fn pipe(fds: *mut c_int) -> c_int;
@@ -61,6 +68,20 @@ impl PollSet {
         self.pfds.clear();
         self.pfds
             .extend(fds.iter().map(|&fd| PollFd { fd, events: POLLIN, revents: 0 }));
+        self.poll_prepared(timeout_ms)
+    }
+
+    /// Mixed-interest wait: each entry is `(fd, events)` with `events` a
+    /// combination of [`EV_READ`] / [`EV_WRITE`]. Error/hangup conditions
+    /// always count as ready (the caller's read or write observes them).
+    pub fn wait(&mut self, fds: &[(RawFd, i16)], timeout_ms: i32) -> io::Result<&[usize]> {
+        self.pfds.clear();
+        self.pfds
+            .extend(fds.iter().map(|&(fd, events)| PollFd { fd, events, revents: 0 }));
+        self.poll_prepared(timeout_ms)
+    }
+
+    fn poll_prepared(&mut self, timeout_ms: i32) -> io::Result<&[usize]> {
         loop {
             let rc =
                 unsafe { poll(self.pfds.as_mut_ptr(), self.pfds.len() as c_ulong, timeout_ms) };
@@ -74,7 +95,7 @@ impl PollSet {
             self.ready.clear();
             if rc > 0 {
                 for (i, p) in self.pfds.iter().enumerate() {
-                    if p.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0 {
+                    if p.revents & (p.events | POLLERR | POLLHUP | POLLNVAL) != 0 {
                         self.ready.push(i);
                     }
                 }
@@ -212,6 +233,29 @@ mod tests {
 
         // A connected socket with room in its send buffer is writable.
         assert!(wait_writable(server_side.as_raw_fd(), 1_000).unwrap());
+    }
+
+    #[test]
+    fn mixed_interest_wait() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+
+        let mut set = PollSet::new();
+        // Write interest on a socket with buffer space: ready. Read
+        // interest on the same idle socket: not ready.
+        let entries = [
+            (server_side.as_raw_fd(), EV_READ),
+            (server_side.as_raw_fd(), EV_WRITE),
+        ];
+        let ready = set.wait(&entries, 1_000).unwrap().to_vec();
+        assert_eq!(ready, vec![1]);
+
+        client.write_all(b"x").unwrap();
+        client.flush().unwrap();
+        let ready = set.wait(&entries, 5_000).unwrap().to_vec();
+        assert_eq!(ready, vec![0, 1]);
     }
 
     #[test]

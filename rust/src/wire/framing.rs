@@ -35,6 +35,13 @@ pub enum Method {
     UpdateMetadata = 16,
     /// Health probe; empty request/response.
     Ping = 17,
+    /// Long-poll an operation server-side until it is done or the
+    /// request's deadline passes (replaces client-side `GetOperation`
+    /// busy-polling on servers that support it).
+    WaitOperation = 18,
+    /// Service/front-end counters snapshot (coalescing ratios, in-flight
+    /// policy jobs, parked responses) without shelling into the server.
+    GetServiceMetrics = 19,
 }
 
 impl Method {
@@ -58,6 +65,8 @@ impl Method {
             15 => ListOptimalTrials,
             16 => UpdateMetadata,
             17 => Ping,
+            18 => WaitOperation,
+            19 => GetServiceMetrics,
             _ => return None,
         })
     }

@@ -899,6 +899,38 @@ simple_msg! {
 }
 simple_msg! { OperationResponse { 1 => operation: (msg OperationProto) } }
 simple_msg! { GetOperationRequest { 1 => name: str } }
+simple_msg! {
+    /// WaitOperation: long-poll `name` server-side. Returns when the
+    /// operation completes or after ~`timeout_ms` (0 = server default),
+    /// whichever is first — the response carries the operation's state
+    /// either way, so a timeout is *not* an error (mirrors
+    /// `google.longrunning.WaitOperation`). Servers cap the timeout;
+    /// clients chunk longer waits into successive calls.
+    WaitOperationRequest { 1 => name: str, 2 => timeout_ms: u64 }
+}
+simple_msg! {
+    /// GetServiceMetrics: snapshot of the service + front-end counters.
+    GetServiceMetricsRequest {}
+}
+simple_msg! {
+    /// Counter snapshot (Pythia v2 follow-up (c)): the coalescing ratio
+    /// `suggest_ops_served / policy_runs`, async-dispatch gauges, and
+    /// front-end occupancy, plus the human-readable report for
+    /// dashboards that just want text.
+    ServiceMetricsResponse {
+        1 => policy_runs: u64,
+        2 => suggest_ops_served: u64,
+        3 => in_flight_policy_jobs: u64,
+        4 => errors: u64,
+        5 => wait_wakeups: u64,
+        6 => wait_wakeup_mean_us: u64,
+        7 => active_connections: u64,
+        8 => parked_responses: u64,
+        9 => connections_total: u64,
+        10 => requests: u64,
+        11 => report: str,
+    }
+}
 
 simple_msg! {
     AddMeasurementRequest {
@@ -917,8 +949,22 @@ simple_msg! {
     }
 }
 simple_msg! { TrialResponse { 1 => trial: (msg TrialProto) } }
-simple_msg! { ListTrialsRequest { 1 => study_name: str } }
-simple_msg! { ListTrialsResponse { 1 => trials: (repmsg TrialProto) } }
+simple_msg! {
+    /// ListTrials with optional pagination (mirrors `ListStudies`):
+    /// `page_size == 0` with an empty token returns every trial (v1
+    /// behaviour); otherwise at most `page_size` trials after the
+    /// position encoded by `page_token` (opaque, from the previous
+    /// response). Large studies no longer have to ship every trial in
+    /// one response frame.
+    ListTrialsRequest { 1 => study_name: str, 2 => page_size: u64, 3 => page_token: str }
+}
+simple_msg! {
+    /// `next_page_token` is empty when the listing is exhausted.
+    ListTrialsResponse {
+        1 => trials: (repmsg TrialProto),
+        2 => next_page_token: str,
+    }
+}
 simple_msg! { GetTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
 simple_msg! { DeleteTrialRequest { 1 => study_name: str, 2 => trial_id: u64 } }
 
@@ -1221,6 +1267,55 @@ mod tests {
         };
         let back: UpdateMetadataRequest = decode(&encode(&req)).unwrap();
         assert_eq!(back, req);
+    }
+
+    #[test]
+    fn wait_operation_and_metrics_roundtrip() {
+        let req = WaitOperationRequest {
+            name: "operations/4".into(),
+            timeout_ms: 12_500,
+        };
+        let back: WaitOperationRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+
+        let m = ServiceMetricsResponse {
+            policy_runs: 3,
+            suggest_ops_served: 11,
+            in_flight_policy_jobs: 7,
+            errors: 1,
+            wait_wakeups: 5,
+            wait_wakeup_mean_us: 420,
+            active_connections: 100,
+            parked_responses: 9,
+            connections_total: 250,
+            requests: 10_000,
+            report: "frontend: ...".into(),
+        };
+        let back: ServiceMetricsResponse = decode(&encode(&m)).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn list_trials_pagination_fields_roundtrip() {
+        let req = ListTrialsRequest {
+            study_name: "studies/2".into(),
+            page_size: 100,
+            page_token: "57".into(),
+        };
+        let back: ListTrialsRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
+        let resp = ListTrialsResponse {
+            trials: vec![TrialProto::default()],
+            next_page_token: "1".into(),
+        };
+        let back: ListTrialsResponse = decode(&encode(&resp)).unwrap();
+        assert_eq!(back, resp);
+        // A v1 request (no pagination fields) decodes with the zero
+        // values that select the full listing.
+        let v1 = ListTrialsRequest { study_name: "studies/2".into(), ..Default::default() };
+        let back: ListTrialsRequest = decode(&encode(&v1)).unwrap();
+        assert_eq!(back.page_size, 0);
+        assert!(back.page_token.is_empty());
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! The operation-driven async core over real TCP: `WaitOperation` wakes
+//! parked clients the instant a policy result lands (no busy-poll), a
+//! slow reader's half-written response parks instead of pinning the
+//! pool's worker (procfs thread-budget assertion), crash-resume
+//! completes a parked wait, and the per-connection idle timeout evicts
+//! dead fleets.
+
+use ossvizier::client::transport::{call, TcpTransport, Transport};
+use ossvizier::client::VizierClient;
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use ossvizier::pythia::supporter::PolicySupporter;
+use ossvizier::pyvizier::{converters, Algorithm, MetricInformation, StudyConfig, TrialSuggestion};
+use ossvizier::service::{build_service, ServerOptions, VizierServer, VizierService};
+use ossvizier::testing::procfs::threads_with_prefix;
+use ossvizier::wire::framing::{read_response, write_request, Method};
+use ossvizier::wire::messages::{
+    CreateStudyRequest, EmptyResponse, ListTrialsRequest, ListTrialsResponse, MetadataItem,
+    OperationKind, OperationProto, OperationResponse, ScaleType, StudyProto, TrialProto,
+    WaitOperationRequest,
+};
+use std::io::{BufReader, Read};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Tests in this file count live threads by name via /proc, so they must
+/// not overlap with each other's servers: serialize the whole file.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn test_config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("async");
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = algorithm;
+    c.seed = 11;
+    c
+}
+
+fn wait_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let by = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < by, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A policy whose first invocation blocks on a gate, so tests can pile up
+// operations deterministically while the single policy worker is busy.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct GatedPolicy {
+    gate: Arc<Gate>,
+    invocations: Arc<AtomicUsize>,
+}
+
+impl Policy for GatedPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        if self.invocations.fetch_add(1, Ordering::SeqCst) == 0 {
+            self.gate.wait(); // only the first invocation blocks
+        }
+        Ok(SuggestDecision::from_flat(
+            req,
+            vec![TrialSuggestion::default(); req.total_count()],
+        ))
+    }
+}
+
+fn gated_service(
+    ds: Arc<dyn Datastore>,
+    policy_workers: usize,
+) -> (Arc<VizierService>, Arc<Gate>, Arc<AtomicUsize>) {
+    let gate = Arc::new(Gate::default());
+    let invocations = Arc::new(AtomicUsize::new(0));
+    let (g, inv) = (Arc::clone(&gate), Arc::clone(&invocations));
+    let service = build_service(
+        ds,
+        move |reg| {
+            reg.register(
+                "GATED",
+                Arc::new(move |_| {
+                    Box::new(GatedPolicy {
+                        gate: Arc::clone(&g),
+                        invocations: Arc::clone(&inv),
+                    })
+                }),
+            );
+        },
+        policy_workers,
+    );
+    (service, gate, invocations)
+}
+
+fn ping(stream: &mut TcpStream) {
+    write_request(stream, Method::Ping, &EmptyResponse::default()).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let _: EmptyResponse = read_response(&mut r).unwrap();
+}
+
+/// Many clients suggest against one gated study and park in
+/// `WaitOperation`; the policy completion wakes all of them in one
+/// round-trip each, with zero `GetOperation` polling and the front-end
+/// at its thread budget throughout.
+#[test]
+fn wait_operation_wakes_parked_clients_over_tcp() {
+    let _serial = serial();
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let (service, gate, invocations) = gated_service(Arc::clone(&ds), 1);
+    let fe_workers = 2;
+    let server = VizierServer::start_with(
+        Arc::clone(&service),
+        "127.0.0.1:0",
+        ServerOptions { workers: fe_workers, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let config = test_config(Algorithm::Custom("GATED".into()));
+    let study = service
+        .create_study(CreateStudyRequest {
+            study: StudyProto {
+                display_name: "async".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            },
+        })
+        .unwrap()
+        .study;
+
+    // Client 0's policy run occupies the single policy worker (blocked
+    // on the gate); make sure it actually started before piling on, so
+    // clients 1..4 coalesce behind it instead of racing it.
+    let n = 5usize;
+    let clients: Vec<_> = (0..n)
+        .map(|i| {
+            let addr = addr.clone();
+            let study_name = study.name.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("waiter-{i}"))
+                .spawn(move || {
+                    let mut client = VizierClient::for_study(
+                        Box::new(TcpTransport::connect(&addr).unwrap()),
+                        &study_name,
+                        &format!("client-{i}"),
+                    );
+                    client.get_suggestions(1).unwrap()
+                })
+                .unwrap();
+            if i == 0 {
+                let inv = Arc::clone(&invocations);
+                wait_until("first policy run to start", Duration::from_secs(20), || {
+                    inv.load(Ordering::SeqCst) > 0
+                });
+            }
+            handle
+        })
+        .collect();
+
+    // All five clients end up parked in WaitOperation: five pending
+    // operations, five parked responses, no extra threads.
+    let fe = Arc::clone(server.frontend_metrics());
+    wait_until("all clients parked", Duration::from_secs(20), || {
+        fe.parked_responses() == n as u64
+    });
+    assert_eq!(service.metrics.in_flight_policy_jobs(), n as u64);
+    assert_eq!(ds.pending_operations().unwrap().len(), n);
+    if let Some(threads) = threads_with_prefix("vizier-fe") {
+        assert!(
+            threads <= fe_workers + 2,
+            "{n} parked waiters must not cost threads: {threads} > {}",
+            fe_workers + 2
+        );
+    }
+
+    gate.release();
+    for c in clients {
+        let trials = c.join().unwrap();
+        assert_eq!(trials.len(), 1);
+    }
+
+    // The new client path never touched GetOperation — completion was
+    // pushed, not polled.
+    assert_eq!(service.metrics.histogram("GetOperation").count(), 0);
+    assert_eq!(service.metrics.histogram("WaitOperation").count(), n as u64);
+    assert_eq!(service.metrics.wait_wakeup.count(), n as u64);
+    assert_eq!(service.metrics.in_flight_policy_jobs(), 0);
+    // Coalescing still held: the four queued ops shared one policy run.
+    assert_eq!(invocations.load(Ordering::SeqCst), 2);
+    server.shutdown();
+}
+
+/// A client that requests a huge listing and then stops reading parks
+/// its half-written response in the event loop; the pool's single
+/// worker keeps serving everyone else, and the response completes once
+/// the client drains it.
+#[test]
+fn slow_reader_response_parks_and_frees_worker() {
+    let _serial = serial();
+    let ds = Arc::new(InMemoryDatastore::new());
+    let service = ossvizier::service::build_service(
+        Arc::clone(&ds) as Arc<dyn Datastore>,
+        |_| {},
+        1,
+    );
+    let fe_workers = 1;
+    let server = VizierServer::start_with(
+        Arc::clone(&service),
+        "127.0.0.1:0",
+        ServerOptions { workers: fe_workers, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // ~14 MiB of trials (under the 16 MiB frame cap): far beyond what
+    // the kernel will buffer for one connection, so the response write
+    // must park.
+    let study = ds
+        .create_study(StudyProto { display_name: "fat".into(), ..Default::default() })
+        .unwrap();
+    let trials = 64usize;
+    for _ in 0..trials {
+        ds.create_trial(
+            &study.name,
+            TrialProto {
+                metadata: vec![MetadataItem {
+                    namespace: "blob".into(),
+                    key: "payload".into(),
+                    value: vec![0xAB; 220_000],
+                }],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    }
+
+    // Two slow readers request the listing and read nothing.
+    let mut slow: Vec<TcpStream> = (0..2)
+        .map(|_| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            write_request(
+                &mut s,
+                Method::ListTrials,
+                &ListTrialsRequest { study_name: study.name.clone(), ..Default::default() },
+            )
+            .unwrap();
+            s
+        })
+        .collect();
+
+    let fe = Arc::clone(server.frontend_metrics());
+    wait_until("a response to park", Duration::from_secs(10), || fe.parked_responses() >= 1);
+    if let Some(threads) = threads_with_prefix("vizier-fe") {
+        assert!(
+            threads <= fe_workers + 2,
+            "slow readers must not grow the pool: {threads} > {}",
+            fe_workers + 2
+        );
+    }
+
+    // The one and only worker is free: another client gets served while
+    // both big responses are stalled.
+    let start = Instant::now();
+    let mut other = TcpStream::connect(addr).unwrap();
+    other.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    ping(&mut other);
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "stalled response writes pinned the single pool worker"
+    );
+
+    // Drain both responses: parked writes resume and complete.
+    for s in slow.iter_mut() {
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let resp: ListTrialsResponse = read_response(&mut r).unwrap();
+        assert_eq!(resp.trials.len(), trials);
+    }
+    wait_until("parked gauge to drain", Duration::from_secs(10), || fe.parked_responses() == 0);
+    server.shutdown();
+}
+
+/// Crash-resume wakes a parked wait: an operation interrupted by a
+/// "crash" (written pending to the datastore, no live runner) completes
+/// after `resume_pending_operations`, and the client parked on it is
+/// woken by the same watcher path as live traffic.
+#[test]
+fn crash_resume_completes_a_parked_wait() {
+    let _serial = serial();
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let config = test_config(Algorithm::RandomSearch);
+    let study = ds
+        .create_study(StudyProto {
+            display_name: "resume".into(),
+            spec: converters::study_config_to_proto(&config),
+            ..Default::default()
+        })
+        .unwrap();
+    // The crash artifact: a persisted, pending suggest operation with
+    // no server ever having picked it up.
+    let op = ds
+        .create_operation(OperationProto {
+            kind: OperationKind::SuggestTrials,
+            study_name: study.name.clone(),
+            client_id: "w0".into(),
+            count: 1,
+            ..Default::default()
+        })
+        .unwrap();
+
+    // "Restart": a fresh service over the surviving datastore.
+    let service = build_service(Arc::clone(&ds), |_| {}, 2);
+    let server = VizierServer::start(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let op_name = op.name.clone();
+    let waiter = std::thread::spawn(move || {
+        let mut t = TcpTransport::connect(&addr).unwrap();
+        let resp: OperationResponse = call(
+            &mut t as &mut dyn Transport,
+            Method::WaitOperation,
+            &WaitOperationRequest { name: op_name, timeout_ms: 30_000 },
+        )
+        .unwrap();
+        resp.operation
+    });
+
+    let fe = Arc::clone(server.frontend_metrics());
+    wait_until("the wait to park", Duration::from_secs(10), || fe.parked_responses() == 1);
+    // Still pending: nothing has run it.
+    assert!(!ds.get_operation(&op.name).unwrap().done);
+
+    let resumed = service.resume_pending_operations().unwrap();
+    assert_eq!(resumed, 1);
+
+    let done = waiter.join().unwrap();
+    assert!(done.done, "resume must complete the parked operation");
+    assert!(done.error.is_empty(), "unexpected error: {}", done.error);
+    assert_eq!(done.trials.len(), 1);
+    assert_eq!(service.metrics.wait_wakeup.count(), 1);
+    server.shutdown();
+}
+
+/// `--idle-timeout-secs`: connections that stop talking are evicted
+/// (gauge drops, counter increments, socket closed) while fresh
+/// connections keep working.
+#[test]
+fn idle_timeout_evicts_idle_connections() {
+    let _serial = serial();
+    let service = ossvizier::service::in_memory_service(1);
+    let server = VizierServer::start_with(
+        service,
+        "127.0.0.1:0",
+        ServerOptions {
+            workers: 1,
+            idle_timeout: Some(Duration::from_millis(300)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut fleet: Vec<TcpStream> = (0..3)
+        .map(|_| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            ping(&mut s);
+            s
+        })
+        .collect();
+    assert_eq!(server.frontend_metrics().active_connections(), 3);
+
+    let fe = Arc::clone(server.frontend_metrics());
+    wait_until("idle fleet eviction", Duration::from_secs(10), || {
+        fe.active_connections() == 0
+    });
+    assert!(fe.idle_evictions() >= 3);
+    // The evicted sockets observe EOF.
+    let mut buf = [0u8; 1];
+    assert_eq!(fleet[0].read(&mut buf).unwrap_or(0), 0);
+
+    // New connections are unaffected (activity resets the clock on each
+    // request).
+    let mut fresh = TcpStream::connect(addr).unwrap();
+    fresh.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    ping(&mut fresh);
+    drop(fleet);
+    server.shutdown();
+}
+
+/// `--max-connections`: excess connections are refused (closed without
+/// a response) and counted, while admitted clients keep working.
+#[test]
+fn max_connections_refuses_excess_clients() {
+    let _serial = serial();
+    let service = ossvizier::service::in_memory_service(1);
+    let server = VizierServer::start_with(
+        service,
+        "127.0.0.1:0",
+        ServerOptions { workers: 1, max_connections: 2, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut a = TcpStream::connect(addr).unwrap();
+    let mut b = TcpStream::connect(addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    ping(&mut a);
+    ping(&mut b);
+
+    let mut refused = TcpStream::connect(addr).unwrap();
+    refused.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 1];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match refused.read(&mut buf) {
+            Ok(0) => break, // closed without serving
+            Ok(_) => panic!("refused connection got data"),
+            Err(_) => assert!(Instant::now() < deadline, "refused conn never closed"),
+        }
+    }
+    assert_eq!(server.frontend_metrics().connections_refused(), 1);
+    ping(&mut a);
+    server.shutdown();
+}
