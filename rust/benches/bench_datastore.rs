@@ -198,10 +198,16 @@ fn main() {
     };
     let per_thread = 250;
     let ops = (MT_THREADS * per_thread) as f64;
-    let (serial_ms, _, _) =
-        run_wal(WalOptions { sync: true, group_commit: false }, "mt-serial", per_thread);
-    let (group_ms, recs, batches) =
-        run_wal(WalOptions { sync: true, group_commit: true }, "mt-group", per_thread);
+    let (serial_ms, _, _) = run_wal(
+        WalOptions { sync: true, group_commit: false, ..WalOptions::default() },
+        "mt-serial",
+        per_thread,
+    );
+    let (group_ms, recs, batches) = run_wal(
+        WalOptions { sync: true, ..WalOptions::default() },
+        "mt-group",
+        per_thread,
+    );
     note(&format!(
         "serial fsync/write:     {serial_ms:>8.2} ms  ({:>9.0} ops/s)",
         ops / (serial_ms / 1e3)

@@ -1,0 +1,312 @@
+//! `benchdiff` — the compare-benches CI gate.
+//!
+//! Compares the `BENCH_*.json` artifacts a bench run just produced
+//! against the committed baselines in `bench_baselines/` and prints a
+//! markdown trajectory table (CI appends it to the job summary). An
+//! *enforced* metric — listed in the baseline file's `"enforce"` array —
+//! that regresses more than `--threshold` (default 20%) fails the run,
+//! which is how the nightly soak gates on performance.
+//!
+//! Baselines marked `"provisional": true` are recorded but never
+//! enforced: they bootstrap the trajectory before a trusted runner has
+//! produced real numbers. Refresh baselines from a good run with
+//! `benchdiff --update`, which writes current values into the baseline
+//! directory and clears the provisional flag.
+//!
+//! ```text
+//! benchdiff [--baseline-dir bench_baselines] [--current-dir .]
+//!           [--threshold 0.20] [--advisory] [--update]
+//! ```
+
+use ossvizier::util::json::{parse, Json};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Args {
+    baseline_dir: PathBuf,
+    current_dir: PathBuf,
+    threshold: f64,
+    /// Report regressions without failing (PR CI; the soak enforces).
+    advisory: bool,
+    /// Rewrite the baselines from the current artifacts.
+    update: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        baseline_dir: PathBuf::from("bench_baselines"),
+        current_dir: PathBuf::from("."),
+        threshold: 0.20,
+        advisory: false,
+        update: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut value = |flag: &str| {
+            it.next().ok_or_else(|| format!("{flag} needs a value"))
+        };
+        match a.as_str() {
+            "--baseline-dir" => args.baseline_dir = PathBuf::from(value("--baseline-dir")?),
+            "--current-dir" => args.current_dir = PathBuf::from(value("--current-dir")?),
+            "--threshold" => {
+                args.threshold = value("--threshold")?
+                    .parse()
+                    .map_err(|_| "--threshold needs a float".to_string())?
+            }
+            "--advisory" => args.advisory = true,
+            "--update" => args.update = true,
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    Ok(args)
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// `results` array -> metric name -> ns_per_op.
+fn results_map(doc: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Some(results) = doc.get("results").and_then(Json::as_arr) {
+        for r in results {
+            if let (Some(name), Some(ns)) = (
+                r.get("name").and_then(Json::as_str),
+                r.get("ns_per_op").and_then(Json::as_f64),
+            ) {
+                out.insert(name.to_string(), ns);
+            }
+        }
+    }
+    out
+}
+
+struct Row {
+    bench: String,
+    metric: String,
+    baseline: Option<f64>,
+    current: Option<f64>,
+    status: String,
+    failed: bool,
+}
+
+fn fmt_ns(v: Option<f64>) -> String {
+    match v {
+        Some(ns) if ns > 0.0 => format!("{ns:.0}"),
+        Some(_) => "–".to_string(),
+        None => "–".to_string(),
+    }
+}
+
+fn fmt_delta(baseline: Option<f64>, current: Option<f64>) -> String {
+    match (baseline, current) {
+        (Some(b), Some(c)) if b > 0.0 => format!("{:+.1}%", (c - b) / b * 100.0),
+        _ => "–".to_string(),
+    }
+}
+
+fn write_updated_baseline(
+    path: &Path,
+    bench: &str,
+    enforce: &BTreeSet<String>,
+    current: &BTreeMap<String, f64>,
+) -> Result<(), String> {
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str(bench.to_string()));
+    root.insert("provisional".to_string(), Json::Bool(false));
+    root.insert(
+        "enforce".to_string(),
+        Json::Arr(enforce.iter().map(|n| Json::Str(n.clone())).collect()),
+    );
+    root.insert(
+        "results".to_string(),
+        Json::Arr(
+            current
+                .iter()
+                .map(|(name, ns)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(name.clone()));
+                    o.insert("ns_per_op".to_string(), Json::Num(*ns));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    std::fs::write(path, Json::Obj(root).to_pretty())
+        .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn run(args: &Args) -> Result<bool, String> {
+    let mut baseline_files: Vec<PathBuf> = std::fs::read_dir(&args.baseline_dir)
+        .map_err(|e| format!("{}: {e}", args.baseline_dir.display()))?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    baseline_files.sort();
+    if baseline_files.is_empty() {
+        return Err(format!("no BENCH_*.json baselines in {}", args.baseline_dir.display()));
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for bpath in &baseline_files {
+        let fname = bpath.file_name().unwrap().to_string_lossy().to_string();
+        let baseline = load(bpath)?;
+        let fallback = fname.trim_start_matches("BENCH_").trim_end_matches(".json");
+        let bench = baseline
+            .get("bench")
+            .and_then(Json::as_str)
+            .unwrap_or(fallback)
+            .to_string();
+        let provisional = baseline.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+        let enforce: BTreeSet<String> = baseline
+            .get("enforce")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let base_map = results_map(&baseline);
+        let cpath = args.current_dir.join(&fname);
+        if !cpath.exists() {
+            let failed = !provisional && !enforce.is_empty();
+            rows.push(Row {
+                bench,
+                metric: "(all)".into(),
+                baseline: None,
+                current: None,
+                status: if failed {
+                    "MISSING artifact — enforced bench did not run".into()
+                } else {
+                    "missing artifact".into()
+                },
+                failed,
+            });
+            continue;
+        }
+        let cur_map = results_map(&load(&cpath)?);
+        for (metric, base_ns) in &base_map {
+            let cur_ns = cur_map.get(metric).copied();
+            let enforced = enforce.contains(metric) && !provisional;
+            let (status, failed) = match cur_ns {
+                None if enforced => ("MISSING metric".to_string(), true),
+                None => ("missing metric".to_string(), false),
+                Some(c) => {
+                    if provisional {
+                        ("provisional baseline (recorded, not enforced)".to_string(), false)
+                    } else if *base_ns > 0.0 && c > base_ns * (1.0 + args.threshold) {
+                        if enforced {
+                            (
+                                format!("REGRESSION > {:.0}%", args.threshold * 100.0),
+                                true,
+                            )
+                        } else {
+                            ("regression (advisory metric)".to_string(), false)
+                        }
+                    } else if enforced {
+                        ("ok (enforced)".to_string(), false)
+                    } else {
+                        ("ok".to_string(), false)
+                    }
+                }
+            };
+            rows.push(Row {
+                bench: bench.clone(),
+                metric: metric.clone(),
+                baseline: Some(*base_ns),
+                current: cur_ns,
+                status,
+                failed,
+            });
+        }
+        // An enforce entry with no baseline row would otherwise never be
+        // examined — e.g. a metric renamed and then `--update` dropping
+        // the old row while its name lingers in the enforce array. Make
+        // the dead entry loudly visible instead of silently disarming.
+        for name in &enforce {
+            if !base_map.contains_key(name) {
+                rows.push(Row {
+                    bench: bench.clone(),
+                    metric: name.clone(),
+                    baseline: None,
+                    current: cur_map.get(name).copied(),
+                    status: "MISSING baseline row for enforced metric".to_string(),
+                    failed: !provisional,
+                });
+            }
+        }
+        for (metric, cur_ns) in &cur_map {
+            if !base_map.contains_key(metric) {
+                rows.push(Row {
+                    bench: bench.clone(),
+                    metric: metric.clone(),
+                    baseline: None,
+                    current: Some(*cur_ns),
+                    status: "new (unbaselined)".to_string(),
+                    failed: false,
+                });
+            }
+        }
+        if args.update {
+            write_updated_baseline(bpath, &bench, &enforce, &cur_map)?;
+        }
+    }
+
+    println!("## Bench trajectory\n");
+    println!("| bench | metric | baseline ns/op | current ns/op | Δ | status |");
+    println!("|---|---|---:|---:|---:|---|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {} | {} | {} | {} |",
+            r.bench,
+            r.metric,
+            fmt_ns(r.baseline),
+            fmt_ns(r.current),
+            fmt_delta(r.baseline, r.current),
+            r.status
+        );
+    }
+    let failures: Vec<&Row> = rows.iter().filter(|r| r.failed).collect();
+    println!();
+    if failures.is_empty() {
+        println!("no enforced regressions (threshold {:.0}%)", args.threshold * 100.0);
+    } else {
+        println!(
+            "**{} enforced regression(s) beyond {:.0}%:**",
+            failures.len(),
+            args.threshold * 100.0
+        );
+        for r in &failures {
+            println!("- {} / {}: {}", r.bench, r.metric, r.status);
+        }
+        if args.advisory {
+            println!("\n(advisory mode: not failing this run — the nightly soak enforces)");
+        }
+    }
+    if args.update {
+        println!("\nbaselines refreshed in {}", args.baseline_dir.display());
+    }
+    Ok(failures.is_empty() || args.advisory)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -54,6 +54,19 @@ struct Shard {
     operations: HashMap<String, OperationProto>,
 }
 
+/// One shard's top-level contents as captured by
+/// [`InMemoryDatastore::snapshot_shard`]. Trials are deliberately NOT
+/// cloned here: the WAL compactor streams them per study in keyed pages
+/// ([`Datastore::list_trials_page`]) so no single lock acquisition holds
+/// a shard's writers for longer than one page clone.
+#[derive(Debug, Default)]
+pub(crate) struct ShardSnapshot {
+    /// The shard's study rows (specs only, no trials).
+    pub studies: Vec<StudyProto>,
+    /// Operations with `done == false` resident in this shard.
+    pub pending_ops: Vec<OperationProto>,
+}
+
 /// Thread-safe sharded in-memory store.
 #[derive(Debug)]
 pub struct InMemoryDatastore {
@@ -122,6 +135,37 @@ impl InMemoryDatastore {
             dir.entry(study.display_name.clone()).or_insert_with(|| study.name.clone());
         }
         entry.study = study;
+    }
+
+    /// Reserve the next `studies/{n}` resource name without inserting
+    /// anything. [`super::wal::WalDatastore`] assigns names *before*
+    /// committing so every record of a study — including its create —
+    /// routes to the same commit lane (lane order is what makes per-study
+    /// replay order hold; see the WAL module docs).
+    pub(crate) fn reserve_study_name(&self) -> String {
+        format!("studies/{}", self.next_study.fetch_add(1, Ordering::SeqCst))
+    }
+
+    /// Reserve the next `operations/{n}` resource name (see
+    /// [`Self::reserve_study_name`]).
+    pub(crate) fn reserve_operation_name(&self) -> String {
+        format!("operations/{}", self.next_op.fetch_add(1, Ordering::SeqCst))
+    }
+
+    /// Clone one shard's study rows and pending operations under a
+    /// single (short) read-lock acquisition: the WAL compactor's
+    /// snapshot iteration. Trial tables are streamed separately in
+    /// keyed pages — see [`ShardSnapshot`] — so the compactor never
+    /// holds a shard's writers for longer than one page clone; replay
+    /// correctness needs only per-record (upsert) consistency, not an
+    /// atomic shard image. Done operations are excluded: compaction is
+    /// where the log sheds them.
+    pub(crate) fn snapshot_shard(&self, idx: usize) -> ShardSnapshot {
+        let sh = self.shards[idx].read().unwrap();
+        ShardSnapshot {
+            studies: sh.studies.values().map(|e| e.study.clone()).collect(),
+            pending_ops: sh.operations.values().filter(|o| !o.done).cloned().collect(),
+        }
     }
 
     /// Move a directory mapping from `old` to `new` for study `name`.

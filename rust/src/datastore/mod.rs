@@ -23,13 +23,43 @@
 //!   uniqueness go through a small directory lock that is never held
 //!   across shard work.
 //!
-//! * **Group commit** ([`wal::WalDatastore`]): mutations from concurrent
-//!   connections are appended to a shared in-memory buffer and a dedicated
-//!   committer thread writes + fsyncs the buffer in batches. A writer is
-//!   acknowledged only once the batch containing its record is durable, so
-//!   K concurrent writers pay ~1 fsync instead of K while keeping the
-//!   §3.2 guarantee: every acknowledged mutation survives a crash, and a
-//!   torn batch tail is detected and truncated at replay.
+//! * **Group commit with per-shard lanes** ([`wal::WalDatastore`]):
+//!   mutations from concurrent connections are appended to per-shard
+//!   commit lanes and one dedicated committer thread writes + fsyncs all
+//!   lanes in batches. A writer is acknowledged only once the batch
+//!   containing its record is durable, so K concurrent writers pay ~1
+//!   fsync instead of K while keeping the §3.2 guarantee: every
+//!   acknowledged mutation survives a crash, and a torn batch tail is
+//!   detected and truncated at replay. Because the in-memory apply runs
+//!   under the *lane's* lock (not a global commit lock), the sharded
+//!   store's N-way parallelism survives durability.
+//!
+//! # Durable-log invariants (see `wal.rs` for the full lifecycle)
+//!
+//! The WAL's correctness argument rests on three invariants, each of
+//! which a test suite pins:
+//!
+//! 1. **Per-shard replay order.** All records of one study (or
+//!    operation) route to one commit lane — creates reserve their
+//!    resource name first — and a lane is FIFO: appends happen in apply
+//!    order under the lane lock, the committer drains lanes completely,
+//!    and earlier batches hit the disk first. Replay therefore applies
+//!    each shard's records in its apply order; cross-shard interleaving
+//!    is unconstrained and irrelevant (`prop_invariants.rs`:
+//!    `segment_prefix_plus_torn_tail_replays_to_acked_prefix_per_study`).
+//! 2. **Prefix recovery.** Any crash leaves, per shard, a prefix of the
+//!    applied mutation order that covers every *acknowledged* mutation:
+//!    acks happen only after the flush, torn tails are exactly the
+//!    never-acked suffix, and only the final segment may be torn
+//!    (sealed segments are fsynced at rotation).
+//! 3. **Compaction transparency.** A base snapshot is cut from live
+//!    state in short paged reads (study rows per shard, trials in keyed
+//!    pages) — never under the commit path, and never holding any lock
+//!    longer than one page clone — and may therefore overlap the tail;
+//!    replay applies are blind per-key upserts/deletes, so base-then-tail
+//!    replay converges to the same state as replaying the full original
+//!    log (`tests/fault_tolerance.rs`:
+//!    `crash_at_every_compaction_stage_recovers_cleanly`).
 
 pub mod memory;
 pub mod query;

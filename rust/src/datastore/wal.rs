@@ -1,49 +1,97 @@
 //! Write-ahead-log datastore: durable storage with crash recovery.
 //!
-//! Every mutation is encoded as a [`Mutation`] record and appended to a log
-//! file before the call returns. On startup the log is replayed, rebuilding
+//! Every mutation is encoded as a [`Mutation`] record and appended to the
+//! log before the call returns. On startup the log is replayed, rebuilding
 //! the exact pre-crash state — including non-done operations, which the
 //! service then resumes (paper §3.2: "The Operations are stored in the
 //! database and contain sufficient information to restart the computation
 //! after a server crash, reboot, or update").
 //!
-//! # Group commit
+//! # Layouts
+//!
+//! * **Single file** ([`WalOptions::segment_bytes`]` = None`, the
+//!   baseline): one append-only file at `path`. `compact()` rewrites it
+//!   in place and **stalls every commit** for the duration of the
+//!   snapshot — the behavior this module's segmented layout deprecates.
+//! * **Segmented** (`segment_bytes = Some(n)`): `path` is a directory of
+//!   numbered segments. Appends go to the active segment
+//!   (`wal.000017.log`), which the committer seals (flush + fsync) and
+//!   rotates once it reaches `n` bytes. A background compactor thread
+//!   snapshots state into a new *base* segment (`wal.000017.base`) and
+//!   deletes superseded segments **without ever holding the commit
+//!   path** — commits keep flowing into the active segment while the
+//!   snapshot is cut.
+//!
+//! # Segment lifecycle
+//!
+//! ```text
+//! wal.000001.log .. wal.000017.log   (sealed)   wal.000018.log (active)
+//!        └── compactor: seal 18 → open 19, snapshot state,
+//!            write wal.000018.base.tmp, fsync, rename to
+//!            wal.000018.base, fsync dir, delete logs ≤ 18 + older bases
+//! ```
+//!
+//! Replay order is *base first, then `.log` segments in ascending
+//! order*. Torn-tail rules are per segment: only the final (highest
+//! numbered) log segment may contain a torn record — it is truncated at
+//! recovery, exactly like the single-file layout — while a torn record
+//! in a sealed segment is reported as corruption (sealed segments are
+//! fsynced at rotation, so a legal crash cannot tear them). A crash at
+//! any point of the compaction leaves a recoverable directory: an
+//! unpublished `*.tmp` snapshot is deleted at open, and once the base is
+//! renamed into place the superseded segments are ignored (and cleaned
+//! up) whether or not the compactor got to delete them.
+//!
+//! The snapshot is cut from the *live* in-memory state in short, paged
+//! reads — study rows per shard (`InMemoryDatastore::snapshot_shard`),
+//! then each study's trials in keyed pages — so no lock is ever held
+//! longer than one page clone and the commit path never stalls on it.
+//! The base may therefore already contain the effects of records that
+//! sit in the tail; replay applies are blind per-key upserts/deletes,
+//! so re-applying the tail over the base converges to the exact
+//! crash-time state (per shard, replay is always a prefix of the apply
+//! order that covers every acknowledged commit).
+//!
+//! # Group commit and per-shard commit lanes
 //!
 //! By default appends go through **group commit**: a writer applies its
 //! mutation to the in-memory state and appends the encoded record to a
-//! shared buffer under the commit lock, then blocks until a dedicated
-//! committer thread has written the buffer to the file (and fsynced it,
-//! in [`WalOptions::sync`] mode). The committer drains whatever
-//! accumulated while the previous batch was being flushed, so K
-//! concurrent writers share ~1 flush/fsync instead of paying K. Because
-//! the in-memory apply and the buffer append happen atomically, replay
-//! order always matches apply order. The commit lock does serialize the
-//! (microsecond-scale) in-memory applies — the point of the batching is
-//! amortizing the millisecond-scale flush/fsync, which happens outside
-//! it; per-shard commit sequencing is a ROADMAP item.
+//! commit *lane*, then blocks until the dedicated committer thread has
+//! flushed that lane's records (fsynced, in [`WalOptions::sync`] mode).
+//! The committer drains every lane into one write, so K concurrent
+//! writers share ~1 flush/fsync instead of paying K.
+//!
+//! Lanes are **per shard** ([`InMemoryDatastore::shard_index`] of the
+//! study/operation name): the in-memory apply and the lane append happen
+//! under the *lane's* lock only, so writers to different shards apply in
+//! parallel and the N-shard parallelism of the store survives
+//! durability. Replay order only needs to hold per study, and a study's
+//! records all route to one lane (creates reserve their resource name
+//! before committing), so per-lane FIFO + full-lane drains give exactly
+//! that guarantee. [`WalOptions::serial_apply`] collapses everything
+//! into a single lane — the pre-lane behavior, kept as the C-WAL-SHARD
+//! baseline. The pre-group-commit path (append + flush inline under the
+//! log lock) is kept as [`WalOptions::group_commit`]` = false`.
 //!
 //! Acknowledgement = durability: `create_trial` & co. return only after
-//! the batch containing their record is flushed, so every acknowledged
-//! mutation survives a crash. A crash mid-batch leaves a torn final
-//! record, which is detected and truncated at recovery — exactly the
-//! record(s) whose writers were never acknowledged.
+//! the flush covering their records, so every acknowledged mutation
+//! survives a crash; a torn final record is exactly one whose writers
+//! were never acknowledged.
 //!
-//! The pre-group-commit behavior (append + flush inline, serially, under
-//! the log lock) is kept as [`WalOptions::group_commit`]` = false` and
-//! serves as the baseline in `bench_datastore`.
-//!
-//! Record framing: `[u32-le len][u8 kind][payload]`. A torn final record
-//! (crash mid-write) is detected and truncated at recovery.
+//! Record framing: `[u32-le len][u8 kind][payload]` (identical in `.log`
+//! and `.base` segments).
 
 use super::memory::InMemoryDatastore;
 use super::{Datastore, DsError};
+use crate::service::metrics::WalMetrics;
+use crate::util::time::Stopwatch;
 use crate::wire::codec::{decode, encode, Reader, WireError, WireMessage, Writer};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write as IoWrite};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 const KIND_PUT_STUDY: u8 = 1;
@@ -144,7 +192,7 @@ impl Mutation {
     }
 }
 
-/// Durability / batching knobs for [`WalDatastore`].
+/// Durability / batching / layout knobs for [`WalDatastore`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WalOptions {
     /// fsync each commit batch before acknowledging its writers
@@ -154,6 +202,20 @@ pub struct WalOptions {
     /// commit). `false` = the serial legacy path: every append writes and
     /// flushes inline under the log lock (benchmark baseline).
     pub group_commit: bool,
+    /// Collapse the per-shard commit lanes into one global lane, which
+    /// serializes the in-memory applies of *all* writers — the
+    /// pre-per-shard-sequencing behavior, kept as the C-WAL-SHARD
+    /// benchmark baseline. Only meaningful with `group_commit`.
+    pub serial_apply: bool,
+    /// `Some(n)`: segmented layout (`path` is a directory); the active
+    /// segment rotates once it reaches `n` bytes and `compact()` runs on
+    /// the background compactor without stalling commits. `None`: the
+    /// single-file baseline layout.
+    pub segment_bytes: Option<u64>,
+    /// Segmented layout only: request a background compaction whenever
+    /// more than this many segment files exist after a rotation
+    /// (0 = compact only on explicit `compact()` calls).
+    pub auto_compact_segments: u64,
 }
 
 impl Default for WalOptions {
@@ -161,21 +223,131 @@ impl Default for WalOptions {
         Self {
             sync: false,
             group_commit: true,
+            serial_apply: false,
+            segment_bytes: None,
+            auto_compact_segments: 0,
         }
     }
 }
 
-/// Shared state between writers and the committer thread.
+// ---------------------------------------------------------------------------
+// Segment naming
+// ---------------------------------------------------------------------------
+
+fn log_name(n: u64) -> String {
+    format!("wal.{n:06}.log")
+}
+
+fn base_name(n: u64) -> String {
+    format!("wal.{n:06}.base")
+}
+
+enum SegFile {
+    Log(u64),
+    Base(u64),
+    Tmp,
+}
+
+fn parse_segment(name: &str) -> Option<SegFile> {
+    let rest = name.strip_prefix("wal.")?;
+    if rest.ends_with(".tmp") {
+        return Some(SegFile::Tmp);
+    }
+    if let Some(num) = rest.strip_suffix(".log") {
+        return num.parse().ok().map(SegFile::Log);
+    }
+    if let Some(num) = rest.strip_suffix(".base") {
+        return num.parse().ok().map(SegFile::Base);
+    }
+    None
+}
+
+/// Segment files at `path` in replay order: the newest base (if any)
+/// first, then `.log` segments in ascending order. For a single-file
+/// store this is the file itself. Introspection for tests and tooling.
+pub fn segment_files(path: &Path) -> Vec<PathBuf> {
+    if !path.is_dir() {
+        return if path.exists() { vec![path.to_path_buf()] } else { Vec::new() };
+    }
+    let mut logs: Vec<u64> = Vec::new();
+    let mut bases: Vec<u64> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(path) {
+        for entry in entries.flatten() {
+            if let Some(name) = entry.file_name().to_str() {
+                match parse_segment(name) {
+                    Some(SegFile::Log(n)) => logs.push(n),
+                    Some(SegFile::Base(n)) => bases.push(n),
+                    _ => {}
+                }
+            }
+        }
+    }
+    let base = bases.iter().max().copied();
+    logs.retain(|n| base.is_none_or(|b| *n > b));
+    logs.sort_unstable();
+    let mut out = Vec::new();
+    if let Some(b) = base {
+        out.push(path.join(base_name(b)));
+    }
+    out.extend(logs.into_iter().map(|n| path.join(log_name(n))));
+    out
+}
+
+/// The segment new appends land in (and the only one recovery will
+/// truncate a torn tail from): the highest-numbered `.log` for a
+/// segmented store, the file itself for a single-file store.
+pub fn tail_segment(path: &Path) -> Option<PathBuf> {
+    let last = segment_files(path).into_iter().next_back()?;
+    if path.is_dir() && !last.extension().is_some_and(|e| e == "log") {
+        return None; // only a base on disk: nothing to append to yet
+    }
+    Some(last)
+}
+
+/// Total on-disk size of the log at `path` (all segments for a
+/// segmented store).
+pub fn total_log_bytes(path: &Path) -> u64 {
+    if !path.is_dir() {
+        return std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    }
+    let mut total = 0;
+    if let Ok(entries) = std::fs::read_dir(path) {
+        for entry in entries.flatten() {
+            if entry.file_name().to_str().is_some_and(|n| parse_segment(n).is_some()) {
+                total += entry.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+    }
+    total
+}
+
+fn sync_dir(dir: &Path) {
+    // Best-effort directory fsync so the rename/unlink batch is durable.
+    if let Ok(f) = File::open(dir) {
+        let _ = f.sync_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Commit lanes + committer
+// ---------------------------------------------------------------------------
+
 #[derive(Default)]
-struct CommitState {
-    /// Encoded records waiting for the next batch.
+struct LaneState {
+    /// Encoded records waiting for the next batch (appended in apply
+    /// order — the lane lock spans the in-memory apply and this append).
     buf: Vec<u8>,
-    /// Records enqueued so far (monotonic).
+    /// Records enqueued on this lane so far (monotonic).
     enqueued: u64,
-    /// Records durably flushed so far.
-    durable: u64,
-    /// True while the committer is writing a batch it has already taken
-    /// out of `buf` (those records are neither in `buf` nor durable yet).
+}
+
+struct WorkState {
+    /// Per-lane count of records durably flushed.
+    durable: Vec<u64>,
+    /// Set by writers after enqueueing; cleared by the committer.
+    pending: bool,
+    /// True while the committer is writing records it has already taken
+    /// out of the lanes.
     inflight: bool,
     /// Sticky committer I/O error; fails all subsequent commits.
     error: Option<String>,
@@ -183,21 +355,643 @@ struct CommitState {
 }
 
 struct CommitShared {
-    state: Mutex<CommitState>,
+    lanes: Vec<Mutex<LaneState>>,
+    work: Mutex<WorkState>,
     /// Committer waits here for work (or shutdown).
-    work: Condvar,
-    /// Writers wait here for `durable` to cover their record.
-    done: Condvar,
+    work_cv: Condvar,
+    /// Writers (and the single-file compactor) wait here for durability.
+    done_cv: Condvar,
 }
+
+impl CommitShared {
+    fn new(lanes: usize) -> Self {
+        Self {
+            lanes: (0..lanes).map(|_| Mutex::new(LaneState::default())).collect(),
+            work: Mutex::new(WorkState {
+                durable: vec![0; lanes],
+                pending: false,
+                inflight: false,
+                error: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+}
+
+fn committer_failed(e: &str) -> DsError {
+    DsError::Storage(format!("wal committer failed: {e}"))
+}
+
+/// The log file the committer (or the serial path) appends to.
+struct LogWriter {
+    w: BufWriter<File>,
+    /// Bytes in the segment the writer points at.
+    bytes: u64,
+    /// Active segment number (0 in the single-file layout).
+    seg_no: u64,
+}
+
+/// Everything the committer and compactor threads need to reach the log.
+struct LogCtx {
+    log: Mutex<LogWriter>,
+    /// Segment directory (None = single-file layout).
+    dir: Option<PathBuf>,
+    sync: bool,
+    segment_bytes: Option<u64>,
+    auto_compact_segments: u64,
+    metrics: Arc<WalMetrics>,
+}
+
+/// Seal the active segment (flush + fsync — sealed segments must never
+/// legally contain torn records) and open the next one. Caller holds the
+/// log lock; this is the only commit-path cost of rotation.
+fn rotate_locked(lw: &mut LogWriter, dir: &Path, metrics: &WalMetrics) -> std::io::Result<()> {
+    // Seal at the last-known-good byte. A failed batch write (e.g. disk
+    // full) can leave a partial record past `lw.bytes` — the committer
+    // only advances it after a successful flush — and a sealed segment
+    // must never carry a torn record (recovery refuses to open one).
+    // The flush is best-effort: if it fails, set_len clips whatever made
+    // it to the file back to the good prefix.
+    let _ = lw.w.flush();
+    lw.w.get_ref().set_len(lw.bytes)?;
+    lw.w.get_ref().sync_all()?;
+    let next = lw.seg_no + 1;
+    let file = OpenOptions::new()
+        .create_new(true)
+        .read(true)
+        .write(true)
+        .open(dir.join(log_name(next)))?;
+    // Persist the directory entry before any record is acknowledged out
+    // of the new segment: without this, a machine crash could drop the
+    // whole file even though its batches were fsynced (sync mode's
+    // "acknowledgement = durability" promise covers the entry too).
+    sync_dir(dir);
+    lw.w = BufWriter::new(file);
+    lw.bytes = 0;
+    lw.seg_no = next;
+    metrics.rotations.fetch_add(1, Ordering::Relaxed);
+    metrics.segments.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// After a failed flush, drop the buffered writer (it may retain part of
+/// the failed batch) and reopen the segment clipped to the last
+/// acknowledged byte, so a later commit cannot strand acknowledged
+/// records behind a torn region (replay stops at the first torn
+/// record). Best-effort: if the reopen itself fails the old writer
+/// stays, and the next commit re-attempts the reset.
+fn reset_writer(lw: &mut LogWriter, seg_path: &Path) {
+    if let Ok(mut f) = OpenOptions::new().read(true).write(true).open(seg_path) {
+        let _ = f.set_len(lw.bytes);
+        let _ = f.seek(SeekFrom::Start(lw.bytes));
+        lw.w = BufWriter::new(f);
+    }
+}
+
+fn maybe_auto_compact(ctx: &LogCtx, compactor: Option<&Arc<CompactorShared>>) {
+    let Some(compactor) = compactor else { return };
+    if ctx.auto_compact_segments == 0 {
+        return;
+    }
+    if ctx.metrics.segments.load(Ordering::Relaxed) > ctx.auto_compact_segments {
+        compactor.request_async();
+    }
+}
+
+/// The committer: drains every lane into one write. Whatever accumulates
+/// while one batch is being written becomes the next batch, so the batch
+/// size adapts to the arrival rate. Within a lane, records are drained
+/// in apply order and earlier batches hit the disk first, which is the
+/// per-shard replay-order invariant.
+fn committer_loop(
+    shared: &CommitShared,
+    ctx: &LogCtx,
+    compactor: Option<&Arc<CompactorShared>>,
+    batches: &AtomicU64,
+    records: &AtomicU64,
+) {
+    let mut batch: Vec<u8> = Vec::new();
+    loop {
+        {
+            let mut ws = shared.work.lock().unwrap();
+            // After a sticky I/O error nothing more is written: writers
+            // fail fast, and appending past the torn region a failed
+            // batch may have left would strand those records where
+            // replay (which stops at the first torn record) can never
+            // reach them. Park until shutdown.
+            while !ws.shutdown && (!ws.pending || ws.error.is_some()) {
+                ws = shared.work_cv.wait(ws).unwrap();
+            }
+            if ws.error.is_some() {
+                return; // shutdown in error mode: nothing left to drain
+            }
+            ws.pending = false;
+            ws.inflight = true;
+        }
+        batch.clear();
+        let mut targets: Vec<(usize, u64)> = Vec::new();
+        for (i, lane) in shared.lanes.iter().enumerate() {
+            let mut st = lane.lock().unwrap();
+            if st.buf.is_empty() {
+                continue;
+            }
+            batch.append(&mut st.buf);
+            targets.push((i, st.enqueued));
+        }
+        if targets.is_empty() {
+            let mut ws = shared.work.lock().unwrap();
+            ws.inflight = false;
+            let stop = ws.shutdown && !ws.pending;
+            drop(ws);
+            shared.done_cv.notify_all();
+            if stop {
+                return;
+            }
+            continue;
+        }
+        // I/O happens outside the lane locks: writers keep applying and
+        // enqueueing while this batch hits the disk.
+        let io = (|| -> std::io::Result<bool> {
+            let mut lw = ctx.log.lock().unwrap();
+            lw.w.write_all(&batch)?;
+            lw.w.flush()?;
+            if ctx.sync {
+                lw.w.get_ref().sync_data()?;
+            }
+            lw.bytes += batch.len() as u64;
+            if let (Some(limit), Some(dir)) = (ctx.segment_bytes, ctx.dir.as_deref()) {
+                if lw.bytes >= limit {
+                    rotate_locked(&mut lw, dir, &ctx.metrics)?;
+                    return Ok(true);
+                }
+            }
+            Ok(false)
+        })();
+        let mut rotated = false;
+        {
+            let mut ws = shared.work.lock().unwrap();
+            ws.inflight = false;
+            match io {
+                Ok(r) => {
+                    rotated = r;
+                    let mut recs = 0;
+                    for (i, t) in &targets {
+                        if *t > ws.durable[*i] {
+                            recs += *t - ws.durable[*i];
+                            ws.durable[*i] = *t;
+                        }
+                    }
+                    batches.fetch_add(1, Ordering::Relaxed);
+                    records.fetch_add(recs, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    ws.error = Some(e.to_string());
+                }
+            }
+        }
+        shared.done_cv.notify_all();
+        if rotated {
+            maybe_auto_compact(ctx, compactor);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Background compactor (segmented layout)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct CompactorState {
+    requested: u64,
+    completed: u64,
+    /// Error (if any) of the most recently completed run.
+    last_error: Option<String>,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct CompactorShared {
+    state: Mutex<CompactorState>,
+    cv: Condvar,
+}
+
+impl CompactorShared {
+    /// Request a compaction without waiting (coalesces with an already
+    /// pending request).
+    fn request_async(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        if st.requested == st.completed {
+            st.requested += 1;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Request a compaction and block until a run that started at or
+    /// after this request completes. Commits are NOT blocked meanwhile.
+    fn request_and_wait(&self) -> Result<(), DsError> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(DsError::Storage("wal compactor is shut down".into()));
+        }
+        st.requested += 1;
+        let goal = st.requested;
+        self.cv.notify_all();
+        while st.completed < goal && !st.shutdown {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.completed < goal {
+            return Err(DsError::Storage("wal compactor shut down mid-request".into()));
+        }
+        match &st.last_error {
+            Some(e) => Err(DsError::Storage(format!("wal compaction failed: {e}"))),
+            None => Ok(()),
+        }
+    }
+
+    fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+fn compactor_loop(shared: &CompactorShared, mem: &InMemoryDatastore, ctx: &LogCtx) {
+    loop {
+        let goal = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.requested > st.completed {
+                    break st.requested;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        let result = run_segmented_compaction(mem, ctx);
+        let mut st = shared.state.lock().unwrap();
+        st.completed = goal;
+        st.last_error = result.err().map(|e| e.to_string());
+        shared.cv.notify_all();
+    }
+}
+
+/// Trials cloned per shard-lock acquisition while snapshotting: bounds
+/// how long the compactor can hold any one shard's writers.
+const SNAPSHOT_TRIAL_PAGE: usize = 512;
+
+/// Stream a snapshot of the live state as replayable records: per shard,
+/// every study row, that study's trials in keyed pages, then the shard's
+/// pending operations. Each page is one short read-lock acquisition, so
+/// the commit path is never stalled for longer than one page clone even
+/// on million-trial studies. Per-record (upsert) consistency is all
+/// replay needs — records the tail re-applies converge to the same
+/// state. Done operations are shed here — compaction is what bounds the
+/// log.
+fn write_snapshot<W: IoWrite>(mem: &InMemoryDatastore, w: &mut W) -> Result<(), DsError> {
+    for idx in 0..mem.shard_count() {
+        let snap = mem.snapshot_shard(idx);
+        for study in snap.studies {
+            let name = study.name.clone();
+            append_record(w, &Mutation::PutStudy(study))?;
+            let mut token = String::new();
+            loop {
+                let page = match mem.list_trials_page(&name, SNAPSHOT_TRIAL_PAGE, &token) {
+                    Ok(page) => page,
+                    // The study was deleted while we streamed it: its
+                    // DeleteStudy record is in the tail (post-seal), so
+                    // any partial trial rows already written are exactly
+                    // the orphans tail replay cleans up.
+                    Err(DsError::StudyNotFound(_)) => break,
+                    Err(e) => return Err(e),
+                };
+                for t in page.trials {
+                    append_record(w, &Mutation::PutTrial(name.clone(), t))?;
+                }
+                if page.next_page_token.is_empty() {
+                    break;
+                }
+                token = page.next_page_token;
+            }
+        }
+        for op in snap.pending_ops {
+            append_record(w, &Mutation::PutOperation(op))?;
+        }
+    }
+    Ok(())
+}
+
+/// One compaction pass. The commit path is touched exactly once — the
+/// log lock is held just long enough to seal the active segment and open
+/// the next — after which commits proceed concurrently with the
+/// snapshot, publish, and deletion steps.
+fn run_segmented_compaction(mem: &InMemoryDatastore, ctx: &LogCtx) -> Result<(), DsError> {
+    let dir = ctx.dir.as_ref().expect("segmented compaction requires a segment directory");
+    let sw = Stopwatch::start();
+    // 1. Seal. Everything applied before this point is in segments
+    //    ≤ `sealed` or already visible to the snapshot; everything after
+    //    lands in the tail and re-applies idempotently at replay.
+    let sealed = {
+        let mut lw = ctx.log.lock().unwrap();
+        let sealed = lw.seg_no;
+        rotate_locked(&mut lw, dir, &ctx.metrics).map_err(io_err)?;
+        sealed
+    };
+    // 2. Snapshot into an unpublished tmp file.
+    let tmp = dir.join(format!("{}.tmp", base_name(sealed)));
+    {
+        let file = File::create(&tmp).map_err(io_err)?;
+        let mut w = BufWriter::new(file);
+        write_snapshot(mem, &mut w)?;
+        w.flush().map_err(io_err)?;
+        w.get_ref().sync_all().map_err(io_err)?;
+    }
+    // 3. Publish atomically; only then do superseded segments die.
+    let base = dir.join(base_name(sealed));
+    std::fs::rename(&tmp, &base).map_err(io_err)?;
+    sync_dir(dir);
+    let base_len = std::fs::metadata(&base).map(|m| m.len()).unwrap_or(0);
+    let mut reclaimed = 0u64;
+    let mut deleted = 0u64;
+    for entry in std::fs::read_dir(dir).map_err(io_err)?.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        // Stale tmps are deleted but not counted toward the gauge delta:
+        // they were never counted into `segments` in the first place.
+        let (doomed, counted) = match parse_segment(name) {
+            Some(SegFile::Log(n)) => (n <= sealed, true),
+            Some(SegFile::Base(n)) => (n < sealed, true),
+            Some(SegFile::Tmp) => (true, false),
+            None => continue,
+        };
+        if doomed {
+            reclaimed += entry.metadata().map(|m| m.len()).unwrap_or(0);
+            let _ = std::fs::remove_file(entry.path());
+            if counted {
+                deleted += 1;
+            }
+        }
+    }
+    sync_dir(dir);
+    // Delta updates, not a recount-and-store: the committer may rotate
+    // (fetch_add) concurrently, and a store would clobber its increment.
+    // +1 for the published base, -1 per deleted file.
+    ctx.metrics.segments.fetch_add(1, Ordering::Relaxed);
+    let _ = ctx
+        .metrics
+        .segments
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(deleted)));
+    ctx.metrics.compactions.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics.compaction_micros.record(sw.elapsed_micros());
+    ctx.metrics
+        .reclaimed_bytes
+        .fetch_add(reclaimed.saturating_sub(base_len), Ordering::Relaxed);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------------
+
+/// Replay one record into the in-memory image.
+///
+/// Replay applies are blind per-key upserts/deletes, so records whose
+/// effects a base snapshot already contains re-apply idempotently. When
+/// `tolerate_orphans`, a `PutTrial` whose study is absent is skipped
+/// rather than treated as corruption: replaying tail segments over a
+/// live-state base hits this exact shape when the snapshot captured a
+/// `DeleteStudy` whose record sits later in the tail than the trial
+/// write (same study = same commit lane = ordered, so the delete is at
+/// or past the snapshot point), and skipping the orphan write is the
+/// state the full tail replay converges to anyway. Without a base in
+/// front — the single-file layout, a base segment itself, or a
+/// never-compacted segment chain — replay order is the complete apply
+/// order, an orphan can only mean corruption, and it stays an error.
+fn replay_apply(
+    mem: &InMemoryDatastore,
+    m: &Mutation,
+    tolerate_orphans: bool,
+) -> Result<(), DsError> {
+    match m {
+        Mutation::PutStudy(s) => mem.apply_put_study(s.clone()),
+        Mutation::DeleteStudy(name) => mem.apply_delete_study(name),
+        Mutation::PutTrial(study, t) => match mem.apply_put_trial(study, t.clone()) {
+            Ok(()) => {}
+            Err(_) if tolerate_orphans => {}
+            Err(e) => return Err(e),
+        },
+        Mutation::DeleteTrial(study, id) => mem.apply_delete_trial(study, *id),
+        Mutation::PutOperation(o) => mem.apply_put_operation(o.clone()),
+    }
+    Ok(())
+}
+
+/// Replay every complete record in `path`, returning the byte length of
+/// the valid prefix. A torn tail (incomplete length prefix or record) is
+/// allowed only when `allow_torn_tail` — the caller truncates it — and
+/// is corruption otherwise (sealed and base segments are fsynced before
+/// later segments exist). `tolerate_orphans` is for tail segments
+/// replayed over a base snapshot (see [`replay_apply`]).
+fn replay_file(
+    path: &Path,
+    mem: &InMemoryDatastore,
+    allow_torn_tail: bool,
+    tolerate_orphans: bool,
+) -> Result<u64, DsError> {
+    let mut buf = Vec::new();
+    File::open(path).map_err(io_err)?.read_to_end(&mut buf).map_err(io_err)?;
+    let mut pos = 0usize;
+    loop {
+        if pos + 4 > buf.len() {
+            break; // torn length prefix
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        if len == 0 || pos + 4 + len > buf.len() {
+            break; // torn record
+        }
+        let kind = buf[pos + 4];
+        let payload = &buf[pos + 5..pos + 4 + len];
+        let env: Envelope = decode(payload)
+            .map_err(|e| DsError::Storage(format!("wal decode ({}): {e}", path.display())))?;
+        let m = Mutation::from_envelope(kind, env)?;
+        replay_apply(mem, &m, tolerate_orphans)?;
+        pos += 4 + len;
+    }
+    let valid = pos as u64;
+    if valid < buf.len() as u64 && !allow_torn_tail {
+        return Err(DsError::Storage(format!(
+            "torn record in sealed wal segment {} (byte {valid} of {}); sealed segments \
+             are fsynced at rotation, so this indicates corruption",
+            path.display(),
+            buf.len()
+        )));
+    }
+    Ok(valid)
+}
+
+fn open_single_file(
+    path: &Path,
+    mem: &InMemoryDatastore,
+    metrics: &WalMetrics,
+) -> Result<LogWriter, DsError> {
+    let mut valid_len = 0u64;
+    if path.exists() {
+        valid_len = replay_file(path, mem, true, false)?;
+    }
+    let mut file = OpenOptions::new()
+        .create(true)
+        .read(true)
+        .write(true)
+        .open(path)
+        .map_err(io_err)?;
+    // Truncate any torn tail so future appends start at a clean record
+    // boundary.
+    file.set_len(valid_len).map_err(io_err)?;
+    file.seek(SeekFrom::End(0)).map_err(io_err)?;
+    metrics.segments.store(1, Ordering::Relaxed);
+    Ok(LogWriter {
+        w: BufWriter::new(file),
+        bytes: valid_len,
+        seg_no: 0,
+    })
+}
+
+fn open_segmented(
+    dir: &Path,
+    mem: &InMemoryDatastore,
+    metrics: &WalMetrics,
+) -> Result<LogWriter, DsError> {
+    if dir.is_file() {
+        return Err(DsError::Storage(format!(
+            "wal path {} is a single-file log but the segmented layout needs a directory; \
+             open with segment_bytes: None, or move the legacy file aside",
+            dir.display()
+        )));
+    }
+    std::fs::create_dir_all(dir).map_err(io_err)?;
+    let mut logs: Vec<u64> = Vec::new();
+    let mut bases: Vec<u64> = Vec::new();
+    let mut stale: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir).map_err(io_err)?.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        match parse_segment(name) {
+            Some(SegFile::Log(n)) => logs.push(n),
+            Some(SegFile::Base(n)) => bases.push(n),
+            Some(SegFile::Tmp) => stale.push(entry.path()),
+            None => {}
+        }
+    }
+    let base = bases.iter().max().copied();
+    if let Some(b) = base {
+        for n in bases.iter().filter(|n| **n < b) {
+            stale.push(dir.join(base_name(*n)));
+        }
+        logs.retain(|n| {
+            if *n <= b {
+                stale.push(dir.join(log_name(*n)));
+                false
+            } else {
+                true
+            }
+        });
+    }
+    // Crash-mid-compaction leftovers: unpublished tmp snapshots, and
+    // segments a published base supersedes (the compactor died between
+    // the rename and the deletes). Cleared before replay.
+    for p in stale {
+        let _ = std::fs::remove_file(&p);
+    }
+    logs.sort_unstable();
+    if let Some(b) = base {
+        // The base is a point snapshot written study-before-trials: no
+        // torn tails (published by atomic rename) and no orphans.
+        replay_file(&dir.join(base_name(b)), mem, false, false)?;
+    }
+    // Tail records may re-apply effects the base already contains, so
+    // orphan trial writes are tolerated — but only when a base actually
+    // sits in front; a never-compacted chain is the complete history and
+    // stays strict.
+    let tolerate_orphans = base.is_some();
+    for (i, n) in logs.iter().enumerate() {
+        let p = dir.join(log_name(*n));
+        let is_final = i + 1 == logs.len();
+        let valid = replay_file(&p, mem, is_final, tolerate_orphans)?;
+        if is_final {
+            let len = std::fs::metadata(&p).map_err(io_err)?.len();
+            if valid < len {
+                // Truncate the torn tail now, so this file never becomes
+                // a sealed segment carrying a torn record.
+                let f = OpenOptions::new().write(true).open(&p).map_err(io_err)?;
+                f.set_len(valid).map_err(io_err)?;
+            }
+        }
+    }
+    // Resume appending to the tail segment (a fresh file every open
+    // would accumulate never-rotated empty segments across restarts);
+    // if it is already over the size threshold the committer rotates it
+    // at the next batch.
+    let lw = match logs.last() {
+        Some(&n) => {
+            let mut file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .open(dir.join(log_name(n)))
+                .map_err(io_err)?;
+            let bytes = file.seek(SeekFrom::End(0)).map_err(io_err)?;
+            LogWriter {
+                w: BufWriter::new(file),
+                bytes,
+                seg_no: n,
+            }
+        }
+        None => {
+            let n = base.map_or(1, |b| b + 1);
+            let file = OpenOptions::new()
+                .create_new(true)
+                .read(true)
+                .write(true)
+                .open(dir.join(log_name(n)))
+                .map_err(io_err)?;
+            sync_dir(dir);
+            LogWriter {
+                w: BufWriter::new(file),
+                bytes: 0,
+                seg_no: n,
+            }
+        }
+    };
+    metrics.segments.store(
+        logs.len().max(1) as u64 + u64::from(base.is_some()),
+        Ordering::Relaxed,
+    );
+    Ok(lw)
+}
+
+// ---------------------------------------------------------------------------
+// The datastore
+// ---------------------------------------------------------------------------
 
 /// Durable datastore: in-memory state + write-ahead log.
 pub struct WalDatastore {
-    mem: InMemoryDatastore,
-    log: Arc<Mutex<BufWriter<File>>>,
+    mem: Arc<InMemoryDatastore>,
+    ctx: Arc<LogCtx>,
     path: PathBuf,
     opts: WalOptions,
+    /// Writers hold this for read around apply + enqueue; the
+    /// single-file `compact()` takes it for write to stall the commit
+    /// path (the deprecated behavior the segmented compactor removes).
+    commit_gate: RwLock<()>,
     commit: Option<Arc<CommitShared>>,
     committer: Option<JoinHandle<()>>,
+    compactor: Option<Arc<CompactorShared>>,
+    compactor_join: Option<JoinHandle<()>>,
     /// Batches flushed by the committer (observability: `records_flushed /
     /// batches_flushed` = achieved group-commit factor).
     batches_flushed: Arc<AtomicU64>,
@@ -206,7 +1000,8 @@ pub struct WalDatastore {
 
 impl WalDatastore {
     /// Open (or create) a WAL-backed store at `path`, replaying any
-    /// existing log. Group commit on, no fsync (see [`WalOptions`]).
+    /// existing log. Group commit on, per-shard lanes, no fsync,
+    /// single-file layout (see [`WalOptions`]).
     pub fn open(path: impl AsRef<Path>) -> Result<Self, DsError> {
         Self::open_with_options(path, WalOptions::default())
     }
@@ -222,63 +1017,52 @@ impl WalDatastore {
         )
     }
 
-    /// Open with explicit durability/batching options.
+    /// Open with explicit durability/batching/layout options.
     pub fn open_with_options(path: impl AsRef<Path>, opts: WalOptions) -> Result<Self, DsError> {
         let path = path.as_ref().to_path_buf();
-        let mem = InMemoryDatastore::new();
-        let mut valid_len = 0u64;
-        if path.exists() {
-            let mut f = File::open(&path).map_err(io_err)?;
-            let mut buf = Vec::new();
-            f.read_to_end(&mut buf).map_err(io_err)?;
-            let mut pos = 0usize;
-            loop {
-                if pos + 4 > buf.len() {
-                    break; // torn length prefix
-                }
-                let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
-                if len == 0 || pos + 4 + len > buf.len() {
-                    break; // torn record
-                }
-                let kind = buf[pos + 4];
-                let payload = &buf[pos + 5..pos + 4 + len];
-                let env: Envelope = decode(payload)
-                    .map_err(|e| DsError::Storage(format!("wal decode: {e}")))?;
-                let m = Mutation::from_envelope(kind, env)?;
-                apply(&mem, &m)?;
-                pos += 4 + len;
-                valid_len = pos as u64;
-            }
-        }
-        let mut file = OpenOptions::new()
-            .create(true)
-            .read(true)
-            .write(true)
-            .open(&path)
-            .map_err(io_err)?;
-        // Truncate any torn tail so future appends start at a clean record
-        // boundary.
-        file.set_len(valid_len).map_err(io_err)?;
-        file.seek(SeekFrom::End(0)).map_err(io_err)?;
-        let log = Arc::new(Mutex::new(BufWriter::new(file)));
+        let mem = Arc::new(InMemoryDatastore::new());
+        let metrics = Arc::new(WalMetrics::default());
+        let (lw, dir) = match opts.segment_bytes {
+            None => (open_single_file(&path, &mem, &metrics)?, None),
+            Some(_) => (open_segmented(&path, &mem, &metrics)?, Some(path.clone())),
+        };
+        let ctx = Arc::new(LogCtx {
+            log: Mutex::new(lw),
+            dir,
+            sync: opts.sync,
+            segment_bytes: opts.segment_bytes,
+            auto_compact_segments: opts.auto_compact_segments,
+            metrics,
+        });
+        let (compactor, compactor_join) = if opts.segment_bytes.is_some() {
+            let shared = Arc::new(CompactorShared::default());
+            let handle = std::thread::Builder::new()
+                .name("wal-compactor".into())
+                .spawn({
+                    let shared = Arc::clone(&shared);
+                    let mem = Arc::clone(&mem);
+                    let ctx = Arc::clone(&ctx);
+                    move || compactor_loop(&shared, &mem, &ctx)
+                })
+                .map_err(io_err)?;
+            (Some(shared), Some(handle))
+        } else {
+            (None, None)
+        };
         let batches_flushed = Arc::new(AtomicU64::new(0));
         let records_flushed = Arc::new(AtomicU64::new(0));
-
         let (commit, committer) = if opts.group_commit {
-            let shared = Arc::new(CommitShared {
-                state: Mutex::new(CommitState::default()),
-                work: Condvar::new(),
-                done: Condvar::new(),
-            });
+            let lanes = if opts.serial_apply { 1 } else { mem.shard_count() };
+            let shared = Arc::new(CommitShared::new(lanes));
             let handle = std::thread::Builder::new()
                 .name("wal-committer".into())
                 .spawn({
                     let shared = Arc::clone(&shared);
-                    let log = Arc::clone(&log);
+                    let ctx = Arc::clone(&ctx);
+                    let compactor = compactor.clone();
                     let batches = Arc::clone(&batches_flushed);
                     let records = Arc::clone(&records_flushed);
-                    let sync = opts.sync;
-                    move || committer_loop(&shared, &log, sync, &batches, &records)
+                    move || committer_loop(&shared, &ctx, compactor.as_ref(), &batches, &records)
                 })
                 .map_err(io_err)?;
             (Some(shared), Some(handle))
@@ -287,56 +1071,80 @@ impl WalDatastore {
         };
         Ok(Self {
             mem,
-            log,
+            ctx,
             path,
             opts,
+            commit_gate: RwLock::new(()),
             commit,
             committer,
+            compactor,
+            compactor_join,
             batches_flushed,
             records_flushed,
         })
     }
 
-    /// Rewrite the log as a compact snapshot of current state (atomic
-    /// replace). Bounds recovery time for long-lived servers.
+    /// Compact the log so replay cost stays bounded.
+    ///
+    /// * **Segmented layout**: hands the work to the background
+    ///   compactor and waits for it to finish — commits keep flowing
+    ///   into the active segment the whole time (the snapshot never
+    ///   takes the commit path). Prefer this layout on live servers.
+    /// * **Single-file layout** *(deprecated stalling variant)*: quiesces
+    ///   the committer and holds the commit gate through the snapshot
+    ///   swap, so every writer stalls for the full duration. Kept only
+    ///   as the measurement baseline; open with
+    ///   `segment_bytes: Some(_)` to get the non-stalling compactor.
     pub fn compact(&self) -> Result<(), DsError> {
-        // Quiesce the committer: wait until both the shared buffer and
-        // any in-flight batch have been durably flushed (or the committer
-        // reported an error), then keep holding the commit lock through
-        // the snapshot swap. Writers take this lock before touching mem,
-        // so state cannot change under the snapshot, and no writer is
-        // ever acknowledged against records that only the pre-compaction
-        // log contained.
-        let _guard = match &self.commit {
-            Some(shared) => {
-                let mut state = shared.state.lock().unwrap();
-                while (!state.buf.is_empty() || state.inflight) && state.error.is_none() {
-                    shared.work.notify_one();
-                    state = shared.done.wait(state).unwrap();
-                }
-                if let Some(e) = &state.error {
-                    return Err(DsError::Storage(format!("wal committer failed: {e}")));
-                }
-                Some(state)
-            }
-            None => None,
-        };
+        match &self.compactor {
+            Some(shared) => shared.request_and_wait(),
+            None => self.compact_single_file(),
+        }
+    }
 
-        let mut log = self.log.lock().unwrap();
+    /// Request a background compaction without waiting for it. Returns
+    /// false on the single-file layout (which has no background
+    /// compactor).
+    pub fn compact_async(&self) -> bool {
+        match &self.compactor {
+            Some(shared) => {
+                shared.request_async();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn compact_single_file(&self) -> Result<(), DsError> {
+        let sw = Stopwatch::start();
+        // Stall the commit path (legacy semantics): no new applies while
+        // the snapshot is cut, so the swapped log exactly covers state.
+        let _gate = self.commit_gate.write().unwrap();
+        if let Some(shared) = &self.commit {
+            // Everything already enqueued must be durable before the
+            // swap (those writers were or will be acknowledged against
+            // records the old log contains).
+            let mut ws = shared.work.lock().unwrap();
+            loop {
+                if let Some(e) = &ws.error {
+                    return Err(committer_failed(e));
+                }
+                let drained = shared.lanes.iter().all(|l| l.lock().unwrap().buf.is_empty());
+                if drained && !ws.inflight {
+                    break;
+                }
+                ws.pending = true;
+                shared.work_cv.notify_one();
+                ws = shared.done_cv.wait(ws).unwrap();
+            }
+        }
+        let mut lw = self.ctx.log.lock().unwrap();
+        let before = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
         let tmp = self.path.with_extension("wal.tmp");
         {
             let file = File::create(&tmp).map_err(io_err)?;
             let mut w = BufWriter::new(file);
-            for study in self.mem.list_studies()? {
-                let name = study.name.clone();
-                append_record(&mut w, &Mutation::PutStudy(study))?;
-                for trial in self.mem.list_trials(&name)? {
-                    append_record(&mut w, &Mutation::PutTrial(name.clone(), trial))?;
-                }
-            }
-            for op in self.mem.pending_operations()? {
-                append_record(&mut w, &Mutation::PutOperation(op))?;
-            }
+            write_snapshot(&self.mem, &mut w)?;
             w.flush().map_err(io_err)?;
             w.get_ref().sync_all().map_err(io_err)?;
         }
@@ -346,13 +1154,42 @@ impl WalDatastore {
             .append(true)
             .open(&self.path)
             .map_err(io_err)?;
-        *log = BufWriter::new(file);
+        let len = file.metadata().map_err(io_err)?.len();
+        *lw = LogWriter {
+            w: BufWriter::new(file),
+            bytes: len,
+            seg_no: 0,
+        };
+        self.ctx.metrics.compactions.fetch_add(1, Ordering::Relaxed);
+        self.ctx.metrics.compaction_micros.record(sw.elapsed_micros());
+        self.ctx
+            .metrics
+            .reclaimed_bytes
+            .fetch_add(before.saturating_sub(len), Ordering::Relaxed);
         Ok(())
     }
 
-    /// Size of the log file in bytes.
+    /// The options this store was opened with.
+    pub fn options(&self) -> WalOptions {
+        self.opts
+    }
+
+    /// Total size of the log in bytes (all segments for the segmented
+    /// layout).
     pub fn log_size(&self) -> u64 {
-        std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+        total_log_bytes(&self.path)
+    }
+
+    /// Segment files currently on disk (1 for the single-file layout).
+    pub fn segment_count(&self) -> u64 {
+        self.ctx.metrics.segments.load(Ordering::Relaxed)
+    }
+
+    /// The store's instrumentation; link into
+    /// [`crate::service::metrics::ServiceMetrics::set_wal`] so reports
+    /// cover the durable store.
+    pub fn metrics(&self) -> Arc<WalMetrics> {
+        Arc::clone(&self.ctx.metrics)
     }
 
     /// Batches the committer has flushed (0 in serial mode).
@@ -369,50 +1206,100 @@ impl WalDatastore {
 
     /// Run a mutating operation and durably log the mutations it returns.
     ///
-    /// Group-commit mode: the in-memory apply and the buffer append happen
-    /// under the commit lock (so log order == apply order), then the
-    /// writer blocks until the committer has flushed its records.
-    /// Serial mode: apply, then append + flush inline under the log lock.
+    /// Group-commit mode: the in-memory apply and the lane append happen
+    /// under the *lane's* lock — the lane chosen by `lane_key`'s shard —
+    /// so log order matches apply order per shard while different shards
+    /// apply in parallel; the writer then blocks until the committer has
+    /// flushed its records. Serial mode: apply, then append + flush
+    /// inline under the log lock.
     fn commit<T>(
         &self,
+        lane_key: &str,
         op: impl FnOnce(&InMemoryDatastore) -> Result<(T, Vec<Mutation>), DsError>,
     ) -> Result<T, DsError> {
+        // The stopwatch starts before the gate: a single-file compact()
+        // parks writers right here, and that stall is exactly what
+        // commit_wait / commit_stall_max_micros exist to expose.
+        let sw = Stopwatch::start();
+        let _gate = self.commit_gate.read().unwrap();
         match &self.commit {
             Some(shared) => {
-                let mut state = shared.state.lock().unwrap();
-                if let Some(e) = &state.error {
-                    return Err(DsError::Storage(format!("wal committer failed: {e}")));
+                {
+                    let ws = shared.work.lock().unwrap();
+                    if let Some(e) = &ws.error {
+                        return Err(committer_failed(e));
+                    }
                 }
-                let (value, muts) = op(&self.mem)?;
-                if muts.is_empty() {
-                    return Ok(value);
+                let lane_idx = if shared.lanes.len() == 1 {
+                    0
+                } else {
+                    self.mem.shard_index(lane_key)
+                };
+                let (value, my_seq) = {
+                    let mut lane = shared.lanes[lane_idx].lock().unwrap();
+                    let (value, muts) = op(self.mem.as_ref())?;
+                    if muts.is_empty() {
+                        return Ok(value);
+                    }
+                    for m in &muts {
+                        append_record(&mut lane.buf, m)?;
+                    }
+                    lane.enqueued += muts.len() as u64;
+                    (value, lane.enqueued)
+                };
+                let mut ws = shared.work.lock().unwrap();
+                ws.pending = true;
+                shared.work_cv.notify_one();
+                while ws.durable[lane_idx] < my_seq && ws.error.is_none() {
+                    ws = shared.done_cv.wait(ws).unwrap();
                 }
-                for m in &muts {
-                    append_record(&mut state.buf, m)?;
+                if let Some(e) = &ws.error {
+                    return Err(committer_failed(e));
                 }
-                state.enqueued += muts.len() as u64;
-                let my_seq = state.enqueued;
-                shared.work.notify_one();
-                while state.durable < my_seq && state.error.is_none() {
-                    state = shared.done.wait(state).unwrap();
-                }
-                if let Some(e) = &state.error {
-                    return Err(DsError::Storage(format!("wal committer failed: {e}")));
-                }
+                drop(ws);
+                self.ctx.metrics.record_commit_wait(sw.elapsed_micros());
                 Ok(value)
             }
             None => {
                 // The log lock spans the in-memory apply too, so records
                 // for the same key cannot be appended in the opposite
                 // order they were applied (replay = acknowledged state).
-                let mut log = self.log.lock().unwrap();
-                let (value, muts) = op(&self.mem)?;
-                for m in &muts {
-                    append_record(&mut *log, m)?;
+                let mut lw = self.ctx.log.lock().unwrap();
+                let (value, muts) = op(self.mem.as_ref())?;
+                if muts.is_empty() {
+                    return Ok(value);
                 }
-                log.flush().map_err(io_err)?;
-                if self.opts.sync {
-                    log.get_ref().sync_data().map_err(io_err)?;
+                let mut appended = 0u64;
+                for m in &muts {
+                    appended += append_record(&mut lw.w, m)? as u64;
+                }
+                let flushed = (|| -> std::io::Result<()> {
+                    lw.w.flush()?;
+                    if self.ctx.sync {
+                        lw.w.get_ref().sync_data()?;
+                    }
+                    Ok(())
+                })();
+                if let Err(e) = flushed {
+                    let seg_path = match self.ctx.dir.as_deref() {
+                        Some(dir) => dir.join(log_name(lw.seg_no)),
+                        None => self.path.clone(),
+                    };
+                    reset_writer(&mut lw, &seg_path);
+                    return Err(io_err(e));
+                }
+                lw.bytes += appended;
+                let mut rotated = false;
+                if let (Some(limit), Some(dir)) = (self.ctx.segment_bytes, self.ctx.dir.as_deref()) {
+                    if lw.bytes >= limit {
+                        rotate_locked(&mut lw, dir, &self.ctx.metrics).map_err(io_err)?;
+                        rotated = true;
+                    }
+                }
+                drop(lw);
+                self.ctx.metrics.record_commit_wait(sw.elapsed_micros());
+                if rotated {
+                    maybe_auto_compact(&self.ctx, self.compactor.as_ref());
                 }
                 Ok(value)
             }
@@ -423,68 +1310,25 @@ impl WalDatastore {
 impl Drop for WalDatastore {
     fn drop(&mut self) {
         if let Some(shared) = &self.commit {
-            let mut state = shared.state.lock().unwrap();
-            state.shutdown = true;
-            shared.work.notify_all();
-            drop(state);
+            let mut ws = shared.work.lock().unwrap();
+            ws.shutdown = true;
+            ws.pending = true; // force a final drain pass
+            drop(ws);
+            shared.work_cv.notify_all();
         }
         if let Some(handle) = self.committer.take() {
             let _ = handle.join();
         }
+        if let Some(shared) = &self.compactor {
+            shared.shutdown();
+        }
+        if let Some(handle) = self.compactor_join.take() {
+            let _ = handle.join();
+        }
         // Best-effort flush of the serial path's buffered writer.
-        if let Ok(mut log) = self.log.lock() {
-            let _ = log.flush();
+        if let Ok(mut lw) = self.ctx.log.lock() {
+            let _ = lw.w.flush();
         }
-    }
-}
-
-/// The committer: drains the shared buffer in batches. Whatever
-/// accumulates while one batch is being written becomes the next batch,
-/// so the batch size adapts to the arrival rate.
-fn committer_loop(
-    shared: &CommitShared,
-    log: &Mutex<BufWriter<File>>,
-    sync: bool,
-    batches: &AtomicU64,
-    records: &AtomicU64,
-) {
-    loop {
-        let (batch, target) = {
-            let mut state = shared.state.lock().unwrap();
-            while state.buf.is_empty() && !state.shutdown {
-                state = shared.work.wait(state).unwrap();
-            }
-            if state.buf.is_empty() && state.shutdown {
-                return;
-            }
-            state.inflight = true;
-            (std::mem::take(&mut state.buf), state.enqueued)
-        };
-        // I/O happens outside the commit lock: writers keep enqueueing
-        // into the (now empty) buffer while this batch hits the disk.
-        let result = (|| -> Result<(), std::io::Error> {
-            let mut log = log.lock().unwrap();
-            log.write_all(&batch)?;
-            log.flush()?;
-            if sync {
-                log.get_ref().sync_data()?;
-            }
-            Ok(())
-        })();
-        let mut state = shared.state.lock().unwrap();
-        state.inflight = false;
-        match result {
-            Ok(()) => {
-                let n_before = state.durable;
-                state.durable = state.durable.max(target);
-                batches.fetch_add(1, Ordering::Relaxed);
-                records.fetch_add(state.durable - n_before, Ordering::Relaxed);
-            }
-            Err(e) => {
-                state.error = Some(e.to_string());
-            }
-        }
-        shared.done.notify_all();
     }
 }
 
@@ -492,29 +1336,26 @@ fn io_err(e: std::io::Error) -> DsError {
     DsError::Storage(e.to_string())
 }
 
-fn append_record<W: IoWrite>(w: &mut W, m: &Mutation) -> Result<(), DsError> {
+/// Append one framed record, returning the bytes written.
+fn append_record<W: IoWrite>(w: &mut W, m: &Mutation) -> Result<usize, DsError> {
     let payload = encode(&m.to_envelope());
     let total = (1 + payload.len()) as u32;
     w.write_all(&total.to_le_bytes()).map_err(io_err)?;
     w.write_all(&[m.kind()]).map_err(io_err)?;
     w.write_all(&payload).map_err(io_err)?;
-    Ok(())
-}
-
-fn apply(mem: &InMemoryDatastore, m: &Mutation) -> Result<(), DsError> {
-    match m {
-        Mutation::PutStudy(s) => mem.apply_put_study(s.clone()),
-        Mutation::DeleteStudy(name) => mem.apply_delete_study(name),
-        Mutation::PutTrial(study, t) => mem.apply_put_trial(study, t.clone())?,
-        Mutation::DeleteTrial(study, id) => mem.apply_delete_trial(study, *id),
-        Mutation::PutOperation(o) => mem.apply_put_operation(o.clone()),
-    }
-    Ok(())
+    Ok(4 + 1 + payload.len())
 }
 
 impl Datastore for WalDatastore {
-    fn create_study(&self, study: StudyProto) -> Result<StudyProto, DsError> {
-        self.commit(|mem| {
+    fn create_study(&self, mut study: StudyProto) -> Result<StudyProto, DsError> {
+        // Reserve the name up front so the create routes to the same
+        // commit lane as every later record of this study (per-study
+        // replay order is a per-lane guarantee).
+        if study.name.is_empty() {
+            study.name = self.mem.reserve_study_name();
+        }
+        let lane = study.name.clone();
+        self.commit(&lane, move |mem| {
             let created = mem.create_study(study)?;
             let m = Mutation::PutStudy(created.clone());
             Ok((created, vec![m]))
@@ -542,21 +1383,22 @@ impl Datastore for WalDatastore {
     }
 
     fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
-        self.commit(|mem| {
+        let lane = study.name.clone();
+        self.commit(&lane, move |mem| {
             mem.update_study(study.clone())?;
             Ok(((), vec![Mutation::PutStudy(study)]))
         })
     }
 
     fn delete_study(&self, name: &str) -> Result<(), DsError> {
-        self.commit(|mem| {
+        self.commit(name, |mem| {
             mem.delete_study(name)?;
             Ok(((), vec![Mutation::DeleteStudy(name.to_string())]))
         })
     }
 
     fn create_trial(&self, study: &str, trial: TrialProto) -> Result<TrialProto, DsError> {
-        self.commit(|mem| {
+        self.commit(study, |mem| {
             let created = mem.create_trial(study, trial)?;
             let m = Mutation::PutTrial(study.to_string(), created.clone());
             Ok((created, vec![m]))
@@ -591,14 +1433,14 @@ impl Datastore for WalDatastore {
     }
 
     fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
-        self.commit(|mem| {
+        self.commit(study, move |mem| {
             mem.update_trial(study, trial.clone())?;
             Ok(((), vec![Mutation::PutTrial(study.to_string(), trial)]))
         })
     }
 
     fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError> {
-        self.commit(|mem| {
+        self.commit(study, |mem| {
             mem.delete_trial(study, id)?;
             Ok(((), vec![Mutation::DeleteTrial(study.to_string(), id)]))
         })
@@ -610,15 +1452,19 @@ impl Datastore for WalDatastore {
         id: u64,
         f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
     ) -> Result<TrialProto, DsError> {
-        self.commit(|mem| {
+        self.commit(study, |mem| {
             let updated = mem.mutate_trial(study, id, f)?;
             let m = Mutation::PutTrial(study.to_string(), updated.clone());
             Ok((updated, vec![m]))
         })
     }
 
-    fn create_operation(&self, op: OperationProto) -> Result<OperationProto, DsError> {
-        self.commit(|mem| {
+    fn create_operation(&self, mut op: OperationProto) -> Result<OperationProto, DsError> {
+        if op.name.is_empty() {
+            op.name = self.mem.reserve_operation_name();
+        }
+        let lane = op.name.clone();
+        self.commit(&lane, move |mem| {
             let created = mem.create_operation(op)?;
             let m = Mutation::PutOperation(created.clone());
             Ok((created, vec![m]))
@@ -630,7 +1476,8 @@ impl Datastore for WalDatastore {
     }
 
     fn update_operation(&self, op: OperationProto) -> Result<(), DsError> {
-        self.commit(|mem| {
+        let lane = op.name.clone();
+        self.commit(&lane, move |mem| {
             mem.update_operation(op.clone())?;
             Ok(((), vec![Mutation::PutOperation(op)]))
         })
@@ -645,7 +1492,7 @@ impl Datastore for WalDatastore {
         study: &str,
         updates: &[UnitMetadataUpdate],
     ) -> Result<(), DsError> {
-        self.commit(|mem| {
+        self.commit(study, |mem| {
             mem.update_metadata(study, updates)?;
             // Log the resulting rows (study spec and/or touched trials)
             // as one atomic batch.
@@ -685,6 +1532,13 @@ mod tests {
         StudyProto {
             display_name: display.to_string(),
             ..Default::default()
+        }
+    }
+
+    fn seg_opts(segment_bytes: u64) -> WalOptions {
+        WalOptions {
+            segment_bytes: Some(segment_bytes),
+            ..WalOptions::default()
         }
     }
 
@@ -788,6 +1642,7 @@ mod tests {
         ds.compact().unwrap();
         let after = ds.log_size();
         assert!(after < before / 10, "log {before} -> {after}");
+        assert_eq!(ds.metrics().compactions(), 1);
         // Post-compaction appends + replay still correct.
         ds.create_trial(&s.name, TrialProto::default()).unwrap();
         drop(ds);
@@ -858,7 +1713,13 @@ mod tests {
                 .collect()
         };
         let grouped = run(WalOptions::default(), "gc");
-        let serial = run(WalOptions { sync: false, group_commit: false }, "serial");
+        let serial = run(
+            WalOptions {
+                group_commit: false,
+                ..WalOptions::default()
+            },
+            "serial",
+        );
         assert_eq!(grouped, serial);
         assert_eq!(grouped.len(), 19);
     }
@@ -937,4 +1798,294 @@ mod tests {
         // Recovery truncated back to the acked prefix.
         assert_eq!(ds.log_size(), acked_len);
     }
+
+    // -- segmented layout ------------------------------------------------
+
+    #[test]
+    fn segmented_state_survives_reopen_across_rotations() {
+        let dir = tmpdir("seg-reopen");
+        let path = dir.join("wal");
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(2048)).unwrap();
+            let s = ds.create_study(study("seg")).unwrap();
+            for i in 0..200 {
+                let t = ds.create_trial(&s.name, TrialProto::default()).unwrap();
+                ds.mutate_trial(&s.name, t.id, &mut |t| {
+                    t.created_ms = i;
+                    Ok(())
+                })
+                .unwrap();
+            }
+            assert!(ds.segment_count() > 1, "rotation must have produced segments");
+            assert!(ds.metrics().rotations() >= 1);
+        }
+        let ds = WalDatastore::open_with_options(&path, seg_opts(2048)).unwrap();
+        let s = ds.lookup_study("seg").unwrap();
+        assert_eq!(ds.trial_count(&s.name).unwrap(), 200);
+        assert_eq!(ds.get_trial(&s.name, 200).unwrap().created_ms, 199);
+        // Counters continue, no collisions.
+        assert_eq!(ds.create_trial(&s.name, TrialProto::default()).unwrap().id, 201);
+    }
+
+    #[test]
+    fn segmented_replay_applies_base_then_tail() {
+        let dir = tmpdir("seg-base-tail");
+        let path = dir.join("wal");
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(1024)).unwrap();
+            let s = ds.create_study(study("bt")).unwrap();
+            for _ in 0..40 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            ds.compact().unwrap();
+            // Post-compaction commits land in the tail.
+            for _ in 0..10 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            ds.delete_trial(&s.name, 3).unwrap();
+            let files = segment_files(&path);
+            assert!(
+                files[0].extension().is_some_and(|e| e == "base"),
+                "replay starts at the base: {files:?}"
+            );
+        }
+        let ds = WalDatastore::open_with_options(&path, seg_opts(1024)).unwrap();
+        assert_eq!(ds.trial_count("studies/1").unwrap(), 49);
+        assert!(ds.get_trial("studies/1", 3).is_err());
+        assert!(ds.get_trial("studies/1", 50).is_ok());
+        assert_eq!(ds.create_trial("studies/1", TrialProto::default()).unwrap().id, 51);
+    }
+
+    #[test]
+    fn segmented_compaction_runs_off_the_commit_path() {
+        let dir = tmpdir("seg-compact");
+        let path = dir.join("wal");
+        let committed;
+        {
+            let ds = Arc::new(WalDatastore::open_with_options(&path, seg_opts(4096)).unwrap());
+            let s = ds.create_study(study("c")).unwrap();
+            let t = ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            for i in 0..10_000 {
+                ds.mutate_trial(&s.name, t.id, &mut |t| {
+                    t.created_ms = i;
+                    Ok(())
+                })
+                .unwrap();
+            }
+            let before = ds.log_size();
+            // A writer keeps committing while the background compactor
+            // runs; none of its commits may be lost or blocked on error.
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let writer = {
+                let ds = Arc::clone(&ds);
+                let name = s.name.clone();
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        ds.create_trial(&name, TrialProto::default()).unwrap();
+                        n += 1;
+                    }
+                    n
+                })
+            };
+            ds.compact().unwrap();
+            stop.store(true, Ordering::Relaxed);
+            committed = writer.join().unwrap();
+            assert!(ds.metrics().compactions() >= 1);
+            assert!(ds.log_size() < before, "superseded segments deleted");
+        }
+        // Every acknowledged commit — before, during, and after the
+        // compaction — survives replay of base + tail.
+        let ds = WalDatastore::open_with_options(&path, seg_opts(4096)).unwrap();
+        assert_eq!(ds.trial_count("studies/1").unwrap() as u64, 1 + committed);
+        assert_eq!(ds.get_trial("studies/1", 1).unwrap().created_ms, 9999);
+    }
+
+    #[test]
+    fn per_shard_lanes_preserve_per_study_replay_order() {
+        let dir = tmpdir("lanes");
+        let path = dir.join("wal");
+        let threads = 8usize;
+        let per_thread = 100u64;
+        {
+            let ds =
+                Arc::new(WalDatastore::open_with_options(&path, seg_opts(16 * 1024)).unwrap());
+            let studies: Vec<String> = (0..threads)
+                .map(|i| ds.create_study(study(&format!("lane{i}"))).unwrap().name)
+                .collect();
+            let handles: Vec<_> = studies
+                .iter()
+                .map(|name| {
+                    let ds = Arc::clone(&ds);
+                    let name = name.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per_thread {
+                            let t = ds.create_trial(&name, TrialProto::default()).unwrap();
+                            ds.mutate_trial(&name, t.id, &mut |t| {
+                                t.created_ms = i;
+                                Ok(())
+                            })
+                            .unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        let ds = WalDatastore::open_with_options(&path, seg_opts(16 * 1024)).unwrap();
+        for i in 0..threads {
+            let s = ds.lookup_study(&format!("lane{i}")).unwrap();
+            let trials = ds.list_trials(&s.name).unwrap();
+            let ids: Vec<u64> = trials.iter().map(|t| t.id).collect();
+            assert_eq!(ids, (1..=per_thread).collect::<Vec<u64>>(), "study {i} ids dense");
+            for t in trials {
+                assert_eq!(t.created_ms, t.id - 1, "per-study replay order held");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_apply_baseline_matches_lanes() {
+        let run = |serial_apply: bool, tag: &str| -> Vec<(u64, u64)> {
+            let path = tmpdir(tag).join("wal");
+            let opts = WalOptions {
+                serial_apply,
+                segment_bytes: Some(1024),
+                ..WalOptions::default()
+            };
+            {
+                let ds = WalDatastore::open_with_options(&path, opts).unwrap();
+                let s = ds.create_study(study("sa")).unwrap();
+                for i in 0..30 {
+                    let t = ds.create_trial(&s.name, TrialProto::default()).unwrap();
+                    ds.mutate_trial(&s.name, t.id, &mut |t| {
+                        t.created_ms = i;
+                        Ok(())
+                    })
+                    .unwrap();
+                }
+                ds.delete_trial(&s.name, 7).unwrap();
+            }
+            let ds = WalDatastore::open_with_options(&path, opts).unwrap();
+            ds.list_trials("studies/1")
+                .unwrap()
+                .into_iter()
+                .map(|t| (t.id, t.created_ms))
+                .collect()
+        };
+        let lanes = run(false, "sa-lanes");
+        let serial = run(true, "sa-serial");
+        assert_eq!(lanes, serial);
+        assert_eq!(lanes.len(), 29);
+    }
+
+    #[test]
+    fn auto_compaction_triggers_in_background() {
+        let dir = tmpdir("seg-auto");
+        let path = dir.join("wal");
+        let opts = WalOptions {
+            segment_bytes: Some(512),
+            auto_compact_segments: 2,
+            ..WalOptions::default()
+        };
+        let ds = WalDatastore::open_with_options(&path, opts).unwrap();
+        let s = ds.create_study(study("auto")).unwrap();
+        for _ in 0..200 {
+            ds.create_trial(&s.name, TrialProto::default()).unwrap();
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while ds.metrics().compactions() == 0 {
+            assert!(std::time::Instant::now() < deadline, "auto-compaction never ran");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(ds.trial_count(&s.name).unwrap(), 200);
+    }
+
+    #[test]
+    fn torn_tail_only_allowed_in_final_segment() {
+        let dir = tmpdir("seg-torn");
+        let path = dir.join("wal");
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(512)).unwrap();
+            let s = ds.create_study(study("t")).unwrap();
+            for _ in 0..100 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            assert!(ds.segment_count() >= 3, "need several segments");
+        }
+        // Drop empty trailing segments (a legal crash state on their
+        // own), then tear the final non-empty one: recovery truncates.
+        let mut logs = segment_files(&path);
+        while let Some(last) = logs.last() {
+            if std::fs::metadata(last).unwrap().len() == 0 {
+                std::fs::remove_file(last).unwrap();
+                logs.pop();
+            } else {
+                break;
+            }
+        }
+        let tail = logs.last().unwrap().clone();
+        let len = std::fs::metadata(&tail).unwrap().len();
+        OpenOptions::new().write(true).open(&tail).unwrap().set_len(len - 3).unwrap();
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(512)).unwrap();
+            let n = ds.trial_count("studies/1").unwrap();
+            assert!(n < 100 && n > 0, "torn record dropped, acked prefix kept ({n})");
+        }
+        // A torn record in a sealed (non-final) segment is corruption.
+        let first = segment_files(&path)
+            .into_iter()
+            .find(|p| p.extension().is_some_and(|e| e == "log"))
+            .unwrap();
+        let len = std::fs::metadata(&first).unwrap().len();
+        OpenOptions::new().write(true).open(&first).unwrap().set_len(len - 3).unwrap();
+        assert!(WalDatastore::open_with_options(&path, seg_opts(512)).is_err());
+    }
+
+    #[test]
+    fn segmented_layout_rejects_a_legacy_single_file() {
+        let dir = tmpdir("seg-mismatch");
+        let path = dir.join("store.wal");
+        {
+            let ds = WalDatastore::open(&path).unwrap();
+            ds.create_study(study("legacy")).unwrap();
+        }
+        let err = WalDatastore::open_with_options(&path, seg_opts(1024)).unwrap_err();
+        assert!(matches!(err, DsError::Storage(_)));
+        // The other direction (opening a segment directory as a
+        // single-file log) also fails rather than corrupting anything.
+        let seg_path = dir.join("segdir");
+        drop(WalDatastore::open_with_options(&seg_path, seg_opts(1024)).unwrap());
+        assert!(WalDatastore::open(&seg_path).is_err());
+    }
+
+    #[test]
+    fn segment_file_helpers() {
+        let dir = tmpdir("seg-helpers");
+        let path = dir.join("wal");
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(512)).unwrap();
+            let s = ds.create_study(study("h")).unwrap();
+            for _ in 0..60 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            ds.compact().unwrap();
+            for _ in 0..5 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            assert_eq!(ds.segment_count() as usize, segment_files(&path).len());
+        }
+        let files = segment_files(&path);
+        assert!(files[0].extension().is_some_and(|e| e == "base"));
+        assert!(files[1..].iter().all(|p| p.extension().is_some_and(|e| e == "log")));
+        assert_eq!(&tail_segment(&path).unwrap(), files.last().unwrap());
+        assert_eq!(
+            total_log_bytes(&path),
+            files.iter().map(|p| std::fs::metadata(p).unwrap().len()).sum::<u64>()
+        );
+    }
 }
+

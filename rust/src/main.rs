@@ -32,9 +32,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "port", takes_value: true, help: "bind port (default 6006)" },
         OptSpec { name: "datastore", takes_value: true, help: "memory | wal (default memory)" },
         OptSpec { name: "shards", takes_value: true, help: "in-memory datastore shard count (default 16)" },
-        OptSpec { name: "wal-path", takes_value: true, help: "WAL file path (default ./vizier.wal)" },
+        OptSpec { name: "wal-path", takes_value: true, help: "WAL path: a file, or a directory with --wal-segment-bytes (default ./vizier.wal)" },
         OptSpec { name: "wal-sync", takes_value: false, help: "fsync each WAL commit batch (machine-crash durability)" },
         OptSpec { name: "wal-serial", takes_value: false, help: "disable WAL group commit (serial appends; baseline)" },
+        OptSpec { name: "wal-segment-bytes", takes_value: true, help: "segmented WAL: rotate the active segment at this size; compaction runs in the background without stalling commits (0 = single-file baseline, the default)" },
+        OptSpec { name: "wal-serial-apply", takes_value: false, help: "one global commit lane instead of per-shard lanes (serialized-apply baseline)" },
+        OptSpec { name: "wal-auto-compact-segments", takes_value: true, help: "auto-compact when more than N segment files exist (0 = manual only, the default; needs --wal-segment-bytes)" },
         OptSpec { name: "workers", takes_value: true, help: "front-end worker-pool threads (default: CPU count)" },
         OptSpec { name: "idle-timeout-secs", takes_value: true, help: "evict connections idle longer than this (0 = never, the default)" },
         OptSpec { name: "max-connections", takes_value: true, help: "refuse connections beyond this many (0 = unlimited, the default)" },
@@ -79,21 +82,32 @@ fn main() {
             park();
         }
         _ => {
+            let mut wal_metrics = None;
             let ds: Arc<dyn Datastore> = match args.get_or("datastore", "memory") {
                 "wal" => {
                     let path = args.get_or("wal-path", "./vizier.wal").to_string();
+                    let segment_bytes = args.get_u64("wal-segment-bytes", 0).unwrap_or(0);
                     let opts = ossvizier::datastore::wal::WalOptions {
                         sync: args.has_flag("wal-sync"),
                         group_commit: !args.has_flag("wal-serial"),
+                        serial_apply: args.has_flag("wal-serial-apply"),
+                        segment_bytes: (segment_bytes > 0).then_some(segment_bytes),
+                        auto_compact_segments: args
+                            .get_u64("wal-auto-compact-segments", 0)
+                            .unwrap_or(0),
                     };
                     let ds = WalDatastore::open_with_options(&path, opts)
                         .unwrap_or_else(|e| fatal(&format!("open wal {path}: {e}")));
                     println!(
-                        "durable datastore at {path} ({} bytes, group_commit={}, sync={})",
+                        "durable datastore at {path} ({} bytes in {} segment(s), \
+                         group_commit={}, serial_apply={}, sync={})",
                         ds.log_size(),
+                        ds.segment_count(),
                         opts.group_commit,
+                        opts.serial_apply,
                         opts.sync
                     );
+                    wal_metrics = Some(ds.metrics());
                     Arc::new(ds)
                 }
                 "memory" => {
@@ -110,6 +124,11 @@ fn main() {
                 }
                 None => build_service(ds, |_| {}, policy_workers),
             };
+            // Durable-store gauges show up in GetServiceMetrics / the
+            // periodic report alongside the RPC histograms.
+            if let Some(m) = wal_metrics {
+                service.metrics.set_wal(m);
+            }
             // Server-side fault tolerance: resume interrupted operations.
             match service.resume_pending_operations() {
                 Ok(0) => {}

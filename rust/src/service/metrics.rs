@@ -164,6 +164,80 @@ impl FrontendMetrics {
     }
 }
 
+/// Durable-store (WAL) instrumentation, shared between
+/// [`crate::datastore::wal::WalDatastore`] and [`ServiceMetrics::report`]
+/// so the segment lifecycle and commit-path health are visible alongside
+/// the RPC metrics.
+#[derive(Debug, Default)]
+pub struct WalMetrics {
+    /// Segment files currently on disk (`.log` + `.base`); 1 for the
+    /// single-file layout. Gauge.
+    pub segments: AtomicU64,
+    /// Active-segment rotations performed (monotonic; segmented only).
+    pub rotations: AtomicU64,
+    /// Compactions completed (monotonic).
+    pub compactions: AtomicU64,
+    /// Wall time of each compaction (snapshot + publish + delete), in
+    /// microseconds.
+    pub compaction_micros: Histogram,
+    /// Log bytes reclaimed by compaction (superseded segments deleted
+    /// minus the base written), monotonic.
+    pub reclaimed_bytes: AtomicU64,
+    /// Time a writer spent in the commit path — entering the commit gate
+    /// through the durability acknowledgement — in microseconds. This is
+    /// where a commit stall shows up: the single-file `compact()` parks
+    /// writers at the gate for the whole snapshot, the segmented
+    /// compactor must not.
+    pub commit_wait: Histogram,
+    /// Worst commit wait observed, in microseconds (gauge; the
+    /// commit-stall headline number for C-WAL-ROTATE).
+    pub commit_stall_max_micros: AtomicU64,
+}
+
+impl WalMetrics {
+    pub fn segments(&self) -> u64 {
+        self.segments.load(Ordering::Relaxed)
+    }
+
+    pub fn rotations(&self) -> u64 {
+        self.rotations.load(Ordering::Relaxed)
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.compactions.load(Ordering::Relaxed)
+    }
+
+    pub fn reclaimed_bytes(&self) -> u64 {
+        self.reclaimed_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn record_commit_wait(&self, micros: u64) {
+        self.commit_wait.record(micros);
+        self.commit_stall_max_micros.fetch_max(micros, Ordering::Relaxed);
+    }
+
+    pub fn commit_stall_max_micros(&self) -> u64 {
+        self.commit_stall_max_micros.load(Ordering::Relaxed)
+    }
+
+    /// Render a plain-text report fragment.
+    pub fn report(&self) -> String {
+        format!(
+            "wal: {} segment file(s), {} rotations, {} compactions \
+             (mean {:.1} us, {} bytes reclaimed), \
+             commit wait mean {:.1} us p99 {} us max {} us\n",
+            self.segments(),
+            self.rotations(),
+            self.compactions(),
+            self.compaction_micros.mean_micros(),
+            self.reclaimed_bytes(),
+            self.commit_wait.mean_micros(),
+            self.commit_wait.quantile_micros(0.99),
+            self.commit_stall_max_micros(),
+        )
+    }
+}
+
 /// Registry of per-method metrics.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -185,6 +259,9 @@ pub struct ServiceMetrics {
     /// Front-end metrics, linked by the TCP server at start so
     /// [`ServiceMetrics::report`] covers the whole stack.
     frontend: Mutex<Option<std::sync::Arc<FrontendMetrics>>>,
+    /// Durable-store metrics, linked by the launcher when the datastore
+    /// is WAL-backed.
+    wal: Mutex<Option<std::sync::Arc<WalMetrics>>>,
 }
 
 impl ServiceMetrics {
@@ -250,6 +327,16 @@ impl ServiceMetrics {
         self.frontend.lock().unwrap().clone()
     }
 
+    /// Attach the durable store's metrics (called by the launcher when
+    /// the datastore is a [`crate::datastore::wal::WalDatastore`]).
+    pub fn set_wal(&self, wal: std::sync::Arc<WalMetrics>) {
+        *self.wal.lock().unwrap() = Some(wal);
+    }
+
+    pub fn wal(&self) -> Option<std::sync::Arc<WalMetrics>> {
+        self.wal.lock().unwrap().clone()
+    }
+
     /// Render a plain-text report (one line per method).
     pub fn report(&self) -> String {
         let m = self.methods.lock().unwrap();
@@ -278,6 +365,9 @@ impl ServiceMetrics {
         ));
         if let Some(fe) = self.frontend() {
             out.push_str(&fe.report());
+        }
+        if let Some(wal) = self.wal() {
+            out.push_str(&wal.report());
         }
         out
     }
@@ -331,6 +421,23 @@ mod tests {
         m.set_frontend(std::sync::Arc::new(fe));
         let r = m.report();
         assert!(r.contains("2 active / 3 total"), "{r}");
+    }
+
+    #[test]
+    fn wal_metrics_report_linked() {
+        let w = WalMetrics::default();
+        w.segments.store(3, Ordering::Relaxed);
+        w.rotations.fetch_add(2, Ordering::Relaxed);
+        w.compactions.fetch_add(1, Ordering::Relaxed);
+        w.record_commit_wait(500);
+        w.record_commit_wait(90);
+        assert_eq!(w.commit_stall_max_micros(), 500);
+        let m = ServiceMetrics::new();
+        assert!(m.wal().is_none());
+        m.set_wal(std::sync::Arc::new(w));
+        let r = m.report();
+        assert!(r.contains("3 segment file(s)"), "{r}");
+        assert!(r.contains("max 500 us"), "{r}");
     }
 
     #[test]

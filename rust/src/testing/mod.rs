@@ -3,3 +3,28 @@
 
 pub mod procfs;
 pub mod prop;
+
+use crate::datastore::wal::WalOptions;
+
+/// [`WalOptions`] selected by the crash-matrix environment, so one test
+/// binary covers `{group-commit, serial} × {segmented, single-file}`
+/// (see `.github/workflows/crash-matrix.yml`):
+///
+/// * `OSSVIZIER_WAL_COMMIT` — `group` (default) or `serial`
+/// * `OSSVIZIER_WAL_LAYOUT` — `single-file` (default) or `segmented`
+///   (small 64 KiB segments so integration workloads actually rotate)
+///
+/// Unset variables give the seed defaults, so plain `cargo test` runs
+/// exactly what it always ran.
+pub fn wal_opts_from_env() -> WalOptions {
+    let mut opts = WalOptions::default();
+    match std::env::var("OSSVIZIER_WAL_COMMIT").as_deref() {
+        Ok("serial") => opts.group_commit = false,
+        Ok("serial-apply") => opts.serial_apply = true,
+        _ => {}
+    }
+    if let Ok("segmented") = std::env::var("OSSVIZIER_WAL_LAYOUT").as_deref() {
+        opts.segment_bytes = Some(64 * 1024);
+    }
+    opts
+}

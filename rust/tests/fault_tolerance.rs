@@ -1,14 +1,32 @@
 //! Fault-tolerance integration tests (paper §3.2, experiments C-FT-S and
-//! C-FT-C): server crash/restart over the durable WAL and client
-//! crash/restart under client_id trial reassignment.
+//! C-FT-C): server crash/restart over the durable WAL, client
+//! crash/restart under client_id trial reassignment, and crash recovery
+//! across the segmented-log lifecycle (rotation, torn tails, crashes at
+//! every stage of a compaction).
+//!
+//! The WAL configuration is env-driven (`OSSVIZIER_WAL_COMMIT`,
+//! `OSSVIZIER_WAL_LAYOUT` — see `ossvizier::testing::wal_opts_from_env`)
+//! so the crash-matrix CI job reruns this whole file across
+//! `{group-commit, serial} × {segmented, single-file}`.
 
 use ossvizier::client::{TcpTransport, VizierClient};
-use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::wal::{segment_files, tail_segment, total_log_bytes, WalDatastore, WalOptions};
 use ossvizier::datastore::Datastore;
 use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
 use ossvizier::service::{build_service, VizierServer};
+use ossvizier::testing::wal_opts_from_env;
 use ossvizier::wire::messages::ScaleType;
 use std::sync::Arc;
+
+/// Open with the matrix-selected options.
+fn open_env(path: &std::path::Path) -> WalDatastore {
+    WalDatastore::open_with_options(path, wal_opts_from_env()).unwrap()
+}
+
+/// Open with the matrix-selected options plus per-batch fsync.
+fn open_env_sync(path: &std::path::Path) -> WalDatastore {
+    WalDatastore::open_with_options(path, WalOptions { sync: true, ..wal_opts_from_env() }).unwrap()
+}
 
 fn config() -> StudyConfig {
     let mut c = StudyConfig::new("ft");
@@ -36,7 +54,7 @@ fn server_crash_preserves_all_study_state() {
     // Phase 1: create study, run some trials, leave one ACTIVE, then kill
     // the server without any shutdown handshake.
     {
-        let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).unwrap());
+        let ds: Arc<dyn Datastore> = Arc::new(open_env(&wal_path));
         let service = build_service(ds, |_| {}, 4);
         let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
         addr = server.local_addr().to_string();
@@ -59,7 +77,7 @@ fn server_crash_preserves_all_study_state() {
     }
 
     // Phase 2: new server process on the same WAL and port.
-    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).unwrap());
+    let ds: Arc<dyn Datastore> = Arc::new(open_env(&wal_path));
     let service = build_service(ds, |_| {}, 4);
     service.resume_pending_operations().unwrap();
     let server = VizierServer::start(service, &addr).unwrap();
@@ -88,7 +106,7 @@ fn interrupted_suggest_operation_is_resumed_after_restart() {
     let wal_path = tmp("op-resume");
     let study_name;
     {
-        let ds = WalDatastore::open(&wal_path).unwrap();
+        let ds = open_env(&wal_path);
         let study = ds
             .create_study(ossvizier::wire::messages::StudyProto {
                 display_name: "ft".into(),
@@ -108,7 +126,7 @@ fn interrupted_suggest_operation_is_resumed_after_restart() {
         .unwrap();
     } // crash before any policy work happened
 
-    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(&wal_path).unwrap());
+    let ds: Arc<dyn Datastore> = Arc::new(open_env(&wal_path));
     let service = build_service(Arc::clone(&ds), |_| {}, 2);
     assert_eq!(service.resume_pending_operations().unwrap(), 1);
     // Wait for the worker to finish the resumed operation.
@@ -130,7 +148,7 @@ fn interrupted_suggest_operation_is_resumed_after_restart() {
 
 #[test]
 fn client_restart_same_id_gets_same_trial_other_id_does_not() {
-    let ds: Arc<dyn Datastore> = Arc::new(WalDatastore::open(tmp("client")).unwrap());
+    let ds: Arc<dyn Datastore> = Arc::new(open_env(&tmp("client")));
     let service = build_service(ds, |_| {}, 4);
     let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
     let addr = server.local_addr().to_string();
@@ -193,7 +211,7 @@ fn crash_mid_group_commit_keeps_acknowledged_mutations_only() {
     let acked: usize;
     {
         let ds: Arc<dyn Datastore> =
-            Arc::new(WalDatastore::open_with_sync(&wal_path, true).unwrap());
+            Arc::new(open_env_sync(&wal_path));
         let service = build_service(Arc::clone(&ds), |_| {}, 4);
         let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
         let addr = server.local_addr().to_string();
@@ -231,8 +249,10 @@ fn crash_mid_group_commit_keeps_acknowledged_mutations_only() {
     }
 
     // Simulate the crash tearing the in-flight (never acknowledged)
-    // record: append half of a valid record to the log tail.
-    let acked_len = std::fs::metadata(&wal_path).unwrap().len();
+    // record: append half of a valid record to the log tail (the active
+    // segment, in the segmented layout — the one place torn records are
+    // legal).
+    let acked_len = total_log_bytes(&wal_path);
     {
         use std::io::Write;
         // A complete record, encoded the same way the WAL does it: reuse
@@ -247,16 +267,17 @@ fn crash_mid_group_commit_keeps_acknowledged_mutations_only() {
             .unwrap();
         }
         let full = std::fs::read(&scratch).unwrap();
-        let mut f = std::fs::OpenOptions::new().append(true).open(&wal_path).unwrap();
+        let tail = tail_segment(&wal_path).expect("log has a tail segment");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&tail).unwrap();
         f.write_all(&full[..full.len() / 2]).unwrap();
         f.sync_all().unwrap();
     }
-    assert!(std::fs::metadata(&wal_path).unwrap().len() > acked_len);
+    assert!(total_log_bytes(&wal_path) > acked_len);
 
     // Recovery: every acknowledged mutation is back, the torn record and
     // its phantom study are not, and the log is truncated to the
     // acknowledged prefix.
-    let ds = WalDatastore::open(&wal_path).unwrap();
+    let ds = open_env(&wal_path);
     assert_eq!(ds.trial_count(&study_name).unwrap(), acked);
     assert!(
         ds.list_trials(&study_name)
@@ -266,7 +287,7 @@ fn crash_mid_group_commit_keeps_acknowledged_mutations_only() {
         "acknowledged completions survived"
     );
     assert!(ds.lookup_study("torn").is_err(), "torn record rejected");
-    assert_eq!(std::fs::metadata(&wal_path).unwrap().len(), acked_len);
+    assert_eq!(total_log_bytes(&wal_path), acked_len);
 }
 
 #[test]
@@ -298,6 +319,128 @@ fn wal_and_memory_datastores_agree_through_the_service() {
             .collect()
     };
     let mem = run(Arc::new(ossvizier::datastore::memory::InMemoryDatastore::new()));
-    let wal = run(Arc::new(WalDatastore::open(tmp("diff")).unwrap()));
+    let wal = run(Arc::new(open_env(&tmp("diff"))));
     assert_eq!(mem, wal);
+}
+
+#[test]
+fn segmented_server_crash_recovers_across_rotated_segments() {
+    // C-FT-SEG: a real service workload big enough to rotate the active
+    // segment several times, killed without a shutdown handshake;
+    // recovery replays the segments in order. Forces the segmented
+    // layout (tiny segments) while inheriting the matrix commit mode.
+    let wal_path = tmp("seg-rotate");
+    let opts = WalOptions { segment_bytes: Some(2048), ..wal_opts_from_env() };
+    let addr;
+    {
+        let ds: Arc<dyn Datastore> =
+            Arc::new(WalDatastore::open_with_options(&wal_path, opts).unwrap());
+        let service = build_service(ds, |_| {}, 4);
+        let server = VizierServer::start(service, "127.0.0.1:0").unwrap();
+        addr = server.local_addr().to_string();
+        let mut c = VizierClient::load_or_create_study(
+            Box::new(TcpTransport::connect(&addr).unwrap()),
+            "ft",
+            &config(),
+            "w0",
+        )
+        .unwrap();
+        for i in 0..30 {
+            let t = c.get_suggestions(1).unwrap().remove(0);
+            c.complete_trial(t.id, Some(&Measurement::new(1).with_metric("v", i as f64)))
+                .unwrap();
+        }
+        server.shutdown(); // hard stop
+    }
+    assert!(
+        segment_files(&wal_path).len() > 1,
+        "workload must span several segments: {:?}",
+        segment_files(&wal_path)
+    );
+    let ds: Arc<dyn Datastore> =
+        Arc::new(WalDatastore::open_with_options(&wal_path, opts).unwrap());
+    let service = build_service(Arc::clone(&ds), |_| {}, 4);
+    service.resume_pending_operations().unwrap();
+    let study = ds.lookup_study("ft").unwrap();
+    let trials = ds.list_trials(&study.name).unwrap();
+    assert_eq!(trials.len(), 30, "all trials recovered from the segment chain");
+    assert!(trials.iter().all(|t| t.final_measurement.is_some()));
+    service.shutdown();
+}
+
+#[test]
+fn crash_at_every_compaction_stage_recovers_cleanly() {
+    // The compactor can die (a) before publishing the base snapshot and
+    // (b) after publishing but before deleting superseded segments.
+    // Both directory states must recover to the exact pre-crash state.
+    let wal_path = tmp("mid-compact");
+    let opts = WalOptions { segment_bytes: Some(1024), ..wal_opts_from_env() };
+    {
+        let ds = WalDatastore::open_with_options(&wal_path, opts).unwrap();
+        let s = ds.create_study(ossvizier::wire::messages::StudyProto {
+            display_name: "mc".into(),
+            ..Default::default()
+        })
+        .unwrap();
+        for _ in 0..80 {
+            ds.create_trial(&s.name, ossvizier::wire::messages::TrialProto::default())
+                .unwrap();
+        }
+    }
+    // (a) Crash before publish: an unpublished tmp snapshot is left
+    // behind. Recovery ignores and deletes it.
+    std::fs::write(wal_path.join("wal.000042.base.tmp"), b"half a snapshot").unwrap();
+    {
+        let ds = WalDatastore::open_with_options(&wal_path, opts).unwrap();
+        assert_eq!(ds.trial_count("studies/1").unwrap(), 80);
+    }
+    assert!(
+        !wal_path.join("wal.000042.base.tmp").exists(),
+        "stale tmp snapshot cleaned up at open"
+    );
+
+    // (b) Crash after publish, before deletes: compact for real, then
+    // resurrect copies of the superseded segments as if the unlinks
+    // never happened. Replay must start at the base and ignore them.
+    let superseded: Vec<(std::path::PathBuf, Vec<u8>)> = segment_files(&wal_path)
+        .into_iter()
+        .map(|p| {
+            let bytes = std::fs::read(&p).unwrap();
+            (p, bytes)
+        })
+        .collect();
+    {
+        let ds = WalDatastore::open_with_options(&wal_path, opts).unwrap();
+        ds.compact().unwrap();
+        for _ in 0..5 {
+            ds.create_trial("studies/1", ossvizier::wire::messages::TrialProto::default())
+                .unwrap();
+        }
+    }
+    for (p, bytes) in &superseded {
+        std::fs::write(p, bytes).unwrap();
+    }
+    {
+        let ds = WalDatastore::open_with_options(&wal_path, opts).unwrap();
+        assert_eq!(
+            ds.trial_count("studies/1").unwrap(),
+            85,
+            "base + tail replay, resurrected segments ignored"
+        );
+        // Trial ids keep advancing past everything ever written.
+        assert_eq!(
+            ds.create_trial("studies/1", ossvizier::wire::messages::TrialProto::default())
+                .unwrap()
+                .id,
+            86
+        );
+        let files = segment_files(&wal_path);
+        assert!(
+            files[0].extension().is_some_and(|e| e == "base"),
+            "replay order starts at the published base: {files:?}"
+        );
+    }
+    for (p, _) in &superseded {
+        assert!(!p.exists(), "superseded segment {} cleaned up at open", p.display());
+    }
 }

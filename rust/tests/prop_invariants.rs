@@ -258,6 +258,107 @@ fn list_studies_equals_the_union_of_per_shard_contents() {
 }
 
 #[test]
+fn segment_prefix_plus_torn_tail_replays_to_acked_prefix_per_study() {
+    // The segmented-WAL recovery invariant: for ANY crash point — i.e.
+    // any prefix of the segment chain (base kept if published) with the
+    // new final segment torn at an arbitrary byte — replay yields, for
+    // every study, a dense prefix of that study's acknowledged commits.
+    // Interior trials keep their acked mutate; only the very last
+    // surviving trial may have lost its (possibly unacked) mutate.
+    use ossvizier::datastore::wal::{segment_files, WalDatastore, WalOptions};
+    use ossvizier::datastore::Datastore;
+    use ossvizier::wire::messages::{StudyProto, TrialProto};
+
+    check("segment prefix + torn tail = per-study acked prefix", 20, |g| {
+        let dir = std::env::temp_dir().join(format!(
+            "ossvizier-prop-seg-{}-{}",
+            std::process::id(),
+            ossvizier::util::id::next_uid()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wal");
+        let opts = WalOptions {
+            group_commit: g.bool(),
+            segment_bytes: Some(g.usize_range(200, 2000) as u64),
+            ..WalOptions::default()
+        };
+        let n_studies = g.usize_range(1, 4);
+        // recorded[s][id-1] = the created_ms acked for that trial.
+        let mut recorded: Vec<Vec<u64>> = vec![Vec::new(); n_studies];
+        let mut names: Vec<String> = Vec::new();
+        {
+            let ds = WalDatastore::open_with_options(&path, opts).unwrap();
+            for i in 0..n_studies {
+                names.push(
+                    ds.create_study(StudyProto {
+                        display_name: format!("p{i}"),
+                        ..Default::default()
+                    })
+                    .unwrap()
+                    .name,
+                );
+            }
+            let ops = g.usize_range(10, 80);
+            for seq in 0..ops {
+                let s = g.usize_range(0, n_studies - 1);
+                let t = ds.create_trial(&names[s], TrialProto::default()).unwrap();
+                ds.mutate_trial(&names[s], t.id, &mut |t| {
+                    t.created_ms = seq as u64 + 1;
+                    Ok(())
+                })
+                .unwrap();
+                recorded[s].push(seq as u64 + 1);
+                // Sometimes a compaction lands mid-history, so the crash
+                // point can fall anywhere relative to a published base.
+                if seq == ops / 2 && g.bool() {
+                    ds.compact().unwrap();
+                }
+            }
+        } // crash: no shutdown handshake
+        let logs: Vec<_> = segment_files(&path)
+            .into_iter()
+            .filter(|p| p.extension().is_some_and(|e| e == "log"))
+            .collect();
+        let keep = g.usize_range(0, logs.len());
+        for p in &logs[keep..] {
+            std::fs::remove_file(p).unwrap();
+        }
+        if keep > 0 {
+            let tail = &logs[keep - 1];
+            let len = std::fs::metadata(tail).unwrap().len();
+            let cut = g.u64_below(len + 1);
+            std::fs::OpenOptions::new().write(true).open(tail).unwrap().set_len(cut).unwrap();
+        }
+        let ds = WalDatastore::open_with_options(&path, opts).unwrap();
+        for (s, name) in names.iter().enumerate() {
+            let trials = match ds.list_trials(name) {
+                Ok(t) => t,
+                // The study's own create record was cut: the k = 0 prefix.
+                Err(_) => continue,
+            };
+            let k = trials.len();
+            assert!(k <= recorded[s].len(), "{name}: phantom trials after replay");
+            for (j, t) in trials.iter().enumerate() {
+                assert_eq!(t.id, j as u64 + 1, "{name}: ids must form a dense prefix");
+                if j + 1 < k {
+                    assert_eq!(
+                        t.created_ms, recorded[s][j],
+                        "{name}: interior trial lost its acked mutate"
+                    );
+                } else {
+                    assert!(
+                        t.created_ms == recorded[s][j] || t.created_ms == 0,
+                        "{name}: tail trial must hold the acked value or the torn default"
+                    );
+                }
+            }
+        }
+        drop(ds);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
 fn grid_search_exhausts_small_spaces_without_duplicates() {
     let mut config = StudyConfig::new("grid");
     config.search_space.add_int("a", 0, 3).add_categorical("b", vec!["x", "y"]);
