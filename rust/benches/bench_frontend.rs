@@ -13,6 +13,15 @@
 //! Timing assertions (lax-gated, enforced in the nightly soak job): hot
 //! subset throughput under the pool must not lose to the baseline.
 //!
+//! C-FRONTEND-EPOLL: the same pool front-end under its two readiness
+//! backends — `--poller=poll` (the interest set is rebuilt and scanned
+//! on every wakeup, O(total connections)) vs `--poller=epoll`
+//! (incremental registration, O(ready)). A large parked fleet with a
+//! small hot subset makes the difference visible: the strict verdicts
+//! pin the per-wakeup scan cost (poll's must scale with the fleet,
+//! epoll's must not), and a lax-gated check keeps epoll's hot-path
+//! throughput at least at the poll baseline.
+//!
 //! `OSSVIZIER_SOAK=1` scales the fleet and request counts up.
 //! Results land in `BENCH_FRONTEND.json` at the repo root.
 
@@ -20,12 +29,15 @@ use ossvizier::client::{TcpTransport, VizierClient};
 use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, StudyConfig};
 use ossvizier::service::{in_memory_service, ServerOptions, VizierServer};
 use ossvizier::testing::procfs::{soft_fd_limit, threads_with_prefix};
-use ossvizier::util::benchkit::{check, check_strict, finish, note, section};
+use ossvizier::util::benchkit::{bench_with_budget, check, check_strict, finish, note, section};
+use ossvizier::util::netpoll::PollerKind;
 use ossvizier::util::time::Stopwatch;
 use ossvizier::wire::framing::{read_response, write_request, Method};
 use ossvizier::wire::messages::{EmptyResponse, ScaleType};
 use std::io::BufReader;
 use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
 
 const WORKERS: usize = 8;
 const PING_THREADS: usize = 4;
@@ -165,6 +177,98 @@ fn run_mode(
     ModeResult { label, service_threads, ping_rps, workload_rps, leftover_threads, gauge_ok }
 }
 
+/// Size the C-FRONTEND-EPOLL parked fleet to the soft fd limit. Pool
+/// mode costs two fds per connection in this single-process bench (the
+/// client socket and the accepted socket); the 256-fd slack covers the
+/// hot subset, the wake pipe, and the epoll fd.
+fn max_parked_connections(target: usize) -> usize {
+    const FDS_PER_CONN: u64 = 2;
+    let Some(soft) = soft_fd_limit() else { return target };
+    let budget = (soft.saturating_sub(256) / FDS_PER_CONN) as usize;
+    if budget < target {
+        note(&format!("fd soft limit {soft}: clamping parked fleet {target} -> {budget}"));
+        return budget;
+    }
+    target
+}
+
+struct PollerResult {
+    kind: PollerKind,
+    ping_rps: f64,
+    wakeups: u64,
+    scan_cost: u64,
+}
+
+impl PollerResult {
+    /// Event-loop scan cost per wakeup during the hot phase: pollfds
+    /// scanned (poll backend) or events delivered (epoll backend).
+    fn scan_per_wakeup(&self) -> f64 {
+        self.scan_cost as f64 / self.wakeups.max(1) as f64
+    }
+}
+
+fn run_poller_mode(kind: PollerKind, parked: usize, ping_reqs: usize) -> PollerResult {
+    let service = in_memory_service(16);
+    let server = VizierServer::start_with(
+        service,
+        "127.0.0.1:0",
+        ServerOptions { workers: WORKERS, poller: kind, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let metrics = Arc::clone(server.frontend_metrics());
+
+    // Park the fleet: connect, prove liveness with one ping (which also
+    // exercises the register -> worker hand-off -> re-register churn on
+    // every connection), then sit idle for the rest of the run.
+    let mut fleet = Vec::with_capacity(parked);
+    for _ in 0..parked {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        ping(&mut s);
+        fleet.push(s);
+    }
+
+    // Only the hot phase counts toward the per-wakeup scan cost, so
+    // snapshot the loop counters after the fleet has settled.
+    let wakeups0 = metrics.loop_wakeups();
+    let scan0 = metrics.loop_scan_cost();
+
+    let sw = Stopwatch::start();
+    let handles: Vec<_> = (0..PING_THREADS)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                for _ in 0..ping_reqs {
+                    ping(&mut s);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let ping_rps = (PING_THREADS * ping_reqs) as f64 / sw.elapsed().as_secs_f64();
+
+    // Single-connection round-trip with the whole fleet parked: the
+    // per-request trajectory the baseline JSON tracks across runs. The
+    // name deliberately omits the fleet size, which is fd-limit-clamped
+    // and would otherwise make baselines incomparable across runners.
+    let mut hot = TcpStream::connect(&addr).unwrap();
+    bench_with_budget(
+        &format!("frontend/ping_rtt_{}_parked", kind.name()),
+        Duration::from_millis(300),
+        || ping(&mut hot),
+    );
+
+    let wakeups = metrics.loop_wakeups() - wakeups0;
+    let scan_cost = metrics.loop_scan_cost() - scan0;
+    drop(hot);
+    drop(fleet);
+    server.shutdown();
+    PollerResult { kind, ping_rps, wakeups, scan_cost }
+}
+
 fn main() {
     let idle = max_idle_connections(if soak() { 2500 } else { 1000 });
     let ping_reqs = if soak() { 10_000 } else { 2_000 };
@@ -227,6 +331,65 @@ fn main() {
             "pool {:.1} trials/s vs legacy {:.1} trials/s \
              (>= baseline within the standard 15% noise slack)",
             pool.workload_rps, legacy.workload_rps
+        ),
+    );
+
+    // ------------------------------------------------------------------
+    // C-FRONTEND-EPOLL: poll(2) baseline vs epoll on the same pool
+    // front-end, with a much larger parked fleet so the per-wakeup scan
+    // cost difference is unambiguous.
+    // ------------------------------------------------------------------
+    let parked = max_parked_connections(if soak() { 8_000 } else { 5_000 });
+    section(&format!(
+        "C-FRONTEND-EPOLL: {parked} parked connections, hot subset \
+         ({PING_THREADS} pingers x {ping_reqs}), poll(2) vs epoll"
+    ));
+
+    let poll_r = run_poller_mode(PollerKind::Poll, parked, ping_reqs);
+    let epoll_r = run_poller_mode(PollerKind::Epoll, parked, ping_reqs);
+
+    for r in [&poll_r, &epoll_r] {
+        note(&format!(
+            "{:<6} ping {:>9.0} req/s   {} wakeups, scan cost {} ({:.1}/wakeup)",
+            r.kind.name(),
+            r.ping_rps,
+            r.wakeups,
+            r.scan_cost,
+            r.scan_per_wakeup()
+        ));
+    }
+
+    // Structural verdicts: the poll baseline must pay O(fleet) on every
+    // wakeup (otherwise the comparison proves nothing), and epoll must
+    // pay O(ready) — a small constant that does not scale with the
+    // parked fleet. Both are deterministic counter facts, not timings.
+    check_strict(
+        "poll-wakeup-cost-scales-with-fleet",
+        poll_r.wakeups > 0 && poll_r.scan_per_wakeup() >= parked as f64,
+        &format!(
+            "poll(2) scans {:.1} pollfds/wakeup with {parked} parked (O(fleet) baseline)",
+            poll_r.scan_per_wakeup()
+        ),
+    );
+    check_strict(
+        "epoll-wakeup-cost-o-ready",
+        epoll_r.wakeups > 0
+            && epoll_r.scan_per_wakeup() <= 64.0
+            && epoll_r.scan_per_wakeup() * 8.0 <= parked as f64,
+        &format!(
+            "epoll delivers {:.1} events/wakeup with {parked} parked (O(ready), not O(fleet))",
+            epoll_r.scan_per_wakeup()
+        ),
+    );
+
+    // Timing verdict — lax-gated on PR runners, enforced in soak.
+    check(
+        "epoll-hot-throughput-vs-poll",
+        epoll_r.ping_rps >= poll_r.ping_rps * 0.85,
+        &format!(
+            "epoll {:.0} req/s vs poll {:.0} req/s \
+             (>= baseline within the standard 15% noise slack)",
+            epoll_r.ping_rps, poll_r.ping_rps
         ),
     );
 

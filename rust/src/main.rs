@@ -42,6 +42,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "idle-timeout-secs", takes_value: true, help: "evict connections idle longer than this (0 = never, the default)" },
         OptSpec { name: "max-connections", takes_value: true, help: "refuse connections beyond this many (0 = unlimited, the default)" },
         OptSpec { name: "legacy-threads", takes_value: false, help: "thread-per-connection front-end (benchmark baseline)" },
+        OptSpec { name: "poller", takes_value: true, help: "event-loop readiness backend: epoll (default, incremental registration) | poll (rebuilt-per-wakeup baseline)" },
         OptSpec { name: "policy-workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
         OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
         OptSpec { name: "api-addr", takes_value: true, help: "pythia mode: the API server for datastore reads" },
@@ -142,11 +143,17 @@ fn main() {
             let idle_timeout =
                 (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs));
             let max_connections = args.get_u64("max-connections", 0).unwrap_or(0) as usize;
+            let poller = match args.get("poller") {
+                Some(s) => ossvizier::util::netpoll::PollerKind::parse(s)
+                    .unwrap_or_else(|| fatal(&format!("unknown poller {s:?} (poll|epoll)"))),
+                None => ossvizier::util::netpoll::PollerKind::from_env(),
+            };
             let opts = ServerOptions {
                 workers: fe_workers,
                 legacy_threads: legacy,
                 idle_timeout,
                 max_connections,
+                poller,
                 ..Default::default()
             };
             let server = VizierServer::start_with(service, &addr, opts)
@@ -165,8 +172,9 @@ fn main() {
                 };
                 println!(
                     "vizier service listening on {} ({shown} front-end workers, \
-                     {policy_workers} policy workers)",
-                    server.local_addr()
+                     {} poller, {policy_workers} policy workers)",
+                    server.local_addr(),
+                    poller.name()
                 );
             }
 

@@ -8,11 +8,16 @@
 //! per client:
 //!
 //! * One **event-loop thread** (`<name>-io`) owns the listener and every
-//!   idle connection. It blocks in [`crate::util::netpoll::PollSet::wait`]
-//!   (raw POSIX `poll(2)`, no crates) over all of them plus a
-//!   [`WakePipe`]. Idle or stalled connections park here without a
-//!   thread; partial frames accumulate in a per-connection
-//!   [`FrameReader`] so a slow client can never pin a worker.
+//!   idle connection. It blocks in [`Poller::wait`]
+//!   ([`crate::util::netpoll`]: `epoll(7)` with incremental registration
+//!   by default, the rebuilt-each-wakeup `poll(2)` set as the
+//!   [`PollerKind::Poll`] baseline — `--poller=poll`) over all of them
+//!   plus a [`WakePipe`]. Fds are registered / deregistered only on
+//!   connection state changes (accept, hand-off to a worker, read or
+//!   write re-park, close), so under epoll a wakeup costs O(ready), not
+//!   O(fleet). Idle or stalled connections park here without a thread;
+//!   partial frames accumulate in a per-connection [`FrameReader`] so a
+//!   slow client can never pin a worker.
 //! * **N worker threads** (`<name>-w<i>`) take complete framed requests
 //!   off a bounded queue, run the [`ConnectionHandler`], write the
 //!   response, and hand the connection back to the event loop. One frame
@@ -44,7 +49,7 @@
 //! assert the thread budget stays at `workers + 2`.
 
 use crate::service::metrics::FrontendMetrics;
-use crate::util::netpoll::{PollSet, WakePipe, EV_READ, EV_WRITE};
+use crate::util::netpoll::{Poller, PollerKind, WakePipe, EV_READ, EV_WRITE};
 use crate::wire::framing::{FrameProgress, FrameReader};
 use std::cell::Cell;
 use std::collections::{HashMap, VecDeque};
@@ -119,6 +124,10 @@ pub struct FrontendOptions {
     /// many (0 = unlimited). Refused sockets are accepted and
     /// immediately closed so the backlog cannot wedge the listener.
     pub max_connections: usize,
+    /// Readiness backend for the event loop. The default honors the
+    /// `OSSVIZIER_POLLER` env knob (the CI matrix runs both), falling
+    /// back to epoll.
+    pub poller: PollerKind,
     /// Metrics sink; supply one to share with [`super::metrics::ServiceMetrics`].
     pub metrics: Option<Arc<FrontendMetrics>>,
 }
@@ -132,6 +141,7 @@ impl Default for FrontendOptions {
             drain: Duration::from_secs(5),
             idle_timeout: None,
             max_connections: 0,
+            poller: PollerKind::from_env(),
             metrics: None,
         }
     }
@@ -394,6 +404,13 @@ impl FrontendServer {
         let handler = Arc::new(handler);
         let stop = Arc::new(AtomicBool::new(false));
         let wake = Arc::new(WakePipe::new()?);
+        // Build and seed the poller here so a failure (no epoll support,
+        // fd exhaustion) surfaces as a start error instead of a dead
+        // event loop. The wake pipe and listener are registered exactly
+        // once; everything else is per-connection.
+        let mut poller = Poller::new(opts.poller)?;
+        poller.register(wake.read_fd(), TOK_WAKE, EV_READ)?;
+        poller.register(listener.as_raw_fd(), TOK_LISTENER, EV_READ)?;
         let shared = Arc::new(Shared::<H::Conn> {
             queue: Mutex::new(VecDeque::new()),
             job_ready: Condvar::new(),
@@ -509,7 +526,9 @@ impl FrontendServer {
             let wake = Arc::clone(&wake);
             let metrics = Arc::clone(&metrics);
             std::thread::Builder::new().name(format!("{}-io", opts.name)).spawn(move || {
-                io_loop(listener, handler, shared, rearm_rx, wake, stop, metrics, loop_opts)
+                io_loop(
+                    listener, handler, shared, rearm_rx, wake, stop, metrics, poller, loop_opts,
+                )
             })
         };
         let io_thread = match io_spawn {
@@ -601,9 +620,24 @@ struct LoopOptions {
     max_connections: usize,
 }
 
+/// Fixed poller tokens: the wake pipe and the listener are registered
+/// once at start; connection tokens count up from [`FIRST_CONN_TOKEN`]
+/// and are never reused within one server's lifetime, so a stale event
+/// can never alias a newer connection.
+const TOK_WAKE: u64 = 0;
+const TOK_LISTENER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
 /// The event loop: accepts, parks idle connections, assembles frames,
 /// feeds ready requests to the worker queue, re-arms write-parked
 /// responses, and sweeps idle / expired parked state.
+///
+/// Registration-state invariant: an fd is registered with `poller` iff
+/// its connection is owned by this loop (present in `conns` or
+/// `wparked`, or it is the wake pipe / listener). Every path that moves
+/// a connection out — hand-off to a worker, eviction, reap — must
+/// deregister *before* the connection can be closed elsewhere, because a
+/// closed fd's number may be reused by the next `accept`.
 #[allow(clippy::too_many_arguments)]
 fn io_loop<H: ConnectionHandler>(
     listener: TcpListener,
@@ -613,17 +647,14 @@ fn io_loop<H: ConnectionHandler>(
     wake: Arc<WakePipe>,
     stop: Arc<AtomicBool>,
     metrics: Arc<FrontendMetrics>,
+    mut poller: Poller,
     opts: LoopOptions,
 ) {
     // Read-parked connections (token -> conn + last read progress).
     let mut conns: HashMap<u64, (Conn<H::Conn>, Instant)> = HashMap::new();
     // Write-parked responses (token -> half-written job).
     let mut wparked: HashMap<u64, WriteJob<H::Conn>> = HashMap::new();
-    let mut next_token: u64 = 0;
-    let mut entries: Vec<(std::os::unix::io::RawFd, i16)> = Vec::new();
-    let mut rtoks = Vec::new();
-    let mut wtoks = Vec::new();
-    let mut pollset = PollSet::new();
+    let mut next_token: u64 = FIRST_CONN_TOKEN;
     let mut ready_read = Vec::new();
     let mut ready_write = Vec::new();
     // The poll timeout is a liveness backstop and the sweep cadence
@@ -631,58 +662,68 @@ fn io_loop<H: ConnectionHandler>(
     // arrive via the wake pipe.
     const POLL_MS: i32 = 250;
     let mut last_sweep = Instant::now();
+    let mut prev_scan = poller.scan_cost();
 
     while !stop.load(Ordering::SeqCst) {
-        entries.clear();
-        rtoks.clear();
-        wtoks.clear();
-        entries.push((wake.read_fd(), EV_READ));
-        entries.push((listener.as_raw_fd(), EV_READ));
-        for (&tok, (c, _)) in conns.iter() {
-            entries.push((c.stream.as_raw_fd(), EV_READ));
-            rtoks.push(tok);
-        }
-        let wbase = entries.len();
-        for (&tok, wj) in wparked.iter() {
-            entries.push((wj.conn.stream.as_raw_fd(), EV_WRITE));
-            wtoks.push(tok);
-        }
-        let ready = match pollset.wait(&entries, POLL_MS) {
-            Ok(r) => r,
-            Err(_) => {
-                // A persistent poll error (EBADF after an fd race, etc.)
-                // must not busy-spin the loop at 100% CPU.
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
-        };
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-
+        let mut wake_ready = false;
         let mut accept_ready = false;
         ready_read.clear();
         ready_write.clear();
-        for &idx in ready {
-            match idx {
-                0 => wake.drain(),
-                1 => accept_ready = true,
-                n if n < wbase => ready_read.push(rtoks[n - 2]),
-                n => ready_write.push(wtoks[n - wbase]),
+        match poller.wait(POLL_MS) {
+            Ok(events) => {
+                for ev in events {
+                    match ev.token {
+                        TOK_WAKE => wake_ready = true,
+                        TOK_LISTENER => accept_ready = true,
+                        // Route by owner: the read-parked and
+                        // write-parked registries never share a token.
+                        tok if conns.contains_key(&tok) => ready_read.push(tok),
+                        tok if wparked.contains_key(&tok) => ready_write.push(tok),
+                        // Token retired between the kernel queuing the
+                        // event and us reading it: ignore.
+                        _ => {}
+                    }
+                }
             }
+            Err(_) => {
+                // A persistent poller error (EBADF after an fd race,
+                // etc.) must not busy-spin the loop at 100% CPU.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        }
+        metrics.loop_wakeup(poller.scan_cost() - prev_scan);
+        prev_scan = poller.scan_cost();
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if wake_ready {
+            // Drain before harvesting re-arms: a wake racing in for a
+            // re-arm this iteration misses leaves the pipe readable, so
+            // the next wait returns immediately instead of losing it.
+            wake.drain();
         }
 
         // Reclaim connections whose request a worker just finished (any
         // bytes the client pipelined meanwhile are still in the kernel
         // buffer and will show up in the next poll), and responses that
-        // stalled mid-write.
+        // stalled mid-write. Registration failure here means the loop
+        // could never see the fd again — drop the connection instead of
+        // leaking it into an unpollable limbo.
         while let Ok(back) = rearm_rx.try_recv() {
             match back {
                 Back::Read(conn) => {
-                    conns.insert(next_token, (conn, Instant::now()));
+                    if poller.register(conn.stream.as_raw_fd(), next_token, EV_READ).is_ok() {
+                        conns.insert(next_token, (conn, Instant::now()));
+                    }
                 }
                 Back::Write(wj) => {
-                    wparked.insert(next_token, wj);
+                    if poller.register(wj.conn.stream.as_raw_fd(), next_token, EV_WRITE).is_ok()
+                    {
+                        wparked.insert(next_token, wj);
+                    } else {
+                        metrics.parked_dec();
+                    }
                 }
             }
             next_token += 1;
@@ -703,6 +744,10 @@ fn io_loop<H: ConnectionHandler>(
                         }
                         let _ = stream.set_nonblocking(true);
                         let _ = stream.set_nodelay(true);
+                        if poller.register(stream.as_raw_fd(), next_token, EV_READ).is_err() {
+                            drop(stream);
+                            continue;
+                        }
                         metrics.conn_opened();
                         conns.insert(
                             next_token,
@@ -753,6 +798,10 @@ fn io_loop<H: ConnectionHandler>(
             match outcome {
                 Some(Ok(FrameProgress::Frame(head, payload))) => {
                     let (conn, _) = conns.remove(&tok).expect("conn present");
+                    // Deregister before the hand-off: the worker may
+                    // close the fd at any point afterwards, and its
+                    // number could come back from the next accept.
+                    let _ = poller.deregister(conn.stream.as_raw_fd());
                     enqueue(&shared, &stop, conn, head, payload);
                 }
                 // Mid-frame stall: the connection keeps waiting here in
@@ -761,7 +810,9 @@ fn io_loop<H: ConnectionHandler>(
                 // Disconnect or protocol-level framing error (oversized/
                 // zero frame, EOF mid-frame): reap the connection.
                 Some(Ok(FrameProgress::Closed)) | Some(Err(_)) => {
-                    conns.remove(&tok);
+                    if let Some((conn, _)) = conns.remove(&tok) {
+                        let _ = poller.deregister(conn.stream.as_raw_fd());
+                    }
                 }
                 None => {}
             }
@@ -771,6 +822,7 @@ fn io_loop<H: ConnectionHandler>(
         // which): hand the remainder back to a worker.
         for &tok in &ready_write {
             if let Some(wj) = wparked.remove(&tok) {
+                let _ = poller.deregister(wj.conn.stream.as_raw_fd());
                 metrics.parked_dec();
                 shared.push_job(Job::Write(wj));
             }
@@ -785,9 +837,10 @@ fn io_loop<H: ConnectionHandler>(
             last_sweep = Instant::now();
             if let Some(idle) = opts.idle_timeout {
                 let now = Instant::now();
-                conns.retain(|_, (_, last)| {
+                conns.retain(|_, (conn, last)| {
                     let keep = now.duration_since(*last) <= idle;
                     if !keep {
+                        let _ = poller.deregister(conn.stream.as_raw_fd());
                         metrics.idle_eviction();
                     }
                     keep
@@ -798,6 +851,7 @@ fn io_loop<H: ConnectionHandler>(
                 wparked.retain(|_, wj| {
                     let keep = now < wj.deadline;
                     if !keep {
+                        let _ = poller.deregister(wj.conn.stream.as_raw_fd());
                         metrics.idle_eviction();
                         metrics.parked_dec();
                     }

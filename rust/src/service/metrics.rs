@@ -85,6 +85,15 @@ pub struct FrontendMetrics {
     /// Connections refused because `max_connections` was reached
     /// (monotonic; pool mode only).
     pub connections_refused: AtomicU64,
+    /// Event-loop poller wakeups, including timeout backstops
+    /// (monotonic; pool mode only).
+    pub loop_wakeups: AtomicU64,
+    /// Cumulative per-wakeup poller work: fds scanned under poll(2),
+    /// events delivered under epoll (see
+    /// [`crate::util::netpoll::Poller::scan_cost`]). `loop_scan_cost /
+    /// loop_wakeups` is the number C-FRONTEND-EPOLL asserts does not
+    /// scale with fleet size under epoll. Monotonic; pool mode only.
+    pub loop_scan_cost: AtomicU64,
 }
 
 impl FrontendMetrics {
@@ -145,12 +154,27 @@ impl FrontendMetrics {
         self.connections_refused.load(Ordering::Relaxed)
     }
 
+    /// Record one event-loop wakeup and the poller work it cost.
+    pub fn loop_wakeup(&self, scan_cost: u64) {
+        self.loop_wakeups.fetch_add(1, Ordering::Relaxed);
+        self.loop_scan_cost.fetch_add(scan_cost, Ordering::Relaxed);
+    }
+
+    pub fn loop_wakeups(&self) -> u64 {
+        self.loop_wakeups.load(Ordering::Relaxed)
+    }
+
+    pub fn loop_scan_cost(&self) -> u64 {
+        self.loop_scan_cost.load(Ordering::Relaxed)
+    }
+
     /// Render a plain-text report fragment.
     pub fn report(&self) -> String {
         format!(
             "frontend: {} active / {} total connections ({} refused, {} evicted), \
              queue depth {}, {} parked responses, \
-             {} requests (queue wait mean {:.1} us, p99 {} us)\n",
+             {} requests (queue wait mean {:.1} us, p99 {} us), \
+             {} loop wakeups ({} scan cost)\n",
             self.active_connections(),
             self.connections_total(),
             self.connections_refused(),
@@ -160,6 +184,8 @@ impl FrontendMetrics {
             self.requests(),
             self.queue_wait.mean_micros(),
             self.queue_wait.quantile_micros(0.99),
+            self.loop_wakeups(),
+            self.loop_scan_cost(),
         )
     }
 }

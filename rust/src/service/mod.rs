@@ -11,13 +11,24 @@
 //! that shape via [`frontend::FrontendServer`]:
 //!
 //! * A single **event-loop thread** (`vizier-fe-io` / `pythia-fe-io`)
-//!   blocks in POSIX `poll(2)` ([`crate::util::netpoll`], no crate
+//!   blocks in a [`crate::util::netpoll::Poller`] (raw POSIX, no crate
 //!   dependencies) over the listener, a wake pipe, and every idle
-//!   connection. Idle clients — the dominant state of a Vizier worker
-//!   fleet, which spends its time evaluating trials, not talking — cost
-//!   zero threads. Partial frames accumulate per connection in a
-//!   resumable [`crate::wire::framing::FrameReader`], so slow or
-//!   malicious clients park in the loop instead of pinning a worker.
+//!   connection. The default backend is `epoll(7)` with **incremental
+//!   registration**: fds are added/modified/removed only on connection
+//!   state changes (accept, worker hand-off, re-park, close), so a
+//!   wakeup costs O(ready fds), not O(total connections). The original
+//!   rebuilt-every-iteration `poll(2)` set survives behind
+//!   `--poller=poll` as the C-FRONTEND-EPOLL benchmark baseline. The
+//!   loop upholds one **registration-state invariant**: an fd is
+//!   registered with the poller exactly while the loop owns it — it is
+//!   deregistered *before* being handed to a worker or closed, and
+//!   registered again when ownership returns (see
+//!   [`crate::util::netpoll`] for the full invariant list). Idle
+//!   clients — the dominant state of a Vizier worker fleet, which
+//!   spends its time evaluating trials, not talking — cost zero
+//!   threads. Partial frames accumulate per connection in a resumable
+//!   [`crate::wire::framing::FrameReader`], so slow or malicious
+//!   clients park in the loop instead of pinning a worker.
 //! * **N worker threads** (`vizier-fe-w<i>`, `--workers`, default = CPU
 //!   count) execute complete framed requests from a bounded queue and
 //!   write the response. One frame = one job; a connection is owned by
@@ -30,7 +41,10 @@
 //! `--legacy-threads` ([`server::ServerOptions`]) as the benchmark
 //! baseline; `benches/bench_frontend.rs` (C-FRONTEND) drives 1000+
 //! mostly-idle connections against both and asserts the pool holds its
-//! `workers + 2` thread budget at no loss of hot-path throughput.
+//! `workers + 2` thread budget at no loss of hot-path throughput. Its
+//! C-FRONTEND-EPOLL section parks a 5000+ connection fleet against both
+//! poller backends and pins the per-wakeup scan cost: `poll(2)` must
+//! pay O(fleet), epoll must stay O(ready).
 //! [`metrics::FrontendMetrics`] exposes the `active_connections` gauge,
 //! queue depth, and queue-wait histogram for either mode.
 //!

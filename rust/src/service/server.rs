@@ -49,6 +49,11 @@ pub struct ServerOptions {
     /// Refuse connections beyond this many (pool mode only; 0 =
     /// unlimited). CLI: `--max-connections`.
     pub max_connections: usize,
+    /// Event-loop readiness backend (pool mode only). Defaults to the
+    /// `OSSVIZIER_POLLER` env knob, falling back to epoll; the
+    /// rebuilt-each-wakeup poll(2) baseline stays available as
+    /// `--poller=poll`.
+    pub poller: crate::util::netpoll::PollerKind,
 }
 
 impl Default for ServerOptions {
@@ -59,6 +64,7 @@ impl Default for ServerOptions {
             drain: Duration::from_secs(5),
             idle_timeout: None,
             max_connections: 0,
+            poller: crate::util::netpoll::PollerKind::from_env(),
         }
     }
 }
@@ -114,6 +120,7 @@ impl VizierServer {
                     drain: opts.drain,
                     idle_timeout: opts.idle_timeout,
                     max_connections: opts.max_connections,
+                    poller: opts.poller,
                     metrics: Some(Arc::clone(&fe_metrics)),
                     ..Default::default()
                 },

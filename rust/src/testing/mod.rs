@@ -28,3 +28,16 @@ pub fn wal_opts_from_env() -> WalOptions {
     }
     opts
 }
+
+/// Front-end poller selected by the CI matrix environment, so one test
+/// binary covers both readiness backends (mirrors [`wal_opts_from_env`];
+/// see the poller matrix in `.github/workflows/ci.yml`):
+///
+/// * `OSSVIZIER_POLLER` — `epoll` (default) or `poll` (the
+///   rebuilt-each-wakeup baseline)
+///
+/// Unset gives epoll, the production default, so plain `cargo test`
+/// exercises what production runs.
+pub fn poller_from_env() -> crate::util::netpoll::PollerKind {
+    crate::util::netpoll::PollerKind::from_env()
+}

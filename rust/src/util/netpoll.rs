@@ -1,20 +1,61 @@
 //! Dependency-free readiness polling: thin safe wrappers over POSIX
-//! `poll(2)` and `pipe(2)`, declared directly via `extern "C"` so the
-//! crate stays free of the `libc`/`mio` crates (offline vendored build).
+//! `poll(2)`, `pipe(2)` and Linux `epoll(7)`, declared directly via
+//! `extern "C"` so the crate stays free of the `libc`/`mio` crates
+//! (offline vendored build).
 //!
-//! Used by [`crate::service::frontend`] to park thousands of idle TCP
-//! connections without a thread each: the event loop blocks in
-//! [`wait_readable`] over every idle socket plus a [`WakePipe`] that
-//! worker threads tickle when they hand a connection back.
+//! # The `Poller` abstraction
+//!
+//! [`Poller`] is the readiness interface the front-end event loop
+//! ([`crate::service::frontend`]) drives. It has two backends behind one
+//! enum, selected by [`PollerKind`]:
+//!
+//! * [`PollerKind::Poll`] — the historical rebuilt-each-wakeup `poll(2)`
+//!   set. Every [`Poller::wait`] rebuilds the full `pollfd` array from
+//!   the registration map and asks the kernel to scan all of it, so a
+//!   wakeup costs O(registered) even when one fd is ready. Kept as the
+//!   measurable baseline (`--poller=poll`, C-FRONTEND-EPOLL).
+//! * [`PollerKind::Epoll`] — `epoll_create1`/`epoll_ctl`/`epoll_wait`
+//!   with **incremental registration**: the kernel retains the interest
+//!   set between waits and [`Poller::register`]/[`Poller::deregister`]
+//!   run only on connection state changes (accept, park, hand-off to a
+//!   worker, write-park, close), so a wakeup costs O(ready).
+//!
+//! Registration-state invariants shared by both backends:
+//!
+//! * One registration per fd. [`Poller::register`] on an
+//!   already-registered fd replaces the previous token/interest (epoll's
+//!   `EEXIST` is repaired with `EPOLL_CTL_MOD`), and
+//!   [`Poller::deregister`] is idempotent — a missing or already-closed
+//!   fd is not an error. Owners therefore never need to know whether a
+//!   racing path got there first.
+//! * An fd must be deregistered **before** its owner closes it or hands
+//!   it to another thread that may close it. epoll auto-forgets closed
+//!   fds, but the fd number can be reused by a new `accept(2)` and a
+//!   stale registration would then alias the new connection.
+//! * Interest is level-triggered in both backends: a ready fd keeps
+//!   reporting until the owner consumes the readiness or deregisters, so
+//!   a wakeup delivered while the event buffer was full is never lost.
+//!
+//! Both backends count cumulative [`Poller::wakeups`] and
+//! [`Poller::scan_cost`] (fds scanned per wait for poll, events
+//! delivered for epoll) so benches and metrics can show the
+//! O(registered)-vs-O(ready) difference directly.
+//!
+//! # The `WakePipe`
+//!
+//! [`WakePipe`] is a self-pipe for waking the event loop from worker
+//! threads. Opened `O_CLOEXEC | O_NONBLOCK`; see [`WakePipe::drain`] for
+//! the flag/byte ordering protocol (the lost-wakeup fix).
 //!
 //! The constants below are the Linux values (the only platform the
-//! project's CI and container target); they also match most BSDs for the
-//! `POLL*` flags.
+//! project's CI and container target); the `POLL*` flags also match most
+//! BSDs, the `EPOLL*` interface is Linux-only.
 
 use std::io;
 use std::os::raw::{c_int, c_ulong, c_void};
 use std::os::unix::io::RawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 #[repr(C)]
 #[derive(Clone, Copy, Debug)]
@@ -30,19 +71,136 @@ const POLLERR: i16 = 0x008;
 const POLLHUP: i16 = 0x010;
 const POLLNVAL: i16 = 0x020;
 
-/// Interest mask for [`PollSet::wait`]: readability.
+/// Interest mask for [`PollSet::wait`] / [`Poller::register`]:
+/// readability.
 pub const EV_READ: i16 = POLLIN;
-/// Interest mask for [`PollSet::wait`]: writability (used by the
-/// front-end to park half-written responses until the peer drains its
-/// receive window).
+/// Interest mask for [`PollSet::wait`] / [`Poller::register`]:
+/// writability (used by the front-end to park half-written responses
+/// until the peer drains its receive window).
 pub const EV_WRITE: i16 = POLLOUT;
+
+// epoll event bits happen to share the poll(2) values for IN/OUT/ERR/HUP
+// but are a distinct 32-bit namespace; keep them separate for clarity.
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLL_CLOEXEC: c_int = 0x80000;
+
+const O_NONBLOCK: c_int = 0x800;
+const O_CLOEXEC: c_int = 0x80000;
+const F_GETFD: c_int = 1;
+const F_SETFD: c_int = 2;
+const F_GETFL: c_int = 3;
+const F_SETFL: c_int = 4;
+const FD_CLOEXEC: c_int = 1;
+
+const EEXIST: i32 = 17;
+const ENOENT: i32 = 2;
+const EBADF: i32 = 9;
+
+/// `struct epoll_event` is `__attribute__((packed))` on x86-64 only (a
+/// kernel ABI quirk kept for 32-bit compatibility); everywhere else it
+/// has natural alignment.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+impl std::fmt::Debug for EpollEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Copy out first: references into a packed struct are UB.
+        let (events, data) = (self.events, self.data);
+        f.debug_struct("EpollEvent").field("events", &events).field("data", &data).finish()
+    }
+}
 
 extern "C" {
     fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
     fn pipe(fds: *mut c_int) -> c_int;
+    fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+    fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
     fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
     fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
     fn close(fd: c_int) -> c_int;
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+}
+
+/// Deadline tracking for `EINTR` retry loops: a syscall interrupted by a
+/// signal must resume with the *remaining* budget, not the original
+/// timeout, or a finite wait can stretch unboundedly under a signal
+/// storm.
+struct Deadline {
+    /// `None`: the caller asked to block indefinitely.
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    fn after_ms(timeout_ms: i32) -> Self {
+        let at =
+            (timeout_ms >= 0).then(|| Instant::now() + Duration::from_millis(timeout_ms as u64));
+        Self { at }
+    }
+
+    /// Remaining budget in milliseconds — rounded up, so a sub-ms
+    /// remainder retries once more instead of busy-spinning at 0 — or
+    /// `None` once the deadline has elapsed.
+    fn remaining_ms(&self) -> Option<i32> {
+        let at = match self.at {
+            None => return Some(-1),
+            Some(at) => at,
+        };
+        let now = Instant::now();
+        if now >= at {
+            return None;
+        }
+        let ms = (at - now).as_millis().saturating_add(1);
+        Some(ms.min(i32::MAX as u128) as i32)
+    }
+}
+
+/// `poll(2)` with deadline-aware `EINTR` handling: returns the raw ready
+/// count, with 0 meaning the timeout (or the post-interrupt remainder)
+/// elapsed.
+fn poll_with_deadline(pfds: &mut [PollFd], timeout_ms: i32) -> io::Result<c_int> {
+    let deadline = Deadline::after_ms(timeout_ms);
+    let mut timeout = timeout_ms;
+    loop {
+        let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len() as c_ulong, timeout) };
+        if rc >= 0 {
+            return Ok(rc);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+        match deadline.remaining_ms() {
+            Some(ms) => timeout = ms,
+            None => return Ok(0),
+        }
+    }
 }
 
 /// Reusable poll set: amortizes the `pollfd` and ready-index buffers
@@ -82,26 +240,16 @@ impl PollSet {
     }
 
     fn poll_prepared(&mut self, timeout_ms: i32) -> io::Result<&[usize]> {
-        loop {
-            let rc =
-                unsafe { poll(self.pfds.as_mut_ptr(), self.pfds.len() as c_ulong, timeout_ms) };
-            if rc < 0 {
-                let err = io::Error::last_os_error();
-                if err.kind() == io::ErrorKind::Interrupted {
-                    continue;
-                }
-                return Err(err);
-            }
-            self.ready.clear();
-            if rc > 0 {
-                for (i, p) in self.pfds.iter().enumerate() {
-                    if p.revents & (p.events | POLLERR | POLLHUP | POLLNVAL) != 0 {
-                        self.ready.push(i);
-                    }
+        let rc = poll_with_deadline(&mut self.pfds, timeout_ms)?;
+        self.ready.clear();
+        if rc > 0 {
+            for (i, p) in self.pfds.iter().enumerate() {
+                if p.revents & (p.events | POLLERR | POLLHUP | POLLNVAL) != 0 {
+                    self.ready.push(i);
                 }
             }
-            return Ok(&self.ready);
         }
+        Ok(&self.ready)
     }
 }
 
@@ -115,25 +263,358 @@ pub fn wait_readable(fds: &[RawFd], timeout_ms: i32) -> io::Result<Vec<usize>> {
 /// Block until `fd` is writable or `timeout_ms` elapses. Returns whether
 /// the descriptor became writable (false = timeout).
 pub fn wait_writable(fd: RawFd, timeout_ms: i32) -> io::Result<bool> {
-    let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
-    loop {
-        let rc = unsafe { poll(&mut pfd, 1, timeout_ms) };
-        if rc < 0 {
-            let err = io::Error::last_os_error();
-            if err.kind() == io::ErrorKind::Interrupted {
-                continue;
-            }
-            return Err(err);
+    let mut pfd = [PollFd { fd, events: POLLOUT, revents: 0 }];
+    let rc = poll_with_deadline(&mut pfd, timeout_ms)?;
+    Ok(rc > 0)
+}
+
+/// Which readiness backend a [`Poller`] uses. See the module docs for
+/// the cost model of each.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PollerKind {
+    /// Rebuild-every-wakeup `poll(2)`: O(registered) per wait. The
+    /// baseline for C-FRONTEND-EPOLL comparisons.
+    Poll,
+    /// `epoll(7)` with incremental registration: O(ready) per wait.
+    #[default]
+    Epoll,
+}
+
+impl PollerKind {
+    /// Parse the CLI / env spelling (`"poll"` or `"epoll"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "poll" => Some(Self::Poll),
+            "epoll" => Some(Self::Epoll),
+            _ => None,
         }
-        return Ok(rc > 0);
+    }
+
+    /// Backend selected by the `OSSVIZIER_POLLER` env knob (the CI test
+    /// matrix sets it to `poll` / `epoll`); epoll when unset or
+    /// unrecognized.
+    pub fn from_env() -> Self {
+        std::env::var("OSSVIZIER_POLLER")
+            .ok()
+            .and_then(|v| Self::parse(v.trim()))
+            .unwrap_or_default()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Poll => "poll",
+            Self::Epoll => "epoll",
+        }
     }
 }
 
-/// A self-pipe for waking a [`wait_readable`] loop from another thread.
+/// One readiness event from [`Poller::wait`]. `token` is the cookie the
+/// owner registered the fd with; `events` is the ready mask ([`EV_READ`]
+/// / [`EV_WRITE`]), with error/hangup folded into both directions so the
+/// owner's next read or write observes the failure.
+#[derive(Clone, Copy, Debug)]
+pub struct PollerEvent {
+    pub token: u64,
+    pub events: i16,
+}
+
+fn poll_ready_mask(revents: i16) -> i16 {
+    let mut mask = 0;
+    if revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0 {
+        mask |= EV_READ;
+    }
+    if revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0 {
+        mask |= EV_WRITE;
+    }
+    mask
+}
+
+fn epoll_ready_mask(events: u32) -> i16 {
+    let mut mask = 0;
+    if events & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0 {
+        mask |= EV_READ;
+    }
+    if events & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0 {
+        mask |= EV_WRITE;
+    }
+    mask
+}
+
+fn epoll_interest(interest: i16) -> u32 {
+    // Level-triggered on purpose: readiness the event buffer could not
+    // hold in one wait is re-reported on the next, so nothing is lost.
+    let mut ev = 0;
+    if interest & EV_READ != 0 {
+        ev |= EPOLLIN;
+    }
+    if interest & EV_WRITE != 0 {
+        ev |= EPOLLOUT;
+    }
+    ev
+}
+
+/// The rebuilt-each-wakeup `poll(2)` backend. Registration maintains an
+/// fd map; every [`PollBackend::wait`] rebuilds the full `pollfd` array
+/// from it — deliberately preserving the historical O(registered)
+/// per-wakeup cost this backend exists to baseline.
+#[derive(Debug, Default)]
+pub struct PollBackend {
+    registered: std::collections::HashMap<RawFd, (u64, i16)>,
+    pfds: Vec<PollFd>,
+    toks: Vec<u64>,
+    events: Vec<PollerEvent>,
+    wakeups: u64,
+    scan_cost: u64,
+}
+
+impl PollBackend {
+    fn wait(&mut self, timeout_ms: i32) -> io::Result<&[PollerEvent]> {
+        self.pfds.clear();
+        self.toks.clear();
+        for (&fd, &(token, interest)) in &self.registered {
+            self.pfds.push(PollFd { fd, events: interest, revents: 0 });
+            self.toks.push(token);
+        }
+        let rc = poll_with_deadline(&mut self.pfds, timeout_ms)?;
+        self.wakeups += 1;
+        self.scan_cost += self.pfds.len() as u64;
+        self.events.clear();
+        if rc > 0 {
+            for (p, &token) in self.pfds.iter().zip(&self.toks) {
+                let mask = poll_ready_mask(p.revents);
+                if mask != 0 {
+                    self.events.push(PollerEvent { token, events: mask });
+                }
+            }
+        }
+        Ok(&self.events)
+    }
+}
+
+/// The `epoll(7)` backend: the kernel retains the interest set between
+/// waits, registration changes are O(1) `epoll_ctl` calls, and a wakeup
+/// reports only the ready fds.
+#[derive(Debug)]
+pub struct EpollBackend {
+    epfd: RawFd,
+    /// Userspace mirror of the kernel interest set (fd → token,
+    /// interest). Sizes [`Poller::registered`] and lets register/modify
+    /// repair `EEXIST`/`ENOENT` after fd-close races.
+    registered: std::collections::HashMap<RawFd, (u64, i16)>,
+    buf: Vec<EpollEvent>,
+    events: Vec<PollerEvent>,
+    wakeups: u64,
+    scan_cost: u64,
+}
+
+impl EpollBackend {
+    fn new() -> io::Result<Self> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self {
+            epfd,
+            registered: std::collections::HashMap::new(),
+            // Level-triggered: 256 slots per wait is a batch size, not a
+            // capacity limit — overflow readiness re-reports next wait.
+            buf: vec![EpollEvent { events: 0, data: 0 }; 256],
+            events: Vec::new(),
+            wakeups: 0,
+            scan_cost: 0,
+        })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+        let mut ev = EpollEvent { events: epoll_interest(interest), data: token };
+        let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev as *mut _ };
+        if unsafe { epoll_ctl(self.epfd, op, fd, arg) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+        match self.ctl(EPOLL_CTL_ADD, fd, token, interest) {
+            Err(e) if e.raw_os_error() == Some(EEXIST) => {
+                self.ctl(EPOLL_CTL_MOD, fd, token, interest)?;
+            }
+            other => other?,
+        }
+        self.registered.insert(fd, (token, interest));
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+        match self.ctl(EPOLL_CTL_MOD, fd, token, interest) {
+            Err(e) if e.raw_os_error() == Some(ENOENT) => {
+                self.ctl(EPOLL_CTL_ADD, fd, token, interest)?;
+            }
+            other => other?,
+        }
+        self.registered.insert(fd, (token, interest));
+        Ok(())
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.registered.remove(&fd);
+        match self.ctl(EPOLL_CTL_DEL, fd, 0, 0) {
+            // Already gone — closed fds auto-deregister — so removal is
+            // idempotent for owners racing a peer hangup.
+            Err(e) if matches!(e.raw_os_error(), Some(ENOENT) | Some(EBADF)) => Ok(()),
+            other => other,
+        }
+    }
+
+    fn wait(&mut self, timeout_ms: i32) -> io::Result<&[PollerEvent]> {
+        let deadline = Deadline::after_ms(timeout_ms);
+        let mut timeout = timeout_ms;
+        let rc = loop {
+            let rc = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, timeout)
+            };
+            if rc >= 0 {
+                break rc;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+            match deadline.remaining_ms() {
+                Some(ms) => timeout = ms,
+                None => break 0,
+            }
+        };
+        self.wakeups += 1;
+        self.scan_cost += rc as u64;
+        self.events.clear();
+        for ev in &self.buf[..rc as usize] {
+            let (bits, token) = (ev.events, ev.data);
+            let mask = epoll_ready_mask(bits);
+            if mask != 0 {
+                self.events.push(PollerEvent { token, events: mask });
+            }
+        }
+        Ok(&self.events)
+    }
+}
+
+impl Drop for EpollBackend {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// Readiness poller with pluggable backend. See the module docs for the
+/// backend cost models and the registration-state invariants.
+#[derive(Debug)]
+pub enum Poller {
+    Poll(PollBackend),
+    Epoll(EpollBackend),
+}
+
+impl Poller {
+    pub fn new(kind: PollerKind) -> io::Result<Self> {
+        match kind {
+            PollerKind::Poll => Ok(Self::Poll(PollBackend::default())),
+            PollerKind::Epoll => Ok(Self::Epoll(EpollBackend::new()?)),
+        }
+    }
+
+    pub fn kind(&self) -> PollerKind {
+        match self {
+            Self::Poll(_) => PollerKind::Poll,
+            Self::Epoll(_) => PollerKind::Epoll,
+        }
+    }
+
+    /// Start watching `fd` with the given interest ([`EV_READ`] /
+    /// [`EV_WRITE`] combination), reported as `token`. Registering an
+    /// already-registered fd replaces its token and interest.
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+        match self {
+            Self::Poll(b) => {
+                b.registered.insert(fd, (token, interest));
+                Ok(())
+            }
+            Self::Epoll(b) => b.register(fd, token, interest),
+        }
+    }
+
+    /// Change the token/interest of a registered fd (registers it if a
+    /// close race already dropped it).
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+        match self {
+            Self::Poll(b) => {
+                b.registered.insert(fd, (token, interest));
+                Ok(())
+            }
+            Self::Epoll(b) => b.modify(fd, token, interest),
+        }
+    }
+
+    /// Stop watching `fd`. Idempotent; must happen before the owning
+    /// connection closes the fd (see module docs on fd-number reuse).
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            Self::Poll(b) => {
+                b.registered.remove(&fd);
+                Ok(())
+            }
+            Self::Epoll(b) => b.deregister(fd),
+        }
+    }
+
+    /// Block until at least one registered fd is ready or `timeout_ms`
+    /// elapses (negative: block indefinitely). An empty slice means
+    /// timeout. `EINTR` resumes with the remaining budget.
+    pub fn wait(&mut self, timeout_ms: i32) -> io::Result<&[PollerEvent]> {
+        match self {
+            Self::Poll(b) => b.wait(timeout_ms),
+            Self::Epoll(b) => b.wait(timeout_ms),
+        }
+    }
+
+    /// Number of currently registered fds.
+    pub fn registered(&self) -> usize {
+        match self {
+            Self::Poll(b) => b.registered.len(),
+            Self::Epoll(b) => b.registered.len(),
+        }
+    }
+
+    /// Cumulative [`Poller::wait`] returns (including timeouts).
+    pub fn wakeups(&self) -> u64 {
+        match self {
+            Self::Poll(b) => b.wakeups,
+            Self::Epoll(b) => b.wakeups,
+        }
+    }
+
+    /// Cumulative per-wakeup work: fds scanned (poll) or events
+    /// delivered (epoll). `scan_cost / wakeups` is the number
+    /// C-FRONTEND-EPOLL asserts on — O(registered) for poll,
+    /// O(ready) for epoll.
+    pub fn scan_cost(&self) -> u64 {
+        match self {
+            Self::Poll(b) => b.scan_cost,
+            Self::Epoll(b) => b.scan_cost,
+        }
+    }
+}
+
+/// A self-pipe for waking a [`wait_readable`] / [`Poller::wait`] loop
+/// from another thread.
 ///
-/// `wake` writes at most one byte until the loop `drain`s it again, so
-/// the pipe can never fill up and block a waker (the classic self-pipe
-/// trick without `O_NONBLOCK`).
+/// `wake` writes a byte only when the `signaled` flag was clear, so
+/// back-to-back wakes cost one atomic swap and the pipe can never fill
+/// up and block a waker. Both fds are `O_CLOEXEC | O_NONBLOCK`:
+/// close-on-exec so a forked child cannot hold the loop's pipe open, and
+/// non-blocking so a spurious readiness report (possible after
+/// `EPOLLET` misuse or fork inheritance) can never block the event loop
+/// in `drain`.
 #[derive(Debug)]
 pub struct WakePipe {
     read_fd: RawFd,
@@ -144,8 +625,19 @@ pub struct WakePipe {
 impl WakePipe {
     pub fn new() -> io::Result<Self> {
         let mut fds: [c_int; 2] = [0; 2];
-        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
-            return Err(io::Error::last_os_error());
+        if unsafe { pipe2(fds.as_mut_ptr(), O_CLOEXEC | O_NONBLOCK) } != 0 {
+            // Portability fallback: plain pipe(2) + fcntl. Non-atomic
+            // with respect to a concurrent fork, which is fine — nothing
+            // forks while a WakePipe is being constructed.
+            if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            for &fd in &fds {
+                unsafe {
+                    fcntl(fd, F_SETFD, FD_CLOEXEC);
+                    fcntl(fd, F_SETFL, O_NONBLOCK);
+                }
+            }
         }
         Ok(Self {
             read_fd: fds[0],
@@ -168,12 +660,46 @@ impl WakePipe {
         }
     }
 
-    /// Consume pending wake bytes. Call only after `read_fd` polled
-    /// readable (the pipe is a blocking descriptor).
+    /// Consume pending wake bytes and re-arm for the next wake.
+    ///
+    /// The ordering is load-bearing: `signaled` is cleared **before**
+    /// the pipe is read. The historical order (read, then clear) lost
+    /// wakeups — a `wake()` racing into that window saw the flag still
+    /// set, skipped its write, and the subsequent clear forgot it ever
+    /// happened, leaving a parked connection to the mercy of the 250 ms
+    /// backstop sweep.
     pub fn drain(&self) {
-        let mut buf = [0u8; 16];
-        let _ = unsafe { read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+        self.drain_with(|| {});
+    }
+
+    /// [`WakePipe::drain`] with a hook injected into the window between
+    /// the flag clear and the pipe read, so tests can pin the exact
+    /// interleaving the pre-fix ordering lost.
+    fn drain_with(&self, in_window: impl FnOnce()) {
+        // 1. Clear the flag first: from here on a racing wake() sees it
+        //    clear and writes a fresh byte (possibly consumed by step 2
+        //    below — repaired in step 3).
         self.signaled.store(false, Ordering::SeqCst);
+        in_window();
+        // 2. Drain the pipe completely. O_NONBLOCK: a short or failed
+        //    read means empty, never a blocked event loop.
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+            if n < buf.len() as isize {
+                break;
+            }
+        }
+        // 3. Re-arm: if a wake() raced in after step 1, step 2 may have
+        //    eaten its byte while the flag is set again. An empty pipe
+        //    with the flag set would be a permanent wedge — every future
+        //    wake() would skip the write — so put a byte back. A
+        //    spurious extra readable event is harmless; a silent one is
+        //    not.
+        if self.signaled.load(Ordering::SeqCst) {
+            let byte = [1u8];
+            let _ = unsafe { write(self.write_fd, byte.as_ptr() as *const c_void, 1) };
+        }
     }
 }
 
@@ -189,15 +715,17 @@ impl Drop for WakePipe {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Write as _;
+    use std::io::{Read as _, Write as _};
     use std::net::{TcpListener, TcpStream};
     use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
     use std::time::Duration;
 
     #[test]
     fn wake_pipe_unblocks_poll() {
-        let wake = std::sync::Arc::new(WakePipe::new().unwrap());
-        let w = std::sync::Arc::clone(&wake);
+        let wake = Arc::new(WakePipe::new().unwrap());
+        let w = Arc::clone(&wake);
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
             w.wake();
@@ -213,6 +741,105 @@ mod tests {
         wake.wake();
         let ready = wait_readable(&[wake.read_fd()], 5_000).unwrap();
         assert_eq!(ready, vec![0]);
+    }
+
+    #[test]
+    fn wake_pipe_is_cloexec_and_nonblocking() {
+        let wake = WakePipe::new().unwrap();
+        for fd in [wake.read_fd, wake.write_fd] {
+            let fd_flags = unsafe { fcntl(fd, F_GETFD) };
+            assert!(fd_flags >= 0 && fd_flags & FD_CLOEXEC != 0, "fd {fd} not CLOEXEC");
+            let fl_flags = unsafe { fcntl(fd, F_GETFL) };
+            assert!(fl_flags >= 0 && fl_flags & O_NONBLOCK != 0, "fd {fd} not O_NONBLOCK");
+        }
+    }
+
+    #[test]
+    fn drain_on_empty_pipe_does_not_block() {
+        // Nothing pending: with a non-blocking read side both drains
+        // return immediately instead of hanging the event loop (the
+        // spurious-readiness hardening).
+        let wake = WakePipe::new().unwrap();
+        wake.drain();
+        wake.drain();
+    }
+
+    /// The lost-wakeup regression, pinned deterministically: a `wake()`
+    /// from another thread lands in the exact window inside `drain`
+    /// where the pre-fix ordering (read pipe, then clear flag) dropped
+    /// it. Post-fix, that wake must always leave the pipe readable —
+    /// either its own byte survived the drain or the re-arm step put one
+    /// back. This test fails on the pre-fix ordering (the racing wake
+    /// sees `signaled` still true, skips its write, and the flag clear
+    /// erases it) and on a store-then-read variant without the re-arm
+    /// step (the drain eats the racing byte and the pipe wedges with the
+    /// flag set).
+    #[test]
+    fn wake_racing_into_drain_is_never_lost() {
+        let wake = Arc::new(WakePipe::new().unwrap());
+        for round in 0..200 {
+            wake.wake();
+            assert!(!wait_readable(&[wake.read_fd()], 5_000).unwrap().is_empty());
+            let w = Arc::clone(&wake);
+            wake.drain_with(move || {
+                std::thread::spawn(move || w.wake()).join().unwrap();
+            });
+            assert!(
+                !wait_readable(&[wake.read_fd()], 5_000).unwrap().is_empty(),
+                "round {round}: wake landing mid-drain was lost (pipe never readable)"
+            );
+            wake.drain();
+            assert!(wait_readable(&[wake.read_fd()], 0).unwrap().is_empty());
+        }
+    }
+
+    /// Free-running multithreaded hammer: producers slam `wake()` while
+    /// a consumer polls and drains. Invariant under the fixed protocol:
+    /// whenever a wake produced after the last drain exists, the pipe
+    /// becomes readable — a 5 s silence with pending wakes means one was
+    /// lost (the wedge state: flag set, pipe empty).
+    #[test]
+    fn wake_pipe_hammer_no_lost_wakeups() {
+        const PRODUCERS: u64 = 4;
+        const PER_PRODUCER: u64 = 5_000;
+        const TOTAL: u64 = PRODUCERS * PER_PRODUCER;
+        let wake = Arc::new(WakePipe::new().unwrap());
+        let produced = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..PRODUCERS {
+            let w = Arc::clone(&wake);
+            let p = Arc::clone(&produced);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..PER_PRODUCER {
+                    p.fetch_add(1, Ordering::SeqCst);
+                    w.wake();
+                }
+            }));
+        }
+        // `seen` snapshots the counter right after a drain: wakes before
+        // the snapshot are covered by that drain, later ones must make
+        // the pipe readable again.
+        let mut seen = 0u64;
+        loop {
+            let before = produced.load(Ordering::SeqCst);
+            let timeout = if before > seen { 5_000 } else { 20 };
+            let ready = wait_readable(&[wake.read_fd()], timeout).unwrap();
+            if ready.is_empty() {
+                assert!(
+                    before <= seen,
+                    "lost wakeup: {before} produced, drains covered only {seen}"
+                );
+                if seen == TOTAL {
+                    break;
+                }
+                continue;
+            }
+            wake.drain();
+            seen = produced.load(Ordering::SeqCst);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]
@@ -269,5 +896,135 @@ mod tests {
         // observe EOF and reap the connection.
         let ready = wait_readable(&[server_side.as_raw_fd()], 5_000).unwrap();
         assert_eq!(ready, vec![0]);
+    }
+
+    #[test]
+    fn poller_kind_parses_and_defaults() {
+        assert_eq!(PollerKind::parse("poll"), Some(PollerKind::Poll));
+        assert_eq!(PollerKind::parse("epoll"), Some(PollerKind::Epoll));
+        assert_eq!(PollerKind::parse("kqueue"), None);
+        assert_eq!(PollerKind::default(), PollerKind::Epoll);
+        assert_eq!(PollerKind::Poll.name(), "poll");
+        assert_eq!(PollerKind::Epoll.name(), "epoll");
+    }
+
+    /// Shared conformance check for both backends: registration,
+    /// level-triggered readiness, token routing, modify, idempotent
+    /// deregistration.
+    fn poller_conformance(kind: PollerKind) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+
+        let mut poller = Poller::new(kind).unwrap();
+        assert_eq!(poller.kind(), kind);
+        poller.register(server_side.as_raw_fd(), 7, EV_READ).unwrap();
+        assert_eq!(poller.registered(), 1);
+        assert!(poller.wait(10).unwrap().is_empty());
+
+        client.write_all(b"x").unwrap();
+        client.flush().unwrap();
+        let evs = poller.wait(5_000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].events & EV_READ != 0);
+        // Level-triggered: unconsumed readiness re-reports.
+        assert_eq!(poller.wait(1_000).unwrap().len(), 1);
+
+        // Re-register with a new token/interest: send buffer has room,
+        // so write interest is immediately ready under the new token.
+        poller.modify(server_side.as_raw_fd(), 8, EV_WRITE).unwrap();
+        let evs = poller.wait(5_000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 8);
+        assert!(evs[0].events & EV_WRITE != 0);
+
+        // Deregistered fds never fire; deregistration is idempotent.
+        poller.deregister(server_side.as_raw_fd()).unwrap();
+        poller.deregister(server_side.as_raw_fd()).unwrap();
+        assert_eq!(poller.registered(), 0);
+        assert!(poller.wait(10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn poll_backend_conformance() {
+        poller_conformance(PollerKind::Poll);
+    }
+
+    #[test]
+    fn epoll_backend_conformance() {
+        poller_conformance(PollerKind::Epoll);
+    }
+
+    fn poller_reports_hangup(kind: PollerKind) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut poller = Poller::new(kind).unwrap();
+        poller.register(server_side.as_raw_fd(), 3, EV_READ).unwrap();
+        drop(client);
+        let evs = poller.wait(5_000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 3);
+        assert!(evs[0].events & EV_READ != 0, "hangup must count as readable");
+    }
+
+    #[test]
+    fn poll_backend_reports_hangup() {
+        poller_reports_hangup(PollerKind::Poll);
+    }
+
+    #[test]
+    fn epoll_backend_reports_hangup() {
+        poller_reports_hangup(PollerKind::Epoll);
+    }
+
+    /// The structural point of the epoll backend, verified in miniature
+    /// (C-FRONTEND-EPOLL is the full-size version): with a fleet of idle
+    /// registered sockets and one hot one, poll(2) pays a per-wakeup
+    /// scan proportional to the fleet while epoll pays O(ready).
+    #[test]
+    fn epoll_scan_cost_is_o_ready_not_o_registered() {
+        const FLEET: usize = 50;
+        const WAKEUPS: u64 = 20;
+        for kind in [PollerKind::Poll, PollerKind::Epoll] {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut poller = Poller::new(kind).unwrap();
+            let mut fleet = Vec::new(); // keep both sides alive
+            for i in 0..FLEET {
+                let c = TcpStream::connect(addr).unwrap();
+                let (s, _) = listener.accept().unwrap();
+                poller.register(s.as_raw_fd(), i as u64, EV_READ).unwrap();
+                fleet.push((c, s));
+            }
+            let mut hot_client = TcpStream::connect(addr).unwrap();
+            let (hot, _) = listener.accept().unwrap();
+            poller.register(hot.as_raw_fd(), 999, EV_READ).unwrap();
+
+            for _ in 0..WAKEUPS {
+                hot_client.write_all(b"x").unwrap();
+                hot_client.flush().unwrap();
+                let evs = poller.wait(5_000).unwrap();
+                assert!(evs.iter().any(|e| e.token == 999));
+                // Consume so the level-triggered readiness clears.
+                let mut b = [0u8; 8];
+                (&hot).read(&mut b).unwrap();
+            }
+
+            let per_wakeup = poller.scan_cost() as f64 / poller.wakeups() as f64;
+            match kind {
+                PollerKind::Poll => assert!(
+                    per_wakeup >= FLEET as f64,
+                    "poll must scan the whole fleet per wakeup: {per_wakeup:.1}"
+                ),
+                PollerKind::Epoll => assert!(
+                    per_wakeup <= 4.0,
+                    "epoll per-wakeup cost must not scale with the fleet: {per_wakeup:.1}"
+                ),
+            }
+        }
     }
 }

@@ -13,6 +13,7 @@ use ossvizier::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestReq
 use ossvizier::pythia::supporter::PolicySupporter;
 use ossvizier::pyvizier::{converters, Algorithm, MetricInformation, StudyConfig, TrialSuggestion};
 use ossvizier::service::{build_service, ServerOptions, VizierServer, VizierService};
+use ossvizier::testing::poller_from_env;
 use ossvizier::testing::procfs::threads_with_prefix;
 use ossvizier::wire::framing::{read_response, write_request, Method};
 use ossvizier::wire::messages::{
@@ -142,7 +143,7 @@ fn wait_operation_wakes_parked_clients_over_tcp() {
     let server = VizierServer::start_with(
         Arc::clone(&service),
         "127.0.0.1:0",
-        ServerOptions { workers: fe_workers, ..Default::default() },
+        ServerOptions { workers: fe_workers, poller: poller_from_env(), ..Default::default() },
     )
     .unwrap();
     let addr = server.local_addr().to_string();
@@ -237,7 +238,7 @@ fn slow_reader_response_parks_and_frees_worker() {
     let server = VizierServer::start_with(
         Arc::clone(&service),
         "127.0.0.1:0",
-        ServerOptions { workers: fe_workers, ..Default::default() },
+        ServerOptions { workers: fe_workers, poller: poller_from_env(), ..Default::default() },
     )
     .unwrap();
     let addr = server.local_addr();
@@ -384,6 +385,7 @@ fn idle_timeout_evicts_idle_connections() {
         ServerOptions {
             workers: 1,
             idle_timeout: Some(Duration::from_millis(300)),
+            poller: poller_from_env(),
             ..Default::default()
         },
     )
@@ -426,7 +428,12 @@ fn max_connections_refuses_excess_clients() {
     let server = VizierServer::start_with(
         service,
         "127.0.0.1:0",
-        ServerOptions { workers: 1, max_connections: 2, ..Default::default() },
+        ServerOptions {
+            workers: 1,
+            max_connections: 2,
+            poller: poller_from_env(),
+            ..Default::default()
+        },
     )
     .unwrap();
     let addr = server.local_addr();

@@ -7,6 +7,7 @@
 use ossvizier::pythia::runner::default_registry;
 use ossvizier::service::remote_pythia::PythiaServer;
 use ossvizier::service::{in_memory_service, ServerOptions, VizierServer};
+use ossvizier::testing::poller_from_env;
 use ossvizier::testing::procfs::threads_with_prefix;
 use ossvizier::wire::framing::{read_response, write_request, FrameError, Method, Status};
 use ossvizier::wire::messages::{EmptyResponse, GetStudyRequest, StudyResponse};
@@ -25,10 +26,12 @@ fn serial() -> MutexGuard<'static, ()> {
 }
 
 fn start_pool(workers: usize) -> VizierServer {
+    // poller_from_env: the CI matrix re-runs this whole file under both
+    // readiness backends via OSSVIZIER_POLLER={poll,epoll}.
     VizierServer::start_with(
         in_memory_service(2),
         "127.0.0.1:0",
-        ServerOptions { workers, ..Default::default() },
+        ServerOptions { workers, poller: poller_from_env(), ..Default::default() },
     )
     .unwrap()
 }
