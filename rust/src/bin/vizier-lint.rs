@@ -1,0 +1,563 @@
+//! `vizier-lint`: repo-specific invariant checker, run as a required CI
+//! step (`cargo run --release --bin vizier-lint`).
+//!
+//! Rules (see `rust/docs/INVARIANTS.md` for the rationale behind each):
+//!
+//! - `safety-comment` — every `unsafe` block carries a `// SAFETY:`
+//!   comment on the same line or the comment block directly above it.
+//! - `ffi-errno` — in the FFI modules (`util/netpoll.rs`,
+//!   `testing/procfs.rs`), a raw libc call may not silently discard its
+//!   return value: bind it, test it, or discard explicitly (`let _ =`).
+//! - `std-sync` — `std::sync::{Mutex, RwLock, Condvar}` are banned
+//!   outside `util/sync.rs`; everything else goes through the lockdep
+//!   shim so lock-order checking sees every acquisition.
+//! - `no-unwrap` — no `.unwrap()` / `.expect(` on the service and
+//!   datastore request paths (non-test code under `service/` and
+//!   `datastore/`): a poisoned panic there kills a worker serving real
+//!   traffic. Tests (`#[cfg(test)]` modules) are exempt.
+//! - `lock-rank` — every `Mutex::new(` / `RwLock::new(` outside
+//!   `util/sync.rs` names a registered `classes::` rank, so no lock can
+//!   be created outside the declared hierarchy.
+//!
+//! A violation that is genuinely intended is silenced with
+//! `// lint: allow(<rule>)` on the same line or the line directly above.
+//!
+//! The scanner is deliberately line-based (no syntax tree): it strips
+//! string/char literals and `//` comments per line, which is exact
+//! enough for this codebase and keeps the tool dependency-free.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let root = match args.as_slice() {
+        [] => default_src_root(),
+        [r] => PathBuf::from(r),
+        _ => {
+            eprintln!("usage: vizier-lint [SRC_ROOT]");
+            return ExitCode::from(2);
+        }
+    };
+    if !root.is_dir() {
+        eprintln!("vizier-lint: source root {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let violations = match lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("vizier-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    if violations.is_empty() {
+        println!("vizier-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("vizier-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// `<manifest dir>/src` when run under cargo, else `./src`.
+fn default_src_root() -> PathBuf {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(m) => PathBuf::from(m).join("src"),
+        Err(_) => PathBuf::from("src"),
+    }
+}
+
+fn lint_tree(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(&path)?;
+        out.extend(lint_file(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// One source line, pre-split into code and comment.
+struct Line<'a> {
+    raw: &'a str,
+    /// Code with string/char-literal contents blanked and the `//`
+    /// comment removed.
+    code: String,
+    /// The `//` comment text, if any (everything after the marker).
+    comment: Option<String>,
+}
+
+fn lint_file(rel: &str, text: &str) -> Vec<Violation> {
+    let lines: Vec<Line> = text.lines().map(split_line).collect();
+    let test_lines = test_mod_lines(&lines);
+    let ffi_names = if is_ffi_module(rel) {
+        extern_fn_names(&lines)
+    } else {
+        Vec::new()
+    };
+
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let lineno = i + 1;
+        let mut report = |rule: &'static str, msg: String| {
+            if !allowed(&lines, i, rule) {
+                out.push(Violation { file: rel.to_string(), line: lineno, rule, msg });
+            }
+        };
+
+        // safety-comment: an `unsafe` token needs a SAFETY comment here
+        // or in the comment block directly above.
+        if has_word(&line.code, "unsafe") && !safety_documented(&lines, i) {
+            report(
+                "safety-comment",
+                "unsafe block without a `// SAFETY:` comment".to_string(),
+            );
+        }
+
+        // ffi-errno: a bare FFI call statement silently drops the result.
+        if let Some(name) = bare_ffi_call(&line.code, &ffi_names) {
+            report(
+                "ffi-errno",
+                format!("result of `{name}(...)` dropped; bind it, test it, or `let _ =` it"),
+            );
+        }
+
+        // std-sync: raw std locks outside the lockdep shim.
+        if rel != "util/sync.rs" && raw_std_lock(&line.code) {
+            report(
+                "std-sync",
+                "raw std::sync lock; use crate::util::sync so lockdep sees it".to_string(),
+            );
+        }
+
+        // no-unwrap: request paths must propagate errors.
+        if (rel.starts_with("service/") || rel.starts_with("datastore/"))
+            && !test_lines[i]
+            && (line.code.contains(".unwrap()") || line.code.contains(".expect("))
+        {
+            report(
+                "no-unwrap",
+                "unwrap/expect on a request path; propagate the error".to_string(),
+            );
+        }
+
+        // lock-rank: lock construction must name a registered class.
+        if rel != "util/sync.rs"
+            && (line.code.contains("Mutex::new(") || line.code.contains("RwLock::new("))
+        {
+            let window: String = lines[i..(i + 3).min(lines.len())]
+                .iter()
+                .map(|l| l.code.as_str())
+                .collect::<Vec<_>>()
+                .join(" ");
+            if !window.contains("classes::") {
+                report(
+                    "lock-rank",
+                    "lock constructed without a classes:: rank registration".to_string(),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// The two modules that declare raw libc bindings.
+fn is_ffi_module(rel: &str) -> bool {
+    rel == "util/netpoll.rs" || rel == "testing/procfs.rs"
+}
+
+/// `// lint: allow(<rule>)` on the same line or the line directly above.
+fn allowed(lines: &[Line], i: usize, rule: &str) -> bool {
+    let needle = format!("lint: allow({rule})");
+    let here = lines[i].comment.as_deref().unwrap_or("").contains(&needle);
+    let above = i > 0 && lines[i - 1].comment.as_deref().unwrap_or("").contains(&needle);
+    here || above
+}
+
+/// SAFETY on the same line, or in the contiguous run of comment /
+/// attribute lines directly above.
+fn safety_documented(lines: &[Line], i: usize) -> bool {
+    if lines[i].comment.as_deref().unwrap_or("").contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let trimmed = l.raw.trim_start();
+        let comment_only = trimmed.starts_with("//");
+        let attr_only = trimmed.starts_with("#[") || trimmed.starts_with("#![");
+        if comment_only {
+            if l.comment.as_deref().unwrap_or("").contains("SAFETY:") {
+                return true;
+            }
+        } else if !attr_only {
+            return false;
+        }
+    }
+    false
+}
+
+/// Names declared in `extern "C" { ... }` blocks.
+fn extern_fn_names(lines: &[Line]) -> Vec<String> {
+    let mut names = Vec::new();
+    let mut depth: i32 = -1; // -1: outside an extern block
+    for line in lines {
+        let code = line.code.as_str();
+        if depth < 0 {
+            // The sanitizer blanks string contents, so `extern "C"`
+            // arrives here as `extern ""`.
+            if code.contains("extern \"") && code.contains('{') {
+                depth = 0;
+            }
+            continue;
+        }
+        if let Some(rest) = code.trim_start().strip_prefix("fn ") {
+            if let Some(open) = rest.find('(') {
+                let name = rest[..open].trim();
+                if !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                    names.push(name.to_string());
+                }
+            }
+        }
+        depth += code.matches('{').count() as i32;
+        depth -= code.matches('}').count() as i32;
+        if depth < 0 {
+            depth = -1; // closed the extern block
+        }
+    }
+    names
+}
+
+/// A statement that calls an FFI function and throws the result away:
+/// after stripping a leading `unsafe {`, the line *starts* with the call.
+fn bare_ffi_call<'n>(code: &str, names: &'n [String]) -> Option<&'n str> {
+    let mut s = code.trim_start();
+    if let Some(rest) = s.strip_prefix("unsafe") {
+        s = rest.trim_start().strip_prefix('{').unwrap_or(rest).trim_start();
+    }
+    for name in names {
+        if let Some(rest) = s.strip_prefix(name.as_str()) {
+            if rest.starts_with('(') {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// True per line when it falls inside a `#[cfg(test)] mod` body.
+fn test_mod_lines(lines: &[Line]) -> Vec<bool> {
+    let mut flags = vec![false; lines.len()];
+    let mut depth: i32 = 0;
+    let mut pending_attr = false; // saw #[cfg(test)], waiting for the mod
+    let mut skip_until: Option<i32> = None; // depth at which the test mod ends
+    for (i, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if skip_until.is_none() {
+            if code.contains("#[cfg(test)]") {
+                pending_attr = true;
+            } else if pending_attr {
+                let t = code.trim_start();
+                if t.starts_with("mod ") || t.starts_with("pub mod ") {
+                    skip_until = Some(depth);
+                }
+                if !t.is_empty() && !t.starts_with("#[") {
+                    pending_attr = false;
+                }
+            }
+        }
+        if skip_until.is_some() {
+            flags[i] = true;
+        }
+        depth += code.matches('{').count() as i32;
+        depth -= code.matches('}').count() as i32;
+        if let Some(d) = skip_until {
+            if depth <= d {
+                skip_until = None;
+            }
+        }
+    }
+    flags
+}
+
+/// A banned lock type reached through `std::sync`: either directly
+/// (`std::sync::Mutex`) or via an import list (`use std::sync::{...}`
+/// naming Mutex/RwLock/Condvar). `std::sync::Arc<Mutex<..>>` — the shim
+/// Mutex inside a std Arc — is legal and must not match.
+fn raw_std_lock(code: &str) -> bool {
+    const BAD: [&str; 3] = ["Mutex", "RwLock", "Condvar"];
+    const PREFIX: &str = "std::sync::";
+    let mut from = 0;
+    while let Some(p) = code[from..].find(PREFIX) {
+        let after = &code[from + p + PREFIX.len()..];
+        if let Some(inner) = after.strip_prefix('{') {
+            let list = &inner[..inner.find('}').unwrap_or(inner.len())];
+            if BAD.iter().any(|w| has_word(list, w)) {
+                return true;
+            }
+        } else if BAD.iter().any(|w| {
+            after
+                .strip_prefix(w)
+                .is_some_and(|rest| rest.is_empty() || !is_ident(rest.as_bytes()[0]))
+        }) {
+            return true;
+        }
+        from += p + PREFIX.len();
+    }
+    false
+}
+
+/// `word` present in `code` with identifier-character boundaries (so
+/// `unsafe_op_in_unsafe_fn` does not count as `unsafe`).
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let ok_before = start == 0 || !is_ident(bytes[start - 1]);
+        let ok_after = end == bytes.len() || !is_ident(bytes[end]);
+        if ok_before && ok_after {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Split a raw line into sanitized code (string/char contents blanked,
+/// comment removed) and the `//` comment text.
+fn split_line(raw: &str) -> Line<'_> {
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = None;
+    let chars: Vec<char> = raw.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
+            comment = Some(chars[i + 2..].iter().collect());
+            break;
+        }
+        if c == '"' {
+            // String literal: blank the contents, keep the quotes.
+            code.push('"');
+            i += 1;
+            while i < chars.len() {
+                if chars[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    break;
+                }
+                i += 1;
+            }
+            code.push('"');
+            i += 1; // past the closing quote (or the end)
+            continue;
+        }
+        if c == '\'' {
+            // Char literal ('x', '\n', '\'') vs lifetime ('a in types).
+            let is_char_lit = match chars.get(i + 1) {
+                Some('\\') => true,
+                Some(_) => chars.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char_lit {
+                code.push_str("' '");
+                i += 1;
+                if chars.get(i) == Some(&'\\') {
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                i += 1; // closing quote
+                continue;
+            }
+        }
+        code.push(c);
+        i += 1;
+    }
+    Line { raw, code, comment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, text: &str) -> Vec<&'static str> {
+        lint_file(rel, text).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn clean_file_has_no_violations() {
+        let src = r#"
+            use crate::util::sync::{classes, Mutex};
+            fn f() {
+                let m = Mutex::new(&classes::SVC_COALESCE, 0u32);
+                let _g = m.lock();
+            }
+        "#;
+        assert!(rules("service/api.rs", src).is_empty());
+    }
+
+    #[test]
+    fn undocumented_unsafe_is_flagged() {
+        let src = "fn f() { let x = unsafe { g() }; }";
+        assert_eq!(rules("util/x.rs", src), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn safety_comment_same_line_or_above_passes() {
+        let same = "fn f() { let x = unsafe { g() }; } // SAFETY: g is fine";
+        assert!(rules("util/x.rs", same).is_empty());
+        let above = "// SAFETY: g has no preconditions\n// (more detail)\nfn f() { let x = unsafe { g() }; }";
+        assert!(rules("util/x.rs", above).is_empty());
+        let gap = "// SAFETY: too far away\nfn unrelated() {}\nfn f() { let x = unsafe { g() }; }";
+        assert_eq!(rules("util/x.rs", gap), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn deny_attr_is_not_an_unsafe_block() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]";
+        assert!(rules("lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bare_ffi_call_is_flagged_in_ffi_modules_only() {
+        let src = "extern \"C\" {\n    fn close(fd: i32) -> i32;\n}\nfn f(fd: i32) {\n    // SAFETY: fd is owned\n    unsafe {\n        close(fd);\n    }\n}";
+        assert_eq!(rules("util/netpoll.rs", src), vec!["ffi-errno"]);
+        // Same text elsewhere: the file declares no watched FFI module.
+        assert!(rules("util/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bound_tested_or_discarded_ffi_calls_pass() {
+        let src = "extern \"C\" {\n    fn close(fd: i32) -> i32;\n    fn pipe(p: *mut i32) -> i32;\n}\nfn f(fd: i32, p: *mut i32) {\n    // SAFETY: fd owned; result discarded deliberately\n    let _ = unsafe { close(fd) };\n    // SAFETY: p valid for two fds\n    if unsafe { pipe(p) } != 0 {}\n}";
+        assert!(rules("util/netpoll.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_std_locks_are_flagged_outside_the_shim() {
+        assert_eq!(
+            rules("service/api.rs", "use std::sync::Mutex;"),
+            vec!["std-sync"]
+        );
+        assert_eq!(
+            rules("datastore/x.rs", "use std::sync::{Arc, Condvar};"),
+            vec!["std-sync"]
+        );
+        // mpsc/Arc/atomics from std::sync stay legal.
+        assert!(rules("service/api.rs", "use std::sync::{mpsc, Arc};").is_empty());
+        assert!(rules("util/sync.rs", "use std::sync::Mutex as StdMutex;").is_empty());
+        // A std Arc holding the *shim* Mutex is legal...
+        let arc_of_shim = "methods: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,";
+        assert!(rules("service/metrics.rs", arc_of_shim).is_empty());
+        // ...but the std lock reached through the path is not.
+        assert_eq!(
+            rules("service/api.rs", "let m = std::sync::Mutex::new(0); // lint: allow(lock-rank)"),
+            vec!["std-sync"]
+        );
+    }
+
+    #[test]
+    fn unwrap_on_request_paths_is_flagged_but_tests_are_exempt() {
+        let src = "fn f() { g().unwrap(); }";
+        assert_eq!(rules("service/api.rs", src), vec!["no-unwrap"]);
+        assert_eq!(rules("datastore/wal.rs", "fn f() { g().expect(\"x\"); }"), vec!["no-unwrap"]);
+        // Not a request path:
+        assert!(rules("util/x.rs", src).is_empty());
+        // unwrap_or_else and friends are fine:
+        assert!(rules("service/api.rs", "fn f() { g().unwrap_or_default(); }").is_empty());
+        // Test modules are exempt:
+        let test_mod = "fn f() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { g().unwrap(); }\n}\n";
+        assert!(rules("service/api.rs", test_mod).is_empty());
+        // ...but code after the test mod closes is not:
+        let after = "#[cfg(test)]\nmod tests {\n    fn t() { g().unwrap(); }\n}\nfn f() { g().unwrap(); }";
+        assert_eq!(rules("service/api.rs", after), vec!["no-unwrap"]);
+    }
+
+    #[test]
+    fn unregistered_lock_construction_is_flagged() {
+        assert_eq!(
+            rules("service/api.rs", "let m = Mutex::new(0u32);"),
+            vec!["lock-rank"]
+        );
+        // Multiline constructor: the class may be on a following line.
+        let multiline = "let m = Mutex::new(\n    &classes::SVC_COALESCE,\n    0u32,\n);";
+        assert!(rules("service/api.rs", multiline).is_empty());
+        assert!(rules("util/sync.rs", "let m = Mutex::new(&LOCAL_CLASS, ());").is_empty());
+    }
+
+    #[test]
+    fn allow_comment_silences_a_rule() {
+        let same_line = "fn f() { g().unwrap(); } // lint: allow(no-unwrap)";
+        assert!(rules("service/api.rs", same_line).is_empty());
+        let above = "// lint: allow(no-unwrap) — startup only\nfn f() { g().unwrap(); }";
+        assert!(rules("service/api.rs", above).is_empty());
+        // The wrong rule name does not silence it.
+        let wrong = "fn f() { g().unwrap(); } // lint: allow(std-sync)";
+        assert_eq!(rules("service/api.rs", wrong), vec!["no-unwrap"]);
+    }
+
+    #[test]
+    fn string_literals_do_not_trigger_rules() {
+        let src = "fn f() { let s = \"unsafe std::sync::Mutex .unwrap() Mutex::new(\"; g(s); }";
+        assert!(rules("service/api.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lint_tree_walks_and_reports_paths() {
+        let dir = std::env::temp_dir().join(format!(
+            "vizier-lint-test-{}-{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").len()
+        ));
+        let svc = dir.join("service");
+        std::fs::create_dir_all(&svc).unwrap();
+        std::fs::write(svc.join("bad.rs"), "fn f() { g().unwrap(); }\n").unwrap();
+        std::fs::write(dir.join("ok.rs"), "fn f() {}\n").unwrap();
+        let v = lint_tree(&dir).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].file, "service/bad.rs");
+        assert_eq!(v[0].rule, "no-unwrap");
+        assert_eq!(v[0].line, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

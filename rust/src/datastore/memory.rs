@@ -19,12 +19,18 @@
 //!   mutex (display name → study name). Lock order is always
 //!   directory → shard, and the directory lock is never held while
 //!   another directory-taking call runs, so the pair cannot deadlock.
+//!
+//! Both locks are registered with the crate lock hierarchy
+//! ([`crate::util::sync::classes`]: `datastore.directory` before
+//! `datastore.shard`), so the order above is machine-checked under
+//! lockdep (debug builds / `OSSVIZIER_LOCKDEP=1`) — see
+//! `rust/docs/INVARIANTS.md`.
 
 use super::{Datastore, DsError, StudyPage, TrialPage};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 use std::collections::{BTreeMap, HashMap};
+use crate::util::sync::{classes, Mutex, RwLock};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
 
 /// Default number of shards (a power of two comfortably above typical
 /// worker-thread counts, so independent studies rarely collide).
@@ -93,8 +99,10 @@ impl InMemoryDatastore {
     pub fn with_shards(n: usize) -> Self {
         let n = n.max(1);
         Self {
-            shards: (0..n).map(|_| RwLock::new(Shard::default())).collect(),
-            directory: Mutex::new(HashMap::new()),
+            shards: (0..n)
+                .map(|_| RwLock::new(&classes::DS_SHARD, Shard::default()))
+                .collect(),
+            directory: Mutex::new(&classes::DS_DIRECTORY, HashMap::new()),
             next_study: AtomicU64::new(1),
             next_op: AtomicU64::new(1),
         }
@@ -113,7 +121,7 @@ impl InMemoryDatastore {
     /// Names of the studies currently resident in shard `idx` (unsorted).
     /// Introspection for tests and tooling.
     pub fn studies_in_shard(&self, idx: usize) -> Vec<String> {
-        self.shards[idx].read().unwrap().studies.keys().cloned().collect()
+        self.shards[idx].read().studies.keys().cloned().collect()
     }
 
     fn shard_of(&self, name: &str) -> &RwLock<Shard> {
@@ -126,8 +134,8 @@ impl InMemoryDatastore {
         if let Some(n) = study.name.strip_prefix("studies/").and_then(|s| s.parse::<u64>().ok()) {
             self.next_study.fetch_max(n + 1, Ordering::SeqCst);
         }
-        let mut dir = self.directory.lock().unwrap();
-        let mut sh = self.shard_of(&study.name).write().unwrap();
+        let mut dir = self.directory.lock();
+        let mut sh = self.shard_of(&study.name).write();
         let entry = sh.studies.entry(study.name.clone()).or_default();
         if entry.study.display_name != study.display_name {
             Self::remap_display(&mut dir, &entry.study.display_name, &study.display_name, &study.name);
@@ -161,7 +169,7 @@ impl InMemoryDatastore {
     /// atomic shard image. Done operations are excluded: compaction is
     /// where the log sheds them.
     pub(crate) fn snapshot_shard(&self, idx: usize) -> ShardSnapshot {
-        let sh = self.shards[idx].read().unwrap();
+        let sh = self.shards[idx].read();
         ShardSnapshot {
             studies: sh.studies.values().map(|e| e.study.clone()).collect(),
             pending_ops: sh.operations.values().filter(|o| !o.done).cloned().collect(),
@@ -188,7 +196,7 @@ impl InMemoryDatastore {
     }
 
     pub(crate) fn apply_put_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
-        let mut sh = self.shard_of(study).write().unwrap();
+        let mut sh = self.shard_of(study).write();
         let entry = sh
             .studies
             .get_mut(study)
@@ -202,20 +210,20 @@ impl InMemoryDatastore {
         if let Some(n) = op.name.strip_prefix("operations/").and_then(|s| s.parse::<u64>().ok()) {
             self.next_op.fetch_max(n + 1, Ordering::SeqCst);
         }
-        let mut sh = self.shard_of(&op.name).write().unwrap();
+        let mut sh = self.shard_of(&op.name).write();
         sh.operations.insert(op.name.clone(), op);
     }
 
     pub(crate) fn apply_delete_study(&self, name: &str) {
-        let mut dir = self.directory.lock().unwrap();
-        let mut sh = self.shard_of(name).write().unwrap();
+        let mut dir = self.directory.lock();
+        let mut sh = self.shard_of(name).write();
         if let Some(entry) = sh.studies.remove(name) {
             Self::remap_display(&mut dir, &entry.study.display_name, "", name);
         }
     }
 
     pub(crate) fn apply_delete_trial(&self, study: &str, id: u64) {
-        if let Some(e) = self.shard_of(study).write().unwrap().studies.get_mut(study) {
+        if let Some(e) = self.shard_of(study).write().studies.get_mut(study) {
             e.trials.remove(&id);
         }
     }
@@ -235,19 +243,19 @@ impl Datastore for InMemoryDatastore {
         // directory no longer tracks. Creates are rare — the scan takes
         // shard read locks one at a time (dir -> shard order) and never
         // touches the trial hot path.
-        let mut dir = self.directory.lock().unwrap();
+        let mut dir = self.directory.lock();
         if !study.display_name.is_empty() {
             if dir.contains_key(&study.display_name) {
                 return Err(DsError::StudyExists(study.display_name));
             }
             for sh in &self.shards {
-                let sh = sh.read().unwrap();
+                let sh = sh.read();
                 if sh.studies.values().any(|e| e.study.display_name == study.display_name) {
                     return Err(DsError::StudyExists(study.display_name));
                 }
             }
         }
-        let mut sh = self.shard_of(&study.name).write().unwrap();
+        let mut sh = self.shard_of(&study.name).write();
         if sh.studies.contains_key(&study.name) {
             return Err(DsError::StudyExists(study.name));
         }
@@ -268,7 +276,6 @@ impl Datastore for InMemoryDatastore {
     fn get_study(&self, name: &str) -> Result<StudyProto, DsError> {
         self.shard_of(name)
             .read()
-            .unwrap()
             .studies
             .get(name)
             .map(|e| e.study.clone())
@@ -276,7 +283,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn lookup_study(&self, display_name: &str) -> Result<StudyProto, DsError> {
-        let hit = self.directory.lock().unwrap().get(display_name).cloned();
+        let hit = self.directory.lock().get(display_name).cloned();
         if let Some(name) = hit {
             if let Ok(study) = self.get_study(&name) {
                 return Ok(study);
@@ -285,7 +292,7 @@ impl Datastore for InMemoryDatastore {
         // Fallback scan (directory misses can only come from duplicate
         // display names introduced via update_study).
         for sh in &self.shards {
-            let sh = sh.read().unwrap();
+            let sh = sh.read();
             if let Some(e) = sh.studies.values().find(|e| e.study.display_name == display_name) {
                 return Ok(e.study.clone());
             }
@@ -296,7 +303,7 @@ impl Datastore for InMemoryDatastore {
     fn list_studies(&self) -> Result<Vec<StudyProto>, DsError> {
         let mut studies: Vec<StudyProto> = Vec::new();
         for sh in &self.shards {
-            let sh = sh.read().unwrap();
+            let sh = sh.read();
             studies.extend(sh.studies.values().map(|e| e.study.clone()));
         }
         studies.sort_by(|a, b| a.name.cmp(&b.name));
@@ -327,7 +334,7 @@ impl Datastore for InMemoryDatastore {
         // the page fills with studies still left to visit.
         let mut last: Option<(usize, String)> = None;
         while shard < self.shards.len() {
-            let sh = self.shards[shard].read().unwrap();
+            let sh = self.shards[shard].read();
             let mut names: Vec<&String> = sh.studies.keys().collect();
             names.sort();
             for name in names {
@@ -337,6 +344,7 @@ impl Datastore for InMemoryDatastore {
                     }
                 }
                 if out.len() == cap {
+                    // lint: allow(no-unwrap) — cap >= 1, so something was emitted
                     let (s, n) = last.expect("cap >= 1, so something was emitted");
                     return Ok(StudyPage {
                         studies: out,
@@ -356,8 +364,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn update_study(&self, study: StudyProto) -> Result<(), DsError> {
-        let mut dir = self.directory.lock().unwrap();
-        let mut sh = self.shard_of(&study.name).write().unwrap();
+        let mut dir = self.directory.lock();
+        let mut sh = self.shard_of(&study.name).write();
         let entry = sh
             .studies
             .get_mut(&study.name)
@@ -370,8 +378,8 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn delete_study(&self, name: &str) -> Result<(), DsError> {
-        let mut dir = self.directory.lock().unwrap();
-        let mut sh = self.shard_of(name).write().unwrap();
+        let mut dir = self.directory.lock();
+        let mut sh = self.shard_of(name).write();
         let entry = sh
             .studies
             .remove(name)
@@ -381,7 +389,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn create_trial(&self, study: &str, mut trial: TrialProto) -> Result<TrialProto, DsError> {
-        let mut sh = self.shard_of(study).write().unwrap();
+        let mut sh = self.shard_of(study).write();
         let entry = sh
             .studies
             .get_mut(study)
@@ -393,7 +401,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn get_trial(&self, study: &str, id: u64) -> Result<TrialProto, DsError> {
-        let sh = self.shard_of(study).read().unwrap();
+        let sh = self.shard_of(study).read();
         sh.studies
             .get(study)
             .ok_or_else(|| DsError::StudyNotFound(study.to_string()))?
@@ -414,7 +422,7 @@ impl Datastore for InMemoryDatastore {
     ) -> Result<TrialPage, DsError> {
         let after = crate::datastore::parse_trial_token(page_token)?;
         let cap = if page_size == 0 { usize::MAX } else { page_size };
-        let sh = self.shard_of(study).read().unwrap();
+        let sh = self.shard_of(study).read();
         let entry = sh
             .studies
             .get(study)
@@ -440,7 +448,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn list_trials(&self, study: &str) -> Result<Vec<TrialProto>, DsError> {
-        let sh = self.shard_of(study).read().unwrap();
+        let sh = self.shard_of(study).read();
         Ok(sh
             .studies
             .get(study)
@@ -456,7 +464,7 @@ impl Datastore for InMemoryDatastore {
         study: &str,
         filter: &super::query::TrialFilter,
     ) -> Result<Vec<TrialProto>, DsError> {
-        let sh = self.shard_of(study).read().unwrap();
+        let sh = self.shard_of(study).read();
         let entry = sh
             .studies
             .get(study)
@@ -481,7 +489,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn update_trial(&self, study: &str, trial: TrialProto) -> Result<(), DsError> {
-        let mut sh = self.shard_of(study).write().unwrap();
+        let mut sh = self.shard_of(study).write();
         let entry = sh
             .studies
             .get_mut(study)
@@ -494,7 +502,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn delete_trial(&self, study: &str, id: u64) -> Result<(), DsError> {
-        let mut sh = self.shard_of(study).write().unwrap();
+        let mut sh = self.shard_of(study).write();
         let entry = sh
             .studies
             .get_mut(study)
@@ -512,7 +520,7 @@ impl Datastore for InMemoryDatastore {
         id: u64,
         f: &mut dyn FnMut(&mut TrialProto) -> Result<(), DsError>,
     ) -> Result<TrialProto, DsError> {
-        let mut sh = self.shard_of(study).write().unwrap();
+        let mut sh = self.shard_of(study).write();
         let entry = sh
             .studies
             .get_mut(study)
@@ -530,7 +538,7 @@ impl Datastore for InMemoryDatastore {
             let id = self.next_op.fetch_add(1, Ordering::SeqCst);
             op.name = format!("operations/{id}");
         }
-        let mut sh = self.shard_of(&op.name).write().unwrap();
+        let mut sh = self.shard_of(&op.name).write();
         sh.operations.insert(op.name.clone(), op.clone());
         Ok(op)
     }
@@ -538,7 +546,6 @@ impl Datastore for InMemoryDatastore {
     fn get_operation(&self, name: &str) -> Result<OperationProto, DsError> {
         self.shard_of(name)
             .read()
-            .unwrap()
             .operations
             .get(name)
             .cloned()
@@ -546,7 +553,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn update_operation(&self, op: OperationProto) -> Result<(), DsError> {
-        let mut sh = self.shard_of(&op.name).write().unwrap();
+        let mut sh = self.shard_of(&op.name).write();
         if !sh.operations.contains_key(&op.name) {
             return Err(DsError::OperationNotFound(op.name.clone()));
         }
@@ -557,7 +564,7 @@ impl Datastore for InMemoryDatastore {
     fn pending_operations(&self) -> Result<Vec<OperationProto>, DsError> {
         let mut ops: Vec<OperationProto> = Vec::new();
         for sh in &self.shards {
-            let sh = sh.read().unwrap();
+            let sh = sh.read();
             ops.extend(sh.operations.values().filter(|o| !o.done).cloned());
         }
         ops.sort_by(|a, b| a.name.cmp(&b.name));
@@ -569,7 +576,7 @@ impl Datastore for InMemoryDatastore {
         study: &str,
         updates: &[UnitMetadataUpdate],
     ) -> Result<(), DsError> {
-        let mut sh = self.shard_of(study).write().unwrap();
+        let mut sh = self.shard_of(study).write();
         let entry = sh
             .studies
             .get_mut(study)
@@ -596,7 +603,7 @@ impl Datastore for InMemoryDatastore {
     }
 
     fn trial_count(&self, study: &str) -> Result<usize, DsError> {
-        let sh = self.shard_of(study).read().unwrap();
+        let sh = self.shard_of(study).read();
         Ok(sh
             .studies
             .get(study)

@@ -60,6 +60,12 @@
 //!    replay converges to the same state as replaying the full original
 //!    log (`tests/fault_tolerance.rs`:
 //!    `crash_at_every_compaction_stage_recovers_cleanly`).
+//!
+//! The datastore's locks sit in the crate-wide hierarchy declared in
+//! [`crate::util::sync::classes`] (directory before shard; the WAL
+//! commit locks above both) and are checked under lockdep. The full
+//! table, with the code paths that pin each edge, is in
+//! `rust/docs/INVARIANTS.md`.
 
 pub mod memory;
 pub mod query;

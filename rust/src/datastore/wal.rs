@@ -78,12 +78,27 @@
 //! survives a crash; a torn final record is exactly one whose writers
 //! were never acknowledged.
 //!
-//! Record framing: `[u32-le len][u8 kind][payload]` (identical in `.log`
-//! and `.base` segments).
+//! Every WAL file — the single-file log, each `.log` segment, and each
+//! `.base` snapshot — starts with a 16-byte header: an 8-byte magic, the
+//! format version, and the shard count the store was opened with. Opens
+//! fail fast (with the expected/found values in the error) on a
+//! cross-version or cross-shard-count file instead of misreplaying it:
+//! per-study replay order is a per-*lane* guarantee, and lane routing
+//! changes with the shard count. Record framing after the header:
+//! `[u32-le len][u8 kind][payload]` (identical in `.log` and `.base`
+//! segments).
+//!
+//! The commit path's locks are registered with the crate lock hierarchy
+//! ([`crate::util::sync::classes`]): `wal.commit_gate` → `wal.commit_work`
+//! → `wal.commit_lane` → `wal.log_writer` → the datastore locks, with
+//! `wal.compactor` reachable from under the gate. The orderings described
+//! in this module's comments are machine-checked under lockdep (debug
+//! builds / `OSSVIZIER_LOCKDEP=1`) — see `rust/docs/INVARIANTS.md`.
 
 use super::memory::InMemoryDatastore;
 use super::{Datastore, DsError};
 use crate::service::metrics::WalMetrics;
+use crate::util::sync::{classes, Condvar, Mutex, RwLock};
 use crate::util::time::Stopwatch;
 use crate::wire::codec::{decode, encode, Reader, WireError, WireMessage, Writer};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
@@ -91,7 +106,7 @@ use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write as IoWrite};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 const KIND_PUT_STUDY: u8 = 1;
@@ -99,6 +114,24 @@ const KIND_DELETE_STUDY: u8 = 2;
 const KIND_PUT_TRIAL: u8 = 3;
 const KIND_DELETE_TRIAL: u8 = 4;
 const KIND_PUT_OPERATION: u8 = 5;
+
+/// Magic prefix of every WAL file (single-file log, `.log` segment, and
+/// `.base` snapshot alike).
+const WAL_MAGIC: [u8; 8] = *b"OSVZWAL\0";
+/// Bump on any incompatible change to the header, record framing, or
+/// envelope encoding.
+const WAL_FORMAT_VERSION: u32 = 1;
+/// Bytes of the per-file header: magic + format version (u32 le) +
+/// shard-count stamp (u32 le).
+const WAL_HEADER_LEN: u64 = 16;
+
+fn wal_header(shard_count: u32) -> [u8; WAL_HEADER_LEN as usize] {
+    let mut h = [0u8; WAL_HEADER_LEN as usize];
+    h[..8].copy_from_slice(&WAL_MAGIC);
+    h[8..12].copy_from_slice(&WAL_FORMAT_VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&shard_count.to_le_bytes());
+    h
+}
 
 /// One durable mutation record.
 #[derive(Debug, Clone, PartialEq)]
@@ -366,8 +399,10 @@ struct CommitShared {
 impl CommitShared {
     fn new(lanes: usize) -> Self {
         Self {
-            lanes: (0..lanes).map(|_| Mutex::new(LaneState::default())).collect(),
-            work: Mutex::new(WorkState {
+            lanes: (0..lanes)
+                .map(|_| Mutex::new(&classes::WAL_LANE, LaneState::default()))
+                .collect(),
+            work: Mutex::new(&classes::WAL_WORK, WorkState {
                 durable: vec![0; lanes],
                 pending: false,
                 inflight: false,
@@ -401,13 +436,21 @@ struct LogCtx {
     sync: bool,
     segment_bytes: Option<u64>,
     auto_compact_segments: u64,
+    /// Header stamped on every file this store creates (format version +
+    /// shard count); replay refuses files whose stamp differs.
+    header: [u8; WAL_HEADER_LEN as usize],
     metrics: Arc<WalMetrics>,
 }
 
 /// Seal the active segment (flush + fsync — sealed segments must never
 /// legally contain torn records) and open the next one. Caller holds the
 /// log lock; this is the only commit-path cost of rotation.
-fn rotate_locked(lw: &mut LogWriter, dir: &Path, metrics: &WalMetrics) -> std::io::Result<()> {
+fn rotate_locked(
+    lw: &mut LogWriter,
+    dir: &Path,
+    header: &[u8; WAL_HEADER_LEN as usize],
+    metrics: &WalMetrics,
+) -> std::io::Result<()> {
     // Seal at the last-known-good byte. A failed batch write (e.g. disk
     // full) can leave a partial record past `lw.bytes` — the committer
     // only advances it after a successful flush — and a sealed segment
@@ -429,7 +472,14 @@ fn rotate_locked(lw: &mut LogWriter, dir: &Path, metrics: &WalMetrics) -> std::i
     // "acknowledgement = durability" promise covers the entry too).
     sync_dir(dir);
     lw.w = BufWriter::new(file);
-    lw.bytes = 0;
+    // Flush the header immediately: `reset_writer` restores a failed
+    // segment to `lw.bytes` with set_len, which must never *extend* the
+    // file over a still-buffered header (zero-fill would corrupt the
+    // magic). A crash before this flush leaves a torn header, legal in
+    // the final segment only — exactly like a torn record.
+    lw.w.write_all(header)?;
+    lw.w.flush()?;
+    lw.bytes = WAL_HEADER_LEN;
     lw.seg_no = next;
     metrics.rotations.fetch_add(1, Ordering::Relaxed);
     metrics.segments.fetch_add(1, Ordering::Relaxed);
@@ -475,14 +525,14 @@ fn committer_loop(
     let mut batch: Vec<u8> = Vec::new();
     loop {
         {
-            let mut ws = shared.work.lock().unwrap();
+            let mut ws = shared.work.lock();
             // After a sticky I/O error nothing more is written: writers
             // fail fast, and appending past the torn region a failed
             // batch may have left would strand those records where
             // replay (which stops at the first torn record) can never
             // reach them. Park until shutdown.
             while !ws.shutdown && (!ws.pending || ws.error.is_some()) {
-                ws = shared.work_cv.wait(ws).unwrap();
+                ws = shared.work_cv.wait(ws);
             }
             if ws.error.is_some() {
                 return; // shutdown in error mode: nothing left to drain
@@ -493,7 +543,7 @@ fn committer_loop(
         batch.clear();
         let mut targets: Vec<(usize, u64)> = Vec::new();
         for (i, lane) in shared.lanes.iter().enumerate() {
-            let mut st = lane.lock().unwrap();
+            let mut st = lane.lock();
             if st.buf.is_empty() {
                 continue;
             }
@@ -501,7 +551,7 @@ fn committer_loop(
             targets.push((i, st.enqueued));
         }
         if targets.is_empty() {
-            let mut ws = shared.work.lock().unwrap();
+            let mut ws = shared.work.lock();
             ws.inflight = false;
             let stop = ws.shutdown && !ws.pending;
             drop(ws);
@@ -514,7 +564,7 @@ fn committer_loop(
         // I/O happens outside the lane locks: writers keep applying and
         // enqueueing while this batch hits the disk.
         let io = (|| -> std::io::Result<bool> {
-            let mut lw = ctx.log.lock().unwrap();
+            let mut lw = ctx.log.lock();
             lw.w.write_all(&batch)?;
             lw.w.flush()?;
             if ctx.sync {
@@ -523,7 +573,7 @@ fn committer_loop(
             lw.bytes += batch.len() as u64;
             if let (Some(limit), Some(dir)) = (ctx.segment_bytes, ctx.dir.as_deref()) {
                 if lw.bytes >= limit {
-                    rotate_locked(&mut lw, dir, &ctx.metrics)?;
+                    rotate_locked(&mut lw, dir, &ctx.header, &ctx.metrics)?;
                     return Ok(true);
                 }
             }
@@ -531,7 +581,7 @@ fn committer_loop(
         })();
         let mut rotated = false;
         {
-            let mut ws = shared.work.lock().unwrap();
+            let mut ws = shared.work.lock();
             ws.inflight = false;
             match io {
                 Ok(r) => {
@@ -571,17 +621,25 @@ struct CompactorState {
     shutdown: bool,
 }
 
-#[derive(Default)]
 struct CompactorShared {
     state: Mutex<CompactorState>,
     cv: Condvar,
+}
+
+impl Default for CompactorShared {
+    fn default() -> Self {
+        Self {
+            state: Mutex::new(&classes::WAL_COMPACTOR, CompactorState::default()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 impl CompactorShared {
     /// Request a compaction without waiting (coalesces with an already
     /// pending request).
     fn request_async(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if st.shutdown {
             return;
         }
@@ -594,7 +652,7 @@ impl CompactorShared {
     /// Request a compaction and block until a run that started at or
     /// after this request completes. Commits are NOT blocked meanwhile.
     fn request_and_wait(&self) -> Result<(), DsError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if st.shutdown {
             return Err(DsError::Storage("wal compactor is shut down".into()));
         }
@@ -602,7 +660,7 @@ impl CompactorShared {
         let goal = st.requested;
         self.cv.notify_all();
         while st.completed < goal && !st.shutdown {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
         }
         if st.completed < goal {
             return Err(DsError::Storage("wal compactor shut down mid-request".into()));
@@ -614,7 +672,7 @@ impl CompactorShared {
     }
 
     fn shutdown(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         st.shutdown = true;
         self.cv.notify_all();
     }
@@ -623,7 +681,7 @@ impl CompactorShared {
 fn compactor_loop(shared: &CompactorShared, mem: &InMemoryDatastore, ctx: &LogCtx) {
     loop {
         let goal = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock();
             loop {
                 if st.shutdown {
                     return;
@@ -631,11 +689,11 @@ fn compactor_loop(shared: &CompactorShared, mem: &InMemoryDatastore, ctx: &LogCt
                 if st.requested > st.completed {
                     break st.requested;
                 }
-                st = shared.cv.wait(st).unwrap();
+                st = shared.cv.wait(st);
             }
         };
         let result = run_segmented_compaction(mem, ctx);
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.state.lock();
         st.completed = goal;
         st.last_error = result.err().map(|e| e.to_string());
         shared.cv.notify_all();
@@ -692,15 +750,16 @@ fn write_snapshot<W: IoWrite>(mem: &InMemoryDatastore, w: &mut W) -> Result<(), 
 /// the next — after which commits proceed concurrently with the
 /// snapshot, publish, and deletion steps.
 fn run_segmented_compaction(mem: &InMemoryDatastore, ctx: &LogCtx) -> Result<(), DsError> {
+    // lint: allow(no-unwrap) — only ever spawned with a segment directory
     let dir = ctx.dir.as_ref().expect("segmented compaction requires a segment directory");
     let sw = Stopwatch::start();
     // 1. Seal. Everything applied before this point is in segments
     //    ≤ `sealed` or already visible to the snapshot; everything after
     //    lands in the tail and re-applies idempotently at replay.
     let sealed = {
-        let mut lw = ctx.log.lock().unwrap();
+        let mut lw = ctx.log.lock();
         let sealed = lw.seg_no;
-        rotate_locked(&mut lw, dir, &ctx.metrics).map_err(io_err)?;
+        rotate_locked(&mut lw, dir, &ctx.header, &ctx.metrics).map_err(io_err)?;
         sealed
     };
     // 2. Snapshot into an unpublished tmp file.
@@ -708,6 +767,7 @@ fn run_segmented_compaction(mem: &InMemoryDatastore, ctx: &LogCtx) -> Result<(),
     {
         let file = File::create(&tmp).map_err(io_err)?;
         let mut w = BufWriter::new(file);
+        w.write_all(&ctx.header).map_err(io_err)?;
         write_snapshot(mem, &mut w)?;
         w.flush().map_err(io_err)?;
         w.get_ref().sync_all().map_err(io_err)?;
@@ -806,12 +866,49 @@ fn replay_file(
 ) -> Result<u64, DsError> {
     let mut buf = Vec::new();
     File::open(path).map_err(io_err)?.read_to_end(&mut buf).map_err(io_err)?;
-    let mut pos = 0usize;
+    if buf.len() < WAL_HEADER_LEN as usize {
+        // A header can only be torn by a crash between segment creation
+        // and its first flush — legal in the final segment only, exactly
+        // like a torn record.
+        if allow_torn_tail {
+            return Ok(0);
+        }
+        return Err(DsError::Storage(format!(
+            "wal segment {} is truncated mid-header ({} of {WAL_HEADER_LEN} bytes)",
+            path.display(),
+            buf.len()
+        )));
+    }
+    if buf[..8] != WAL_MAGIC {
+        return Err(DsError::Storage(format!(
+            "{} is not a vizier wal file (bad magic); refusing to replay it",
+            path.display()
+        )));
+    }
+    let version = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    if version != WAL_FORMAT_VERSION {
+        return Err(DsError::Storage(format!(
+            "wal segment {} has format version {version}, but this build reads version \
+             {WAL_FORMAT_VERSION}; refusing a cross-version open",
+            path.display()
+        )));
+    }
+    let stamped = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+    if stamped as usize != mem.shard_count() {
+        return Err(DsError::Storage(format!(
+            "wal segment {} was written with {stamped} shards but this store opens with \
+             {}; per-study replay order is a per-lane guarantee and lane routing changes \
+             with the shard count — refusing a cross-shard-count open",
+            path.display(),
+            mem.shard_count()
+        )));
+    }
+    let mut pos = WAL_HEADER_LEN as usize;
     loop {
         if pos + 4 > buf.len() {
             break; // torn length prefix
         }
-        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let len = u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]) as usize;
         if len == 0 || pos + 4 + len > buf.len() {
             break; // torn record
         }
@@ -854,6 +951,12 @@ fn open_single_file(
     // boundary.
     file.set_len(valid_len).map_err(io_err)?;
     file.seek(SeekFrom::End(0)).map_err(io_err)?;
+    if valid_len < WAL_HEADER_LEN {
+        // Fresh file (or one whose header a crash tore): stamp it before
+        // any record lands.
+        file.write_all(&wal_header(mem.shard_count() as u32)).map_err(io_err)?;
+        valid_len = WAL_HEADER_LEN;
+    }
     metrics.segments.store(1, Ordering::Relaxed);
     Ok(LogWriter {
         w: BufWriter::new(file),
@@ -944,7 +1047,16 @@ fn open_segmented(
                 .write(true)
                 .open(dir.join(log_name(n)))
                 .map_err(io_err)?;
-            let bytes = file.seek(SeekFrom::End(0)).map_err(io_err)?;
+            let mut bytes = file.seek(SeekFrom::End(0)).map_err(io_err)?;
+            if bytes < WAL_HEADER_LEN {
+                // The tail's header was torn (crash between rotation's
+                // create and its first flush) and replay truncated it to
+                // empty: restamp before appending.
+                file.set_len(0).map_err(io_err)?;
+                file.seek(SeekFrom::Start(0)).map_err(io_err)?;
+                file.write_all(&wal_header(mem.shard_count() as u32)).map_err(io_err)?;
+                bytes = WAL_HEADER_LEN;
+            }
             LogWriter {
                 w: BufWriter::new(file),
                 bytes,
@@ -953,16 +1065,17 @@ fn open_segmented(
         }
         None => {
             let n = base.map_or(1, |b| b + 1);
-            let file = OpenOptions::new()
+            let mut file = OpenOptions::new()
                 .create_new(true)
                 .read(true)
                 .write(true)
                 .open(dir.join(log_name(n)))
                 .map_err(io_err)?;
+            file.write_all(&wal_header(mem.shard_count() as u32)).map_err(io_err)?;
             sync_dir(dir);
             LogWriter {
                 w: BufWriter::new(file),
-                bytes: 0,
+                bytes: WAL_HEADER_LEN,
                 seg_no: n,
             }
         }
@@ -1027,11 +1140,12 @@ impl WalDatastore {
             Some(_) => (open_segmented(&path, &mem, &metrics)?, Some(path.clone())),
         };
         let ctx = Arc::new(LogCtx {
-            log: Mutex::new(lw),
+            log: Mutex::new(&classes::WAL_LOG, lw),
             dir,
             sync: opts.sync,
             segment_bytes: opts.segment_bytes,
             auto_compact_segments: opts.auto_compact_segments,
+            header: wal_header(mem.shard_count() as u32),
             metrics,
         });
         let (compactor, compactor_join) = if opts.segment_bytes.is_some() {
@@ -1074,7 +1188,7 @@ impl WalDatastore {
             ctx,
             path,
             opts,
-            commit_gate: RwLock::new(()),
+            commit_gate: RwLock::new(&classes::WAL_COMMIT_GATE, ()),
             commit,
             committer,
             compactor,
@@ -1119,31 +1233,32 @@ impl WalDatastore {
         let sw = Stopwatch::start();
         // Stall the commit path (legacy semantics): no new applies while
         // the snapshot is cut, so the swapped log exactly covers state.
-        let _gate = self.commit_gate.write().unwrap();
+        let _gate = self.commit_gate.write();
         if let Some(shared) = &self.commit {
             // Everything already enqueued must be durable before the
             // swap (those writers were or will be acknowledged against
             // records the old log contains).
-            let mut ws = shared.work.lock().unwrap();
+            let mut ws = shared.work.lock();
             loop {
                 if let Some(e) = &ws.error {
                     return Err(committer_failed(e));
                 }
-                let drained = shared.lanes.iter().all(|l| l.lock().unwrap().buf.is_empty());
+                let drained = shared.lanes.iter().all(|l| l.lock().buf.is_empty());
                 if drained && !ws.inflight {
                     break;
                 }
                 ws.pending = true;
                 shared.work_cv.notify_one();
-                ws = shared.done_cv.wait(ws).unwrap();
+                ws = shared.done_cv.wait(ws);
             }
         }
-        let mut lw = self.ctx.log.lock().unwrap();
+        let mut lw = self.ctx.log.lock();
         let before = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
         let tmp = self.path.with_extension("wal.tmp");
         {
             let file = File::create(&tmp).map_err(io_err)?;
             let mut w = BufWriter::new(file);
+            w.write_all(&self.ctx.header).map_err(io_err)?;
             write_snapshot(&self.mem, &mut w)?;
             w.flush().map_err(io_err)?;
             w.get_ref().sync_all().map_err(io_err)?;
@@ -1221,11 +1336,11 @@ impl WalDatastore {
         // parks writers right here, and that stall is exactly what
         // commit_wait / commit_stall_max_micros exist to expose.
         let sw = Stopwatch::start();
-        let _gate = self.commit_gate.read().unwrap();
+        let _gate = self.commit_gate.read();
         match &self.commit {
             Some(shared) => {
                 {
-                    let ws = shared.work.lock().unwrap();
+                    let ws = shared.work.lock();
                     if let Some(e) = &ws.error {
                         return Err(committer_failed(e));
                     }
@@ -1236,7 +1351,7 @@ impl WalDatastore {
                     self.mem.shard_index(lane_key)
                 };
                 let (value, my_seq) = {
-                    let mut lane = shared.lanes[lane_idx].lock().unwrap();
+                    let mut lane = shared.lanes[lane_idx].lock();
                     let (value, muts) = op(self.mem.as_ref())?;
                     if muts.is_empty() {
                         return Ok(value);
@@ -1247,11 +1362,11 @@ impl WalDatastore {
                     lane.enqueued += muts.len() as u64;
                     (value, lane.enqueued)
                 };
-                let mut ws = shared.work.lock().unwrap();
+                let mut ws = shared.work.lock();
                 ws.pending = true;
                 shared.work_cv.notify_one();
                 while ws.durable[lane_idx] < my_seq && ws.error.is_none() {
-                    ws = shared.done_cv.wait(ws).unwrap();
+                    ws = shared.done_cv.wait(ws);
                 }
                 if let Some(e) = &ws.error {
                     return Err(committer_failed(e));
@@ -1264,7 +1379,7 @@ impl WalDatastore {
                 // The log lock spans the in-memory apply too, so records
                 // for the same key cannot be appended in the opposite
                 // order they were applied (replay = acknowledged state).
-                let mut lw = self.ctx.log.lock().unwrap();
+                let mut lw = self.ctx.log.lock();
                 let (value, muts) = op(self.mem.as_ref())?;
                 if muts.is_empty() {
                     return Ok(value);
@@ -1292,7 +1407,8 @@ impl WalDatastore {
                 let mut rotated = false;
                 if let (Some(limit), Some(dir)) = (self.ctx.segment_bytes, self.ctx.dir.as_deref()) {
                     if lw.bytes >= limit {
-                        rotate_locked(&mut lw, dir, &self.ctx.metrics).map_err(io_err)?;
+                        rotate_locked(&mut lw, dir, &self.ctx.header, &self.ctx.metrics)
+                            .map_err(io_err)?;
                         rotated = true;
                     }
                 }
@@ -1310,7 +1426,7 @@ impl WalDatastore {
 impl Drop for WalDatastore {
     fn drop(&mut self) {
         if let Some(shared) = &self.commit {
-            let mut ws = shared.work.lock().unwrap();
+            let mut ws = shared.work.lock();
             ws.shutdown = true;
             ws.pending = true; // force a final drain pass
             drop(ws);
@@ -1326,9 +1442,7 @@ impl Drop for WalDatastore {
             let _ = handle.join();
         }
         // Best-effort flush of the serial path's buffered writer.
-        if let Ok(mut lw) = self.ctx.log.lock() {
-            let _ = lw.w.flush();
-        }
+        let _ = self.ctx.log.lock().w.flush();
     }
 }
 
@@ -2016,11 +2130,12 @@ mod tests {
             }
             assert!(ds.segment_count() >= 3, "need several segments");
         }
-        // Drop empty trailing segments (a legal crash state on their
-        // own), then tear the final non-empty one: recovery truncates.
+        // Drop header-only trailing segments (a legal crash state on
+        // their own), then tear the final record-bearing one: recovery
+        // truncates.
         let mut logs = segment_files(&path);
         while let Some(last) = logs.last() {
-            if std::fs::metadata(last).unwrap().len() == 0 {
+            if std::fs::metadata(last).unwrap().len() <= WAL_HEADER_LEN {
                 std::fs::remove_file(last).unwrap();
                 logs.pop();
             } else {
@@ -2060,6 +2175,85 @@ mod tests {
         let seg_path = dir.join("segdir");
         drop(WalDatastore::open_with_options(&seg_path, seg_opts(1024)).unwrap());
         assert!(WalDatastore::open(&seg_path).is_err());
+    }
+
+    #[test]
+    fn header_mismatch_fails_fast_on_reopen() {
+        let dir = tmpdir("hdr");
+        let path = dir.join("store.wal");
+        {
+            let ds = WalDatastore::open(&path).unwrap();
+            ds.create_study(study("h")).unwrap();
+        }
+        let orig = std::fs::read(&path).unwrap();
+        assert_eq!(&orig[..8], &WAL_MAGIC);
+
+        // Cross-version open: bump the stamped format version.
+        let mut bad = orig.clone();
+        bad[8..12].copy_from_slice(&(WAL_FORMAT_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let msg = WalDatastore::open(&path).unwrap_err().to_string();
+        assert!(msg.contains("format version"), "{msg}");
+
+        // Cross-shard-count open: a stamp this store was not opened with.
+        let mut bad = orig.clone();
+        bad[12..16].copy_from_slice(&999u32.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let msg = WalDatastore::open(&path).unwrap_err().to_string();
+        assert!(msg.contains("999 shards"), "{msg}");
+
+        // Not a WAL file at all.
+        let mut bad = orig.clone();
+        bad[..8].copy_from_slice(b"GARBAGE!");
+        std::fs::write(&path, &bad).unwrap();
+        let msg = WalDatastore::open(&path).unwrap_err().to_string();
+        assert!(msg.contains("bad magic"), "{msg}");
+
+        // Restored intact, the store reopens with its state.
+        std::fs::write(&path, &orig).unwrap();
+        let ds = WalDatastore::open(&path).unwrap();
+        assert!(ds.lookup_study("h").is_ok());
+    }
+
+    #[test]
+    fn every_segment_carries_a_header_and_reopens_clean() {
+        let dir = tmpdir("hdr-seg");
+        let path = dir.join("wal");
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(512)).unwrap();
+            let s = ds.create_study(study("hs")).unwrap();
+            for _ in 0..60 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+            ds.compact().unwrap();
+            for _ in 0..5 {
+                ds.create_trial(&s.name, TrialProto::default()).unwrap();
+            }
+        }
+        // Base and every log segment are stamped.
+        for f in segment_files(&path) {
+            let bytes = std::fs::read(&f).unwrap();
+            assert!(bytes.len() >= WAL_HEADER_LEN as usize, "{}", f.display());
+            assert_eq!(&bytes[..8], &WAL_MAGIC, "{}", f.display());
+        }
+        // Reopen replays base + tail through the header checks.
+        {
+            let ds = WalDatastore::open_with_options(&path, seg_opts(512)).unwrap();
+            assert_eq!(ds.trial_count("studies/1").unwrap(), 65);
+        }
+        // A sealed segment stamped with a different shard count fails the
+        // whole open — cross-shard-count replay would scramble lane order.
+        let seg = segment_files(&path)
+            .into_iter()
+            .find(|p| p.extension().is_some_and(|e| e == "log"))
+            .unwrap();
+        let mut bytes = std::fs::read(&seg).unwrap();
+        bytes[12..16].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&seg, &bytes).unwrap();
+        let msg = WalDatastore::open_with_options(&path, seg_opts(512))
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("3 shards"), "{msg}");
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! numeric hot path is AOT-compiled from JAX/Pallas and executed from Rust
 //! via PJRT. See DESIGN.md for the full system inventory.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod benchmarks;
 pub mod client;
 pub mod datastore;

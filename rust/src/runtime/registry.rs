@@ -6,10 +6,11 @@
 use super::pjrt::{PjrtRuntime, TensorInput};
 use super::{Context, Result, RuntimeError};
 use crate::util::json::{parse, Json};
+use crate::util::sync::{classes, Mutex};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 /// A padded-shape variant key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -80,7 +81,7 @@ impl ArtifactRegistry {
             .map_err(|e| RuntimeError(format!("pjrt init: {e}")))?;
         Ok(Self {
             variants,
-            sender: Mutex::new(sender),
+            sender: Mutex::new(&classes::RT_PJRT, sender),
         })
     }
 
@@ -115,7 +116,6 @@ impl ArtifactRegistry {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.sender
             .lock()
-            .unwrap()
             .send(Job {
                 key,
                 inputs,

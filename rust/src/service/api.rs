@@ -20,19 +20,25 @@
 //!    already queued or in flight.
 //! 5. ACTIVE trials already assigned to a client are returned *before* new
 //!    suggestions are computed (client-side fault tolerance, §5).
+//!
+//! Locks here are registered with [`crate::util::sync::classes`]
+//! (`service.coalesce`, then `service.op_waiters`, then
+//! `service.worker_pool`, all below the datastore ranks) and checked
+//! under lockdep; the full hierarchy lives in `rust/docs/INVARIANTS.md`.
 
 use crate::datastore::{Datastore, DsError};
 use crate::pythia::policy::{EarlyStopRequest, SuggestRequest, SuggestWant};
 use crate::pythia::runner::PythiaEndpoint;
 use crate::pyvizier::{converters, StudyConfig, TrialSuggestion};
 use crate::service::metrics::ServiceMetrics;
+use crate::util::sync::{classes, Mutex};
 use crate::util::threadpool::ThreadPool;
 use crate::util::time::epoch_millis;
 use crate::wire::framing::Status;
 use crate::wire::messages::*;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Service-level error: an RPC status plus message.
@@ -117,10 +123,18 @@ pub type OpWaiter = Box<dyn FnOnce(&OperationProto) + Send>;
 /// cannot be disarmed by the event-loop sweep (it is service-agnostic);
 /// those fire into a dead ticket as a no-op and are bounded by the
 /// operation's lifetime.
-#[derive(Default)]
 struct OpWaiters {
     map: Mutex<HashMap<String, Vec<(u64, OpWaiter)>>>,
     next_id: AtomicU64,
+}
+
+impl Default for OpWaiters {
+    fn default() -> Self {
+        Self {
+            map: Mutex::new(&classes::SVC_WAITERS, HashMap::new()),
+            next_id: AtomicU64::new(0),
+        }
+    }
 }
 
 impl OpWaiters {
@@ -129,7 +143,7 @@ impl OpWaiters {
     /// send on channels; neither may deadlock against a concurrent
     /// [`VizierService::watch_operation`]).
     fn fire(&self, op: &OperationProto) {
-        let waiters = self.map.lock().unwrap().remove(&op.name);
+        let waiters = self.map.lock().remove(&op.name);
         if let Some(ws) = waiters {
             for (_, w) in ws {
                 w(op);
@@ -187,8 +201,8 @@ impl VizierService {
         Arc::new(Self {
             ds,
             pythia,
-            workers: Mutex::new(Some(ThreadPool::new(workers.max(1)))),
-            coalesce: Mutex::new(CoalesceState::default()),
+            workers: Mutex::new(&classes::SVC_WORKERS, Some(ThreadPool::new(workers.max(1)))),
+            coalesce: Mutex::new(&classes::SVC_COALESCE, CoalesceState::default()),
             waiters: OpWaiters::default(),
             coalescing: AtomicBool::new(true),
             draining: AtomicBool::new(false),
@@ -220,14 +234,14 @@ impl VizierService {
     /// Drain in-flight operations and stop the worker pool.
     pub fn shutdown(&self) {
         self.begin_drain();
-        if let Some(pool) = self.workers.lock().unwrap().take() {
+        if let Some(pool) = self.workers.lock().take() {
             pool.shutdown();
         }
     }
 
     fn enqueue(self: &Arc<Self>, job: impl FnOnce(&VizierService) + Send + 'static) {
         let me = Arc::clone(self);
-        let guard = self.workers.lock().unwrap();
+        let guard = self.workers.lock();
         if let Some(pool) = guard.as_ref() {
             pool.execute(move || job(&me));
         }
@@ -339,7 +353,7 @@ impl VizierService {
     /// decrement happens at completion (or at the claim-skip for an
     /// operation a racing run already finished).
     fn queue_suggest(&self, op_name: &str, study_name: &str) -> bool {
-        let state = &mut *self.coalesce.lock().unwrap();
+        let state = &mut *self.coalesce.lock();
         if state.claimed.contains(op_name) {
             return false;
         }
@@ -381,7 +395,7 @@ impl VizierService {
     fn serve_one_suggest_batch(&self, study_name: &str, config: &StudyConfig) -> bool {
         // Claim the queue (or only its oldest entry with coalescing off).
         let batch: Vec<String> = {
-            let state = &mut *self.coalesce.lock().unwrap();
+            let state = &mut *self.coalesce.lock();
             let Some(q) = state.queued.get_mut(study_name) else {
                 return false; // another worker already drained this study
             };
@@ -411,10 +425,9 @@ impl VizierService {
         }
         impl Drop for ClaimGuard<'_> {
             fn drop(&mut self) {
-                if let Ok(mut state) = self.coalesce.lock() {
-                    for name in self.names {
-                        state.claimed.remove(name);
-                    }
+                let mut state = self.coalesce.lock();
+                for name in self.names {
+                    state.claimed.remove(name);
                 }
             }
         }
@@ -577,7 +590,7 @@ impl VizierService {
     /// the check and the arm.
     pub fn watch_operation(&self, name: &str, waiter: OpWaiter) -> ApiResult<WatchResult> {
         let id = self.waiters.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.waiters.map.lock().unwrap();
+        let mut map = self.waiters.map.lock();
         let op = self.ds.get_operation(name)?;
         if op.done {
             return Ok(WatchResult::Done(op));
@@ -591,7 +604,7 @@ impl VizierService {
     /// closures that would fire — and skew `wait_wakeup` — at
     /// completion. A no-op if the waiter already fired.
     pub fn unwatch_operation(&self, name: &str, id: u64) {
-        let mut map = self.waiters.map.lock().unwrap();
+        let mut map = self.waiters.map.lock();
         if let Some(ws) = map.get_mut(name) {
             ws.retain(|(wid, _)| *wid != id);
             if ws.is_empty() {

@@ -47,9 +47,16 @@
 //! `C-FRONTEND` and `C-ASYNC-DISPATCH` benches drive 1000+ mostly-idle
 //! connections / 3x-oversubscribed policy fleets through this module and
 //! assert the thread budget stays at `workers + 2`.
+//!
+//! The two locks here are registered with
+//! [`crate::util::sync::classes`]: `frontend.park_slots` is always taken
+//! before (or released before taking) `frontend.job_queue` — completion
+//! hooks drop the slots guard before `push_job`. Checked under lockdep;
+//! see `rust/docs/INVARIANTS.md` for the full hierarchy.
 
 use crate::service::metrics::FrontendMetrics;
 use crate::util::netpoll::{Poller, PollerKind, WakePipe, EV_READ, EV_WRITE};
+use crate::util::sync::{classes, Condvar, Mutex};
 use crate::wire::framing::{FrameProgress, FrameReader};
 use std::cell::Cell;
 use std::collections::{HashMap, VecDeque};
@@ -58,7 +65,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -240,12 +247,12 @@ struct Shared<S> {
 
 impl<S> Shared<S> {
     fn pending(&self) -> usize {
-        self.queue.lock().unwrap().len() + self.active_jobs.load(Ordering::SeqCst)
+        self.queue.lock().len() + self.active_jobs.load(Ordering::SeqCst)
     }
 
     fn abort_pending(&self) {
         let dropped = {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = self.queue.lock();
             let n = q.len();
             q.clear(); // drops Jobs -> closes their connections
             n
@@ -266,7 +273,7 @@ impl<S> Shared<S> {
     /// capacity check (bounded by the number of admitted connections),
     /// callable from any thread.
     fn push_job(&self, job: Job<S>) {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock();
         q.push_back(job);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         drop(q);
@@ -278,7 +285,7 @@ impl<S> Shared<S> {
     /// completions find no slot and are no-ops.
     fn clear_parked(&self) {
         let drained: Vec<ParkSlot<S>> =
-            self.slots.lock().unwrap().drain().map(|(_, slot)| slot).collect();
+            self.slots.lock().drain().map(|(_, slot)| slot).collect();
         for slot in drained {
             if matches!(slot, ParkSlot::AwaitingResponse { .. }) {
                 self.metrics.parked_dec();
@@ -412,14 +419,14 @@ impl FrontendServer {
         poller.register(wake.read_fd(), TOK_WAKE, EV_READ)?;
         poller.register(listener.as_raw_fd(), TOK_LISTENER, EV_READ)?;
         let shared = Arc::new(Shared::<H::Conn> {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(&classes::FE_QUEUE, VecDeque::new()),
             job_ready: Condvar::new(),
             space_ready: Condvar::new(),
             capacity,
             worker_stop: AtomicBool::new(false),
             force_abort: AtomicBool::new(false),
             active_jobs: AtomicUsize::new(0),
-            slots: Mutex::new(HashMap::new()),
+            slots: Mutex::new(&classes::FE_SLOTS, HashMap::new()),
             next_ticket: AtomicU64::new(1),
             metrics: Arc::clone(&metrics),
         });
@@ -433,7 +440,6 @@ impl FrontendServer {
                     shared
                         .slots
                         .lock()
-                        .unwrap()
                         .insert(ticket, ParkSlot::Reserved { deadline, timeout_frame });
                     ticket
                 }) as Arc<dyn Fn(Option<Instant>, Vec<u8>) -> u64 + Send + Sync>
@@ -441,7 +447,7 @@ impl FrontendServer {
             let complete = {
                 let shared = Arc::clone(&shared);
                 Arc::new(move |ticket: u64, frame: Vec<u8>, keep: bool| {
-                    let mut slots = shared.slots.lock().unwrap();
+                    let mut slots = shared.slots.lock();
                     match slots.remove(&ticket) {
                         Some(ParkSlot::Reserved { .. }) => {
                             // Completed before the worker parked the
@@ -475,7 +481,7 @@ impl FrontendServer {
             let cancel = {
                 let shared = Arc::clone(&shared);
                 Arc::new(move |ticket: u64| {
-                    let slot = shared.slots.lock().unwrap().remove(&ticket);
+                    let slot = shared.slots.lock().remove(&ticket);
                     if matches!(slot, Some(ParkSlot::AwaitingResponse { .. })) {
                         shared.metrics.parked_dec();
                     }
@@ -797,12 +803,13 @@ fn io_loop<H: ConnectionHandler>(
             }
             match outcome {
                 Some(Ok(FrameProgress::Frame(head, payload))) => {
-                    let (conn, _) = conns.remove(&tok).expect("conn present");
-                    // Deregister before the hand-off: the worker may
-                    // close the fd at any point afterwards, and its
-                    // number could come back from the next accept.
-                    let _ = poller.deregister(conn.stream.as_raw_fd());
-                    enqueue(&shared, &stop, conn, head, payload);
+                    if let Some((conn, _)) = conns.remove(&tok) {
+                        // Deregister before the hand-off: the worker may
+                        // close the fd at any point afterwards, and its
+                        // number could come back from the next accept.
+                        let _ = poller.deregister(conn.stream.as_raw_fd());
+                        enqueue(&shared, &stop, conn, head, payload);
+                    }
                 }
                 // Mid-frame stall: the connection keeps waiting here in
                 // the event loop — no worker is occupied.
@@ -877,7 +884,7 @@ fn sweep_parked_deadlines<S>(shared: &Arc<Shared<S>>) {
     let now = Instant::now();
     let mut due: Vec<(Conn<S>, Vec<u8>)> = Vec::new();
     {
-        let mut slots = shared.slots.lock().unwrap();
+        let mut slots = shared.slots.lock();
         let expired: Vec<u64> = slots
             .iter()
             .filter_map(|(&t, slot)| match slot {
@@ -913,13 +920,13 @@ fn enqueue<S>(
     head: u8,
     payload: Vec<u8>,
 ) {
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = shared.queue.lock();
     while q.len() >= shared.capacity {
         if stop.load(Ordering::SeqCst) {
             return; // shutting down: drop the request, closing the conn
         }
         let (guard, _timeout) =
-            shared.space_ready.wait_timeout(q, Duration::from_millis(100)).unwrap();
+            shared.space_ready.wait_timeout(q, Duration::from_millis(100));
         q = guard;
     }
     q.push_back(Job::Request { conn, head, payload, enqueued: Instant::now() });
@@ -939,7 +946,7 @@ fn worker_loop<H: ConnectionHandler>(
 ) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock();
             loop {
                 if let Some(j) = q.pop_front() {
                     // Under the same lock as the pop: Shared::pending()
@@ -953,7 +960,7 @@ fn worker_loop<H: ConnectionHandler>(
                     break None;
                 }
                 let (guard, _timeout) =
-                    shared.job_ready.wait_timeout(q, Duration::from_millis(200)).unwrap();
+                    shared.job_ready.wait_timeout(q, Duration::from_millis(200));
                 q = guard;
             }
         };
@@ -1019,7 +1026,7 @@ fn park_deferred<S: Send + 'static>(
     conn: Conn<S>,
     ticket: u64,
 ) {
-    let mut slots = shared.slots.lock().unwrap();
+    let mut slots = shared.slots.lock();
     match slots.remove(&ticket) {
         Some(ParkSlot::Reserved { deadline, timeout_frame }) => {
             slots.insert(ticket, ParkSlot::AwaitingResponse { conn, deadline, timeout_frame });

@@ -2,9 +2,9 @@
 //! histograms (paper §2: "the service architecture ... can collect data
 //! and metrics over time").
 
+use crate::util::sync::{classes, Mutex};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// Log-spaced latency histogram (microseconds).
 #[derive(Debug, Default)]
@@ -265,7 +265,7 @@ impl WalMetrics {
 }
 
 /// Registry of per-method metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServiceMetrics {
     methods: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
     pub errors: AtomicU64,
@@ -290,13 +290,28 @@ pub struct ServiceMetrics {
     wal: Mutex<Option<std::sync::Arc<WalMetrics>>>,
 }
 
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self {
+            methods: Mutex::new(&classes::MET_METHODS, BTreeMap::new()),
+            errors: AtomicU64::new(0),
+            policy_runs: AtomicU64::new(0),
+            suggest_ops_served: AtomicU64::new(0),
+            in_flight_policy_jobs: AtomicU64::new(0),
+            wait_wakeup: Histogram::default(),
+            frontend: Mutex::new(&classes::MET_FRONTEND, None),
+            wal: Mutex::new(&classes::MET_WAL, None),
+        }
+    }
+}
+
 impl ServiceMetrics {
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn histogram(&self, method: &str) -> std::sync::Arc<Histogram> {
-        let mut m = self.methods.lock().unwrap();
+        let mut m = self.methods.lock();
         m.entry(method.to_string()).or_default().clone()
     }
 
@@ -346,26 +361,26 @@ impl ServiceMetrics {
 
     /// Attach the front-end's metrics (called by the TCP server).
     pub fn set_frontend(&self, fe: std::sync::Arc<FrontendMetrics>) {
-        *self.frontend.lock().unwrap() = Some(fe);
+        *self.frontend.lock() = Some(fe);
     }
 
     pub fn frontend(&self) -> Option<std::sync::Arc<FrontendMetrics>> {
-        self.frontend.lock().unwrap().clone()
+        self.frontend.lock().clone()
     }
 
     /// Attach the durable store's metrics (called by the launcher when
     /// the datastore is a [`crate::datastore::wal::WalDatastore`]).
     pub fn set_wal(&self, wal: std::sync::Arc<WalMetrics>) {
-        *self.wal.lock().unwrap() = Some(wal);
+        *self.wal.lock() = Some(wal);
     }
 
     pub fn wal(&self) -> Option<std::sync::Arc<WalMetrics>> {
-        self.wal.lock().unwrap().clone()
+        self.wal.lock().clone()
     }
 
     /// Render a plain-text report (one line per method).
     pub fn report(&self) -> String {
-        let m = self.methods.lock().unwrap();
+        let m = self.methods.lock();
         let mut out = String::from("method                     count    mean_us    p50_us    p99_us\n");
         for (name, h) in m.iter() {
             out.push_str(&format!(

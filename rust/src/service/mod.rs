@@ -2,6 +2,12 @@
 //! long-running operations, TCP front-end, remote Pythia deployment, and
 //! service metrics.
 //!
+//! Every lock in this layer is registered with the crate-wide hierarchy
+//! in [`crate::util::sync::classes`] and checked under lockdep; the
+//! hierarchy table, the poller registration-state rules, and the WAL
+//! ordering this layer depends on are consolidated in
+//! `rust/docs/INVARIANTS.md`.
+//!
 //! # Front-end architecture: event loop + bounded worker pool
 //!
 //! The paper's reference server multiplexes thousands of tuning workers

@@ -28,9 +28,10 @@ use crate::service::metrics::FrontendMetrics;
 use crate::wire::codec::{Reader, WireError, WireMessage, Writer};
 use crate::wire::framing::{write_err, write_ok, FrameError, Method, Status};
 use crate::wire::messages::*;
+use crate::util::sync::{classes, Mutex};
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 // ---------------------------------------------------------------------------
@@ -233,10 +234,10 @@ impl RemoteSupporter {
         read_timeout: Option<Duration>,
     ) -> Result<Self, FrameError> {
         Ok(Self {
-            transport: Mutex::new(Box::new(TcpTransport::connect_with_read_timeout(
-                api_addr,
-                read_timeout,
-            )?)),
+            transport: Mutex::new(
+                &classes::RP_TRANSPORT,
+                Box::new(TcpTransport::connect_with_read_timeout(api_addr, read_timeout)?),
+            ),
         })
     }
 
@@ -245,7 +246,7 @@ impl RemoteSupporter {
         method: Method,
         req: &Req,
     ) -> Result<Resp, PolicyError> {
-        let mut t = self.transport.lock().unwrap();
+        let mut t = self.transport.lock();
         call(t.as_mut(), method, req).map_err(|e| PolicyError::Datastore(e.to_string()))
     }
 }
@@ -445,7 +446,10 @@ impl ConnectionHandler for PythiaHandler {
                         }
                     }
                 }
-                let sup = supporter.as_ref().expect("supporter just installed");
+                let Some(sup) = supporter.as_ref() else {
+                    let _ = write_err(out, Status::Internal, "api supporter unavailable");
+                    return HandleOutcome::Close;
+                };
                 if head == M_SUGGEST {
                     handle_suggest(&self.registry, sup, payload, out)
                 } else {
@@ -578,7 +582,7 @@ impl RemotePythia {
         Self {
             addr: pythia_addr.to_string(),
             read_timeout: Some(PYTHIA_READ_TIMEOUT),
-            conn: Mutex::new(None),
+            conn: Mutex::new(&classes::RP_CONN, None),
         }
     }
 
@@ -594,7 +598,7 @@ impl RemotePythia {
         req: &Req,
     ) -> Result<Resp, PolicyError> {
         let io_err = |e: std::io::Error| PolicyError::Internal(format!("pythia rpc io: {e}"));
-        let mut guard = self.conn.lock().unwrap();
+        let mut guard = self.conn.lock();
         for attempt in 0..2 {
             if guard.is_none() {
                 let stream = TcpStream::connect(&self.addr).map_err(io_err)?;
@@ -603,7 +607,9 @@ impl RemotePythia {
                 let r = BufReader::new(stream.try_clone().map_err(io_err)?);
                 *guard = Some((r, BufWriter::new(stream)));
             }
-            let (reader, writer) = guard.as_mut().unwrap();
+            let Some((reader, writer)) = guard.as_mut() else {
+                return Err(PolicyError::Internal("pythia connection unavailable".into()));
+            };
             let result = (|| -> Result<Resp, FrameError> {
                 let payload = crate::wire::codec::encode(req);
                 let total = (1 + payload.len()) as u32;

@@ -26,10 +26,11 @@ use crate::wire::framing::{read_request, write_err, write_ok, FrameError, Method
 use crate::wire::messages::{
     EmptyResponse, GetOperationRequest, OperationProto, OperationResponse, WaitOperationRequest,
 };
+use crate::util::sync::{classes, Mutex};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -328,7 +329,7 @@ impl LegacyServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
-            Arc::new(Mutex::new(Vec::new()));
+            Arc::new(Mutex::new(&classes::LEGACY_CONNS, Vec::new()));
         let stop2 = Arc::clone(&stop);
         let conns2 = Arc::clone(&conns);
         let service_handle = Arc::clone(&service);
@@ -380,7 +381,7 @@ impl LegacyServer {
                         });
                     match spawned {
                         Ok(handle) => {
-                            let mut guard = conns2.lock().unwrap();
+                            let mut guard = conns2.lock();
                             // Don't let the registry grow with dead
                             // entries on long-lived servers.
                             guard.retain(|(_, h)| !h.is_finished());
@@ -414,7 +415,7 @@ impl LegacyServer {
         // The historical leak: connection threads used to be orphaned
         // here. Force each blocked read to return by shutting the socket
         // down, then join the thread.
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        let conns = std::mem::take(&mut *self.conns.lock());
         for (stream, handle) in conns {
             let _ = stream.shutdown(Shutdown::Both);
             let _ = handle.join();

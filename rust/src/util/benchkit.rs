@@ -18,10 +18,11 @@
 //! runs without the variable so the comparisons stay enforced somewhere.
 
 use crate::util::json::Json;
+use crate::util::sync::{classes, Mutex};
 use crate::util::time::Stopwatch;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 use std::time::Duration;
 
 /// One benchmark result.
@@ -63,7 +64,7 @@ struct Collector {
 
 fn collector() -> &'static Mutex<Collector> {
     static C: OnceLock<Mutex<Collector>> = OnceLock::new();
-    C.get_or_init(|| Mutex::new(Collector::default()))
+    C.get_or_init(|| Mutex::new(&classes::BENCH_COLLECTOR, Collector::default()))
 }
 
 /// True when `OSSVIZIER_BENCH_LAX` is set: timing comparisons report
@@ -99,7 +100,7 @@ pub fn bench_with_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> B
         "{:<52} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
         result.name, result.iters, result.mean, result.p50, result.p95
     );
-    collector().lock().unwrap().results.push(result.clone());
+    collector().lock().results.push(result.clone());
     result
 }
 
@@ -117,7 +118,7 @@ pub fn section(title: &str) {
 /// JSON artifact).
 pub fn note(text: &str) {
     println!("    {text}");
-    collector().lock().unwrap().notes.push(text.to_string());
+    collector().lock().notes.push(text.to_string());
 }
 
 /// Record a comparison verdict (e.g. "pooled >= legacy throughput").
@@ -127,7 +128,7 @@ pub fn note(text: &str) {
 /// `OSSVIZIER_BENCH_LAX` is set.
 pub fn check(label: &str, pass: bool, detail: &str) {
     let enforced = !lax();
-    collector().lock().unwrap().verdicts.push(Verdict {
+    collector().lock().verdicts.push(Verdict {
         label: label.to_string(),
         pass,
         enforced,
@@ -146,7 +147,7 @@ pub fn check(label: &str, pass: bool, detail: &str) {
 /// structural assertions (thread budgets, leak checks) that do not
 /// depend on runner timing and must hold everywhere.
 pub fn check_strict(label: &str, pass: bool, detail: &str) {
-    collector().lock().unwrap().verdicts.push(Verdict {
+    collector().lock().verdicts.push(Verdict {
         label: label.to_string(),
         pass,
         enforced: true,
@@ -179,7 +180,7 @@ fn artifact_path(name: &str) -> PathBuf {
 /// fail the bench (panic) if any enforced verdict did not pass. Call
 /// exactly once, at the end of each bench binary's `main`.
 pub fn finish(name: &str) {
-    let collected = std::mem::take(&mut *collector().lock().unwrap());
+    let collected = std::mem::take(&mut *collector().lock());
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str(name.to_string()));
     root.insert(

@@ -10,5 +10,6 @@ pub mod id;
 pub mod json;
 pub mod netpoll;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 pub mod time;

@@ -188,6 +188,10 @@ fn poll_with_deadline(pfds: &mut [PollFd], timeout_ms: i32) -> io::Result<c_int>
     let deadline = Deadline::after_ms(timeout_ms);
     let mut timeout = timeout_ms;
     loop {
+        // SAFETY: `pfds` is a live, exclusively borrowed slice of
+        // repr(C) PollFd; the pointer and length describe exactly that
+        // allocation for the duration of the call, and poll(2) writes
+        // only within it (the revents fields).
         let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len() as c_ulong, timeout) };
         if rc >= 0 {
             return Ok(rc);
@@ -409,6 +413,8 @@ pub struct EpollBackend {
 
 impl EpollBackend {
     fn new() -> io::Result<Self> {
+        // SAFETY: epoll_create1 takes no pointers; the returned fd (or
+        // -1) is checked immediately below.
         let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
         if epfd < 0 {
             return Err(io::Error::last_os_error());
@@ -428,6 +434,9 @@ impl EpollBackend {
     fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
         let mut ev = EpollEvent { events: epoll_interest(interest), data: token };
         let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev as *mut _ };
+        // SAFETY: `arg` is either null (DEL, where the kernel ignores
+        // it) or a pointer to `ev`, which lives on this stack frame for
+        // the whole call; the kernel only reads it.
         if unsafe { epoll_ctl(self.epfd, op, fd, arg) } != 0 {
             return Err(io::Error::last_os_error());
         }
@@ -470,6 +479,10 @@ impl EpollBackend {
         let deadline = Deadline::after_ms(timeout_ms);
         let mut timeout = timeout_ms;
         let rc = loop {
+            // SAFETY: `self.buf` is a live Vec of repr(C) EpollEvent;
+            // the pointer/len pair describes exactly that allocation and
+            // the kernel writes at most `len` events into it. The return
+            // count is bounds-checked before `buf[..rc]` is read back.
             let rc = unsafe {
                 epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, timeout)
             };
@@ -501,9 +514,11 @@ impl EpollBackend {
 
 impl Drop for EpollBackend {
     fn drop(&mut self) {
-        unsafe {
-            close(self.epfd);
-        }
+        // SAFETY: `epfd` was returned by epoll_create1 in `new` and is
+        // owned exclusively by this backend, so this is the only close.
+        // The result is deliberately discarded: there is no recovery
+        // from a failed close in Drop.
+        let _ = unsafe { close(self.epfd) };
     }
 }
 
@@ -625,18 +640,25 @@ pub struct WakePipe {
 impl WakePipe {
     pub fn new() -> io::Result<Self> {
         let mut fds: [c_int; 2] = [0; 2];
+        // SAFETY: `fds` is a live [c_int; 2] on this stack frame; pipe2
+        // writes exactly two fds into it. The return code is checked.
         if unsafe { pipe2(fds.as_mut_ptr(), O_CLOEXEC | O_NONBLOCK) } != 0 {
             // Portability fallback: plain pipe(2) + fcntl. Non-atomic
             // with respect to a concurrent fork, which is fine — nothing
             // forks while a WakePipe is being constructed.
+            // SAFETY: same contract as pipe2 above — `fds` holds two
+            // slots and the return code is checked.
             if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
                 return Err(io::Error::last_os_error());
             }
             for &fd in &fds {
-                unsafe {
-                    fcntl(fd, F_SETFD, FD_CLOEXEC);
-                    fcntl(fd, F_SETFL, O_NONBLOCK);
-                }
+                // SAFETY: `fd` was just returned by pipe(2) and takes no
+                // pointer arguments. Results deliberately discarded:
+                // the flags are best-effort hardening, and the fallback
+                // path's behaviour is verified by the cloexec test.
+                let _ = unsafe { fcntl(fd, F_SETFD, FD_CLOEXEC) };
+                // SAFETY: as above.
+                let _ = unsafe { fcntl(fd, F_SETFL, O_NONBLOCK) };
             }
         }
         Ok(Self {
@@ -656,6 +678,10 @@ impl WakePipe {
     pub fn wake(&self) {
         if !self.signaled.swap(true, Ordering::SeqCst) {
             let byte = [1u8];
+            // SAFETY: `byte` is a live 1-byte stack buffer; the kernel
+            // reads exactly 1 byte from it. The result is deliberately
+            // discarded: with O_NONBLOCK the only failure mode is a full
+            // pipe, which already guarantees a pending wakeup.
             let _ = unsafe { write(self.write_fd, byte.as_ptr() as *const c_void, 1) };
         }
     }
@@ -685,6 +711,10 @@ impl WakePipe {
         //    read means empty, never a blocked event loop.
         let mut buf = [0u8; 64];
         loop {
+            // SAFETY: `buf` is a live 64-byte stack buffer; the kernel
+            // writes at most `buf.len()` bytes into it. A negative
+            // return (error, including EAGAIN on the non-blocking fd)
+            // breaks the loop like a short read — empty pipe.
             let n = unsafe { read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
             if n < buf.len() as isize {
                 break;
@@ -698,6 +728,9 @@ impl WakePipe {
         //    not.
         if self.signaled.load(Ordering::SeqCst) {
             let byte = [1u8];
+            // SAFETY: same contract as the write in [`WakePipe::wake`]:
+            // 1-byte stack buffer, failure means the pipe already holds
+            // a byte.
             let _ = unsafe { write(self.write_fd, byte.as_ptr() as *const c_void, 1) };
         }
     }
@@ -705,10 +738,12 @@ impl WakePipe {
 
 impl Drop for WakePipe {
     fn drop(&mut self) {
-        unsafe {
-            close(self.read_fd);
-            close(self.write_fd);
-        }
+        // SAFETY: both fds came from pipe2/pipe in `new` and are owned
+        // exclusively by this WakePipe, so this is the only close of
+        // each. Results deliberately discarded: no recovery in Drop.
+        let _ = unsafe { close(self.read_fd) };
+        // SAFETY: as above.
+        let _ = unsafe { close(self.write_fd) };
     }
 }
 
@@ -747,8 +782,11 @@ mod tests {
     fn wake_pipe_is_cloexec_and_nonblocking() {
         let wake = WakePipe::new().unwrap();
         for fd in [wake.read_fd, wake.write_fd] {
+            // SAFETY: `fd` is a live pipe fd owned by `wake`; F_GETFD
+            // takes no pointer arguments and the result is asserted on.
             let fd_flags = unsafe { fcntl(fd, F_GETFD) };
             assert!(fd_flags >= 0 && fd_flags & FD_CLOEXEC != 0, "fd {fd} not CLOEXEC");
+            // SAFETY: as above, for F_GETFL.
             let fl_flags = unsafe { fcntl(fd, F_GETFL) };
             assert!(fl_flags >= 0 && fl_flags & O_NONBLOCK != 0, "fd {fd} not O_NONBLOCK");
         }

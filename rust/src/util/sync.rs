@@ -1,0 +1,620 @@
+//! Crate-local synchronization primitives with a lockdep-style runtime
+//! lock-order detector.
+//!
+//! Every `Mutex`/`RwLock`/`Condvar` in this crate goes through these
+//! wrappers instead of `std::sync` directly (`vizier-lint` enforces
+//! that). Each lock is constructed against a static [`LockClass`] — a
+//! name plus a rank in the crate-wide lock hierarchy declared in
+//! [`classes`] — so the acquisition order that the module docs used to
+//! describe in prose is machine-checked every time a debug build or an
+//! `OSSVIZIER_LOCKDEP=1` process takes a lock.
+//!
+//! # What the detector checks
+//!
+//! A thread-local stack records the classes of every lock the current
+//! thread holds. On each acquisition of a lock of class `B` while
+//! holding a lock of class `A`:
+//!
+//! * **Declared hierarchy**: `B.rank` must be strictly greater than
+//!   `A.rank` — locks are only ever taken "downward" along the ranks
+//!   declared in [`classes`]. Taking two locks of the same class (equal
+//!   rank) nested is also a violation: no code path in this crate
+//!   legally holds two shards, two lanes, etc. at once.
+//! * **Observed-order graph**: the edge `A -> B` is recorded in a
+//!   process-global order graph. If a path `B -> ... -> A` was observed
+//!   before — i.e. this acquisition closes a cycle — the detector
+//!   panics naming both classes, even if the ranks were somehow
+//!   consistent. This is the classic lockdep invariant: a deadlock only
+//!   needs the *potential* for inversion, not the unlucky interleaving,
+//!   so one single-threaded pass through both orders is enough to catch
+//!   it.
+//!
+//! Violations panic with both class names; the panic message is stable
+//! enough for `tests/lockdep.rs` to assert on.
+//!
+//! # Cost model
+//!
+//! Release builds without `OSSVIZIER_LOCKDEP=1` pay one load of a
+//! lazily-initialized boolean and a predictable branch per acquisition
+//! — no thread-local traffic, no allocation, no global lock. The
+//! C-DS-MT / C-FRONTEND benches gate this: the shim must be
+//! indistinguishable from raw `std::sync` when the detector is off.
+//! Debug builds (`cfg(debug_assertions)`) run the detector by default;
+//! `OSSVIZIER_LOCKDEP=0` force-disables it there.
+//!
+//! # Poisoning
+//!
+//! The wrappers do not propagate `std::sync` poisoning (the same choice
+//! `parking_lot` makes): a panicking holder does not wedge every later
+//! acquisition behind a `PoisonError`. The crate's cross-thread failure
+//! paths have explicit protocols instead — the WAL committer's sticky
+//! error, the service's drain flag, the front-end's shutdown drain —
+//! and the worker pools already `catch_unwind` their jobs.
+//!
+//! The full hierarchy, with the code paths that pin each edge, is
+//! documented in `rust/docs/INVARIANTS.md`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, RwLock as StdRwLock};
+use std::sync::{
+    MutexGuard as StdMutexGuard, OnceLock, PoisonError, RwLockReadGuard as StdRwLockReadGuard,
+    RwLockWriteGuard as StdRwLockWriteGuard,
+};
+use std::time::Duration;
+
+pub use std::sync::WaitTimeoutResult;
+
+// ---------------------------------------------------------------------------
+// Lock classes
+// ---------------------------------------------------------------------------
+
+/// A static identity for every lock of one kind: a stable name (used in
+/// violation panics) and a rank in the crate-wide hierarchy. Locks of
+/// the same class share ordering constraints; locks of different
+/// classes may only be nested in strictly increasing rank order.
+#[derive(Debug)]
+pub struct LockClass {
+    pub name: &'static str,
+    pub rank: u32,
+}
+
+impl LockClass {
+    pub const fn new(name: &'static str, rank: u32) -> Self {
+        Self { name, rank }
+    }
+
+    /// Identity key: the address of the static. Classes are compared by
+    /// identity, not name, so two classes can share a rank band without
+    /// colliding in the order graph.
+    fn key(&'static self) -> usize {
+        self as *const LockClass as usize
+    }
+}
+
+/// The crate-wide lock hierarchy — every lock in the tree registers
+/// against one of these classes, so the whole acquisition order is
+/// declared (and reviewable) in this single table. Rank gaps are left
+/// for future layers. See `rust/docs/INVARIANTS.md` for the observed
+/// edges that pin each relation.
+pub mod classes {
+    use super::LockClass;
+
+    // --- Service layer (outermost: held while calling into the
+    // datastore, never the reverse) -------------------------------------
+    /// Per-study suggest coalescing queues ([`crate::service::api`]).
+    /// Claims are taken and dropped before any datastore call.
+    pub static SVC_COALESCE: LockClass = LockClass::new("service.coalesce", 100);
+    /// `WaitOperation` watcher registry. Held across a datastore *read*
+    /// (`watch_operation`'s race-free check-then-arm), hence ranked
+    /// above nothing and below every datastore lock.
+    pub static SVC_WAITERS: LockClass = LockClass::new("service.op_waiters", 110);
+    /// The policy worker pool handle ([`crate::service::api`]).
+    pub static SVC_WORKERS: LockClass = LockClass::new("service.worker_pool", 120);
+
+    // --- Front-end (event loop + worker pool) ---------------------------
+    /// Parked-connection registry (deferred responses / write parking).
+    /// Ranked before the job queue: completion hooks may hold a slot
+    /// entry while re-queueing its connection.
+    pub static FE_SLOTS: LockClass = LockClass::new("frontend.park_slots", 130);
+    /// Bounded ready-request queue feeding the worker pool.
+    pub static FE_QUEUE: LockClass = LockClass::new("frontend.job_queue", 140);
+
+    // --- Durable store (WAL) --------------------------------------------
+    /// Commit gate: writers share it for read around apply + enqueue;
+    /// the single-file `compact()` takes it for write. Outermost lock of
+    /// the commit path.
+    pub static WAL_COMMIT_GATE: LockClass = LockClass::new("wal.commit_gate", 200);
+    /// Committer work/durability state (`pending`/`durable`/`error`).
+    /// `compact_single_file` holds it while polling the lanes for
+    /// drained-ness, so it ranks above the gate and below the lanes.
+    pub static WAL_WORK: LockClass = LockClass::new("wal.commit_work", 210);
+    /// Per-shard commit lanes. The lane lock spans the in-memory apply,
+    /// so it ranks below the datastore locks the apply takes.
+    pub static WAL_LANE: LockClass = LockClass::new("wal.commit_lane", 220);
+    /// The active log segment writer. The serial commit path applies
+    /// under it, and the single-file compactor snapshots under it, so
+    /// like the lane it ranks above the in-memory datastore locks.
+    pub static WAL_LOG: LockClass = LockClass::new("wal.log_writer", 230);
+
+    // --- In-memory datastore (innermost data locks) ---------------------
+    /// Display-name directory. Always taken before the shard it is
+    /// protecting an insert into (`create_study`, `apply_put_study`).
+    pub static DS_DIRECTORY: LockClass = LockClass::new("datastore.directory", 240);
+    /// One state shard. Never nested with another shard; cross-shard
+    /// scans take them one at a time.
+    pub static DS_SHARD: LockClass = LockClass::new("datastore.shard", 250);
+
+    // --- Background compaction ------------------------------------------
+    /// Compactor request/completion state. Requested from the serial
+    /// commit path while the gate is still held (`maybe_auto_compact`),
+    /// never held while touching the log or the shards.
+    pub static WAL_COMPACTOR: LockClass = LockClass::new("wal.compactor", 260);
+
+    // --- Leaf locks (instrumentation, transports, pools) ----------------
+    /// Per-method histogram registry; held while linking the front-end
+    /// and WAL metric blocks into a report.
+    pub static MET_METHODS: LockClass = LockClass::new("metrics.methods", 300);
+    /// Link to the front-end metrics block.
+    pub static MET_FRONTEND: LockClass = LockClass::new("metrics.frontend_link", 310);
+    /// Link to the WAL metrics block.
+    pub static MET_WAL: LockClass = LockClass::new("metrics.wal_link", 320);
+    /// RemoteSupporter's transport (one in-flight round trip at a time).
+    pub static RP_TRANSPORT: LockClass = LockClass::new("pythia.remote_transport", 330);
+    /// RemotePythia's lazily-connected stream pair.
+    pub static RP_CONN: LockClass = LockClass::new("pythia.remote_conn", 340);
+    /// Legacy thread-per-connection registry ([`crate::service::server`]).
+    pub static LEGACY_CONNS: LockClass = LockClass::new("frontend.legacy_conns", 350);
+    /// Worker-pool MPMC receiver ([`crate::util::threadpool`]).
+    pub static TP_RECEIVER: LockClass = LockClass::new("threadpool.receiver", 360);
+    /// PJRT worker job channel ([`crate::runtime::registry`]).
+    pub static RT_PJRT: LockClass = LockClass::new("runtime.pjrt_sender", 370);
+    /// Benchmark result collector ([`crate::util::benchkit`]).
+    pub static BENCH_COLLECTOR: LockClass = LockClass::new("benchkit.collector", 380);
+}
+
+// ---------------------------------------------------------------------------
+// Detector state
+// ---------------------------------------------------------------------------
+
+/// Whether the detector is active for this process. Decided once: the
+/// `OSSVIZIER_LOCKDEP` variable wins when set (`0`/empty disables, any
+/// other value enables); otherwise debug builds are on and release
+/// builds are off.
+pub fn lockdep_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| match std::env::var("OSSVIZIER_LOCKDEP") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => cfg!(debug_assertions),
+    })
+}
+
+/// The global observed-order graph: `edges[a]` holds every class `b`
+/// that was acquired while `a` was held, plus the class table for
+/// rendering panics. Guarded by a raw `std::sync` mutex — this is the
+/// one lock in the crate that cannot go through the shim, and nothing
+/// is ever acquired while it is held.
+struct OrderGraph {
+    edges: HashMap<usize, Vec<usize>>,
+    names: HashMap<usize, &'static LockClass>,
+}
+
+fn graph() -> &'static StdMutex<OrderGraph> {
+    static G: OnceLock<StdMutex<OrderGraph>> = OnceLock::new();
+    G.get_or_init(|| {
+        StdMutex::new(OrderGraph {
+            edges: HashMap::new(),
+            names: HashMap::new(),
+        })
+    })
+}
+
+thread_local! {
+    /// Classes of the locks this thread currently holds, in acquisition
+    /// order.
+    static HELD: RefCell<Vec<&'static LockClass>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Is there a path `from -> ... -> to` in the observed-order graph?
+fn has_path(g: &OrderGraph, from: usize, to: usize) -> bool {
+    let mut stack = vec![from];
+    let mut seen: Vec<usize> = Vec::new();
+    while let Some(n) = stack.pop() {
+        if n == to {
+            return true;
+        }
+        if seen.contains(&n) {
+            continue;
+        }
+        seen.push(n);
+        if let Some(next) = g.edges.get(&n) {
+            stack.extend(next.iter().copied());
+        }
+    }
+    false
+}
+
+/// Validate one acquisition against the held stack and the global
+/// graph, record the new edges, and push the class. Returns true when
+/// the acquisition was tracked (so the matching release knows to pop).
+fn lockdep_acquire(class: &'static LockClass) -> bool {
+    if !lockdep_enabled() {
+        return false;
+    }
+    let held: Vec<&'static LockClass> = HELD.with(|h| h.borrow().clone());
+    if !held.is_empty() {
+        let mut g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+        g.names.entry(class.key()).or_insert(class);
+        for prev in &held {
+            g.names.entry(prev.key()).or_insert(prev);
+            // Cycle check first so inversions of an *observed* order get
+            // the more informative message.
+            if has_path(&g, class.key(), prev.key()) {
+                drop(g);
+                panic!(
+                    "lockdep: lock order inversion: acquiring '{}' (rank {}) while holding \
+                     '{}' (rank {}), but the opposite order '{}' -> '{}' was previously \
+                     observed — this cycle in the lock-order graph can deadlock",
+                    class.name, class.rank, prev.name, prev.rank, class.name, prev.name
+                );
+            }
+            if class.rank <= prev.rank {
+                drop(g);
+                panic!(
+                    "lockdep: declared-hierarchy violation: acquiring '{}' (rank {}) while \
+                     holding '{}' (rank {}); locks must be taken in strictly increasing \
+                     rank order (see util::sync::classes)",
+                    class.name, class.rank, prev.name, prev.rank
+                );
+            }
+            let e = g.edges.entry(prev.key()).or_default();
+            if !e.contains(&class.key()) {
+                e.push(class.key());
+            }
+        }
+    }
+    HELD.with(|h| h.borrow_mut().push(class));
+    true
+}
+
+/// Pop the most recent acquisition of `class` from the held stack.
+/// Guards may be dropped out of declaration order (`drop(ws)` before a
+/// later guard), so this removes the last matching entry, not
+/// necessarily the top.
+fn lockdep_release(class: &'static LockClass) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|c| std::ptr::eq(*c, class)) {
+            held.remove(pos);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// A mutex registered with a [`LockClass`]. API matches `std::sync`
+/// minus poisoning: `lock()` returns the guard directly.
+pub struct Mutex<T: ?Sized> {
+    class: &'static LockClass,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(class: &'static LockClass, value: T) -> Self {
+        Self {
+            class,
+            inner: StdMutex::new(value),
+        }
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        let tracked = lockdep_acquire(self.class);
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard {
+            class: self.class,
+            tracked,
+            inner: Some(inner),
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").field("class", &self.class.name).finish_non_exhaustive()
+    }
+}
+
+/// Guard for [`Mutex`]. The inner `Option` exists so [`Condvar::wait`]
+/// can take the `std` guard out without running this type's release
+/// logic twice.
+pub struct MutexGuard<'a, T: ?Sized> {
+    class: &'static LockClass,
+    tracked: bool,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard still holds the lock")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard still holds the lock")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.tracked {
+            lockdep_release(self.class);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+/// A reader-writer lock registered with a [`LockClass`]. Read and write
+/// acquisitions count identically for ordering purposes: a read-mode
+/// inversion is still an inversion (two threads in opposite orders with
+/// one writer deadlock the same way).
+pub struct RwLock<T: ?Sized> {
+    class: &'static LockClass,
+    inner: StdRwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(class: &'static LockClass, value: T) -> Self {
+        Self {
+            class,
+            inner: StdRwLock::new(value),
+        }
+    }
+}
+
+impl<T: ?Sized> RwLock<T> {
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        let tracked = lockdep_acquire(self.class);
+        let inner = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+        RwLockReadGuard {
+            class: self.class,
+            tracked,
+            inner,
+        }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        let tracked = lockdep_acquire(self.class);
+        let inner = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+        RwLockWriteGuard {
+            class: self.class,
+            tracked,
+            inner,
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RwLock").field("class", &self.class.name).finish_non_exhaustive()
+    }
+}
+
+pub struct RwLockReadGuard<'a, T: ?Sized> {
+    class: &'static LockClass,
+    tracked: bool,
+    inner: StdRwLockReadGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.tracked {
+            lockdep_release(self.class);
+        }
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T: ?Sized> {
+    class: &'static LockClass,
+    tracked: bool,
+    inner: StdRwLockWriteGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.tracked {
+            lockdep_release(self.class);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Condition variable over the shim's [`Mutex`]. Waiting releases the
+/// mutex, so the detector pops the class for the duration of the wait
+/// and re-validates the re-acquisition on wakeup (the surrounding held
+/// stack — e.g. the WAL commit gate around a `done_cv` wait — is still
+/// in force and is re-checked).
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self {
+            inner: StdCondvar::new(),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let class = guard.class;
+        let inner = guard.inner.take().expect("guard still holds the lock");
+        if guard.tracked {
+            lockdep_release(class);
+            guard.tracked = false;
+        }
+        drop(guard); // releases nothing: inner taken, tracking disarmed
+        let inner = self.inner.wait(inner).unwrap_or_else(PoisonError::into_inner);
+        MutexGuard {
+            class,
+            tracked: lockdep_acquire(class),
+            inner: Some(inner),
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        let class = guard.class;
+        let inner = guard.inner.take().expect("guard still holds the lock");
+        if guard.tracked {
+            lockdep_release(class);
+            guard.tracked = false;
+        }
+        drop(guard);
+        let (inner, timed_out) = self
+            .inner
+            .wait_timeout(inner, dur)
+            .unwrap_or_else(PoisonError::into_inner);
+        (
+            MutexGuard {
+                class,
+                tracked: lockdep_acquire(class),
+                inner: Some(inner),
+            },
+            timed_out,
+        )
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Test-only classes; ranks far above the production table so these
+    // never interfere with real locks held by other tests in the same
+    // process.
+    static T_OUTER: LockClass = LockClass::new("test.sync.outer", 10_000);
+    static T_INNER: LockClass = LockClass::new("test.sync.inner", 10_010);
+
+    #[test]
+    fn in_order_nesting_is_clean() {
+        let a = Mutex::new(&T_OUTER, 1);
+        let b = Mutex::new(&T_INNER, 2);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    fn rank_inversion_panics_with_both_names() {
+        static INV_A: LockClass = LockClass::new("test.sync.inv_a", 10_100);
+        static INV_B: LockClass = LockClass::new("test.sync.inv_b", 10_110);
+        let err = std::thread::spawn(|| {
+            let a = Mutex::new(&INV_A, ());
+            let b = Mutex::new(&INV_B, ());
+            let _gb = b.lock();
+            let _ga = a.lock(); // rank 10_100 under rank 10_110: violation
+        })
+        .join()
+        .expect_err("inversion must panic under lockdep");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("test.sync.inv_a"), "{msg}");
+        assert!(msg.contains("test.sync.inv_b"), "{msg}");
+    }
+
+    #[test]
+    fn condvar_wait_repushes_class() {
+        static CV_M: LockClass = LockClass::new("test.sync.cv_m", 10_200);
+        let m = Mutex::new(&CV_M, false);
+        let cv = Condvar::new();
+        let mut g = m.lock();
+        let (g2, res) = cv.wait_timeout(g, Duration::from_millis(10));
+        assert!(res.timed_out());
+        g = g2;
+        *g = true;
+        assert!(*g);
+    }
+
+    #[test]
+    fn guards_can_drop_out_of_order() {
+        static OO_A: LockClass = LockClass::new("test.sync.oo_a", 10_300);
+        static OO_B: LockClass = LockClass::new("test.sync.oo_b", 10_310);
+        let a = Mutex::new(&OO_A, ());
+        let b = Mutex::new(&OO_B, ());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga); // release outer first: legal Rust, must not corrupt the stack
+        drop(gb);
+        // A fresh in-order pass must still be clean.
+        let _ga = a.lock();
+        let _gb = b.lock();
+    }
+
+    #[test]
+    fn rwlock_read_then_inner_mutex_is_clean() {
+        static RW_O: LockClass = LockClass::new("test.sync.rw_outer", 10_400);
+        static RW_I: LockClass = LockClass::new("test.sync.rw_inner", 10_410);
+        let r = RwLock::new(&RW_O, 7);
+        let m = Mutex::new(&RW_I, 1);
+        let gr = r.read();
+        let gm = m.lock();
+        assert_eq!(*gr + *gm, 8);
+        drop(gm);
+        drop(gr);
+        let mut gw = r.write();
+        *gw += 1;
+        drop(gw);
+        assert_eq!(*r.read(), 8);
+    }
+}

@@ -6,8 +6,9 @@
 //! MPMC queue (std `mpsc` receiver shared behind a mutex), with graceful
 //! shutdown that drains queued jobs.
 
+use crate::util::sync::{classes, Mutex};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -24,7 +25,7 @@ impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0, "thread pool needs at least one worker");
         let (sender, receiver) = mpsc::channel::<Job>();
-        let receiver = Arc::new(Mutex::new(receiver));
+        let receiver = Arc::new(Mutex::new(&classes::TP_RECEIVER, receiver));
         let active = Arc::new(AtomicUsize::new(0));
         let workers = (0..size)
             .map(|i| {
@@ -35,7 +36,7 @@ impl ThreadPool {
                     .spawn(move || loop {
                         // Holding the lock only while receiving keeps the
                         // queue MPMC without a dedicated crate.
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = { rx.lock().recv() };
                         match job {
                             Ok(job) => {
                                 act.fetch_add(1, Ordering::SeqCst);
