@@ -1,0 +1,144 @@
+//! C-WIRE-MUX: what connection multiplexing buys. One wire-v2
+//! connection carrying N concurrent in-flight RPCs is compared against
+//! the v1 shape of the same load — N separate connections, one blocking
+//! RPC each — and the watch-stream path is checked structurally: the
+//! number of `wait_wakeup` events must never exceed the number of
+//! operation state transitions (the stream pushes per transition; it
+//! never busy-wakes).
+//!
+//! Results land in `BENCH_WIRE_MUX.json` at the repo root (see
+//! `bench_baselines/README.md` for the comparison gate).
+
+use ossvizier::client::transport::{call, TcpTransport, Transport};
+use ossvizier::client::VizierClient;
+use ossvizier::pyvizier::{Algorithm, Measurement, MetricInformation, ScaleType, StudyConfig};
+use ossvizier::service::{in_memory_service, VizierServer};
+use ossvizier::util::benchkit::{bench, check_strict, finish, note, section};
+use ossvizier::wire::framing::Method;
+use ossvizier::wire::messages::EmptyResponse;
+use std::time::Duration;
+
+/// Concurrent in-flight RPCs per round (the acceptance floor is 8).
+const INFLIGHT: usize = 8;
+
+fn soak() -> bool {
+    std::env::var_os("OSSVIZIER_SOAK").is_some()
+}
+
+fn ping(t: &mut TcpTransport) {
+    let _: EmptyResponse =
+        call(t as &mut dyn Transport, Method::Ping, &EmptyResponse::default()).unwrap();
+}
+
+/// One round: `INFLIGHT` threads issue `per_thread` pings each,
+/// concurrently, over whatever transports the caller built. Wall time of
+/// the whole round is what [`bench`] samples.
+fn round(transports: &mut [TcpTransport], per_thread: usize) {
+    std::thread::scope(|scope| {
+        for t in transports.iter_mut() {
+            scope.spawn(move || {
+                for _ in 0..per_thread {
+                    ping(t);
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let per_thread = if soak() { 100 } else { 25 };
+    section(&format!(
+        "C-WIRE-MUX: {INFLIGHT} concurrent in-flight RPC lanes x {per_thread} pings/round, \
+         one multiplexed v2 connection vs {INFLIGHT} v1 connections"
+    ));
+
+    let server = VizierServer::start(in_memory_service(2), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // --- v2: all lanes share ONE socket, demuxed by correlation id.
+    let base = TcpTransport::connect(&addr).unwrap();
+    check_strict(
+        "hello-negotiates-v2",
+        base.wire_version() == 2,
+        &format!("negotiated wire version {}", base.wire_version()),
+    );
+    let mut shares: Vec<TcpTransport> =
+        (0..INFLIGHT).map(|_| base.try_share().expect("v2 share")).collect();
+    let mux = bench(&format!("wire_mux/round_{INFLIGHT}lanes_one_mux_conn"), || {
+        round(&mut shares, per_thread);
+    });
+    let fe = server.frontend_metrics();
+    check_strict(
+        "mux-lanes-share-one-socket",
+        fe.active_connections() == 1,
+        &format!("{} active connections under the mux round", fe.active_connections()),
+    );
+
+    // --- v1 baseline: the same load needs one connection per lane.
+    let mut v1_conns: Vec<TcpTransport> = (0..INFLIGHT)
+        .map(|_| {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.force_v1();
+            t
+        })
+        .collect();
+    let v1 = bench(&format!("wire_mux/round_{INFLIGHT}lanes_v1_conns"), || {
+        round(&mut v1_conns, per_thread);
+    });
+
+    let rpcs = (INFLIGHT * per_thread) as f64;
+    note(&format!(
+        "one mux conn {:>9.0} req/s   {INFLIGHT} v1 conns {:>9.0} req/s",
+        rpcs / (mux.mean_us() / 1e6),
+        rpcs / (v1.mean_us() / 1e6),
+    ));
+    server.shutdown();
+
+    // ------------------------------------------------------------------
+    // Watch-stream wakeup accounting: run a real tuning loop over v2 and
+    // compare `wait_wakeup` events against operation state transitions.
+    // Every suggest operation transitions exactly once (pending -> done),
+    // so wakeups <= completed operations — a deterministic counter fact,
+    // not a timing.
+    // ------------------------------------------------------------------
+    let ops = if soak() { 200 } else { 50 };
+    section(&format!("C-WIRE-MUX: watch-stream wakeups over {ops} suggest operations"));
+    let service = in_memory_service(2);
+    let server = VizierServer::start(service.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut config = StudyConfig::new("mux-watch");
+    config.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    config.add_metric(MetricInformation::maximize("score"));
+    config.algorithm = Algorithm::RandomSearch;
+    let transport = Box::new(TcpTransport::connect(&addr).unwrap());
+    let mut client =
+        VizierClient::load_or_create_study(transport, "mux-watch", &config, "w0").unwrap();
+    for _ in 0..ops {
+        let t = &client.get_suggestions(1).unwrap()[0];
+        client
+            .complete_trial(t.id, Some(&Measurement::new(1).with_metric("score", 0.5)))
+            .unwrap();
+    }
+    let wakeups = service.metrics.wait_wakeup.count();
+    let transitions = ops as u64; // one pending->done transition per op
+    note(&format!("{wakeups} wait wakeups over {transitions} operation transitions"));
+    check_strict(
+        "watch-wakeups-bounded-by-transitions",
+        wakeups <= transitions,
+        &format!("{wakeups} wakeups <= {transitions} transitions"),
+    );
+    check_strict(
+        "zero-getoperation-polling",
+        service.metrics.histogram("GetOperation").count() == 0,
+        &format!("{} GetOperation calls", service.metrics.histogram("GetOperation").count()),
+    );
+    check_strict(
+        "watch-streams-drain",
+        service.metrics.watch_streams() == 0,
+        &format!("{} live watch streams after the loop", service.metrics.watch_streams()),
+    );
+    server.shutdown();
+
+    finish("WIRE_MUX");
+}

@@ -11,6 +11,7 @@
 use super::transport::{call, Transport};
 use crate::pyvizier::{converters, Measurement, StudyConfig, Trial};
 use crate::util::backoff::Backoff;
+use crate::wire::codec::{decode, encode};
 use crate::wire::framing::{FrameError, Method, Status};
 use crate::wire::messages::*;
 use std::time::{Duration, Instant};
@@ -178,14 +179,28 @@ impl VizierClient {
         Ok(op.trials.iter().map(converters::trial_from_proto).collect())
     }
 
-    /// Wait for an operation: `WaitOperation` long-polls server-side
-    /// (the server parks this request and answers the instant the
-    /// policy result lands — one round-trip per completion, no polling
-    /// traffic), chunked under the server's per-call cap. Old servers
-    /// that do not know the method get the classic `GetOperation` loop
-    /// with capped backoff instead.
+    /// Wait for an operation, best protocol first:
+    ///
+    /// 1. Wire v2: one `WaitOperation` watch stream — the server pushes
+    ///    a snapshot on every state change and ends the stream at
+    ///    completion. Every transition is observed with zero
+    ///    `GetOperation` calls and no polling traffic at all.
+    /// 2. Wire v1: `WaitOperation` long-polls server-side (the server
+    ///    parks this request and answers the instant the policy result
+    ///    lands), chunked under the server's per-call cap.
+    /// 3. Old servers that do not know the method get the classic
+    ///    `GetOperation` loop with capped backoff.
     fn wait_operation(&mut self, mut op: OperationProto) -> Result<OperationProto, ClientError> {
         let deadline = Instant::now() + self.operation_timeout;
+        if !op.done {
+            match self.wait_via_stream(&op, deadline)? {
+                Some(finished) => op = finished,
+                // Streaming unavailable (v1 peer) or the connection
+                // dropped mid-stream: the unary loop below reconnects
+                // and finishes the wait.
+                None => {}
+            }
+        }
         let mut backoff = Backoff::polling();
         while !op.done {
             let now = Instant::now();
@@ -234,6 +249,58 @@ impl VizierClient {
             return Err(ClientError::OperationFailed(op.name, op.error));
         }
         Ok(op)
+    }
+
+    /// Consume a v2 `WaitOperation` watch stream to completion.
+    /// `Ok(None)` means streaming is unavailable — the transport is v1,
+    /// or the connection failed before/while streaming — and the caller
+    /// should fall back to unary waits (which reconnect on their own).
+    fn wait_via_stream(
+        &mut self,
+        op: &OperationProto,
+        deadline: Instant,
+    ) -> Result<Option<OperationProto>, ClientError> {
+        let req = WaitOperationRequest { name: op.name.clone(), timeout_ms: 0 };
+        let mut stream = match self.transport.call_stream(Method::WaitOperation, &encode(&req)) {
+            Ok(Some(s)) => s,
+            Ok(None) => return Ok(None),
+            Err(_) => return Ok(None),
+        };
+        let mut latest = op.clone();
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                // Dropping the handle sends CANCEL: the server releases
+                // its watcher instead of pushing to a vanished reader.
+                return Err(ClientError::OperationTimeout(latest.name));
+            }
+            match stream.next(Some(remaining)) {
+                Ok(Some(item)) => {
+                    let resp: OperationResponse =
+                        decode(&item).map_err(|e| ClientError::Transport(e.to_string()))?;
+                    latest = resp.operation;
+                    if latest.done {
+                        return Ok(Some(latest));
+                    }
+                }
+                // Stream ended without a done snapshot (server
+                // draining): finish on the unary path.
+                Ok(None) => return Ok(None),
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(ClientError::OperationTimeout(latest.name));
+                }
+                Err(FrameError::Rpc { status, message }) => {
+                    return Err(ClientError::Rpc { status, message });
+                }
+                // Connection died mid-stream: reconnect via unary waits.
+                Err(_) => return Ok(None),
+            }
+        }
     }
 
     /// Report an intermediate measurement (learning-curve point).
@@ -354,9 +421,17 @@ impl VizierClient {
     }
 
     /// Service + front-end counter snapshot (coalescing ratio, in-flight
-    /// policy jobs, parked responses).
+    /// policy jobs, parked responses). The plain-text `report` is
+    /// rendered here on the client from the typed counters, gauges, and
+    /// histograms; old servers that predate the structured fields ship
+    /// their own server-rendered text, which passes through untouched.
     pub fn service_metrics(&mut self) -> Result<ServiceMetricsResponse, ClientError> {
-        self.rpc(Method::GetServiceMetrics, &GetServiceMetricsRequest::default())
+        let mut resp: ServiceMetricsResponse =
+            self.rpc(Method::GetServiceMetrics, &GetServiceMetricsRequest::default())?;
+        if resp.report.is_empty() {
+            resp.report = render_metrics_report(&resp);
+        }
+        Ok(resp)
     }
 
     /// The Pareto-optimal (or single-objective best) trials.
@@ -389,6 +464,99 @@ impl VizierClient {
         let _: EmptyResponse = self.rpc(Method::Ping, &EmptyResponse::default())?;
         Ok(())
     }
+}
+
+/// Render the structured `GetServiceMetrics` fields into the classic
+/// plain-text report — byte-identical to what `ServiceMetrics::report`
+/// produces server-side, so `vizier metrics` output is unchanged by the
+/// move to typed metrics. The front-end and WAL sections appear exactly
+/// when the server exported any point under their name prefix (i.e. the
+/// corresponding subsystem is linked), mirroring the server rendering.
+fn render_metrics_report(resp: &ServiceMetricsResponse) -> String {
+    let counter = |name: &str| {
+        resp.counters.iter().find(|p| p.name == name).map_or(0, |p| p.value)
+    };
+    let gauge = |name: &str| {
+        resp.gauges.iter().find(|p| p.name == name).map_or(0, |p| p.value)
+    };
+    let hist = |name: &str| resp.histograms.iter().find(|h| h.name == name);
+    let has_section = |prefix: &str| {
+        resp.counters.iter().any(|p| p.name.starts_with(prefix))
+            || resp.gauges.iter().any(|p| p.name.starts_with(prefix))
+            || resp.histograms.iter().any(|h| h.name.starts_with(prefix))
+    };
+
+    let mut out = String::from("method                     count    mean_us    p50_us    p99_us\n");
+    let mut methods: Vec<_> = resp
+        .histograms
+        .iter()
+        .filter(|h| h.name.starts_with("method."))
+        .collect();
+    // The server exports them in BTreeMap order already; sort anyway so
+    // the table is stable whatever the server did.
+    methods.sort_by(|a, b| a.name.cmp(&b.name));
+    for h in methods {
+        let name = &h.name["method.".len()..];
+        out.push_str(&format!(
+            "{name:<25} {:>7} {:>10.1} {:>9} {:>9}\n",
+            h.count,
+            h.mean_us(),
+            h.p50_us,
+            h.p99_us,
+        ));
+    }
+    out.push_str(&format!("errors: {}\n", counter("errors")));
+    out.push_str(&format!(
+        "policy runs: {} (serving {} suggest ops), {} in flight\n",
+        counter("policy_runs"),
+        counter("suggest_ops_served"),
+        gauge("in_flight_policy_jobs"),
+    ));
+    let ww = hist("wait_wakeup");
+    out.push_str(&format!(
+        "wait wakeups: {} (mean {:.1} us, p99 {} us)\n",
+        ww.map_or(0, |h| h.count),
+        ww.map_or(0.0, |h| h.mean_us()),
+        ww.map_or(0, |h| h.p99_us),
+    ));
+    if has_section("frontend.") {
+        let qw = hist("frontend.queue_wait");
+        out.push_str(&format!(
+            "frontend: {} active / {} total connections ({} refused, {} evicted), \
+             queue depth {}, {} parked responses, \
+             {} requests (queue wait mean {:.1} us, p99 {} us), \
+             {} loop wakeups ({} scan cost)\n",
+            gauge("frontend.active_connections"),
+            counter("frontend.connections_total"),
+            counter("frontend.connections_refused"),
+            counter("frontend.idle_evictions"),
+            gauge("frontend.queue_depth"),
+            gauge("frontend.parked_responses"),
+            counter("frontend.requests"),
+            qw.map_or(0.0, |h| h.mean_us()),
+            qw.map_or(0, |h| h.p99_us),
+            counter("frontend.loop_wakeups"),
+            counter("frontend.loop_scan_cost"),
+        ));
+    }
+    if has_section("wal.") {
+        let comp = hist("wal.compaction");
+        let cw = hist("wal.commit_wait");
+        out.push_str(&format!(
+            "wal: {} segment file(s), {} rotations, {} compactions \
+             (mean {:.1} us, {} bytes reclaimed), \
+             commit wait mean {:.1} us p99 {} us max {} us\n",
+            gauge("wal.segments"),
+            counter("wal.rotations"),
+            counter("wal.compactions"),
+            comp.map_or(0.0, |h| h.mean_us()),
+            counter("wal.reclaimed_bytes"),
+            cw.map_or(0.0, |h| h.mean_us()),
+            cw.map_or(0, |h| h.p99_us),
+            gauge("wal.commit_stall_max_us"),
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -478,6 +646,33 @@ mod tests {
         assert_eq!(trials.len(), 1);
         assert_eq!(wait_op_calls.load(Ordering::SeqCst), 1);
         assert!(get_op_calls.load(Ordering::SeqCst) >= 4);
+    }
+
+    /// The client-side rendering of the structured metrics must
+    /// reproduce the legacy server-side text byte for byte — `vizier
+    /// metrics` output is a compatibility surface.
+    #[test]
+    fn rendered_report_matches_server_text() {
+        use crate::datastore::memory::InMemoryDatastore;
+        use crate::pythia::runner::{default_registry, LocalPythia};
+        use crate::pythia::supporter::DatastoreSupporter;
+        use crate::wire::messages::GetServiceMetricsRequest;
+
+        let ds = Arc::new(InMemoryDatastore::new());
+        let supporter = Arc::new(DatastoreSupporter::new(
+            Arc::clone(&ds) as Arc<dyn crate::datastore::Datastore>
+        ));
+        let pythia = Arc::new(LocalPythia::new(default_registry(), supporter));
+        let svc = crate::service::api::VizierService::new(ds, pythia, 2);
+        svc.metrics.record("SuggestTrials", 1500);
+        svc.metrics.record("SuggestTrials", 2500);
+        svc.metrics.record("CompleteTrial", 300);
+        svc.metrics.record_error();
+        svc.metrics.record_wait_wakeup(120);
+
+        let resp = svc.get_service_metrics(GetServiceMetricsRequest::default()).unwrap();
+        assert!(resp.report.is_empty(), "v2 servers leave rendering to the client");
+        assert_eq!(super::render_metrics_report(&resp), svc.metrics.report());
     }
 }
 

@@ -2,19 +2,46 @@
 //! in-process ("the server may be launched in the same local process as
 //! the client, in cases where distributed computing is not needed and
 //! function evaluation is cheap" — paper §3.2).
+//!
+//! The TCP transport speaks both wire protocols (see `docs/WIRE.md`): a
+//! one-round `HELLO` probe on the first connection selects v2 when the
+//! server supports it — all calls then multiplex over one shared
+//! connection, demultiplexed by correlation id — and latches v1 forever
+//! when the peer answers with a v1 status byte or hangs up. Old servers
+//! never see a second HELLO.
 
 use crate::service::api::VizierService;
 use crate::service::server::dispatch_buf;
-use crate::wire::codec::{encode, WireMessage};
-use crate::wire::framing::{read_response, write_request, FrameError, Method};
+use crate::util::sync::{classes, Mutex};
+use crate::wire::codec::{decode, encode, WireMessage};
+use crate::wire::framing::{
+    encode_v2, is_v2_head, parse_v2, read_frame, read_response, write_request, write_v2,
+    FrameError, FrameKind, Method, Status, WIRE_VERSION_MAX,
+};
+use crate::wire::messages::HelloProto;
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// A bidirectional request/response channel to a Vizier service.
 pub trait Transport: Send {
     fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError>;
+
+    /// Open a server-push stream for `method` (wire v2 only). `Ok(None)`
+    /// means this transport — or the protocol it negotiated — cannot
+    /// stream, and the caller must fall back to unary calls.
+    /// Implementations without streaming inherit this default.
+    fn call_stream(
+        &mut self,
+        method: Method,
+        request: &[u8],
+    ) -> Result<Option<ServerStream>, FrameError> {
+        let _ = (method, request);
+        Ok(None)
+    }
 }
 
 /// Typed call helper shared by all transports.
@@ -28,16 +55,37 @@ pub fn call<T: Transport + ?Sized, Req: WireMessage, Resp: WireMessage>(
     read_response(&mut cursor)
 }
 
+/// `OSSVIZIER_WIRE=v1` forces the legacy protocol (the CI matrix leg and
+/// an emergency escape hatch). Any other value — including `v2`, the
+/// default — lets the `HELLO` probe negotiate.
+fn wire_v2_disabled() -> bool {
+    std::env::var("OSSVIZIER_WIRE").map(|v| v == "v1").unwrap_or(false)
+}
+
+/// Negotiated protocol state of one [`TcpTransport`].
+enum Wire {
+    /// Not yet negotiated: the first call probes with `HELLO`.
+    Unprobed,
+    /// v1 peer, latched for the life of this transport (the probe is
+    /// never repeated against an endpoint that answered it with v1).
+    V1,
+    /// v2 negotiated: every call multiplexes over this shared connection.
+    V2(Arc<MuxClient>),
+}
+
 /// TCP transport with automatic reconnect on broken connections.
 pub struct TcpTransport {
     addr: String,
     conn: Option<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
+    wire: Wire,
     pub connect_timeout: Duration,
     /// Per-response read timeout (`None` = block forever, the default —
     /// user clients legitimately wait on long evaluations). A timed-out
     /// call fails *without* the resend retry: the request was already
     /// delivered and replaying a non-idempotent RPC (CompleteTrial)
-    /// would be worse than the error.
+    /// would be worse than the error. Over v2 the same timeout bounds
+    /// the wait for each call's terminal frame; on expiry the client
+    /// sends `CANCEL` and abandons the correlation id.
     pub read_timeout: Option<Duration>,
 }
 
@@ -56,21 +104,128 @@ impl TcpTransport {
         let mut t = Self {
             addr: addr.to_string(),
             conn: None,
+            wire: Wire::Unprobed,
             connect_timeout: Duration::from_secs(5),
             read_timeout,
         };
-        t.ensure_connected()?;
+        t.ensure_wire()?;
+        if matches!(t.wire, Wire::V1) {
+            t.ensure_connected()?;
+        }
         Ok(t)
+    }
+
+    /// The negotiated wire version: 2 after a successful `HELLO`
+    /// handshake, 1 on a latched v1 peer, 0 before the first probe.
+    pub fn wire_version(&self) -> u64 {
+        match self.wire {
+            Wire::Unprobed => 0,
+            Wire::V1 => 1,
+            Wire::V2(_) => 2,
+        }
+    }
+
+    /// Pin this transport to the legacy v1 protocol. Equivalent to
+    /// `OSSVIZIER_WIRE=v1` but scoped to one transport — tests use it to
+    /// cover the v1 path without mutating process-global environment.
+    pub fn force_v1(&mut self) {
+        self.conn = None;
+        self.wire = Wire::V1;
+    }
+
+    /// A second handle over the same multiplexed connection (wire v2
+    /// only): both transports then issue RPCs concurrently over one
+    /// socket, demultiplexed by correlation id. `None` on a v1 peer or
+    /// before the first call negotiated a protocol.
+    pub fn try_share(&self) -> Option<TcpTransport> {
+        match &self.wire {
+            Wire::V2(client) => Some(TcpTransport {
+                addr: self.addr.clone(),
+                conn: None,
+                wire: Wire::V2(Arc::clone(client)),
+                connect_timeout: self.connect_timeout,
+                read_timeout: self.read_timeout,
+            }),
+            _ => None,
+        }
+    }
+
+    fn dial(&self) -> Result<TcpStream, FrameError> {
+        let sock_addr: std::net::SocketAddr = self
+            .addr
+            .parse()
+            .map_err(|_| FrameError::Io(std::io::Error::other(format!("bad addr {}", self.addr))))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, self.connect_timeout)?;
+        stream.set_nodelay(true).ok();
+        Ok(stream)
+    }
+
+    /// Make sure a protocol has been negotiated. A dead v2 connection
+    /// (server restart) resets to `Unprobed` so the next connection
+    /// renegotiates — the replacement server may be older or newer.
+    fn ensure_wire(&mut self) -> Result<(), FrameError> {
+        if let Wire::V2(client) = &self.wire {
+            if client.is_dead() {
+                self.wire = Wire::Unprobed;
+            } else {
+                return Ok(());
+            }
+        }
+        if matches!(self.wire, Wire::V1) {
+            return Ok(());
+        }
+        self.probe()
+    }
+
+    /// One-round version handshake on a fresh connection. Every outcome
+    /// other than a v2 `HELLO` echo — a v1 error status byte, EOF,
+    /// garbage, or a handshake timeout — latches v1: the probe
+    /// connection is spent either way (a v1 server answered it with an
+    /// error and closed), so the v1 path reconnects fresh and this
+    /// transport never sends `HELLO` to that endpoint again.
+    fn probe(&mut self) -> Result<(), FrameError> {
+        if wire_v2_disabled() {
+            self.wire = Wire::V1;
+            return Ok(());
+        }
+        let stream = self.dial()?;
+        // Bound the handshake: a peer that accepts the connection but
+        // never answers should degrade, not hang the first call.
+        stream.set_read_timeout(Some(self.connect_timeout))?;
+        let hello = HelloProto { version: WIRE_VERSION_MAX, max_inflight: 0 };
+        if write_v2(&mut &stream, FrameKind::Hello, 0, &encode(&hello)).is_err() {
+            // Could not even send: fall back and let `ensure_connected`
+            // surface the real connection problem on the v1 path.
+            self.wire = Wire::V1;
+            return Ok(());
+        }
+        match read_frame(&mut &stream) {
+            Ok((head, payload)) if is_v2_head(head) => {
+                let negotiated = parse_v2(head, payload)
+                    .ok()
+                    .filter(|f| f.kind == FrameKind::Hello)
+                    .and_then(|f| decode::<HelloProto>(&f.body).ok())
+                    .map_or(0, |h| h.version);
+                if negotiated >= 2 {
+                    // The reader thread blocks between frames; response
+                    // timeouts are enforced per call on the receiving
+                    // channel, not on the socket.
+                    stream.set_read_timeout(None)?;
+                    self.wire = Wire::V2(Arc::new(MuxClient::start(stream)?));
+                } else {
+                    // Negotiated down by a future server. The probe
+                    // connection is v2-tainted; reconnect fresh as v1.
+                    self.wire = Wire::V1;
+                }
+            }
+            _ => self.wire = Wire::V1,
+        }
+        Ok(())
     }
 
     fn ensure_connected(&mut self) -> Result<(), FrameError> {
         if self.conn.is_none() {
-            let sock_addr: std::net::SocketAddr = self
-                .addr
-                .parse()
-                .map_err(|_| FrameError::Io(std::io::Error::other(format!("bad addr {}", self.addr))))?;
-            let stream = TcpStream::connect_timeout(&sock_addr, self.connect_timeout)?;
-            stream.set_nodelay(true).ok();
+            let stream = self.dial()?;
             stream.set_read_timeout(self.read_timeout)?;
             let reader = BufReader::new(stream.try_clone()?);
             let writer = BufWriter::new(stream);
@@ -84,6 +239,29 @@ impl Transport for TcpTransport {
     fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError> {
         // One reconnect attempt on a broken pipe (server restart).
         for attempt in 0..2 {
+            self.ensure_wire()?;
+            if let Wire::V2(client) = &self.wire {
+                let client = Arc::clone(client);
+                match client.call(method, request, self.read_timeout) {
+                    Ok(frame) => return Ok(frame),
+                    // Timed out: the id was canceled, do NOT resend.
+                    Err(FrameError::Io(e))
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        return Err(FrameError::Io(e));
+                    }
+                    Err(FrameError::Io(_)) if attempt == 0 => {
+                        // The shared connection died: renegotiate on a
+                        // fresh one and retry once.
+                        self.wire = Wire::Unprobed;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
             self.ensure_connected()?;
             let (reader, writer) = self.conn.as_mut().unwrap();
             let result = (|| -> Result<Vec<u8>, FrameError> {
@@ -114,31 +292,358 @@ impl Transport for TcpTransport {
         }
         unreachable!()
     }
-}
 
-fn raw_write<W: std::io::Write>(w: &mut W, method: Method, payload: &[u8]) -> Result<(), FrameError> {
-    // write_request over a pre-encoded payload.
-    struct Pre<'a>(&'a [u8]);
-    impl WireMessage for Pre<'_> {
-        fn encode_fields(&self, out: &mut crate::wire::codec::Writer) {
-            out.raw_append(self.0);
-        }
-        fn decode_fields(_: &mut crate::wire::codec::Reader) -> Result<Self, crate::wire::codec::WireError> {
-            unreachable!("Pre is write-only")
+    fn call_stream(
+        &mut self,
+        method: Method,
+        request: &[u8],
+    ) -> Result<Option<ServerStream>, FrameError> {
+        self.ensure_wire()?;
+        match &self.wire {
+            Wire::V2(client) => MuxClient::open_stream(client, method, request).map(Some),
+            _ => Ok(None),
         }
     }
-    write_request(w, method, &Pre(payload))
 }
 
-fn raw_read<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>, FrameError> {
-    // Return the whole response frame (head + payload) re-framed so
-    // `read_response` can parse it from a cursor.
-    let (head, payload) = crate::wire::framing::read_frame(r)?;
-    let mut out = Vec::with_capacity(5 + payload.len());
-    out.extend_from_slice(&((1 + payload.len()) as u32).to_le_bytes());
-    out.push(head);
-    out.extend_from_slice(&payload);
-    Ok(out)
+// ---------------------------------------------------------------------------
+// Multiplexed v2 client
+// ---------------------------------------------------------------------------
+
+/// Demux events delivered to one correlation id's waiter.
+enum MuxEvent {
+    /// Terminal unary answer, re-framed as v1 response bytes
+    /// (`[u32 len][status][payload]`) so the shared `read_response`
+    /// path parses both protocols identically.
+    Terminal(Vec<u8>),
+    /// One `STREAM_ITEM` body.
+    Item(Vec<u8>),
+    /// Normal `STREAM_END`.
+    End,
+    /// The shared connection died before this call finished.
+    Closed,
+}
+
+struct MuxShared {
+    /// In-flight correlation ids → the caller waiting on each.
+    pending: Mutex<HashMap<u32, mpsc::Sender<MuxEvent>>>,
+    /// Set (before `pending` is drained) once the reader exits; checked
+    /// under the `pending` lock on registration so no call can slip in
+    /// between the flag and the drain.
+    dead: AtomicBool,
+}
+
+/// One multiplexed wire-v2 connection: many concurrent RPCs share one
+/// socket, each tagged with a correlation id, and a background reader
+/// routes every inbound frame to its caller. Shared via `Arc` —
+/// [`TcpTransport::try_share`] hands out extra handles over the same
+/// connection.
+pub struct MuxClient {
+    shared: Arc<MuxShared>,
+    /// Write half (a dup of the reader's socket). Whole frames only, so
+    /// concurrent callers never interleave partial frames.
+    writer: Mutex<TcpStream>,
+    next_corr: AtomicU32,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MuxClient {
+    fn start(stream: TcpStream) -> Result<MuxClient, FrameError> {
+        let wstream = stream.try_clone()?;
+        let shared = Arc::new(MuxShared {
+            pending: Mutex::new(&classes::CL_MUX_PENDING, HashMap::new()),
+            dead: AtomicBool::new(false),
+        });
+        let thread_shared = Arc::clone(&shared);
+        let reader = std::thread::Builder::new()
+            .name("mux-client-reader".into())
+            .spawn(move || reader_loop(stream, thread_shared))
+            .map_err(FrameError::Io)?;
+        Ok(MuxClient {
+            shared,
+            writer: Mutex::new(&classes::CL_MUX_WRITER, wstream),
+            next_corr: AtomicU32::new(1),
+            reader: Some(reader),
+        })
+    }
+
+    fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::Acquire)
+    }
+
+    /// Claim a fresh correlation id and park a receiver for it.
+    fn register(&self) -> Result<(u32, mpsc::Receiver<MuxEvent>), FrameError> {
+        let corr = loop {
+            let c = self.next_corr.fetch_add(1, Ordering::Relaxed);
+            if c != 0 {
+                break c; // 0 is the HELLO correlation id
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let mut pending = self.shared.pending.lock();
+        if self.shared.dead.load(Ordering::Acquire) {
+            return Err(closed_err());
+        }
+        pending.insert(corr, tx);
+        Ok((corr, rx))
+    }
+
+    /// Abandon a correlation id: a late answer routed to it is dropped.
+    fn forget(&self, corr: u32) {
+        self.shared.pending.lock().remove(&corr);
+    }
+
+    fn send(&self, kind: FrameKind, corr: u32, body: &[u8]) -> Result<(), FrameError> {
+        let frame = encode_v2(kind, corr, body)?;
+        use std::io::Write as _;
+        let mut w = self.writer.lock();
+        w.write_all(&frame).map_err(FrameError::Io)
+    }
+
+    fn recv(
+        rx: &mpsc::Receiver<MuxEvent>,
+        timeout: Option<Duration>,
+    ) -> Result<MuxEvent, FrameError> {
+        match timeout {
+            Some(t) => match rx.recv_timeout(t) {
+                Ok(ev) => Ok(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(FrameError::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "response timed out",
+                ))),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Ok(MuxEvent::Closed),
+            },
+            None => Ok(rx.recv().unwrap_or(MuxEvent::Closed)),
+        }
+    }
+
+    /// One unary call over the shared connection. Returns v1-shaped
+    /// response bytes (ok or error) for `read_response`.
+    fn call(
+        &self,
+        method: Method,
+        request: &[u8],
+        timeout: Option<Duration>,
+    ) -> Result<Vec<u8>, FrameError> {
+        let (corr, rx) = self.register()?;
+        let mut body = Vec::with_capacity(1 + request.len());
+        body.push(method as u8);
+        body.extend_from_slice(request);
+        if let Err(e) = self.send(FrameKind::Request, corr, &body) {
+            self.forget(corr);
+            return Err(e);
+        }
+        // Unary calls normally get one RESPONSE or ERROR frame. A server
+        // that answers with a stream (WaitOperation issued through
+        // `call_raw`) degrades gracefully: the last item before
+        // STREAM_END is the unary answer.
+        let mut last_item: Option<Vec<u8>> = None;
+        loop {
+            let ev = match Self::recv(&rx, timeout) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    // Timed out: abandon the id so a late answer is not
+                    // mistaken for another call's, and tell the server
+                    // to drop any pending work for it.
+                    self.forget(corr);
+                    let _ = self.send(FrameKind::Cancel, corr, &[]);
+                    return Err(e);
+                }
+            };
+            match ev {
+                MuxEvent::Terminal(frame) => return Ok(frame),
+                MuxEvent::Item(item) => last_item = Some(item),
+                MuxEvent::End => return Ok(reframe_ok(&last_item.unwrap_or_default())),
+                MuxEvent::Closed => return Err(closed_err()),
+            }
+        }
+    }
+
+    /// Open a server-push stream. The handle owns the correlation id:
+    /// dropping it early sends `CANCEL`.
+    fn open_stream(
+        client: &Arc<MuxClient>,
+        method: Method,
+        request: &[u8],
+    ) -> Result<ServerStream, FrameError> {
+        let (corr, rx) = client.register()?;
+        let mut body = Vec::with_capacity(1 + request.len());
+        body.push(method as u8);
+        body.extend_from_slice(request);
+        if let Err(e) = client.send(FrameKind::Request, corr, &body) {
+            client.forget(corr);
+            return Err(e);
+        }
+        Ok(ServerStream { client: Arc::clone(client), corr, rx, done: false })
+    }
+}
+
+impl Drop for MuxClient {
+    fn drop(&mut self) {
+        self.shared.dead.store(true, Ordering::Release);
+        {
+            // Unblock the parked reader: its next read returns 0 and the
+            // thread drains any stragglers before exiting.
+            let w = self.writer.lock();
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Background demux loop: route every inbound frame to the caller parked
+/// on its correlation id. Exits on EOF, an unreadable frame, or a
+/// protocol violation; every parked caller then observes `Closed`.
+fn reader_loop(stream: TcpStream, shared: Arc<MuxShared>) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        let (head, payload) = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        let frame = match parse_v2(head, payload) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        match frame.kind {
+            // Duplicate HELLO echo: harmless, ignore.
+            FrameKind::Hello => {}
+            FrameKind::Response => {
+                if let Some(tx) = shared.pending.lock().remove(&frame.corr) {
+                    let _ = tx.send(MuxEvent::Terminal(reframe_ok(&frame.body)));
+                }
+            }
+            FrameKind::Error => {
+                if let Some(tx) = shared.pending.lock().remove(&frame.corr) {
+                    let _ = tx.send(MuxEvent::Terminal(reframe_err(&frame.body)));
+                }
+            }
+            FrameKind::StreamItem => {
+                let mut pending = shared.pending.lock();
+                // A missing entry is a canceled id racing a late item:
+                // drop it silently. A closed receiver means the handle
+                // vanished without cancelling — stop routing to it.
+                let receiver_gone = match pending.get(&frame.corr) {
+                    Some(tx) => tx.send(MuxEvent::Item(frame.body)).is_err(),
+                    None => false,
+                };
+                if receiver_gone {
+                    pending.remove(&frame.corr);
+                }
+            }
+            FrameKind::StreamEnd => {
+                if let Some(tx) = shared.pending.lock().remove(&frame.corr) {
+                    let _ = tx.send(MuxEvent::End);
+                }
+            }
+            // The server never originates requests or cancels; the
+            // connection state is unknowable — tear it down.
+            FrameKind::Request | FrameKind::Cancel => break,
+        }
+    }
+    shared.dead.store(true, Ordering::Release);
+    let waiters: Vec<_> = shared.pending.lock().drain().map(|(_, tx)| tx).collect();
+    for tx in waiters {
+        let _ = tx.send(MuxEvent::Closed);
+    }
+}
+
+/// A server-push stream over a multiplexed v2 connection (one
+/// `WaitOperation` watch). Yields raw `STREAM_ITEM` payloads; dropping
+/// the handle before the end sends `CANCEL` so the server releases its
+/// watcher immediately.
+pub struct ServerStream {
+    client: Arc<MuxClient>,
+    corr: u32,
+    rx: mpsc::Receiver<MuxEvent>,
+    done: bool,
+}
+
+impl ServerStream {
+    /// The next item; `Ok(None)` at normal end of stream. A timeout
+    /// error leaves the stream usable — call again to keep waiting, or
+    /// drop the handle to cancel.
+    pub fn next(&mut self, timeout: Option<Duration>) -> Result<Option<Vec<u8>>, FrameError> {
+        if self.done {
+            return Ok(None);
+        }
+        let ev = MuxClient::recv(&self.rx, timeout)?;
+        match ev {
+            MuxEvent::Item(body) => Ok(Some(body)),
+            MuxEvent::End => {
+                self.done = true;
+                Ok(None)
+            }
+            MuxEvent::Terminal(frame) => {
+                self.done = true;
+                // A unary answer on a stream id: a v2 server that chose
+                // not to stream this method. Surface a success as the
+                // final item, an error as the error it is.
+                let (status, payload) = split_v1_frame(&frame);
+                if status == Status::Ok {
+                    Ok(Some(payload.to_vec()))
+                } else {
+                    Err(FrameError::Rpc {
+                        status,
+                        message: String::from_utf8_lossy(payload).into_owned(),
+                    })
+                }
+            }
+            MuxEvent::Closed => {
+                self.done = true;
+                Err(closed_err())
+            }
+        }
+    }
+}
+
+impl Drop for ServerStream {
+    fn drop(&mut self) {
+        if !self.done {
+            self.client.forget(self.corr);
+            let _ = self.client.send(FrameKind::Cancel, self.corr, &[]);
+        }
+    }
+}
+
+/// Re-frame a v2 RESPONSE body as v1 response bytes
+/// (`[u32 len][status][payload]`).
+fn reframe_ok(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + body.len());
+    out.extend_from_slice(&((1 + body.len()) as u32).to_le_bytes());
+    out.push(Status::Ok as u8);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Re-frame a v2 ERROR body (`[status][utf-8 message]`) the same way.
+fn reframe_err(body: &[u8]) -> Vec<u8> {
+    let (status, msg) = match body.split_first() {
+        Some((&s, rest)) => (s, rest),
+        None => (Status::Internal as u8, &[][..]),
+    };
+    let mut out = Vec::with_capacity(5 + msg.len());
+    out.extend_from_slice(&((1 + msg.len()) as u32).to_le_bytes());
+    out.push(status);
+    out.extend_from_slice(msg);
+    out
+}
+
+/// Split v1-shaped response bytes back into `(status, payload)`.
+fn split_v1_frame(frame: &[u8]) -> (Status, &[u8]) {
+    match frame.get(4) {
+        Some(&s) => (Status::from_u8(s), &frame[5..]),
+        None => (Status::Internal, &[][..]),
+    }
+}
+
+fn closed_err() -> FrameError {
+    FrameError::Io(std::io::Error::new(
+        std::io::ErrorKind::ConnectionAborted,
+        "multiplexed connection closed",
+    ))
 }
 
 /// In-process transport: calls the service directly, no sockets. The
@@ -158,6 +663,31 @@ impl Transport for LocalTransport {
     fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError> {
         Ok(dispatch_buf(&self.service, method, request))
     }
+}
+
+fn raw_write<W: std::io::Write>(w: &mut W, method: Method, payload: &[u8]) -> Result<(), FrameError> {
+    // write_request over a pre-encoded payload.
+    struct Pre<'a>(&'a [u8]);
+    impl WireMessage for Pre<'_> {
+        fn encode_fields(&self, out: &mut crate::wire::codec::Writer) {
+            out.raw_append(self.0);
+        }
+        fn decode_fields(_: &mut crate::wire::codec::Reader) -> Result<Self, crate::wire::codec::WireError> {
+            unreachable!("Pre is write-only")
+        }
+    }
+    write_request(w, method, &Pre(payload))
+}
+
+fn raw_read<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>, FrameError> {
+    // Return the whole response frame (head + payload) re-framed so
+    // `read_response` can parse it from a cursor.
+    let (head, payload) = read_frame(r)?;
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.extend_from_slice(&((1 + payload.len()) as u32).to_le_bytes());
+    out.push(head);
+    out.extend_from_slice(&payload);
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -188,15 +718,48 @@ mod tests {
     }
 
     #[test]
-    fn tcp_transport_roundtrip_and_reconnect() {
+    fn tcp_transport_v1_roundtrip_and_reconnect() {
         let svc = service();
         let server = crate::service::server::VizierServer::start(svc, "127.0.0.1:0").unwrap();
         let addr = server.local_addr().to_string();
         let mut t = TcpTransport::connect(&addr).unwrap();
+        // Pin to v1 to exercise the legacy framing against a server that
+        // would otherwise negotiate v2.
+        t.force_v1();
         let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
         // Simulate a dropped connection: the transport must reconnect.
         t.conn = None;
         let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_transport_negotiates_v2_and_shares_one_connection() {
+        let svc = service();
+        let server = crate::service::server::VizierServer::start(svc, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let mut t = TcpTransport::connect(&addr).unwrap();
+        if wire_v2_disabled() {
+            assert_eq!(t.wire_version(), 1);
+            server.shutdown();
+            return;
+        }
+        assert_eq!(t.wire_version(), 2, "HELLO probe must negotiate v2");
+        let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+
+        // A shared handle multiplexes over the same socket: calls from
+        // both handles (and from a second thread) complete.
+        let mut shared = t.try_share().expect("v2 transport must share");
+        let worker = std::thread::spawn(move || {
+            for _ in 0..4 {
+                let _: EmptyResponse =
+                    call(&mut shared, Method::Ping, &EmptyResponse::default()).unwrap();
+            }
+        });
+        for _ in 0..4 {
+            let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+        }
+        worker.join().unwrap();
         server.shutdown();
     }
 }

@@ -777,12 +777,12 @@ mod tests {
         // Study-level write then overwrite.
         ds.update_metadata(
             &s.name,
-            &[UnitMetadataUpdate { trial_id: 0, item: Some(item(b"v1")) }],
+            &[UnitMetadataUpdate { trial_id: 0, item: Some(item(b"v1")), new_trial_index: 0 }],
         )
         .unwrap();
         ds.update_metadata(
             &s.name,
-            &[UnitMetadataUpdate { trial_id: 0, item: Some(item(b"v2")) }],
+            &[UnitMetadataUpdate { trial_id: 0, item: Some(item(b"v2")), new_trial_index: 0 }],
         )
         .unwrap();
         let study = ds.get_study(&s.name).unwrap();
@@ -791,7 +791,7 @@ mod tests {
         // Trial-level write.
         ds.update_metadata(
             &s.name,
-            &[UnitMetadataUpdate { trial_id: 1, item: Some(item(b"t")) }],
+            &[UnitMetadataUpdate { trial_id: 1, item: Some(item(b"t")), new_trial_index: 0 }],
         )
         .unwrap();
         assert_eq!(ds.get_trial(&s.name, 1).unwrap().metadata[0].value, b"t");
@@ -799,7 +799,7 @@ mod tests {
         assert!(ds
             .update_metadata(
                 &s.name,
-                &[UnitMetadataUpdate { trial_id: 99, item: Some(item(b"x")) }],
+                &[UnitMetadataUpdate { trial_id: 99, item: Some(item(b"x")), new_trial_index: 0 }],
             )
             .is_err());
     }

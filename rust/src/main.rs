@@ -38,6 +38,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "wal-segment-bytes", takes_value: true, help: "segmented WAL: rotate the active segment at this size; compaction runs in the background without stalling commits (0 = single-file baseline, the default)" },
         OptSpec { name: "wal-serial-apply", takes_value: false, help: "one global commit lane instead of per-shard lanes (serialized-apply baseline)" },
         OptSpec { name: "wal-auto-compact-segments", takes_value: true, help: "auto-compact when more than N segment files exist (0 = manual only, the default; needs --wal-segment-bytes)" },
+        OptSpec { name: "wal-compact-amplification", takes_value: true, help: "auto-compact when the live log exceeds N x the last compaction base (bytes amplification; 0 = off, the default; needs --wal-segment-bytes)" },
         OptSpec { name: "workers", takes_value: true, help: "front-end worker-pool threads (default: CPU count)" },
         OptSpec { name: "idle-timeout-secs", takes_value: true, help: "evict connections idle longer than this (0 = never, the default)" },
         OptSpec { name: "max-connections", takes_value: true, help: "refuse connections beyond this many (0 = unlimited, the default)" },
@@ -95,6 +96,9 @@ fn main() {
                         segment_bytes: (segment_bytes > 0).then_some(segment_bytes),
                         auto_compact_segments: args
                             .get_u64("wal-auto-compact-segments", 0)
+                            .unwrap_or(0),
+                        compact_amplification: args
+                            .get_u64("wal-compact-amplification", 0)
                             .unwrap_or(0),
                     };
                     let ds = WalDatastore::open_with_options(&path, opts)

@@ -138,8 +138,15 @@ pub struct MetadataDelta {
     pub on_study: Metadata,
     /// Writes to individual trials' metadata, keyed by trial id. Trial
     /// ids must refer to *existing* trials — suggestions returned in the
-    /// same decision have no ids yet.
+    /// same decision are addressed through `on_new_trials` instead.
     pub on_trials: BTreeMap<u64, Metadata>,
+    /// Writes to the trials *being suggested in this decision*, keyed by
+    /// the suggestion's position in the decision (flattened across
+    /// groups, in want order). The suggestions have no trial ids yet;
+    /// the service resolves each index to the id the datastore assigned
+    /// at registration and persists these atomically with the batch's
+    /// delta — before any operation completes.
+    pub on_new_trials: BTreeMap<usize, Metadata>,
 }
 
 impl MetadataDelta {
@@ -147,12 +154,14 @@ impl MetadataDelta {
     pub fn for_study(md: Metadata) -> Self {
         Self {
             on_study: md,
-            on_trials: BTreeMap::new(),
+            ..Default::default()
         }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.on_study.is_empty() && self.on_trials.values().all(|m| m.is_empty())
+        self.on_study.is_empty()
+            && self.on_trials.values().all(|m| m.is_empty())
+            && self.on_new_trials.values().all(|m| m.is_empty())
     }
 
     /// Flatten to the wire representation (`trial_id == 0` targets the
@@ -162,6 +171,7 @@ impl MetadataDelta {
         for (ns, k, v) in self.on_study.iter() {
             out.push(UnitMetadataUpdate {
                 trial_id: 0,
+                new_trial_index: 0,
                 item: Some(MetadataItem {
                     namespace: ns.to_string(),
                     key: k.to_string(),
@@ -173,6 +183,22 @@ impl MetadataDelta {
             for (ns, k, v) in md.iter() {
                 out.push(UnitMetadataUpdate {
                     trial_id: *trial_id,
+                    new_trial_index: 0,
+                    item: Some(MetadataItem {
+                        namespace: ns.to_string(),
+                        key: k.to_string(),
+                        value: v.to_vec(),
+                    }),
+                });
+            }
+        }
+        // Placeholder writes: `new_trial_index` is the 1-based flattened
+        // suggestion position (0 = unset), resolved service-side.
+        for (idx, md) in &self.on_new_trials {
+            for (ns, k, v) in md.iter() {
+                out.push(UnitMetadataUpdate {
+                    trial_id: 0,
+                    new_trial_index: (*idx as u64) + 1,
                     item: Some(MetadataItem {
                         namespace: ns.to_string(),
                         key: k.to_string(),
@@ -189,7 +215,12 @@ impl MetadataDelta {
         let mut delta = Self::default();
         for u in updates {
             let Some(item) = &u.item else { continue };
-            let target = if u.trial_id == 0 {
+            let target = if u.new_trial_index > 0 {
+                delta
+                    .on_new_trials
+                    .entry((u.new_trial_index - 1) as usize)
+                    .or_default()
+            } else if u.trial_id == 0 {
                 &mut delta.on_study
             } else {
                 delta.on_trials.entry(u.trial_id).or_default()
@@ -430,10 +461,15 @@ mod tests {
         delta.on_study.put_str("designer.x", "state", "s");
         delta.on_trials.entry(7).or_default().put_str("ns", "k", "v");
         delta.on_trials.entry(9).or_default().put("ns", "b", vec![1u8, 2]);
+        delta.on_new_trials.entry(0).or_default().put_str("ns", "seed", "a");
+        delta.on_new_trials.entry(2).or_default().put_str("ns", "seed", "c");
         assert!(!delta.is_empty());
         let updates = delta.to_updates();
-        assert_eq!(updates.len(), 3);
-        assert!(updates.iter().any(|u| u.trial_id == 0));
+        assert_eq!(updates.len(), 5);
+        assert!(updates.iter().any(|u| u.trial_id == 0 && u.new_trial_index == 0));
+        // Placeholder entries carry the 1-based index, never a trial id.
+        assert!(updates.iter().any(|u| u.new_trial_index == 1));
+        assert!(updates.iter().any(|u| u.new_trial_index == 3));
         let back = MetadataDelta::from_updates(&updates);
         assert_eq!(back, delta);
     }

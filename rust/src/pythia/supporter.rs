@@ -14,6 +14,13 @@ use crate::wire::messages::{MetadataItem, UnitMetadataUpdate};
 use std::sync::Arc;
 
 /// Read/metadata access for policies.
+///
+/// Implementations are not required to be cheap to construct:
+/// `PythiaServer` keeps a pool of `RemoteSupporter`s (each owning one
+/// connection to the API server) and checks one out per policy run on
+/// its compute pool, so a supporter must tolerate being used from a
+/// different thread on every run — `Send + Sync` is load-bearing, not
+/// boilerplate.
 pub trait PolicySupporter: Send + Sync {
     /// Load any study's configuration (cross-study reads enable transfer
     /// learning).
@@ -85,6 +92,7 @@ impl PolicySupporter for DatastoreSupporter {
             .iter()
             .map(|(ns, k, v)| UnitMetadataUpdate {
                 trial_id: 0,
+                new_trial_index: 0,
                 item: Some(MetadataItem {
                     namespace: ns.to_string(),
                     key: k.to_string(),
@@ -105,6 +113,7 @@ impl PolicySupporter for DatastoreSupporter {
             .iter()
             .map(|(ns, k, v)| UnitMetadataUpdate {
                 trial_id,
+                new_trial_index: 0,
                 item: Some(MetadataItem {
                     namespace: ns.to_string(),
                     key: k.to_string(),

@@ -105,9 +105,63 @@ struct CoalesceState {
     claimed: HashSet<String>,
 }
 
+/// Releases a batch's claims even if the policy panics (the worker pool
+/// catches unwinds): leaked claims would leave the batch's ops
+/// permanently unservable — queue admission and resume both refuse
+/// claimed names.
+struct ClaimGuard<'a> {
+    coalesce: &'a Mutex<CoalesceState>,
+    names: &'a [String],
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        let mut state = self.coalesce.lock();
+        for name in self.names {
+            state.claimed.remove(name);
+        }
+    }
+}
+
+/// Claim a study's whole pending queue (or only its oldest entry when
+/// `coalescing` is off). Returns the claimed names, empty when the
+/// study had nothing queued.
+fn claim_batch(
+    coalesce: &Mutex<CoalesceState>,
+    study_name: &str,
+    coalescing: bool,
+) -> Vec<String> {
+    let state = &mut *coalesce.lock();
+    let Some(q) = state.queued.get_mut(study_name) else {
+        return Vec::new(); // another worker already drained this study
+    };
+    let batch = if coalescing {
+        std::mem::take(q)
+    } else if q.is_empty() {
+        Vec::new()
+    } else {
+        vec![q.remove(0)]
+    };
+    if q.is_empty() {
+        state.queued.remove(study_name);
+    }
+    state.claimed.extend(batch.iter().cloned());
+    batch
+}
+
 /// A parked completion callback: fired exactly once, with the final
 /// operation, when it completes.
 pub type OpWaiter = Box<dyn FnOnce(&OperationProto) + Send>;
+
+/// A streaming watcher (wire v2 `WaitOperation`): invoked with every
+/// observed operation state — the registration snapshot, each
+/// intermediate change, and the final `done` state. Returning `false`
+/// unregisters it. Callbacks run *under* the registry lock (rank
+/// `service.op_waiters` → `frontend.mux_corrs` → `frontend.mux_out` is
+/// ascending, and v2 stream sends never block — they buffer and park),
+/// which is what makes the watch/complete interleaving race-free without
+/// a second handshake.
+pub type OpStream = Box<dyn FnMut(&OperationProto) -> bool + Send>;
 
 /// Registry of operation watchers (op name -> parked waiters), the
 /// server half of `WaitOperation`: instead of clients busy-polling
@@ -123,28 +177,52 @@ pub type OpWaiter = Box<dyn FnOnce(&OperationProto) + Send>;
 /// cannot be disarmed by the event-loop sweep (it is service-agnostic);
 /// those fire into a dead ticket as a no-op and are bounded by the
 /// operation's lifetime.
+struct WaiterMap {
+    /// One-shot long-poll waiters (v1 `WaitOperation`).
+    once: HashMap<String, Vec<(u64, OpWaiter)>>,
+    /// Streaming watchers (v2 `WaitOperation`): op name -> stream id ->
+    /// callback, fed every state change until `done` or deregistration.
+    streams: HashMap<String, HashMap<u64, OpStream>>,
+}
+
 struct OpWaiters {
-    map: Mutex<HashMap<String, Vec<(u64, OpWaiter)>>>,
+    map: Mutex<WaiterMap>,
     next_id: AtomicU64,
 }
 
 impl Default for OpWaiters {
     fn default() -> Self {
         Self {
-            map: Mutex::new(&classes::SVC_WAITERS, HashMap::new()),
+            map: Mutex::new(
+                &classes::SVC_WAITERS,
+                WaiterMap {
+                    once: HashMap::new(),
+                    streams: HashMap::new(),
+                },
+            ),
             next_id: AtomicU64::new(0),
         }
     }
 }
 
 impl OpWaiters {
-    /// Fire-and-remove every waiter parked on `op.name`. Waiters run
-    /// outside the registry lock (they enqueue front-end write jobs or
-    /// send on channels; neither may deadlock against a concurrent
-    /// [`VizierService::watch_operation`]).
-    fn fire(&self, op: &OperationProto) {
-        let waiters = self.map.lock().remove(&op.name);
-        if let Some(ws) = waiters {
+    /// Fire-and-remove every watcher parked on `op.name`. Stream
+    /// callbacks get the final state under the registry lock (see
+    /// [`OpStream`]); one-shot waiters run outside it (they enqueue
+    /// front-end write jobs or send on channels; neither may deadlock
+    /// against a concurrent [`VizierService::watch_operation`]).
+    fn fire(&self, op: &OperationProto, metrics: &ServiceMetrics) {
+        let once = {
+            let mut map = self.map.lock();
+            if let Some(streams) = map.streams.remove(&op.name) {
+                for (_, mut cb) in streams {
+                    let _ = cb(op);
+                    metrics.dec_watch_streams();
+                }
+            }
+            map.once.remove(&op.name)
+        };
+        if let Some(ws) = once {
             for (_, w) in ws {
                 w(op);
             }
@@ -183,6 +261,11 @@ pub struct VizierService {
     pythia: Arc<dyn PythiaEndpoint>,
     workers: Mutex<Option<ThreadPool>>,
     coalesce: Mutex<CoalesceState>,
+    /// Early-stopping twin of `coalesce`: concurrent `CheckEarlyStopping`
+    /// operations on one study are served by a single policy invocation
+    /// over the union of their trial sets. A distinct instance of the
+    /// same lock class — the two are never held together.
+    es_coalesce: Mutex<CoalesceState>,
     waiters: OpWaiters,
     /// When false every suggest operation gets its own policy invocation
     /// (the v1 behaviour, kept as a benchmark baseline).
@@ -203,6 +286,7 @@ impl VizierService {
             pythia,
             workers: Mutex::new(&classes::SVC_WORKERS, Some(ThreadPool::new(workers.max(1)))),
             coalesce: Mutex::new(&classes::SVC_COALESCE, CoalesceState::default()),
+            es_coalesce: Mutex::new(&classes::SVC_COALESCE, CoalesceState::default()),
             waiters: OpWaiters::default(),
             coalescing: AtomicBool::new(true),
             draining: AtomicBool::new(false),
@@ -347,13 +431,13 @@ impl VizierService {
         Ok(OperationResponse { operation: op })
     }
 
-    /// Add a persisted suggest operation to its study's pending queue,
-    /// unless it is already queued or in flight. Every queue admission
-    /// counts once on the `in_flight_policy_jobs` gauge; the matching
-    /// decrement happens at completion (or at the claim-skip for an
-    /// operation a racing run already finished).
-    fn queue_suggest(&self, op_name: &str, study_name: &str) -> bool {
-        let state = &mut *self.coalesce.lock();
+    /// Add a persisted operation to a coalescing queue, unless it is
+    /// already queued or in flight. Every queue admission counts once on
+    /// the `in_flight_policy_jobs` gauge; the matching decrement happens
+    /// at completion (or at the claim-skip for an operation a racing run
+    /// already finished).
+    fn queue_into(&self, coalesce: &Mutex<CoalesceState>, op_name: &str, study_name: &str) -> bool {
+        let state = &mut *coalesce.lock();
         if state.claimed.contains(op_name) {
             return false;
         }
@@ -366,6 +450,14 @@ impl VizierService {
         true
     }
 
+    fn queue_suggest(&self, op_name: &str, study_name: &str) -> bool {
+        self.queue_into(&self.coalesce, op_name, study_name)
+    }
+
+    fn queue_early_stop(&self, op_name: &str, study_name: &str) -> bool {
+        self.queue_into(&self.es_coalesce, op_name, study_name)
+    }
+
     /// Persist a finished operation, release its slot on the in-flight
     /// gauge, and wake every parked `WaitOperation` watcher — the single
     /// exit point of the operation lifecycle (see `service/mod.rs`).
@@ -373,7 +465,31 @@ impl VizierService {
         debug_assert!(op.done, "complete_operation on a non-done operation");
         let _ = self.ds.update_operation(op.clone());
         self.metrics.dec_in_flight_policy_jobs();
-        self.waiters.fire(op);
+        self.waiters.fire(op, &self.metrics);
+    }
+
+    /// Push an intermediate (non-done) operation state to its streaming
+    /// watchers. Completion goes through
+    /// [`complete_operation`](Self::complete_operation), which also
+    /// closes the streams.
+    pub fn notify_operation(&self, op: &OperationProto) {
+        if op.done {
+            return;
+        }
+        let mut map = self.waiters.map.lock();
+        if let Some(streams) = map.streams.get_mut(&op.name) {
+            let dead: Vec<u64> = streams
+                .iter_mut()
+                .filter_map(|(&id, cb)| if cb(op) { None } else { Some(id) })
+                .collect();
+            for id in dead {
+                streams.remove(&id);
+                self.metrics.dec_watch_streams();
+            }
+            if streams.is_empty() {
+                map.streams.remove(&op.name);
+            }
+        }
     }
 
     /// Serve queued SuggestTrials operations for one study (worker
@@ -394,42 +510,13 @@ impl VizierService {
     /// One claim-serve cycle; returns false once the queue was empty.
     fn serve_one_suggest_batch(&self, study_name: &str, config: &StudyConfig) -> bool {
         // Claim the queue (or only its oldest entry with coalescing off).
-        let batch: Vec<String> = {
-            let state = &mut *self.coalesce.lock();
-            let Some(q) = state.queued.get_mut(study_name) else {
-                return false; // another worker already drained this study
-            };
-            let batch = if self.coalescing.load(Ordering::SeqCst) {
-                std::mem::take(q)
-            } else if q.is_empty() {
-                Vec::new()
-            } else {
-                vec![q.remove(0)]
-            };
-            if q.is_empty() {
-                state.queued.remove(study_name);
-            }
-            state.claimed.extend(batch.iter().cloned());
-            batch
-        };
+        let batch = claim_batch(
+            &self.coalesce,
+            study_name,
+            self.coalescing.load(Ordering::SeqCst),
+        );
         if batch.is_empty() {
             return false;
-        }
-        // Release the claims even if the policy panics (the worker pool
-        // catches unwinds): leaked claims would leave the batch's ops
-        // permanently unservable — queue_suggest and resume both refuse
-        // claimed names.
-        struct ClaimGuard<'a> {
-            coalesce: &'a Mutex<CoalesceState>,
-            names: &'a [String],
-        }
-        impl Drop for ClaimGuard<'_> {
-            fn drop(&mut self) {
-                let mut state = self.coalesce.lock();
-                for name in self.names {
-                    state.claimed.remove(name);
-                }
-            }
         }
         let _guard = ClaimGuard {
             coalesce: &self.coalesce,
@@ -468,13 +555,21 @@ impl VizierService {
                     // The unified delta (study- and trial-level writes) is
                     // one atomic datastore batch, persisted before any
                     // operation completes so policy state is never behind
-                    // a visible completion.
+                    // a visible completion. Placeholder writes addressed
+                    // at this decision's own suggestions
+                    // (`new_trial_index > 0`) cannot be applied yet — the
+                    // trials have no ids — so the delta is split: the
+                    // resolvable part persists now, the placeholder part
+                    // after registration assigns ids (still before any
+                    // completion).
+                    let (deferred, immediate): (Vec<_>, Vec<_>) = decision
+                        .metadata_delta
+                        .to_updates()
+                        .into_iter()
+                        .partition(|u| u.new_trial_index > 0);
                     let mut delta_err = String::new();
-                    if !decision.metadata_delta.is_empty() {
-                        if let Err(e) = self
-                            .ds
-                            .update_metadata(study_name, &decision.metadata_delta.to_updates())
-                        {
+                    if !immediate.is_empty() {
+                        if let Err(e) = self.ds.update_metadata(study_name, &immediate) {
                             delta_err = format!("failed to persist policy state: {e}");
                             self.metrics.record_error();
                         }
@@ -494,11 +589,30 @@ impl VizierService {
                     self.metrics.record_suggest_ops(ops.len() as u64);
                     // Group i answers want i; a misbehaving policy that
                     // returns fewer groups leaves the tail ops empty.
+                    // `slots` maps each flattened suggestion position to
+                    // the trial id registration assigned it (None when
+                    // that op's registration failed and rolled back).
                     let mut groups = decision.groups.into_iter();
+                    let mut slots: Vec<Option<u64>> = Vec::new();
                     for op in &mut ops {
                         let suggestions =
                             groups.next().map(|g| g.suggestions).unwrap_or_default();
+                        let n = suggestions.len();
                         self.register_suggestions(op, suggestions);
+                        if op.trials.len() == n {
+                            slots.extend(op.trials.iter().map(|t| Some(t.id)));
+                        } else {
+                            slots.extend(std::iter::repeat(None).take(n));
+                        }
+                    }
+                    let delta_err = self.persist_new_trial_delta(study_name, deferred, &slots);
+                    for op in &mut ops {
+                        if let Some(err) = &delta_err {
+                            // Trials are already registered and listed on
+                            // the op; surface the metadata failure without
+                            // hiding them.
+                            op.error = err.clone();
+                        }
                         op.done = true;
                         self.complete_operation(op);
                     }
@@ -572,6 +686,50 @@ impl VizierService {
         op.trials = registered;
     }
 
+    /// Resolve a decision's placeholder metadata (`new_trial[i]`, carried
+    /// as 1-based `new_trial_index`) against the trial ids registration
+    /// just assigned and persist the result as one atomic batch. Indices
+    /// pointing past the suggestion count or at a rolled-back
+    /// registration are dropped (counted as errors); returns the message
+    /// to surface on the batch's operations when the persist itself
+    /// fails.
+    fn persist_new_trial_delta(
+        &self,
+        study_name: &str,
+        deferred: Vec<UnitMetadataUpdate>,
+        slots: &[Option<u64>],
+    ) -> Option<String> {
+        if deferred.is_empty() {
+            return None;
+        }
+        let mut resolved = Vec::with_capacity(deferred.len());
+        let mut dropped = 0usize;
+        for mut u in deferred {
+            let idx = (u.new_trial_index - 1) as usize;
+            match slots.get(idx).copied().flatten() {
+                Some(id) => {
+                    u.trial_id = id;
+                    u.new_trial_index = 0;
+                    resolved.push(u);
+                }
+                None => dropped += 1,
+            }
+        }
+        if dropped > 0 {
+            self.metrics.record_error();
+        }
+        if resolved.is_empty() {
+            return None;
+        }
+        match self.ds.update_metadata(study_name, &resolved) {
+            Ok(()) => None,
+            Err(e) => {
+                self.metrics.record_error();
+                Some(format!("failed to persist suggestion metadata: {e}"))
+            }
+        }
+    }
+
     pub fn get_operation(&self, req: GetOperationRequest) -> ApiResult<OperationResponse> {
         Ok(OperationResponse {
             operation: self.ds.get_operation(&req.name)?,
@@ -595,8 +753,48 @@ impl VizierService {
         if op.done {
             return Ok(WatchResult::Done(op));
         }
-        map.entry(name.to_string()).or_default().push((id, waiter));
+        map.once.entry(name.to_string()).or_default().push((id, waiter));
         Ok(WatchResult::Parked(id))
+    }
+
+    /// Arm a streaming watcher (wire v2 `WaitOperation`): `cb` is invoked
+    /// immediately with the operation's current state, then once per
+    /// subsequent state change, and a final time with the `done` state.
+    /// Returns `Ok(None)` when no registration happened — the operation
+    /// was already done (the callback saw the final state) or the
+    /// callback declined by returning `false`; otherwise the id disarms
+    /// it via [`unwatch_stream`](Self::unwatch_stream).
+    ///
+    /// Race-free by the same argument as
+    /// [`watch_operation`](Self::watch_operation): the snapshot read and
+    /// the registration happen under the registry lock, and completion
+    /// persists `done` before taking that lock to fire.
+    pub fn watch_operation_stream(&self, name: &str, mut cb: OpStream) -> ApiResult<Option<u64>> {
+        let id = self.waiters.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.waiters.map.lock();
+        let op = self.ds.get_operation(name)?;
+        let keep = cb(&op);
+        if op.done || !keep {
+            return Ok(None);
+        }
+        map.streams.entry(name.to_string()).or_default().insert(id, cb);
+        self.metrics.inc_watch_streams();
+        Ok(Some(id))
+    }
+
+    /// Disarm a streaming watcher whose consumer went away (client
+    /// `CANCEL` or connection teardown). A no-op if the stream already
+    /// closed at completion.
+    pub fn unwatch_stream(&self, name: &str, id: u64) {
+        let mut map = self.waiters.map.lock();
+        if let Some(streams) = map.streams.get_mut(name) {
+            if streams.remove(&id).is_some() {
+                self.metrics.dec_watch_streams();
+            }
+            if streams.is_empty() {
+                map.streams.remove(name);
+            }
+        }
     }
 
     /// Disarm a parked waiter whose recipient stopped listening (its
@@ -605,10 +803,10 @@ impl VizierService {
     /// completion. A no-op if the waiter already fired.
     pub fn unwatch_operation(&self, name: &str, id: u64) {
         let mut map = self.waiters.map.lock();
-        if let Some(ws) = map.get_mut(name) {
+        if let Some(ws) = map.once.get_mut(name) {
             ws.retain(|(wid, _)| *wid != id);
             if ws.is_empty() {
-                map.remove(name);
+                map.once.remove(name);
             }
         }
     }
@@ -664,6 +862,7 @@ impl VizierService {
         // fast worker cannot drain a study's queue while later pending
         // operations of the same study are still being pushed.
         let mut kick: Vec<(String, StudyConfig)> = Vec::new();
+        let mut es_kick: Vec<(String, StudyConfig)> = Vec::new();
         for op in pending {
             let study = self.ds.get_study(&op.study_name)?;
             let config = converters::study_config_from_proto(&study.display_name, &study.spec);
@@ -675,14 +874,18 @@ impl VizierService {
                     }
                 }
                 OperationKind::EarlyStopping => {
-                    let name = op.name.clone();
-                    self.metrics.inc_in_flight_policy_jobs();
-                    self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
+                    let fresh = self.queue_early_stop(&op.name, &op.study_name);
+                    if fresh && !es_kick.iter().any(|(s, _)| s == &op.study_name) {
+                        es_kick.push((op.study_name.clone(), config));
+                    }
                 }
             }
         }
         for (study_name, config) in kick {
             self.enqueue(move |svc| svc.run_suggest_batch(&study_name, &config));
+        }
+        for (study_name, config) in es_kick {
+            self.enqueue(move |svc| svc.run_early_stop_batch(&study_name, &config));
         }
         Ok(n)
     }
@@ -815,12 +1018,74 @@ impl VizierService {
     /// Counter snapshot over an RPC (Pythia v2 follow-up (c)): the
     /// coalescing ratio, async-dispatch gauges, and front-end occupancy
     /// without shelling into the server for `ServiceMetrics::report`.
+    ///
+    /// The response is fully structured — every counter, gauge, and
+    /// latency histogram the server tracks, by name (`frontend.*` /
+    /// `wal.*` entries appear only when those subsystems are linked).
+    /// Text rendering lives client-side in
+    /// [`crate::client::VizierClient::service_metrics`]; the retired
+    /// server-rendered `report` field is left empty.
     pub fn get_service_metrics(
         &self,
         _req: GetServiceMetricsRequest,
     ) -> ApiResult<ServiceMetricsResponse> {
+        use crate::service::metrics::Histogram;
         let m = &self.metrics;
         let fe = m.frontend();
+        let wal = m.wal();
+
+        fn point(name: &str, value: u64) -> MetricPointProto {
+            MetricPointProto {
+                name: name.to_string(),
+                value,
+            }
+        }
+        fn histo(name: &str, h: &Histogram) -> MetricHistogramProto {
+            MetricHistogramProto {
+                name: name.to_string(),
+                count: h.count(),
+                sum_us: h.sum_micros(),
+                p50_us: h.quantile_micros(0.5),
+                p99_us: h.quantile_micros(0.99),
+                buckets: h.bucket_counts(),
+            }
+        }
+
+        let mut counters = vec![
+            point("errors", m.errors.load(Ordering::Relaxed)),
+            point("policy_runs", m.policy_runs()),
+            point("suggest_ops_served", m.suggest_ops_served()),
+        ];
+        let mut gauges = vec![
+            point("in_flight_policy_jobs", m.in_flight_policy_jobs()),
+            point("watch_streams", m.watch_streams()),
+        ];
+        let mut histograms = vec![histo("wait_wakeup", &m.wait_wakeup)];
+        for (name, h) in m.method_histograms() {
+            histograms.push(histo(&format!("method.{name}"), &h));
+        }
+        if let Some(f) = &fe {
+            counters.push(point("frontend.connections_total", f.connections_total()));
+            counters.push(point("frontend.requests", f.requests()));
+            counters.push(point("frontend.idle_evictions", f.idle_evictions()));
+            counters.push(point("frontend.connections_refused", f.connections_refused()));
+            counters.push(point("frontend.loop_wakeups", f.loop_wakeups()));
+            counters.push(point("frontend.loop_scan_cost", f.loop_scan_cost()));
+            gauges.push(point("frontend.active_connections", f.active_connections()));
+            gauges.push(point("frontend.queue_depth", f.queue_depth()));
+            gauges.push(point("frontend.parked_responses", f.parked_responses()));
+            histograms.push(histo("frontend.queue_wait", &f.queue_wait));
+        }
+        if let Some(w) = &wal {
+            counters.push(point("wal.rotations", w.rotations()));
+            counters.push(point("wal.compactions", w.compactions()));
+            counters.push(point("wal.reclaimed_bytes", w.reclaimed_bytes()));
+            gauges.push(point("wal.segments", w.segments()));
+            gauges.push(point("wal.commit_stall_max_us", w.commit_stall_max_micros()));
+            histograms.push(histo("wal.compaction", &w.compaction_micros));
+            histograms.push(histo("wal.commit_wait", &w.commit_wait));
+        }
+
         Ok(ServiceMetricsResponse {
             policy_runs: m.policy_runs(),
             suggest_ops_served: m.suggest_ops_served(),
@@ -832,7 +1097,10 @@ impl VizierService {
             parked_responses: fe.as_ref().map_or(0, |f| f.parked_responses()),
             connections_total: fe.as_ref().map_or(0, |f| f.connections_total()),
             requests: fe.as_ref().map_or(0, |f| f.requests()),
-            report: m.report(),
+            report: String::new(),
+            counters,
+            gauges,
+            histograms,
         })
     }
 
@@ -901,86 +1169,99 @@ impl VizierService {
             created_ms: epoch_millis(),
             ..Default::default()
         })?;
-        let name = op.name.clone();
         let config = converters::study_config_from_proto(&study.display_name, &study.spec);
-        self.metrics.inc_in_flight_policy_jobs();
-        self.enqueue(move |svc| svc.run_early_stopping_operation(&name, &config));
+        self.queue_early_stop(&op.name, &req.study_name);
+        let study_name = req.study_name.clone();
+        self.enqueue(move |svc| svc.run_early_stop_batch(&study_name, &config));
         Ok(OperationResponse { operation: op })
     }
 
-    fn run_early_stopping_operation(&self, op_name: &str, config: &StudyConfig) {
-        use crate::pythia::policy::EarlyStopDecision;
-        let Ok(mut op) = self.ds.get_operation(op_name) else {
-            self.metrics.dec_in_flight_policy_jobs();
-            return;
-        };
-        if op.done {
-            // A duplicate resume raced a completed run: release the
-            // gauge slot this job was admitted with.
-            self.metrics.dec_in_flight_policy_jobs();
-            return;
-        }
-        let result: Result<Vec<EarlyStopDecision>, String> = (|| {
-            // Empty = every trial that is ACTIVE right now.
-            let trial_ids: Vec<u64> = if op.trial_ids.is_empty() {
-                self.ds
-                    .query_trials(
-                        &op.study_name,
-                        &crate::datastore::query::TrialFilter::active(),
-                    )
-                    .map_err(|e| e.to_string())?
-                    .iter()
-                    .map(|t| t.id)
-                    .collect()
-            } else {
-                op.trial_ids.clone()
-            };
-            // Built-in automated stopping rule, if configured (Appendix
-            // B.1): the completed pool is read once for the whole batch.
-            if config.stopping.kind != StoppingKind::None {
-                let completed: Vec<crate::pyvizier::Trial> = self
-                    .ds
-                    .query_trials(
-                        &op.study_name,
-                        &crate::datastore::query::TrialFilter::completed(),
-                    )
-                    .map_err(|e| e.to_string())?
-                    .iter()
-                    .map(converters::trial_from_proto)
-                    .collect();
-                let mut out = Vec::with_capacity(trial_ids.len());
-                for id in trial_ids {
-                    // A trial deleted while the operation was queued gets
-                    // no verdict; it must not fail the rest of the batch.
-                    let Ok(proto) = self.ds.get_trial(&op.study_name, id) else {
-                        continue;
-                    };
-                    let trial = converters::trial_from_proto(&proto);
-                    let d = crate::stopping::decide(config, &trial, &completed);
-                    out.push(EarlyStopDecision {
-                        trial_id: id,
-                        should_stop: d.should_stop,
-                        reason: d.reason,
-                    });
-                }
-                Ok(out)
-            } else {
-                // Otherwise one policy invocation serves the whole batch.
-                self.pythia
-                    .run_early_stop(&EarlyStopRequest {
-                        study_name: op.study_name.clone(),
-                        study_config: config.clone(),
-                        trial_ids,
-                    })
-                    .map_err(|e| e.to_string())
+    /// Serve queued EarlyStopping operations for one study (worker
+    /// thread), the early-stop twin of
+    /// [`run_suggest_batch`](Self::run_suggest_batch): each claim takes
+    /// the study's whole queue, unions the claimed operations' trial
+    /// sets, and runs **one** policy invocation (or one built-in-rule
+    /// pass) for the union. Each operation then completes with the
+    /// verdicts for its own requested subset.
+    fn run_early_stop_batch(&self, study_name: &str, config: &StudyConfig) {
+        loop {
+            if !self.serve_one_early_stop_batch(study_name, config) {
+                return;
             }
-        })();
-        match result {
+        }
+    }
+
+    /// One claim-serve cycle; returns false once the queue was empty.
+    fn serve_one_early_stop_batch(&self, study_name: &str, config: &StudyConfig) -> bool {
+        let batch = claim_batch(
+            &self.es_coalesce,
+            study_name,
+            self.coalescing.load(Ordering::SeqCst),
+        );
+        if batch.is_empty() {
+            return false;
+        }
+        let _guard = ClaimGuard {
+            coalesce: &self.es_coalesce,
+            names: &batch,
+        };
+
+        // Load the claimed operations, skipping any already completed
+        // (e.g. a duplicate resume that raced a live run) — a skipped
+        // entry still consumed a queue admission, so its gauge slot is
+        // released here, which is what keeps crash-resume re-coalescing
+        // without double-serving.
+        let mut ops: Vec<OperationProto> = Vec::with_capacity(batch.len());
+        for name in &batch {
+            match self.ds.get_operation(name) {
+                Ok(op) if !op.done => ops.push(op),
+                _ => self.metrics.dec_in_flight_policy_jobs(),
+            }
+        }
+        if ops.is_empty() {
+            return true;
+        }
+
+        // Union the batch's trial sets. An operation with an empty
+        // `trial_ids` means "every trial ACTIVE right now"; resolve that
+        // once for the whole batch and remember the resolution so the
+        // operation's own verdict subset matches it.
+        let wants_all = ops.iter().any(|op| op.trial_ids.is_empty());
+        let all_active: Vec<u64> = if wants_all {
+            match self
+                .ds
+                .query_trials(study_name, &crate::datastore::query::TrialFilter::active())
+            {
+                Ok(trials) => trials.iter().map(|t| t.id).collect(),
+                Err(e) => {
+                    let msg = e.to_string();
+                    self.metrics.record_error();
+                    for op in &mut ops {
+                        op.error = msg.clone();
+                        op.done = true;
+                        self.complete_operation(op);
+                    }
+                    return true;
+                }
+            }
+        } else {
+            Vec::new()
+        };
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut union_ids: Vec<u64> = Vec::new();
+        for &id in all_active.iter().chain(ops.iter().flat_map(|op| op.trial_ids.iter())) {
+            if seen.insert(id) {
+                union_ids.push(id);
+            }
+        }
+
+        match self.early_stop_decisions(study_name, config, union_ids) {
             Ok(decisions) => {
                 for d in &decisions {
                     if d.should_stop {
-                        // Move the trial to STOPPING so the worker sees it.
-                        let _ = self.ds.mutate_trial(&op.study_name, d.trial_id, &mut |t| {
+                        // Move the trial to STOPPING so the worker sees it
+                        // (once per batch, not once per operation).
+                        let _ = self.ds.mutate_trial(study_name, d.trial_id, &mut |t| {
                             if matches!(t.state, TrialState::Active | TrialState::Requested) {
                                 t.state = TrialState::Stopping;
                             }
@@ -988,14 +1269,81 @@ impl VizierService {
                         });
                     }
                 }
-                op.stop_decisions = decisions.iter().map(TrialStopDecision::from).collect();
+                let by_id: HashMap<u64, &crate::pythia::policy::EarlyStopDecision> =
+                    decisions.iter().map(|d| (d.trial_id, d)).collect();
+                for op in &mut ops {
+                    let subset: &[u64] = if op.trial_ids.is_empty() {
+                        &all_active
+                    } else {
+                        &op.trial_ids
+                    };
+                    op.stop_decisions = subset
+                        .iter()
+                        .filter_map(|id| by_id.get(id))
+                        .map(|d| TrialStopDecision::from(*d))
+                        .collect();
+                    op.done = true;
+                    self.complete_operation(op);
+                }
             }
             Err(e) => {
-                op.error = e;
                 self.metrics.record_error();
+                for op in &mut ops {
+                    op.error = e.clone();
+                    op.done = true;
+                    self.complete_operation(op);
+                }
             }
         }
-        op.done = true;
-        self.complete_operation(&op);
+        true
+    }
+
+    /// Compute stop verdicts for `trial_ids` — via the built-in automated
+    /// stopping rule when configured (Appendix B.1; the completed pool is
+    /// read once for the whole batch), otherwise via one Pythia policy
+    /// invocation.
+    fn early_stop_decisions(
+        &self,
+        study_name: &str,
+        config: &StudyConfig,
+        trial_ids: Vec<u64>,
+    ) -> Result<Vec<crate::pythia::policy::EarlyStopDecision>, String> {
+        use crate::pythia::policy::EarlyStopDecision;
+        if config.stopping.kind != StoppingKind::None {
+            let completed: Vec<crate::pyvizier::Trial> = self
+                .ds
+                .query_trials(
+                    study_name,
+                    &crate::datastore::query::TrialFilter::completed(),
+                )
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(converters::trial_from_proto)
+                .collect();
+            let mut out = Vec::with_capacity(trial_ids.len());
+            for id in trial_ids {
+                // A trial deleted while the operation was queued gets no
+                // verdict; it must not fail the rest of the batch.
+                let Ok(proto) = self.ds.get_trial(study_name, id) else {
+                    continue;
+                };
+                let trial = converters::trial_from_proto(&proto);
+                let d = crate::stopping::decide(config, &trial, &completed);
+                out.push(EarlyStopDecision {
+                    trial_id: id,
+                    should_stop: d.should_stop,
+                    reason: d.reason,
+                });
+            }
+            Ok(out)
+        } else {
+            self.pythia
+                .run_early_stop(&EarlyStopRequest {
+                    study_name: study_name.to_string(),
+                    study_config: config.clone(),
+                    trial_ids,
+                })
+                .map_err(|e| e.to_string())
+        }
     }
 }

@@ -42,27 +42,47 @@
 //!   threads, unlike the old front-end which leaked its `vizier-conn`
 //!   threads.
 //!
+//! * **Wire-v2 multiplexing** (`rust/docs/WIRE.md`): a connection whose
+//!   first frame is a v2 `HELLO` upgrades to the multiplexed protocol.
+//!   The event loop *keeps* the connection (it never hands ownership to
+//!   a worker); each complete `REQUEST` frame becomes an independent
+//!   [`Job::Mux`] tagged with its correlation id, answered through a
+//!   thread-safe [`MuxSink`] over a shared per-connection out-buffer
+//!   ([`MuxConn`]) — many requests in flight on one connection, answers
+//!   in completion order. A per-connection in-flight cap throttles the
+//!   read side (the loop deregisters read interest at the cap and
+//!   re-arms when a request completes); `CANCEL` frames and connection
+//!   death run per-correlation cancel hooks so server-side watchers
+//!   never leak.
+//!
 //! [`FrontendMetrics`] tracks the `active_connections` and
 //! `parked_responses` gauges, queue depth and queue-wait histogram; the
 //! `C-FRONTEND` and `C-ASYNC-DISPATCH` benches drive 1000+ mostly-idle
 //! connections / 3x-oversubscribed policy fleets through this module and
 //! assert the thread budget stays at `workers + 2`.
 //!
-//! The two locks here are registered with
-//! [`crate::util::sync::classes`]: `frontend.park_slots` is always taken
-//! before (or released before taking) `frontend.job_queue` — completion
-//! hooks drop the slots guard before `push_job`. Checked under lockdep;
-//! see `rust/docs/INVARIANTS.md` for the full hierarchy.
+//! The locks here are registered with [`crate::util::sync::classes`]:
+//! `frontend.park_slots` is always taken before (or released before
+//! taking) `frontend.job_queue` — completion hooks drop the slots guard
+//! before `push_job` — and the per-connection `frontend.mux_corrs` →
+//! `frontend.mux_out` pair nests inside the service watcher registry and
+//! outside nothing. Checked under lockdep; see `rust/docs/INVARIANTS.md`
+//! for the full hierarchy.
 
 use crate::service::metrics::FrontendMetrics;
 use crate::util::netpoll::{Poller, PollerKind, WakePipe, EV_READ, EV_WRITE};
 use crate::util::sync::{classes, Condvar, Mutex};
-use crate::wire::framing::{FrameProgress, FrameReader};
+use crate::wire::codec::{decode as wire_decode, encode as wire_encode, WireMessage};
+use crate::wire::framing::{
+    encode_v2, is_v2_head, parse_v2, FrameKind, FrameProgress, FrameReader, Status,
+    WIRE_VERSION_MAX,
+};
+use crate::wire::messages::HelloProto;
 use std::cell::Cell;
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::os::unix::io::AsRawFd;
+use std::os::unix::io::{AsRawFd, RawFd};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc};
@@ -105,6 +125,24 @@ pub trait ConnectionHandler: Send + Sync + 'static {
         out: &mut Vec<u8>,
         cx: &RequestContext<'_>,
     ) -> HandleOutcome;
+
+    /// Handle one multiplexed (wire-v2) request. Unlike [`handle`], the
+    /// connection is *not* exclusively owned — many requests on the same
+    /// connection run concurrently — so there is no per-connection state
+    /// and no out-buffer: every answer (unary response, stream items, or
+    /// an error) goes through the [`MuxSink`], from this thread or any
+    /// later one. Dropping the sink without a terminal send answers the
+    /// client with an internal error, so a lost sink can never hang a
+    /// correlation id.
+    ///
+    /// The default rejects v2 requests; endpoints opt in by overriding.
+    /// (v1 clients are unaffected — they never reach this path.)
+    ///
+    /// [`handle`]: ConnectionHandler::handle
+    fn handle_mux(&self, method: u8, payload: &[u8], sink: MuxSink) {
+        let _ = (method, payload);
+        sink.error(Status::Unimplemented, "wire v2 not supported by this endpoint");
+    }
 }
 
 /// Tuning knobs for a [`FrontendServer`].
@@ -137,6 +175,12 @@ pub struct FrontendOptions {
     pub poller: PollerKind,
     /// Metrics sink; supply one to share with [`super::metrics::ServiceMetrics`].
     pub metrics: Option<Arc<FrontendMetrics>>,
+    /// Per-connection cap on concurrently in-flight wire-v2 requests
+    /// (advertised in the HELLO reply). At the cap the event loop stops
+    /// reading the connection until a request completes — per-connection
+    /// backpressure, mirroring the queue-level backpressure v1 gets from
+    /// one-request-per-connection. 0 = [`DEFAULT_MUX_INFLIGHT`].
+    pub mux_max_inflight: usize,
 }
 
 impl Default for FrontendOptions {
@@ -150,9 +194,13 @@ impl Default for FrontendOptions {
             max_connections: 0,
             poller: PollerKind::from_env(),
             metrics: None,
+            mux_max_inflight: 0,
         }
     }
 }
+
+/// Default per-connection in-flight cap for multiplexed connections.
+pub const DEFAULT_MUX_INFLIGHT: usize = 64;
 
 /// Default worker count: the machine's CPU parallelism (the paper's
 /// fixed `max_workers=100` sized for Google's servers; CPUs is the right
@@ -174,6 +222,15 @@ struct Conn<S> {
     reader: FrameReader,
     state: S,
     metrics: Arc<FrontendMetrics>,
+    /// Present once the connection negotiated wire v2 (first frame was a
+    /// HELLO). Multiplexed connections stay owned by the event loop; the
+    /// shared half referenced here is what worker-side [`MuxSink`]s
+    /// answer through.
+    mux: Option<Arc<MuxConn>>,
+    /// Set the moment the first frame turns out to be v1: the connection
+    /// is served by the v1 path forever (a later 0xE0.. head byte is an
+    /// invalid v1 method, never a handshake).
+    v1_locked: bool,
 }
 
 impl<S> Drop for Conn<S> {
@@ -182,6 +239,427 @@ impl<S> Drop for Conn<S> {
         // wherever the connection dies (event loop, worker, queue drop,
         // parked-registry teardown).
         self.metrics.conn_closed();
+    }
+}
+
+/// Event-loop maintenance notes from worker-side mux sends, drained with
+/// the re-arm channel. Both carry the connection's read token.
+enum MuxNote {
+    /// The out-buffer parked on `WouldBlock` (register write interest) —
+    /// or died (the loop observes `is_dead` and reaps).
+    WritePark(u64),
+    /// A request completed below the in-flight cap: re-register read
+    /// interest for a throttled connection.
+    ReadRearm(u64),
+}
+
+/// One in-flight correlation id on a multiplexed connection.
+struct CorrEntry {
+    /// The client sent CANCEL: suppress every later send for this id.
+    /// The entry stays until the sink's terminal send retires it, so a
+    /// recycled correlation id cannot alias the canceled request.
+    canceled: bool,
+    /// Runs (outside all locks) when the request is canceled or the
+    /// connection dies — handlers park stream/watch cleanup here.
+    on_cancel: Option<Box<dyn FnOnce() + Send>>,
+}
+
+/// Correlation-id registry for one multiplexed connection. The note
+/// sender lives inside the mutex so [`MuxConn`] stays `Sync` without
+/// requiring `Sender: Sync`.
+struct MuxCorrs {
+    active: HashMap<u32, CorrEntry>,
+    /// Live (not canceled) requests; drives the in-flight cap.
+    inflight: usize,
+    notes: Sender<MuxNote>,
+}
+
+/// Write half of a multiplexed connection: a shared out-buffer over a
+/// dup'd fd. Sinks append frames here from any thread; a send that hits
+/// `WouldBlock` parks the buffer and the event loop drains it on
+/// writability — same slow-reader contract as v1 write parking.
+struct MuxOut {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    off: usize,
+    parked: bool,
+    parked_since: Instant,
+    /// A write failed or the connection was closed: drop all sends.
+    dead: bool,
+    notes: Sender<MuxNote>,
+}
+
+/// The shared half of a wire-v2 connection. The event loop keeps the
+/// read half (frame assembly, CANCEL handling, throttling); every
+/// in-flight request holds an `Arc` of this through its [`MuxSink`].
+///
+/// Lock order: `corrs` (`frontend.mux_corrs`) before `out`
+/// (`frontend.mux_out`); both nest inside the service watcher registry
+/// so streaming watchers may send while holding it.
+struct MuxConn {
+    /// The read token the event loop knows this connection by.
+    token: u64,
+    max_inflight: usize,
+    /// Read interest withdrawn at the in-flight cap. Set by the loop,
+    /// cleared (with a [`MuxNote::ReadRearm`]) by the completing send;
+    /// both transitions happen under the `corrs` lock so a completion
+    /// racing the throttle decision cannot strand the connection.
+    throttled: AtomicBool,
+    wake: Arc<WakePipe>,
+    metrics: Arc<FrontendMetrics>,
+    corrs: Mutex<MuxCorrs>,
+    out: Mutex<MuxOut>,
+}
+
+impl MuxConn {
+    fn write_fd(&self) -> RawFd {
+        self.out.lock().stream.as_raw_fd()
+    }
+
+    fn is_dead(&self) -> bool {
+        self.out.lock().dead
+    }
+
+    /// Anything that must keep the connection alive past idle eviction:
+    /// in-flight requests (including streams) or undelivered bytes.
+    fn busy(&self) -> bool {
+        if self.corrs.lock().inflight > 0 {
+            return true;
+        }
+        let out = self.out.lock();
+        out.parked && !out.dead
+    }
+
+    fn parked_expired(&self, cap: Duration, now: Instant) -> bool {
+        let out = self.out.lock();
+        out.parked && !out.dead && now.duration_since(out.parked_since) > cap
+    }
+
+    /// Admit a new correlation id. `false` = duplicate (protocol
+    /// violation; the caller closes the connection).
+    fn begin_request(&self, corr: u32) -> bool {
+        let mut c = self.corrs.lock();
+        if c.active.contains_key(&corr) {
+            return false;
+        }
+        c.active.insert(corr, CorrEntry { canceled: false, on_cancel: None });
+        c.inflight += 1;
+        true
+    }
+
+    /// Called by the event loop after admitting a request: decide — under
+    /// the same lock completions take — whether to withdraw read
+    /// interest. A completion that lands first leaves `inflight` below
+    /// the cap and no throttle happens; one that lands after sees the
+    /// flag and re-arms.
+    fn try_throttle(&self) -> bool {
+        let c = self.corrs.lock();
+        if c.inflight >= self.max_inflight {
+            self.throttled.store(true, Ordering::SeqCst);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Client CANCEL (or client drop). Returns the handler's cancel hook
+    /// to run outside all locks. The entry is retained (marked canceled)
+    /// until the terminal send retires it.
+    fn cancel_corr(&self, corr: u32) -> Option<Box<dyn FnOnce() + Send>> {
+        let mut c = self.corrs.lock();
+        match c.active.get_mut(&corr) {
+            Some(e) if !e.canceled => {
+                e.canceled = true;
+                c.inflight = c.inflight.saturating_sub(1);
+                let hook = e.on_cancel.take();
+                if self.throttled.swap(false, Ordering::SeqCst) {
+                    let _ = c.notes.send(MuxNote::ReadRearm(self.token));
+                    self.wake.wake();
+                }
+                hook
+            }
+            _ => None,
+        }
+    }
+
+    fn corr_canceled(&self, corr: u32) -> bool {
+        match self.corrs.lock().active.get(&corr) {
+            Some(e) => e.canceled,
+            // Retired (terminal sent) or the connection died.
+            None => true,
+        }
+    }
+
+    /// Install a cancel hook; hands it back when the request is already
+    /// canceled/gone so the caller can run it immediately (outside the
+    /// lock).
+    fn set_cancel_hook(
+        &self,
+        corr: u32,
+        hook: Box<dyn FnOnce() + Send>,
+    ) -> Option<Box<dyn FnOnce() + Send>> {
+        let mut c = self.corrs.lock();
+        match c.active.get_mut(&corr) {
+            Some(e) if !e.canceled => {
+                e.on_cancel = Some(hook);
+                None
+            }
+            _ => Some(hook),
+        }
+    }
+
+    /// Send the frame that finishes a correlation id (RESPONSE,
+    /// STREAM_END, or ERROR), retiring its entry and re-arming a
+    /// throttled read side. Canceled/retired ids send nothing.
+    fn send_terminal(&self, corr: u32, kind: FrameKind, body: &[u8]) {
+        let deliver = {
+            let mut c = self.corrs.lock();
+            match c.active.remove(&corr) {
+                // CANCEL already decremented inflight and unthrottled.
+                Some(e) if e.canceled => false,
+                Some(_) => {
+                    c.inflight = c.inflight.saturating_sub(1);
+                    if self.throttled.swap(false, Ordering::SeqCst) {
+                        let _ = c.notes.send(MuxNote::ReadRearm(self.token));
+                        self.wake.wake();
+                    }
+                    true
+                }
+                None => false,
+            }
+        };
+        if !deliver {
+            return;
+        }
+        match encode_v2(kind, corr, body) {
+            Ok(frame) => self.send_raw(&frame),
+            Err(_) => {
+                // Oversized response: the client must still see the id
+                // terminate. The error body always fits.
+                let mut eb = vec![Status::Internal as u8];
+                eb.extend_from_slice(b"response exceeds frame limit");
+                if let Ok(frame) = encode_v2(FrameKind::Error, corr, &eb) {
+                    self.send_raw(&frame);
+                }
+            }
+        }
+    }
+
+    /// Send a non-terminal STREAM_ITEM; dropped silently once the id is
+    /// canceled or retired.
+    fn send_item(&self, corr: u32, body: &[u8]) {
+        let alive = {
+            let c = self.corrs.lock();
+            matches!(c.active.get(&corr), Some(e) if !e.canceled)
+        };
+        if !alive {
+            return;
+        }
+        if let Ok(frame) = encode_v2(FrameKind::StreamItem, corr, body) {
+            self.send_raw(&frame);
+        }
+    }
+
+    /// Append a complete frame to the out-buffer and flush as much as
+    /// the socket accepts. `WouldBlock` parks the buffer (the event loop
+    /// takes over on writability); a hard error marks the connection
+    /// dead and asks the loop to reap it.
+    fn send_raw(&self, frame: &[u8]) {
+        let mut out = self.out.lock();
+        if out.dead {
+            return;
+        }
+        out.buf.extend_from_slice(frame);
+        if !out.parked {
+            self.flush_locked(&mut out);
+        }
+    }
+
+    /// Event loop, on writability: drain what the socket will take.
+    /// Returns `(still_parked, dead)`.
+    fn flush_ready(&self) -> (bool, bool) {
+        let mut out = self.out.lock();
+        if out.dead {
+            return (false, true);
+        }
+        self.flush_locked(&mut out);
+        (out.parked, out.dead)
+    }
+
+    fn flush_locked(&self, out: &mut MuxOut) {
+        loop {
+            if out.off >= out.buf.len() {
+                out.buf.clear();
+                out.off = 0;
+                if out.parked {
+                    out.parked = false;
+                    self.metrics.parked_dec();
+                }
+                return;
+            }
+            let res = { Write::write(&mut out.stream, &out.buf[out.off..]) };
+            match res {
+                Ok(0) => return self.die_locked(out),
+                Ok(n) => out.off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if !out.parked {
+                        out.parked = true;
+                        out.parked_since = Instant::now();
+                        self.metrics.parked_inc();
+                        let _ = out.notes.send(MuxNote::WritePark(self.token));
+                        self.wake.wake();
+                    }
+                    return;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return self.die_locked(out),
+            }
+        }
+    }
+
+    fn die_locked(&self, out: &mut MuxOut) {
+        out.dead = true;
+        out.buf.clear();
+        out.off = 0;
+        if out.parked {
+            out.parked = false;
+            self.metrics.parked_dec();
+        }
+        // The loop routes WritePark to either "register write interest"
+        // or "reap" by checking is_dead.
+        let _ = out.notes.send(MuxNote::WritePark(self.token));
+        self.wake.wake();
+    }
+
+    /// Tear the connection down: kill the write half (shutting the
+    /// socket down so the peer sees EOF even while sinks still hold
+    /// `Arc`s of the dup'd fd) and cancel every in-flight request.
+    /// Returns the cancel hooks for the caller to run outside all locks.
+    #[must_use]
+    fn close(&self) -> Vec<Box<dyn FnOnce() + Send>> {
+        let mut hooks = Vec::new();
+        {
+            let mut c = self.corrs.lock();
+            for (_corr, e) in c.active.drain() {
+                if !e.canceled {
+                    if let Some(h) = e.on_cancel {
+                        hooks.push(h);
+                    }
+                }
+            }
+            c.inflight = 0;
+        }
+        {
+            let mut out = self.out.lock();
+            out.dead = true;
+            out.buf.clear();
+            out.off = 0;
+            if out.parked {
+                out.parked = false;
+                self.metrics.parked_dec();
+            }
+            let _ = out.stream.shutdown(std::net::Shutdown::Both);
+        }
+        hooks
+    }
+}
+
+/// The answer channel for one multiplexed request, handed to
+/// [`ConnectionHandler::handle_mux`]. Thread-safe and `Arc`-shareable:
+/// a streaming handler clones it into a watcher and keeps sending
+/// [`stream_item`](Self::stream_item)s until it finishes with
+/// [`stream_end`](Self::stream_end). Exactly one terminal send wins;
+/// the rest (and everything after) are no-ops. Dropping the sink
+/// without a terminal send reports an internal error to the client.
+pub struct MuxSink {
+    mux: Arc<MuxConn>,
+    corr: u32,
+    terminated: AtomicBool,
+}
+
+impl MuxSink {
+    /// The request's correlation id (diagnostics only).
+    pub fn corr(&self) -> u32 {
+        self.corr
+    }
+
+    /// Did the client cancel this request (or the connection die)?
+    /// Streaming handlers poll this to stop early; unary handlers can
+    /// ignore it — sends to canceled ids are dropped.
+    pub fn canceled(&self) -> bool {
+        self.mux.corr_canceled(self.corr)
+    }
+
+    /// Register cleanup to run when the request is canceled or the
+    /// connection dies (runs at most once, outside all frontend locks).
+    /// If the request is already canceled the hook runs immediately.
+    pub fn on_cancel(&self, hook: Box<dyn FnOnce() + Send>) {
+        if let Some(h) = self.mux.set_cancel_hook(self.corr, hook) {
+            h();
+        }
+    }
+
+    /// Terminal: answer with an OK unary response.
+    pub fn respond_ok<M: WireMessage>(&self, msg: &M) {
+        self.terminal(FrameKind::Response, &wire_encode(msg));
+    }
+
+    /// Terminal: answer with a pre-encoded response payload.
+    pub fn respond_bytes(&self, payload: &[u8]) {
+        self.terminal(FrameKind::Response, payload);
+    }
+
+    /// Terminal: answer with an error status.
+    pub fn error(&self, status: Status, message: &str) {
+        let mut body = vec![status as u8];
+        body.extend_from_slice(message.as_bytes());
+        self.terminal(FrameKind::Error, &body);
+    }
+
+    /// Terminal: translate a complete v1 response frame
+    /// (`[u32 len][status][payload]`, as built by `write_ok`/`write_err`
+    /// into a buffer) into the equivalent v2 RESPONSE or ERROR — the
+    /// bridge that lets v1 dispatch code serve v2 requests unchanged.
+    pub fn respond_v1_frame(&self, frame: &[u8]) {
+        if frame.len() < 5 {
+            return self.error(Status::Internal, "malformed response frame");
+        }
+        let status = frame[4];
+        let payload = &frame[5..];
+        if status == Status::Ok as u8 {
+            self.terminal(FrameKind::Response, payload);
+        } else {
+            let mut body = vec![status];
+            body.extend_from_slice(payload);
+            self.terminal(FrameKind::Error, &body);
+        }
+    }
+
+    /// Non-terminal: push one STREAM_ITEM.
+    pub fn stream_item<M: WireMessage>(&self, msg: &M) {
+        self.mux.send_item(self.corr, &wire_encode(msg));
+    }
+
+    /// Terminal: close the stream.
+    pub fn stream_end(&self) {
+        self.terminal(FrameKind::StreamEnd, &[]);
+    }
+
+    fn terminal(&self, kind: FrameKind, body: &[u8]) {
+        if self.terminated.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.mux.send_terminal(self.corr, kind, body);
+    }
+}
+
+impl Drop for MuxSink {
+    fn drop(&mut self) {
+        if !self.terminated.swap(true, Ordering::SeqCst) {
+            let mut body = vec![Status::Internal as u8];
+            body.extend_from_slice(b"request dropped");
+            self.mux.send_terminal(self.corr, FrameKind::Error, &body);
+        }
     }
 }
 
@@ -200,6 +678,11 @@ struct WriteJob<S> {
 enum Job<S> {
     /// A complete framed request from the event loop.
     Request { conn: Conn<S>, head: u8, payload: Vec<u8>, enqueued: Instant },
+    /// A complete multiplexed (wire-v2) request. The connection stays
+    /// with the event loop; only the sink travels. Dropping the job
+    /// (queue abort at shutdown) answers the client through the sink's
+    /// drop guard.
+    Mux { sink: MuxSink, method: u8, payload: Vec<u8>, enqueued: Instant },
     /// A response to (continue) writing: a deferred completion, a
     /// long-poll timeout flush, or a write resumed after the peer
     /// drained its receive window.
@@ -524,6 +1007,11 @@ impl FrontendServer {
         let loop_opts = LoopOptions {
             idle_timeout: opts.idle_timeout,
             max_connections: opts.max_connections,
+            mux_max_inflight: if opts.mux_max_inflight == 0 {
+                DEFAULT_MUX_INFLIGHT
+            } else {
+                opts.mux_max_inflight
+            },
         };
         let io_spawn = {
             let handler = Arc::clone(&handler);
@@ -624,6 +1112,20 @@ impl Drop for FrontendServer {
 struct LoopOptions {
     idle_timeout: Option<Duration>,
     max_connections: usize,
+    mux_max_inflight: usize,
+}
+
+/// A connection parked in the event loop, plus the loop-side registration
+/// bookkeeping the mux path needs.
+struct Parked<S> {
+    conn: Conn<S>,
+    /// Last read progress (idle-eviction clock).
+    last: Instant,
+    /// Read interest withdrawn at the mux in-flight cap.
+    throttled: bool,
+    /// Poller token under which the (dup'd) write fd is registered while
+    /// the mux out-buffer is parked.
+    wtoken: Option<u64>,
 }
 
 /// Fixed poller tokens: the wake pipe and the listener are registered
@@ -656,13 +1158,19 @@ fn io_loop<H: ConnectionHandler>(
     mut poller: Poller,
     opts: LoopOptions,
 ) {
-    // Read-parked connections (token -> conn + last read progress).
-    let mut conns: HashMap<u64, (Conn<H::Conn>, Instant)> = HashMap::new();
-    // Write-parked responses (token -> half-written job).
+    // Read-parked connections (token -> conn + loop bookkeeping).
+    let mut conns: HashMap<u64, Parked<H::Conn>> = HashMap::new();
+    // Write-parked v1 responses (token -> half-written job).
     let mut wparked: HashMap<u64, WriteJob<H::Conn>> = HashMap::new();
+    // Write-parked mux out-buffers (write token -> read token).
+    let mut mux_wparked: HashMap<u64, u64> = HashMap::new();
+    // Maintenance notes from worker-side mux sends; the senders live
+    // inside each MuxConn's mutexes.
+    let (mux_tx, mux_rx) = mpsc::channel::<MuxNote>();
     let mut next_token: u64 = FIRST_CONN_TOKEN;
     let mut ready_read = Vec::new();
     let mut ready_write = Vec::new();
+    let mut ready_mwrite = Vec::new();
     // The poll timeout is a liveness backstop and the sweep cadence
     // (idle eviction, parked-response deadlines); stop flags and re-arms
     // arrive via the wake pipe.
@@ -675,16 +1183,18 @@ fn io_loop<H: ConnectionHandler>(
         let mut accept_ready = false;
         ready_read.clear();
         ready_write.clear();
+        ready_mwrite.clear();
         match poller.wait(POLL_MS) {
             Ok(events) => {
                 for ev in events {
                     match ev.token {
                         TOK_WAKE => wake_ready = true,
                         TOK_LISTENER => accept_ready = true,
-                        // Route by owner: the read-parked and
-                        // write-parked registries never share a token.
+                        // Route by owner: the read-parked, write-parked
+                        // and mux-write registries never share a token.
                         tok if conns.contains_key(&tok) => ready_read.push(tok),
                         tok if wparked.contains_key(&tok) => ready_write.push(tok),
+                        tok if mux_wparked.contains_key(&tok) => ready_mwrite.push(tok),
                         // Token retired between the kernel queuing the
                         // event and us reading it: ignore.
                         _ => {}
@@ -720,7 +1230,10 @@ fn io_loop<H: ConnectionHandler>(
             match back {
                 Back::Read(conn) => {
                     if poller.register(conn.stream.as_raw_fd(), next_token, EV_READ).is_ok() {
-                        conns.insert(next_token, (conn, Instant::now()));
+                        conns.insert(
+                            next_token,
+                            Parked { conn, last: Instant::now(), throttled: false, wtoken: None },
+                        );
                     }
                 }
                 Back::Write(wj) => {
@@ -733,6 +1246,65 @@ fn io_loop<H: ConnectionHandler>(
                 }
             }
             next_token += 1;
+        }
+
+        // Mux maintenance notes from worker-side sends.
+        while let Ok(note) = mux_rx.try_recv() {
+            match note {
+                MuxNote::ReadRearm(tok) => {
+                    let mut failed = false;
+                    if let Some(p) = conns.get_mut(&tok) {
+                        if p.throttled {
+                            // Deliberate token reuse: the connection never
+                            // left this loop, so the token still refers to
+                            // it (the no-reuse rule guards hand-offs).
+                            if poller.register(p.conn.stream.as_raw_fd(), tok, EV_READ).is_ok() {
+                                p.throttled = false;
+                            } else {
+                                // The loop can never see this fd again.
+                                failed = true;
+                            }
+                        }
+                    }
+                    if failed {
+                        reap_conn(tok, &mut conns, &mut mux_wparked, &mut poller);
+                    }
+                }
+                MuxNote::WritePark(tok) => {
+                    let dead = conns
+                        .get(&tok)
+                        .and_then(|p| p.conn.mux.as_ref())
+                        .map(|m| m.is_dead());
+                    match dead {
+                        Some(true) => {
+                            reap_conn(tok, &mut conns, &mut mux_wparked, &mut poller);
+                        }
+                        Some(false) => {
+                            let mut failed = false;
+                            if let Some(p) = conns.get_mut(&tok) {
+                                if p.wtoken.is_none() {
+                                    if let Some(m) = &p.conn.mux {
+                                        let wtok = next_token;
+                                        next_token += 1;
+                                        if poller.register(m.write_fd(), wtok, EV_WRITE).is_ok() {
+                                            p.wtoken = Some(wtok);
+                                            mux_wparked.insert(wtok, tok);
+                                        } else {
+                                            // Can never learn about
+                                            // writability: drop the conn.
+                                            failed = true;
+                                        }
+                                    }
+                                }
+                            }
+                            if failed {
+                                reap_conn(tok, &mut conns, &mut mux_wparked, &mut poller);
+                            }
+                        }
+                        None => {}
+                    }
+                }
+            }
         }
 
         if accept_ready {
@@ -757,15 +1329,19 @@ fn io_loop<H: ConnectionHandler>(
                         metrics.conn_opened();
                         conns.insert(
                             next_token,
-                            (
-                                Conn {
+                            Parked {
+                                conn: Conn {
                                     stream,
                                     reader: FrameReader::new(),
                                     state: handler.on_connect(),
                                     metrics: Arc::clone(&metrics),
+                                    mux: None,
+                                    v1_locked: false,
                                 },
-                                Instant::now(),
-                            ),
+                                last: Instant::now(),
+                                throttled: false,
+                                wtoken: None,
+                            },
                         );
                         next_token += 1;
                     }
@@ -796,33 +1372,18 @@ fn io_loop<H: ConnectionHandler>(
         }
 
         for &tok in &ready_read {
-            let mut outcome = None;
-            if let Some((conn, last)) = conns.get_mut(&tok) {
-                *last = Instant::now();
-                outcome = Some(conn.reader.poll_frame(&mut conn.stream));
-            }
-            match outcome {
-                Some(Ok(FrameProgress::Frame(head, payload))) => {
-                    if let Some((conn, _)) = conns.remove(&tok) {
-                        // Deregister before the hand-off: the worker may
-                        // close the fd at any point afterwards, and its
-                        // number could come back from the next accept.
-                        let _ = poller.deregister(conn.stream.as_raw_fd());
-                        enqueue(&shared, &stop, conn, head, payload);
-                    }
-                }
-                // Mid-frame stall: the connection keeps waiting here in
-                // the event loop — no worker is occupied.
-                Some(Ok(FrameProgress::Pending)) => {}
-                // Disconnect or protocol-level framing error (oversized/
-                // zero frame, EOF mid-frame): reap the connection.
-                Some(Ok(FrameProgress::Closed)) | Some(Err(_)) => {
-                    if let Some((conn, _)) = conns.remove(&tok) {
-                        let _ = poller.deregister(conn.stream.as_raw_fd());
-                    }
-                }
-                None => {}
-            }
+            drive_readable(
+                tok,
+                &mut conns,
+                &mut mux_wparked,
+                &mut poller,
+                &shared,
+                &stop,
+                &wake,
+                &metrics,
+                &mux_tx,
+                opts.mux_max_inflight,
+            );
         }
 
         // The peer drained its window (or hung up — the write observes
@@ -835,6 +1396,38 @@ fn io_loop<H: ConnectionHandler>(
             }
         }
 
+        // A mux peer drained its window: flush the shared out-buffer
+        // from the loop (workers only ever append).
+        for &wtok in &ready_mwrite {
+            let Some(&ctok) = mux_wparked.get(&wtok) else { continue };
+            let mut reap = false;
+            if let Some(p) = conns.get_mut(&ctok) {
+                if let Some(m) = &p.conn.mux {
+                    let mux = Arc::clone(m);
+                    let wfd = mux.write_fd();
+                    let _ = poller.deregister(wfd);
+                    mux_wparked.remove(&wtok);
+                    p.wtoken = None;
+                    let (still_parked, dead) = mux.flush_ready();
+                    if dead {
+                        reap = true;
+                    } else if still_parked {
+                        let nwtok = next_token;
+                        next_token += 1;
+                        if poller.register(wfd, nwtok, EV_WRITE).is_ok() {
+                            p.wtoken = Some(nwtok);
+                            mux_wparked.insert(nwtok, ctok);
+                        } else {
+                            reap = true;
+                        }
+                    }
+                }
+            }
+            if reap {
+                reap_conn(ctok, &mut conns, &mut mux_wparked, &mut poller);
+            }
+        }
+
         // Sweeps. Readiness events can wake the loop far more often
         // than POLL_MS; throttle to the intended cadence so a busy
         // server does not pay an O(connections + parked) scan — and the
@@ -844,14 +1437,20 @@ fn io_loop<H: ConnectionHandler>(
             last_sweep = Instant::now();
             if let Some(idle) = opts.idle_timeout {
                 let now = Instant::now();
-                conns.retain(|_, (conn, last)| {
-                    let keep = now.duration_since(*last) <= idle;
-                    if !keep {
-                        let _ = poller.deregister(conn.stream.as_raw_fd());
-                        metrics.idle_eviction();
-                    }
-                    keep
-                });
+                // A mux connection with in-flight requests (including
+                // open watch streams) or undelivered bytes is not idle,
+                // however long the read side has been silent.
+                let evict: Vec<u64> = conns
+                    .iter()
+                    .filter_map(|(&t, p)| {
+                        let busy = p.conn.mux.as_ref().map(|m| m.busy()).unwrap_or(false);
+                        (!busy && now.duration_since(p.last) > idle).then_some(t)
+                    })
+                    .collect();
+                for t in evict {
+                    metrics.idle_eviction();
+                    reap_conn(t, &mut conns, &mut mux_wparked, &mut poller);
+                }
             }
             if !wparked.is_empty() {
                 let now = Instant::now();
@@ -865,16 +1464,260 @@ fn io_loop<H: ConnectionHandler>(
                     keep
                 });
             }
+            if !mux_wparked.is_empty() {
+                // A mux peer that stopped reading gets the same WRITE_CAP
+                // budget as a v1 slow reader before the connection goes.
+                let now = Instant::now();
+                let expired: Vec<u64> = mux_wparked
+                    .values()
+                    .filter(|&&ctok| {
+                        conns
+                            .get(&ctok)
+                            .and_then(|p| p.conn.mux.as_ref())
+                            .map(|m| m.parked_expired(WRITE_CAP, now))
+                            .unwrap_or(false)
+                    })
+                    .copied()
+                    .collect();
+                for t in expired {
+                    metrics.idle_eviction();
+                    reap_conn(t, &mut conns, &mut mux_wparked, &mut poller);
+                }
+            }
             sweep_parked_deadlines(&shared);
         }
     }
-    // Shutdown: dropping the maps actively closes every idle connection
-    // and abandons half-written responses; queued/in-flight requests are
+    // Shutdown: close every mux connection first (cancelling in-flight
+    // requests and running their hooks so watchers deregister), then
+    // dropping the maps actively closes every idle connection and
+    // abandons half-written responses; queued/in-flight requests are
     // drained by FrontendServer::shutdown, parked deferred responses are
     // dropped by its clear_parked step.
+    for (_t, p) in conns.drain() {
+        if let Some(m) = &p.conn.mux {
+            for hook in m.close() {
+                hook();
+            }
+        }
+    }
     drop(conns);
     drop(wparked);
     drop(listener);
+}
+
+/// Remove a connection from the loop, deregistering whatever interests
+/// it still has, closing its mux half (if any) and running the cancel
+/// hooks of its in-flight requests.
+fn reap_conn<S>(
+    tok: u64,
+    conns: &mut HashMap<u64, Parked<S>>,
+    mux_wparked: &mut HashMap<u64, u64>,
+    poller: &mut Poller,
+) {
+    let Some(p) = conns.remove(&tok) else { return };
+    if !p.throttled {
+        let _ = poller.deregister(p.conn.stream.as_raw_fd());
+    }
+    if let Some(wtok) = p.wtoken {
+        mux_wparked.remove(&wtok);
+        if let Some(m) = &p.conn.mux {
+            let _ = poller.deregister(m.write_fd());
+        }
+    }
+    if let Some(m) = &p.conn.mux {
+        for hook in m.close() {
+            hook();
+        }
+    }
+    // Dropping `p` closes the socket and decrements the gauge.
+}
+
+/// Drive one readable connection: assemble frames, decide the protocol
+/// on the first one, and either hand the connection to a worker (v1) or
+/// fan complete v2 frames out as mux jobs while the connection stays
+/// here. Bounded per event; level-triggered readiness redelivers
+/// whatever is left.
+#[allow(clippy::too_many_arguments)]
+fn drive_readable<H: ConnectionHandler>(
+    tok: u64,
+    conns: &mut HashMap<u64, Parked<H::Conn>>,
+    mux_wparked: &mut HashMap<u64, u64>,
+    poller: &mut Poller,
+    shared: &Arc<Shared<H::Conn>>,
+    stop: &Arc<AtomicBool>,
+    wake: &Arc<WakePipe>,
+    metrics: &Arc<FrontendMetrics>,
+    mux_tx: &Sender<MuxNote>,
+    mux_max_inflight: usize,
+) {
+    /// Frames drained per readiness event, so one firehose connection
+    /// cannot starve the rest of the loop's work.
+    const DRAIN_MAX: usize = 32;
+    let mut reap = false;
+    let mut cancel_hooks: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+    for _ in 0..DRAIN_MAX {
+        // Re-borrowed each iteration: the v1 arm removes the entry.
+        let Some(p) = conns.get_mut(&tok) else { break };
+        p.last = Instant::now();
+        let progress = p.conn.reader.poll_frame(&mut p.conn.stream);
+        match progress {
+            Ok(FrameProgress::Frame(head, payload)) => {
+                let is_v1 = p.conn.mux.is_none() && (p.conn.v1_locked || !is_v2_head(head));
+                if is_v1 {
+                    // v1 request: hand the whole connection to a worker
+                    // (one in-flight request per connection, as ever).
+                    // Deregister before the hand-off: the worker may
+                    // close the fd at any point afterwards, and its
+                    // number could come back from the next accept.
+                    if let Some(p) = conns.remove(&tok) {
+                        let _ = poller.deregister(p.conn.stream.as_raw_fd());
+                        let mut conn = p.conn;
+                        conn.v1_locked = true;
+                        enqueue(
+                            shared,
+                            stop,
+                            Job::Request { conn, head, payload, enqueued: Instant::now() },
+                        );
+                    }
+                    break;
+                }
+                let v2 = match parse_v2(head, payload) {
+                    Ok(f) => f,
+                    Err(_) => {
+                        reap = true;
+                        break;
+                    }
+                };
+                if p.conn.mux.is_none() {
+                    // First v2 frame on the connection: must be HELLO.
+                    if v2.kind != FrameKind::Hello || v2.corr != 0 {
+                        reap = true;
+                        break;
+                    }
+                    let hello: HelloProto = match wire_decode(&v2.body) {
+                        Ok(h) => h,
+                        Err(_) => {
+                            reap = true;
+                            break;
+                        }
+                    };
+                    // The write half is a dup of the same file
+                    // description (shares O_NONBLOCK); sends go through
+                    // the shared out-buffer with WouldBlock parking.
+                    let wstream = match p.conn.stream.try_clone() {
+                        Ok(s) => s,
+                        Err(_) => {
+                            reap = true;
+                            break;
+                        }
+                    };
+                    let mux = Arc::new(MuxConn {
+                        token: tok,
+                        max_inflight: mux_max_inflight,
+                        throttled: AtomicBool::new(false),
+                        wake: Arc::clone(wake),
+                        metrics: Arc::clone(metrics),
+                        corrs: Mutex::new(
+                            &classes::FE_MUX_CORR,
+                            MuxCorrs {
+                                active: HashMap::new(),
+                                inflight: 0,
+                                notes: mux_tx.clone(),
+                            },
+                        ),
+                        out: Mutex::new(
+                            &classes::FE_MUX_OUT,
+                            MuxOut {
+                                stream: wstream,
+                                buf: Vec::new(),
+                                off: 0,
+                                parked: false,
+                                parked_since: Instant::now(),
+                                dead: false,
+                                notes: mux_tx.clone(),
+                            },
+                        ),
+                    });
+                    let reply = HelloProto {
+                        version: hello.version.min(WIRE_VERSION_MAX),
+                        max_inflight: mux_max_inflight as u64,
+                    };
+                    if let Ok(frame) = encode_v2(FrameKind::Hello, 0, &wire_encode(&reply)) {
+                        mux.send_raw(&frame);
+                    }
+                    p.conn.mux = Some(mux);
+                    continue;
+                }
+                let Some(mux) = p.conn.mux.as_ref().map(Arc::clone) else { break };
+                match v2.kind {
+                    // Duplicate HELLO: harmless, ignore.
+                    FrameKind::Hello => {}
+                    FrameKind::Request => {
+                        let mut body = v2.body;
+                        if body.is_empty() {
+                            reap = true;
+                            break;
+                        }
+                        let payload = body.split_off(1);
+                        let method = body[0];
+                        if !mux.begin_request(v2.corr) {
+                            // Duplicate correlation id: protocol
+                            // violation, ambiguous forever — close.
+                            reap = true;
+                            break;
+                        }
+                        let sink = MuxSink {
+                            mux: Arc::clone(&mux),
+                            corr: v2.corr,
+                            terminated: AtomicBool::new(false),
+                        };
+                        enqueue(
+                            shared,
+                            stop,
+                            Job::Mux { sink, method, payload, enqueued: Instant::now() },
+                        );
+                        if mux.try_throttle() {
+                            if let Some(p) = conns.get_mut(&tok) {
+                                p.throttled = true;
+                                let _ = poller.deregister(p.conn.stream.as_raw_fd());
+                            }
+                            break;
+                        }
+                    }
+                    FrameKind::Cancel => {
+                        if let Some(hook) = mux.cancel_corr(v2.corr) {
+                            cancel_hooks.push(hook);
+                        }
+                    }
+                    // Server-to-client kinds from a client: violation.
+                    FrameKind::Response
+                    | FrameKind::StreamItem
+                    | FrameKind::StreamEnd
+                    | FrameKind::Error => {
+                        reap = true;
+                        break;
+                    }
+                }
+            }
+            // Mid-frame stall: the connection keeps waiting here in the
+            // event loop — no worker is occupied.
+            Ok(FrameProgress::Pending) => break,
+            // Disconnect or protocol-level framing error (oversized/zero
+            // frame, EOF mid-frame): reap the connection.
+            Ok(FrameProgress::Closed) | Err(_) => {
+                reap = true;
+                break;
+            }
+        }
+    }
+    if reap {
+        reap_conn(tok, conns, mux_wparked, poller);
+    }
+    // Cancel hooks run outside every frontend lock (they typically take
+    // service-layer locks to deregister watchers).
+    for hook in cancel_hooks {
+        hook();
+    }
 }
 
 /// Answer every deferred response whose long-poll deadline has passed
@@ -911,25 +1754,22 @@ fn sweep_parked_deadlines<S>(shared: &Arc<Shared<S>>) {
     }
 }
 
-/// Push a ready request onto the bounded queue, applying backpressure
-/// (bounded wait) when the pool is saturated.
-fn enqueue<S>(
-    shared: &Arc<Shared<S>>,
-    stop: &Arc<AtomicBool>,
-    conn: Conn<S>,
-    head: u8,
-    payload: Vec<u8>,
-) {
+/// Push a ready request (v1 hand-off or v2 mux job) onto the bounded
+/// queue, applying backpressure (bounded wait) when the pool is
+/// saturated.
+fn enqueue<S>(shared: &Arc<Shared<S>>, stop: &Arc<AtomicBool>, job: Job<S>) {
     let mut q = shared.queue.lock();
     while q.len() >= shared.capacity {
         if stop.load(Ordering::SeqCst) {
-            return; // shutting down: drop the request, closing the conn
+            // Shutting down: drop the request. A v1 job closes its
+            // connection; a mux job answers through the sink drop guard.
+            return;
         }
         let (guard, _timeout) =
             shared.space_ready.wait_timeout(q, Duration::from_millis(100));
         q = guard;
     }
-    q.push_back(Job::Request { conn, head, payload, enqueued: Instant::now() });
+    q.push_back(job);
     shared.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
     drop(q);
     shared.job_ready.notify_one();
@@ -1009,6 +1849,16 @@ fn worker_loop<H: ConnectionHandler>(
                         );
                     }
                 }
+            }
+            Job::Mux { sink, method, payload, enqueued } => {
+                shared.metrics.queue_wait.record(enqueued.elapsed().as_micros() as u64);
+                shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                // A panic before the sink's terminal send unwinds through
+                // the sink's Drop, which answers the client with an
+                // internal error — the worker and connection both live.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    handler.handle_mux(method, &payload, sink);
+                }));
             }
             Job::Write(wj) => finish_write(&shared, &rearm_tx, &wake, wj),
         }
@@ -1098,7 +1948,10 @@ fn finish_write<S>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::wire::framing::{read_response, write_err, write_ok, write_request, Method, Status};
+    use crate::wire::framing::{
+        encode_v2_request, read_frame, read_response, write_err, write_ok, write_request, Method,
+        Status, V2Frame,
+    };
     use crate::wire::messages::{EmptyResponse, GetStudyRequest};
     use std::io::BufReader;
 
@@ -1330,6 +2183,220 @@ mod tests {
         assert_eq!(server.metrics().connections_refused(), 1);
         assert_eq!(server.metrics().active_connections(), 2);
         ping(&mut a); // survivors unaffected
+        server.shutdown();
+    }
+
+    // ---- wire-v2 multiplexing ----
+
+    fn send_hello(s: &mut TcpStream) {
+        let hello = HelloProto { version: WIRE_VERSION_MAX, max_inflight: 0 };
+        let frame = encode_v2(FrameKind::Hello, 0, &wire_encode(&hello)).unwrap();
+        s.write_all(&frame).unwrap();
+    }
+
+    fn recv_v2(r: &mut BufReader<TcpStream>) -> V2Frame {
+        let (head, payload) = read_frame(r).unwrap();
+        parse_v2(head, payload).unwrap()
+    }
+
+    /// Mux-aware ping: answers v2 Pings through the sink, v1 Pings
+    /// through the classic path.
+    struct MuxPing;
+
+    impl ConnectionHandler for MuxPing {
+        type Conn = ();
+        fn on_connect(&self) {}
+        fn handle(
+            &self,
+            _state: &mut (),
+            head: u8,
+            _payload: &[u8],
+            out: &mut Vec<u8>,
+            _cx: &RequestContext<'_>,
+        ) -> HandleOutcome {
+            if head == Method::Ping as u8 {
+                let _ = write_ok(out, &EmptyResponse::default());
+                HandleOutcome::Reply
+            } else {
+                let _ = write_err(out, Status::InvalidArgument, "bad method");
+                HandleOutcome::Close
+            }
+        }
+        fn handle_mux(&self, method: u8, _payload: &[u8], sink: MuxSink) {
+            if method == Method::Ping as u8 {
+                sink.respond_ok(&EmptyResponse::default());
+            } else {
+                sink.error(Status::InvalidArgument, "bad method");
+            }
+        }
+    }
+
+    #[test]
+    fn mux_hello_negotiates_and_multiplexes() {
+        let server = FrontendServer::start(
+            MuxPing,
+            "127.0.0.1:0",
+            FrontendOptions { name: "fe-mux", workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        send_hello(&mut c);
+        let hello = recv_v2(&mut r);
+        assert_eq!(hello.kind, FrameKind::Hello);
+        assert_eq!(hello.corr, 0);
+        let negotiated: HelloProto = wire_decode(&hello.body).unwrap();
+        assert_eq!(negotiated.version, WIRE_VERSION_MAX);
+        assert_eq!(negotiated.max_inflight, DEFAULT_MUX_INFLIGHT as u64);
+        // >= 8 requests in flight on ONE connection before reading any
+        // response (the acceptance-criteria multiplex shape).
+        for corr in 1..=9u32 {
+            let frame =
+                encode_v2_request(corr, Method::Ping, &EmptyResponse::default()).unwrap();
+            c.write_all(&frame).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..9 {
+            let f = recv_v2(&mut r);
+            assert_eq!(f.kind, FrameKind::Response);
+            assert!(seen.insert(f.corr), "duplicate corr {}", f.corr);
+        }
+        assert_eq!(seen.len(), 9);
+        assert_eq!(server.metrics().requests(), 9);
+        assert_eq!(server.metrics().active_connections(), 1);
+        // The same server still speaks v1 on a fresh connection.
+        let mut v1 = TcpStream::connect(server.local_addr()).unwrap();
+        ping(&mut v1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mux_default_handler_rejects_v2_requests() {
+        let server = FrontendServer::start(
+            PingHandler, // no handle_mux override
+            "127.0.0.1:0",
+            FrontendOptions { name: "fe-muxrej", workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        send_hello(&mut c);
+        let _ = recv_v2(&mut r); // HELLO reply: the handshake itself works
+        let frame = encode_v2_request(7, Method::Ping, &EmptyResponse::default()).unwrap();
+        c.write_all(&frame).unwrap();
+        let f = recv_v2(&mut r);
+        assert_eq!(f.kind, FrameKind::Error);
+        assert_eq!(f.corr, 7);
+        assert_eq!(f.body[0], Status::Unimplemented as u8);
+        server.shutdown();
+    }
+
+    /// Slow streaming-ish handler for cancel tests: answers after a
+    /// delay from another thread, and records cancel-hook delivery.
+    struct SlowPing {
+        delay: Duration,
+        hook_ran: Arc<AtomicBool>,
+    }
+
+    impl ConnectionHandler for SlowPing {
+        type Conn = ();
+        fn on_connect(&self) {}
+        fn handle(
+            &self,
+            _state: &mut (),
+            _head: u8,
+            _payload: &[u8],
+            out: &mut Vec<u8>,
+            _cx: &RequestContext<'_>,
+        ) -> HandleOutcome {
+            let _ = write_ok(out, &EmptyResponse::default());
+            HandleOutcome::Reply
+        }
+        fn handle_mux(&self, _method: u8, _payload: &[u8], sink: MuxSink) {
+            let ran = Arc::clone(&self.hook_ran);
+            sink.on_cancel(Box::new(move || {
+                ran.store(true, Ordering::SeqCst);
+            }));
+            let delay = self.delay;
+            std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                // Suppressed (silently) if the request was canceled.
+                sink.respond_ok(&EmptyResponse::default());
+            });
+        }
+    }
+
+    #[test]
+    fn mux_cancel_runs_hook_and_suppresses_response() {
+        let hook_ran = Arc::new(AtomicBool::new(false));
+        let server = FrontendServer::start(
+            SlowPing { delay: Duration::from_millis(150), hook_ran: Arc::clone(&hook_ran) },
+            "127.0.0.1:0",
+            FrontendOptions { name: "fe-muxcan", workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        send_hello(&mut c);
+        let _ = recv_v2(&mut r);
+        // Request 1, canceled immediately; request 2 follows and is
+        // slower end-to-end, so by the time its response arrives the
+        // canceled response (had it leaked) would already be buffered.
+        let f1 = encode_v2_request(1, Method::Ping, &EmptyResponse::default()).unwrap();
+        c.write_all(&f1).unwrap();
+        let cancel = encode_v2(FrameKind::Cancel, 1, &[]).unwrap();
+        c.write_all(&cancel).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let f2 = encode_v2_request(2, Method::Ping, &EmptyResponse::default()).unwrap();
+        c.write_all(&f2).unwrap();
+        let f = recv_v2(&mut r);
+        assert_eq!(f.kind, FrameKind::Response);
+        assert_eq!(f.corr, 2, "canceled request leaked a response");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !hook_ran.load(Ordering::SeqCst) {
+            assert!(Instant::now() < deadline, "cancel hook never ran");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn mux_inflight_cap_throttles_and_recovers() {
+        let server = FrontendServer::start(
+            SlowPing { delay: Duration::from_millis(30), hook_ran: Arc::new(AtomicBool::new(false)) },
+            "127.0.0.1:0",
+            FrontendOptions {
+                name: "fe-muxcap",
+                workers: 4,
+                mux_max_inflight: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        send_hello(&mut c);
+        let hello = recv_v2(&mut r);
+        let negotiated: HelloProto = wire_decode(&hello.body).unwrap();
+        assert_eq!(negotiated.max_inflight, 2);
+        // 6 requests against a cap of 2: the loop must throttle reads
+        // and re-arm as completions land; every request still answers.
+        for corr in 1..=6u32 {
+            let frame =
+                encode_v2_request(corr, Method::Ping, &EmptyResponse::default()).unwrap();
+            c.write_all(&frame).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..6 {
+            let f = recv_v2(&mut r);
+            assert_eq!(f.kind, FrameKind::Response);
+            seen.insert(f.corr);
+        }
+        assert_eq!(seen.len(), 6);
         server.shutdown();
     }
 

@@ -27,6 +27,17 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    pub fn sum_micros(&self) -> u64 {
+        self.sum_micros.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw log2 bucket counts (bucket *i* covers
+    /// `[2^i, 2^(i+1))` µs), for the structured `GetServiceMetrics`
+    /// export.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
     pub fn mean_micros(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -282,6 +293,10 @@ pub struct ServiceMetrics {
     /// Latency from a client parking in `WaitOperation` to its watcher
     /// firing at operation completion, in microseconds.
     pub wait_wakeup: Histogram,
+    /// Streaming `WaitOperation` watchers currently registered (wire v2).
+    /// Gauge; the cross-version tests assert it returns to zero after
+    /// `CANCEL` and mid-stream disconnect.
+    pub watch_streams: AtomicU64,
     /// Front-end metrics, linked by the TCP server at start so
     /// [`ServiceMetrics::report`] covers the whole stack.
     frontend: Mutex<Option<std::sync::Arc<FrontendMetrics>>>,
@@ -299,6 +314,7 @@ impl Default for ServiceMetrics {
             suggest_ops_served: AtomicU64::new(0),
             in_flight_policy_jobs: AtomicU64::new(0),
             wait_wakeup: Histogram::default(),
+            watch_streams: AtomicU64::new(0),
             frontend: Mutex::new(&classes::MET_FRONTEND, None),
             wal: Mutex::new(&classes::MET_WAL, None),
         }
@@ -357,6 +373,29 @@ impl ServiceMetrics {
 
     pub fn record_wait_wakeup(&self, micros: u64) {
         self.wait_wakeup.record(micros);
+    }
+
+    pub fn inc_watch_streams(&self) {
+        self.watch_streams.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (mirrors the in-flight gauge: a racy double
+    /// removal must not wrap).
+    pub fn dec_watch_streams(&self) {
+        let _ = self
+            .watch_streams
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    pub fn watch_streams(&self) -> u64 {
+        self.watch_streams.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-method latency histograms, for the structured
+    /// `GetServiceMetrics` export.
+    pub fn method_histograms(&self) -> Vec<(String, std::sync::Arc<Histogram>)> {
+        let m = self.methods.lock();
+        m.iter().map(|(n, h)| (n.clone(), h.clone())).collect()
     }
 
     /// Attach the front-end's metrics (called by the TCP server).

@@ -6,7 +6,10 @@
 //! in [`crate::util::sync::classes`] and checked under lockdep; the
 //! hierarchy table, the poller registration-state rules, and the WAL
 //! ordering this layer depends on are consolidated in
-//! `rust/docs/INVARIANTS.md`.
+//! `rust/docs/INVARIANTS.md`. The wire protocols the front-end speaks —
+//! blocking v1 and the multiplexed/streaming v2 (`HELLO` handshake,
+//! correlation-id demux, `WaitOperation` watch streams, `CANCEL`) — are
+//! specified in `rust/docs/WIRE.md`.
 //!
 //! # Front-end architecture: event loop + bounded worker pool
 //!

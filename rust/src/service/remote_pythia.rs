@@ -291,6 +291,7 @@ impl PolicySupporter for RemoteSupporter {
             .iter()
             .map(|(ns, k, v)| UnitMetadataUpdate {
                 trial_id: 0,
+                new_trial_index: 0,
                 item: Some(MetadataItem {
                     namespace: ns.to_string(),
                     key: k.to_string(),
@@ -318,6 +319,7 @@ impl PolicySupporter for RemoteSupporter {
             .iter()
             .map(|(ns, k, v)| UnitMetadataUpdate {
                 trial_id,
+                new_trial_index: 0,
                 item: Some(MetadataItem {
                     namespace: ns.to_string(),
                     key: k.to_string(),
@@ -369,15 +371,30 @@ impl PythiaServer {
         Self::start_with(registry, api_addr, addr, 0)
     }
 
-    /// Start with an explicit worker-pool size (0 = CPU count).
+    /// Start with an explicit worker-pool size (0 = CPU count). The
+    /// policy compute pool is sized the same way — handler workers only
+    /// decode and enqueue; the compute pool runs the policies.
     pub fn start_with(
         registry: PolicyRegistry,
         api_addr: &str,
         addr: &str,
         workers: usize,
     ) -> std::io::Result<Self> {
+        let compute_threads = if workers == 0 {
+            crate::service::frontend::default_workers()
+        } else {
+            workers
+        };
+        let handler = PythiaHandler {
+            inner: Arc::new(PythiaShared {
+                registry,
+                api_addr: api_addr.to_string(),
+                supporters: Mutex::new(&classes::RP_SUPPORTERS, Vec::new()),
+                compute: crate::util::threadpool::ThreadPool::new(compute_threads.max(1)),
+            }),
+        };
         let frontend = FrontendServer::start(
-            PythiaHandler { registry, api_addr: api_addr.to_string() },
+            handler,
             addr,
             FrontendOptions {
                 name: "pythia-fe",
@@ -407,61 +424,113 @@ impl PythiaServer {
     }
 }
 
-/// Pool-mode protocol logic for the Pythia wire protocol. Each
-/// connection lazily opens its own [`RemoteSupporter`] (= its own API
-/// connection) on first use, from a worker thread — never on the event
-/// loop, which must not block.
+/// Pool-mode protocol logic for the Pythia wire protocol. A handler
+/// worker only decodes the frame and enqueues the policy computation on
+/// the shared compute pool — the response is completed from there via
+/// the deferred-response machinery (v1) or the mux sink (v2), so policy
+/// compute never blocks a `pythia-fe-w*` thread (ROADMAP Pythia v2
+/// follow-on; the same `HandleOutcome::Pending` path the API server
+/// uses for `WaitOperation`).
 struct PythiaHandler {
+    inner: Arc<PythiaShared>,
+}
+
+/// State shared with the compute pool: the policy registry plus a pool
+/// of API-server connections. A supporter is popped (or dialed — from a
+/// compute thread, never the event loop) for the duration of one policy
+/// run and pushed back afterwards, so concurrent runs never serialize on
+/// one API connection.
+struct PythiaShared {
     registry: PolicyRegistry,
     api_addr: String,
+    supporters: Mutex<Vec<RemoteSupporter>>,
+    compute: crate::util::threadpool::ThreadPool,
+}
+
+impl PythiaShared {
+    /// Run one policy computation and return the v1 response frame.
+    fn run(&self, method: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let supporter = match self.supporters.lock().pop() {
+            Some(s) => Ok(s),
+            None => RemoteSupporter::connect(&self.api_addr),
+        };
+        match supporter {
+            Ok(sup) => {
+                let _ = if method == M_SUGGEST {
+                    handle_suggest(&self.registry, &sup, payload, &mut out)
+                } else {
+                    handle_early_stop(&self.registry, &sup, payload, &mut out)
+                };
+                self.supporters.lock().push(sup);
+            }
+            Err(e) => {
+                let _ = write_err(&mut out, Status::Internal, &format!("api server connect: {e}"));
+            }
+        }
+        if out.is_empty() {
+            let _ = write_err(&mut out, Status::Internal, "policy handler produced no frame");
+        }
+        out
+    }
+}
+
+impl PythiaHandler {
+    /// Enqueue one policy run on the compute pool; `complete` receives
+    /// the finished v1 response frame on a compute thread.
+    fn spawn_policy(
+        &self,
+        method: u8,
+        payload: Vec<u8>,
+        complete: impl FnOnce(Vec<u8>) + Send + 'static,
+    ) {
+        let shared = Arc::clone(&self.inner);
+        self.inner.compute.execute(move || {
+            let frame = shared.run(method, &payload);
+            complete(frame);
+        });
+    }
 }
 
 impl ConnectionHandler for PythiaHandler {
-    type Conn = Option<RemoteSupporter>;
+    type Conn = ();
 
-    fn on_connect(&self) -> Self::Conn {
-        None
-    }
+    fn on_connect(&self) {}
 
     fn handle(
         &self,
-        supporter: &mut Option<RemoteSupporter>,
+        _state: &mut (),
         head: u8,
         payload: &[u8],
         out: &mut Vec<u8>,
-        _cx: &RequestContext<'_>,
+        cx: &RequestContext<'_>,
     ) -> HandleOutcome {
-        let result = match head {
+        match head {
             M_SUGGEST | M_EARLY_STOP => {
-                if supporter.is_none() {
-                    match RemoteSupporter::connect(&self.api_addr) {
-                        Ok(s) => *supporter = Some(s),
-                        Err(e) => {
-                            let _ = write_err(
-                                out,
-                                Status::Internal,
-                                &format!("api server connect: {e}"),
-                            );
-                            return HandleOutcome::Close;
-                        }
-                    }
-                }
-                let Some(sup) = supporter.as_ref() else {
-                    let _ = write_err(out, Status::Internal, "api supporter unavailable");
-                    return HandleOutcome::Close;
-                };
-                if head == M_SUGGEST {
-                    handle_suggest(&self.registry, sup, payload, out)
-                } else {
-                    handle_early_stop(&self.registry, sup, payload, out)
-                }
+                // No deadline: a policy run is bounded by the supporter
+                // read timeouts, and an aborted ticket (connection gone)
+                // makes the completion a no-op.
+                let handle = cx.defer(None, Vec::new());
+                self.spawn_policy(head, payload.to_vec(), move |frame| {
+                    let _ = handle.complete(frame);
+                });
+                HandleOutcome::Pending
             }
-            other => write_err(out, Status::Unimplemented, &format!("method {other}")),
-        };
-        if result.is_ok() {
-            HandleOutcome::Reply
-        } else {
-            HandleOutcome::Close
+            other => {
+                let _ = write_err(out, Status::Unimplemented, &format!("method {other}"));
+                HandleOutcome::Reply
+            }
+        }
+    }
+
+    fn handle_mux(&self, method: u8, payload: &[u8], sink: crate::service::frontend::MuxSink) {
+        match method {
+            M_SUGGEST | M_EARLY_STOP => {
+                self.spawn_policy(method, payload.to_vec(), move |frame| {
+                    sink.respond_v1_frame(&frame);
+                });
+            }
+            other => sink.error(Status::Unimplemented, &format!("method {other}")),
         }
     }
 }
@@ -748,6 +817,7 @@ mod tests {
             metadata_delta: vec![
                 UnitMetadataUpdate {
                     trial_id: 0,
+                    new_trial_index: 0,
                     item: Some(MetadataItem {
                         namespace: "d".into(),
                         key: "k".into(),
@@ -756,6 +826,7 @@ mod tests {
                 },
                 UnitMetadataUpdate {
                     trial_id: 5,
+                    new_trial_index: 0,
                     item: Some(MetadataItem {
                         namespace: "d".into(),
                         key: "t".into(),

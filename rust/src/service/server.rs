@@ -15,9 +15,9 @@
 //!   historical shutdown leak is fixed: live connection sockets are
 //!   actively shut down and their threads joined.
 
-use super::api::{effective_wait_ms, OpWaiter, VizierService, WatchResult};
+use super::api::{effective_wait_ms, OpStream, OpWaiter, VizierService, WatchResult};
 use super::frontend::{
-    ConnectionHandler, FrontendOptions, FrontendServer, HandleOutcome, RequestContext,
+    ConnectionHandler, FrontendOptions, FrontendServer, HandleOutcome, MuxSink, RequestContext,
 };
 use super::metrics::FrontendMetrics;
 use crate::util::time::Stopwatch;
@@ -249,6 +249,60 @@ impl VizierHandler {
             }
         }
     }
+
+    /// Wire-v2 `WaitOperation`: a watch stream. The registration
+    /// snapshot goes out as the first `STREAM_ITEM`, every subsequent
+    /// state change as another, and the final `done` state is followed
+    /// by `STREAM_END` — no re-arm round trips, no `GetOperation`
+    /// polling. The stream ignores `timeout_ms`: a v2 client that stops
+    /// caring sends `CANCEL` (or drops the connection), which disarms
+    /// the watcher through the sink's cancel hook.
+    fn handle_wait_mux(&self, payload: &[u8], sink: MuxSink) {
+        let req: WaitOperationRequest = match decode(payload) {
+            Ok(req) => req,
+            Err(e) => {
+                sink.error(Status::InvalidArgument, &format!("bad request: {e}"));
+                return;
+            }
+        };
+        let sink = Arc::new(sink);
+        let armed = Instant::now();
+        let metrics = Arc::clone(&self.service.metrics);
+        let stream_sink = Arc::clone(&sink);
+        // Only a wait that actually parked counts as a wakeup — the
+        // registration snapshot of an already-done operation answers
+        // synchronously, like the v1 fast path.
+        let mut parked = false;
+        let cb: OpStream = Box::new(move |op: &OperationProto| {
+            stream_sink.stream_item(&OperationResponse {
+                operation: op.clone(),
+            });
+            if op.done {
+                stream_sink.stream_end();
+                if parked {
+                    metrics.record_wait_wakeup(armed.elapsed().as_micros() as u64);
+                }
+                return false;
+            }
+            parked = true;
+            !stream_sink.canceled()
+        });
+        match self.service.watch_operation_stream(&req.name, cb) {
+            Ok(Some(id)) => {
+                // Client CANCEL / connection teardown must disarm the
+                // watcher, or slow operations would accumulate dead
+                // streams (and leak the watch_streams gauge).
+                let service = Arc::clone(&self.service);
+                let name = req.name.clone();
+                sink.on_cancel(Box::new(move || service.unwatch_stream(&name, id)));
+            }
+            Ok(None) => {} // the callback already closed the stream
+            Err(e) => {
+                self.service.metrics.record_error();
+                sink.error(e.status, &e.message);
+            }
+        }
+    }
 }
 
 impl ConnectionHandler for VizierHandler {
@@ -292,6 +346,29 @@ impl ConnectionHandler for VizierHandler {
                     &format!("unknown method id {head}; closing connection"),
                 );
                 HandleOutcome::Close
+            }
+        }
+    }
+
+    fn handle_mux(&self, method: u8, payload: &[u8], sink: MuxSink) {
+        match Method::from_u8(method) {
+            Some(Method::WaitOperation) => {
+                let sw = Stopwatch::start();
+                self.handle_wait_mux(payload, sink);
+                // Records the dispatch cost, not the stream lifetime.
+                self.service.metrics.record("WaitOperation", sw.elapsed_micros());
+            }
+            Some(method) => {
+                let sw = Stopwatch::start();
+                let frame = dispatch_buf(&self.service, method, payload);
+                self.service.metrics.record(&format!("{method:?}"), sw.elapsed_micros());
+                sink.respond_v1_frame(&frame);
+            }
+            None => {
+                // On a multiplexed connection a garbage method only
+                // fails its own correlation id — the connection (and
+                // its other in-flight requests) stays healthy.
+                sink.error(Status::InvalidArgument, &format!("unknown method id {method}"));
             }
         }
     }

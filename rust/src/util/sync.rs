@@ -120,6 +120,15 @@ pub mod classes {
     pub static FE_SLOTS: LockClass = LockClass::new("frontend.park_slots", 130);
     /// Bounded ready-request queue feeding the worker pool.
     pub static FE_QUEUE: LockClass = LockClass::new("frontend.job_queue", 140);
+    /// Per-connection v2 correlation table (in-flight ids, cancel hooks,
+    /// in-flight count). Taken by workers/completers around a terminal
+    /// send and by the event loop on `CANCEL`; nests *inside* the service
+    /// watcher registry (streaming watchers send under `SVC_WAITERS`) and
+    /// *outside* the connection's out-buffer.
+    pub static FE_MUX_CORR: LockClass = LockClass::new("frontend.mux_corrs", 150);
+    /// Per-connection v2 shared out-buffer + write half. Innermost
+    /// front-end lock: nothing is acquired while holding it.
+    pub static FE_MUX_OUT: LockClass = LockClass::new("frontend.mux_out", 160);
 
     // --- Durable store (WAL) --------------------------------------------
     /// Commit gate: writers share it for read around apply + enqueue;
@@ -160,8 +169,19 @@ pub mod classes {
     pub static MET_FRONTEND: LockClass = LockClass::new("metrics.frontend_link", 310);
     /// Link to the WAL metrics block.
     pub static MET_WAL: LockClass = LockClass::new("metrics.wal_link", 320);
+    /// PythiaServer's pooled API-server connections (popped before a
+    /// policy run, pushed back after; never held across the run).
+    pub static RP_SUPPORTERS: LockClass = LockClass::new("pythia.supporter_pool", 325);
     /// RemoteSupporter's transport (one in-flight round trip at a time).
     pub static RP_TRANSPORT: LockClass = LockClass::new("pythia.remote_transport", 330);
+    /// Client-side wire-v2 demux table (correlation id → waiting
+    /// receiver). Ranked above `RP_TRANSPORT` because `RemoteSupporter`
+    /// holds its transport lock across `call_raw`, which reaches the mux
+    /// when the API server negotiated v2.
+    pub static CL_MUX_PENDING: LockClass = LockClass::new("client.mux_pending", 332);
+    /// Client-side wire-v2 shared write half (whole frames only, so
+    /// concurrent callers never interleave partial frames).
+    pub static CL_MUX_WRITER: LockClass = LockClass::new("client.mux_writer", 334);
     /// RemotePythia's lazily-connected stream pair.
     pub static RP_CONN: LockClass = LockClass::new("pythia.remote_conn", 340);
     /// Legacy thread-per-connection registry ([`crate::service::server`]).

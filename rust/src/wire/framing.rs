@@ -1,10 +1,21 @@
-//! RPC framing over a byte stream.
+//! RPC framing over a byte stream. Full spec: `rust/docs/WIRE.md`.
 //!
-//! Requests: `[u32-le total_len][u8 method][payload]`.
-//! Responses: `[u32-le total_len][u8 status][payload]` where status 0 = OK
-//! (payload is the method's response message) and nonzero = error class
-//! (payload is a UTF-8 error string). This is the transport-level analogue
-//! of gRPC's framed messages in the paper's stack.
+//! **Protocol v1** — one in-flight request per connection:
+//! requests are `[u32-le total_len][u8 method][payload]`, responses
+//! `[u32-le total_len][u8 status][payload]` where status 0 = OK (payload is
+//! the method's response message) and nonzero = error class (payload is a
+//! UTF-8 error string). This is the transport-level analogue of gRPC's
+//! framed messages in the paper's stack.
+//!
+//! **Protocol v2** — multiplexed + streaming: every frame is
+//! `[u32-le total_len][u8 kind][u32-le correlation_id][body]` where `kind`
+//! is one of [`FrameKind`]. Kind bytes live in `0xE0..=0xE6`, disjoint from
+//! every v1 head byte (methods 1–19, Pythia 101/102, statuses 0–5), so the
+//! two protocols share the `[len][head][rest]` prefix and one
+//! [`FrameReader`] parses both: the first head byte a server sees decides
+//! the connection's protocol forever (`HELLO` ⇒ v2, anything else ⇒ the
+//! v1 path — no flag days, old clients keep working). See
+//! [`parse_v2`]/[`encode_v2`] for the v2 layer on top of the shared reader.
 
 use super::codec::{decode, encode, WireMessage};
 use std::io::{Read, Write};
@@ -97,6 +108,149 @@ impl Status {
     }
 }
 
+/// Highest wire-protocol version this build speaks.
+pub const WIRE_VERSION_MAX: u64 = 2;
+
+/// v2 frame kinds. Values are chosen in `0xE0..=0xE6` so they can never
+/// collide with a v1 head byte (request method ids 1–19 and Pythia
+/// 101/102, response status bytes 0–5): the first head byte on a fresh
+/// connection unambiguously selects the protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Version negotiation. Client sends `HELLO` (corr 0, body =
+    /// [`crate::wire::messages::HelloProto`]) as its first frame; a v2
+    /// server echoes `HELLO` with the highest mutually supported version.
+    /// A v1 server answers with a v1 error status byte (or closes), which
+    /// the client latches as "v1 peer" for the life of the endpoint.
+    Hello = 0xE0,
+    /// Unary request. Body = `[u8 method][request message]`.
+    Request = 0xE1,
+    /// Successful unary response. Body = response message.
+    Response = 0xE2,
+    /// One item of a server-push stream (e.g. a `WaitOperation` watch
+    /// snapshot). Body = item message.
+    StreamItem = 0xE3,
+    /// Normal end of a stream. Empty body.
+    StreamEnd = 0xE4,
+    /// Terminal failure for a unary call *or* a stream. Body =
+    /// `[u8 status][utf-8 message]`.
+    Error = 0xE5,
+    /// Client abandons the correlation id (dropped stream handle, caller
+    /// timeout). Empty body; the server drops any pending work/watchers
+    /// for the id and sends nothing further on it.
+    Cancel = 0xE6,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<FrameKind> {
+        use FrameKind::*;
+        Some(match v {
+            0xE0 => Hello,
+            0xE1 => Request,
+            0xE2 => Response,
+            0xE3 => StreamItem,
+            0xE4 => StreamEnd,
+            0xE5 => Error,
+            0xE6 => Cancel,
+            _ => return None,
+        })
+    }
+}
+
+/// True when `head` (the byte after the length prefix) belongs to the v2
+/// protocol. Used by servers to sniff the protocol from the first frame
+/// and by clients to recognise a v1 peer's reply to `HELLO`.
+pub fn is_v2_head(head: u8) -> bool {
+    FrameKind::from_u8(head).is_some()
+}
+
+/// A parsed v2 frame: `(kind, correlation id, body)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct V2Frame {
+    pub kind: FrameKind,
+    pub corr: u32,
+    pub body: Vec<u8>,
+}
+
+/// Split a `(head, payload)` pair produced by [`FrameReader`] /
+/// [`read_frame`] into a v2 frame. `payload` must start with the 4-byte
+/// little-endian correlation id.
+pub fn parse_v2(head: u8, mut payload: Vec<u8>) -> Result<V2Frame, FrameError> {
+    let kind = FrameKind::from_u8(head)
+        .ok_or_else(|| FrameError::Protocol(format!("not a v2 frame kind: {head:#04x}")))?;
+    if payload.len() < 4 {
+        return Err(FrameError::Protocol(format!(
+            "v2 frame too short for correlation id: {} bytes",
+            payload.len()
+        )));
+    }
+    let corr = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+    payload.drain(..4);
+    Ok(V2Frame { kind, corr, body: payload })
+}
+
+/// Encode a complete v2 frame (length prefix included) into a buffer —
+/// the building block for multiplexed writers that append frames to a
+/// shared out-buffer under a lock.
+pub fn encode_v2(kind: FrameKind, corr: u32, body: &[u8]) -> Result<Vec<u8>, FrameError> {
+    let total = 1u64 + 4 + body.len() as u64;
+    if total > MAX_FRAME as u64 {
+        return Err(FrameError::TooLarge(total.min(u32::MAX as u64) as u32));
+    }
+    let mut out = Vec::with_capacity(4 + total as usize);
+    out.extend_from_slice(&(total as u32).to_le_bytes());
+    out.push(kind as u8);
+    out.extend_from_slice(&corr.to_le_bytes());
+    out.extend_from_slice(body);
+    Ok(out)
+}
+
+/// Write a v2 frame to a stream (blocking writer path).
+pub fn write_v2<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    corr: u32,
+    body: &[u8],
+) -> Result<(), FrameError> {
+    let frame = encode_v2(kind, corr, body)?;
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Encode a v2 `REQUEST` frame: body = `[method][encoded message]`.
+pub fn encode_v2_request<M: WireMessage>(
+    corr: u32,
+    method: Method,
+    msg: &M,
+) -> Result<Vec<u8>, FrameError> {
+    let payload = encode(msg);
+    let mut body = Vec::with_capacity(1 + payload.len());
+    body.push(method as u8);
+    body.extend_from_slice(&payload);
+    encode_v2(FrameKind::Request, corr, &body)
+}
+
+/// Encode a v2 `ERROR` frame: body = `[status][utf-8 message]`.
+pub fn encode_v2_error(corr: u32, status: Status, message: &str) -> Result<Vec<u8>, FrameError> {
+    let mut body = Vec::with_capacity(1 + message.len());
+    body.push(status as u8);
+    body.extend_from_slice(message.as_bytes());
+    encode_v2(FrameKind::Error, corr, &body)
+}
+
+/// Decode the body of a v2 `ERROR` frame back into its `Rpc` error.
+pub fn decode_v2_error(body: &[u8]) -> FrameError {
+    if body.is_empty() {
+        return FrameError::Protocol("empty v2 error body".into());
+    }
+    FrameError::Rpc {
+        status: Status::from_u8(body[0]),
+        message: String::from_utf8_lossy(&body[1..]).into_owned(),
+    }
+}
+
 /// Transport-level errors.
 #[derive(Debug)]
 pub enum FrameError {
@@ -106,6 +260,8 @@ pub enum FrameError {
     Empty,
     Wire(super::codec::WireError),
     Rpc { status: Status, message: String },
+    /// Malformed v2 frame (bad kind byte, missing correlation id, ...).
+    Protocol(String),
 }
 
 impl std::fmt::Display for FrameError {
@@ -119,6 +275,7 @@ impl std::fmt::Display for FrameError {
             FrameError::Rpc { status, message } => {
                 write!(f, "rpc failed: {status:?}: {message}")
             }
+            FrameError::Protocol(msg) => write!(f, "protocol error: {msg}"),
         }
     }
 }
@@ -631,5 +788,99 @@ mod tests {
             let req: GetStudyRequest = decode(&p).unwrap();
             assert_eq!(req.name, format!("studies/{i}"));
         }
+    }
+
+    #[test]
+    fn v2_kind_bytes_disjoint_from_v1_heads() {
+        for head in 0u8..=255 {
+            let v1_method = Method::from_u8(head).is_some();
+            let v1_status = head <= 5;
+            let v1_pythia = head == 101 || head == 102;
+            if v1_method || v1_status || v1_pythia {
+                assert!(!is_v2_head(head), "head {head:#04x} is ambiguous");
+            }
+        }
+        for kind in [
+            FrameKind::Hello,
+            FrameKind::Request,
+            FrameKind::Response,
+            FrameKind::StreamItem,
+            FrameKind::StreamEnd,
+            FrameKind::Error,
+            FrameKind::Cancel,
+        ] {
+            assert!(is_v2_head(kind as u8));
+            assert_eq!(FrameKind::from_u8(kind as u8), Some(kind));
+        }
+    }
+
+    #[test]
+    fn v2_frame_roundtrips_through_shared_reader() {
+        let req = GetStudyRequest { name: "studies/42".into() };
+        let wire = encode_v2_request(7, Method::GetStudy, &req).unwrap();
+        // The v1 FrameReader parses the shared [len][head][rest] prefix.
+        let mut drip = Drip::new(&wire, 3, false);
+        let mut fr = FrameReader::new();
+        let (head, payload) = loop {
+            match fr.poll_frame(&mut drip).unwrap() {
+                FrameProgress::Frame(h, p) => break (h, p),
+                FrameProgress::Pending => {}
+                FrameProgress::Closed => panic!("unexpected close"),
+            }
+        };
+        let frame = parse_v2(head, payload).unwrap();
+        assert_eq!(frame.kind, FrameKind::Request);
+        assert_eq!(frame.corr, 7);
+        assert_eq!(frame.body[0], Method::GetStudy as u8);
+        let back: GetStudyRequest = decode(&frame.body[1..]).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn v2_error_frame_roundtrip() {
+        let wire = encode_v2_error(9, Status::NotFound, "no such study").unwrap();
+        let mut cur = Cursor::new(wire);
+        let (head, payload) = read_frame(&mut cur).unwrap();
+        let frame = parse_v2(head, payload).unwrap();
+        assert_eq!(frame.kind, FrameKind::Error);
+        assert_eq!(frame.corr, 9);
+        match decode_v2_error(&frame.body) {
+            FrameError::Rpc { status, message } => {
+                assert_eq!(status, Status::NotFound);
+                assert_eq!(message, "no such study");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_frame_without_corr_id_rejected() {
+        // A v2 kind byte with a body shorter than the correlation id.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&3u32.to_le_bytes());
+        wire.push(FrameKind::Cancel as u8);
+        wire.extend_from_slice(&[0, 0]);
+        let mut cur = Cursor::new(wire);
+        let (head, payload) = read_frame(&mut cur).unwrap();
+        assert!(matches!(parse_v2(head, payload), Err(FrameError::Protocol(_))));
+    }
+
+    #[test]
+    fn v2_stream_frames_roundtrip() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&encode_v2(FrameKind::StreamItem, 3, b"item").unwrap());
+        wire.extend_from_slice(&encode_v2(FrameKind::StreamEnd, 3, b"").unwrap());
+        wire.extend_from_slice(&encode_v2(FrameKind::Cancel, 4, b"").unwrap());
+        let mut cur = Cursor::new(wire);
+        let (h, p) = read_frame(&mut cur).unwrap();
+        let f = parse_v2(h, p).unwrap();
+        assert_eq!((f.kind, f.corr, f.body.as_slice()), (FrameKind::StreamItem, 3, &b"item"[..]));
+        let (h, p) = read_frame(&mut cur).unwrap();
+        let f = parse_v2(h, p).unwrap();
+        assert_eq!((f.kind, f.corr), (FrameKind::StreamEnd, 3));
+        assert!(f.body.is_empty());
+        let (h, p) = read_frame(&mut cur).unwrap();
+        let f = parse_v2(h, p).unwrap();
+        assert_eq!((f.kind, f.corr), (FrameKind::Cancel, 4));
     }
 }

@@ -912,11 +912,74 @@ simple_msg! {
     /// GetServiceMetrics: snapshot of the service + front-end counters.
     GetServiceMetricsRequest {}
 }
+
 simple_msg! {
-    /// Counter snapshot (Pythia v2 follow-up (c)): the coalescing ratio
-    /// `suggest_ops_served / policy_runs`, async-dispatch gauges, and
-    /// front-end occupancy, plus the human-readable report for
-    /// dashboards that just want text.
+    /// One named scalar metric (a monotonic counter or a point-in-time
+    /// gauge — the `kind` is implied by which repeated field carries it).
+    MetricPointProto { 1 => name: str, 2 => value: u64 }
+}
+
+/// One named latency histogram: summary stats plus the raw log-bucket
+/// counts, so clients can render the same table the server used to format.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricHistogramProto {
+    pub name: String,
+    pub count: u64,
+    /// Sum of recorded values in µs (not the mean: the sum recomputes
+    /// the exact float mean client-side, `sum_us / count`).
+    pub sum_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Log2 bucket counts (bucket i covers `[2^i, 2^(i+1))` µs).
+    pub buckets: Vec<u64>,
+}
+
+impl MetricHistogramProto {
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+impl WireMessage for MetricHistogramProto {
+    fn encode_fields(&self, w: &mut Writer) {
+        w.str(1, &self.name);
+        w.u64(2, self.count);
+        w.u64(3, self.sum_us);
+        w.u64(4, self.p50_us);
+        w.u64(5, self.p99_us);
+        for b in &self.buckets {
+            w.u64(6, *b);
+        }
+    }
+    fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
+        let mut m = MetricHistogramProto::default();
+        while let Some((f, v)) = r.next_field()? {
+            match f {
+                1 => m.name = v.as_string()?,
+                2 => m.count = v.as_u64()?,
+                3 => m.sum_us = v.as_u64()?,
+                4 => m.p50_us = v.as_u64()?,
+                5 => m.p99_us = v.as_u64()?,
+                6 => m.buckets.push(v.as_u64()?),
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+simple_msg! {
+    /// Counter snapshot (Pythia v2 follow-up (c)). Fields 1–10 are the
+    /// original flat counters (kept for old clients). Fields 12–14 are the
+    /// typed snapshot — every counter, gauge, and latency histogram the
+    /// server tracks, by name — from which new clients render the text
+    /// report *client-side* ([`crate::client::VizierClient::service_metrics`]);
+    /// field 11 (`report`) is the retired server-rendered text, still
+    /// decoded so old servers keep working.
     ServiceMetricsResponse {
         1 => policy_runs: u64,
         2 => suggest_ops_served: u64,
@@ -929,7 +992,18 @@ simple_msg! {
         9 => connections_total: u64,
         10 => requests: u64,
         11 => report: str,
+        12 => counters: (repmsg MetricPointProto),
+        13 => gauges: (repmsg MetricPointProto),
+        14 => histograms: (repmsg MetricHistogramProto),
     }
+}
+
+simple_msg! {
+    /// v2 `HELLO` handshake body (both directions). The client proposes
+    /// its highest supported `version`; the server echoes the highest
+    /// mutually supported one plus the per-connection in-flight request
+    /// cap it will enforce (`max_inflight`, 0 = server default).
+    HelloProto { 1 => version: u64, 2 => max_inflight: u64 }
 }
 
 simple_msg! {
@@ -1001,10 +1075,19 @@ simple_msg! { ListOptimalTrialsRequest { 1 => study_name: str } }
 
 /// One metadata write: `trial_id == 0` targets the StudySpec table, any
 /// other value targets that trial (the two metadata tables of §6.3).
+///
+/// Pythia v2 follow-up (b): when `new_trial_index > 0` the update targets
+/// the `(new_trial_index - 1)`-th trial *being suggested in the same
+/// decision* — the policy has no real ids yet, so it addresses its own
+/// batch positionally and the service resolves the placeholder to the
+/// registered trial id atomically with the batch
+/// (`trial_id` must be 0 in that case).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct UnitMetadataUpdate {
     pub trial_id: u64,
     pub item: Option<MetadataItem>,
+    /// 1-based index into the decision's suggestion batch; 0 = unset.
+    pub new_trial_index: u64,
 }
 
 impl WireMessage for UnitMetadataUpdate {
@@ -1013,6 +1096,9 @@ impl WireMessage for UnitMetadataUpdate {
         if let Some(item) = &self.item {
             w.msg(2, item);
         }
+        if self.new_trial_index > 0 {
+            w.u64(3, self.new_trial_index);
+        }
     }
     fn decode_fields(r: &mut Reader) -> Result<Self, WireError> {
         let mut u = UnitMetadataUpdate::default();
@@ -1020,6 +1106,7 @@ impl WireMessage for UnitMetadataUpdate {
             match f {
                 1 => u.trial_id = v.as_u64()?,
                 2 => u.item = Some(v.as_msg()?),
+                3 => u.new_trial_index = v.as_u64()?,
                 _ => {}
             }
         }
@@ -1258,6 +1345,7 @@ mod tests {
             study_name: "studies/9".into(),
             updates: vec![UnitMetadataUpdate {
                 trial_id: 0,
+                new_trial_index: 0,
                 item: Some(MetadataItem {
                     namespace: "evo".into(),
                     key: "population".into(),
@@ -1290,9 +1378,26 @@ mod tests {
             connections_total: 250,
             requests: 10_000,
             report: "frontend: ...".into(),
+            counters: vec![MetricPointProto {
+                name: "errors".into(),
+                value: 1,
+            }],
+            gauges: vec![MetricPointProto {
+                name: "in_flight_policy_jobs".into(),
+                value: 7,
+            }],
+            histograms: vec![MetricHistogramProto {
+                name: "method.SuggestTrials".into(),
+                count: 4,
+                sum_us: 1000,
+                p50_us: 256,
+                p99_us: 512,
+                buckets: vec![0, 1, 3],
+            }],
         };
         let back: ServiceMetricsResponse = decode(&encode(&m)).unwrap();
         assert_eq!(back, m);
+        assert!((back.histograms[0].mean_us() - 250.0).abs() < f64::EPSILON);
     }
 
     #[test]

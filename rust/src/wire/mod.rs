@@ -9,6 +9,12 @@
 //! TCP transport. The architectural property the paper relies on — a
 //! language-neutral binary client/server boundary — is preserved: any
 //! language can implement this codec in a few hundred lines.
+//!
+//! The framing layer speaks two protocols on one port: the original
+//! blocking v1 and the multiplexed/streaming v2 (correlation-id frames,
+//! `HELLO` negotiation, watch streams, `CANCEL`). The full wire spec —
+//! frame layouts, handshake, correlation-id rules, stream lifecycles —
+//! is in `rust/docs/WIRE.md`.
 
 pub mod codec;
 pub mod framing;

@@ -188,11 +188,14 @@ fn wait_operation_wakes_parked_clients_over_tcp() {
         })
         .collect();
 
-    // All five clients end up parked in WaitOperation: five pending
-    // operations, five parked responses, no extra threads.
+    // All five clients end up waiting server-side: five pending
+    // operations and — depending on the negotiated wire — five parked
+    // long-poll responses (v1) or five watch streams (v2). No extra
+    // threads either way.
     let fe = Arc::clone(server.frontend_metrics());
+    let svc_metrics = Arc::clone(&service.metrics);
     wait_until("all clients parked", Duration::from_secs(20), || {
-        fe.parked_responses() == n as u64
+        fe.parked_responses() + svc_metrics.watch_streams() == n as u64
     });
     assert_eq!(service.metrics.in_flight_policy_jobs(), n as u64);
     assert_eq!(ds.pending_operations().unwrap().len(), n);
@@ -211,11 +214,12 @@ fn wait_operation_wakes_parked_clients_over_tcp() {
     }
 
     // The new client path never touched GetOperation — completion was
-    // pushed, not polled.
+    // pushed, not polled (on both wires).
     assert_eq!(service.metrics.histogram("GetOperation").count(), 0);
     assert_eq!(service.metrics.histogram("WaitOperation").count(), n as u64);
     assert_eq!(service.metrics.wait_wakeup.count(), n as u64);
     assert_eq!(service.metrics.in_flight_policy_jobs(), 0);
+    assert_eq!(service.metrics.watch_streams(), 0, "watch streams must drain");
     // Coalescing still held: the four queued ops shared one policy run.
     assert_eq!(invocations.load(Ordering::SeqCst), 2);
     server.shutdown();
@@ -357,7 +361,10 @@ fn crash_resume_completes_a_parked_wait() {
     });
 
     let fe = Arc::clone(server.frontend_metrics());
-    wait_until("the wait to park", Duration::from_secs(10), || fe.parked_responses() == 1);
+    let svc_metrics = Arc::clone(&service.metrics);
+    wait_until("the wait to park", Duration::from_secs(10), || {
+        fe.parked_responses() + svc_metrics.watch_streams() == 1
+    });
     // Still pending: nothing has run it.
     assert!(!ds.get_operation(&op.name).unwrap().done);
 

@@ -1,0 +1,567 @@
+//! Cross-version wire matrix: a v1 client against a v2 server and a v2
+//! client against the same server both complete the full
+//! suggest/report/early-stop loop; one multiplexed connection carries
+//! many concurrent in-flight RPCs; the v2 `WaitOperation` watch stream
+//! observes every operation transition with zero `GetOperation` calls;
+//! and CANCEL / mid-stream disconnect leave no leaked waiter, parked
+//! slot, or gauge drift (asserted through `GetServiceMetrics`, the way a
+//! fleet operator would see it). See `rust/docs/WIRE.md` for the
+//! protocol itself.
+
+use ossvizier::client::transport::{TcpTransport, Transport};
+use ossvizier::client::VizierClient;
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use ossvizier::pythia::runner::default_registry;
+use ossvizier::pythia::supporter::PolicySupporter;
+use ossvizier::pyvizier::{
+    converters, Algorithm, Measurement, MetricInformation, StudyConfig, TrialSuggestion,
+};
+use ossvizier::service::remote_pythia::{PythiaServer, RemotePythia};
+use ossvizier::service::{build_service, ServerOptions, VizierServer, VizierService};
+use ossvizier::testing::poller_from_env;
+use ossvizier::testing::procfs::threads_with_prefix;
+use ossvizier::wire::codec::{decode, encode};
+use ossvizier::wire::framing::{
+    encode_v2_request, parse_v2, read_frame, read_response, write_v2, FrameError, FrameKind,
+    Method, Status, WIRE_VERSION_MAX,
+};
+use ossvizier::wire::messages::{
+    CreateStudyRequest, EmptyResponse, HelloProto, OperationKind, OperationProto,
+    OperationResponse, ScaleType, ServiceMetricsResponse, StudyProto, WaitOperationRequest,
+};
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Tests here count threads via /proc and read process-global gauges, so
+/// they must not overlap with each other's servers.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// The CI matrix leg `OSSVIZIER_WIRE=v1` pins every transport to the
+/// legacy protocol; v2-specific tests detect that and degrade to a
+/// no-op (the v1 coverage in this file is what that leg is for).
+fn env_forced_v1() -> bool {
+    std::env::var("OSSVIZIER_WIRE").map(|v| v == "v1").unwrap_or(false)
+}
+
+fn test_config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("matrix");
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = algorithm;
+    c.seed = 23;
+    c
+}
+
+fn wait_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let by = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < by, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn gauge(resp: &ServiceMetricsResponse, name: &str) -> u64 {
+    resp.gauges.iter().find(|g| g.name == name).map_or(0, |g| g.value)
+}
+
+fn hist_count(resp: &ServiceMetricsResponse, name: &str) -> u64 {
+    resp.histograms.iter().find(|h| h.name == name).map_or(0, |h| h.count)
+}
+
+// ---------------------------------------------------------------------------
+// A policy whose first invocation blocks on a gate (same shape as
+// tests/async_dispatch.rs), so operations stay in flight deterministically.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct GatedPolicy {
+    gate: Arc<Gate>,
+    invocations: Arc<AtomicUsize>,
+}
+
+impl Policy for GatedPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        if self.invocations.fetch_add(1, Ordering::SeqCst) == 0 {
+            self.gate.wait(); // only the first invocation blocks
+        }
+        Ok(SuggestDecision::from_flat(
+            req,
+            vec![TrialSuggestion::default(); req.total_count()],
+        ))
+    }
+}
+
+fn gated_service(
+    ds: Arc<dyn Datastore>,
+    policy_workers: usize,
+) -> (Arc<VizierService>, Arc<Gate>, Arc<AtomicUsize>) {
+    let gate = Arc::new(Gate::default());
+    let invocations = Arc::new(AtomicUsize::new(0));
+    let (g, inv) = (Arc::clone(&gate), Arc::clone(&invocations));
+    let service = build_service(
+        ds,
+        move |reg| {
+            reg.register(
+                "GATED",
+                Arc::new(move |_| {
+                    Box::new(GatedPolicy {
+                        gate: Arc::clone(&g),
+                        invocations: Arc::clone(&inv),
+                    })
+                }),
+            );
+        },
+        policy_workers,
+    );
+    (service, gate, invocations)
+}
+
+fn start_server(service: Arc<VizierService>, workers: usize) -> VizierServer {
+    VizierServer::start_with(
+        service,
+        "127.0.0.1:0",
+        ServerOptions { workers, poller: poller_from_env(), ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// One full client lifecycle — create/load study, suggest, report
+/// intermediate measurements, complete, early-stop query, list — used
+/// identically by both matrix legs below.
+fn run_full_loop(transport: TcpTransport, study: &str) {
+    let config = test_config(Algorithm::RandomSearch);
+    let mut client =
+        VizierClient::load_or_create_study(Box::new(transport), study, &config, "w0").unwrap();
+    for _ in 0..3 {
+        let trials = client.get_suggestions(2).unwrap();
+        assert_eq!(trials.len(), 2);
+        for t in trials {
+            client
+                .add_measurement(t.id, &Measurement::new(1).with_metric("score", 0.5))
+                .unwrap();
+            // Early-stop check rides the same loop (no stopping policy
+            // configured, so the answer is "keep going").
+            assert!(!client.should_trial_stop(t.id).unwrap());
+            client
+                .complete_trial(t.id, Some(&Measurement::new(2).with_metric("score", 0.7)))
+                .unwrap();
+        }
+    }
+    let trials = client.list_trials().unwrap();
+    assert_eq!(trials.len(), 6);
+    assert!(trials.iter().all(|t| t.is_completed()));
+}
+
+/// A v1-pinned client completes the whole tuning loop against a v2
+/// server: the server must keep serving the legacy protocol forever.
+#[test]
+fn v1_client_full_loop_against_v2_server() {
+    let _serial = serial();
+    let server = start_server(ossvizier::service::in_memory_service(2), 2);
+    let addr = server.local_addr().to_string();
+
+    let mut t = TcpTransport::connect(&addr).unwrap();
+    t.force_v1();
+    assert_eq!(t.wire_version(), 1);
+    run_full_loop(t, "matrix-v1");
+    server.shutdown();
+}
+
+/// The default transport negotiates v2 against the same server and runs
+/// the identical loop; the negotiated version is asserted so a silent
+/// fallback to v1 cannot fake this test green.
+#[test]
+fn v2_client_full_loop_with_negotiated_mux() {
+    let _serial = serial();
+    let server = start_server(ossvizier::service::in_memory_service(2), 2);
+    let addr = server.local_addr().to_string();
+
+    let t = TcpTransport::connect(&addr).unwrap();
+    if !env_forced_v1() {
+        assert_eq!(t.wire_version(), 2, "HELLO negotiation must land on v2");
+    }
+    run_full_loop(t, "matrix-v2");
+    server.shutdown();
+}
+
+/// Acceptance: a single multiplexed connection carries >= 8 concurrent
+/// in-flight RPCs. Eight clients share one transport (`try_share`),
+/// all suggest against a gated study, and all eight waits are in flight
+/// on ONE socket (front-end `active_connections == 1`) before the gate
+/// opens and every client completes.
+#[test]
+fn one_connection_carries_eight_concurrent_inflight_rpcs() {
+    let _serial = serial();
+    if env_forced_v1() {
+        eprintln!("skipping: OSSVIZIER_WIRE=v1 pins the legacy protocol");
+        return;
+    }
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let (service, gate, invocations) = gated_service(Arc::clone(&ds), 1);
+    let server = start_server(Arc::clone(&service), 2);
+    let addr = server.local_addr().to_string();
+    let config = test_config(Algorithm::Custom("GATED".into()));
+    let study = service
+        .create_study(CreateStudyRequest {
+            study: StudyProto {
+                display_name: "matrix".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            },
+        })
+        .unwrap()
+        .study;
+
+    let base = TcpTransport::connect(&addr).unwrap();
+    assert_eq!(base.wire_version(), 2);
+
+    let n = 8usize;
+    let spawn_worker = |t: TcpTransport, i: usize| {
+        let study = study.name.clone();
+        std::thread::spawn(move || {
+            let mut client = VizierClient::for_study(Box::new(t), &study, &format!("w{i}"));
+            client.get_suggestions(1).unwrap().len()
+        })
+    };
+
+    // Worker 0's policy run occupies the single policy worker (blocked
+    // on the gate); make sure it started before piling on, so workers
+    // 1..7 coalesce behind it instead of racing it.
+    let mut handles = vec![spawn_worker(base.try_share().unwrap(), 0)];
+    wait_until("the gated policy run to start", Duration::from_secs(10), || {
+        invocations.load(Ordering::SeqCst) >= 1
+    });
+    for i in 1..n {
+        handles.push(spawn_worker(base.try_share().unwrap(), i));
+    }
+
+    // All eight operations are in flight concurrently: eight watch
+    // streams registered, all multiplexed over the one TCP connection.
+    let fe = Arc::clone(server.frontend_metrics());
+    let svc_metrics = Arc::clone(&service.metrics);
+    wait_until("eight in-flight waits", Duration::from_secs(20), || {
+        svc_metrics.watch_streams() == n as u64
+    });
+    assert_eq!(fe.active_connections(), 1, "all RPCs must share one socket");
+
+    gate.release();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 1);
+    }
+    assert_eq!(service.metrics.watch_streams(), 0, "watch streams must drain");
+    assert_eq!(service.metrics.histogram("GetOperation").count(), 0);
+    server.shutdown();
+}
+
+/// Acceptance: the v2 watch stream observes every operation transition
+/// — the registration snapshot (pending) and the completion (done) each
+/// arrive as a `STREAM_ITEM` — with zero `GetOperation` calls.
+#[test]
+fn watch_stream_observes_every_transition_without_polling() {
+    let _serial = serial();
+    if env_forced_v1() {
+        eprintln!("skipping: OSSVIZIER_WIRE=v1 pins the legacy protocol");
+        return;
+    }
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let config = test_config(Algorithm::RandomSearch);
+    let study = ds
+        .create_study(StudyProto {
+            display_name: "watch".into(),
+            spec: converters::study_config_to_proto(&config),
+            ..Default::default()
+        })
+        .unwrap();
+    // A persisted pending operation with no live runner (the
+    // crash-resume artifact): its only transition is resume -> done.
+    let op = ds
+        .create_operation(OperationProto {
+            kind: OperationKind::SuggestTrials,
+            study_name: study.name.clone(),
+            client_id: "w0".into(),
+            count: 1,
+            ..Default::default()
+        })
+        .unwrap();
+
+    let service = build_service(Arc::clone(&ds), |_| {}, 2);
+    let server = start_server(Arc::clone(&service), 2);
+    let addr = server.local_addr().to_string();
+
+    let mut t = TcpTransport::connect(&addr).unwrap();
+    assert_eq!(t.wire_version(), 2);
+    let req = WaitOperationRequest { name: op.name.clone(), timeout_ms: 0 };
+    let mut stream = t
+        .call_stream(Method::WaitOperation, &encode(&req))
+        .unwrap()
+        .expect("v2 transport must open a watch stream");
+
+    // First item: the registration snapshot of the still-pending op.
+    let first = stream.next(Some(Duration::from_secs(10))).unwrap().expect("snapshot item");
+    let snap: OperationResponse = decode(&first).unwrap();
+    assert!(!snap.operation.done, "registration snapshot must be the pending state");
+
+    wait_until("the watcher to register", Duration::from_secs(10), || {
+        service.metrics.watch_streams() == 1
+    });
+    assert_eq!(service.resume_pending_operations().unwrap(), 1);
+
+    // Every further transition is pushed; the stream ends after `done`.
+    let mut items = Vec::new();
+    while let Some(body) = stream.next(Some(Duration::from_secs(10))).unwrap() {
+        let resp: OperationResponse = decode(&body).unwrap();
+        items.push(resp.operation);
+    }
+    let last = items.last().expect("at least the done transition");
+    assert!(last.done, "final item must be the completed operation");
+    assert_eq!(last.trials.len(), 1);
+    assert!(
+        items.iter().rev().skip(1).all(|o| !o.done),
+        "done must be the final transition, in order"
+    );
+
+    // Zero polling: completion was pushed, not fetched.
+    assert_eq!(service.metrics.histogram("GetOperation").count(), 0);
+    assert_eq!(service.metrics.histogram("WaitOperation").count(), 1);
+    wait_until("the watcher to drain", Duration::from_secs(10), || {
+        service.metrics.watch_streams() == 0
+    });
+    server.shutdown();
+}
+
+/// CANCEL (dropping a stream handle) and an abrupt mid-stream TCP
+/// disconnect both disarm the server-side watcher: the `watch_streams`
+/// and `parked_responses` gauges return to zero, observed through
+/// `GetServiceMetrics` like an external operator would.
+#[test]
+fn cancel_and_disconnect_leave_no_leaked_waiters() {
+    let _serial = serial();
+    if env_forced_v1() {
+        eprintln!("skipping: OSSVIZIER_WIRE=v1 pins the legacy protocol");
+        return;
+    }
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let config = test_config(Algorithm::RandomSearch);
+    let study = ds
+        .create_study(StudyProto {
+            display_name: "leak".into(),
+            spec: converters::study_config_to_proto(&config),
+            ..Default::default()
+        })
+        .unwrap();
+    // Never completed: any watcher on it lives until disarmed.
+    let op = ds
+        .create_operation(OperationProto {
+            kind: OperationKind::SuggestTrials,
+            study_name: study.name.clone(),
+            client_id: "w0".into(),
+            count: 1,
+            ..Default::default()
+        })
+        .unwrap();
+
+    let service = build_service(Arc::clone(&ds), |_| {}, 2);
+    let server = start_server(Arc::clone(&service), 2);
+    let addr = server.local_addr().to_string();
+
+    // The observer uses its own connection and only reads metrics.
+    let mut observer =
+        VizierClient::for_study(Box::new(TcpTransport::connect(&addr).unwrap()), "none", "m");
+    let watchers = |c: &mut VizierClient| {
+        let m = c.service_metrics().unwrap();
+        (gauge(&m, "watch_streams"), gauge(&m, "frontend.parked_responses"))
+    };
+    assert_eq!(watchers(&mut observer), (0, 0));
+
+    let req = WaitOperationRequest { name: op.name.clone(), timeout_ms: 0 };
+
+    // --- Explicit CANCEL: drop the stream handle, keep the connection.
+    let mut t = TcpTransport::connect(&addr).unwrap();
+    assert_eq!(t.wire_version(), 2);
+    {
+        let mut stream = t
+            .call_stream(Method::WaitOperation, &encode(&req))
+            .unwrap()
+            .expect("watch stream");
+        // Consume the registration snapshot so the watcher is armed.
+        stream.next(Some(Duration::from_secs(10))).unwrap().expect("snapshot");
+        wait_until("the watcher to arm", Duration::from_secs(10), || {
+            service.metrics.watch_streams() == 1
+        });
+    } // drop sends CANCEL
+    wait_until("CANCEL to disarm the watcher", Duration::from_secs(10), || {
+        service.metrics.watch_streams() == 0
+    });
+    // The same connection is still healthy for ordinary RPCs.
+    let m = {
+        let mut c = VizierClient::for_study(Box::new(t), "none", "m2");
+        c.service_metrics().unwrap()
+    };
+    assert_eq!(gauge(&m, "watch_streams"), 0);
+
+    // --- Mid-stream disconnect: a hand-rolled v2 connection that dies
+    // abruptly — no CANCEL frame, just a closed socket. The server-side
+    // teardown hook must disarm the watcher all the same.
+    {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write_v2(
+            &mut raw,
+            FrameKind::Hello,
+            0,
+            &encode(&HelloProto { version: WIRE_VERSION_MAX, max_inflight: 0 }),
+        )
+        .unwrap();
+        let (head, payload) = read_frame(&mut raw).unwrap();
+        let hello = parse_v2(head, payload).unwrap();
+        assert_eq!(hello.kind, FrameKind::Hello);
+        raw.write_all(&encode_v2_request(7, Method::WaitOperation, &req).unwrap()).unwrap();
+        // Wait for the registration snapshot so the watcher is armed,
+        // then drop the socket mid-stream.
+        let (head, payload) = read_frame(&mut raw).unwrap();
+        assert_eq!(parse_v2(head, payload).unwrap().kind, FrameKind::StreamItem);
+        wait_until("the second watcher to arm", Duration::from_secs(10), || {
+            service.metrics.watch_streams() == 1
+        });
+    } // TCP close, mid-stream
+    wait_until("disconnect to disarm the watcher", Duration::from_secs(10), || {
+        let (ws, parked) = watchers(&mut observer);
+        ws == 0 && parked == 0
+    });
+    let m = observer.service_metrics().unwrap();
+    assert_eq!(gauge(&m, "in_flight_policy_jobs"), 0);
+    assert_eq!(hist_count(&m, "method.GetOperation"), 0, "no polling anywhere in this test");
+    server.shutdown();
+}
+
+/// Acceptance: PythiaServer handler threads never block on policy
+/// compute. While a policy run is parked on the gate (occupying a
+/// compute thread), the `pythia-fe` pool stays at its thread budget and
+/// still answers unrelated requests immediately — the same procfs
+/// assertion shape as tests/async_dispatch.rs uses for the API server.
+#[test]
+fn pythia_handler_threads_never_block_on_policy_compute() {
+    let _serial = serial();
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let gate = Arc::new(Gate::default());
+    let invocations = Arc::new(AtomicUsize::new(0));
+    let mut registry = default_registry();
+    {
+        let (g, inv) = (Arc::clone(&gate), Arc::clone(&invocations));
+        registry.register(
+            "GATED",
+            Arc::new(move |_| {
+                Box::new(GatedPolicy { gate: Arc::clone(&g), invocations: Arc::clone(&inv) })
+            }),
+        );
+    }
+
+    // Figure-2 topology, two-phase bind (as in tests/service_loop.rs).
+    let api_placeholder = VizierServer::start(
+        VizierService::new(Arc::clone(&ds), Arc::new(RemotePythia::new("127.0.0.1:1")), 4),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let api_addr = api_placeholder.local_addr().to_string();
+    let fe_workers = 2;
+    let pythia = PythiaServer::start_with(registry, &api_addr, "127.0.0.1:0", fe_workers).unwrap();
+    let pythia_addr = pythia.local_addr().to_string();
+    api_placeholder.shutdown();
+    let service =
+        VizierService::new(Arc::clone(&ds), Arc::new(RemotePythia::new(&pythia_addr)), 4);
+    let api = VizierServer::start(Arc::clone(&service), &api_addr).unwrap();
+
+    let config = test_config(Algorithm::Custom("GATED".into()));
+    let study = service
+        .create_study(CreateStudyRequest {
+            study: StudyProto {
+                display_name: "pythia-budget".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            },
+        })
+        .unwrap()
+        .study;
+
+    let suggester = {
+        let api_addr = api_addr.clone();
+        let study = study.name.clone();
+        std::thread::spawn(move || {
+            let t = TcpTransport::connect(&api_addr).unwrap();
+            let mut client = VizierClient::for_study(Box::new(t), &study, "w0");
+            client.get_suggestions(1).unwrap().len()
+        })
+    };
+    wait_until("the policy run to park on the gate", Duration::from_secs(10), || {
+        invocations.load(Ordering::SeqCst) >= 1
+    });
+
+    // The policy is parked on a compute thread ("vizier-worker-*"), NOT
+    // on a pythia-fe handler: the pool is at budget and a fresh request
+    // on a fresh connection gets an immediate answer.
+    if let Some(threads) = threads_with_prefix("pythia-fe") {
+        assert!(
+            threads <= fe_workers + 2,
+            "pythia front-end grew past its budget: {threads} threads \
+             (budget {}; a handler is blocking on policy compute)",
+            fe_workers + 2
+        );
+    }
+    let start = Instant::now();
+    let mut probe = TcpStream::connect(&pythia_addr).unwrap();
+    probe.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Raw v1 frame with a bogus method byte: the prompt Unimplemented
+    // error proves a handler worker was free while the policy computed.
+    probe.write_all(&1u32.to_le_bytes()).unwrap();
+    probe.write_all(&[200u8]).unwrap();
+    probe.flush().unwrap();
+    let mut r = BufReader::new(probe.try_clone().unwrap());
+    match read_response::<_, EmptyResponse>(&mut r) {
+        Err(FrameError::Rpc { status, .. }) => {
+            assert_eq!(status, Status::Unimplemented);
+        }
+        other => panic!("expected Unimplemented from the free handler, got {other:?}"),
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "handler round-trip stalled behind the parked policy run"
+    );
+
+    gate.release();
+    assert_eq!(suggester.join().unwrap(), 1);
+    api.shutdown();
+    pythia.shutdown();
+}
