@@ -18,6 +18,12 @@
 //! - `lock-rank` — every `Mutex::new(` / `RwLock::new(` outside
 //!   `util/sync.rs` names a registered `classes::` rank, so no lock can
 //!   be created outside the declared hierarchy.
+//! - `shard-map-access` — the datastore's shard maps (`.shards`, and
+//!   study/trial/operation maps reached through a lock guard) may not
+//!   be walked directly outside `datastore/`: readers go through the
+//!   snapshot accessors (`Datastore` trait reads / `shard_image`) so
+//!   the copy-on-write read protocol — and its metrics — see every
+//!   access.
 //!
 //! A violation that is genuinely intended is silenced with
 //! `// lint: allow(<rule>)` on the same line or the line directly above.
@@ -188,8 +194,37 @@ fn lint_file(rel: &str, text: &str) -> Vec<Violation> {
                 );
             }
         }
+
+        // shard-map-access: datastore internals stay behind the
+        // snapshot accessors outside datastore/.
+        if !rel.starts_with("datastore/") && shard_map_access(&line.code) {
+            report(
+                "shard-map-access",
+                "direct shard-map access; go through the datastore snapshot accessors"
+                    .to_string(),
+            );
+        }
     }
     out
+}
+
+/// Direct reach into the datastore's sharded maps: the shard vector
+/// itself, or a study/trial/operation map read through a lock guard
+/// (`…read().studies`-style chains). Legal accesses go through the
+/// `Datastore` trait or the `shard_image` snapshot accessor, which is
+/// what keeps the copy-on-write read metrics truthful.
+fn shard_map_access(code: &str) -> bool {
+    const NEEDLES: [&str; 8] = [
+        ".shards[",
+        ".shards.",
+        "read().studies",
+        "read().trials",
+        "read().operations",
+        "write().studies",
+        "write().trials",
+        "write().operations",
+    ];
+    NEEDLES.iter().any(|n| code.contains(n))
 }
 
 /// The two modules that declare raw libc bindings.
@@ -534,6 +569,32 @@ mod tests {
         // The wrong rule name does not silence it.
         let wrong = "fn f() { g().unwrap(); } // lint: allow(std-sync)";
         assert_eq!(rules("service/api.rs", wrong), vec!["no-unwrap"]);
+    }
+
+    #[test]
+    fn shard_map_access_is_flagged_outside_datastore() {
+        assert_eq!(
+            rules("service/api.rs", "let n = self.ds.shards[idx].read().studies.len();"),
+            vec!["shard-map-access"]
+        );
+        assert_eq!(
+            rules("pythia/runner.rs", "for s in shard.read().trials.values() {}"),
+            vec!["shard-map-access"]
+        );
+        // The datastore's own modules implement the accessor.
+        assert!(rules(
+            "datastore/memory.rs",
+            "let n = self.shards[idx].read().studies.len();"
+        )
+        .is_empty());
+        // Going through the snapshot accessor is the sanctioned path.
+        assert!(rules("service/api.rs", "let img = mem.shard_image(idx);").is_empty());
+        // Unrelated `.trials` fields (protos, pages) stay legal.
+        assert!(rules("service/api.rs", "let ts = page.trials.len() + op.trials.len();").is_empty());
+        // An intended escape is silenced like every other rule.
+        let allowed =
+            "let n = ds.shards[0].read().studies.len(); // lint: allow(shard-map-access)";
+        assert!(rules("service/api.rs", allowed).is_empty());
     }
 
     #[test]

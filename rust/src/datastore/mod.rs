@@ -23,6 +23,18 @@
 //!   uniqueness go through a small directory lock that is never held
 //!   across shard work.
 //!
+//! * **Copy-on-write snapshot reads** ([`memory::InMemoryDatastore`],
+//!   the default mode): each shard's state is an immutable
+//!   `Arc<ShardImage>` republished atomically after every write
+//!   (clone-on-write of only the touched study/chunk), so *readers take
+//!   no lock at all* — one atomic pointer load yields a self-consistent
+//!   image that a burst of `ListTrials`/`QueryTrials`/suggest scans can
+//!   walk while writers keep committing. `OSSVIZIER_DATASTORE_COW=off`
+//!   (or `--datastore-cow off`) restores the lock-per-read baseline.
+//!   The publish/pin/reclaim protocol, its lock-rank class
+//!   (`datastore.image_retire`), and the chunked trial layout are
+//!   documented in [`memory`].
+//!
 //! * **Group commit with per-shard lanes** ([`wal::WalDatastore`]):
 //!   mutations from concurrent connections are appended to per-shard
 //!   commit lanes and one dedicated committer thread writes + fsyncs all
@@ -53,12 +65,16 @@
 //!    never-acked suffix, and only the final segment may be torn
 //!    (sealed segments are fsynced at rotation).
 //! 3. **Compaction transparency.** A base snapshot is cut from live
-//!    state in short paged reads (study rows per shard, trials in keyed
-//!    pages) — never under the commit path, and never holding any lock
-//!    longer than one page clone — and may therefore overlap the tail;
-//!    replay applies are blind per-key upserts/deletes, so base-then-tail
-//!    replay converges to the same state as replaying the full original
-//!    log (`tests/fault_tolerance.rs`:
+//!    state without perturbing the commit path: in copy-on-write mode
+//!    (the default) each shard is a single atomic image load and the
+//!    compactor streams the pinned image holding **zero** shard locks;
+//!    in the `OSSVIZIER_DATASTORE_COW=off` baseline it falls back to
+//!    short paged reads (study rows per shard, trials in keyed pages),
+//!    never holding any lock longer than one page clone. Either way the
+//!    base may overlap the tail; replay applies are blind per-key
+//!    upserts/deletes, so base-then-tail replay converges to the same
+//!    state as replaying the full original log
+//!    (`tests/fault_tolerance.rs`:
 //!    `crash_at_every_compaction_stage_recovers_cleanly`).
 //!
 //! The datastore's locks sit in the crate-wide hierarchy declared in

@@ -50,6 +50,13 @@ impl TrialFilter {
         self
     }
 
+    /// The inclusive id window `[lo, hi]` this filter can match — the
+    /// range the datastore's chunked trial scan walks, so incremental
+    /// reads never touch rows outside the window.
+    pub fn id_bounds(&self) -> (u64, u64) {
+        (self.min_id.unwrap_or(0), self.max_id.unwrap_or(u64::MAX))
+    }
+
     pub fn matches(&self, t: &TrialProto) -> bool {
         if !self.states.is_empty() && !self.states.contains(&t.state) {
             return false;
@@ -133,6 +140,14 @@ mod tests {
         let f = TrialFilter::default().with_limit(2);
         let kept = f.apply(trials());
         assert_eq!(kept.iter().map(|t| t.id).collect::<Vec<_>>(), vec![4, 5]);
+    }
+
+    #[test]
+    fn id_bounds_default_to_full_range() {
+        assert_eq!(TrialFilter::default().id_bounds(), (0, u64::MAX));
+        let f = TrialFilter { min_id: Some(7), max_id: Some(9), ..Default::default() };
+        assert_eq!(f.id_bounds(), (7, 9));
+        assert_eq!(TrialFilter::default().newer_than(3).id_bounds(), (4, u64::MAX));
     }
 
     #[test]

@@ -42,15 +42,20 @@
 //! renamed into place the superseded segments are ignored (and cleaned
 //! up) whether or not the compactor got to delete them.
 //!
-//! The snapshot is cut from the *live* in-memory state in short, paged
-//! reads — study rows per shard (`InMemoryDatastore::snapshot_shard`),
+//! The snapshot is cut from the *live* in-memory state. With
+//! copy-on-write snapshot reads (the default — see
+//! [`super::memory`]), each shard is one atomic image load: the
+//! compactor pins an immutable `ShardImage` and streams every study,
+//! trial, and pending operation out of it while holding **zero** shard
+//! locks, so base-snapshot writing cannot perturb the commit path at
+//! all. With `OSSVIZIER_DATASTORE_COW=off` the legacy paged path runs
+//! instead — study rows per shard (`InMemoryDatastore::snapshot_shard`),
 //! then each study's trials in keyed pages — so no lock is ever held
-//! longer than one page clone and the commit path never stalls on it.
-//! The base may therefore already contain the effects of records that
-//! sit in the tail; replay applies are blind per-key upserts/deletes,
-//! so re-applying the tail over the base converges to the exact
-//! crash-time state (per shard, replay is always a prefix of the apply
-//! order that covers every acknowledged commit).
+//! longer than one page clone. Either way the base may already contain
+//! the effects of records that sit in the tail; replay applies are
+//! blind per-key upserts/deletes, so re-applying the tail over the base
+//! converges to the exact crash-time state (per shard, replay is always
+//! a prefix of the apply order that covers every acknowledged commit).
 //!
 //! # Group commit and per-shard commit lanes
 //!
@@ -95,9 +100,9 @@
 //! in this module's comments are machine-checked under lockdep (debug
 //! builds / `OSSVIZIER_LOCKDEP=1`) — see `rust/docs/INVARIANTS.md`.
 
-use super::memory::InMemoryDatastore;
+use super::memory::{cow_default_from_env, InMemoryDatastore, DEFAULT_SHARD_COUNT};
 use super::{Datastore, DsError};
-use crate::service::metrics::WalMetrics;
+use crate::service::metrics::{DatastoreMetrics, WalMetrics};
 use crate::util::sync::{classes, Condvar, Mutex, RwLock};
 use crate::util::time::Stopwatch;
 use crate::wire::codec::{decode, encode, Reader, WireError, WireMessage, Writer};
@@ -261,6 +266,13 @@ pub struct WalOptions {
     /// bounds replay *bytes* when a small hot state is overwritten many
     /// times per segment.
     pub compact_amplification: u64,
+    /// Datastore read-path mode for the in-memory store the WAL replays
+    /// into. `Some(true)` = copy-on-write snapshot reads (lock-free
+    /// readers, zero-lock compactor snapshots), `Some(false)` = the
+    /// lock-per-read baseline, `None` = follow
+    /// `OSSVIZIER_DATASTORE_COW` (defaulting to on). See
+    /// [`super::memory`] for the snapshot/publish protocol.
+    pub datastore_cow: Option<bool>,
 }
 
 impl Default for WalOptions {
@@ -272,6 +284,7 @@ impl Default for WalOptions {
             segment_bytes: None,
             auto_compact_segments: 0,
             compact_amplification: 0,
+            datastore_cow: None,
         }
     }
 }
@@ -753,20 +766,45 @@ fn compactor_loop(shared: &CompactorShared, mem: &InMemoryDatastore, ctx: &LogCt
     }
 }
 
-/// Trials cloned per shard-lock acquisition while snapshotting: bounds
-/// how long the compactor can hold any one shard's writers.
+/// Baseline mode only — trials cloned per shard-lock acquisition while
+/// snapshotting: bounds how long the compactor can hold any one shard's
+/// writers. Deprecated in spirit: with copy-on-write reads (the
+/// default) the snapshot is a single pinned image per shard and no
+/// paging is needed.
 const SNAPSHOT_TRIAL_PAGE: usize = 512;
 
-/// Stream a snapshot of the live state as replayable records: per shard,
-/// every study row, that study's trials in keyed pages, then the shard's
-/// pending operations. Each page is one short read-lock acquisition, so
-/// the commit path is never stalled for longer than one page clone even
-/// on million-trial studies. Per-record (upsert) consistency is all
-/// replay needs — records the tail re-applies converge to the same
-/// state. Done operations are shed here — compaction is what bounds the
-/// log.
+/// Stream a snapshot of the live state as replayable records: per
+/// shard, every study row, that study's trials, then the shard's
+/// pending operations. In copy-on-write mode each shard is one atomic
+/// image load — the whole shard streams from an immutable pinned image
+/// with zero shard-lock acquisitions, so the commit path cannot observe
+/// the compactor at all. In baseline mode each page is one short
+/// read-lock acquisition, so the commit path is never stalled for
+/// longer than one page clone even on million-trial studies.
+/// Per-record (upsert) consistency is all replay needs — records the
+/// tail re-applies converge to the same state. Done operations are shed
+/// here — compaction is what bounds the log.
 fn write_snapshot<W: IoWrite>(mem: &InMemoryDatastore, w: &mut W) -> Result<(), DsError> {
     for idx in 0..mem.shard_count() {
+        if let Some(image) = mem.shard_image(idx) {
+            // Copy-on-write path: the pinned image is immutable and
+            // internally consistent (a prefix of the shard's apply
+            // order), so no deleted-mid-stream races exist and the
+            // whole shard streams without touching a lock.
+            for study in image.studies() {
+                append_record(w, &Mutation::PutStudy(study.study().clone()))?;
+                for trial in study.trials() {
+                    append_record(
+                        w,
+                        &Mutation::PutTrial(study.study().name.clone(), trial.clone()),
+                    )?;
+                }
+            }
+            for op in image.pending_ops() {
+                append_record(w, &Mutation::PutOperation(op.clone()))?;
+            }
+            continue;
+        }
         let snap = mem.snapshot_shard(idx);
         for study in snap.studies {
             let name = study.name.clone();
@@ -1186,7 +1224,8 @@ impl WalDatastore {
     /// Open with explicit durability/batching/layout options.
     pub fn open_with_options(path: impl AsRef<Path>, opts: WalOptions) -> Result<Self, DsError> {
         let path = path.as_ref().to_path_buf();
-        let mem = Arc::new(InMemoryDatastore::new());
+        let cow = opts.datastore_cow.unwrap_or_else(cow_default_from_env);
+        let mem = Arc::new(InMemoryDatastore::with_shards_cow(DEFAULT_SHARD_COUNT, cow));
         let metrics = Arc::new(WalMetrics::default());
         let (lw, dir) = match opts.segment_bytes {
             None => (open_single_file(&path, &mem, &metrics)?, None),
@@ -1359,6 +1398,13 @@ impl WalDatastore {
     /// cover the durable store.
     pub fn metrics(&self) -> Arc<WalMetrics> {
         Arc::clone(&self.ctx.metrics)
+    }
+
+    /// The replay target's snapshot/contention instrumentation; link
+    /// into [`crate::service::metrics::ServiceMetrics::set_datastore`]
+    /// so reports cover the read path of the durable store.
+    pub fn datastore_metrics(&self) -> Arc<DatastoreMetrics> {
+        self.mem.metrics()
     }
 
     /// Batches the committer has flushed (0 in serial mode).

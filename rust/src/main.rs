@@ -44,6 +44,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "max-connections", takes_value: true, help: "refuse connections beyond this many (0 = unlimited, the default)" },
         OptSpec { name: "legacy-threads", takes_value: false, help: "thread-per-connection front-end (benchmark baseline)" },
         OptSpec { name: "poller", takes_value: true, help: "event-loop readiness backend: epoll (default, incremental registration) | poll (rebuilt-per-wakeup baseline)" },
+        OptSpec { name: "datastore-cow", takes_value: true, help: "datastore read path: on (default, copy-on-write snapshots; lock-free readers + zero-lock compaction) | off (lock-per-read baseline); default honors OSSVIZIER_DATASTORE_COW" },
         OptSpec { name: "policy-workers", takes_value: true, help: "policy worker threads (default 100, Code Block 4)" },
         OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
         OptSpec { name: "api-addr", takes_value: true, help: "pythia mode: the API server for datastore reads" },
@@ -85,6 +86,13 @@ fn main() {
         }
         _ => {
             let mut wal_metrics = None;
+            let datastore_cow: Option<bool> = match args.get("datastore-cow") {
+                Some("on") | Some("1") | Some("true") => Some(true),
+                Some("off") | Some("0") | Some("false") => Some(false),
+                Some(other) => fatal(&format!("unknown --datastore-cow {other:?} (on|off)")),
+                None => None,
+            };
+            let ds_metrics;
             let ds: Arc<dyn Datastore> = match args.get_or("datastore", "memory") {
                 "wal" => {
                     let path = args.get_or("wal-path", "./vizier.wal").to_string();
@@ -100,6 +108,7 @@ fn main() {
                         compact_amplification: args
                             .get_u64("wal-compact-amplification", 0)
                             .unwrap_or(0),
+                        datastore_cow,
                     };
                     let ds = WalDatastore::open_with_options(&path, opts)
                         .unwrap_or_else(|e| fatal(&format!("open wal {path}: {e}")));
@@ -113,11 +122,17 @@ fn main() {
                         opts.sync
                     );
                     wal_metrics = Some(ds.metrics());
+                    ds_metrics = ds.datastore_metrics();
                     Arc::new(ds)
                 }
                 "memory" => {
                     let shards = args.get_u64("shards", 16).unwrap_or(16) as usize;
-                    Arc::new(InMemoryDatastore::with_shards(shards))
+                    let cow = datastore_cow.unwrap_or_else(
+                        ossvizier::datastore::memory::cow_default_from_env,
+                    );
+                    let mem = InMemoryDatastore::with_shards_cow(shards, cow);
+                    ds_metrics = mem.metrics();
+                    Arc::new(mem)
                 }
                 other => fatal(&format!("unknown datastore {other:?} (memory|wal)")),
             };
@@ -134,6 +149,7 @@ fn main() {
             if let Some(m) = wal_metrics {
                 service.metrics.set_wal(m);
             }
+            service.metrics.set_datastore(ds_metrics);
             // Server-side fault tolerance: resume interrupted operations.
             match service.resume_pending_operations() {
                 Ok(0) => {}

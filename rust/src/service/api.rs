@@ -395,7 +395,10 @@ impl VizierService {
         // Client-side fault tolerance (§5): if this client already has
         // ACTIVE trials, hand them back instead of generating new ones.
         // Server-side filtered read (§6.2): the datastore clones only the
-        // matching trials instead of the whole study.
+        // matching trials instead of the whole study — and in the default
+        // copy-on-write mode the scan runs against an atomically loaded
+        // shard image with zero locks held, so a burst of suggest calls
+        // never stalls behind (or stalls) trial writers.
         let filter = crate::datastore::query::TrialFilter::active().for_client(&req.client_id);
         let mut assigned: Vec<TrialProto> = self.ds.query_trials(&req.study_name, &filter)?;
         assigned.truncate(req.count as usize);
@@ -1021,7 +1024,8 @@ impl VizierService {
     ///
     /// The response is fully structured — every counter, gauge, and
     /// latency histogram the server tracks, by name (`frontend.*` /
-    /// `wal.*` entries appear only when those subsystems are linked).
+    /// `wal.*` / `datastore.*` entries appear only when those
+    /// subsystems are linked).
     /// Text rendering lives client-side in
     /// [`crate::client::VizierClient::service_metrics`]; the retired
     /// server-rendered `report` field is left empty.
@@ -1085,6 +1089,14 @@ impl VizierService {
             histograms.push(histo("wal.compaction", &w.compaction_micros));
             histograms.push(histo("wal.commit_wait", &w.commit_wait));
         }
+        if let Some(d) = &m.datastore() {
+            counters.push(point("datastore.snapshot_publishes", d.snapshot_publishes()));
+            counters.push(point("datastore.snapshot_loads", d.snapshot_loads()));
+            counters.push(point("datastore.locked_reads", d.locked_reads()));
+            counters.push(point("datastore.shard_writes", d.shard_writes()));
+            gauges.push(point("datastore.retired_images", d.retired_images()));
+            gauges.push(point("datastore.pinned_readers", d.pinned_readers()));
+        }
 
         Ok(ServiceMetricsResponse {
             policy_runs: m.policy_runs(),
@@ -1141,6 +1153,10 @@ impl VizierService {
                 }
             }
         } else {
+            // Early-stop read set: like the suggest path, this filtered
+            // scan runs lock-free against the shard's published image in
+            // copy-on-write mode, so batch stop requests don't contend
+            // with evaluators reporting measurements.
             let running_filter = crate::datastore::query::TrialFilter {
                 states: vec![TrialState::Active, TrialState::Requested, TrialState::Stopping],
                 ..Default::default()

@@ -275,6 +275,104 @@ impl WalMetrics {
     }
 }
 
+/// In-memory datastore instrumentation: copy-on-write snapshot publish
+/// counters plus reader/writer contention gauges, shared between
+/// [`crate::datastore::memory::InMemoryDatastore`] and
+/// [`ServiceMetrics::report`]. The C-DS-SNAP bench and the lockdep CI
+/// legs use `locked_reads`/`snapshot_loads` to *prove* which read path
+/// served a workload: in CoW mode a full compaction cycle must finish
+/// with `locked_reads` unchanged.
+#[derive(Debug, Default)]
+pub struct DatastoreMetrics {
+    /// New shard images published by writers (monotonic; CoW mode only —
+    /// one per state-changing write batch).
+    pub snapshot_publishes: AtomicU64,
+    /// Reads served from an atomically loaded snapshot image with zero
+    /// shard locks held (monotonic; CoW mode only).
+    pub snapshot_loads: AtomicU64,
+    /// Reads served under a shard read lock (monotonic; baseline
+    /// `--datastore-cow=off` mode only — stays 0 in CoW mode).
+    pub locked_reads: AtomicU64,
+    /// State-changing operations applied under a shard write lock
+    /// (monotonic; both modes).
+    pub shard_writes: AtomicU64,
+    /// Retired images currently parked in the reclamation graveyard
+    /// waiting for pinned readers to drain (gauge; CoW mode only).
+    pub retired_images: AtomicU64,
+    /// Readers currently inside the pin window of a snapshot load
+    /// (gauge; transiently nonzero under read load, CoW mode only).
+    pub pinned_readers: AtomicU64,
+}
+
+impl DatastoreMetrics {
+    pub fn record_snapshot_publish(&self) {
+        self.snapshot_publishes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot_publishes(&self) -> u64 {
+        self.snapshot_publishes.load(Ordering::Relaxed)
+    }
+
+    pub fn record_snapshot_load(&self) {
+        self.snapshot_loads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot_loads(&self) -> u64 {
+        self.snapshot_loads.load(Ordering::Relaxed)
+    }
+
+    pub fn record_locked_read(&self) {
+        self.locked_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn locked_reads(&self) -> u64 {
+        self.locked_reads.load(Ordering::Relaxed)
+    }
+
+    pub fn record_shard_write(&self) {
+        self.shard_writes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shard_writes(&self) -> u64 {
+        self.shard_writes.load(Ordering::Relaxed)
+    }
+
+    pub fn retired_images(&self) -> u64 {
+        self.retired_images.load(Ordering::Relaxed)
+    }
+
+    pub fn pinned_inc(&self) {
+        self.pinned_readers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (mirrors the front-end gauges: a racy double
+    /// unpin must not wrap to u64::MAX).
+    pub fn pinned_dec(&self) {
+        let _ = self
+            .pinned_readers
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    pub fn pinned_readers(&self) -> u64 {
+        self.pinned_readers.load(Ordering::Relaxed)
+    }
+
+    /// Render a plain-text report fragment.
+    pub fn report(&self) -> String {
+        format!(
+            "datastore: {} snapshot publishes, {} snapshot loads, \
+             {} locked reads, {} shard writes, \
+             {} retired image(s), {} pinned reader(s)\n",
+            self.snapshot_publishes(),
+            self.snapshot_loads(),
+            self.locked_reads(),
+            self.shard_writes(),
+            self.retired_images(),
+            self.pinned_readers(),
+        )
+    }
+}
+
 /// Registry of per-method metrics.
 #[derive(Debug)]
 pub struct ServiceMetrics {
@@ -303,6 +401,9 @@ pub struct ServiceMetrics {
     /// Durable-store metrics, linked by the launcher when the datastore
     /// is WAL-backed.
     wal: Mutex<Option<std::sync::Arc<WalMetrics>>>,
+    /// In-memory datastore snapshot/contention metrics, linked by the
+    /// launcher for both the pure in-memory and WAL-backed stores.
+    datastore: Mutex<Option<std::sync::Arc<DatastoreMetrics>>>,
 }
 
 impl Default for ServiceMetrics {
@@ -317,6 +418,7 @@ impl Default for ServiceMetrics {
             watch_streams: AtomicU64::new(0),
             frontend: Mutex::new(&classes::MET_FRONTEND, None),
             wal: Mutex::new(&classes::MET_WAL, None),
+            datastore: Mutex::new(&classes::MET_DATASTORE, None),
         }
     }
 }
@@ -417,6 +519,16 @@ impl ServiceMetrics {
         self.wal.lock().clone()
     }
 
+    /// Attach the in-memory datastore's snapshot/contention metrics
+    /// (called by the launcher for both `memory` and `wal` stores).
+    pub fn set_datastore(&self, ds: std::sync::Arc<DatastoreMetrics>) {
+        *self.datastore.lock() = Some(ds);
+    }
+
+    pub fn datastore(&self) -> Option<std::sync::Arc<DatastoreMetrics>> {
+        self.datastore.lock().clone()
+    }
+
     /// Render a plain-text report (one line per method).
     pub fn report(&self) -> String {
         let m = self.methods.lock();
@@ -448,6 +560,9 @@ impl ServiceMetrics {
         }
         if let Some(wal) = self.wal() {
             out.push_str(&wal.report());
+        }
+        if let Some(ds) = self.datastore() {
+            out.push_str(&ds.report());
         }
         out
     }
@@ -518,6 +633,27 @@ mod tests {
         let r = m.report();
         assert!(r.contains("3 segment file(s)"), "{r}");
         assert!(r.contains("max 500 us"), "{r}");
+    }
+
+    #[test]
+    fn datastore_metrics_report_linked() {
+        let d = DatastoreMetrics::default();
+        d.record_snapshot_publish();
+        d.record_snapshot_load();
+        d.record_snapshot_load();
+        d.record_shard_write();
+        d.pinned_inc();
+        d.pinned_dec();
+        d.pinned_dec(); // saturates, must not wrap
+        assert_eq!(d.pinned_readers(), 0);
+        assert_eq!(d.snapshot_loads(), 2);
+        assert_eq!(d.locked_reads(), 0);
+        let m = ServiceMetrics::new();
+        assert!(m.datastore().is_none());
+        m.set_datastore(std::sync::Arc::new(d));
+        let r = m.report();
+        assert!(r.contains("1 snapshot publishes"), "{r}");
+        assert!(r.contains("2 snapshot loads"), "{r}");
     }
 
     #[test]

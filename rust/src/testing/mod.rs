@@ -26,7 +26,22 @@ pub fn wal_opts_from_env() -> WalOptions {
     if let Ok("segmented") = std::env::var("OSSVIZIER_WAL_LAYOUT").as_deref() {
         opts.segment_bytes = Some(64 * 1024);
     }
+    opts.datastore_cow = Some(datastore_cow_from_env());
     opts
+}
+
+/// Datastore read-path mode selected by the CI matrix environment, so
+/// one test binary covers both copy-on-write snapshot reads (the
+/// default) and the lock-per-read baseline (mirrors
+/// [`wal_opts_from_env`]; see the CoW legs in
+/// `.github/workflows/ci.yml` and `crash-matrix.yml`):
+///
+/// * `OSSVIZIER_DATASTORE_COW` — `on` (default) or `off`
+///
+/// Unset gives copy-on-write, the production default, so plain
+/// `cargo test` exercises what production runs.
+pub fn datastore_cow_from_env() -> bool {
+    crate::datastore::memory::cow_default_from_env()
 }
 
 /// Front-end poller selected by the CI matrix environment, so one test

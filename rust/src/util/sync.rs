@@ -154,6 +154,10 @@ pub mod classes {
     /// One state shard. Never nested with another shard; cross-shard
     /// scans take them one at a time.
     pub static DS_SHARD: LockClass = LockClass::new("datastore.shard", 250);
+    /// Graveyard of retired copy-on-write shard images awaiting
+    /// reclamation. Taken by a publishing writer *under* the shard write
+    /// lock (and by `ImageCell::drop`), never the other way around.
+    pub static DS_IMAGE: LockClass = LockClass::new("datastore.image_retire", 255);
 
     // --- Background compaction ------------------------------------------
     /// Compactor request/completion state. Requested from the serial
@@ -167,6 +171,8 @@ pub mod classes {
     pub static MET_METHODS: LockClass = LockClass::new("metrics.methods", 300);
     /// Link to the front-end metrics block.
     pub static MET_FRONTEND: LockClass = LockClass::new("metrics.frontend_link", 310);
+    /// Link to the datastore (snapshot/contention) metrics block.
+    pub static MET_DATASTORE: LockClass = LockClass::new("metrics.datastore_link", 315);
     /// Link to the WAL metrics block.
     pub static MET_WAL: LockClass = LockClass::new("metrics.wal_link", 320);
     /// PythiaServer's pooled API-server connections (popped before a

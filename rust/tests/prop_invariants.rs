@@ -359,6 +359,133 @@ fn segment_prefix_plus_torn_tail_replays_to_acked_prefix_per_study() {
 }
 
 #[test]
+fn snapshot_under_writers_and_compaction_is_prefix_consistent() {
+    // The copy-on-write read invariant: a snapshot taken at ANY moment —
+    // here while 8 writers stream trials into their own studies and a
+    // forced compaction cycles the WAL — observes a prefix-consistent
+    // image. Concretely, per study: trial ids form a dense 1..=k prefix
+    // (no holes, no phantoms), every write acknowledged *before* the
+    // read began is visible (k covers the acked floor), and no trial is
+    // torn (its two correlated fields, written in one record, always
+    // agree). Runs under the crash-matrix env, so the CoW legs cover
+    // both the snapshot path and the lock-per-read baseline.
+    use ossvizier::datastore::wal::{WalDatastore, WalOptions};
+    use ossvizier::datastore::Datastore;
+    use ossvizier::wire::messages::{StudyProto, TrialProto};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    const WRITERS: usize = 8;
+    check("snapshot under 8 writers + compaction = consistent prefix", 3, |g| {
+        let dir = std::env::temp_dir().join(format!(
+            "ossvizier-prop-snap-{}-{}",
+            std::process::id(),
+            ossvizier::util::id::next_uid()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = WalOptions {
+            segment_bytes: Some(g.usize_range(4_000, 32_000) as u64),
+            ..ossvizier::testing::wal_opts_from_env()
+        };
+        let ds = Arc::new(WalDatastore::open_with_options(dir.join("wal"), opts).unwrap());
+        let names: Arc<Vec<String>> = Arc::new(
+            (0..WRITERS)
+                .map(|i| {
+                    ds.create_study(StudyProto {
+                        display_name: format!("snap{i}"),
+                        ..Default::default()
+                    })
+                    .unwrap()
+                    .name
+                })
+                .collect(),
+        );
+        let acked: Arc<Vec<AtomicU64>> =
+            Arc::new((0..WRITERS).map(|_| AtomicU64::new(0)).collect());
+        let per_writer = g.usize_range(40, 120);
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let reader = {
+            let ds = Arc::clone(&ds);
+            let names = Arc::clone(&names);
+            let acked = Arc::clone(&acked);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut scans = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    for s in 0..WRITERS {
+                        // Everything acked before the scan starts must be
+                        // visible in the image the scan walks.
+                        let floor = acked[s].load(Ordering::SeqCst);
+                        let trials = ds.list_trials(&names[s]).unwrap();
+                        assert!(
+                            trials.len() as u64 >= floor,
+                            "study {s}: snapshot lost acked writes ({} < {floor})",
+                            trials.len()
+                        );
+                        for (j, t) in trials.iter().enumerate() {
+                            assert_eq!(
+                                t.id,
+                                j as u64 + 1,
+                                "study {s}: ids must form a dense prefix"
+                            );
+                            // Both fields were written by one record: a
+                            // disagreement would be a torn trial.
+                            assert_eq!(
+                                t.client_id,
+                                format!("c{}", t.created_ms),
+                                "study {s} trial {}: torn trial observed",
+                                t.id
+                            );
+                        }
+                        scans += 1;
+                    }
+                }
+                scans
+            })
+        };
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|s| {
+                let ds = Arc::clone(&ds);
+                let names = Arc::clone(&names);
+                let acked = Arc::clone(&acked);
+                std::thread::spawn(move || {
+                    for seq in 1..=per_writer as u64 {
+                        let t = ds
+                            .create_trial(
+                                &names[s],
+                                TrialProto {
+                                    created_ms: seq,
+                                    client_id: format!("c{seq}"),
+                                    ..Default::default()
+                                },
+                            )
+                            .unwrap();
+                        assert_eq!(t.id, seq, "per-study ids are sequential");
+                        acked[s].store(seq, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        // Force a full compaction mid-stream; in CoW mode its base
+        // snapshot is cut from pinned images with zero shard locks.
+        ds.compact().unwrap();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::SeqCst);
+        let scans = reader.join().unwrap();
+        assert!(scans > 0, "reader never completed a scan");
+        for (s, name) in names.iter().enumerate() {
+            let trials = ds.list_trials(name).unwrap();
+            assert_eq!(trials.len(), per_writer, "study {s}: final state complete");
+        }
+        drop(ds);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
 fn grid_search_exhausts_small_spaces_without_duplicates() {
     let mut config = StudyConfig::new("grid");
     config.search_space.add_int("a", 0, 3).add_categorical("b", vec!["x", "y"]);
