@@ -1,0 +1,185 @@
+//! C-TRACE: what request tracing costs on the serving path. The tracing
+//! config latches process-wide, so the traced and untraced servers each
+//! run in a child process (this binary re-execs itself in a serve-only
+//! mode) while the parent — whose own tracing stays off — measures ping
+//! RTT against both over real TCP:
+//!
+//! * disabled (the default): the strict claim. The span hooks reduce to
+//!   one cached boolean load, so the RTT must not regress — the
+//!   `rtt_*_disabled` metric is the one `bench_baselines/` enforces.
+//! * enabled at sample rate 1.0: the lax claim (shared runners are too
+//!   noisy to enforce a few-percent bound): RTT stays within 5% of the
+//!   disabled run.
+//!
+//! Structural zero-cost is asserted strictly either way: a process that
+//! never enables tracing records no spans and allocates no rings, and
+//! each child's `GetTraces` surface proves the mode it actually ran in.
+//!
+//! Results land in `BENCH_TRACE_OVERHEAD.json` at the repo root (see
+//! `bench_baselines/README.md` for the comparison gate).
+
+use ossvizier::client::transport::{call, TcpTransport};
+use ossvizier::client::LocalTransport;
+use ossvizier::service::{in_memory_service, VizierServer};
+use ossvizier::util::benchkit::{bench, check, check_strict, finish, note, section};
+use ossvizier::util::trace;
+use ossvizier::wire::framing::Method;
+use ossvizier::wire::messages::{EmptyResponse, GetTracesRequest, GetTracesResponse};
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+
+/// Set in the re-exec'd child: serve on a loopback port until stdin
+/// closes. The child's tracing mode comes from `OSSVIZIER_TRACE`, which
+/// the parent sets per child.
+const SERVER_MODE_VAR: &str = "OSSVIZIER_BENCH_TRACE_SERVER";
+
+/// Pings per measured round (one `bench` sample = one round).
+const PINGS_PER_ROUND: usize = 100;
+
+fn serve_until_stdin_closes() -> ! {
+    let server = VizierServer::start(in_memory_service(2), "127.0.0.1:0").unwrap();
+    println!("ADDR={}", server.local_addr());
+    std::io::stdout().flush().unwrap();
+    let mut line = String::new();
+    let _ = std::io::stdin().read_line(&mut line); // EOF = parent is done
+    server.shutdown();
+    std::process::exit(0);
+}
+
+/// Re-exec this binary as a server child; returns the child and the
+/// address it bound. `trace` is the child's `OSSVIZIER_TRACE` value
+/// (`None` = unset, the disabled default).
+fn spawn_server(trace_env: Option<&str>) -> (Child, String) {
+    let exe = std::env::current_exe().unwrap();
+    let mut cmd = Command::new(exe);
+    cmd.env(SERVER_MODE_VAR, "1")
+        .env_remove("OSSVIZIER_TRACE")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if let Some(rate) = trace_env {
+        cmd.env("OSSVIZIER_TRACE", rate);
+    }
+    let mut child = cmd.spawn().expect("re-exec server child");
+    let mut reader = BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("child address line");
+    let addr = line
+        .trim()
+        .strip_prefix("ADDR=")
+        .expect("server child must print ADDR=<addr>")
+        .to_string();
+    (child, addr)
+}
+
+fn stop_server(mut child: Child) {
+    drop(child.stdin.take()); // EOF tells the child to shut down
+    let _ = child.wait();
+}
+
+fn ping(t: &mut TcpTransport) {
+    let _: EmptyResponse = call(t, Method::Ping, &EmptyResponse::default()).unwrap();
+}
+
+fn trace_count(t: &mut TcpTransport) -> usize {
+    let resp: GetTracesResponse = call(
+        t,
+        Method::GetTraces,
+        &GetTracesRequest { limit: 0, include_infra: false },
+    )
+    .unwrap();
+    resp.traces.len()
+}
+
+fn main() {
+    if std::env::var_os(SERVER_MODE_VAR).is_some() {
+        serve_until_stdin_closes();
+    }
+
+    // ------------------------------------------------------------------
+    // Structural zero-cost: this parent process never enables tracing, so
+    // after a warm round trip through the full dispatch path there must
+    // be no spans, no rings, nothing. These hold on any hardware, so they
+    // are strict even under OSSVIZIER_BENCH_LAX.
+    // ------------------------------------------------------------------
+    section("C-TRACE: disabled mode is structurally free");
+    if std::env::var_os("OSSVIZIER_TRACE").is_some() {
+        note("OSSVIZIER_TRACE is set in this environment; skipping the disabled-mode checks");
+    } else {
+        let mut local = LocalTransport::new(in_memory_service(2));
+        for _ in 0..PINGS_PER_ROUND {
+            let _: EmptyResponse =
+                call(&mut local, Method::Ping, &EmptyResponse::default()).unwrap();
+        }
+        check_strict(
+            "disabled-tracing-stays-off",
+            !trace::enabled(),
+            "trace::enabled() is false without init or OSSVIZIER_TRACE",
+        );
+        check_strict(
+            "disabled-records-no-spans",
+            trace::snapshot().is_empty(),
+            &format!(
+                "{} spans recorded after {PINGS_PER_ROUND} dispatches",
+                trace::snapshot().len()
+            ),
+        );
+        check_strict(
+            "disabled-allocates-no-rings",
+            trace::registered_rings() == 0,
+            &format!("{} span rings registered", trace::registered_rings()),
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // RTT with tracing off vs on, each mode in its own server process.
+    // ------------------------------------------------------------------
+    section(&format!(
+        "C-TRACE: ping RTT over TCP, {PINGS_PER_ROUND} pings/round, traced vs untraced server"
+    ));
+
+    let (child_off, addr_off) = spawn_server(None);
+    let mut t_off = TcpTransport::connect(&addr_off).unwrap();
+    let off = bench(&format!("trace_overhead/rtt_{PINGS_PER_ROUND}pings_disabled"), || {
+        for _ in 0..PINGS_PER_ROUND {
+            ping(&mut t_off);
+        }
+    });
+    check_strict(
+        "untraced-server-has-no-traces",
+        trace_count(&mut t_off) == 0,
+        "GetTraces empty on the untraced child",
+    );
+    stop_server(child_off);
+
+    let (child_on, addr_on) = spawn_server(Some("1"));
+    let mut t_on = TcpTransport::connect(&addr_on).unwrap();
+    let on = bench(&format!("trace_overhead/rtt_{PINGS_PER_ROUND}pings_enabled"), || {
+        for _ in 0..PINGS_PER_ROUND {
+            ping(&mut t_on);
+        }
+    });
+    check_strict(
+        "traced-server-recorded-traces",
+        trace_count(&mut t_on) > 0,
+        "GetTraces non-empty on the traced child",
+    );
+    stop_server(child_on);
+
+    let ratio = on.mean.as_secs_f64() / off.mean.as_secs_f64().max(f64::MIN_POSITIVE);
+    note(&format!(
+        "rtt/ping: disabled {:.1} us, enabled {:.1} us ({:+.1}%)",
+        off.mean_us() / PINGS_PER_ROUND as f64,
+        on.mean_us() / PINGS_PER_ROUND as f64,
+        (ratio - 1.0) * 100.0,
+    ));
+    // Timing comparison: lax (`check`) because loopback RTT on shared
+    // runners jitters more than the effect being bounded.
+    check(
+        "enabled-overhead-within-5pct",
+        ratio <= 1.05,
+        &format!("enabled/disabled RTT ratio {ratio:.3} <= 1.05"),
+    );
+
+    finish("TRACE_OVERHEAD");
+}

@@ -24,6 +24,12 @@
 //!   snapshot accessors (`Datastore` trait reads / `shard_image`) so
 //!   the copy-on-write read protocol — and its metrics — see every
 //!   access.
+//! - `doc-drift` — every `--flag` declared in `main.rs` and every
+//!   `OSSVIZIER_*` environment variable read anywhere in the tree must
+//!   appear in `rust/docs/OPERATIONS.md`. Knobs that exist but are not
+//!   in the operator manual rot silently; this rule makes the manual a
+//!   compile-time-adjacent artifact. (Cross-file: the violation is
+//!   reported at the declaring/reading line.)
 //!
 //! A violation that is genuinely intended is silenced with
 //! `// lint: allow(<rule>)` on the same line or the line directly above.
@@ -85,20 +91,96 @@ fn default_src_root() -> PathBuf {
 }
 
 fn lint_tree(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut paths = Vec::new();
+    walk(root, &mut paths)?;
+    paths.sort();
     let mut files = Vec::new();
-    walk(root, &mut files)?;
-    files.sort();
-    let mut out = Vec::new();
-    for path in files {
+    for path in paths {
         let rel = path
             .strip_prefix(root)
             .unwrap_or(&path)
             .to_string_lossy()
             .replace('\\', "/");
         let text = std::fs::read_to_string(&path)?;
-        out.extend(lint_file(&rel, &text));
+        files.push((rel, text));
     }
+    let mut out = Vec::new();
+    for (rel, text) in &files {
+        out.extend(lint_file(rel, text));
+    }
+    // doc-drift needs the operator manual, which lives next to src/.
+    let ops_doc = root
+        .parent()
+        .map(|p| p.join("docs").join("OPERATIONS.md"))
+        .and_then(|p| std::fs::read_to_string(p).ok());
+    out.extend(doc_drift(&files, ops_doc.as_deref()));
     Ok(out)
+}
+
+/// Cross-file `doc-drift` pass: collect every CLI flag declared in
+/// `main.rs` (an `OptSpec` `name: "..."` field) and every `OSSVIZIER_*`
+/// environment read in the tree, and require each to appear in
+/// `docs/OPERATIONS.md` (`--<flag>` for flags, the bare variable name
+/// for env vars). Test modules are exempt — tests read knobs they do
+/// not own. `ops_doc` is `None` when the manual itself is missing, in
+/// which case every requirement fails (the fix is to write the manual).
+fn doc_drift(files: &[(String, String)], ops_doc: Option<&str>) -> Vec<Violation> {
+    let doc = ops_doc.unwrap_or("");
+    let mut out = Vec::new();
+    for (rel, text) in files {
+        let lines: Vec<Line> = text.lines().map(split_line).collect();
+        let test_lines = test_mod_lines(&lines);
+        for (i, line) in lines.iter().enumerate() {
+            if test_lines[i] || allowed(&lines, i, "doc-drift") {
+                continue;
+            }
+            if rel == "main.rs" {
+                if let Some(flag) = optspec_flag_name(line.raw) {
+                    if !doc.contains(&format!("--{flag}")) {
+                        out.push(Violation {
+                            file: rel.clone(),
+                            line: i + 1,
+                            rule: "doc-drift",
+                            msg: format!("flag --{flag} is not documented in docs/OPERATIONS.md"),
+                        });
+                    }
+                }
+            }
+            // Env reads scan the raw line: the variable name lives in a
+            // string literal, which the sanitizer blanks out of `code`.
+            if line.raw.contains("env::var") {
+                if let Some(var) = ossvizier_env_name(line.raw) {
+                    if !doc.contains(&var) {
+                        out.push(Violation {
+                            file: rel.clone(),
+                            line: i + 1,
+                            rule: "doc-drift",
+                            msg: format!("{var} is not documented in docs/OPERATIONS.md"),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The flag name from an `OptSpec { name: "...", ... }` line, if any.
+fn optspec_flag_name(raw: &str) -> Option<String> {
+    let after = &raw[raw.find("name: \"")? + "name: \"".len()..];
+    let end = after.find('"')?;
+    let name = &after[..end];
+    (!name.is_empty()).then(|| name.to_string())
+}
+
+/// The `OSSVIZIER_*` identifier on the line, if any.
+fn ossvizier_env_name(raw: &str) -> Option<String> {
+    let start = raw.find("OSSVIZIER_")?;
+    let name: String = raw[start..]
+        .chars()
+        .take_while(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || *c == '_')
+        .collect();
+    (name.len() > "OSSVIZIER_".len()).then_some(name)
 }
 
 fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -601,6 +683,51 @@ mod tests {
     fn string_literals_do_not_trigger_rules() {
         let src = "fn f() { let s = \"unsafe std::sync::Mutex .unwrap() Mutex::new(\"; g(s); }";
         assert!(rules("service/api.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_drift_requires_flags_and_env_vars_in_operations_md() {
+        let main_src = "fn specs() -> Vec<OptSpec> {\n    vec![\n        OptSpec { name: \"wal-path\", takes_value: true, help: \"x\" },\n        OptSpec { name: \"secret-knob\", takes_value: true, help: \"x\" },\n    ]\n}\n";
+        let util_src = "fn rate() -> bool {\n    std::env::var(\"OSSVIZIER_EXAMPLE\").is_ok()\n}\n";
+        let files = vec![
+            ("main.rs".to_string(), main_src.to_string()),
+            ("util/x.rs".to_string(), util_src.to_string()),
+        ];
+        let doc = "## Flags\n\n`--wal-path` — the WAL.\n\n## Env\n\n`OSSVIZIER_EXAMPLE` — a knob.\n";
+        // Documented flag + env var: clean.
+        let v = doc_drift(&files, Some(doc));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "doc-drift");
+        assert_eq!(v[0].file, "main.rs");
+        assert_eq!(v[0].line, 4);
+        assert!(v[0].msg.contains("--secret-knob"), "{}", v[0].msg);
+        // Missing manual: everything fails.
+        assert_eq!(doc_drift(&files, None).len(), 3);
+    }
+
+    #[test]
+    fn doc_drift_exempts_tests_and_allow_comments() {
+        let allowed_src = "fn f() {\n    // lint: allow(doc-drift) — internal debug knob\n    std::env::var(\"OSSVIZIER_HIDDEN\").ok();\n}\n";
+        let files = vec![("util/x.rs".to_string(), allowed_src.to_string())];
+        assert!(doc_drift(&files, Some("")).is_empty());
+
+        let test_src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() { std::env::var(\"OSSVIZIER_TESTONLY\").ok(); }\n}\n";
+        let files = vec![("util/y.rs".to_string(), test_src.to_string())];
+        assert!(doc_drift(&files, Some("")).is_empty());
+    }
+
+    #[test]
+    fn doc_drift_extractors() {
+        assert_eq!(
+            optspec_flag_name("        OptSpec { name: \"wal-sync\", takes_value: true, help: \"h\" },"),
+            Some("wal-sync".to_string())
+        );
+        assert_eq!(optspec_flag_name("let x = 1;"), None);
+        assert_eq!(
+            ossvizier_env_name("    match std::env::var(\"OSSVIZIER_WAL_COMMIT\").as_deref() {"),
+            Some("OSSVIZIER_WAL_COMMIT".to_string())
+        );
+        assert_eq!(ossvizier_env_name("std::env::var(\"PATH\")"), None);
     }
 
     #[test]

@@ -464,6 +464,49 @@ impl VizierClient {
         let _: EmptyResponse = self.rpc(Method::Ping, &EmptyResponse::default())?;
         Ok(())
     }
+
+    /// The server's slowest recent request traces, rendered as one span
+    /// tree per trace (slowest first). `limit` of 0 means the server
+    /// default (10); `include_infra` appends the background pseudo-trace
+    /// (fsync batches, segment rotations). Empty output means tracing
+    /// is disabled server-side (`--trace-sample-rate` / `OSSVIZIER_TRACE`).
+    pub fn traces(&mut self, limit: u64, include_infra: bool) -> Result<String, ClientError> {
+        let resp: GetTracesResponse =
+            self.rpc(Method::GetTraces, &GetTracesRequest { limit, include_infra })?;
+        Ok(render_traces_report(&resp))
+    }
+}
+
+/// Render `GetTraces` into plain text: one header line per trace
+/// followed by its indented span tree. Span names arrive resolved from
+/// the server, so this stays correct across name-code additions.
+fn render_traces_report(resp: &GetTracesResponse) -> String {
+    let mut out = String::new();
+    for t in &resp.traces {
+        if t.trace_id == 0 {
+            out.push_str(&format!(
+                "infra (background) [{} spans]\n",
+                t.spans.len()
+            ));
+        } else {
+            out.push_str(&format!(
+                "trace {:016x} [{:.1} ms, {} spans]\n",
+                t.trace_id,
+                t.duration_us as f64 / 1000.0,
+                t.spans.len()
+            ));
+        }
+        let rows: Vec<(u64, u64, String, u64, u64)> = t
+            .spans
+            .iter()
+            .map(|s| (s.span_id, s.parent_id, s.name.clone(), s.start_us, s.duration_us))
+            .collect();
+        out.push_str(&crate::util::trace::render_spans(&rows));
+    }
+    if resp.traces.is_empty() {
+        out.push_str("no traces recorded (is tracing enabled on the server?)\n");
+    }
+    out
 }
 
 /// Render the structured `GetServiceMetrics` fields into the classic

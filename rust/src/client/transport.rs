@@ -425,10 +425,24 @@ impl MuxClient {
         request: &[u8],
         timeout: Option<Duration>,
     ) -> Result<Vec<u8>, FrameError> {
+        // Client-side RPC span: a child when a trace is already active
+        // on this thread (e.g. a Pythia supporter read made while
+        // serving a traced request), a fresh sampled root otherwise.
+        // The context rides as a TLV trailer after the request bytes —
+        // v2 only, so v1 frames stay byte-identical.
+        let span = if crate::util::trace::enabled() {
+            let code = crate::util::trace::CLIENT_RPC_BASE + method as u8 as u64;
+            crate::util::trace::child_span(code).or_else(|| crate::util::trace::root_span(code))
+        } else {
+            None
+        };
         let (corr, rx) = self.register()?;
         let mut body = Vec::with_capacity(1 + request.len());
         body.push(method as u8);
         body.extend_from_slice(request);
+        if let Some(span) = &span {
+            crate::wire::messages::append_trace_context(&mut body, span.ctx());
+        }
         if let Err(e) = self.send(FrameKind::Request, corr, &body) {
             self.forget(corr);
             return Err(e);
@@ -661,6 +675,14 @@ impl LocalTransport {
 
 impl Transport for LocalTransport {
     fn call_raw(&mut self, method: Method, request: &[u8]) -> Result<Vec<u8>, FrameError> {
+        // No socket, so no trailer: the client span's context flows to
+        // the dispatch span thread-locally instead.
+        let _span = if crate::util::trace::enabled() {
+            let code = crate::util::trace::CLIENT_RPC_BASE + method as u8 as u64;
+            crate::util::trace::child_span(code).or_else(|| crate::util::trace::root_span(code))
+        } else {
+            None
+        };
         Ok(dispatch_buf(&self.service, method, request))
     }
 }

@@ -134,8 +134,12 @@ pub struct TrialPage {
 /// Storage abstraction used by the Vizier service.
 ///
 /// All methods are atomic with respect to each other. `mutate_*` methods
-/// provide read-modify-write under the store's lock, which the service uses
-/// for trial assignment and operation completion.
+/// provide read-modify-write under the owning shard's write lock (there
+/// is no store-wide lock — see the sharding notes above), which the
+/// service uses for trial assignment and operation completion. Reads may
+/// be served lock-free from a published copy-on-write snapshot; they are
+/// still atomic — a reader observes some prefix of the shard's applied
+/// writes, never a torn one.
 pub trait Datastore: Send + Sync {
     // -- studies --
     /// Store a new study; assigns `name` = `studies/{n}` if empty.

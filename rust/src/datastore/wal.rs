@@ -105,6 +105,7 @@ use super::{Datastore, DsError};
 use crate::service::metrics::{DatastoreMetrics, WalMetrics};
 use crate::util::sync::{classes, Condvar, Mutex, RwLock};
 use crate::util::time::Stopwatch;
+use crate::util::trace;
 use crate::wire::codec::{decode, encode, Reader, WireError, WireMessage, Writer};
 use crate::wire::messages::{OperationProto, StudyProto, TrialProto, UnitMetadataUpdate};
 use std::fs::{File, OpenOptions};
@@ -478,6 +479,7 @@ fn rotate_locked(
     header: &[u8; WAL_HEADER_LEN as usize],
     metrics: &WalMetrics,
 ) -> std::io::Result<()> {
+    let rotate_start = trace::now_us();
     // Seal at the last-known-good byte. A failed batch write (e.g. disk
     // full) can leave a partial record past `lw.bytes` — the committer
     // only advances it after a successful flush — and a sealed segment
@@ -510,6 +512,7 @@ fn rotate_locked(
     lw.seg_no = next;
     metrics.rotations.fetch_add(1, Ordering::Relaxed);
     metrics.segments.fetch_add(1, Ordering::Relaxed);
+    trace::record_infra(trace::WAL_ROTATION, rotate_start, trace::now_us().saturating_sub(rotate_start));
     Ok(())
 }
 
@@ -629,6 +632,7 @@ fn committer_loop(
         }
         // I/O happens outside the lane locks: writers keep applying and
         // enqueueing while this batch hits the disk.
+        let io_start = trace::now_us();
         let io = (|| -> std::io::Result<bool> {
             let mut lw = ctx.log.lock();
             lw.w.write_all(&batch)?;
@@ -645,6 +649,14 @@ fn committer_loop(
             }
             Ok(false)
         })();
+        // One batch serves many commits, so it belongs to no single
+        // trace — recorded as an infra span for `GetTraces
+        // include_infra` and fsync-stall forensics.
+        trace::record_infra(
+            trace::WAL_FSYNC_BATCH,
+            io_start,
+            trace::now_us().saturating_sub(io_start),
+        );
         let mut rotated = false;
         {
             let mut ws = shared.work.lock();
@@ -1434,7 +1446,10 @@ impl WalDatastore {
     ) -> Result<T, DsError> {
         // The stopwatch starts before the gate: a single-file compact()
         // parks writers right here, and that stall is exactly what
-        // commit_wait / commit_stall_max_micros exist to expose.
+        // commit_wait / commit_stall_max_micros exist to expose. The
+        // span covers the same interval (gate + apply + durability wait)
+        // inside the requesting trace, when there is one.
+        let _commit_span = trace::child_span(trace::WAL_COMMIT);
         let sw = Stopwatch::start();
         let _gate = self.commit_gate.read();
         match &self.commit {
@@ -1451,6 +1466,10 @@ impl WalDatastore {
                     self.mem.shard_index(lane_key)
                 };
                 let (value, my_seq) = {
+                    // The lane-serialized section only (apply + append);
+                    // the durability wait shows up as the remainder of
+                    // the enclosing wal-commit span.
+                    let _lane_span = trace::child_span(trace::WAL_LANE_APPLY);
                     let mut lane = shared.lanes[lane_idx].lock();
                     let (value, muts) = op(self.mem.as_ref())?;
                     if muts.is_empty() {
@@ -1479,6 +1498,7 @@ impl WalDatastore {
                 // The log lock spans the in-memory apply too, so records
                 // for the same key cannot be appended in the opposite
                 // order they were applied (replay = acknowledged state).
+                let lane_span = trace::child_span(trace::WAL_LANE_APPLY);
                 let mut lw = self.ctx.log.lock();
                 let (value, muts) = op(self.mem.as_ref())?;
                 if muts.is_empty() {
@@ -1488,6 +1508,7 @@ impl WalDatastore {
                 for m in &muts {
                     appended += append_record(&mut lw.w, m)? as u64;
                 }
+                drop(lane_span);
                 let flushed = (|| -> std::io::Result<()> {
                     lw.w.flush()?;
                     if self.ctx.sync {

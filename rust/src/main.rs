@@ -49,6 +49,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "pythia-addr", takes_value: true, help: "run policies on a remote Pythia server at this addr" },
         OptSpec { name: "api-addr", takes_value: true, help: "pythia mode: the API server for datastore reads" },
         OptSpec { name: "metrics-secs", takes_value: true, help: "print service metrics every N seconds (0 = off)" },
+        OptSpec { name: "trace-sample-rate", takes_value: true, help: "fraction of requests to trace, 0.0-1.0 (default 0; overrides OSSVIZIER_TRACE)" },
+        OptSpec { name: "trace-slow-ms", takes_value: true, help: "print the span tree of any request slower than N ms to stderr (implies tracing)" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
     ]
 }
@@ -74,6 +76,18 @@ fn main() {
     let host = args.get_or("host", "127.0.0.1").to_string();
     let port = args.get_u64("port", if mode == "pythia" { 6007 } else { 6006 }).unwrap_or(6006);
     let addr = format!("{host}:{port}");
+
+    // Latch the tracing config before any server thread can record a
+    // span (both modes). Absent flags fall back to OSSVIZIER_TRACE.
+    let trace_rate = args.get("trace-sample-rate").map(|v| {
+        v.parse::<f64>()
+            .unwrap_or_else(|_| fatal(&format!("--trace-sample-rate must be a number, got {v:?}")))
+    });
+    let trace_slow = args.get("trace-slow-ms").map(|v| {
+        v.parse::<u64>()
+            .unwrap_or_else(|_| fatal(&format!("--trace-slow-ms must be an integer, got {v:?}")))
+    });
+    ossvizier::util::trace::init(trace_rate, trace_slow);
 
     match mode {
         "pythia" => {

@@ -34,6 +34,7 @@ use crate::service::metrics::ServiceMetrics;
 use crate::util::sync::{classes, Mutex};
 use crate::util::threadpool::ThreadPool;
 use crate::util::time::epoch_millis;
+use crate::util::trace;
 use crate::wire::framing::Status;
 use crate::wire::messages::*;
 use std::collections::{HashMap, HashSet};
@@ -103,6 +104,11 @@ pub type ApiResult<T> = Result<T, ApiError>;
 struct CoalesceState {
     queued: HashMap<String, Vec<String>>,
     claimed: HashSet<String>,
+    /// Trace context of the request that queued each operation (absent
+    /// for unsampled requests and crash-resumed ops). Claimed along
+    /// with the name so the one policy span a coalesced batch produces
+    /// can fan into every waiting request's trace.
+    ctxs: HashMap<String, trace::TraceCtx>,
 }
 
 /// Releases a batch's claims even if the policy panics (the worker pool
@@ -124,16 +130,17 @@ impl Drop for ClaimGuard<'_> {
 }
 
 /// Claim a study's whole pending queue (or only its oldest entry when
-/// `coalescing` is off). Returns the claimed names, empty when the
-/// study had nothing queued.
+/// `coalescing` is off). Returns the claimed names with the trace
+/// context each op was queued under, empty when the study had nothing
+/// queued.
 fn claim_batch(
     coalesce: &Mutex<CoalesceState>,
     study_name: &str,
     coalescing: bool,
-) -> Vec<String> {
+) -> (Vec<String>, HashMap<String, trace::TraceCtx>) {
     let state = &mut *coalesce.lock();
     let Some(q) = state.queued.get_mut(study_name) else {
-        return Vec::new(); // another worker already drained this study
+        return (Vec::new(), HashMap::new()); // another worker already drained this study
     };
     let batch = if coalescing {
         std::mem::take(q)
@@ -146,7 +153,8 @@ fn claim_batch(
         state.queued.remove(study_name);
     }
     state.claimed.extend(batch.iter().cloned());
-    batch
+    let ctxs = batch.iter().filter_map(|n| state.ctxs.remove(n).map(|c| (n.clone(), c))).collect();
+    (batch, ctxs)
 }
 
 /// A parked completion callback: fired exactly once, with the final
@@ -449,6 +457,11 @@ impl VizierService {
             return false;
         }
         q.push(op_name.to_string());
+        // Remember the requesting trace (if sampled) so the batch runner
+        // can fan its one policy span into this op's tree.
+        if let Some(ctx) = trace::current() {
+            state.ctxs.insert(op_name.to_string(), ctx);
+        }
         self.metrics.inc_in_flight_policy_jobs();
         true
     }
@@ -513,7 +526,7 @@ impl VizierService {
     /// One claim-serve cycle; returns false once the queue was empty.
     fn serve_one_suggest_batch(&self, study_name: &str, config: &StudyConfig) -> bool {
         // Claim the queue (or only its oldest entry with coalescing off).
-        let batch = claim_batch(
+        let (batch, ctxs) = claim_batch(
             &self.coalesce,
             study_name,
             self.coalescing.load(Ordering::SeqCst),
@@ -538,6 +551,14 @@ impl VizierService {
             }
         }
         if !ops.is_empty() {
+            // The batch runs under the first traced op's context: the
+            // one policy invocation (its Pythia hop, shared metadata
+            // persist) lands in that *primary* trace, and the linked
+            // copies below fan the policy interval into every other
+            // waiting request's tree. Per-op work (trial registration,
+            // completion WAL commits) re-targets each op's own context.
+            let primary = ops.iter().find_map(|op| ctxs.get(&op.name).copied());
+            let _batch_ctx = trace::set_current(primary);
             let request = SuggestRequest {
                 study_name: study_name.to_string(),
                 study_config: config.clone(),
@@ -553,7 +574,15 @@ impl VizierService {
             // only once their batch got past the policy + delta persist,
             // so the coalescing ratio stays honest during incidents.
             self.metrics.record_policy_run();
-            match self.pythia.run_suggest(&request) {
+            let policy_start = trace::now_us();
+            let policy_result = self.pythia.run_suggest(&request);
+            let policy_dur = trace::now_us().saturating_sub(policy_start);
+            for op in &ops {
+                if let Some(&ctx) = ctxs.get(&op.name) {
+                    trace::record_linked(ctx, trace::POLICY_COMPUTE, policy_start, policy_dur);
+                }
+            }
+            match policy_result {
                 Ok(decision) => {
                     // The unified delta (study- and trial-level writes) is
                     // one atomic datastore batch, persisted before any
@@ -583,6 +612,7 @@ impl VizierService {
                         // persisted would orphan ACTIVE trials behind a
                         // failed operation (the client never sees them).
                         for op in &mut ops {
+                            let _ctx = trace::set_current(ctxs.get(&op.name).copied());
                             op.error = delta_err.clone();
                             op.done = true;
                             self.complete_operation(op);
@@ -598,6 +628,7 @@ impl VizierService {
                     let mut groups = decision.groups.into_iter();
                     let mut slots: Vec<Option<u64>> = Vec::new();
                     for op in &mut ops {
+                        let _ctx = trace::set_current(ctxs.get(&op.name).copied());
                         let suggestions =
                             groups.next().map(|g| g.suggestions).unwrap_or_default();
                         let n = suggestions.len();
@@ -610,6 +641,7 @@ impl VizierService {
                     }
                     let delta_err = self.persist_new_trial_delta(study_name, deferred, &slots);
                     for op in &mut ops {
+                        let _ctx = trace::set_current(ctxs.get(&op.name).copied());
                         if let Some(err) = &delta_err {
                             // Trials are already registered and listed on
                             // the op; surface the metadata failure without
@@ -624,6 +656,7 @@ impl VizierService {
                     let msg = format!("policy failed: {e}");
                     self.metrics.record_error();
                     for op in &mut ops {
+                        let _ctx = trace::set_current(ctxs.get(&op.name).copied());
                         op.error = msg.clone();
                         op.done = true;
                         self.complete_operation(op);
@@ -1121,6 +1154,53 @@ impl VizierService {
         Ok(EmptyResponse::default())
     }
 
+    /// The slowest-N recent request traces (span trees) from the
+    /// in-process trace rings — the per-request counterpart to
+    /// [`get_service_metrics`](Self::get_service_metrics)'s aggregates.
+    /// Empty when tracing is disabled. `limit` 0 means 10; with
+    /// `include_infra` the background spans (fsync batches, rotations)
+    /// are appended as pseudo-trace 0 regardless of the limit. Spans
+    /// are grouped and named server-side
+    /// ([`super::server::span_label`]) so any client version renders
+    /// new span kinds without decoding numeric codes.
+    pub fn get_traces(&self, req: GetTracesRequest) -> ApiResult<GetTracesResponse> {
+        let spans = trace::snapshot();
+        let mut by_trace: HashMap<u64, Vec<&trace::SpanRecord>> = HashMap::new();
+        for s in &spans {
+            if s.trace_id == 0 && !req.include_infra {
+                continue;
+            }
+            by_trace.entry(s.trace_id).or_default().push(s);
+        }
+        let to_proto = |(id, ss): (u64, Vec<&trace::SpanRecord>)| {
+            let start = ss.iter().map(|s| s.start_us).min().unwrap_or(0);
+            let end = ss.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(0);
+            TraceProto {
+                trace_id: id,
+                duration_us: end.saturating_sub(start),
+                spans: ss
+                    .iter()
+                    .map(|s| SpanProto {
+                        span_id: s.span_id,
+                        parent_id: s.parent_id,
+                        name: super::server::span_label(s.name_code),
+                        start_us: s.start_us,
+                        duration_us: s.dur_us,
+                    })
+                    .collect(),
+            }
+        };
+        let infra = by_trace.remove(&0).map(|ss| to_proto((0, ss)));
+        let mut traces: Vec<TraceProto> = by_trace.into_iter().map(to_proto).collect();
+        traces.sort_by(|a, b| {
+            b.duration_us.cmp(&a.duration_us).then(a.trace_id.cmp(&b.trace_id))
+        });
+        let limit = if req.limit == 0 { 10 } else { req.limit as usize };
+        traces.truncate(limit);
+        traces.extend(infra);
+        Ok(GetTracesResponse { traces })
+    }
+
     // ------------------------------------------------------------------
     // Early stopping (long-running operation, §3.2)
     // ------------------------------------------------------------------
@@ -1209,7 +1289,7 @@ impl VizierService {
 
     /// One claim-serve cycle; returns false once the queue was empty.
     fn serve_one_early_stop_batch(&self, study_name: &str, config: &StudyConfig) -> bool {
-        let batch = claim_batch(
+        let (batch, ctxs) = claim_batch(
             &self.es_coalesce,
             study_name,
             self.coalescing.load(Ordering::SeqCst),
@@ -1271,7 +1351,20 @@ impl VizierService {
             }
         }
 
-        match self.early_stop_decisions(study_name, config, union_ids) {
+        // Same fan-in as the suggest batch: the one computation runs
+        // under the first traced op's context, and a linked copy lands
+        // in every waiting trace.
+        let primary = ops.iter().find_map(|op| ctxs.get(&op.name).copied());
+        let _batch_ctx = trace::set_current(primary);
+        let es_start = trace::now_us();
+        let es_result = self.early_stop_decisions(study_name, config, union_ids);
+        let es_dur = trace::now_us().saturating_sub(es_start);
+        for op in &ops {
+            if let Some(&ctx) = ctxs.get(&op.name) {
+                trace::record_linked(ctx, trace::POLICY_COMPUTE, es_start, es_dur);
+            }
+        }
+        match es_result {
             Ok(decisions) => {
                 for d in &decisions {
                     if d.should_stop {

@@ -1810,7 +1810,13 @@ fn worker_loop<H: ConnectionHandler>(
 
         match job {
             Job::Request { mut conn, head, payload, enqueued } => {
-                shared.metrics.queue_wait.record(enqueued.elapsed().as_micros() as u64);
+                let waited = enqueued.elapsed().as_micros() as u64;
+                shared.metrics.queue_wait.record(waited);
+                // Leave the wait for the dispatch span (which knows the
+                // trace context — it is still inside the frame). Clamped
+                // to 1 us: 0 means "no note", but a queued request that
+                // waited under a microsecond still made the hop.
+                crate::util::trace::note_queue_wait(waited.max(1));
                 shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 let mut out = Vec::new();
                 let cx = RequestContext { hooks: &hooks, ticket: Cell::new(None) };
@@ -1851,7 +1857,9 @@ fn worker_loop<H: ConnectionHandler>(
                 }
             }
             Job::Mux { sink, method, payload, enqueued } => {
-                shared.metrics.queue_wait.record(enqueued.elapsed().as_micros() as u64);
+                let waited = enqueued.elapsed().as_micros() as u64;
+                shared.metrics.queue_wait.record(waited);
+                crate::util::trace::note_queue_wait(waited.max(1));
                 shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 // A panic before the sink's terminal send unwinds through
                 // the sink's Drop, which answers the client with an

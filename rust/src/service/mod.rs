@@ -2,114 +2,41 @@
 //! long-running operations, TCP front-end, remote Pythia deployment, and
 //! service metrics.
 //!
+//! The end-to-end picture — how a request moves accept → frame → queue
+//! → coalesce → policy → WAL commit → completion, and how the modules
+//! compose — lives in `rust/docs/ARCHITECTURE.md`; this module doc only
+//! states the two contracts everything in this layer is built on.
+//!
+//! **Front end** ([`frontend::FrontendServer`], shared by
+//! [`VizierServer`] and [`remote_pythia::PythiaServer`]): one event-loop
+//! thread owns every idle connection through a
+//! [`crate::util::netpoll::Poller`]; `--workers` worker threads execute
+//! complete framed requests from a bounded queue. Idle clients — the
+//! dominant state of a tuning fleet — cost zero threads, and slow
+//! readers/writers park in the loop instead of pinning a worker. The
+//! thread-per-connection baseline survives behind `--legacy-threads`
+//! and is held to account by `benches/bench_frontend.rs` (C-FRONTEND,
+//! C-FRONTEND-EPOLL).
+//!
+//! **Async operation core** (§3.2): `suggest_trials` persists the
+//! operation, queues it per-study, and returns — the policy pool
+//! (`--policy-workers`) bounds concurrent policy *executions*, not
+//! accepted operations, and one coalesced policy run serves every
+//! operation queued on the study. Completion is push, not poll:
+//! `WaitOperation` parks the connection (v1) or a watch stream (v2)
+//! until `complete_operation` fires the watcher; crash-resume re-queues
+//! interrupted operations through the same path.
+//! `benches/bench_async_dispatch.rs` (C-ASYNC-DISPATCH) pins both
+//! properties.
+//!
 //! Every lock in this layer is registered with the crate-wide hierarchy
 //! in [`crate::util::sync::classes`] and checked under lockdep; the
 //! hierarchy table, the poller registration-state rules, and the WAL
 //! ordering this layer depends on are consolidated in
 //! `rust/docs/INVARIANTS.md`. The wire protocols the front-end speaks —
-//! blocking v1 and the multiplexed/streaming v2 (`HELLO` handshake,
-//! correlation-id demux, `WaitOperation` watch streams, `CANCEL`) — are
-//! specified in `rust/docs/WIRE.md`.
-//!
-//! # Front-end architecture: event loop + bounded worker pool
-//!
-//! The paper's reference server multiplexes thousands of tuning workers
-//! behind `grpc.server(ThreadPoolExecutor(max_workers=100))` (Code Block
-//! 4). Both TCP front-ends here — [`VizierServer`] (API service) and
-//! [`remote_pythia::PythiaServer`] (standalone policy service) — share
-//! that shape via [`frontend::FrontendServer`]:
-//!
-//! * A single **event-loop thread** (`vizier-fe-io` / `pythia-fe-io`)
-//!   blocks in a [`crate::util::netpoll::Poller`] (raw POSIX, no crate
-//!   dependencies) over the listener, a wake pipe, and every idle
-//!   connection. The default backend is `epoll(7)` with **incremental
-//!   registration**: fds are added/modified/removed only on connection
-//!   state changes (accept, worker hand-off, re-park, close), so a
-//!   wakeup costs O(ready fds), not O(total connections). The original
-//!   rebuilt-every-iteration `poll(2)` set survives behind
-//!   `--poller=poll` as the C-FRONTEND-EPOLL benchmark baseline. The
-//!   loop upholds one **registration-state invariant**: an fd is
-//!   registered with the poller exactly while the loop owns it — it is
-//!   deregistered *before* being handed to a worker or closed, and
-//!   registered again when ownership returns (see
-//!   [`crate::util::netpoll`] for the full invariant list). Idle
-//!   clients — the dominant state of a Vizier worker fleet, which
-//!   spends its time evaluating trials, not talking — cost zero
-//!   threads. Partial frames accumulate per connection in a resumable
-//!   [`crate::wire::framing::FrameReader`], so slow or malicious
-//!   clients park in the loop instead of pinning a worker.
-//! * **N worker threads** (`vizier-fe-w<i>`, `--workers`, default = CPU
-//!   count) execute complete framed requests from a bounded queue and
-//!   write the response. One frame = one job; a connection is owned by
-//!   one thread at a time, keeping per-connection requests sequential.
-//! * **Graceful shutdown** closes idle connections, drains queued and
-//!   in-flight requests up to a deadline, and joins every front-end
-//!   thread — the pre-pool server leaked its per-connection threads.
-//!
-//! The legacy thread-per-connection model survives behind
-//! `--legacy-threads` ([`server::ServerOptions`]) as the benchmark
-//! baseline; `benches/bench_frontend.rs` (C-FRONTEND) drives 1000+
-//! mostly-idle connections against both and asserts the pool holds its
-//! `workers + 2` thread budget at no loss of hot-path throughput. Its
-//! C-FRONTEND-EPOLL section parks a 5000+ connection fleet against both
-//! poller backends and pins the per-wakeup scan cost: `poll(2)` must
-//! pay O(fleet), epoll must stay O(ready).
-//! [`metrics::FrontendMetrics`] exposes the `active_connections` gauge,
-//! queue depth, and queue-wait histogram for either mode.
-//!
-//! # Operation lifecycle: the completion-driven async core
-//!
-//! The paper's central reliability mechanism is the durable long-running
-//! operation (§3.2). End to end, one suggest operation moves through a
-//! small state machine with **no thread ever blocked on another layer's
-//! progress**:
-//!
-//! ```text
-//!              SuggestTrials RPC
-//!                     |
-//!                     v            persisted first (durability), then
-//!   [PENDING] --- created in ds ---+--> study queue  [QUEUED]
-//!                                          |
-//!                 batch runner claims the whole queue (one GP fit
-//!                 serves K queued operations — Pythia v2 coalescing)
-//!                                          |
-//!                                          v
-//!                                      [CLAIMED] --- policy runs
-//!                                          |
-//!           decision + metadata delta persisted, trials registered
-//!                                          |
-//!                                          v
-//!        [DONE] --- complete_operation: update ds, drop in-flight
-//!                   gauge, fire OpWaiters watchers
-//! ```
-//!
-//! * **Dispatch never blocks.** `suggest_trials` returns after the
-//!   `[PENDING]`->`[QUEUED]` step; the front-end worker that carried the
-//!   RPC is free immediately. The policy pool (`--policy-workers`)
-//!   bounds concurrent *policy executions*, not accepted operations —
-//!   one process holds arbitrarily many `[QUEUED]` operations.
-//! * **Completion is push, not poll.** `WaitOperation` long-polls
-//!   server-side: the pool front-end defers the response
-//!   ([`frontend::HandleOutcome::Pending`]), parks the connection, and
-//!   the `complete_operation` watcher wakeup re-queues it through the
-//!   event loop's self-pipe — one round-trip per completion instead of
-//!   a `GetOperation` busy-poll stream. Clients fall back to polling
-//!   with capped backoff on servers that predate the RPC.
-//! * **Crash-resume re-arms the same path.** After a restart,
-//!   `resume_pending_operations` pushes interrupted operations back to
-//!   `[QUEUED]`; they complete through `complete_operation` like live
-//!   ones, so a client re-attaching with `WaitOperation` wakes exactly
-//!   as if the crash had not happened.
-//! * **Writes park too.** A response that hits `WouldBlock` (slow
-//!   reader, including a large `ListTrials` page) parks back in the
-//!   event loop for *writability* instead of pinning a worker in a
-//!   write loop. `parked_responses` gauges both forms of parking.
-//!
-//! `benches/bench_async_dispatch.rs` (C-ASYNC-DISPATCH) holds `> 3x`
-//! the policy-worker count of in-flight suggest operations on one
-//! server, with every waiting client parked and the front-end at its
-//! `workers + 2` thread budget, then asserts each client completes in a
-//! single `WaitOperation` round-trip with zero `GetOperation` traffic.
+//! blocking v1 and the multiplexed/streaming v2 — are specified in
+//! `rust/docs/WIRE.md`; the operator-facing knobs and the full metrics
+//! catalog are in `rust/docs/OPERATIONS.md`.
 
 pub mod api;
 pub mod frontend;

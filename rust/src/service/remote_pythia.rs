@@ -450,6 +450,17 @@ struct PythiaShared {
 impl PythiaShared {
     /// Run one policy computation and return the v1 response frame.
     fn run(&self, method: u8, payload: &[u8]) -> Vec<u8> {
+        // Continue the API server's trace (carried as a payload trailer
+        // by `RemotePythia::roundtrip`) across the process boundary;
+        // supporter datastore reads made during the run nest under this
+        // span via their own client transport.
+        let _span = if crate::util::trace::enabled() {
+            crate::wire::messages::extract_trace_context(payload).and_then(|ctx| {
+                crate::util::trace::root_span_in(ctx, crate::util::trace::PYTHIA_SERVE)
+            })
+        } else {
+            None
+        };
         let mut out = Vec::new();
         let supporter = match self.supporters.lock().pop() {
             Some(s) => Ok(s),
@@ -680,7 +691,14 @@ impl RemotePythia {
                 return Err(PolicyError::Internal("pythia connection unavailable".into()));
             };
             let result = (|| -> Result<Resp, FrameError> {
-                let payload = crate::wire::codec::encode(req);
+                let mut payload = crate::wire::codec::encode(req);
+                // One hop span per attempt (a retry is a second hop);
+                // the remote Pythia server parents its serve span under
+                // this one via the trailer.
+                let hop = crate::util::trace::child_span(crate::util::trace::PYTHIA_HOP);
+                if let Some(span) = &hop {
+                    crate::wire::messages::append_trace_context(&mut payload, span.ctx());
+                }
                 let total = (1 + payload.len()) as u32;
                 use std::io::Write;
                 writer.write_all(&total.to_le_bytes())?;

@@ -21,10 +21,12 @@ use super::frontend::{
 };
 use super::metrics::FrontendMetrics;
 use crate::util::time::Stopwatch;
+use crate::util::trace;
 use crate::wire::codec::decode;
 use crate::wire::framing::{read_request, write_err, write_ok, FrameError, Method, Status};
 use crate::wire::messages::{
-    EmptyResponse, GetOperationRequest, OperationProto, OperationResponse, WaitOperationRequest,
+    extract_trace_context, EmptyResponse, GetOperationRequest, OperationProto, OperationResponse,
+    WaitOperationRequest,
 };
 use crate::util::sync::{classes, Mutex};
 use std::io::{BufReader, BufWriter, Write};
@@ -534,13 +536,41 @@ fn serve_connection(
     }
 }
 
+/// Resolve a trace span name code to text, substituting RPC method
+/// names (which `util::trace` cannot see) for the numeric codes.
+pub fn span_label(code: u64) -> String {
+    for (base, prefix) in [(trace::RPC_BASE, "rpc"), (trace::CLIENT_RPC_BASE, "client-rpc")] {
+        if (base..base + 256).contains(&code) {
+            if let Some(m) = Method::from_u8((code - base) as u8) {
+                return format!("{prefix}:{m:?}");
+            }
+        }
+    }
+    trace::span_name(code)
+}
+
 /// Decode, call, encode for a single method.
+///
+/// Every server-side path funnels through here — the legacy
+/// thread-per-connection loop, the pool front-end's v1 and mux jobs
+/// (via [`dispatch_buf`]), and the in-process `LocalTransport` — so
+/// this is also where the request's trace span lives: it continues the
+/// trace carried in the payload's trailer (v2 clients), nests under any
+/// ambient context (in-process callers), or starts a fresh sampled
+/// root (v1 clients). The worker loop's queue-wait note becomes a
+/// retroactive `frontend-queue` child, and requests slower than
+/// `--trace-slow-ms` dump their span tree to stderr.
 pub fn dispatch<W: Write>(
     service: &Arc<VizierService>,
     method: Method,
     payload: &[u8],
     out: &mut W,
 ) -> Result<(), FrameError> {
+    let span = if trace::enabled() {
+        trace::rpc_span(trace::RPC_BASE + method as u8 as u64, extract_trace_context(payload))
+    } else {
+        None
+    };
     macro_rules! call {
         ($fn:ident) => {{
             match decode(payload) {
@@ -555,7 +585,7 @@ pub fn dispatch<W: Write>(
             }
         }};
     }
-    match method {
+    let result = match method {
         Method::CreateStudy => call!(create_study),
         Method::GetStudy => call!(get_study),
         Method::ListStudies => call!(list_studies),
@@ -578,8 +608,31 @@ pub fn dispatch<W: Write>(
         // VizierHandler and serves it with a deferred response instead.
         Method::WaitOperation => call!(wait_operation),
         Method::GetServiceMetrics => call!(get_service_metrics),
+        Method::GetTraces => call!(get_traces),
         Method::Ping => write_ok(out, &EmptyResponse::default()),
+    };
+    if let Some(span) = span {
+        let rec = span.finish();
+        if let Some(threshold) = trace::slow_threshold_us() {
+            // GetTraces itself is exempt: a slow trace *fetch* dumping
+            // its own tree is noise, not signal.
+            if rec.dur_us >= threshold && method != Method::GetTraces {
+                let spans = trace::snapshot();
+                let rows: Vec<(u64, u64, String, u64, u64)> = spans
+                    .iter()
+                    .filter(|s| s.trace_id == rec.trace_id)
+                    .map(|s| (s.span_id, s.parent_id, span_label(s.name_code), s.start_us, s.dur_us))
+                    .collect();
+                eprintln!(
+                    "trace: slow request {method:?} took {:.1} ms (trace {:016x}):\n{}",
+                    rec.dur_us as f64 / 1000.0,
+                    rec.trace_id,
+                    trace::render_spans(&rows)
+                );
+            }
+        }
     }
+    result
 }
 
 /// Read side of `dispatch` for in-process transports: handles one raw

@@ -13,3 +13,4 @@ pub mod rng;
 pub mod sync;
 pub mod threadpool;
 pub mod time;
+pub mod trace;

@@ -198,6 +198,10 @@ pub mod classes {
     pub static RT_PJRT: LockClass = LockClass::new("runtime.pjrt_sender", 370);
     /// Benchmark result collector ([`crate::util::benchkit`]).
     pub static BENCH_COLLECTOR: LockClass = LockClass::new("benchkit.collector", 380);
+    /// Trace ring registry ([`crate::util::trace`]): taken when a thread
+    /// records its first span — which can happen under any lock above
+    /// (WAL lanes, shards, mux out-buffers) — so it is a leaf.
+    pub static TRACE_REGISTRY: LockClass = LockClass::new("trace.registry", 390);
 }
 
 // ---------------------------------------------------------------------------

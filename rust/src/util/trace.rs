@@ -1,0 +1,869 @@
+//! Dependency-free distributed tracing: per-request span trees across
+//! wire → frontend → policy → WAL (the per-request counterpart to the
+//! aggregate histograms in `service::metrics`).
+//!
+//! The paper positions Vizier as a service tuning thousands of users'
+//! systems; operating such a service means answering "where did *this*
+//! `SuggestTrials` spend its 400 ms?" — queue wait, coalesce fan-in, GP
+//! fit, WAL fsync — which aggregates cannot. The design borrows the
+//! discipline of `util::sync`'s lockdep rather than an external tracing
+//! stack:
+//!
+//! * **Zero-cost when disabled.** Every entry point starts with
+//!   [`enabled`], one cached boolean load (the `lockdep_enabled`
+//!   pattern). Disabled builds allocate no rings, take no locks, and
+//!   record nothing.
+//! * **Bounded memory, lock-free recording.** Each recording thread owns
+//!   a fixed-size ring of seqlock slots ([`SpanRing`]); finished spans
+//!   are published with plain atomic stores — no lock, no allocation.
+//!   The global registry of rings (one `Arc` per thread, capped at
+//!   [`MAX_RINGS`]) is only locked when a thread records its *first*
+//!   span and when [`snapshot`] collects; its class
+//!   (`trace.registry`, rank 390) is a leaf in the lock hierarchy so
+//!   publishing is legal under any crate lock (WAL lanes, shards, …).
+//! * **Context is ambient.** The active `(trace id, span id)` lives in a
+//!   thread-local; RAII [`Span`]s save/restore it so nesting works
+//!   without threading parameters through every call. Cross-thread and
+//!   cross-process edges (coalesced policy jobs, v2 frames, Pythia hops)
+//!   carry an explicit [`TraceCtx`] instead — see
+//!   [`crate::wire::messages::append_trace_context`].
+//!
+//! Sampling is decided once per root span (`--trace-sample-rate` /
+//! `OSSVIZIER_TRACE`); children inherit the decision implicitly because
+//! an unsampled request simply never installs a current context.
+//! Readers ([`snapshot`] → `GetTraces`) tolerate concurrent writers: a
+//! slot caught mid-write fails its seqlock check and is skipped, so a
+//! snapshot is a consistent *sample* of recent spans, never a torn one.
+
+use std::cell::{Cell, RefCell};
+use std::marker::PhantomData;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use super::sync::{classes, Mutex};
+
+// ---------------------------------------------------------------------------
+// Span name codes
+// ---------------------------------------------------------------------------
+// Spans carry a numeric name code (a `u64` slot in the ring) rather than
+// a string so recording stays allocation-free; [`span_name`] maps codes
+// back to stable names. Server RPC spans are `RPC_BASE + method id`,
+// client-side RPC spans `CLIENT_RPC_BASE + method id` — the service
+// layer pretty-prints the method name when it renders.
+
+/// Time a request spent in the frontend job queue before a worker picked
+/// it up (recorded retroactively when the dispatch span starts).
+pub const FRONTEND_QUEUE: u64 = 1;
+/// One policy computation (`Pythia::run_suggest`); fans into every
+/// coalesced request's trace via linked copies.
+pub const POLICY_COMPUTE: u64 = 2;
+/// One durable datastore commit (`WalDatastore::commit`), including the
+/// wait for group-commit durability.
+pub const WAL_COMMIT: u64 = 3;
+/// The lane-serialized section of a WAL commit: in-memory apply + log
+/// append (excludes the durability wait).
+pub const WAL_LANE_APPLY: u64 = 4;
+/// One committer-thread I/O batch (write + optional fsync). Infra span:
+/// batches serve many commits, so it belongs to no single trace.
+pub const WAL_FSYNC_BATCH: u64 = 5;
+/// One segment rotation in the segmented WAL. Infra span.
+pub const WAL_ROTATION: u64 = 6;
+/// One client-side round-trip to a remote Pythia server.
+pub const PYTHIA_HOP: u64 = 7;
+/// Server-side policy execution inside the standalone Pythia service.
+pub const PYTHIA_SERVE: u64 = 8;
+/// Server-side RPC dispatch spans: `RPC_BASE + method id`.
+pub const RPC_BASE: u64 = 1000;
+/// Client-side RPC spans (mux transport): `CLIENT_RPC_BASE + method id`.
+pub const CLIENT_RPC_BASE: u64 = 2000;
+
+/// Stable text name for a span code. Method ids are rendered numerically
+/// here (`util` cannot see `wire::Method`); the service layer substitutes
+/// method names when it has them.
+pub fn span_name(code: u64) -> String {
+    match code {
+        FRONTEND_QUEUE => "frontend-queue".into(),
+        POLICY_COMPUTE => "policy-compute".into(),
+        WAL_COMMIT => "wal-commit".into(),
+        WAL_LANE_APPLY => "wal-lane-apply".into(),
+        WAL_FSYNC_BATCH => "wal-fsync-batch".into(),
+        WAL_ROTATION => "wal-rotation".into(),
+        PYTHIA_HOP => "pythia-hop".into(),
+        PYTHIA_SERVE => "pythia-serve".into(),
+        c if (RPC_BASE..RPC_BASE + 256).contains(&c) => format!("rpc:{}", c - RPC_BASE),
+        c if (CLIENT_RPC_BASE..CLIENT_RPC_BASE + 256).contains(&c) => {
+            format!("client-rpc:{}", c - CLIENT_RPC_BASE)
+        }
+        c => format!("span:{c}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Process-wide tracing configuration, decided once (first-wins).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Fraction of root spans sampled in `[0.0, 1.0]`. 0 disables.
+    pub sample_rate: f64,
+    /// Print a span tree to stderr for requests slower than this
+    /// (milliseconds). 0 disables the slow-request log.
+    pub slow_ms: u64,
+}
+
+static CONFIG: OnceLock<TraceConfig> = OnceLock::new();
+
+fn env_rate() -> f64 {
+    match std::env::var("OSSVIZIER_TRACE") {
+        Ok(v) if v.is_empty() || v == "0" => 0.0,
+        // "1" (and any unparseable non-empty value) means "trace
+        // everything"; a float is a sampling rate.
+        Ok(v) => v.parse::<f64>().unwrap_or(1.0).clamp(0.0, 1.0),
+        Err(_) => 0.0,
+    }
+}
+
+/// Install the configuration from CLI flags. `None` fields defer to the
+/// `OSSVIZIER_TRACE` environment variable (and `--trace-slow-ms` alone
+/// implies sampling everything, since a slow-request log needs spans).
+/// First caller wins; later calls (and the lazy env fallback) are
+/// no-ops, mirroring `lockdep_enabled`'s decide-once discipline.
+pub fn init(sample_rate: Option<f64>, slow_ms: Option<u64>) {
+    let slow = slow_ms.unwrap_or(0);
+    let rate = sample_rate.unwrap_or_else(|| {
+        let env = env_rate();
+        if env > 0.0 {
+            env
+        } else if slow > 0 {
+            1.0
+        } else {
+            0.0
+        }
+    });
+    let _ = CONFIG.set(TraceConfig { sample_rate: rate.clamp(0.0, 1.0), slow_ms: slow });
+}
+
+fn config() -> TraceConfig {
+    *CONFIG.get_or_init(|| TraceConfig { sample_rate: env_rate(), slow_ms: 0 })
+}
+
+/// Is tracing active for this process? One cached boolean load on the
+/// hot path (the `lockdep_enabled` pattern) — everything else in this
+/// module is behind it.
+pub fn enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let c = config();
+        c.sample_rate > 0.0 || c.slow_ms > 0
+    })
+}
+
+/// Slow-request threshold in microseconds, if the slow log is on.
+pub fn slow_threshold_us() -> Option<u64> {
+    let c = config();
+    (c.slow_ms > 0).then(|| c.slow_ms * 1000)
+}
+
+// ---------------------------------------------------------------------------
+// Ids, clock, sampling
+// ---------------------------------------------------------------------------
+
+/// Trace/span identifier pair carried across threads and the wire.
+/// `trace_id` names the whole request tree; `span_id` the node new work
+/// should parent under. Ids are never 0 (0 = "absent" everywhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Globally unique nonzero id: a per-process random seed (epoch time)
+/// plus an atomic counter, whitened through splitmix64 so ids from
+/// different processes don't collide trivially.
+fn next_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let seed = *SEED.get_or_init(|| super::time::epoch_micros() | 1);
+    let n = CTR.fetch_add(1, Ordering::Relaxed);
+    let id = splitmix64(seed.wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Monotonic microseconds since the first trace event in this process.
+/// Spans use this (not wall time) so durations survive clock steps.
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+thread_local! {
+    /// Active `(trace_id, span_id)`; `(0, 0)` = no context.
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+    /// Queue-wait note left by the frontend worker loop for the next
+    /// dispatch span (see [`note_queue_wait`]).
+    static QUEUE_WAIT_US: Cell<u64> = const { Cell::new(0) };
+    /// xorshift state for the per-root sampling decision.
+    static SAMPLE_STATE: Cell<u64> = const { Cell::new(0) };
+    /// This thread's span ring, registered on first use.
+    static RING: RefCell<Option<Arc<SpanRing>>> = const { RefCell::new(None) };
+}
+
+/// Per-root sampling decision against `rate` (thread-local xorshift —
+/// cheap, and determinism per thread is irrelevant here).
+fn sample(rate: f64) -> bool {
+    if rate >= 1.0 {
+        return true;
+    }
+    if rate <= 0.0 {
+        return false;
+    }
+    SAMPLE_STATE.with(|s| {
+        let mut x = s.get();
+        if x == 0 {
+            x = next_id() | 1;
+        }
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        s.set(x);
+        ((x >> 11) as f64 / (1u64 << 53) as f64) < rate
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The span ring (per-thread seqlock slots)
+// ---------------------------------------------------------------------------
+
+/// Slots per thread ring. Power of two; at 7 × 8 bytes per slot a ring
+/// costs 56 KiB, so even a 100-thread policy pool stays under 6 MiB.
+pub const RING_SLOTS: usize = 1024;
+
+/// Registered rings cap: bounds total trace memory against unbounded
+/// thread churn. Threads past the cap still record locally (their ring
+/// is simply never snapshotted) so the hot path never branches on it.
+pub const MAX_RINGS: usize = 512;
+
+/// One finished span as stored in (and read back from) a ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// Parent span id; 0 for roots. May name a span recorded by another
+    /// process (a remote client) — renderers treat an unknown parent as
+    /// a remote root.
+    pub parent_id: u64,
+    pub name_code: u64,
+    /// [`now_us`] timestamp at span start.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+const SLOT_FIELDS: usize = 6;
+
+/// One seqlock slot: `seq` is odd while a write is in flight, even when
+/// the fields are consistent, 0 when never written. Fields are plain
+/// relaxed atomics — the seqlock protocol below makes torn *combinations*
+/// detectable, and per-field atomicity makes them well-defined.
+struct Slot {
+    seq: AtomicU64,
+    f: [AtomicU64; SLOT_FIELDS],
+}
+
+impl Slot {
+    const fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            f: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+}
+
+/// A fixed-size ring of seqlock slots. Exactly one thread writes
+/// ([`push`](Self::push)); any thread may read
+/// ([`read_into`](Self::read_into)) without blocking the writer.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Monotonic write position (slot = `head % len`).
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(slots: usize) -> Self {
+        assert!(slots.is_power_of_two(), "ring size must be a power of two");
+        Self {
+            slots: (0..slots).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish one record. Writer-side seqlock: mark the slot odd,
+    /// release-fence so the mark is visible before any field, store the
+    /// fields, then mark it even with a release store so the fields are
+    /// visible before the mark. Single-writer, so `head` needs no RMW.
+    pub fn push(&self, rec: &SpanRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) & (self.slots.len() - 1)];
+        slot.seq.store(2 * h + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.f[0].store(rec.trace_id, Ordering::Relaxed);
+        slot.f[1].store(rec.span_id, Ordering::Relaxed);
+        slot.f[2].store(rec.parent_id, Ordering::Relaxed);
+        slot.f[3].store(rec.name_code, Ordering::Relaxed);
+        slot.f[4].store(rec.start_us, Ordering::Relaxed);
+        slot.f[5].store(rec.dur_us, Ordering::Relaxed);
+        slot.seq.store(2 * h + 2, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Append every consistently-readable record to `out`. Slots caught
+    /// mid-write (odd seq, or seq changed across the read) are skipped —
+    /// a snapshot samples, it never blocks the writer.
+    pub fn read_into(&self, out: &mut Vec<SpanRecord>) {
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue;
+            }
+            let vals: [u64; SLOT_FIELDS] =
+                std::array::from_fn(|i| slot.f[i].load(Ordering::Relaxed));
+            fence(Ordering::Acquire);
+            let s2 = slot.seq.load(Ordering::Relaxed);
+            if s1 != s2 {
+                continue;
+            }
+            out.push(SpanRecord {
+                trace_id: vals[0],
+                span_id: vals[1],
+                parent_id: vals[2],
+                name_code: vals[3],
+                start_us: vals[4],
+                dur_us: vals[5],
+            });
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<SpanRing>>> {
+    static R: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(&classes::TRACE_REGISTRY, Vec::new()))
+}
+
+/// Rings currently registered (0 when tracing never recorded anything —
+/// the bench's structural zero-cost check).
+pub fn registered_rings() -> usize {
+    registry().lock().len()
+}
+
+fn publish(rec: &SpanRecord) {
+    RING.with(|r| {
+        let mut opt = r.borrow_mut();
+        if opt.is_none() {
+            let ring = Arc::new(SpanRing::new(RING_SLOTS));
+            let mut reg = registry().lock();
+            if reg.len() < MAX_RINGS {
+                reg.push(Arc::clone(&ring));
+            }
+            drop(reg);
+            *opt = Some(ring);
+        }
+        opt.as_ref().expect("ring installed above").push(rec);
+    });
+}
+
+/// Collect every readable span from every registered ring. Rings of
+/// exited threads are kept alive by the registry's `Arc`, so their spans
+/// survive until overwritten counterparts would have.
+pub fn snapshot() -> Vec<SpanRecord> {
+    if !enabled() {
+        return Vec::new();
+    }
+    let rings: Vec<Arc<SpanRing>> = registry().lock().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        ring.read_into(&mut out);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Ambient context and RAII spans
+// ---------------------------------------------------------------------------
+
+/// The current thread's active context, if any (what a coalesced job or
+/// an outgoing wire frame should propagate).
+pub fn current() -> Option<TraceCtx> {
+    if !enabled() {
+        return None;
+    }
+    let (t, s) = CURRENT.with(|c| c.get());
+    (t != 0).then_some(TraceCtx { trace_id: t, span_id: s })
+}
+
+/// Restores the previous thread-local context on drop (see
+/// [`set_current`]).
+pub struct CtxGuard {
+    prev: Option<(u64, u64)>,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev {
+            CURRENT.with(|c| c.set(prev));
+        }
+    }
+}
+
+/// Install `ctx` (or clear with `None`) as the thread's active context
+/// until the guard drops — how a worker thread adopts the context of the
+/// request it is serving (coalesced policy jobs, per-op completion).
+pub fn set_current(ctx: Option<TraceCtx>) -> CtxGuard {
+    if !enabled() {
+        return CtxGuard { prev: None, _not_send: PhantomData };
+    }
+    let next = ctx.map_or((0, 0), |c| (c.trace_id, c.span_id));
+    let prev = CURRENT.with(|c| c.replace(next));
+    CtxGuard { prev: Some(prev), _not_send: PhantomData }
+}
+
+/// An in-flight span: records itself into the thread ring and restores
+/// the previous ambient context when dropped (or via
+/// [`finish`](Self::finish) when the caller wants the record back).
+pub struct Span {
+    ctx: TraceCtx,
+    parent: u64,
+    code: u64,
+    start_us: u64,
+    prev: (u64, u64),
+    live: bool,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Span {
+    /// This span's context — what children (local or remote) parent to.
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    fn end(&mut self) -> SpanRecord {
+        self.live = false;
+        let rec = SpanRecord {
+            trace_id: self.ctx.trace_id,
+            span_id: self.ctx.span_id,
+            parent_id: self.parent,
+            name_code: self.code,
+            start_us: self.start_us,
+            dur_us: now_us().saturating_sub(self.start_us),
+        };
+        publish(&rec);
+        CURRENT.with(|c| c.set(self.prev));
+        rec
+    }
+
+    /// End the span now and return its record (for the slow-request
+    /// log); the eventual drop is a no-op.
+    pub fn finish(mut self) -> SpanRecord {
+        self.end()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live {
+            self.end();
+        }
+    }
+}
+
+fn begin(trace_id: u64, parent: u64, code: u64) -> Span {
+    let span_id = next_id();
+    let prev = CURRENT.with(|c| c.replace((trace_id, span_id)));
+    Span {
+        ctx: TraceCtx { trace_id, span_id },
+        parent,
+        code,
+        start_us: now_us(),
+        prev,
+        live: true,
+        _not_send: PhantomData,
+    }
+}
+
+/// Start a new sampled root span (fresh trace id, no parent). `None`
+/// when tracing is off or the sampler says no.
+pub fn root_span(code: u64) -> Option<Span> {
+    if !enabled() || !sample(config().sample_rate) {
+        return None;
+    }
+    Some(begin(next_id(), 0, code))
+}
+
+/// Start a local root continuing a remote trace: same trace id, parented
+/// under the remote caller's span. Remote traces are always honored —
+/// the sampling decision was the root's to make.
+pub fn root_span_in(ctx: TraceCtx, code: u64) -> Option<Span> {
+    if !enabled() || ctx.trace_id == 0 {
+        return None;
+    }
+    Some(begin(ctx.trace_id, ctx.span_id, code))
+}
+
+/// Start a child of the current ambient span; `None` when there is no
+/// active (sampled) context.
+pub fn child_span(code: u64) -> Option<Span> {
+    if !enabled() {
+        return None;
+    }
+    let cur = current()?;
+    Some(begin(cur.trace_id, cur.span_id, code))
+}
+
+/// Start the span for one server-side RPC dispatch: continue `remote`'s
+/// trace if the frame carried one, else nest under any ambient context
+/// (the in-process `LocalTransport` path), else make a fresh sampled
+/// root. Also converts the worker loop's queue-wait note into a
+/// retroactive `frontend-queue` child covering the time before dispatch.
+pub fn rpc_span(code: u64, remote: Option<TraceCtx>) -> Option<Span> {
+    if !enabled() {
+        return None;
+    }
+    let q = take_queue_wait();
+    let span = match remote {
+        Some(ctx) if ctx.trace_id != 0 => begin(ctx.trace_id, ctx.span_id, code),
+        _ => match current() {
+            Some(cur) => begin(cur.trace_id, cur.span_id, code),
+            None => {
+                if !sample(config().sample_rate) {
+                    return None;
+                }
+                begin(next_id(), 0, code)
+            }
+        },
+    };
+    if q > 0 {
+        publish(&SpanRecord {
+            trace_id: span.ctx.trace_id,
+            span_id: next_id(),
+            parent_id: span.ctx.span_id,
+            name_code: FRONTEND_QUEUE,
+            start_us: span.start_us.saturating_sub(q),
+            dur_us: q,
+        });
+    }
+    Some(span)
+}
+
+/// Leave a queue-wait note for the next [`rpc_span`] on this thread
+/// (called by the frontend worker loop, which knows the enqueue time but
+/// not the trace context — that is still inside the frame).
+pub fn note_queue_wait(us: u64) {
+    if !enabled() {
+        return;
+    }
+    QUEUE_WAIT_US.with(|q| q.set(us));
+}
+
+fn take_queue_wait() -> u64 {
+    QUEUE_WAIT_US.with(|q| q.replace(0))
+}
+
+/// Record a completed-span *copy* into `ctx`'s trace — how one coalesced
+/// policy computation fans into each of the K waiting requests' trees
+/// (same interval, distinct span ids, each parented under its own
+/// request).
+pub fn record_linked(ctx: TraceCtx, code: u64, start_us: u64, dur_us: u64) {
+    if !enabled() || ctx.trace_id == 0 {
+        return;
+    }
+    publish(&SpanRecord {
+        trace_id: ctx.trace_id,
+        span_id: next_id(),
+        parent_id: ctx.span_id,
+        name_code: code,
+        start_us,
+        dur_us,
+    });
+}
+
+/// Record background work that belongs to no request (fsync batches,
+/// segment rotation): trace id 0, grouped under the "infra" pseudo-trace
+/// by `GetTraces` when asked.
+pub fn record_infra(code: u64, start_us: u64, dur_us: u64) {
+    if !enabled() {
+        return;
+    }
+    publish(&SpanRecord {
+        trace_id: 0,
+        span_id: next_id(),
+        parent_id: 0,
+        name_code: code,
+        start_us,
+        dur_us,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+/// Render one trace's spans as an indented tree. Rows are
+/// `(span_id, parent_id, name, start_us, dur_us)`; offsets print
+/// relative to the earliest start. Spans whose parent is absent (a
+/// remote caller's span, or one that fell off its ring) render as roots
+/// marked `^`. Shared by the server's slow-request log and the client's
+/// `traces()` report.
+pub fn render_spans(rows: &[(u64, u64, String, u64, u64)]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let t0 = rows.iter().map(|r| r.3).min().unwrap_or(0);
+    let ids: std::collections::HashSet<u64> = rows.iter().map(|r| r.0).collect();
+    let mut children: std::collections::HashMap<u64, Vec<usize>> =
+        std::collections::HashMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        if row.1 != 0 && ids.contains(&row.1) {
+            children.entry(row.1).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    let by_start = |list: &mut Vec<usize>| list.sort_by_key(|&i| (rows[i].3, rows[i].0));
+    by_start(&mut roots);
+    for list in children.values_mut() {
+        by_start(list);
+    }
+    let mut out = String::new();
+    // Iterative DFS with an explicit stack; `visited` guards against a
+    // (corrupt) parent cycle ever looping the renderer.
+    let mut visited: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    let mut stack: Vec<(usize, usize)> = roots.iter().rev().map(|&i| (i, 0)).collect();
+    while let Some((i, depth)) = stack.pop() {
+        if !visited.insert(i) {
+            continue;
+        }
+        let (span_id, parent_id, ref name, start, dur) = rows[i];
+        let remote = parent_id != 0 && !ids.contains(&parent_id);
+        out.push_str(&format!(
+            "{:indent$}{}{} [{} us @ +{} us]\n",
+            "",
+            name,
+            if remote { " ^" } else { "" },
+            dur,
+            start.saturating_sub(t0),
+            indent = depth * 2,
+        ));
+        if let Some(kids) = children.get(&span_id) {
+            for &k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Render the spans of `trace_id` out of a [`snapshot`] using
+/// [`span_name`] — the server-side slow-request log body.
+pub fn render_trace(spans: &[SpanRecord], trace_id: u64) -> String {
+    let rows: Vec<(u64, u64, String, u64, u64)> = spans
+        .iter()
+        .filter(|s| s.trace_id == trace_id)
+        .map(|s| (s.span_id, s.parent_id, span_name(s.name_code), s.start_us, s.dur_us))
+        .collect();
+    render_spans(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests deliberately avoid `init`/`enabled` — the config
+    // is a process-global `OnceLock` shared with every other unit test
+    // in this binary, so only the pure pieces are tested here. Full
+    // end-to-end behaviour (propagation, fan-in, disabled mode) lives in
+    // `tests/tracing.rs` / `tests/tracing_disabled.rs`, each its own
+    // process.
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = next_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate id {id}");
+        }
+    }
+
+    #[test]
+    fn sample_edge_rates() {
+        assert!(sample(1.0));
+        assert!(sample(2.0));
+        assert!(!sample(0.0));
+        assert!(!sample(-1.0));
+        // A middling rate must eventually say both yes and no.
+        let hits = (0..10_000).filter(|_| sample(0.5)).count();
+        assert!(hits > 1_000 && hits < 9_000, "rate 0.5 produced {hits}/10000");
+    }
+
+    #[test]
+    fn ring_roundtrips_records() {
+        let ring = SpanRing::new(8);
+        let rec = SpanRecord {
+            trace_id: 7,
+            span_id: 8,
+            parent_id: 9,
+            name_code: WAL_COMMIT,
+            start_us: 100,
+            dur_us: 42,
+        };
+        ring.push(&rec);
+        let mut out = Vec::new();
+        ring.read_into(&mut out);
+        assert_eq!(out, vec![rec]);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_latest() {
+        let ring = SpanRing::new(8);
+        for i in 0..20u64 {
+            ring.push(&SpanRecord {
+                trace_id: 1,
+                span_id: i + 1,
+                parent_id: 0,
+                name_code: 0,
+                start_us: i,
+                dur_us: 0,
+            });
+        }
+        let mut out = Vec::new();
+        ring.read_into(&mut out);
+        assert_eq!(out.len(), 8);
+        let ids: std::collections::HashSet<u64> = out.iter().map(|r| r.span_id).collect();
+        for want in 13..=20 {
+            assert!(ids.contains(&want), "latest records must survive wrap");
+        }
+    }
+
+    #[test]
+    fn ring_survives_concurrent_reads() {
+        let ring = Arc::new(SpanRing::new(16));
+        let w = Arc::clone(&ring);
+        let writer = std::thread::spawn(move || {
+            for i in 0..50_000u64 {
+                w.push(&SpanRecord {
+                    trace_id: i,
+                    span_id: i,
+                    parent_id: i,
+                    name_code: i,
+                    start_us: i,
+                    dur_us: i,
+                });
+            }
+        });
+        let mut out = Vec::new();
+        while !writer.is_finished() {
+            out.clear();
+            ring.read_into(&mut out);
+            // Every accepted record must be internally consistent: the
+            // writer stores the same value in every field.
+            for r in &out {
+                assert!(
+                    r.trace_id == r.span_id
+                        && r.span_id == r.parent_id
+                        && r.parent_id == r.name_code
+                        && r.name_code == r.start_us
+                        && r.start_us == r.dur_us,
+                    "torn read: {r:?}"
+                );
+            }
+        }
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn span_names_are_stable() {
+        assert_eq!(span_name(FRONTEND_QUEUE), "frontend-queue");
+        assert_eq!(span_name(POLICY_COMPUTE), "policy-compute");
+        assert_eq!(span_name(WAL_COMMIT), "wal-commit");
+        assert_eq!(span_name(RPC_BASE + 6), "rpc:6");
+        assert_eq!(span_name(CLIENT_RPC_BASE + 17), "client-rpc:17");
+        assert_eq!(span_name(999), "span:999");
+    }
+
+    #[test]
+    fn render_tree_indents_and_orders() {
+        let rows = vec![
+            (1, 0, "rpc:SuggestTrials".to_string(), 100, 500),
+            (2, 1, "policy-compute".to_string(), 200, 300),
+            (3, 1, "frontend-queue".to_string(), 90, 10),
+            (4, 2, "pythia-hop".to_string(), 210, 100),
+        ];
+        let text = render_spans(&rows);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("rpc:SuggestTrials ["));
+        // Children sorted by start: queue (90) before policy (200).
+        assert!(lines[1].starts_with("  frontend-queue"));
+        assert!(lines[2].starts_with("  policy-compute"));
+        assert!(lines[3].starts_with("    pythia-hop"));
+        // Offsets are relative to the earliest start (90).
+        assert!(lines[0].contains("@ +10 us"), "got {:?}", lines[0]);
+        assert!(lines[1].contains("@ +0 us"), "got {:?}", lines[1]);
+    }
+
+    #[test]
+    fn render_marks_remote_parents_as_roots() {
+        let rows = vec![
+            // Parent 99 was recorded by another process.
+            (1, 99, "rpc:Ping".to_string(), 10, 5),
+            (2, 1, "wal-commit".to_string(), 11, 2),
+        ];
+        let text = render_spans(&rows);
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("rpc:Ping ^"), "got {:?}", lines[0]);
+        assert!(lines[1].starts_with("  wal-commit"));
+    }
+
+    #[test]
+    fn render_survives_parent_cycles() {
+        let rows = vec![
+            (1, 2, "a".to_string(), 0, 1),
+            (2, 1, "b".to_string(), 1, 1),
+        ];
+        // Both parents "exist", neither is a root: nothing to render,
+        // but the renderer must not loop or panic.
+        let _ = render_spans(&rows);
+    }
+
+    #[test]
+    fn render_trace_filters_by_id() {
+        let spans = vec![
+            SpanRecord { trace_id: 1, span_id: 10, parent_id: 0, name_code: RPC_BASE + 17, start_us: 0, dur_us: 9 },
+            SpanRecord { trace_id: 2, span_id: 11, parent_id: 0, name_code: WAL_COMMIT, start_us: 0, dur_us: 1 },
+        ];
+        let text = render_trace(&spans, 1);
+        assert!(text.contains("rpc:17"));
+        assert!(!text.contains("wal-commit"));
+    }
+}

@@ -10,7 +10,7 @@
 //! **Protocol v2** — multiplexed + streaming: every frame is
 //! `[u32-le total_len][u8 kind][u32-le correlation_id][body]` where `kind`
 //! is one of [`FrameKind`]. Kind bytes live in `0xE0..=0xE6`, disjoint from
-//! every v1 head byte (methods 1–19, Pythia 101/102, statuses 0–5), so the
+//! every v1 head byte (methods 1–20, Pythia 101/102, statuses 0–5), so the
 //! two protocols share the `[len][head][rest]` prefix and one
 //! [`FrameReader`] parses both: the first head byte a server sees decides
 //! the connection's protocol forever (`HELLO` ⇒ v2, anything else ⇒ the
@@ -53,6 +53,9 @@ pub enum Method {
     /// Service/front-end counters snapshot (coalescing ratios, in-flight
     /// policy jobs, parked responses) without shelling into the server.
     GetServiceMetrics = 19,
+    /// Slowest-N recent request traces (span trees) from the in-process
+    /// trace rings; empty when tracing is disabled.
+    GetTraces = 20,
 }
 
 impl Method {
@@ -78,6 +81,7 @@ impl Method {
             17 => Ping,
             18 => WaitOperation,
             19 => GetServiceMetrics,
+            20 => GetTraces,
             _ => return None,
         })
     }
@@ -112,7 +116,7 @@ impl Status {
 pub const WIRE_VERSION_MAX: u64 = 2;
 
 /// v2 frame kinds. Values are chosen in `0xE0..=0xE6` so they can never
-/// collide with a v1 head byte (request method ids 1–19 and Pythia
+/// collide with a v1 head byte (request method ids 1–20 and Pythia
 /// 101/102, response status bytes 0–5): the first head byte on a fresh
 /// connection unambiguously selects the protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

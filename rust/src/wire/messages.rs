@@ -1121,6 +1121,86 @@ simple_msg! {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Tracing: context trailer + GetTraces messages
+// ---------------------------------------------------------------------------
+
+simple_msg! {
+    /// Trace context carried across process boundaries (v2 request
+    /// frames, Pythia hops) as an optional *trailer*: see
+    /// [`append_trace_context`].
+    TraceContextProto { 1 => trace_id: u64, 2 => span_id: u64 }
+}
+
+/// Field number of the trace-context trailer. Every request message in
+/// this schema uses small field numbers and every decoder skips unknown
+/// fields, so appending this high-numbered field after the encoded
+/// request bytes is invisible to peers that don't look for it — v1
+/// stays byte-identical because only the v2/Pythia clients append it
+/// (spec: `docs/WIRE.md` §trace-context trailer).
+pub const TRACE_CONTEXT_FIELD: u32 = 2047;
+
+/// Append `ctx` to an already-encoded request payload as a trailer
+/// field. Decoding the payload as its request type still works (unknown
+/// fields are skipped); [`extract_trace_context`] recovers the context.
+pub fn append_trace_context(payload: &mut Vec<u8>, ctx: crate::util::trace::TraceCtx) {
+    let mut w = Writer::new();
+    w.msg(
+        TRACE_CONTEXT_FIELD,
+        &TraceContextProto { trace_id: ctx.trace_id, span_id: ctx.span_id },
+    );
+    payload.extend_from_slice(&w.into_bytes());
+}
+
+/// Scan a request payload for a trace-context trailer. Returns `None`
+/// for payloads without one (every v1 client) or with a zero trace id;
+/// malformed payloads also yield `None` — the request decoder will
+/// report the real error.
+pub fn extract_trace_context(payload: &[u8]) -> Option<crate::util::trace::TraceCtx> {
+    let mut r = Reader::new(payload);
+    let mut found = None;
+    while let Ok(Some((f, v))) = r.next_field() {
+        if f == TRACE_CONTEXT_FIELD {
+            if let Ok(p) = v.as_msg::<TraceContextProto>() {
+                if p.trace_id != 0 {
+                    found =
+                        Some(crate::util::trace::TraceCtx { trace_id: p.trace_id, span_id: p.span_id });
+                }
+            }
+        }
+    }
+    found
+}
+
+simple_msg! {
+    /// GetTraces: fetch the `limit` slowest recent traces (default 10).
+    /// `include_infra` adds the pseudo-trace of background spans (fsync
+    /// batches, segment rotations) as trace id 0.
+    GetTracesRequest { 1 => limit: u64, 2 => include_infra: bool }
+}
+simple_msg! {
+    /// One span of a trace. `parent_id == 0` means a root; a nonzero
+    /// parent absent from the same trace belongs to a remote process
+    /// (the client side of the wire).
+    SpanProto {
+        1 => span_id: u64,
+        2 => parent_id: u64,
+        3 => name: str,
+        4 => start_us: u64,
+        5 => duration_us: u64,
+    }
+}
+simple_msg! {
+    /// One trace: its spans plus the precomputed wall duration
+    /// (max end − min start over the spans the server still had).
+    TraceProto {
+        1 => trace_id: u64,
+        2 => duration_us: u64,
+        3 => spans: (repmsg SpanProto),
+    }
+}
+simple_msg! { GetTracesResponse { 1 => traces: (repmsg TraceProto) } }
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1451,5 +1531,55 @@ mod tests {
         }
         let back: ParameterSpecProto = decode(&encode(&spec)).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn trace_trailer_roundtrips_and_is_invisible_to_decoders() {
+        use crate::util::trace::TraceCtx;
+        let req = SuggestTrialsRequest {
+            study_name: "studies/1".into(),
+            count: 2,
+            client_id: "w0".into(),
+        };
+        let mut payload = encode(&req);
+        let bare_len = payload.len();
+        append_trace_context(&mut payload, TraceCtx { trace_id: 7, span_id: 9 });
+        assert!(payload.len() > bare_len);
+        // The request decodes unchanged (trailer skipped as unknown).
+        let back: SuggestTrialsRequest = decode(&payload).unwrap();
+        assert_eq!(back, req);
+        // The trailer extracts without touching the request decoder.
+        let ctx = extract_trace_context(&payload).unwrap();
+        assert_eq!(ctx, TraceCtx { trace_id: 7, span_id: 9 });
+        // Payloads without a trailer (every v1 client) yield None.
+        assert!(extract_trace_context(&encode(&req)).is_none());
+        // A zero trace id is "absent", and garbage payloads are None,
+        // not an error.
+        let mut zeroed = encode(&req);
+        append_trace_context(&mut zeroed, TraceCtx { trace_id: 0, span_id: 4 });
+        assert!(extract_trace_context(&zeroed).is_none());
+        assert!(extract_trace_context(&[0xFF, 0xFF, 0xFF]).is_none());
+    }
+
+    #[test]
+    fn get_traces_messages_roundtrip() {
+        let resp = GetTracesResponse {
+            traces: vec![TraceProto {
+                trace_id: 42,
+                duration_us: 1234,
+                spans: vec![SpanProto {
+                    span_id: 1,
+                    parent_id: 0,
+                    name: "rpc:SuggestTrials".into(),
+                    start_us: 10,
+                    duration_us: 1200,
+                }],
+            }],
+        };
+        let back: GetTracesResponse = decode(&encode(&resp)).unwrap();
+        assert_eq!(back, resp);
+        let req = GetTracesRequest { limit: 5, include_infra: true };
+        let back: GetTracesRequest = decode(&encode(&req)).unwrap();
+        assert_eq!(back, req);
     }
 }

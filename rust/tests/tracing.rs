@@ -1,0 +1,418 @@
+//! End-to-end tracing coverage: a trace context propagates across a real
+//! TCP wire-v2 round trip (the client span becomes the parent of the
+//! server's rpc span), v1 connections stay trailer-free and get fresh
+//! server-side roots, one coalesced policy run fans its policy-compute
+//! span into every waiting operation's trace, and the acceptance path —
+//! a WAL-backed suggest over TCP — yields a span tree with
+//! frontend-queue, policy-compute, and wal-commit spans parented under
+//! the rpc span, visible through `GetTraces` / `VizierClient::traces()`.
+//!
+//! The tracing config latches process-wide on first use, so every test
+//! here starts with `init_tracing()` (sample rate 1.0, no slow log) and
+//! the binary serializes through `serial()` — the span rings are global
+//! and overlapping servers would interleave their spans. The disabled
+//! default is covered by `tests/tracing_disabled.rs`, a separate binary
+//! that never enables tracing.
+
+use ossvizier::client::transport::{call, TcpTransport};
+use ossvizier::client::VizierClient;
+use ossvizier::datastore::memory::InMemoryDatastore;
+use ossvizier::datastore::wal::WalDatastore;
+use ossvizier::datastore::Datastore;
+use ossvizier::pythia::policy::{Policy, PolicyError, SuggestDecision, SuggestRequest};
+use ossvizier::pythia::supporter::PolicySupporter;
+use ossvizier::pyvizier::{converters, Algorithm, MetricInformation, StudyConfig, TrialSuggestion};
+use ossvizier::service::{build_service, ServerOptions, VizierServer, VizierService};
+use ossvizier::testing::poller_from_env;
+use ossvizier::util::trace::{self, SpanRecord};
+use ossvizier::wire::framing::Method;
+use ossvizier::wire::messages::{
+    CreateStudyRequest, EmptyResponse, GetOperationRequest, OperationResponse, ScaleType,
+    StudyProto, SuggestTrialsRequest,
+};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// The span rings are process-global, so tests must not overlap.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Latch tracing on for this whole binary. First `init` wins; every test
+/// passes the same values, so ordering between tests does not matter.
+fn init_tracing() {
+    trace::init(Some(1.0), None);
+    assert!(trace::enabled(), "tracing must be on for this binary");
+}
+
+fn env_forced_v1() -> bool {
+    std::env::var("OSSVIZIER_WIRE").map(|v| v == "v1").unwrap_or(false)
+}
+
+fn test_config(algorithm: Algorithm) -> StudyConfig {
+    let mut c = StudyConfig::new("tracing");
+    c.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    c.add_metric(MetricInformation::maximize("score"));
+    c.algorithm = algorithm;
+    c.seed = 29;
+    c
+}
+
+fn wait_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let by = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < by, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn start_server(service: Arc<VizierService>, workers: usize) -> VizierServer {
+    VizierServer::start_with(
+        service,
+        "127.0.0.1:0",
+        ServerOptions { workers, poller: poller_from_env(), ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Span ids recorded so far — the diff baseline. Earlier tests in this
+/// binary leave spans behind; everything below identifies its own spans
+/// as "recorded after my baseline".
+fn seen_ids() -> HashSet<u64> {
+    trace::snapshot().iter().map(|r| r.span_id).collect()
+}
+
+/// Poll the global rings until `pred` holds (spans recorded on another
+/// thread race the client's return) and hand back the snapshot.
+fn wait_for_spans(
+    what: &str,
+    mut pred: impl FnMut(&[SpanRecord]) -> bool,
+) -> Vec<SpanRecord> {
+    let by = Instant::now() + Duration::from_secs(10);
+    loop {
+        let snap = trace::snapshot();
+        if pred(&snap) {
+            return snap;
+        }
+        assert!(Instant::now() < by, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gated policy (same shape as tests/wire_matrix.rs): the first invocation
+// blocks, so follow-on operations coalesce behind it deterministically.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct GatedPolicy {
+    gate: Arc<Gate>,
+    invocations: Arc<AtomicUsize>,
+}
+
+impl Policy for GatedPolicy {
+    fn suggest(
+        &mut self,
+        req: &SuggestRequest,
+        _s: &dyn PolicySupporter,
+    ) -> Result<SuggestDecision, PolicyError> {
+        if self.invocations.fetch_add(1, Ordering::SeqCst) == 0 {
+            self.gate.wait(); // only the first invocation blocks
+        }
+        Ok(SuggestDecision::from_flat(
+            req,
+            vec![TrialSuggestion::default(); req.total_count()],
+        ))
+    }
+}
+
+fn gated_service(
+    ds: Arc<dyn Datastore>,
+    policy_workers: usize,
+) -> (Arc<VizierService>, Arc<Gate>, Arc<AtomicUsize>) {
+    let gate = Arc::new(Gate::default());
+    let invocations = Arc::new(AtomicUsize::new(0));
+    let (g, inv) = (Arc::clone(&gate), Arc::clone(&invocations));
+    let service = build_service(
+        ds,
+        move |reg| {
+            reg.register(
+                "GATED",
+                Arc::new(move |_| {
+                    Box::new(GatedPolicy {
+                        gate: Arc::clone(&g),
+                        invocations: Arc::clone(&inv),
+                    })
+                }),
+            );
+        },
+        policy_workers,
+    );
+    (service, gate, invocations)
+}
+
+/// A wire-v2 round trip stitches one trace across the process boundary:
+/// the client-side rpc span is the root, and the server's dispatch span
+/// (carried over the trace-context trailer) parents directly to it.
+#[test]
+fn v2_round_trip_links_client_and_server_spans() {
+    let _serial = serial();
+    init_tracing();
+    if env_forced_v1() {
+        eprintln!("skipping: OSSVIZIER_WIRE=v1 pins the legacy protocol");
+        return;
+    }
+    let server = start_server(ossvizier::service::in_memory_service(2), 2);
+    let addr = server.local_addr().to_string();
+    let mut t = TcpTransport::connect(&addr).unwrap();
+    assert_eq!(t.wire_version(), 2, "HELLO negotiation must land on v2");
+
+    let before = seen_ids();
+    let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+
+    let client_code = trace::CLIENT_RPC_BASE + Method::Ping as u8 as u64;
+    let server_code = trace::RPC_BASE + Method::Ping as u8 as u64;
+    let fresh = |r: &SpanRecord, code: u64| r.name_code == code && !before.contains(&r.span_id);
+    let snap = wait_for_spans("client and server ping spans", |s| {
+        s.iter().any(|r| fresh(r, client_code)) && s.iter().any(|r| fresh(r, server_code))
+    });
+    let client_span = snap.iter().find(|r| fresh(r, client_code)).unwrap();
+    let server_span = snap.iter().find(|r| fresh(r, server_code)).unwrap();
+    assert_eq!(
+        server_span.trace_id, client_span.trace_id,
+        "both sides of the wire must land in one trace"
+    );
+    assert_eq!(
+        server_span.parent_id, client_span.span_id,
+        "the server span must parent to the client span from the trailer"
+    );
+    assert_eq!(client_span.parent_id, 0, "the client span is the trace root");
+    server.shutdown();
+}
+
+/// A v1 connection never carries the trailer (the bytes are identical
+/// with tracing on), so the server samples a fresh root and the client
+/// side opens no span at all.
+#[test]
+fn v1_connection_stays_trailer_free_and_gets_a_fresh_root() {
+    let _serial = serial();
+    init_tracing();
+    let server = start_server(ossvizier::service::in_memory_service(2), 2);
+    let addr = server.local_addr().to_string();
+    let mut t = TcpTransport::connect(&addr).unwrap();
+    t.force_v1();
+    assert_eq!(t.wire_version(), 1);
+
+    let before = seen_ids();
+    let _: EmptyResponse = call(&mut t, Method::Ping, &EmptyResponse::default()).unwrap();
+
+    let server_code = trace::RPC_BASE + Method::Ping as u8 as u64;
+    let snap = wait_for_spans("the v1 server ping span", |s| {
+        s.iter().any(|r| r.name_code == server_code && !before.contains(&r.span_id))
+    });
+    let server_span = snap
+        .iter()
+        .find(|r| r.name_code == server_code && !before.contains(&r.span_id))
+        .unwrap();
+    assert_eq!(
+        server_span.parent_id, 0,
+        "no trailer on v1: the server span must be a fresh sampled root"
+    );
+    let client_code = trace::CLIENT_RPC_BASE + Method::Ping as u8 as u64;
+    assert!(
+        snap.iter().all(|r| before.contains(&r.span_id) || r.name_code != client_code),
+        "the v1 client path must not open client-rpc spans"
+    );
+    server.shutdown();
+}
+
+/// One coalesced policy run serves K waiting operations; its single
+/// policy-compute interval must be linked into each waiter's trace as a
+/// distinct span record (same start/duration, that trace's rpc span as
+/// parent).
+#[test]
+fn coalesced_policy_run_fans_into_every_waiting_trace() {
+    let _serial = serial();
+    init_tracing();
+    let ds: Arc<dyn Datastore> = Arc::new(InMemoryDatastore::new());
+    let (service, gate, invocations) = gated_service(Arc::clone(&ds), 1);
+    let server = start_server(Arc::clone(&service), 2);
+    let addr = server.local_addr().to_string();
+    let config = test_config(Algorithm::Custom("GATED".into()));
+    let study = service
+        .create_study(CreateStudyRequest {
+            study: StudyProto {
+                display_name: "traced-coalesce".into(),
+                spec: converters::study_config_to_proto(&config),
+                ..Default::default()
+            },
+        })
+        .unwrap()
+        .study;
+
+    let mut t = TcpTransport::connect(&addr).unwrap();
+    let study_name = study.name.clone();
+    let suggest = |t: &mut TcpTransport, cid: &str| -> String {
+        let resp: OperationResponse = call(
+            t,
+            Method::SuggestTrials,
+            &SuggestTrialsRequest {
+                study_name: study_name.clone(),
+                count: 1,
+                client_id: cid.into(),
+            },
+        )
+        .unwrap();
+        resp.operation.name
+    };
+
+    // The first operation occupies the single policy worker (blocked on
+    // the gate), so the next three queue behind it and coalesce into one
+    // batch once it finishes.
+    let _op1 = suggest(&mut t, "w1");
+    wait_until("the gated policy run to start", Duration::from_secs(10), || {
+        invocations.load(Ordering::SeqCst) >= 1
+    });
+
+    let before = seen_ids();
+    let ops: Vec<String> = (2..=4).map(|i| suggest(&mut t, &format!("w{i}"))).collect();
+    gate.release();
+    for name in &ops {
+        wait_until(&format!("{name} to complete"), Duration::from_secs(20), || {
+            let resp: OperationResponse = call(
+                &mut t,
+                Method::GetOperation,
+                &GetOperationRequest { name: name.clone() },
+            )
+            .unwrap();
+            resp.operation.done
+        });
+    }
+    assert_eq!(
+        invocations.load(Ordering::SeqCst),
+        2,
+        "the three queued operations must coalesce into one policy run"
+    );
+
+    // The linked records are published before the operations complete,
+    // so one snapshot after the waits is race-free.
+    let snap = trace::snapshot();
+    let fresh: Vec<&SpanRecord> = snap
+        .iter()
+        .filter(|r| r.name_code == trace::POLICY_COMPUTE && !before.contains(&r.span_id))
+        .collect();
+    // `fresh` holds op1's span (recorded after the gate opened) plus the
+    // fan-in group; the group members are copies of one computation, so
+    // they share the exact (start, duration) interval.
+    let mut groups: HashMap<(u64, u64), Vec<&SpanRecord>> = HashMap::new();
+    for r in fresh {
+        groups.entry((r.start_us, r.dur_us)).or_default().push(r);
+    }
+    let batch = groups
+        .values()
+        .find(|g| g.len() == 3)
+        .expect("one policy interval must be linked into exactly three traces");
+    let trace_ids: HashSet<u64> = batch.iter().map(|r| r.trace_id).collect();
+    assert_eq!(trace_ids.len(), 3, "the shared span lands in three distinct traces");
+    let parents: HashSet<u64> = batch.iter().map(|r| r.parent_id).collect();
+    assert_eq!(parents.len(), 3, "each copy parents to its own trace's rpc span");
+    assert!(batch.iter().all(|r| r.parent_id != 0));
+    server.shutdown();
+}
+
+/// Acceptance: a traced `SuggestTrials` against a WAL-backed server over
+/// TCP yields a span tree with frontend-queue, policy-compute, and
+/// wal-commit spans correctly parented under the rpc span — both in the
+/// raw records and through the `GetTraces` RPC as an operator would see
+/// it (`VizierClient::traces()`).
+#[test]
+fn acceptance_wal_backed_suggest_trace_over_tcp() {
+    let _serial = serial();
+    init_tracing();
+    let dir = std::env::temp_dir().join(format!(
+        "ossvizier-tracing-{}-{}",
+        std::process::id(),
+        ossvizier::util::id::next_uid()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = Arc::new(WalDatastore::open(dir.join("store.wal")).unwrap());
+    let service = build_service(ds as Arc<dyn Datastore>, |_| {}, 2);
+    let server = start_server(service, 2);
+    let addr = server.local_addr().to_string();
+
+    let t = TcpTransport::connect(&addr).unwrap();
+    let config = test_config(Algorithm::RandomSearch);
+    let mut client =
+        VizierClient::load_or_create_study(Box::new(t), "traced-wal", &config, "w0").unwrap();
+    let before = seen_ids();
+    let trials = client.get_suggestions(1).unwrap();
+    assert_eq!(trials.len(), 1);
+
+    let rpc_code = trace::RPC_BASE + Method::SuggestTrials as u8 as u64;
+    let snap = wait_for_spans("the traced suggest span tree", |s| {
+        let Some(rpc) = s
+            .iter()
+            .find(|r| r.name_code == rpc_code && !before.contains(&r.span_id))
+        else {
+            return false;
+        };
+        let has = |code: u64| {
+            s.iter().any(|r| {
+                r.trace_id == rpc.trace_id && r.name_code == code && r.parent_id == rpc.span_id
+            })
+        };
+        has(trace::FRONTEND_QUEUE) && has(trace::POLICY_COMPUTE) && has(trace::WAL_COMMIT)
+    });
+    let rpc = snap
+        .iter()
+        .find(|r| r.name_code == rpc_code && !before.contains(&r.span_id))
+        .unwrap();
+    let child = |code: u64| {
+        snap.iter().find(|r| {
+            r.trace_id == rpc.trace_id && r.name_code == code && r.parent_id == rpc.span_id
+        })
+    };
+    let queue = child(trace::FRONTEND_QUEUE).expect("frontend-queue span under the rpc span");
+    assert!(queue.dur_us >= 1, "the queue-wait note is clamped to >= 1us");
+    assert!(
+        queue.start_us <= rpc.start_us,
+        "the retroactive queue span starts before its rpc span"
+    );
+    child(trace::POLICY_COMPUTE).expect("policy-compute span linked under the rpc span");
+    child(trace::WAL_COMMIT).expect("wal-commit span under the rpc span");
+
+    // The operator view of the same tree, fetched over the same wire.
+    let report = client.traces(50, false).unwrap();
+    for needle in ["rpc:SuggestTrials", "frontend-queue", "policy-compute", "wal-commit"] {
+        assert!(
+            report.contains(needle),
+            "traces() report is missing {needle:?}:\n{report}"
+        );
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

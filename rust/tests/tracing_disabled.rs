@@ -1,0 +1,68 @@
+//! The disabled default is observably zero-cost state-wise: nothing in
+//! this binary enables tracing, so a full client round trip must record
+//! no spans, allocate no per-thread span rings, and `GetTraces` must
+//! answer with nothing. This lives in its own test binary because the
+//! tracing config latches process-wide on first use — `tests/tracing.rs`
+//! latches it ON for its process, this one never does.
+
+use ossvizier::client::transport::{call, TcpTransport};
+use ossvizier::client::VizierClient;
+use ossvizier::pyvizier::{Algorithm, MetricInformation, StudyConfig};
+use ossvizier::service::{in_memory_service, ServerOptions, VizierServer};
+use ossvizier::testing::poller_from_env;
+use ossvizier::util::trace;
+use ossvizier::wire::framing::Method;
+use ossvizier::wire::messages::{GetTracesRequest, GetTracesResponse, ScaleType};
+
+#[test]
+fn disabled_tracing_records_nothing_and_get_traces_is_empty() {
+    if std::env::var_os("OSSVIZIER_TRACE").is_some() {
+        eprintln!("skipping: OSSVIZIER_TRACE is set, this binary asserts the disabled default");
+        return;
+    }
+
+    let server = VizierServer::start_with(
+        in_memory_service(2),
+        "127.0.0.1:0",
+        ServerOptions { workers: 2, poller: poller_from_env(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut config = StudyConfig::new("untraced");
+    config.search_space.add_float("x", 0.0, 1.0, ScaleType::Linear);
+    config.add_metric(MetricInformation::maximize("score"));
+    config.algorithm = Algorithm::RandomSearch;
+    let t = TcpTransport::connect(&addr).unwrap();
+    let mut client =
+        VizierClient::load_or_create_study(Box::new(t), "untraced", &config, "w0").unwrap();
+    let trials = client.get_suggestions(2).unwrap();
+    assert_eq!(trials.len(), 2);
+
+    assert!(!trace::enabled(), "nothing in this binary may enable tracing");
+    assert!(
+        trace::snapshot().is_empty(),
+        "no span may be recorded while tracing is disabled"
+    );
+    assert_eq!(
+        trace::registered_rings(),
+        0,
+        "no thread may have allocated a span ring while disabled"
+    );
+
+    // The RPC surface agrees: GetTraces answers cleanly, with nothing.
+    let mut t2 = TcpTransport::connect(&addr).unwrap();
+    let resp: GetTracesResponse = call(
+        &mut t2,
+        Method::GetTraces,
+        &GetTracesRequest { limit: 0, include_infra: true },
+    )
+    .unwrap();
+    assert!(resp.traces.is_empty(), "GetTraces must be empty while disabled");
+    let report = client.traces(0, true).unwrap();
+    assert!(
+        report.contains("no traces recorded"),
+        "the rendered report must say so: {report:?}"
+    );
+    server.shutdown();
+}
